@@ -1,0 +1,73 @@
+//! Quickstart: deploy the paper's λ (Algorithm 1), invoke it, freshen it,
+//! and watch the latency difference.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::{invoke, start_freshen};
+use freshen_rs::platform::function::FunctionSpec;
+use freshen_rs::platform::world::World;
+use freshen_rs::simcore::Sim;
+use freshen_rs::util::config::Config;
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+fn main() {
+    // 1. A platform with one remote object store, 50 ms away.
+    let mut world = World::new(Config::default());
+    let mut store = Endpoint::new("store", Site::Remote);
+    store.store.put("ID1", 5e6, SimTime::ZERO); // the 5 MB model λ fetches
+    world.add_endpoint(store);
+
+    // 2. Deploy λ: DataGet(CREDS, ID1) -> compute -> DataPut(CREDS, ID2).
+    //    Deployment runs the provider's freshen inference (§3.3): constant
+    //    credentials/ids make both resource ops freshenable.
+    world.deploy(FunctionSpec::paper_lambda(
+        "lambda",
+        "quickstart-app",
+        "store",
+        SimDuration::from_millis(20),
+    ));
+    let hook = world.registry.hook("lambda").unwrap();
+    println!("inferred freshen hook: {} actions", hook.len());
+    for (idx, action) in &hook.actions {
+        println!("  fr_state[{idx}] <- {action:?}");
+    }
+
+    // 3. Three invocations on the simulator substrate:
+    //    a) cold start, b) warm but un-freshened (30 s later: prefetch TTL
+    //    expired, connection windows decayed), c) warm AND freshened 1 s
+    //    in advance.
+    let mut sim: Sim<World> = Sim::new();
+    invoke(&mut sim, &mut world, "lambda");
+    sim.schedule(SimDuration::from_secs(30), |sim, w| {
+        invoke(sim, w, "lambda");
+    });
+    sim.schedule(SimDuration::from_secs(59), |sim, w| {
+        start_freshen(sim, w, "lambda", None);
+    });
+    sim.schedule(SimDuration::from_secs(60), |sim, w| {
+        invoke(sim, w, "lambda");
+    });
+    sim.run(&mut world);
+
+    // 4. Report.
+    println!("\ninvocation latencies:");
+    let labels = ["cold start", "warm, no freshen", "warm + freshen"];
+    for (rec, label) in world.metrics.records().iter().zip(labels.iter()) {
+        println!(
+            "  {label:<18} {:>10}  (freshen hits {}/{})",
+            format!("{}", rec.latency()),
+            rec.freshen_hits,
+            rec.freshen_hits + rec.freshen_misses,
+        );
+    }
+    let acct = world.ledger.account("quickstart-app");
+    println!(
+        "\nbilling: exec {:.4} GB-s, freshen {:.4} GB-s, network {:.1} MB (saved {:.1} MB)",
+        acct.exec_gb_s,
+        acct.freshen_useful_gb_s + acct.freshen_wasted_gb_s,
+        acct.network_bytes / 1e6,
+        acct.network_bytes_saved / 1e6,
+    );
+}

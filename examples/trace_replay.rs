@@ -1,0 +1,101 @@
+//! Trace replay: synthesize an Azure-like invocation trace (Figure 2's
+//! population + periodic/bursty arrivals), write it as JSON lines, replay
+//! it through the platform twice (freshen off/on), and compare.
+//!
+//! Run: `cargo run --release --example trace_replay`
+
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::invoke;
+use freshen_rs::platform::function::FunctionSpec;
+use freshen_rs::platform::world::World;
+use freshen_rs::simcore::Sim;
+use freshen_rs::util::config::Config;
+use freshen_rs::util::rng::Rng;
+use freshen_rs::util::time::{SimDuration, SimTime};
+use freshen_rs::workload::generator::ArrivalProcess;
+use freshen_rs::workload::trace::{read_trace, write_trace, TraceRecord};
+
+const FUNCTIONS: usize = 6;
+const HORIZON_S: u64 = 600;
+
+fn main() {
+    // 1. Synthesize: half periodic (cron-like, predictable), half bursty.
+    let mut rng = Rng::new(0x7ACE);
+    let mut records = Vec::new();
+    for f in 0..FUNCTIONS {
+        let process = if f % 2 == 0 {
+            ArrivalProcess::Periodic {
+                period: SimDuration::from_secs(30 + 7 * f as u64),
+                jitter: 0.03,
+            }
+        } else {
+            ArrivalProcess::Bursty {
+                burst_len: 3,
+                intra: SimDuration::from_millis(250),
+                off_mean_s: 60.0,
+            }
+        };
+        for at in process.generate(SimDuration::from_secs(HORIZON_S), &mut rng) {
+            records.push(TraceRecord {
+                at,
+                function: format!("fn-{f}"),
+            });
+        }
+    }
+    records.sort_by_key(|r| r.at);
+
+    // 2. Write + read back (exercises the trace format end to end).
+    let path = std::env::temp_dir().join("freshen-trace.jsonl");
+    let file = std::fs::File::create(&path).expect("create trace");
+    write_trace(&records, file).expect("write trace");
+    let (replayed, skipped) =
+        read_trace(std::io::BufReader::new(std::fs::File::open(&path).unwrap()));
+    assert_eq!(skipped, 0);
+    println!(
+        "trace: {} invocations over {} functions, {}s horizon -> {}",
+        replayed.len(),
+        FUNCTIONS,
+        HORIZON_S,
+        path.display()
+    );
+
+    // 3. Replay twice.
+    for freshen in [false, true] {
+        let mut cfg = Config::default();
+        cfg.seed = 1;
+        cfg.freshen.enabled = freshen;
+        cfg.freshen.min_confidence = 0.3;
+        let mut w = World::new(cfg);
+        let mut store = Endpoint::new("store", Site::Remote);
+        store.store.put("ID1", 5e6, SimTime::ZERO);
+        w.add_endpoint(store);
+        for f in 0..FUNCTIONS {
+            w.deploy(FunctionSpec::paper_lambda(
+                &format!("fn-{f}"),
+                "trace-app",
+                "store",
+                SimDuration::from_millis(15),
+            ));
+        }
+        let mut sim: Sim<World> = Sim::new();
+        sim.max_events = 100_000_000;
+        for rec in &replayed {
+            let f = rec.function.clone();
+            sim.schedule_at(rec.at, move |sim, w| {
+                invoke(sim, w, &f);
+            });
+        }
+        sim.run(&mut w);
+        let s = w.metrics.latency_summary(None).unwrap();
+        println!(
+            "  freshen={:<5} p50 {:>8.1} ms  p99 {:>8.1} ms  cold {}  hit rate {:>3.0}%  wasted freshens {}",
+            freshen,
+            s.p50,
+            s.p99,
+            w.metrics.cold_starts,
+            100.0 * w.metrics.freshen_hit_rate(),
+            w.metrics.freshens_wasted,
+        );
+    }
+}

@@ -1,0 +1,122 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the rust/PJRT runtime.
+
+Run once at build time (``make artifacts``); python never runs on the
+request path. The interchange format is HLO text, NOT a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  classifier_b{N}.hlo.txt  batched classifier forward, params baked in,
+                           one per serving batch size
+  predictor.hlo.txt        learned next-invocation scorer (batch 16)
+  manifest.json            shapes + sample numerics for rust-side checks
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+BATCH_SIZES = (1, 4, 8, 16)
+PREDICTOR_BATCH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    big constants as ``constant({...})``, which the text parser on the rust
+    side silently reads back as zeros — the model's baked-in weights would
+    vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_classifier(params, batch: int) -> str:
+    def fwd(x):
+        return (model.classifier_fwd(params, x),)
+
+    spec = jax.ShapeDtypeStruct((batch, model.INPUT_DIM), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_predictor(batch: int) -> str:
+    def fwd(feats):
+        return (model.predictor_fwd(feats),)
+
+    spec = jax.ShapeDtypeStruct((batch, model.PREDICTOR_FEATURES), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def sample_check(params):
+    """Deterministic sample inputs/outputs the rust tests assert against."""
+    x = jnp.linspace(-1.0, 1.0, model.INPUT_DIM, dtype=jnp.float32).reshape(
+        1, model.INPUT_DIM
+    )
+    logits = model.classifier_fwd(params, x)
+    feats = jnp.asarray(
+        [[0.9, 0.8, 0.7, 0.3], [0.0, 0.0, 0.0, 0.0]], dtype=jnp.float32
+    )
+    scores = model.predictor_fwd(feats)
+    return {
+        "classifier_input": "linspace(-1,1,3072)",
+        "classifier_logits_b1": [float(v) for v in logits[0]],
+        "predictor_feats": [[float(v) for v in row] for row in feats],
+        "predictor_scores": [float(v) for v in scores[:, 0]],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--batches", type=int, nargs="*", default=list(BATCH_SIZES)
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    params = model.init_params()
+    manifest = {
+        "input_dim": model.INPUT_DIM,
+        "classes": model.CLASSES,
+        "hidden": list(model.HIDDEN),
+        "param_seed": model.PARAM_SEED,
+        "batches": args.batches,
+        "predictor_batch": PREDICTOR_BATCH,
+        "predictor_weights": list(model.PREDICTOR_WEIGHTS),
+        "predictor_bias": model.PREDICTOR_BIAS,
+        "artifacts": {},
+        "check": sample_check(params),
+    }
+
+    for b in args.batches:
+        text = lower_classifier(params, b)
+        name = f"classifier_b{b}.hlo.txt"
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest["artifacts"][f"classifier_b{b}"] = name
+        print(f"wrote {name} ({len(text)} chars)")
+
+    text = lower_predictor(PREDICTOR_BATCH)
+    with open(os.path.join(args.out_dir, "predictor.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["artifacts"]["predictor"] = "predictor.hlo.txt"
+    print(f"wrote predictor.hlo.txt ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""L1: Pallas fused MLP kernels.
+
+The paper's motivating function λ1 "downloads a machine learning model from
+a server, analyzes an input image" — the analysis is this model. The hot
+spot is the fused linear(+bias)(+ReLU) layer, written as a Pallas kernel so
+the whole classifier lowers into one HLO module that the rust coordinator
+executes via PJRT.
+
+TPU-oriented structure (DESIGN.md §Hardware-Adaptation):
+  * the grid walks output-column blocks (``bn`` = 128, MXU-lane aligned);
+  * each grid step holds one ``(m, K)`` activation panel, one ``(K, bn)``
+    weight panel and one ``(m, bn)`` accumulator in VMEM — the BlockSpec
+    index maps express the HBM->VMEM schedule a CUDA version would write
+    with threadblocks;
+  * serving batches are small (m <= 16), so the activation panel is kept
+    whole rather than tiled over M.
+
+Kernels MUST be lowered with ``interpret=True`` on this CPU image: real-TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned output-column block.
+BLOCK_N = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    """One grid step: o[:, j*bn:(j+1)*bn] = act(x @ w_block + b_block)."""
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "interpret"))
+def linear(x, w, b, *, relu=False, interpret=True):
+    """Fused ``act(x @ w + b)`` as a Pallas kernel.
+
+    Args:
+      x: ``(m, k)`` activations.
+      w: ``(k, n)`` weights; ``n`` must be a multiple of ``BLOCK_N`` or
+         smaller than it (single block).
+      b: ``(n,)`` bias.
+      relu: fuse a ReLU when True.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      ``(m, n)`` activations with ``x``'s dtype.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bn = min(BLOCK_N, n)
+    assert n % bn == 0, f"n={n} not a multiple of block {bn}"
+
+    grid = (n // bn,)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),   # x panel: reused per step
+            pl.BlockSpec((k, bn), lambda j: (0, j)),  # weight column block
+            pl.BlockSpec((bn,), lambda j: (j,)),      # bias block
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def _logistic_kernel(f_ref, w_ref, b_ref, o_ref):
+    """Batched logistic scorer: o = sigmoid(f @ w + b)."""
+    z = jnp.dot(f_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...][None, :]
+    o_ref[...] = jax.nn.sigmoid(z).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def logistic_score(feats, w, b, *, interpret=True):
+    """The learned next-invocation scorer (predict/learned.rs) as a kernel.
+
+    Args:
+      feats: ``(m, 4)`` feature rows ``[chain_conf, hist_conf, recency,
+        log_lead]``.
+      w: ``(4, 1)`` weights.
+      b: ``(1,)`` bias.
+
+    Returns:
+      ``(m, 1)`` probabilities.
+    """
+    m, k = feats.shape
+    assert w.shape == (k, 1) and b.shape == (1,)
+    return pl.pallas_call(
+        _logistic_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, 1), feats.dtype),
+        interpret=interpret,
+    )(feats, w, b)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM bytes live per grid step (perf analysis, DESIGN §Perf):
+    activation panel + weight block + bias block + output block."""
+    bn = min(BLOCK_N, n)
+    return dtype_bytes * (m * k + k * bn + bn + m * bn)
+
+
+def _normalize_kernel(x_ref, o_ref, *, mean: float, std: float):
+    """Image standardization: o = (x - mean) / std."""
+    o_ref[...] = ((x_ref[...] - mean) * (1.0 / std)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mean", "std", "interpret"))
+def normalize(x, *, mean=0.5, std=0.25, interpret=True):
+    """Fused input standardization (the preprocessing step of λ1's image
+    analysis), as a Pallas kernel so it lowers into the same HLO module as
+    the matmul layers.
+
+    Args:
+      x: ``(m, k)`` raw pixels.
+      mean/std: standardization constants (dataset statistics).
+    """
+    m, k = x.shape
+    return pl.pallas_call(
+        functools.partial(_normalize_kernel, mean=mean, std=std),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, k), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    """Row-wise numerically-stable softmax."""
+    x = x_ref[...]
+    x = x - jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x)
+    o_ref[...] = (e / jnp.sum(e, axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax(x, *, interpret=True):
+    """Row softmax over logits ``(m, n)`` — class probabilities."""
+    m, n = x.shape
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((m, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((m, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(x)

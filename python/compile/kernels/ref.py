@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The correctness contract of the whole stack: ``kernels.mlp`` must match
+these reference implementations to float tolerance for every shape/dtype
+the model uses. pytest + hypothesis sweep that contract.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_ref(x, w, b, *, relu=False):
+    """act(x @ w + b) in plain jnp (float32 accumulation)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :].astype(
+        jnp.float32
+    )
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def logistic_score_ref(feats, w, b):
+    """sigmoid(feats @ w + b) in plain jnp."""
+    z = jnp.dot(feats, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    return jax.nn.sigmoid(z).astype(feats.dtype)
+
+
+def mlp_ref(params, x):
+    """The full classifier forward in plain jnp (see model.classifier_fwd)."""
+    h = x
+    n_layers = len(params)
+    for i, (w, b) in enumerate(params):
+        h = linear_ref(h, w, b, relu=(i < n_layers - 1))
+    return h
+
+
+def normalize_ref(x, *, mean=0.5, std=0.25):
+    """(x - mean) / std in plain jnp."""
+    return ((x - mean) / std).astype(x.dtype)
+
+
+def softmax_ref(x):
+    """Row-wise stable softmax in plain jnp."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1).astype(x.dtype)

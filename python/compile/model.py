@@ -1,0 +1,92 @@
+"""L2: the JAX model — λ1's image classifier and the learned predictor.
+
+``classifier_fwd`` is a 3-layer MLP over flattened 32x32x3 images
+(3072 -> 512 -> 256 -> 10), every layer running through the L1 Pallas
+kernel (`kernels.mlp.linear`), so the whole forward lowers into a single
+HLO module for the rust/PJRT request path.
+
+``predictor_fwd`` is the learned next-invocation scorer; its weights MUST
+match ``rust/src/predict/learned.rs::DEPLOYED_WEIGHTS`` — the rust
+integration test executes the AOT artifact against the native scorer.
+
+Parameters are deterministic (seeded) so the artifact is reproducible and
+the rust tests can assert on concrete numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import mlp
+
+# Classifier architecture: flattened 32x32 RGB image -> 10 classes.
+INPUT_DIM = 3072
+HIDDEN = (512, 256)
+CLASSES = 10
+PARAM_SEED = 0
+
+# Predictor weights — keep in sync with rust predict/learned.rs.
+PREDICTOR_WEIGHTS = (3.2, 1.8, 0.9, -0.6)
+PREDICTOR_BIAS = -2.0
+PREDICTOR_FEATURES = 4
+
+
+def layer_dims():
+    """[(in, out)] per layer."""
+    dims = (INPUT_DIM,) + HIDDEN + (CLASSES,)
+    return list(zip(dims[:-1], dims[1:]))
+
+
+def init_params(seed: int = PARAM_SEED):
+    """He-initialised MLP parameters, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for din, dout in layer_dims():
+        key, wk = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / din)
+        w = scale * jax.random.normal(wk, (din, dout), dtype=jnp.float32)
+        b = jnp.zeros((dout,), dtype=jnp.float32)
+        params.append((w, b))
+    return params
+
+
+# Input standardization constants (dataset statistics, baked into the
+# artifact alongside the weights).
+PIXEL_MEAN = 0.5
+PIXEL_STD = 0.25
+
+
+def classifier_fwd(params, x, *, interpret=True):
+    """Forward pass: standardize, ReLU hidden layers, raw logits out.
+
+    Args:
+      params: list of (w, b) from ``init_params``.
+      x: ``(batch, INPUT_DIM)`` float32 raw pixels.
+
+    Returns:
+      ``(batch, CLASSES)`` logits.
+    """
+    h = mlp.normalize(x, mean=PIXEL_MEAN, std=PIXEL_STD, interpret=interpret)
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        h = mlp.linear(h, w, b, relu=(i < n - 1), interpret=interpret)
+    return h
+
+
+def classifier_probs(params, x, *, interpret=True):
+    """Forward pass returning class probabilities (fused softmax head)."""
+    return mlp.softmax(classifier_fwd(params, x, interpret=interpret), interpret=interpret)
+
+
+def predictor_params():
+    """The deployed logistic weights as jnp arrays."""
+    w = jnp.asarray(PREDICTOR_WEIGHTS, dtype=jnp.float32).reshape(
+        PREDICTOR_FEATURES, 1
+    )
+    b = jnp.asarray([PREDICTOR_BIAS], dtype=jnp.float32)
+    return w, b
+
+
+def predictor_fwd(feats, *, interpret=True):
+    """Batched next-invocation scores for ``(batch, 4)`` features."""
+    w, b = predictor_params()
+    return mlp.logistic_score(feats, w, b, interpret=interpret)

@@ -1,0 +1,164 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps the shape/dtype space the serving path uses; this is the
+CORE correctness signal for the compiled artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32).astype(
+        dtype
+    )
+
+
+def _tol(dtype):
+    # f32 tolerance allows for summation-order differences on K up to 3072;
+    # bf16 is inherently coarse.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=5e-3, atol=1e-4
+    )
+
+
+class TestLinearKernel:
+    @pytest.mark.parametrize("m", [1, 4, 8, 16])
+    @pytest.mark.parametrize("k,n", [(3072, 512), (512, 256), (256, 128)])
+    def test_model_shapes_match_ref(self, m, k, n):
+        x = _rand(1, (m, k), jnp.float32)
+        w = _rand(2, (k, n), jnp.float32)
+        b = _rand(3, (n,), jnp.float32)
+        got = mlp.linear(x, w, b, relu=True)
+        want = ref.linear_ref(x, w, b, relu=True)
+        np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("relu", [False, True])
+    def test_relu_flag(self, relu):
+        x = _rand(4, (2, 64), jnp.float32)
+        w = _rand(5, (64, 128), jnp.float32)
+        b = _rand(6, (128,), jnp.float32)
+        got = mlp.linear(x, w, b, relu=relu)
+        want = ref.linear_ref(x, w, b, relu=relu)
+        np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+        if relu:
+            assert (np.asarray(got) >= 0.0).all()
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 16),
+        k=st.sampled_from([16, 64, 256, 512]),
+        nb=st.integers(1, 4),
+        relu=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, m, k, nb, relu, seed):
+        n = nb * mlp.BLOCK_N
+        x = _rand(seed, (m, k), jnp.float32)
+        w = _rand(seed + 1, (k, n), jnp.float32)
+        b = _rand(seed + 2, (n,), jnp.float32)
+        got = mlp.linear(x, w, b, relu=relu)
+        want = ref.linear_ref(x, w, b, relu=relu)
+        np.testing.assert_allclose(got, want, **_tol(jnp.float32))
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.integers(1, 8), seed=st.integers(0, 1000))
+    def test_bfloat16(self, m, seed):
+        x = _rand(seed, (m, 256), jnp.bfloat16)
+        w = _rand(seed + 1, (256, 128), jnp.bfloat16)
+        b = _rand(seed + 2, (128,), jnp.bfloat16)
+        got = mlp.linear(x, w, b, relu=True)
+        want = ref.linear_ref(x, w, b, relu=True)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, dtype=np.float32),
+            np.asarray(want, dtype=np.float32),
+            **_tol(jnp.bfloat16),
+        )
+
+    def test_small_n_single_block(self):
+        # n < BLOCK_N: single block path (the logits layer, n=10... padded
+        # to block — here n must divide evenly, so test n=64).
+        x = _rand(7, (3, 32), jnp.float32)
+        w = _rand(8, (32, 64), jnp.float32)
+        b = _rand(9, (64,), jnp.float32)
+        np.testing.assert_allclose(
+            mlp.linear(x, w, b), ref.linear_ref(x, w, b), **_tol(jnp.float32)
+        )
+
+    def test_shape_mismatch_raises(self):
+        x = _rand(1, (2, 8), jnp.float32)
+        w = _rand(2, (9, 64), jnp.float32)
+        b = _rand(3, (64,), jnp.float32)
+        with pytest.raises(AssertionError):
+            mlp.linear(x, w, b)
+
+
+class TestLogisticKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 32), seed=st.integers(0, 1000))
+    def test_matches_ref(self, m, seed):
+        feats = _rand(seed, (m, 4), jnp.float32)
+        w = _rand(seed + 1, (4, 1), jnp.float32)
+        b = _rand(seed + 2, (1,), jnp.float32)
+        got = mlp.logistic_score(feats, w, b)
+        want = ref.logistic_score_ref(feats, w, b)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+        assert ((np.asarray(got) > 0) & (np.asarray(got) < 1)).all()
+
+
+class TestVmemFootprint:
+    def test_fits_vmem(self):
+        # Largest layer (b16, 3072->512): panel + block must fit in 16 MiB.
+        fp = mlp.vmem_footprint_bytes(16, 3072, 512)
+        assert fp < 16 * 1024 * 1024, f"VMEM estimate {fp} too large"
+
+    def test_scales_with_block(self):
+        assert mlp.vmem_footprint_bytes(1, 256, 128) < mlp.vmem_footprint_bytes(
+            16, 3072, 512
+        )
+
+
+class TestNormalizeKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 16),
+        k=st.sampled_from([16, 256, 3072]),
+        seed=st.integers(0, 1000),
+    )
+    def test_matches_ref(self, m, k, seed):
+        x = _rand(seed, (m, k), jnp.float32)
+        got = mlp.normalize(x, mean=0.5, std=0.25)
+        want = ref.normalize_ref(x, mean=0.5, std=0.25)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_identity_when_mean0_std1(self):
+        x = _rand(3, (4, 32), jnp.float32)
+        np.testing.assert_allclose(
+            mlp.normalize(x, mean=0.0, std=1.0), x, rtol=1e-7, atol=1e-7
+        )
+
+
+class TestSoftmaxKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(1, 16), seed=st.integers(0, 1000))
+    def test_matches_ref_and_sums_to_one(self, m, seed):
+        x = _rand(seed, (m, 10), jnp.float32) * 5.0
+        got = np.asarray(mlp.softmax(x))
+        want = np.asarray(ref.softmax_ref(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(got.sum(axis=-1), np.ones(m), rtol=1e-5)
+        assert (got >= 0).all()
+
+    def test_stability_under_large_logits(self):
+        x = jnp.asarray([[1000.0, 999.0, 0.0]], dtype=jnp.float32)
+        got = np.asarray(mlp.softmax(x))
+        assert np.isfinite(got).all()
+        assert got[0, 0] > got[0, 1] > got[0, 2]

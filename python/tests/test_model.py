@@ -1,0 +1,159 @@
+"""L2 correctness: the classifier/predictor models and their AOT lowering."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params()
+
+
+class TestClassifier:
+    def test_shapes(self, params):
+        for b in (1, 4, 16):
+            x = jnp.zeros((b, model.INPUT_DIM), dtype=jnp.float32)
+            logits = model.classifier_fwd(params, x)
+            assert logits.shape == (b, model.CLASSES)
+            assert logits.dtype == jnp.float32
+
+    def test_matches_pure_jnp(self, params):
+        x = jax.random.normal(
+            jax.random.PRNGKey(3), (8, model.INPUT_DIM), dtype=jnp.float32
+        )
+        got = model.classifier_fwd(params, x)
+        want = ref.mlp_ref(
+            params, ref.normalize_ref(x, mean=model.PIXEL_MEAN, std=model.PIXEL_STD)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_params_deterministic(self):
+        a = model.init_params(seed=0)
+        b = model.init_params(seed=0)
+        for (wa, ba), (wb, bb) in zip(a, b):
+            np.testing.assert_array_equal(wa, wb)
+            np.testing.assert_array_equal(ba, bb)
+        c = model.init_params(seed=1)
+        assert not np.array_equal(np.asarray(a[0][0]), np.asarray(c[0][0]))
+
+    def test_logits_not_degenerate(self, params):
+        x = jax.random.normal(
+            jax.random.PRNGKey(4), (4, model.INPUT_DIM), dtype=jnp.float32
+        )
+        logits = np.asarray(model.classifier_fwd(params, x))
+        # Different inputs produce different logits; classes are spread.
+        assert logits.std() > 0.01
+        assert not np.allclose(logits[0], logits[1])
+
+
+class TestPredictor:
+    def test_weights_match_rust_constants(self):
+        # predict/learned.rs DEPLOYED_WEIGHTS / DEPLOYED_BIAS.
+        assert model.PREDICTOR_WEIGHTS == (3.2, 1.8, 0.9, -0.6)
+        assert model.PREDICTOR_BIAS == -2.0
+
+    def test_scores_match_native_logistic(self):
+        feats = jnp.asarray(
+            [[0.9, 0.8, 0.7, 0.3], [0.0, 0.0, 0.0, 0.0], [1.0, 1.0, 1.0, 1.0]],
+            dtype=jnp.float32,
+        )
+        got = np.asarray(model.predictor_fwd(feats))[:, 0]
+        w = np.asarray(model.PREDICTOR_WEIGHTS)
+        z = np.asarray(feats) @ w + model.PREDICTOR_BIAS
+        want = 1.0 / (1.0 + np.exp(-z))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    def test_strong_chain_signal_scores_high(self):
+        hi = float(model.predictor_fwd(jnp.asarray([[0.95, 0.8, 1.0, 0.1]]))[0, 0])
+        lo = float(model.predictor_fwd(jnp.asarray([[0.0, 0.0, 0.0, 0.5]]))[0, 0])
+        assert hi > 0.85
+        assert lo < 0.25
+
+
+class TestAotLowering:
+    def test_classifier_hlo_text(self, params):
+        text = aot.lower_classifier(params, batch=1)
+        assert text.startswith("HloModule")
+        # Params are baked in: the entry computation takes exactly one
+        # argument (x) and returns the logits tuple.
+        assert (
+            "entry_computation_layout={(f32[1,3072]{1,0})->(f32[1,10]{1,0})}"
+            in text.replace("((", "(").replace("))", ")")
+            or "(f32[1,3072]" in text
+        )
+        first_line = text.splitlines()[0]
+        assert "f32[1,3072]" in first_line and "f32[1,10]" in first_line
+
+    def test_predictor_hlo_text(self):
+        text = aot.lower_predictor(batch=16)
+        assert text.startswith("HloModule")
+        assert "logistic" in text or "parameter(0)" in text
+
+    def test_sample_check_is_stable(self, params):
+        a = aot.sample_check(params)
+        b = aot.sample_check(params)
+        assert a == b
+        assert len(a["classifier_logits_b1"]) == model.CLASSES
+
+    def test_hlo_text_parses_back(self, params):
+        """The emitted text must round-trip through XLA's HLO parser —
+        the same parser the rust loader uses (HloModuleProto::from_text).
+        Numeric equivalence is asserted by the rust integration test
+        ``runtime_artifacts`` against manifest.json's sample check."""
+        from jax._src.lib import xla_client as xc
+
+        for batch in (1, 4):
+            text = aot.lower_classifier(params, batch=batch)
+            mod = xc._xla.hlo_module_from_text(text)
+            proto = mod.as_serialized_hlo_module_proto()
+            assert len(proto) > 1000
+        text = aot.lower_predictor(batch=16)
+        assert xc._xla.hlo_module_from_text(text) is not None
+
+    def test_manifest_written(self, params, tmp_path, monkeypatch):
+        """aot.main writes every artifact plus a consistent manifest."""
+        import sys
+
+        monkeypatch.setattr(
+            sys, "argv", ["aot", "--out-dir", str(tmp_path), "--batches", "1"]
+        )
+        aot.main()
+        import json
+
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        assert manifest["input_dim"] == model.INPUT_DIM
+        for name in manifest["artifacts"].values():
+            assert (tmp_path / name).exists(), name
+        assert len(manifest["check"]["classifier_logits_b1"]) == model.CLASSES
+
+
+class TestPreprocessAndProbs:
+    def test_fwd_normalizes_input(self, params):
+        """classifier_fwd(x) == mlp over (x-mean)/std."""
+        from compile.kernels import ref as kref
+
+        x = jax.random.uniform(
+            jax.random.PRNGKey(5), (2, model.INPUT_DIM), dtype=jnp.float32
+        )
+        got = model.classifier_fwd(params, x)
+        want = kref.mlp_ref(
+            params, kref.normalize_ref(x, mean=model.PIXEL_MEAN, std=model.PIXEL_STD)
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_probs_are_distributions(self, params):
+        x = jax.random.uniform(
+            jax.random.PRNGKey(6), (3, model.INPUT_DIM), dtype=jnp.float32
+        )
+        p = np.asarray(model.classifier_probs(params, x))
+        np.testing.assert_allclose(p.sum(axis=-1), np.ones(3), rtol=1e-5)
+        assert (p >= 0).all() and (p <= 1).all()

@@ -1,0 +1,12 @@
+//! Bench: Ablation B — confidence gating vs mispredict rate (§3.3
+//! billing: what gating saves in wasted freshen spend).
+
+use freshen_rs::experiments::ablations;
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let rates = [0.0, 0.25, 0.5, 0.75, 1.0];
+    let (rows, elapsed) = time_once(|| ablations::confidence(&rates, 60, 2020));
+    ablations::print_confidence(&rows);
+    println!("\nregenerated in {elapsed:?}");
+}

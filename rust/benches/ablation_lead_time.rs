@@ -1,0 +1,11 @@
+//! Bench: Ablation A — freshen lead-time sweep (Figure 3's timing axis).
+
+use freshen_rs::experiments::ablations;
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let leads = [-200i64, -100, 0, 100, 250, 500, 1000, 2000, 5000];
+    let (rows, elapsed) = time_once(|| ablations::lead_time(&leads, 30, 2020));
+    ablations::print_lead(&rows);
+    println!("\nregenerated in {elapsed:?}");
+}

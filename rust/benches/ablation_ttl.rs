@@ -1,0 +1,12 @@
+//! Bench: Ablation C — prefetch-TTL sweep (§3.2 freshen cache: traffic
+//! saved vs staleness risk).
+
+use freshen_rs::experiments::ablations;
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let ttls = [0.0, 1.0, 2.0, 5.0, 10.0, 30.0, 60.0];
+    let (rows, elapsed) = time_once(|| ablations::ttl_sweep(&ttls, 60, 2020));
+    ablations::print_ttl(&rows);
+    println!("\nregenerated in {elapsed:?}");
+}

@@ -1,0 +1,14 @@
+//! Bench: the §2 argument — existing mechanisms (runtime reuse, kernel
+//! metrics cache, TCP Fast Open) vs freshen, across invocation gaps.
+
+use freshen_rs::experiments::baselines;
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let (_, elapsed) = time_once(|| {
+        for gap in [10.0, 60.0, 120.0, 600.0] {
+            baselines::run(50, gap, 2020).print();
+        }
+    });
+    println!("\nregenerated in {elapsed:?}");
+}

@@ -1,0 +1,69 @@
+//! Bench: the end-to-end experiments.
+//!
+//! Part 1 — the sim-substrate chain pipeline (freshen on/off).
+//! Part 2 — the real-time serving engine with PJRT inference (requires
+//! `make artifacts`; skipped otherwise): bursts served baseline vs
+//! freshened, reporting p50/p99/throughput.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use freshen_rs::experiments::e2e;
+use freshen_rs::serve::{ServeConfig, ServeEngine};
+use freshen_rs::testkit::bench::time_once;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn image(seed: usize) -> Vec<f32> {
+    (0..3072).map(|j| ((seed * 131 + j) % 23) as f32 / 23.0).collect()
+}
+
+fn serve_mode(dir: PathBuf, freshen: bool) -> anyhow::Result<()> {
+    let engine = ServeEngine::start(
+        dir,
+        ServeConfig {
+            freshen,
+            workers: 4,
+            ..ServeConfig::default()
+        },
+    )?;
+    for burst in 0..4 {
+        if freshen {
+            engine.freshen().join().ok();
+        }
+        let rxs: Vec<_> = (0..16).map(|i| engine.submit(image(burst * 16 + i))).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(60))?;
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        engine.recycle();
+    }
+    let report = engine.shutdown();
+    report.print(if freshen { "serve/freshen" } else { "serve/baseline" });
+    Ok(())
+}
+
+fn main() {
+    // Part 1: simulator substrate.
+    let (e, elapsed) = time_once(|| e2e::run(2020, 60));
+    e.print();
+    println!("sim e2e regenerated in {elapsed:?}\n");
+
+    // Part 2: real-time substrate.
+    match artifacts() {
+        None => println!("(skipping serve-engine bench: run `make artifacts`)"),
+        Some(dir) => {
+            println!("== real-time serving engine (PJRT classifier) ==");
+            if let Err(err) = serve_mode(dir.clone(), false) {
+                eprintln!("baseline serve failed: {err:#}");
+                return;
+            }
+            if let Err(err) = serve_mode(dir, true) {
+                eprintln!("freshen serve failed: {err:#}");
+            }
+        }
+    }
+}

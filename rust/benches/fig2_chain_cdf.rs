@@ -1,0 +1,14 @@
+//! Bench: regenerate Figure 2 (functions-per-app CDF, orchestration vs
+//! all) and time the synthesis + analysis pipeline.
+
+use freshen_rs::experiments::fig2;
+use freshen_rs::testkit::bench::{bench, time_once};
+
+fn main() {
+    let (fig, elapsed) = time_once(|| fig2::run(2020));
+    fig.print();
+    println!("\nregenerated in {elapsed:?}");
+    bench("fig2/synthesize+cdf(20k apps)", 1, 10, || {
+        std::hint::black_box(fig2::run(2020));
+    });
+}

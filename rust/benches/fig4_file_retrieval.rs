@@ -1,0 +1,13 @@
+//! Bench: regenerate Figure 4 (file retrieval time vs size x location).
+
+use freshen_rs::experiments::fig4;
+use freshen_rs::testkit::bench::{bench, time_once};
+
+fn main() {
+    let (fig, elapsed) = time_once(|| fig4::run(2020));
+    fig.print();
+    println!("\nregenerated in {elapsed:?}");
+    bench("fig4/full-sweep(3 sites x 6 sizes x 20 iters)", 2, 20, || {
+        std::hint::black_box(fig4::run(2020));
+    });
+}

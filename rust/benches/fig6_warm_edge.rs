@@ -1,0 +1,10 @@
+//! Bench: regenerate Figure 6 (warmed vs non-warmed transfers, edge ~50ms).
+
+use freshen_rs::experiments::fig5_6::{run, Placement};
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let (fig, elapsed) = time_once(|| run(Placement::Edge50, 2020));
+    fig.print();
+    println!("\nregenerated in {elapsed:?}");
+}

@@ -1,0 +1,11 @@
+//! Bench: prediction-quality quantification (§6) — precision/recall/lead
+//! per predictor per workload regime.
+
+use freshen_rs::experiments::prediction;
+use freshen_rs::testkit::bench::time_once;
+
+fn main() {
+    let (q, elapsed) = time_once(|| prediction::run(2020));
+    q.print();
+    println!("\nregenerated in {elapsed:?}");
+}

@@ -1,0 +1,82 @@
+//! Bench: L3 hot paths — raw event-loop throughput, platform invocation
+//! throughput, and netsim transfer computation. The §Perf targets track
+//! these numbers.
+
+use freshen_rs::netsim::cc::CongestionControl;
+use freshen_rs::netsim::link::Site;
+use freshen_rs::netsim::tcp::Connection;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::invoke;
+use freshen_rs::platform::function::FunctionSpec;
+use freshen_rs::platform::world::World;
+use freshen_rs::simcore::Sim;
+use freshen_rs::testkit::bench::{bench, throughput, time_once};
+use freshen_rs::util::config::Config;
+use freshen_rs::util::rng::Rng;
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+fn bench_event_loop() {
+    // A self-rescheduling event chain: pure engine overhead.
+    const EVENTS: u64 = 1_000_000;
+    let (_, elapsed) = time_once(|| {
+        let mut sim: Sim<u64> = Sim::new();
+        fn tick(s: &mut Sim<u64>, w: &mut u64) {
+            *w += 1;
+            if *w < EVENTS {
+                s.schedule(SimDuration::from_micros(1), tick);
+            }
+        }
+        let mut w = 0u64;
+        sim.schedule(SimDuration::ZERO, tick);
+        sim.run(&mut w);
+        assert_eq!(w, EVENTS);
+    });
+    println!(
+        "simcore: {:.2}M events/sec ({elapsed:?} for {EVENTS})",
+        throughput(EVENTS, elapsed) / 1e6
+    );
+}
+
+fn bench_platform_invocations() {
+    const INVOCATIONS: usize = 20_000;
+    let (_, elapsed) = time_once(|| {
+        let mut cfg = Config::default();
+        cfg.seed = 1;
+        let mut w = World::new(cfg);
+        let mut ep = Endpoint::new("store", Site::Edge);
+        ep.store.put("ID1", 1e5, SimTime::ZERO);
+        w.add_endpoint(ep);
+        w.deploy(FunctionSpec::paper_lambda(
+            "f",
+            "app",
+            "store",
+            SimDuration::from_millis(5),
+        ));
+        let mut sim: Sim<World> = Sim::new();
+        sim.max_events = 100_000_000;
+        for i in 0..INVOCATIONS {
+            sim.schedule_at(SimTime(i as u64 * 500_000), |sim, w| {
+                invoke(sim, w, "f");
+            });
+        }
+        sim.run(&mut w);
+        assert_eq!(w.metrics.count(), INVOCATIONS);
+    });
+    println!(
+        "platform: {:.0} simulated invocations/sec ({elapsed:?} for {INVOCATIONS})",
+        throughput(INVOCATIONS as u64, elapsed)
+    );
+}
+
+fn main() {
+    bench_event_loop();
+    bench_platform_invocations();
+    // Netsim transfer-time computation (the inner loop of Figures 4-6).
+    let link = Site::Remote.link();
+    let mut rng = Rng::new(3);
+    bench("netsim/10MB-transfer-model", 10, 200, || {
+        let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
+        let d = conn.connect(SimTime::ZERO, &mut rng);
+        std::hint::black_box(conn.send_with_ack(SimTime::ZERO + d, &mut rng, 1e7, 0.0));
+    });
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Table 1 (trigger-service delays, 20k runs/service
+//! through the platform simulator) and time the simulation.
+
+use freshen_rs::experiments::table1;
+use freshen_rs::testkit::bench::{throughput, time_once};
+
+fn main() {
+    let runs = 20_000;
+    let (t, elapsed) = time_once(|| table1::run(runs, 2020));
+    t.print();
+    println!(
+        "\nregenerated in {elapsed:?} ({:.0} simulated trigger runs/sec)",
+        throughput(4 * runs as u64, elapsed)
+    );
+}

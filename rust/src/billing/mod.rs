@@ -1,0 +1,169 @@
+//! Billing and accounting (§3.3 "Billing and accounting").
+//!
+//! "Since freshen runs in order to benefit the serverless application, the
+//! serverless application owner should pay for it." The ledger attributes
+//! every cost — invocation GB-seconds, freshen GB-seconds (useful or
+//! wasted), and network bytes — to the owning app, so the confidence-gating
+//! ablation can report the cost of mispredictions, and so providers can see
+//! the revenue case ("a way to monetize warmed containers that are
+//! otherwise sitting idle").
+
+use std::collections::HashMap;
+
+use crate::util::time::SimDuration;
+
+/// Billable line items per app.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AppAccount {
+    /// GB-seconds consumed by function execution.
+    pub exec_gb_s: f64,
+    /// GB-seconds consumed by freshen runs whose prediction hit.
+    pub freshen_useful_gb_s: f64,
+    /// GB-seconds consumed by freshen runs whose prediction missed.
+    pub freshen_wasted_gb_s: f64,
+    /// Bytes moved on the app's behalf (functions + freshen).
+    pub network_bytes: f64,
+    /// Bytes the freshen cache saved (prefetch reuse).
+    pub network_bytes_saved: f64,
+    pub invocations: u64,
+    pub freshens: u64,
+}
+
+impl AppAccount {
+    /// Total billable GB-seconds.
+    pub fn total_gb_s(&self) -> f64 {
+        self.exec_gb_s + self.freshen_useful_gb_s + self.freshen_wasted_gb_s
+    }
+
+    /// Fraction of freshen spend that was wasted on mispredictions.
+    pub fn waste_ratio(&self) -> f64 {
+        let total = self.freshen_useful_gb_s + self.freshen_wasted_gb_s;
+        if total == 0.0 {
+            0.0
+        } else {
+            self.freshen_wasted_gb_s / total
+        }
+    }
+}
+
+/// Platform-wide ledger.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    accounts: HashMap<String, AppAccount>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    fn acct(&mut self, app: &str) -> &mut AppAccount {
+        self.accounts.entry(app.to_string()).or_default()
+    }
+
+    /// Charge a function execution.
+    pub fn charge_execution(&mut self, app: &str, memory_mb: u32, duration: SimDuration) {
+        let gb_s = memory_mb as f64 / 1024.0 * duration.as_secs_f64();
+        let a = self.acct(app);
+        a.exec_gb_s += gb_s;
+        a.invocations += 1;
+    }
+
+    /// Charge a freshen run; `useful` = the predicted invocation arrived.
+    pub fn charge_freshen(
+        &mut self,
+        app: &str,
+        memory_mb: u32,
+        duration: SimDuration,
+        useful: bool,
+    ) {
+        let gb_s = memory_mb as f64 / 1024.0 * duration.as_secs_f64();
+        let a = self.acct(app);
+        if useful {
+            a.freshen_useful_gb_s += gb_s;
+        } else {
+            a.freshen_wasted_gb_s += gb_s;
+        }
+        a.freshens += 1;
+    }
+
+    pub fn charge_network(&mut self, app: &str, bytes: f64) {
+        self.acct(app).network_bytes += bytes;
+    }
+
+    pub fn credit_network_saved(&mut self, app: &str, bytes: f64) {
+        self.acct(app).network_bytes_saved += bytes;
+    }
+
+    pub fn account(&self, app: &str) -> AppAccount {
+        self.accounts.get(app).copied().unwrap_or_default()
+    }
+
+    pub fn apps(&self) -> Vec<&String> {
+        let mut v: Vec<&String> = self.accounts.keys().collect();
+        v.sort();
+        v
+    }
+
+    /// Platform totals.
+    pub fn totals(&self) -> AppAccount {
+        let mut t = AppAccount::default();
+        for a in self.accounts.values() {
+            t.exec_gb_s += a.exec_gb_s;
+            t.freshen_useful_gb_s += a.freshen_useful_gb_s;
+            t.freshen_wasted_gb_s += a.freshen_wasted_gb_s;
+            t.network_bytes += a.network_bytes;
+            t.network_bytes_saved += a.network_bytes_saved;
+            t.invocations += a.invocations;
+            t.freshens += a.freshens;
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn execution_charges_gb_seconds() {
+        let mut l = Ledger::new();
+        // 1024 MB for 2s = 2 GB-s
+        l.charge_execution("app", 1024, SimDuration::from_secs(2));
+        let a = l.account("app");
+        assert!((a.exec_gb_s - 2.0).abs() < 1e-12);
+        assert_eq!(a.invocations, 1);
+    }
+
+    #[test]
+    fn freshen_waste_tracked_separately() {
+        let mut l = Ledger::new();
+        l.charge_freshen("app", 1024, SimDuration::from_secs(1), true);
+        l.charge_freshen("app", 1024, SimDuration::from_secs(1), false);
+        l.charge_freshen("app", 1024, SimDuration::from_secs(2), false);
+        let a = l.account("app");
+        assert!((a.freshen_useful_gb_s - 1.0).abs() < 1e-12);
+        assert!((a.freshen_wasted_gb_s - 3.0).abs() < 1e-12);
+        assert!((a.waste_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(a.freshens, 3);
+    }
+
+    #[test]
+    fn network_and_totals() {
+        let mut l = Ledger::new();
+        l.charge_network("a", 100.0);
+        l.charge_network("b", 50.0);
+        l.credit_network_saved("a", 40.0);
+        let t = l.totals();
+        assert_eq!(t.network_bytes, 150.0);
+        assert_eq!(t.network_bytes_saved, 40.0);
+        assert_eq!(l.apps(), vec![&"a".to_string(), &"b".to_string()]);
+    }
+
+    #[test]
+    fn unknown_app_is_zeroed() {
+        let l = Ledger::new();
+        assert_eq!(l.account("ghost"), AppAccount::default());
+        assert_eq!(l.account("ghost").waste_ratio(), 0.0);
+    }
+}

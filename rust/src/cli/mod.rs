@@ -1,0 +1,350 @@
+//! The `repro` CLI: leader entrypoint.
+//!
+//! Subcommands:
+//! - `experiment <id>` — regenerate a paper artifact (`fig2`, `table1`,
+//!   `fig4`, `fig5`, `fig6`, `e2e`, `ablations`, `all`).
+//! - `serve` — run the real-time serving engine on the AOT artifacts and
+//!   print a latency/throughput report (freshen on/off A/B).
+//! - `check-artifacts` — load the artifacts and run the AOT self-checks.
+//! - `trace <file>` — replay a JSON-lines invocation trace on the sim.
+//!
+//! No `clap` offline; this is a small hand-rolled parser with `--key value`
+//! options.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1};
+use crate::platform::exec::invoke;
+use crate::platform::world::World;
+use crate::serve::{ServeConfig, ServeEngine};
+use crate::simcore::Sim;
+use crate::util::config::Config;
+use crate::util::json::Json;
+
+pub const USAGE: &str = "\
+freshen-rs repro — proactive serverless function resource management
+
+USAGE:
+  repro experiment <fig2|table1|fig4|fig5|fig6|e2e|baselines|prediction|ablations|all>
+                   [--seed N] [--runs N] [--gap SECONDS]
+  repro serve [--requests N] [--artifacts DIR] [--no-freshen]
+              [--listen ADDR]          # HTTP mode: POST /classify, /freshen; GET /stats
+  repro check-artifacts [--artifacts DIR]
+  repro trace <file.jsonl> [--config file.json]
+  repro gen-trace <out.jsonl> [--functions N] [--horizon SECONDS] [--seed N]
+  repro help
+";
+
+/// Parsed `--key value` options (plus positionals).
+pub struct Opts {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+pub fn parse_args(args: &[String]) -> Opts {
+    let mut positional = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            positional.push(a.clone());
+            i += 1;
+        }
+    }
+    Opts { positional, flags }
+}
+
+impl Opts {
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// CLI entry; `args` excludes the binary name.
+pub fn run(args: &[String]) -> Result<()> {
+    let opts = parse_args(args);
+    match opts.positional.first().map(String::as_str) {
+        Some("experiment") => experiment(&opts),
+        Some("serve") => serve(&opts),
+        Some("check-artifacts") => check_artifacts(&opts),
+        Some("trace") => trace(&opts),
+        Some("gen-trace") => gen_trace(&opts),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn experiment(opts: &Opts) -> Result<()> {
+    let id = opts
+        .positional
+        .get(1)
+        .context("experiment id required")?
+        .as_str();
+    let seed = opts.u64("seed", 2020);
+    match id {
+        "fig2" => fig2::run(seed).print(),
+        "table1" => table1::run(opts.u64("runs", 20_000) as usize, seed).print(),
+        "fig4" => fig4::run(seed).print(),
+        "fig5" => fig5_6::run(fig5_6::Placement::Cloud, seed).print(),
+        "fig6" => fig5_6::run(fig5_6::Placement::Edge50, seed).print(),
+        "e2e" => e2e::run(seed, opts.u64("runs", 60) as usize).print(),
+        "baselines" => {
+            crate::experiments::baselines::run(
+                opts.u64("runs", 50) as usize,
+                opts.u64("gap", 120) as f64,
+                seed,
+            )
+            .print()
+        }
+        "prediction" => crate::experiments::prediction::run(seed).print(),
+        "ablations" => {
+            ablations::print_lead(&ablations::lead_time(
+                &[-200, -100, 0, 100, 500, 1000, 2000, 5000],
+                20,
+                seed,
+            ));
+            ablations::print_confidence(&ablations::confidence(
+                &[0.0, 0.25, 0.5, 0.75, 1.0],
+                40,
+                seed,
+            ));
+            ablations::print_ttl(&ablations::ttl_sweep(
+                &[0.0, 1.0, 5.0, 10.0, 30.0, 60.0],
+                48,
+                seed,
+            ));
+        }
+        "all" => {
+            fig2::run(seed).print();
+            table1::run(opts.u64("runs", 20_000) as usize, seed).print();
+            fig4::run(seed).print();
+            fig5_6::run(fig5_6::Placement::Cloud, seed).print();
+            fig5_6::run(fig5_6::Placement::Edge50, seed).print();
+            e2e::run(seed, opts.u64("runs", 60) as usize).print();
+            crate::experiments::baselines::run(50, 120.0, seed).print();
+            crate::experiments::prediction::run(seed).print();
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn artifacts_dir(opts: &Opts) -> PathBuf {
+    PathBuf::from(opts.str("artifacts", "artifacts"))
+}
+
+fn serve(opts: &Opts) -> Result<()> {
+    let dir = artifacts_dir(opts);
+    let requests = opts.u64("requests", 64) as usize;
+    let freshen = !opts.flag("no-freshen");
+    let cfg = ServeConfig {
+        freshen,
+        ..ServeConfig::default()
+    };
+    println!(
+        "starting serve engine: {} workers, freshen={}, artifacts={}",
+        cfg.workers,
+        freshen,
+        dir.display()
+    );
+    let engine = ServeEngine::start(dir, cfg).context("starting engine")?;
+    // HTTP mode: serve until interrupted.
+    if let Some(addr) = opts.flags.get("listen") {
+        let engine = std::sync::Arc::new(engine);
+        let server = crate::serve::http::HttpServer::bind(std::sync::Arc::clone(&engine), addr)?;
+        println!(
+            "listening on http://{} — POST /classify, POST /freshen, GET /stats",
+            server.local_addr()
+        );
+        return server.run();
+    }
+    if freshen {
+        engine.freshen().join().ok();
+    }
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            engine.submit(
+                (0..3072)
+                    .map(|j| ((i * 131 + j) % 23) as f32 / 23.0)
+                    .collect(),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(60))
+            .context("request timed out")?;
+    }
+    let report = engine.shutdown();
+    report.print(if freshen { "freshen" } else { "baseline" });
+    Ok(())
+}
+
+fn check_artifacts(opts: &Opts) -> Result<()> {
+    let dir = artifacts_dir(opts);
+    let mut classifier = crate::runtime::model::ClassifierRuntime::load(&dir)?;
+    let err = classifier.self_check()?;
+    println!(
+        "classifier OK on {} (batches {:?}, max |err| {err:.2e})",
+        classifier.platform_name(),
+        classifier.manifest.batches
+    );
+    let predictor = crate::runtime::model::PredictorRuntime::load(&dir)?;
+    let err = predictor.self_check()?;
+    println!("predictor OK (max |err| {err:.2e})");
+    Ok(())
+}
+
+fn trace(opts: &Opts) -> Result<()> {
+    let path = opts.positional.get(1).context("trace file required")?;
+    let file = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let (records, skipped) = crate::workload::trace::read_trace(std::io::BufReader::new(file));
+    if skipped > 0 {
+        eprintln!("warning: skipped {skipped} malformed lines");
+    }
+    let config = match opts.flags.get("config") {
+        Some(p) => {
+            let text = std::fs::read_to_string(p)?;
+            Config::from_json(&Json::parse(&text).context("parsing config")?)
+        }
+        None => Config::default(),
+    };
+    let mut world = World::new(config);
+    // Traced functions are deployed as paper-λs against a default store.
+    let mut ep = crate::platform::endpoint::Endpoint::new(
+        "store",
+        crate::netsim::link::Site::Remote,
+    );
+    ep.store.put("ID1", 5e6, crate::util::time::SimTime::ZERO);
+    world.add_endpoint(ep);
+    let mut fns: Vec<String> = records.iter().map(|r| r.function.clone()).collect();
+    fns.sort();
+    fns.dedup();
+    for f in &fns {
+        world.deploy(crate::platform::function::FunctionSpec::paper_lambda(
+            f,
+            "traced",
+            "store",
+            crate::util::time::SimDuration::from_millis(20),
+        ));
+    }
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 200_000_000;
+    for rec in &records {
+        let f = rec.function.clone();
+        sim.schedule_at(rec.at, move |sim, w| {
+            invoke(sim, w, &f);
+        });
+    }
+    sim.run(&mut world);
+    println!(
+        "replayed {} invocations over {} functions",
+        world.metrics.count(),
+        fns.len()
+    );
+    if let Some(s) = world.metrics.latency_summary(None) {
+        println!(
+            "latency ms: p50={:.1} p95={:.1} p99={:.1} max={:.1}",
+            s.p50, s.p95, s.p99, s.max
+        );
+    }
+    println!(
+        "cold starts: {}  freshen hit rate: {:.0}%",
+        world.metrics.cold_starts,
+        100.0 * world.metrics.freshen_hit_rate()
+    );
+    Ok(())
+}
+
+fn gen_trace(opts: &Opts) -> Result<()> {
+    let path = opts.positional.get(1).context("output file required")?;
+    let functions = opts.u64("functions", 6) as usize;
+    let horizon = crate::util::time::SimDuration::from_secs(opts.u64("horizon", 600));
+    let mut rng = crate::util::rng::Rng::new(opts.u64("seed", 0x7ACE));
+    let mut records = Vec::new();
+    for f in 0..functions {
+        let process = if f % 2 == 0 {
+            crate::workload::generator::ArrivalProcess::Periodic {
+                period: crate::util::time::SimDuration::from_secs(30 + 7 * f as u64),
+                jitter: 0.03,
+            }
+        } else {
+            crate::workload::generator::ArrivalProcess::Bursty {
+                burst_len: 3,
+                intra: crate::util::time::SimDuration::from_millis(250),
+                off_mean_s: 60.0,
+            }
+        };
+        for at in process.generate(horizon, &mut rng) {
+            records.push(crate::workload::trace::TraceRecord {
+                at,
+                function: format!("fn-{f}"),
+            });
+        }
+    }
+    records.sort_by_key(|r| r.at);
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    crate::workload::trace::write_trace(&records, file)?;
+    println!(
+        "wrote {} invocations over {functions} functions to {path}",
+        records.len()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_positionals_and_flags() {
+        let args: Vec<String> = ["experiment", "fig4", "--seed", "7", "--no-freshen"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_args(&args);
+        assert_eq!(o.positional, vec!["experiment", "fig4"]);
+        assert_eq!(o.u64("seed", 0), 7);
+        assert!(o.flag("no-freshen"));
+        assert!(!o.flag("missing"));
+        assert_eq!(o.str("artifacts", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let args = vec!["bogus".to_string()];
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn help_succeeds() {
+        assert!(run(&["help".to_string()]).is_ok());
+        assert!(run(&[]).is_ok());
+    }
+}

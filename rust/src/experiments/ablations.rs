@@ -1,0 +1,360 @@
+//! Ablations over the design choices DESIGN.md calls out.
+//!
+//! - **Lead time** (Figure 3's timing axis): how early must freshen fire
+//!   before the invocation to pay off? Sweeps the freshen lead from
+//!   "after the invocation already started" to several seconds early.
+//! - **Confidence gating** (§3.3 billing): with a controllable mispredict
+//!   rate, what does gating save in wasted freshen spend?
+//! - **Prefetch TTL** (§3.2 caching): network traffic vs staleness across
+//!   TTLs under periodic re-invocation.
+
+use crate::experiments::print_table;
+use crate::netsim::link::Site;
+use crate::platform::endpoint::Endpoint;
+use crate::platform::exec::{emit_prediction, invoke, start_freshen};
+use crate::platform::function::FunctionSpec;
+use crate::platform::world::World;
+use crate::predict::{Prediction, PredictionSource};
+use crate::simcore::Sim;
+use crate::util::config::Config;
+use crate::util::stats::Summary;
+use crate::util::time::{SimDuration, SimTime};
+
+fn lambda_world(seed: u64, freshen_enabled: bool) -> World {
+    let mut cfg = Config::default();
+    cfg.seed = seed;
+    cfg.freshen.enabled = freshen_enabled;
+    cfg.freshen.min_confidence = 0.0;
+    let mut w = World::new(cfg);
+    // Ablations control their own freshen/prediction schedules.
+    w.auto_hist_predict = false;
+    let mut ep = Endpoint::new("store", Site::Remote);
+    ep.store.put("ID1", 5e6, SimTime::ZERO);
+    w.add_endpoint(ep);
+    w.deploy(FunctionSpec::paper_lambda(
+        "lambda",
+        "app",
+        "store",
+        SimDuration::from_millis(20),
+    ));
+    w
+}
+
+// ====================================================================
+// Ablation A: freshen lead time
+// ====================================================================
+
+#[derive(Debug, Clone)]
+pub struct LeadRow {
+    /// Freshen start relative to invocation (negative = after).
+    pub lead_ms: i64,
+    pub latency: Summary,
+    pub hit_rate: f64,
+}
+
+/// For each lead, run `iters` warm invocations 30 s apart (past TTL and
+/// into idle decay), freshen firing `lead` before each.
+pub fn lead_time(leads_ms: &[i64], iters: usize, seed: u64) -> Vec<LeadRow> {
+    leads_ms
+        .iter()
+        .map(|&lead_ms| {
+            let mut w = lambda_world(seed ^ lead_ms.unsigned_abs(), true);
+            let mut sim: Sim<World> = Sim::new();
+            sim.max_events = 50_000_000;
+            // Warm up the container.
+            invoke(&mut sim, &mut w, "lambda");
+            sim.run(&mut w);
+            let mut t = sim.now() + SimDuration::from_secs(5);
+            for _ in 0..iters {
+                let invoke_at = t + SimDuration::from_secs(30);
+                let freshen_at = if lead_ms >= 0 {
+                    SimTime(invoke_at.micros().saturating_sub(lead_ms as u64 * 1_000))
+                } else {
+                    invoke_at + SimDuration::from_millis((-lead_ms) as u64)
+                };
+                sim.schedule_at(freshen_at, |sim, w| {
+                    start_freshen(sim, w, "lambda", None);
+                });
+                sim.schedule_at(invoke_at, |sim, w| {
+                    invoke(sim, w, "lambda");
+                });
+                t = invoke_at;
+            }
+            sim.run(&mut w);
+            let lat: Vec<SimDuration> = w
+                .metrics
+                .records()
+                .iter()
+                .skip(1) // warmup
+                .map(|r| r.latency())
+                .collect();
+            LeadRow {
+                lead_ms,
+                latency: Summary::of_durations_ms(&lat).expect("ran"),
+                hit_rate: w.metrics.freshen_hit_rate(),
+            }
+        })
+        .collect()
+}
+
+pub fn print_lead(rows: &[LeadRow]) {
+    println!("\n== Ablation A: freshen lead time (invocations 30s apart) ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}ms", r.lead_ms),
+                format!("{:.1}", r.latency.p50),
+                format!("{:.1}", r.latency.p99),
+                format!("{:.0}%", 100.0 * r.hit_rate),
+            ]
+        })
+        .collect();
+    print_table(&["lead", "p50 ms", "p99 ms", "hit rate"], &table);
+}
+
+// ====================================================================
+// Ablation B: confidence gating under mispredictions
+// ====================================================================
+
+#[derive(Debug, Clone)]
+pub struct ConfidenceRow {
+    pub mispredict_rate: f64,
+    pub gating: bool,
+    pub latency_p50_ms: f64,
+    pub wasted_gb_s: f64,
+    pub useful_gb_s: f64,
+    pub freshens: u64,
+}
+
+/// Drive predictions with a known mispredict rate; compare gated (accuracy
+/// feedback on) vs ungated (min_confidence 0, accuracy ignored -> we
+/// emulate by feeding confident predictions regardless).
+pub fn confidence(mispredict_rates: &[f64], iters: usize, seed: u64) -> Vec<ConfidenceRow> {
+    let mut out = Vec::new();
+    for &rate in mispredict_rates {
+        for gating in [false, true] {
+            let mut w = lambda_world(seed, true);
+            // This ablation injects its own prediction stream; keep the
+            // platform's automatic histogram predictions out of the way.
+            w.auto_hist_predict = false;
+            if !gating {
+                // Ungated: admit everything the predictor emits, and
+                // ignore the observed-accuracy feedback loop.
+                w.gate.config.min_confidence = 0.0;
+                w.gate.accuracy_gating = false;
+            }
+            let mut sim: Sim<World> = Sim::new();
+            sim.max_events = 50_000_000;
+            invoke(&mut sim, &mut w, "lambda");
+            sim.run(&mut w);
+            let mut predict_rng = w.rng.fork(7);
+            let mut t = sim.now() + SimDuration::from_secs(5);
+            for _ in 0..iters {
+                let expected = t + SimDuration::from_secs(30);
+                let mispredict = predict_rng.bernoulli(rate);
+                // Confidence reflects the true quality only when gating:
+                // the gated platform learns from outcomes; ungated admits
+                // high-confidence claims blindly.
+                let pred = Prediction {
+                    function: "lambda".into(),
+                    expected_at: expected,
+                    confidence: 0.9,
+                    source: PredictionSource::Histogram,
+                };
+                sim.schedule_at(t + SimDuration::from_secs(29), move |sim, w| {
+                    emit_prediction(sim, w, pred.clone(), sim.now());
+                });
+                if !mispredict {
+                    sim.schedule_at(expected, |sim, w| {
+                        invoke(sim, w, "lambda");
+                    });
+                }
+                t = expected;
+            }
+            sim.run(&mut w);
+            let acct = w.ledger.account("app");
+            let lat: Vec<SimDuration> = w
+                .metrics
+                .records()
+                .iter()
+                .skip(1)
+                .map(|r| r.latency())
+                .collect();
+            out.push(ConfidenceRow {
+                mispredict_rate: rate,
+                gating,
+                latency_p50_ms: Summary::of_durations_ms(&lat)
+                    .map(|s| s.p50)
+                    .unwrap_or(0.0),
+                wasted_gb_s: acct.freshen_wasted_gb_s,
+                useful_gb_s: acct.freshen_useful_gb_s,
+                freshens: acct.freshens,
+            });
+        }
+    }
+    out
+}
+
+pub fn print_confidence(rows: &[ConfidenceRow]) {
+    println!("\n== Ablation B: confidence gating vs mispredict rate ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0}%", 100.0 * r.mispredict_rate),
+                if r.gating { "gated" } else { "ungated" }.into(),
+                format!("{:.1}", r.latency_p50_ms),
+                format!("{:.4}", r.wasted_gb_s),
+                format!("{:.4}", r.useful_gb_s),
+                r.freshens.to_string(),
+            ]
+        })
+        .collect();
+    print_table(
+        &["mispredict", "mode", "p50 ms", "wasted GB-s", "useful GB-s", "freshens"],
+        &table,
+    );
+}
+
+// ====================================================================
+// Ablation C: prefetch TTL
+// ====================================================================
+
+#[derive(Debug, Clone)]
+pub struct TtlRow {
+    pub ttl_s: f64,
+    pub latency_p50_ms: f64,
+    pub network_mb: f64,
+    pub saved_mb: f64,
+    pub stale_serves: u64,
+}
+
+/// Periodic invocations (every 5 s) against an object that's externally
+/// updated every 60 s; sweep the prefetch TTL. Small TTLs refetch often
+/// (more traffic, never stale); large TTLs save traffic but risk staleness
+/// — with strict version checking the staleness converts back into
+/// refetch latency.
+pub fn ttl_sweep(ttls_s: &[f64], iters: usize, seed: u64) -> Vec<TtlRow> {
+    ttls_s
+        .iter()
+        .map(|&ttl_s| {
+            let mut w = lambda_world(seed, true);
+            w.strict_versions = false; // pure TTL regime: count staleness
+            {
+                let spec = w.registry.function("lambda").unwrap().clone();
+                let mut spec = spec;
+                spec.prefetch_ttl = Some(SimDuration::from_secs_f64(ttl_s));
+                w.registry.deploy(spec, w.config.freshen.default_ttl);
+            }
+            let mut sim: Sim<World> = Sim::new();
+            sim.max_events = 50_000_000;
+            invoke(&mut sim, &mut w, "lambda");
+            sim.run(&mut w);
+            let mut t = sim.now() + SimDuration::from_secs(2);
+            for i in 0..iters {
+                sim.schedule_at(t, |sim, w| {
+                    invoke(sim, w, "lambda");
+                });
+                if i % 12 == 11 {
+                    // External update every ~60s of invocations.
+                    sim.schedule_at(t + SimDuration::from_secs(1), |sim, w| {
+                        let now = sim.now();
+                        w.endpoints
+                            .get_mut("store")
+                            .unwrap()
+                            .store
+                            .external_update("ID1", 5e6, now);
+                    });
+                }
+                t = t + SimDuration::from_secs(5);
+            }
+            sim.run(&mut w);
+            // Stale serves: fetch results whose version lagged the store.
+            let live = w.endpoints["store"].store.peek("ID1").unwrap().version;
+            let stale_serves = w
+                .containers
+                .iter()
+                .map(|c| c.runtime.cache.stats.version_stale)
+                .sum::<u64>()
+                + live.saturating_sub(1) * 0; // placeholder: counted below
+            let acct = w.ledger.account("app");
+            let lat: Vec<SimDuration> = w
+                .metrics
+                .records()
+                .iter()
+                .skip(1)
+                .map(|r| r.latency())
+                .collect();
+            TtlRow {
+                ttl_s,
+                latency_p50_ms: Summary::of_durations_ms(&lat)
+                    .map(|s| s.p50)
+                    .unwrap_or(0.0),
+                network_mb: acct.network_bytes / 1e6,
+                saved_mb: acct.network_bytes_saved / 1e6,
+                stale_serves,
+            }
+        })
+        .collect()
+}
+
+pub fn print_ttl(rows: &[TtlRow]) {
+    println!("\n== Ablation C: prefetch TTL (invocations every 5s) ==");
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.0}s", r.ttl_s),
+                format!("{:.1}", r.latency_p50_ms),
+                format!("{:.1}", r.network_mb),
+                format!("{:.1}", r.saved_mb),
+            ]
+        })
+        .collect();
+    print_table(&["TTL", "p50 ms", "network MB", "saved MB"], &table);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn earlier_freshen_is_better_or_equal() {
+        let rows = super::lead_time(&[-100, 0, 500, 2000], 10, 0x1EAD);
+        // Late freshen (after invocation) can't beat a 2s-early one.
+        let late = rows.iter().find(|r| r.lead_ms == -100).unwrap();
+        let early = rows.iter().find(|r| r.lead_ms == 2000).unwrap();
+        assert!(
+            early.latency.p50 <= late.latency.p50,
+            "early {} vs late {}",
+            early.latency.p50,
+            late.latency.p50
+        );
+        assert!(early.hit_rate >= late.hit_rate);
+    }
+
+    #[test]
+    fn gating_cuts_waste_under_mispredictions() {
+        let rows = super::confidence(&[0.8], 40, 0xC0);
+        let gated = rows.iter().find(|r| r.gating).unwrap();
+        let ungated = rows.iter().find(|r| !r.gating).unwrap();
+        assert!(
+            gated.wasted_gb_s <= ungated.wasted_gb_s,
+            "gated {} vs ungated {}",
+            gated.wasted_gb_s,
+            ungated.wasted_gb_s
+        );
+    }
+
+    #[test]
+    fn longer_ttl_saves_traffic() {
+        let rows = super::ttl_sweep(&[1.0, 30.0], 24, 0x77);
+        let short = &rows[0];
+        let long = &rows[1];
+        assert!(
+            long.network_mb < short.network_mb,
+            "long-TTL traffic {} should be below short-TTL {}",
+            long.network_mb,
+            short.network_mb
+        );
+    }
+}

@@ -1,0 +1,289 @@
+//! The §2 argument quantified: existing mechanisms vs freshen.
+//!
+//! "The Linux `tcp_no_metrics_save` capability allows metrics like RTT and
+//! ssthresh to be cached between TCP connections to the same destination,
+//! but does not apply to important parameters such as CWND. TCP Fast Open
+//! requires sender/receiver support and limits the amount of data sent in
+//! initial handshakes to small amounts. As a result, we believe several
+//! inefficiencies remain, even with runtime reuse, that can be addressed
+//! with freshen."
+//!
+//! Scenario: λ runs every `gap` seconds (long enough for RFC 2861 idle
+//! decay and past the prefetch TTL), fetching a 5 MB object and writing a
+//! 64 KB result. Mechanisms compared:
+//!
+//! | mechanism | connection | CWND at run | data at run |
+//! |---|---|---|---|
+//! | invocation-scoped  | re-established each run | initial | refetched |
+//! | runtime reuse (§2) | reused (may be dead)    | decayed | refetched |
+//! | + kernel metrics cache | reused/re-est. w/ ssthresh | decayed/initial | refetched |
+//! | + TCP Fast Open    | 0-RTT re-establish      | initial | refetched |
+//! | freshen (§3)       | kept alive + warmed     | warmed  | prefetched |
+
+use crate::experiments::{fmt_secs, print_table};
+use crate::netsim::cc::CongestionControl;
+use crate::netsim::link::Site;
+use crate::netsim::metrics_cache::TcpMetricsCache;
+use crate::netsim::tcp::{ConnState, Connection, TransferDirection};
+use crate::netsim::warm::{warm_cwnd, CwndHistory, WarmPolicy};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::time::{SimDuration, SimTime};
+
+/// The mechanisms compared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mechanism {
+    InvocationScoped,
+    RuntimeReuse,
+    RuntimeReuseMetricsCache,
+    RuntimeReuseTfo,
+    Freshen,
+}
+
+impl Mechanism {
+    pub fn all() -> [Mechanism; 5] {
+        [
+            Mechanism::InvocationScoped,
+            Mechanism::RuntimeReuse,
+            Mechanism::RuntimeReuseMetricsCache,
+            Mechanism::RuntimeReuseTfo,
+            Mechanism::Freshen,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mechanism::InvocationScoped => "invocation-scoped",
+            Mechanism::RuntimeReuse => "runtime reuse",
+            Mechanism::RuntimeReuseMetricsCache => "+ metrics cache",
+            Mechanism::RuntimeReuseTfo => "+ TCP Fast Open",
+            Mechanism::Freshen => "freshen",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BaselineRow {
+    pub mechanism: Mechanism,
+    /// Per-invocation critical-path time (fetch + put), seconds.
+    pub latency: Summary,
+}
+
+#[derive(Debug, Clone)]
+pub struct Baselines {
+    pub rows: Vec<BaselineRow>,
+    pub gap_s: f64,
+    pub fetch_bytes: f64,
+    pub put_bytes: f64,
+}
+
+fn run_mechanism(
+    mech: Mechanism,
+    iters: usize,
+    gap_s: f64,
+    fetch_bytes: f64,
+    put_bytes: f64,
+    seed: u64,
+) -> BaselineRow {
+    let mut link = Site::Remote.link();
+    link.jitter_sigma = 0.02;
+    let mut rng = Rng::new(seed);
+    let mut kernel_cache = TcpMetricsCache::new();
+    kernel_cache.tfo_enabled = mech == Mechanism::RuntimeReuseTfo;
+    let mut history = CwndHistory::new();
+    let dest = "store:443";
+
+    // Short server idle timeout so runtime-scoped connections actually die
+    // between far-apart invocations (the §2 failure mode).
+    let idle_timeout = 60.0;
+    let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
+    conn.idle_timeout = idle_timeout;
+    let mut samples = Vec::with_capacity(iters);
+    let mut now = SimTime::ZERO;
+
+    for _ in 0..iters {
+        now += SimDuration::from_secs_f64(gap_s);
+        // ---- freshen runs ahead of the invocation (off critical path).
+        if mech == Mechanism::Freshen {
+            let lead = SimDuration::from_secs(1);
+            let f_at = SimTime(now.micros() - lead.micros());
+            // EnsureConnection: keepalive or re-establish.
+            let (_d, alive) = conn.keepalive(f_at, &mut rng);
+            if !alive {
+                conn.connect(f_at, &mut rng);
+            }
+            // WarmCwnd both directions.
+            for dir in [TransferDirection::Download, TransferDirection::Upload] {
+                warm_cwnd(
+                    &mut conn,
+                    dir,
+                    fetch_bytes.max(put_bytes),
+                    &WarmPolicy::default(),
+                    &mut history,
+                    f_at,
+                    &mut rng,
+                );
+            }
+        }
+
+        // ---- the invocation's critical path.
+        let mut t = 0.0;
+        match mech {
+            Mechanism::InvocationScoped => {
+                // Fresh connection every run.
+                conn = Connection::new(link.clone(), CongestionControl::Cubic);
+                conn.idle_timeout = idle_timeout;
+                t += conn.connect(now, &mut rng).as_secs_f64();
+            }
+            Mechanism::RuntimeReuse
+            | Mechanism::RuntimeReuseMetricsCache
+            | Mechanism::RuntimeReuseTfo
+            | Mechanism::Freshen => {
+                // Reused connection: discover death the hard way (RTO)
+                // unless freshen already handled it.
+                let dead = match conn.state {
+                    ConnState::Established => {
+                        if conn.idle_expired(now) {
+                            conn.kill();
+                            t += conn.rto();
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                    _ => true,
+                };
+                if dead {
+                    let ssthresh_hint = if mech == Mechanism::RuntimeReuseMetricsCache {
+                        kernel_cache.ssthresh_hint(dest)
+                    } else {
+                        None
+                    };
+                    let fast_open = mech == Mechanism::RuntimeReuseTfo
+                        && kernel_cache.can_fast_open(dest);
+                    t += conn
+                        .connect_with(now, &mut rng, ssthresh_hint, fast_open)
+                        .as_secs_f64();
+                    kernel_cache.grant_tfo_cookie(dest, now);
+                }
+            }
+        }
+        let t_start = now + SimDuration::from_secs_f64(t);
+        // Freshen prefetched the data; everyone else fetches it now.
+        if mech != Mechanism::Freshen {
+            t += conn
+                .request_response(t_start, &mut rng, 256.0, fetch_bytes, 1e-3)
+                .as_secs_f64();
+        }
+        let t_put = now + SimDuration::from_secs_f64(t);
+        t += conn
+            .send_with_ack(t_put, &mut rng, put_bytes, 1e-3)
+            .as_secs_f64();
+        // Kernel caches metrics at "close"/quiesce.
+        kernel_cache.record(dest, link.rtt, conn.cc_tx.ssthresh, now);
+        samples.push(t);
+    }
+    BaselineRow {
+        mechanism: mech,
+        latency: Summary::of(&samples).expect("non-empty"),
+    }
+}
+
+pub fn run(iters: usize, gap_s: f64, seed: u64) -> Baselines {
+    let fetch_bytes = 5e6;
+    let put_bytes = 64.0 * 1024.0;
+    let rows = Mechanism::all()
+        .iter()
+        .map(|&m| run_mechanism(m, iters, gap_s, fetch_bytes, put_bytes, seed))
+        .collect();
+    Baselines {
+        rows,
+        gap_s,
+        fetch_bytes,
+        put_bytes,
+    }
+}
+
+impl Baselines {
+    pub fn freshen_speedup(&self) -> f64 {
+        let freshen = self
+            .rows
+            .iter()
+            .find(|r| r.mechanism == Mechanism::Freshen)
+            .unwrap();
+        let best_other = self
+            .rows
+            .iter()
+            .filter(|r| r.mechanism != Mechanism::Freshen)
+            .map(|r| r.latency.p50)
+            .fold(f64::INFINITY, f64::min);
+        best_other / freshen.latency.p50
+    }
+
+    pub fn print(&self) {
+        println!(
+            "\n== §2 baseline mechanisms vs freshen (λ every {:.0}s, {:.0}MB fetch + {:.0}KB put) ==",
+            self.gap_s,
+            self.fetch_bytes / 1e6,
+            self.put_bytes / 1e3
+        );
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.mechanism.as_str().to_string(),
+                    fmt_secs(r.latency.p50),
+                    fmt_secs(r.latency.p99),
+                ]
+            })
+            .collect();
+        print_table(&["mechanism", "p50", "p99"], &rows);
+        println!(
+            "freshen speedup over best existing mechanism: {:.2}x",
+            self.freshen_speedup()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn existing_mechanisms_are_insufficient() {
+        // The §2 claim: each mechanism helps a little, freshen wins big.
+        let b = run(30, 120.0, 0xBA5E);
+        let p50 = |m: Mechanism| {
+            b.rows
+                .iter()
+                .find(|r| r.mechanism == m)
+                .unwrap()
+                .latency
+                .p50
+        };
+        // Runtime reuse beats invocation-scoped... barely, at this gap the
+        // connection died anyway and it pays death-detection; allow either
+        // ordering but both must be slow.
+        let inv = p50(Mechanism::InvocationScoped);
+        let reuse = p50(Mechanism::RuntimeReuse);
+        // Metrics cache ≤ plain reuse (ssthresh hint can only help).
+        assert!(p50(Mechanism::RuntimeReuseMetricsCache) <= reuse * 1.05);
+        // TFO saves the handshake RTT vs plain reuse.
+        assert!(p50(Mechanism::RuntimeReuseTfo) <= reuse * 1.01);
+        // Freshen dominates everything by a wide margin.
+        let freshen = p50(Mechanism::Freshen);
+        assert!(freshen < 0.5 * inv, "freshen {freshen} vs invocation {inv}");
+        assert!(b.freshen_speedup() > 2.0, "speedup {}", b.freshen_speedup());
+    }
+
+    #[test]
+    fn short_gaps_narrow_the_advantage() {
+        // When invocations are frequent the connection stays warm and the
+        // gap between mechanisms shrinks (freshen's prefetch still wins on
+        // the 5MB fetch, but connection effects vanish).
+        let frequent = run(30, 2.0, 0xBA5F);
+        let sparse = run(30, 120.0, 0xBA5F);
+        assert!(frequent.freshen_speedup() <= sparse.freshen_speedup() * 1.5);
+    }
+}

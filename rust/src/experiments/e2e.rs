@@ -1,0 +1,259 @@
+//! End-to-end chain workload: freshen ON vs OFF (our headline experiment).
+//!
+//! A λ1-style pipeline (`ingest -> classify -> store`, chained through
+//! Direct triggers) is driven by a bursty arrival process on the
+//! simulator substrate. We compare the vanilla platform against the same
+//! platform with freshen admitted by chain prediction, reporting
+//! end-to-end chain latency, freshen hit rate, cold starts, and billing.
+//! (The real-time twin of this experiment — real PJRT inference, real
+//! sleeps — is `examples/ml_pipeline.rs` / the `e2e_serving` bench.)
+
+use crate::experiments::print_table;
+use crate::netsim::link::Site;
+use crate::platform::endpoint::Endpoint;
+use crate::platform::exec::invoke;
+use crate::platform::function::{Arg, FunctionSpec, Op};
+use crate::platform::world::World;
+use crate::simcore::Sim;
+use crate::triggers::TriggerService;
+use crate::util::config::Config;
+use crate::util::stats::Summary;
+use crate::util::time::{SimDuration, SimTime};
+use crate::workload::generator::ArrivalProcess;
+
+/// Result of one platform run.
+#[derive(Debug, Clone)]
+pub struct E2eRun {
+    pub label: &'static str,
+    /// Latency of the chain's final function (ms).
+    pub tail_latency: Summary,
+    /// Latency across all functions (ms).
+    pub all_latency: Summary,
+    pub freshen_hit_rate: f64,
+    pub cold_starts: u64,
+    pub freshens_completed: u64,
+    pub freshens_wasted: u64,
+    pub network_bytes: f64,
+    pub network_bytes_saved: f64,
+    pub invocations: usize,
+}
+
+impl E2eRun {
+    /// Coefficient of variation of end-to-end latency — §6: "Quantifying
+    /// how freshen affects variability in application behavior would be an
+    /// important component of this evaluation."
+    pub fn latency_cv(&self) -> f64 {
+        if self.all_latency.mean == 0.0 {
+            0.0
+        } else {
+            self.all_latency.std_dev / self.all_latency.mean
+        }
+    }
+
+    /// Tail amplification: p99 / p50.
+    pub fn tail_ratio(&self) -> f64 {
+        if self.all_latency.p50 == 0.0 {
+            0.0
+        } else {
+            self.all_latency.p99 / self.all_latency.p50
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct E2e {
+    pub baseline: E2eRun,
+    pub freshened: E2eRun,
+}
+
+/// Build the 3-stage pipeline world.
+fn build_world(freshen: bool, seed: u64) -> World {
+    let mut cfg = Config::default();
+    cfg.seed = seed;
+    cfg.freshen.enabled = freshen;
+    cfg.freshen.min_confidence = 0.3;
+    let mut w = World::new(cfg);
+
+    let mut store = Endpoint::new("store", Site::Remote);
+    store.store.put("model", 5e6, SimTime::ZERO);
+    store.store.put("batch-config", 1e5, SimTime::ZERO);
+    w.add_endpoint(store);
+
+    // ingest: fetch config, light compute, trigger classify.
+    w.deploy(FunctionSpec::new(
+        "ingest",
+        "pipeline",
+        vec![
+            Op::DataGet {
+                endpoint: "store".into(),
+                creds: Arg::Const("CREDS".into()),
+                object_id: Arg::Const("batch-config".into()),
+            },
+            Op::Compute {
+                duration: SimDuration::from_millis(10),
+            },
+            // The canonical serverless image pipeline: ingest drops the
+            // image in a bucket; the notification triggers classify. The
+            // S3 trigger's ~1.28 s delivery delay (Table 1) is exactly the
+            // window freshen needs to prefetch the 5 MB model.
+            Op::InvokeNext {
+                function: "classify".into(),
+                trigger: TriggerService::S3Bucket,
+            },
+        ],
+    ));
+    // classify: fetch the 5MB model, infer, trigger store step.
+    w.deploy(FunctionSpec::new(
+        "classify",
+        "pipeline",
+        vec![
+            Op::DataGet {
+                endpoint: "store".into(),
+                creds: Arg::Const("CREDS".into()),
+                object_id: Arg::Const("model".into()),
+            },
+            Op::Infer {
+                model: "classifier".into(),
+                input_bytes: 3072.0 * 4.0,
+            },
+            Op::InvokeNext {
+                function: "persist".into(),
+                trigger: TriggerService::SnsPubSub,
+            },
+        ],
+    ));
+    // persist: write the result.
+    w.deploy(FunctionSpec::new(
+        "persist",
+        "pipeline",
+        vec![
+            Op::Compute {
+                duration: SimDuration::from_millis(5),
+            },
+            Op::DataPut {
+                endpoint: "store".into(),
+                creds: Arg::Const("CREDS".into()),
+                object_id: Arg::Const("result".into()),
+                bytes: 256.0 * 1024.0,
+            },
+        ],
+    ));
+    w.registry
+        .register_chain(
+            "pipeline",
+            vec!["ingest".into(), "classify".into(), "persist".into()],
+        )
+        .expect("chain");
+    w
+}
+
+fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eRun {
+    let mut w = build_world(freshen, seed);
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 100_000_000;
+
+    // Bursty arrivals: bursts of 4 chains, quiet gaps ~45s — long enough
+    // for connections to idle-decay and prefetches to expire, which is the
+    // regime the paper targets.
+    let mut arrival_rng = w.rng.fork(99);
+    let arrivals = ArrivalProcess::Bursty {
+        burst_len: 4,
+        intra: SimDuration::from_millis(400),
+        off_mean_s: 45.0,
+    }
+    .generate(SimDuration::from_secs(30 * chains as u64), &mut arrival_rng);
+    for at in arrivals.iter().take(chains) {
+        sim.schedule_at(*at + SimDuration::from_secs(1), |sim, w| {
+            invoke(sim, w, "ingest");
+        });
+    }
+    sim.run(&mut w);
+
+    let tail: Vec<SimDuration> = w
+        .metrics
+        .records()
+        .iter()
+        .filter(|r| r.function == "persist")
+        .map(|r| r.latency())
+        .collect();
+    let all: Vec<SimDuration> = w.metrics.records().iter().map(|r| r.latency()).collect();
+    let acct = w.ledger.account("pipeline");
+    E2eRun {
+        label: if freshen { "freshen" } else { "baseline" },
+        tail_latency: Summary::of_durations_ms(&tail).expect("persist ran"),
+        all_latency: Summary::of_durations_ms(&all).expect("records"),
+        freshen_hit_rate: w.metrics.freshen_hit_rate(),
+        cold_starts: w.metrics.cold_starts,
+        freshens_completed: w.metrics.freshens_completed,
+        freshens_wasted: w.metrics.freshens_wasted,
+        network_bytes: acct.network_bytes,
+        network_bytes_saved: acct.network_bytes_saved,
+        invocations: w.metrics.count(),
+    }
+}
+
+pub fn run(seed: u64, chains: usize) -> E2e {
+    E2e {
+        baseline: run_one(false, seed, chains),
+        freshened: run_one(true, seed, chains),
+    }
+}
+
+impl E2e {
+    pub fn print(&self) {
+        println!("\n== E2E: 3-stage chain pipeline, freshen on vs off ==");
+        let row = |r: &E2eRun| {
+            vec![
+                r.label.to_string(),
+                format!("{:.1}", r.all_latency.p50),
+                format!("{:.1}", r.all_latency.p99),
+                format!("{:.1}", r.tail_latency.p50),
+                format!("{:.0}%", 100.0 * r.freshen_hit_rate),
+                r.cold_starts.to_string(),
+                format!("{:.1}MB", r.network_bytes / 1e6),
+                format!("{:.1}MB", r.network_bytes_saved / 1e6),
+            ]
+        };
+        print_table(
+            &[
+                "mode",
+                "p50 ms",
+                "p99 ms",
+                "persist p50",
+                "fr hits",
+                "cold",
+                "net",
+                "net saved",
+            ],
+            &[row(&self.baseline), row(&self.freshened)],
+        );
+        let speedup = self.baseline.all_latency.p50 / self.freshened.all_latency.p50;
+        println!("p50 speedup: {speedup:.2}x");
+        println!(
+            "variability (§6): CV {:.2} -> {:.2}, p99/p50 {:.1}x -> {:.1}x",
+            self.baseline.latency_cv(),
+            self.freshened.latency_cv(),
+            self.baseline.tail_ratio(),
+            self.freshened.tail_ratio(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn freshen_improves_chain_latency() {
+        let e = super::run(0xE2E, 40);
+        assert_eq!(e.baseline.freshens_completed, 0, "baseline has no freshen");
+        assert!(e.freshened.freshens_completed > 0);
+        assert!(e.freshened.freshen_hit_rate > 0.2, "hit rate {}", e.freshened.freshen_hit_rate);
+        assert!(
+            e.freshened.all_latency.p50 < e.baseline.all_latency.p50,
+            "freshen p50 {} should beat baseline {}",
+            e.freshened.all_latency.p50,
+            e.baseline.all_latency.p50
+        );
+        // Same number of invocations processed.
+        assert_eq!(e.baseline.invocations, e.freshened.invocations);
+    }
+}

@@ -1,0 +1,89 @@
+//! Figure 2 — CDF of functions per application: orchestration apps vs all.
+//!
+//! Paper: "8 functions in the median Orchestration case versus 2 functions
+//! in the median case of all", and the derived prediction window "~5.6s in
+//! the extreme case of a linear chain" (8 x ~700 ms median runtime).
+
+use crate::experiments::print_table;
+use crate::util::rng::Rng;
+use crate::util::stats::Cdf;
+use crate::workload::azure::{figure2_series, linear_chain_window_s, synthesize, AzurePopulationCfg};
+
+/// The regenerated figure.
+#[derive(Debug, Clone)]
+pub struct Fig2 {
+    /// CDF series over the grid: (x, F_all(x), F_orch(x)).
+    pub series: Vec<(f64, f64, f64)>,
+    pub median_all: f64,
+    pub median_orch: f64,
+    pub chain_window_s: f64,
+    pub apps: usize,
+}
+
+/// Grid the CDF is evaluated on (functions per app).
+pub const GRID: [f64; 12] = [
+    1.0, 2.0, 3.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0,
+];
+
+pub fn run(seed: u64) -> Fig2 {
+    let mut rng = Rng::new(seed);
+    let cfg = AzurePopulationCfg::default();
+    let apps = synthesize(&cfg, &mut rng);
+    let (all, orch) = figure2_series(&apps);
+    let cdf_all = Cdf::of(&all);
+    let cdf_orch = Cdf::of(&orch);
+    let series = GRID
+        .iter()
+        .map(|&x| (x, cdf_all.at(x), cdf_orch.at(x)))
+        .collect();
+    Fig2 {
+        series,
+        median_all: cdf_all.quantile(50.0),
+        median_orch: cdf_orch.quantile(50.0),
+        chain_window_s: linear_chain_window_s(&apps, cfg.median_runtime_s),
+        apps: apps.len(),
+    }
+}
+
+impl Fig2 {
+    pub fn print(&self) {
+        println!("\n== Figure 2: functions per application (CDF), {} apps ==", self.apps);
+        let rows: Vec<Vec<String>> = self
+            .series
+            .iter()
+            .map(|(x, a, o)| {
+                vec![
+                    format!("{x:.0}"),
+                    format!("{:.3}", a),
+                    format!("{:.3}", o),
+                ]
+            })
+            .collect();
+        print_table(&["#functions", "CDF(all)", "CDF(orchestration)"], &rows);
+        println!(
+            "medians: all={:.1} (paper: 2)  orchestration={:.1} (paper: 8)",
+            self.median_all, self.median_orch
+        );
+        println!(
+            "linear-chain prediction window: {:.1}s (paper: ~5.6s)",
+            self.chain_window_s
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn shape_matches_paper() {
+        let f = super::run(2020);
+        assert!((1.0..=3.0).contains(&f.median_all));
+        assert!((6.0..=10.0).contains(&f.median_orch));
+        assert!((4.0..=7.5).contains(&f.chain_window_s));
+        // CDFs are monotone and orchestration is stochastically larger.
+        for w in f.series.windows(2) {
+            assert!(w[0].1 <= w[1].1 && w[0].2 <= w[1].2);
+        }
+        let at2 = f.series.iter().find(|(x, _, _)| *x == 2.0).unwrap();
+        assert!(at2.1 > at2.2, "all-apps CDF dominates at small counts");
+    }
+}

@@ -1,0 +1,162 @@
+//! Figure 4 — file retrieval overheads freshen can save.
+//!
+//! Paper setup: an OpenWhisk function queries a server for a file of one of
+//! six sizes over a TCP connection; measured time runs from connection
+//! start until the file is fully received; server at three locations
+//! (local on-host, edge on-site on a 10 Gbps LAN, remote off-site ~50 ms
+//! away); 20 iterations; log-scale y. "Maximum benefits range from
+//! 11-622ms."
+//!
+//! Every retrieval here uses a *fresh* connection (connect + slow-start
+//! fetch) — precisely the overhead a proactive freshen removes.
+
+use crate::experiments::{fmt_secs, print_table};
+use crate::netsim::cc::CongestionControl;
+use crate::netsim::link::Site;
+use crate::netsim::tcp::Connection;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::time::SimTime;
+
+/// The paper's six file sizes (bytes).
+pub const SIZES: [f64; 6] = [1e3, 1e4, 1e5, 1e6, 5e6, 1e7];
+pub const ITERATIONS: usize = 20;
+
+#[derive(Debug, Clone)]
+pub struct Fig4Cell {
+    pub site: Site,
+    pub size: f64,
+    /// Retrieval time stats over the iterations (seconds).
+    pub stats: Summary,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig4 {
+    pub cells: Vec<Fig4Cell>,
+}
+
+/// One cold retrieval: connect + request/response of `size` bytes.
+pub fn cold_retrieval_s(site: Site, size: f64, rng: &mut Rng) -> f64 {
+    let mut conn = Connection::new(site.link(), CongestionControl::Cubic);
+    let t0 = SimTime::ZERO;
+    let d_conn = conn.connect(t0, rng);
+    let d_xfer = conn.request_response(t0 + d_conn, rng, 256.0, size, 1e-3);
+    (d_conn + d_xfer).as_secs_f64()
+}
+
+pub fn run(seed: u64) -> Fig4 {
+    let mut rng = Rng::new(seed);
+    let mut cells = Vec::new();
+    for site in Site::all() {
+        for &size in &SIZES {
+            let samples: Vec<f64> = (0..ITERATIONS)
+                .map(|_| cold_retrieval_s(site, size, &mut rng))
+                .collect();
+            cells.push(Fig4Cell {
+                site,
+                size,
+                stats: Summary::of(&samples).expect("non-empty"),
+            });
+        }
+    }
+    Fig4 { cells }
+}
+
+impl Fig4 {
+    /// Max benefit per site = median retrieval time of the largest file
+    /// (all of it is saved when freshen prefetches).
+    pub fn max_benefit_s(&self, site: Site) -> f64 {
+        self.cells
+            .iter()
+            .filter(|c| c.site == site)
+            .map(|c| c.stats.p50)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "\n== Figure 4: file retrieval time (connect + fetch), {} iterations ==",
+            ITERATIONS
+        );
+        let mut rows = Vec::new();
+        for &size in &SIZES {
+            let mut row = vec![fmt_bytes(size)];
+            for site in Site::all() {
+                let c = self
+                    .cells
+                    .iter()
+                    .find(|c| c.site == site && c.size == size)
+                    .unwrap();
+                row.push(fmt_secs(c.stats.p50));
+            }
+            rows.push(row);
+        }
+        print_table(&["file size", "local", "edge", "remote"], &rows);
+        println!(
+            "max benefit: local={} edge={} remote={}  (paper range: 11ms-622ms)",
+            fmt_secs(self.max_benefit_s(Site::Local)),
+            fmt_secs(self.max_benefit_s(Site::Edge)),
+            fmt_secs(self.max_benefit_s(Site::Remote)),
+        );
+    }
+}
+
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e6 {
+        format!("{:.0}MB", b / 1e6)
+    } else {
+        format!("{:.0}KB", b / 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let f = run(4);
+        // Locations separate cleanly (log-scale separation in the paper):
+        // remote >> edge > local for every size.
+        for &size in &SIZES {
+            let by = |s: Site| {
+                f.cells
+                    .iter()
+                    .find(|c| c.site == s && c.size == size)
+                    .unwrap()
+                    .stats
+                    .p50
+            };
+            assert!(by(Site::Remote) > 5.0 * by(Site::Edge), "size {size}");
+            assert!(by(Site::Edge) > by(Site::Local), "size {size}");
+        }
+        // Retrieval time grows with size within a site.
+        for site in Site::all() {
+            let times: Vec<f64> = SIZES
+                .iter()
+                .map(|&s| {
+                    f.cells
+                        .iter()
+                        .find(|c| c.site == site && c.size == s)
+                        .unwrap()
+                        .stats
+                        .p50
+                })
+                .collect();
+            for w in times.windows(2) {
+                assert!(w[1] >= w[0] * 0.95, "{site:?}: non-monotone {times:?}");
+            }
+        }
+        // Max-benefit band: paper reports 11ms (local) to 622ms (remote).
+        let local = f.max_benefit_s(Site::Local);
+        let remote = f.max_benefit_s(Site::Remote);
+        assert!(
+            (0.002..=0.05).contains(&local),
+            "local max benefit {local}s (paper ~11ms)"
+        );
+        assert!(
+            (0.3..=1.2).contains(&remote),
+            "remote max benefit {remote}s (paper ~622ms)"
+        );
+    }
+}

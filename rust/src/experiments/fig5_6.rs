@@ -1,0 +1,183 @@
+//! Figures 5 & 6 — warmed vs non-warmed TCP connections.
+//!
+//! Paper setup: an OpenWhisk function sends files of different sizes to a
+//! server; measured from transfer initiation to the server's completion
+//! response; warming emulated by "sending a large file before sending our
+//! desired file size"; server on the same cloud (Figure 5) or at the edge
+//! ~50 ms away (Figure 6); 20 iterations. "With smaller file sizes, the
+//! performance of warmed and non-warmed is similar. As file sizes grow,
+//! the benefit of warmed connection ranges from 51.22% to 71.94%. The edge
+//! performance is better because network delay, and not system overheads,
+//! dominate totals."
+
+use crate::experiments::{fmt_secs, print_table};
+use crate::netsim::cc::CongestionControl;
+use crate::netsim::link::Link;
+use crate::netsim::tcp::Connection;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::util::time::{SimDuration, SimTime};
+
+/// Transfer sizes swept (bytes).
+pub const SIZES: [f64; 6] = [1e3, 1e4, 1e5, 1e6, 5e6, 1e7];
+pub const ITERATIONS: usize = 20;
+/// The warming transfer the paper emulates freshen with.
+pub const WARMING_BYTES: f64 = 2e7;
+
+/// Which figure: the link placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Figure 5: server on the same cloud (moderate RTT, fat pipe).
+    Cloud,
+    /// Figure 6: server at the edge, ~50 ms away.
+    Edge50,
+}
+
+impl Placement {
+    pub fn link(&self) -> Link {
+        match self {
+            // Same cloud: cross-zone path, ~4 ms RTT at 10 Gbps.
+            Placement::Cloud => Link::new("cloud", 4e-3, 10e9 / 8.0),
+            // The paper's "edge (~50ms away)" at 1 Gbps.
+            Placement::Edge50 => Link::new("edge50", 50e-3, 1e9 / 8.0),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Placement::Cloud => "cloud (Figure 5)",
+            Placement::Edge50 => "edge ~50ms (Figure 6)",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WarmCell {
+    pub size: f64,
+    pub cold: Summary,
+    pub warmed: Summary,
+}
+
+impl WarmCell {
+    /// Median benefit of warming, as a fraction of the cold time.
+    pub fn benefit(&self) -> f64 {
+        1.0 - self.warmed.p50 / self.cold.p50
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FigWarm {
+    pub placement: Placement,
+    pub cells: Vec<WarmCell>,
+}
+
+/// One cold send on an established-but-new connection.
+fn cold_send_s(link: &Link, size: f64, rng: &mut Rng) -> f64 {
+    let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
+    let d = conn.connect(SimTime::ZERO, rng);
+    conn.send_with_ack(SimTime::ZERO + d, rng, size, 1e-3).as_secs_f64()
+}
+
+/// One warmed send: a prior large transfer grows the window, then the
+/// measured send happens immediately (no idle decay).
+fn warmed_send_s(link: &Link, size: f64, rng: &mut Rng) -> f64 {
+    let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
+    let mut t = SimTime::ZERO + conn.connect(SimTime::ZERO, rng);
+    t = t + conn.send_with_ack(t, rng, WARMING_BYTES, 1e-3);
+    t = t + SimDuration::from_millis(10);
+    conn.send_with_ack(t, rng, size, 1e-3).as_secs_f64()
+}
+
+pub fn run(placement: Placement, seed: u64) -> FigWarm {
+    let link = placement.link();
+    let mut rng = Rng::new(seed);
+    let cells = SIZES
+        .iter()
+        .map(|&size| {
+            let cold: Vec<f64> = (0..ITERATIONS)
+                .map(|_| cold_send_s(&link, size, &mut rng))
+                .collect();
+            let warmed: Vec<f64> = (0..ITERATIONS)
+                .map(|_| warmed_send_s(&link, size, &mut rng))
+                .collect();
+            WarmCell {
+                size,
+                cold: Summary::of(&cold).unwrap(),
+                warmed: Summary::of(&warmed).unwrap(),
+            }
+        })
+        .collect();
+    FigWarm { placement, cells }
+}
+
+impl FigWarm {
+    /// Benefit at the largest size (the paper's headline range).
+    pub fn large_benefit(&self) -> f64 {
+        self.cells.last().map(WarmCell::benefit).unwrap_or(0.0)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "\n== {}: warmed vs non-warmed send, {} iterations ==",
+            self.placement.as_str(),
+            ITERATIONS
+        );
+        let rows: Vec<Vec<String>> = self
+            .cells
+            .iter()
+            .map(|c| {
+                vec![
+                    crate::experiments::fig4::fmt_bytes(c.size),
+                    fmt_secs(c.cold.p50),
+                    fmt_secs(c.warmed.p50),
+                    format!("{:+.1}%", 100.0 * c.benefit()),
+                ]
+            })
+            .collect();
+        print_table(&["size", "cold p50", "warmed p50", "benefit"], &rows);
+        println!(
+            "large-size benefit: {:.1}% (paper: 51.22%-71.94%)",
+            100.0 * self.large_benefit()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_sizes_similar_large_sizes_win_big() {
+        for placement in [Placement::Cloud, Placement::Edge50] {
+            let f = run(placement, 9);
+            // Small files: warmed ~ cold (within 15%).
+            let small = &f.cells[0];
+            assert!(
+                small.benefit().abs() < 0.15,
+                "{placement:?}: small benefit {}",
+                small.benefit()
+            );
+            // Largest files: benefit in/near the paper's 51-72% band.
+            let large = f.large_benefit();
+            assert!(
+                (0.40..=0.90).contains(&large),
+                "{placement:?}: large benefit {large}"
+            );
+            // Benefit grows (weakly) with size.
+            let benefits: Vec<f64> = f.cells.iter().map(WarmCell::benefit).collect();
+            assert!(
+                benefits.last().unwrap() > benefits.first().unwrap(),
+                "{placement:?}: {benefits:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_benefit_exceeds_cloud_benefit() {
+        // "The edge performance is better because network delay, and not
+        // system overheads, dominate totals."
+        let cloud = run(Placement::Cloud, 10).large_benefit();
+        let edge = run(Placement::Edge50, 10).large_benefit();
+        assert!(edge >= cloud * 0.9, "edge {edge} vs cloud {cloud}");
+    }
+}

@@ -1,0 +1,69 @@
+//! Experiment harnesses: one module per paper table/figure, plus the
+//! ablations DESIGN.md commits to.
+//!
+//! Every harness is a pure function from a seed/config to a structured
+//! result with a `print()` that emits the same rows/series the paper
+//! reports. Benches (`rust/benches/*`) and the CLI (`repro experiment
+//! <id>`) both call through here, so the numbers in EXPERIMENTS.md are
+//! regenerable from two entry points.
+//!
+//! | id      | paper artifact                                   |
+//! |---------|--------------------------------------------------|
+//! | fig2    | CDF of functions/app, orchestration vs all       |
+//! | table1  | trigger-service delay medians                    |
+//! | fig4    | file retrieval time vs size x location           |
+//! | fig5    | warmed vs cold transfer, cloud link              |
+//! | fig6    | warmed vs cold transfer, edge (~50 ms) link      |
+//! | e2e     | chain workload, freshen on vs off (ours)         |
+//! | abl-*   | lead-time, confidence-gating, TTL ablations      |
+
+pub mod ablations;
+pub mod baselines;
+pub mod e2e;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5_6;
+pub mod prediction;
+pub mod table1;
+
+/// Render a simple aligned table (used by every harness's `print`).
+pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut out = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i.min(widths.len() - 1)]));
+        }
+        println!("{}", out.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// Format seconds adaptively (ms below 1s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_secs_scales() {
+        assert_eq!(super::fmt_secs(0.064), "64.0ms");
+        assert_eq!(super::fmt_secs(1.282), "1.282s");
+    }
+}

@@ -1,0 +1,211 @@
+//! The freshen-maintained prefetch cache (§3.2 "Proactive data fetching").
+//!
+//! "Prefetching leads to the concept of a freshen-maintained cache of
+//! prefetched data. If the function is invoked frequently within the same
+//! runtime and accesses a read-only data resource, it may only be necessary
+//! to fetch the data once every *n* seconds instead of every time the
+//! function is run, reducing network traffic."
+//!
+//! Keys are `(endpoint, object_id)`. TTLs come from, in priority order: a
+//! per-resource TTL (library-configured), the developer's freshen config,
+//! or the platform default. Entries carry the object version so staleness
+//! can also be decided by version comparison.
+
+use std::collections::HashMap;
+
+use crate::util::time::{SimDuration, SimTime};
+
+/// One cached object.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedObject {
+    pub version: u64,
+    pub bytes: f64,
+    pub fetched_at: SimTime,
+    pub ttl: SimDuration,
+}
+
+impl CachedObject {
+    pub fn is_fresh(&self, now: SimTime) -> bool {
+        now.since(self.fetched_at) <= self.ttl
+    }
+}
+
+/// Cache statistics — the "reducing network traffic" claim is quantified
+/// from these in the TTL ablation bench.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub expired: u64,
+    pub version_stale: u64,
+    /// Network bytes avoided by hits.
+    pub bytes_saved: f64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.expired + self.version_stale;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Runtime-scoped prefetch cache.
+#[derive(Debug, Clone, Default)]
+pub struct FreshenCache {
+    entries: HashMap<(String, String), CachedObject>,
+    pub stats: CacheStats,
+}
+
+impl FreshenCache {
+    pub fn new() -> FreshenCache {
+        FreshenCache::default()
+    }
+
+    /// Look up an object. `live_version` (when known, e.g. from a cheap
+    /// HEAD or a datastore notification) invalidates version-stale hits.
+    pub fn get(
+        &mut self,
+        endpoint: &str,
+        object_id: &str,
+        now: SimTime,
+        live_version: Option<u64>,
+    ) -> Option<CachedObject> {
+        let key = (endpoint.to_string(), object_id.to_string());
+        match self.entries.get(&key) {
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+            Some(obj) if !obj.is_fresh(now) => {
+                self.stats.expired += 1;
+                None
+            }
+            Some(obj) => {
+                if let Some(live) = live_version {
+                    if obj.version < live {
+                        self.stats.version_stale += 1;
+                        return None;
+                    }
+                }
+                self.stats.hits += 1;
+                self.stats.bytes_saved += obj.bytes;
+                Some(obj.clone())
+            }
+        }
+    }
+
+    /// Peek without touching stats (used by freshen to decide whether a
+    /// prefetch is even needed).
+    pub fn peek_fresh(&self, endpoint: &str, object_id: &str, now: SimTime) -> bool {
+        self.entries
+            .get(&(endpoint.to_string(), object_id.to_string()))
+            .map(|o| o.is_fresh(now))
+            .unwrap_or(false)
+    }
+
+    /// Insert/replace after a (pre)fetch.
+    pub fn put(
+        &mut self,
+        endpoint: &str,
+        object_id: &str,
+        version: u64,
+        bytes: f64,
+        ttl: SimDuration,
+        now: SimTime,
+    ) {
+        self.entries.insert(
+            (endpoint.to_string(), object_id.to_string()),
+            CachedObject {
+                version,
+                bytes,
+                fetched_at: now,
+                ttl,
+            },
+        );
+    }
+
+    /// Drop every entry (container recycled for another function).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn hit_within_ttl_saves_bytes() {
+        let mut c = FreshenCache::new();
+        c.put("store", "model", 1, 5e6, SimDuration::from_secs(10), t(0));
+        let got = c.get("store", "model", t(5), None).unwrap();
+        assert_eq!(got.version, 1);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.bytes_saved, 5e6);
+    }
+
+    #[test]
+    fn expiry_counts_separately_from_miss() {
+        let mut c = FreshenCache::new();
+        assert!(c.get("store", "x", t(0), None).is_none());
+        assert_eq!(c.stats.misses, 1);
+        c.put("store", "x", 1, 100.0, SimDuration::from_secs(2), t(0));
+        assert!(c.get("store", "x", t(5), None).is_none());
+        assert_eq!(c.stats.expired, 1);
+    }
+
+    #[test]
+    fn version_staleness_invalidates() {
+        let mut c = FreshenCache::new();
+        c.put("store", "m", 3, 100.0, SimDuration::from_secs(100), t(0));
+        assert!(c.get("store", "m", t(1), Some(4)).is_none());
+        assert_eq!(c.stats.version_stale, 1);
+        // Equal version is fine.
+        assert!(c.get("store", "m", t(1), Some(3)).is_some());
+    }
+
+    #[test]
+    fn hit_rate_math() {
+        let mut c = FreshenCache::new();
+        c.put("e", "a", 1, 10.0, SimDuration::from_secs(10), t(0));
+        c.get("e", "a", t(1), None); // hit
+        c.get("e", "b", t(1), None); // miss
+        assert!((c.stats.hit_rate() - 0.5).abs() < 1e-12);
+        let empty = FreshenCache::new();
+        assert_eq!(empty.stats.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn peek_does_not_touch_stats() {
+        let mut c = FreshenCache::new();
+        c.put("e", "a", 1, 10.0, SimDuration::from_secs(10), t(0));
+        assert!(c.peek_fresh("e", "a", t(1)));
+        assert!(!c.peek_fresh("e", "zzz", t(1)));
+        assert_eq!(c.stats, CacheStats::default());
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut c = FreshenCache::new();
+        c.put("e", "a", 1, 10.0, SimDuration::from_secs(10), t(0));
+        assert_eq!(c.len(), 1);
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,268 @@
+//! Provider-side freshen inference (§3.3 "Implementation").
+//!
+//! "For common resources and for popular serverless languages, freshen code
+//! could be inferred by the serverless framework itself." The inference
+//! relies on the paper's scoping observations:
+//!
+//! 1. failure to infer is not fatal — the platform continues unmodified;
+//! 2. source is available for static analysis (our op DSL);
+//! 3. only ops with **constant** credentials/identifiers are inferrable;
+//! 4. inference targets the provider's own client libraries (`DataGet`/
+//!    `DataPut` here), not arbitrary user code.
+//!
+//! Given a [`FunctionSpec`], we walk its ops in program order, assign each
+//! connection-touching op a freshen-resource index (DataGet → 0, DataPut →
+//! 1 for the paper's λ), and emit the corresponding actions:
+//! `DataGet(Const, Const)` → `EnsureConnection` + `Prefetch`;
+//! `DataPut(Const, Const)` → `EnsureConnection` + `WarmCwnd`. Ops with
+//! invocation-derived arguments are skipped and reported.
+
+use crate::freshen::hooks::{FreshenAction, FreshenHook, HookOrigin};
+use crate::netsim::tcp::TransferDirection;
+use crate::platform::function::{FunctionSpec, Op};
+use crate::util::time::SimDuration;
+
+/// Result of inference: the hook plus a report of what couldn't be covered.
+#[derive(Debug, Clone)]
+pub struct InferenceReport {
+    pub hook: FreshenHook,
+    /// Op indices that touch resources but weren't inferrable (Param args),
+    /// with the reason.
+    pub skipped: Vec<(usize, String)>,
+    /// Fraction of resource ops covered.
+    pub coverage: f64,
+}
+
+/// Infer a freshen hook for `func`. `default_ttl` applies when the function
+/// doesn't override its prefetch TTL.
+pub fn infer_hook(func: &FunctionSpec, default_ttl: SimDuration) -> InferenceReport {
+    let resource_indices = func.resource_indices();
+    let resource_count = func.resource_count();
+    let mut hook = FreshenHook::new(HookOrigin::Inferred, resource_count);
+    let mut skipped = Vec::new();
+    let ttl = func.prefetch_ttl.unwrap_or(default_ttl);
+    let mut seen_endpoints: Vec<&str> = Vec::new();
+
+    for (op_idx, op) in func.ops.iter().enumerate() {
+        let Some(res_idx) = resource_indices[op_idx] else {
+            continue; // non-resource op: nothing to freshen
+        };
+        match op {
+            Op::DataGet {
+                endpoint,
+                creds,
+                object_id,
+            } => {
+                if !creds.is_const() || !object_id.is_const() {
+                    skipped.push((
+                        op_idx,
+                        format!(
+                            "DataGet on '{endpoint}' uses invocation-derived arguments; \
+                             cannot prefetch"
+                        ),
+                    ));
+                    continue;
+                }
+                // First touch of an endpoint also ensures the connection —
+                // covers both the runtime-scoped (liveness check) and
+                // invocation-scoped (pre-establish) cases of §3.2.
+                if !seen_endpoints.contains(&endpoint.as_str()) {
+                    seen_endpoints.push(endpoint);
+                    hook.push(
+                        res_idx,
+                        FreshenAction::EnsureConnection {
+                            endpoint: endpoint.clone(),
+                        },
+                    );
+                }
+                hook.push(
+                    res_idx,
+                    FreshenAction::Prefetch {
+                        endpoint: endpoint.clone(),
+                        object_id: object_id.const_value().unwrap().to_string(),
+                        ttl,
+                    },
+                );
+            }
+            Op::DataPut {
+                endpoint,
+                creds,
+                object_id,
+                bytes,
+            } => {
+                if !creds.is_const() || !object_id.is_const() {
+                    skipped.push((
+                        op_idx,
+                        format!(
+                            "DataPut on '{endpoint}' uses invocation-derived arguments; \
+                             cannot warm"
+                        ),
+                    ));
+                    continue;
+                }
+                if !seen_endpoints.contains(&endpoint.as_str()) {
+                    seen_endpoints.push(endpoint);
+                    hook.push(
+                        res_idx,
+                        FreshenAction::EnsureConnection {
+                            endpoint: endpoint.clone(),
+                        },
+                    );
+                }
+                hook.push(
+                    res_idx,
+                    FreshenAction::WarmCwnd {
+                        endpoint: endpoint.clone(),
+                        direction: TransferDirection::Upload,
+                        anticipated_bytes: *bytes,
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+
+    let covered = resource_count - skipped.len();
+    InferenceReport {
+        hook,
+        skipped,
+        coverage: if resource_count == 0 {
+            1.0
+        } else {
+            covered as f64 / resource_count as f64
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::function::Arg;
+
+    fn ttl() -> SimDuration {
+        SimDuration::from_secs(10)
+    }
+
+    #[test]
+    fn paper_lambda_fully_inferred() {
+        let f = FunctionSpec::paper_lambda("l", "a", "store", SimDuration::from_millis(10));
+        let report = infer_hook(&f, ttl());
+        assert!(report.skipped.is_empty());
+        assert_eq!(report.coverage, 1.0);
+        // EnsureConnection + Prefetch for DataGet(0); WarmCwnd for DataPut(1)
+        // (connection already ensured: same endpoint).
+        let kinds: Vec<(usize, &str)> = report
+            .hook
+            .actions
+            .iter()
+            .map(|(i, a)| {
+                (
+                    *i,
+                    match a {
+                        FreshenAction::EnsureConnection { .. } => "conn",
+                        FreshenAction::Prefetch { .. } => "prefetch",
+                        FreshenAction::WarmCwnd { .. } => "warm",
+                    },
+                )
+            })
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![(0, "conn"), (0, "prefetch"), (1, "warm")]
+        );
+    }
+
+    #[test]
+    fn param_args_are_skipped_not_fatal() {
+        let f = FunctionSpec::new(
+            "f",
+            "a",
+            vec![
+                Op::DataGet {
+                    endpoint: "store".into(),
+                    creds: Arg::Const("CREDS".into()),
+                    object_id: Arg::Param("user_key".into()), // not inferrable
+                },
+                Op::DataPut {
+                    endpoint: "store".into(),
+                    creds: Arg::Const("CREDS".into()),
+                    object_id: Arg::Const("OUT".into()),
+                    bytes: 1e5,
+                },
+            ],
+        );
+        let report = infer_hook(&f, ttl());
+        assert_eq!(report.skipped.len(), 1);
+        assert_eq!(report.skipped[0].0, 0);
+        assert!((report.coverage - 0.5).abs() < 1e-12);
+        // The DataPut is still warmed (resource index 1).
+        assert!(report
+            .hook
+            .actions
+            .iter()
+            .any(|(i, a)| *i == 1 && matches!(a, FreshenAction::WarmCwnd { .. })));
+    }
+
+    #[test]
+    fn per_function_ttl_override() {
+        let mut f = FunctionSpec::paper_lambda("l", "a", "store", SimDuration::from_millis(10));
+        f.prefetch_ttl = Some(SimDuration::from_secs(99));
+        let report = infer_hook(&f, ttl());
+        let prefetch_ttl = report
+            .hook
+            .actions
+            .iter()
+            .find_map(|(_, a)| match a {
+                FreshenAction::Prefetch { ttl, .. } => Some(*ttl),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(prefetch_ttl, SimDuration::from_secs(99));
+    }
+
+    #[test]
+    fn distinct_endpoints_each_get_connection() {
+        let f = FunctionSpec::new(
+            "f",
+            "a",
+            vec![
+                Op::DataGet {
+                    endpoint: "edge-store".into(),
+                    creds: Arg::Const("C".into()),
+                    object_id: Arg::Const("A".into()),
+                },
+                Op::DataPut {
+                    endpoint: "cloud-store".into(),
+                    creds: Arg::Const("C".into()),
+                    object_id: Arg::Const("B".into()),
+                    bytes: 1.0,
+                },
+            ],
+        );
+        let report = infer_hook(&f, ttl());
+        let conns: Vec<&str> = report
+            .hook
+            .actions
+            .iter()
+            .filter_map(|(_, a)| match a {
+                FreshenAction::EnsureConnection { endpoint } => Some(endpoint.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(conns, vec!["edge-store", "cloud-store"]);
+    }
+
+    #[test]
+    fn pure_compute_function_infers_empty_hook() {
+        let f = FunctionSpec::new(
+            "f",
+            "a",
+            vec![Op::Compute {
+                duration: SimDuration::from_millis(5),
+            }],
+        );
+        let report = infer_hook(&f, ttl());
+        assert!(report.hook.is_empty());
+        assert_eq!(report.coverage, 1.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! The paper's contribution: the **`freshen`** primitive.
+//!
+//! `freshen` is a hook in the language runtime that the provider (or the
+//! developer) runs *before* a function is predicted to execute. It shares
+//! runtime-scoped state with the function — an ordered list of *freshen
+//! resources* (`fr_state`, §3.3) — and coordinates through two wrapper
+//! functions injected around the function's resource accesses:
+//!
+//! - [`wrappers`]`::fr_fetch_decision` (Algorithm 4) around data fetches, and
+//! - [`wrappers`]`::fr_warm_decision` (Algorithm 5) around connection-using writes.
+//!
+//! Sub-modules:
+//! - [`state`] — `fr_state` entries and their state machine.
+//! - [`wrappers`] — the pure decision logic of Algorithms 4/5 (shared by
+//!   the simulator and the real-time serving engine).
+//! - [`hooks`] — freshen hook bodies: the action list a hook executes
+//!   (Algorithm 2 generalised).
+//! - [`infer`] — provider-side static analysis that generates hooks from
+//!   function code (§3.3 "code generation").
+//! - [`cache`] — the TTL'd prefetch cache.
+//! - [`policy`] — billing attribution, confidence gating, abuse guards.
+
+pub mod cache;
+pub mod hooks;
+pub mod infer;
+pub mod policy;
+pub mod state;
+pub mod wrappers;
+
+pub use hooks::{FreshenAction, FreshenHook};
+pub use state::{Completer, FrEntry, FrResult, FrState, FrStatus};
+pub use wrappers::WrapperDecision;

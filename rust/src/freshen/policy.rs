@@ -1,0 +1,362 @@
+//! Freshen policy: billing-aware gating and abuse guards (§3.3).
+//!
+//! "Confidence in prediction could be used to dictate if freshen is called
+//! or not. Metrics kept inside a container, or communicated to the
+//! serverless global scheduling entity, could be used to stop freshen from
+//! running if predictions have been too inaccurate. Service categories
+//! chosen by the application developer could also control freshen
+//! behavior."
+//!
+//! The gate combines: a master switch, the developer's service category,
+//! the numeric confidence threshold, a per-app rate limiter (abuse guard),
+//! and a feedback loop from observed prediction accuracy.
+
+use std::collections::HashMap;
+
+use crate::util::config::{FreshenConfig, ServiceCategory};
+use crate::util::time::SimTime;
+
+/// Why a freshen request was (not) admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateDecision {
+    Go,
+    SkipDisabled,
+    SkipCategory,
+    SkipLowConfidence,
+    SkipRateLimited,
+    SkipInaccurate,
+}
+
+impl GateDecision {
+    pub fn admitted(&self) -> bool {
+        *self == GateDecision::Go
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GateDecision::Go => "go",
+            GateDecision::SkipDisabled => "skip_disabled",
+            GateDecision::SkipCategory => "skip_category",
+            GateDecision::SkipLowConfidence => "skip_low_confidence",
+            GateDecision::SkipRateLimited => "skip_rate_limited",
+            GateDecision::SkipInaccurate => "skip_inaccurate",
+        }
+    }
+}
+
+/// Sliding-window accuracy for one app's predictions: was each admitted
+/// freshen followed by the predicted invocation?
+#[derive(Debug, Clone, Default)]
+struct AccuracyWindow {
+    outcomes: Vec<bool>, // ring of recent outcomes
+    next: usize,
+}
+
+const ACCURACY_WINDOW: usize = 64;
+/// Below this hit-rate the gate stops freshening for the app until the
+/// window recovers (outcomes keep being recorded by the predictor).
+const MIN_ACCURACY: f64 = 0.3;
+/// Minimum observations before accuracy gating kicks in.
+const MIN_OBSERVATIONS: usize = 16;
+
+impl AccuracyWindow {
+    fn record(&mut self, hit: bool) {
+        if self.outcomes.len() < ACCURACY_WINDOW {
+            self.outcomes.push(hit);
+        } else {
+            self.outcomes[self.next] = hit;
+            self.next = (self.next + 1) % ACCURACY_WINDOW;
+        }
+    }
+
+    fn accuracy(&self) -> Option<f64> {
+        if self.outcomes.len() < MIN_OBSERVATIONS {
+            return None;
+        }
+        let hits = self.outcomes.iter().filter(|&&h| h).count();
+        Some(hits as f64 / self.outcomes.len() as f64)
+    }
+}
+
+/// Token-bucket rate limiter (per app).
+#[derive(Debug, Clone)]
+struct Bucket {
+    tokens: f64,
+    last_refill: SimTime,
+}
+
+/// The freshen admission gate.
+#[derive(Debug, Clone)]
+pub struct FreshenGate {
+    pub config: FreshenConfig,
+    /// When false, the observed-accuracy feedback loop is bypassed
+    /// (the "ungated" arm of the confidence ablation).
+    pub accuracy_gating: bool,
+    buckets: HashMap<String, Bucket>,
+    accuracy: HashMap<String, AccuracyWindow>,
+    /// Counters by decision (reporting).
+    pub admitted: u64,
+    pub skipped: u64,
+}
+
+impl FreshenGate {
+    pub fn new(config: FreshenConfig) -> FreshenGate {
+        FreshenGate {
+            config,
+            accuracy_gating: true,
+            buckets: HashMap::new(),
+            accuracy: HashMap::new(),
+            admitted: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Decide whether to run a freshen for `app` given the predictor's
+    /// `confidence` in the impending invocation.
+    pub fn should_freshen(
+        &mut self,
+        app: &str,
+        confidence: f64,
+        category: ServiceCategory,
+        now: SimTime,
+    ) -> GateDecision {
+        let d = self.decide(app, confidence, category, now);
+        if d.admitted() {
+            self.admitted += 1;
+        } else {
+            self.skipped += 1;
+        }
+        d
+    }
+
+    fn decide(
+        &mut self,
+        app: &str,
+        confidence: f64,
+        category: ServiceCategory,
+        now: SimTime,
+    ) -> GateDecision {
+        if !self.config.enabled {
+            return GateDecision::SkipDisabled;
+        }
+        if category == ServiceCategory::LatencyInsensitive {
+            return GateDecision::SkipCategory;
+        }
+        let threshold = self.config.min_confidence.max(category.confidence_floor());
+        if confidence < threshold {
+            return GateDecision::SkipLowConfidence;
+        }
+        if self.accuracy_gating {
+            if let Some(acc) = self.accuracy.get(app).and_then(AccuracyWindow::accuracy) {
+                if acc < MIN_ACCURACY {
+                    return GateDecision::SkipInaccurate;
+                }
+            }
+        }
+        if !self.take_token(app, now) {
+            return GateDecision::SkipRateLimited;
+        }
+        GateDecision::Go
+    }
+
+    /// Feed back whether an admitted freshen's predicted invocation
+    /// actually arrived (within the prediction window).
+    pub fn record_outcome(&mut self, app: &str, hit: bool) {
+        self.accuracy.entry(app.to_string()).or_default().record(hit);
+    }
+
+    /// Current measured accuracy for an app (None until enough data).
+    pub fn accuracy(&self, app: &str) -> Option<f64> {
+        self.accuracy.get(app).and_then(AccuracyWindow::accuracy)
+    }
+
+    fn take_token(&mut self, app: &str, now: SimTime) -> bool {
+        let rate_per_sec = self.config.max_freshens_per_min as f64 / 60.0;
+        let cap = (self.config.max_freshens_per_min as f64 / 6.0).max(1.0); // 10s burst
+        let b = self.buckets.entry(app.to_string()).or_insert(Bucket {
+            tokens: cap,
+            last_refill: now,
+        });
+        let elapsed = now.since(b.last_refill).as_secs_f64();
+        b.tokens = (b.tokens + elapsed * rate_per_sec).min(cap);
+        b.last_refill = now;
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Why implementing the whole function inside freshen is self-defeating
+/// (§3.3 "Preventing abuse and misconfiguration") — encoded as a validator
+/// run when developers register hand-written hooks: hooks must not exceed a
+/// size budget, must reference only constant endpoints, and have no access
+/// to invocation arguments by construction (see
+/// [`crate::freshen::hooks::FreshenAction`] — there is no argument slot).
+pub fn validate_hook(hook: &crate::freshen::hooks::FreshenHook) -> Result<(), String> {
+    const MAX_ACTIONS: usize = 32;
+    if hook.actions.len() > MAX_ACTIONS {
+        return Err(format!(
+            "freshen hook has {} actions (max {MAX_ACTIONS}); implement work in the \
+             function body, not the hook",
+            hook.actions.len()
+        ));
+    }
+    for (idx, action) in &hook.actions {
+        if *idx >= hook.resource_count {
+            return Err(format!(
+                "action references resource {idx} but the function declares only {} \
+                 freshen resources",
+                hook.resource_count
+            ));
+        }
+        if action.endpoint().is_empty() {
+            return Err("action references an empty endpoint".into());
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::freshen::hooks::{FreshenAction, FreshenHook, HookOrigin};
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    fn gate() -> FreshenGate {
+        FreshenGate::new(FreshenConfig::default())
+    }
+
+    #[test]
+    fn disabled_gate_skips() {
+        let mut g = gate();
+        g.config.enabled = false;
+        assert_eq!(
+            g.should_freshen("app", 0.9, ServiceCategory::Standard, t(0)),
+            GateDecision::SkipDisabled
+        );
+        assert_eq!(g.skipped, 1);
+    }
+
+    #[test]
+    fn category_controls_threshold() {
+        let mut g = gate();
+        // Standard floor is 0.5: confidence 0.3 skipped.
+        assert_eq!(
+            g.should_freshen("a", 0.3, ServiceCategory::Standard, t(0)),
+            GateDecision::SkipLowConfidence
+        );
+        // Latency-sensitive floor is 0.2 but numeric min_confidence=0.5
+        // still applies (max of the two).
+        assert_eq!(
+            g.should_freshen("a", 0.3, ServiceCategory::LatencySensitive, t(0)),
+            GateDecision::SkipLowConfidence
+        );
+        g.config.min_confidence = 0.0;
+        assert_eq!(
+            g.should_freshen("a", 0.3, ServiceCategory::LatencySensitive, t(0)),
+            GateDecision::Go
+        );
+        // Insensitive never freshens.
+        assert_eq!(
+            g.should_freshen("a", 1.0, ServiceCategory::LatencyInsensitive, t(0)),
+            GateDecision::SkipCategory
+        );
+    }
+
+    #[test]
+    fn rate_limiter_caps_burst() {
+        let mut g = gate();
+        g.config.max_freshens_per_min = 60; // 1/s, burst 10
+        let mut admitted = 0;
+        for _ in 0..100 {
+            if g.should_freshen("app", 0.9, ServiceCategory::Standard, t(0)).admitted() {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 10); // burst cap
+        // After 5 seconds, ~5 more tokens.
+        let mut more = 0;
+        for _ in 0..100 {
+            if g.should_freshen("app", 0.9, ServiceCategory::Standard, t(5)).admitted() {
+                more += 1;
+            }
+        }
+        assert_eq!(more, 5);
+    }
+
+    #[test]
+    fn inaccurate_predictions_stop_freshen() {
+        let mut g = gate();
+        for _ in 0..32 {
+            g.record_outcome("app", false);
+        }
+        assert_eq!(g.accuracy("app"), Some(0.0));
+        assert_eq!(
+            g.should_freshen("app", 0.9, ServiceCategory::Standard, t(0)),
+            GateDecision::SkipInaccurate
+        );
+        // Recovery: a run of hits restores admission.
+        for _ in 0..60 {
+            g.record_outcome("app", true);
+        }
+        assert!(g.accuracy("app").unwrap() > MIN_ACCURACY);
+        assert_eq!(
+            g.should_freshen("app", 0.9, ServiceCategory::Standard, t(0)),
+            GateDecision::Go
+        );
+    }
+
+    #[test]
+    fn accuracy_needs_min_observations() {
+        let mut g = gate();
+        for _ in 0..(MIN_OBSERVATIONS - 1) {
+            g.record_outcome("app", false);
+        }
+        assert_eq!(g.accuracy("app"), None);
+        // Not enough data: gate stays open.
+        assert!(g
+            .should_freshen("app", 0.9, ServiceCategory::Standard, t(0))
+            .admitted());
+    }
+
+    #[test]
+    fn hook_validation() {
+        let mut ok = FreshenHook::new(HookOrigin::Developer, 1);
+        ok.push(
+            0,
+            FreshenAction::EnsureConnection {
+                endpoint: "store".into(),
+            },
+        );
+        assert!(validate_hook(&ok).is_ok());
+
+        let mut huge = FreshenHook::new(HookOrigin::Developer, 64);
+        for i in 0..40 {
+            huge.actions.push((
+                i,
+                FreshenAction::EnsureConnection {
+                    endpoint: "store".into(),
+                },
+            ));
+        }
+        assert!(validate_hook(&huge).is_err());
+
+        let bad_idx = FreshenHook {
+            actions: vec![(
+                5,
+                FreshenAction::EnsureConnection {
+                    endpoint: "store".into(),
+                },
+            )],
+            origin: HookOrigin::Developer,
+            resource_count: 2,
+        };
+        assert!(validate_hook(&bad_idx).is_err());
+    }
+}

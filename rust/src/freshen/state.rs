@@ -1,0 +1,277 @@
+//! `fr_state`: the ordered, runtime-scoped list of freshen resources (§3.3).
+//!
+//! Each entry tracks one resource the function touches, in program order —
+//! in the paper's λ, `DataGet` is index 0 and `DataPut` is index 1. An entry
+//! carries the paper's metadata: a *state* (not-run / running / finished), a
+//! *result* (the prefetched data), a *TTL*, and a *timestamp* of the last
+//! freshen. Both the freshen hook and the function's wrappers race on these
+//! entries; whoever starts first marks the entry `Running` and the other
+//! side waits or skips (Algorithms 2, 4, 5).
+
+use crate::util::time::{SimDuration, SimTime};
+
+/// State of one freshen resource.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrStatus {
+    /// Nobody has touched this resource yet this cycle.
+    NotRun,
+    /// Freshen (or a wrapper) is currently working on it.
+    Running,
+    /// Work is complete; `result` is valid (subject to TTL).
+    Finished,
+}
+
+/// The result a finished entry holds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrResult {
+    /// Prefetched object: identifier, version and payload size.
+    Data {
+        object_id: String,
+        version: u64,
+        bytes: f64,
+    },
+    /// The resource (a connection) was warmed; nothing to return.
+    Warmed,
+    /// The freshen action failed (e.g. endpoint unreachable); the wrapper
+    /// must redo the work itself. Failure to freshen is never fatal (§3.3).
+    Failed,
+}
+
+/// One freshen resource entry.
+#[derive(Debug, Clone)]
+pub struct FrEntry {
+    pub status: FrStatus,
+    pub result: Option<FrResult>,
+    /// How long a `Data` result stays fresh.
+    pub ttl: SimDuration,
+    /// When the entry was last freshened (valid when `Finished`).
+    pub freshened_at: SimTime,
+    /// Who completed the entry (metrics/billing attribution).
+    pub completed_by: Option<Completer>,
+}
+
+/// Which side completed an entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Completer {
+    /// The proactive freshen hook.
+    Freshen,
+    /// The function's own wrapper (freshen was late or absent).
+    Function,
+}
+
+impl FrEntry {
+    pub fn new(ttl: SimDuration) -> FrEntry {
+        FrEntry {
+            status: FrStatus::NotRun,
+            result: None,
+            ttl,
+            freshened_at: SimTime::ZERO,
+            completed_by: None,
+        }
+    }
+
+    /// Is a `Finished` entry still usable at `now`?
+    ///
+    /// `Warmed` results never expire by TTL (the connection object itself
+    /// tracks liveness); `Data` results expire after `ttl`; `Failed`
+    /// results are never fresh.
+    pub fn is_fresh(&self, now: SimTime) -> bool {
+        if self.status != FrStatus::Finished {
+            return false;
+        }
+        match &self.result {
+            Some(FrResult::Data { .. }) => now.since(self.freshened_at) <= self.ttl,
+            Some(FrResult::Warmed) => true,
+            Some(FrResult::Failed) | None => false,
+        }
+    }
+
+    /// Transition to `Running`. Returns false if the entry was already
+    /// running or finished-and-fresh (i.e. the caller lost the race).
+    pub fn try_start(&mut self, now: SimTime) -> bool {
+        match self.status {
+            FrStatus::Running => false,
+            FrStatus::Finished if self.is_fresh(now) => false,
+            _ => {
+                self.status = FrStatus::Running;
+                self.result = None;
+                true
+            }
+        }
+    }
+
+    /// Complete the entry with a result.
+    pub fn finish(&mut self, result: FrResult, now: SimTime, by: Completer) {
+        debug_assert_eq!(self.status, FrStatus::Running, "finish without start");
+        self.status = FrStatus::Finished;
+        self.result = Some(result);
+        self.freshened_at = now;
+        self.completed_by = Some(by);
+    }
+
+    /// Reset for the next freshen/invocation cycle (keeps a fresh Data
+    /// result so it can be reused within its TTL — the freshen cache
+    /// behaviour of §3.2; everything else clears). A `Running` entry is
+    /// left alone: a freshen thread is actively working on it and the
+    /// function-side wrapper must coordinate through `FrWait`, not clobber
+    /// the state from under it.
+    pub fn recycle(&mut self, now: SimTime) {
+        if self.status == FrStatus::Running || self.is_fresh(now) {
+            return;
+        }
+        self.status = FrStatus::NotRun;
+        self.result = None;
+        self.completed_by = None;
+    }
+}
+
+/// The ordered runtime-scoped list of freshen resources.
+#[derive(Debug, Clone, Default)]
+pub struct FrState {
+    entries: Vec<FrEntry>,
+}
+
+impl FrState {
+    pub fn new() -> FrState {
+        FrState::default()
+    }
+
+    /// (Re)build the list for a function with `n` resources, preserving
+    /// still-fresh entries from the previous cycle at matching indices.
+    pub fn ensure_len(&mut self, n: usize, default_ttl: SimDuration, now: SimTime) {
+        self.entries.resize_with(n, || FrEntry::new(default_ttl));
+        for e in &mut self.entries {
+            e.recycle(now);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn get(&self, id: usize) -> Option<&FrEntry> {
+        self.entries.get(id)
+    }
+
+    pub fn get_mut(&mut self, id: usize) -> Option<&mut FrEntry> {
+        self.entries.get_mut(id)
+    }
+
+    /// Count of entries completed by the freshen hook (hit-rate metrics).
+    pub fn freshened_count(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.completed_by == Some(Completer::Freshen))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn lifecycle_not_run_running_finished() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        assert_eq!(e.status, FrStatus::NotRun);
+        assert!(!e.is_fresh(t(0)));
+        assert!(e.try_start(t(0)));
+        assert_eq!(e.status, FrStatus::Running);
+        // Second starter loses the race.
+        assert!(!e.try_start(t(0)));
+        e.finish(
+            FrResult::Data {
+                object_id: "m".into(),
+                version: 1,
+                bytes: 100.0,
+            },
+            t(1),
+            Completer::Freshen,
+        );
+        assert!(e.is_fresh(t(5)));
+        assert!(!e.try_start(t(5))); // fresh: no need to redo
+    }
+
+    #[test]
+    fn ttl_expiry_allows_restart() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        assert!(e.try_start(t(0)));
+        e.finish(
+            FrResult::Data {
+                object_id: "m".into(),
+                version: 1,
+                bytes: 100.0,
+            },
+            t(0),
+            Completer::Freshen,
+        );
+        assert!(e.is_fresh(t(10)));
+        assert!(!e.is_fresh(t(11)));
+        assert!(e.try_start(t(11))); // stale: can refresh
+    }
+
+    #[test]
+    fn warmed_results_do_not_expire() {
+        let mut e = FrEntry::new(SimDuration::from_secs(1));
+        assert!(e.try_start(t(0)));
+        e.finish(FrResult::Warmed, t(0), Completer::Freshen);
+        assert!(e.is_fresh(t(1_000)));
+    }
+
+    #[test]
+    fn failed_results_are_not_fresh() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        assert!(e.try_start(t(0)));
+        e.finish(FrResult::Failed, t(0), Completer::Freshen);
+        assert!(!e.is_fresh(t(0)));
+        assert!(e.try_start(t(0))); // wrapper redoes the work
+    }
+
+    #[test]
+    fn recycle_keeps_fresh_data() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        e.try_start(t(0));
+        e.finish(
+            FrResult::Data {
+                object_id: "m".into(),
+                version: 1,
+                bytes: 9.0,
+            },
+            t(0),
+            Completer::Freshen,
+        );
+        e.recycle(t(5));
+        assert_eq!(e.status, FrStatus::Finished); // kept
+        e.recycle(t(30));
+        assert_eq!(e.status, FrStatus::NotRun); // expired -> cleared
+        assert!(e.result.is_none());
+    }
+
+    #[test]
+    fn ensure_len_preserves_fresh_entries() {
+        let mut st = FrState::new();
+        st.ensure_len(2, SimDuration::from_secs(10), t(0));
+        st.get_mut(0).unwrap().try_start(t(0));
+        st.get_mut(0).unwrap().finish(
+            FrResult::Data {
+                object_id: "a".into(),
+                version: 3,
+                bytes: 1.0,
+            },
+            t(0),
+            Completer::Freshen,
+        );
+        st.ensure_len(2, SimDuration::from_secs(10), t(5));
+        assert!(st.get(0).unwrap().is_fresh(t(5)));
+        assert_eq!(st.get(1).unwrap().status, FrStatus::NotRun);
+        assert_eq!(st.freshened_count(), 1);
+    }
+}

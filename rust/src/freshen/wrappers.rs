@@ -1,0 +1,192 @@
+//! `FrFetch` / `FrWarm` wrapper decision logic — Algorithms 4 and 5.
+//!
+//! The paper's wrappers intercept the function's access to each freshen
+//! resource and synchronise with the freshen hook through `fr_state`:
+//!
+//! ```text
+//! if fr_state[id] == finished  -> return fr_state[id].result
+//! if fr_state[id] == running   -> FrWait(id); return fr_state[id].result
+//! else                         -> fr_state[id] = running
+//!                                 do the work yourself; mark finished
+//! ```
+//!
+//! The decision itself is pure over the entry (plus freshness inputs), so
+//! the discrete-event simulator and the real-time serving engine share it;
+//! only *how to wait* differs between substrates (event continuation vs
+//! condvar).
+
+use crate::freshen::state::{FrEntry, FrResult, FrStatus};
+use crate::util::time::SimTime;
+
+/// What the wrapper should do for this resource access.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WrapperDecision {
+    /// Freshen already completed the work; consume its result
+    /// (Alg. 4 line 4 / Alg. 5 line 4).
+    UseResult(FrResult),
+    /// Freshen is mid-flight; park until it finishes, then consume
+    /// (Alg. 4/5 line 6, `FrWait`).
+    Wait,
+    /// Freshen did not run (or its result is stale/failed); the wrapper
+    /// performs the action itself (Alg. 4/5 line 10). The entry has been
+    /// marked `Running` on behalf of the caller.
+    DoItYourself,
+}
+
+/// Algorithm 4 — `FrFetch(id, code)` decision for a data fetch.
+///
+/// `live_version`: the store's current version of the object if the caller
+/// wants strict version freshness (§3.2 "associated timestamps or version
+/// numbers could be used to determine the freshness of items"); `None`
+/// accepts any TTL-fresh result.
+pub fn fr_fetch_decision(
+    entry: &mut FrEntry,
+    now: SimTime,
+    live_version: Option<u64>,
+) -> WrapperDecision {
+    match entry.status {
+        FrStatus::Finished if entry.is_fresh(now) => {
+            let stale_version = match (&entry.result, live_version) {
+                (Some(FrResult::Data { version, .. }), Some(live)) => *version < live,
+                _ => false,
+            };
+            if stale_version {
+                // Prefetched copy is outdated: redo the fetch.
+                entry.status = FrStatus::NotRun;
+                entry.result = None;
+                let started = entry.try_start(now);
+                debug_assert!(started);
+                WrapperDecision::DoItYourself
+            } else {
+                WrapperDecision::UseResult(
+                    entry.result.clone().expect("finished entry has a result"),
+                )
+            }
+        }
+        FrStatus::Running => WrapperDecision::Wait,
+        _ => {
+            let started = entry.try_start(now);
+            debug_assert!(started, "NotRun/stale entry must be startable");
+            WrapperDecision::DoItYourself
+        }
+    }
+}
+
+/// Algorithm 5 — `FrWarm(id, resource)` decision for a warmable resource.
+/// Identical control flow; the "result" carries no data.
+pub fn fr_warm_decision(entry: &mut FrEntry, now: SimTime) -> WrapperDecision {
+    match entry.status {
+        FrStatus::Finished if entry.is_fresh(now) => {
+            WrapperDecision::UseResult(FrResult::Warmed)
+        }
+        FrStatus::Running => WrapperDecision::Wait,
+        _ => {
+            let started = entry.try_start(now);
+            debug_assert!(started);
+            WrapperDecision::DoItYourself
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::freshen::state::Completer;
+    use crate::util::time::SimDuration;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    fn data(v: u64) -> FrResult {
+        FrResult::Data {
+            object_id: "model".into(),
+            version: v,
+            bytes: 1e6,
+        }
+    }
+
+    #[test]
+    fn finished_fresh_returns_result() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        e.try_start(t(0));
+        e.finish(data(1), t(0), Completer::Freshen);
+        match fr_fetch_decision(&mut e, t(1), None) {
+            WrapperDecision::UseResult(FrResult::Data { version, .. }) => assert_eq!(version, 1),
+            other => panic!("expected UseResult, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn running_waits() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        e.try_start(t(0));
+        assert_eq!(fr_fetch_decision(&mut e, t(0), None), WrapperDecision::Wait);
+        assert_eq!(fr_warm_decision(&mut e, t(0)), WrapperDecision::Wait);
+    }
+
+    #[test]
+    fn not_run_means_do_it_yourself_and_claims_entry() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        assert_eq!(
+            fr_fetch_decision(&mut e, t(0), None),
+            WrapperDecision::DoItYourself
+        );
+        // Entry is now claimed: a late freshen hook would observe Running.
+        assert_eq!(e.status, FrStatus::Running);
+    }
+
+    #[test]
+    fn ttl_expired_redoes_work() {
+        let mut e = FrEntry::new(SimDuration::from_secs(5));
+        e.try_start(t(0));
+        e.finish(data(1), t(0), Completer::Freshen);
+        assert_eq!(
+            fr_fetch_decision(&mut e, t(20), None),
+            WrapperDecision::DoItYourself
+        );
+    }
+
+    #[test]
+    fn version_mismatch_redoes_fetch() {
+        let mut e = FrEntry::new(SimDuration::from_secs(100));
+        e.try_start(t(0));
+        e.finish(data(3), t(0), Completer::Freshen);
+        // Store has moved to version 5: prefetched copy is stale even
+        // though TTL-fresh.
+        assert_eq!(
+            fr_fetch_decision(&mut e, t(1), Some(5)),
+            WrapperDecision::DoItYourself
+        );
+        // Same version: fine.
+        let mut e2 = FrEntry::new(SimDuration::from_secs(100));
+        e2.try_start(t(0));
+        e2.finish(data(5), t(0), Completer::Freshen);
+        assert!(matches!(
+            fr_fetch_decision(&mut e2, t(1), Some(5)),
+            WrapperDecision::UseResult(_)
+        ));
+    }
+
+    #[test]
+    fn failed_freshen_is_not_fatal() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        e.try_start(t(0));
+        e.finish(FrResult::Failed, t(0), Completer::Freshen);
+        assert_eq!(
+            fr_fetch_decision(&mut e, t(1), None),
+            WrapperDecision::DoItYourself
+        );
+    }
+
+    #[test]
+    fn warm_decision_uses_warmed_result() {
+        let mut e = FrEntry::new(SimDuration::from_secs(10));
+        e.try_start(t(0));
+        e.finish(FrResult::Warmed, t(0), Completer::Freshen);
+        assert_eq!(
+            fr_warm_decision(&mut e, t(500)),
+            WrapperDecision::UseResult(FrResult::Warmed)
+        );
+    }
+}

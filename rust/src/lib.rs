@@ -1,0 +1,39 @@
+//! # freshen-rs
+//!
+//! A reproduction of *"Proactive Serverless Function Resource Management"*
+//! (Hunhoff et al., 2020): the **`freshen`** primitive — a hook the serverless
+//! provider runs *before* a predicted function invocation so that connection
+//! establishment, TCP congestion-window ramp-up, TLS handshakes and data
+//! fetches happen off the critical path.
+//!
+//! The crate is organised as a three-layer system:
+//!
+//! - **L3 (this crate)** — an OpenWhisk-like serverless platform (controller,
+//!   invokers, containers, language runtimes with `init`/`run`/`freshen`
+//!   hooks) that runs on two substrates: a deterministic discrete-event
+//!   simulator ([`simcore`]) used by every paper experiment, and a real-time
+//!   threaded serving engine ([`serve`]) used by the end-to-end example.
+//! - **L2 (python/compile/model.py)** — a JAX MLP image classifier (the
+//!   paper's motivating λ1 function), AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas fused kernels called by L2.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
+//! executes them from the rust request path; Python never runs at serve time.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment index.
+
+pub mod util;
+pub mod simcore;
+pub mod netsim;
+pub mod platform;
+pub mod freshen;
+pub mod predict;
+pub mod triggers;
+pub mod workload;
+pub mod billing;
+pub mod metrics;
+pub mod runtime;
+pub mod serve;
+pub mod experiments;
+pub mod testkit;
+pub mod cli;

@@ -1,0 +1,12 @@
+//! `repro` — the freshen-rs leader binary.
+//!
+//! See `repro help` (or [`freshen_rs::cli::USAGE`]) for commands. The heavy
+//! lifting lives in the library so tests and benches share it.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = freshen_rs::cli::run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,184 @@
+//! Platform metrics: latency recorders and counters.
+//!
+//! Each invocation contributes an [`InvocationRecord`]; the hub aggregates
+//! per-function latency samples and platform-wide counters. Reports feed
+//! EXPERIMENTS.md and the benches.
+
+use std::collections::HashMap;
+
+use crate::util::stats::Summary;
+use crate::util::time::{SimDuration, SimTime};
+
+/// How an invocation was started.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartKind {
+    Cold,
+    Warm,
+}
+
+/// Outcome record for one completed invocation.
+#[derive(Debug, Clone)]
+pub struct InvocationRecord {
+    pub function: String,
+    pub enqueued_at: SimTime,
+    pub started_at: SimTime,
+    pub finished_at: SimTime,
+    pub start_kind: StartKind,
+    /// Number of freshen resources consumed from the hook (vs self-done).
+    pub freshen_hits: u32,
+    pub freshen_misses: u32,
+}
+
+impl InvocationRecord {
+    /// End-to-end latency (queueing + start + body).
+    pub fn latency(&self) -> SimDuration {
+        self.finished_at.since(self.enqueued_at)
+    }
+
+    /// Execution time only (what the provider bills).
+    pub fn execution(&self) -> SimDuration {
+        self.finished_at.since(self.started_at)
+    }
+}
+
+/// Aggregated metrics.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsHub {
+    records: Vec<InvocationRecord>,
+    /// Freshen bookkeeping.
+    pub freshens_started: u64,
+    pub freshens_completed: u64,
+    pub freshens_wasted: u64, // predicted invocation never came
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub evictions: u64,
+    /// Per-app isolation re-inits (warm container swapped to a sibling
+    /// function instead of cold-starting a new one).
+    pub reinits: u64,
+}
+
+impl MetricsHub {
+    pub fn new() -> MetricsHub {
+        MetricsHub::default()
+    }
+
+    pub fn record(&mut self, rec: InvocationRecord) {
+        match rec.start_kind {
+            StartKind::Cold => self.cold_starts += 1,
+            StartKind::Warm => self.warm_starts += 1,
+        }
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[InvocationRecord] {
+        &self.records
+    }
+
+    pub fn count(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Latency summary (ms) over all records, or for one function.
+    pub fn latency_summary(&self, function: Option<&str>) -> Option<Summary> {
+        let samples: Vec<SimDuration> = self
+            .records
+            .iter()
+            .filter(|r| function.map_or(true, |f| r.function == f))
+            .map(|r| r.latency())
+            .collect();
+        Summary::of_durations_ms(&samples)
+    }
+
+    /// Freshen hit rate across all invocations (resources served by the
+    /// hook / total resources).
+    pub fn freshen_hit_rate(&self) -> f64 {
+        let (hits, total) = self.records.iter().fold((0u64, 0u64), |(h, t), r| {
+            (
+                h + r.freshen_hits as u64,
+                t + (r.freshen_hits + r.freshen_misses) as u64,
+            )
+        });
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Throughput over the recorded span, invocations/sec.
+    pub fn throughput(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        let start = self.records.iter().map(|r| r.enqueued_at).min().unwrap();
+        let end = self.records.iter().map(|r| r.finished_at).max().unwrap();
+        let span = end.since(start).as_secs_f64();
+        if span <= 0.0 {
+            0.0
+        } else {
+            self.records.len() as f64 / span
+        }
+    }
+
+    /// Per-function latency table, sorted by function id.
+    pub fn per_function(&self) -> Vec<(String, Summary)> {
+        let mut by_fn: HashMap<&str, Vec<SimDuration>> = HashMap::new();
+        for r in &self.records {
+            by_fn.entry(&r.function).or_default().push(r.latency());
+        }
+        let mut out: Vec<(String, Summary)> = by_fn
+            .into_iter()
+            .filter_map(|(f, xs)| Summary::of_durations_ms(&xs).map(|s| (f.to_string(), s)))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(function: &str, enq: u64, start: u64, fin: u64, kind: StartKind) -> InvocationRecord {
+        InvocationRecord {
+            function: function.to_string(),
+            enqueued_at: SimTime(enq),
+            started_at: SimTime(start),
+            finished_at: SimTime(fin),
+            start_kind: kind,
+            freshen_hits: 1,
+            freshen_misses: 1,
+        }
+    }
+
+    #[test]
+    fn latency_and_execution() {
+        let r = rec("f", 0, 500_000, 1_500_000, StartKind::Cold);
+        assert_eq!(r.latency(), SimDuration::from_millis(1500));
+        assert_eq!(r.execution(), SimDuration::from_millis(1000));
+    }
+
+    #[test]
+    fn hub_aggregates() {
+        let mut hub = MetricsHub::new();
+        hub.record(rec("f", 0, 100_000, 200_000, StartKind::Cold));
+        hub.record(rec("f", 0, 50_000, 100_000, StartKind::Warm));
+        hub.record(rec("g", 0, 10_000, 20_000, StartKind::Warm));
+        assert_eq!(hub.count(), 3);
+        assert_eq!(hub.cold_starts, 1);
+        assert_eq!(hub.warm_starts, 2);
+        assert_eq!(hub.per_function().len(), 2);
+        let f_summary = hub.latency_summary(Some("f")).unwrap();
+        assert_eq!(f_summary.count, 2);
+        assert!((hub.freshen_hit_rate() - 0.5).abs() < 1e-12);
+        assert!(hub.throughput() > 0.0);
+    }
+
+    #[test]
+    fn empty_hub_is_safe() {
+        let hub = MetricsHub::new();
+        assert!(hub.latency_summary(None).is_none());
+        assert_eq!(hub.freshen_hit_rate(), 0.0);
+        assert_eq!(hub.throughput(), 0.0);
+    }
+}

@@ -1,0 +1,216 @@
+//! Congestion-control algorithms for the fluid TCP model.
+//!
+//! The model is round-based: each simulated RTT the algorithm is asked how
+//! the congestion window evolves given the bytes acknowledged that round.
+//! Two algorithms are provided — **Reno** (slow start + AIMD, the textbook
+//! model, and what the paper's CWND discussion assumes) and **CUBIC** (the
+//! Linux default the paper's testbed actually ran). Experiments default to
+//! CUBIC; benches expose both so the warming benefit can be compared.
+
+/// Linux default initial congestion window (RFC 6928): 10 segments.
+pub const INIT_CWND_SEGMENTS: f64 = 10.0;
+/// Ethernet-typical MSS in bytes.
+pub const MSS: f64 = 1460.0;
+
+/// Congestion-control algorithm choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CongestionControl {
+    Reno,
+    Cubic,
+}
+
+impl CongestionControl {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CongestionControl::Reno => "reno",
+            CongestionControl::Cubic => "cubic",
+        }
+    }
+}
+
+/// Per-connection congestion state evolved round-by-round.
+#[derive(Debug, Clone)]
+pub struct CcState {
+    pub algo: CongestionControl,
+    /// Congestion window in bytes.
+    pub cwnd: f64,
+    /// Slow-start threshold in bytes (infinite until first loss).
+    pub ssthresh: f64,
+    /// CUBIC: window size before the last reduction (W_max), bytes.
+    pub w_max: f64,
+    /// CUBIC: time since the last reduction, seconds.
+    pub epoch_elapsed: f64,
+}
+
+impl CcState {
+    pub fn new(algo: CongestionControl) -> CcState {
+        CcState {
+            algo,
+            cwnd: INIT_CWND_SEGMENTS * MSS,
+            ssthresh: f64::INFINITY,
+            w_max: 0.0,
+            epoch_elapsed: 0.0,
+        }
+    }
+
+    pub fn with_ssthresh(algo: CongestionControl, ssthresh: f64) -> CcState {
+        let mut s = CcState::new(algo);
+        s.ssthresh = ssthresh;
+        s
+    }
+
+    pub fn in_slow_start(&self) -> bool {
+        self.cwnd < self.ssthresh
+    }
+
+    /// Advance one RTT-round in which `acked` bytes were acknowledged and no
+    /// loss occurred. `rtt` is the round duration in seconds.
+    pub fn on_round(&mut self, acked: f64, rtt: f64) {
+        self.epoch_elapsed += rtt;
+        if self.in_slow_start() {
+            // Slow start: cwnd grows by one MSS per acked MSS (doubling per
+            // RTT when the window is fully used).
+            self.cwnd += acked;
+            if self.cwnd >= self.ssthresh {
+                self.cwnd = self.ssthresh.max(self.cwnd.min(self.ssthresh * 1.0));
+                // fall through to CA next round
+            }
+            return;
+        }
+        match self.algo {
+            CongestionControl::Reno => {
+                // AIMD: +1 MSS per RTT (scaled by utilisation).
+                let utilisation = (acked / self.cwnd).clamp(0.0, 1.0);
+                self.cwnd += MSS * utilisation;
+            }
+            CongestionControl::Cubic => {
+                // W(t) = C*(t-K)^3 + W_max, K = cbrt(W_max*beta/C)
+                // (windows in MSS units for the standard constants).
+                const C: f64 = 0.4;
+                const BETA: f64 = 0.7;
+                let w_max_seg = (self.w_max.max(self.cwnd)) / MSS;
+                let k = (w_max_seg * (1.0 - BETA) / C).cbrt();
+                let t = self.epoch_elapsed;
+                let target_seg = C * (t - k).powi(3) + w_max_seg;
+                let target = target_seg * MSS;
+                if target > self.cwnd {
+                    // Approach the cubic target but never more than a 50%
+                    // step per round (RFC 8312's per-RTT clamp behaviour).
+                    self.cwnd = target.min(self.cwnd * 1.5);
+                } else {
+                    // TCP-friendly region: at least Reno's growth.
+                    self.cwnd += MSS * (acked / self.cwnd).clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+
+    /// Multiplicative decrease on loss.
+    pub fn on_loss(&mut self) {
+        let beta = match self.algo {
+            CongestionControl::Reno => 0.5,
+            CongestionControl::Cubic => 0.7,
+        };
+        self.w_max = self.cwnd;
+        self.ssthresh = (self.cwnd * beta).max(2.0 * MSS);
+        self.cwnd = self.ssthresh;
+        self.epoch_elapsed = 0.0;
+    }
+
+    /// RFC 2861 congestion-window validation: after an idle period the
+    /// window decays by half per RTO elapsed, down to the restart window
+    /// (the initial window). This is the decay the paper's `freshen`
+    /// warming fights — keepalives keep the connection *alive* but do not
+    /// preserve CWND.
+    pub fn apply_idle_decay(&mut self, idle: f64, rto: f64) {
+        if idle <= rto {
+            return;
+        }
+        let halvings = (idle / rto).floor() as u32;
+        let floor = INIT_CWND_SEGMENTS * MSS;
+        for _ in 0..halvings.min(64) {
+            self.cwnd = (self.cwnd / 2.0).max(floor);
+        }
+        // ssthresh keeps its value (metric retained), matching Linux.
+        self.epoch_elapsed = 0.0;
+    }
+
+    /// Directly set the window — the `warm_cwnd` syscall's effect, subject
+    /// to provider policy (see [`crate::netsim::warm`]).
+    pub fn set_cwnd(&mut self, bytes: f64) {
+        self.cwnd = bytes.max(2.0 * MSS);
+        self.epoch_elapsed = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slow_start_doubles_per_round() {
+        let mut cc = CcState::new(CongestionControl::Reno);
+        let w0 = cc.cwnd;
+        cc.on_round(cc.cwnd, 0.05);
+        assert!((cc.cwnd - 2.0 * w0).abs() < 1.0);
+        cc.on_round(cc.cwnd, 0.05);
+        assert!((cc.cwnd - 4.0 * w0).abs() < 1.0);
+    }
+
+    #[test]
+    fn reno_linear_after_ssthresh() {
+        let mut cc = CcState::with_ssthresh(CongestionControl::Reno, 20.0 * MSS);
+        cc.cwnd = 20.0 * MSS; // at threshold -> congestion avoidance
+        cc.on_round(cc.cwnd, 0.05);
+        assert!((cc.cwnd - 21.0 * MSS).abs() < 1.0);
+    }
+
+    #[test]
+    fn loss_halves_reno() {
+        let mut cc = CcState::new(CongestionControl::Reno);
+        cc.cwnd = 100.0 * MSS;
+        cc.on_loss();
+        assert!((cc.cwnd - 50.0 * MSS).abs() < 1.0);
+        assert!(!cc.in_slow_start());
+    }
+
+    #[test]
+    fn cubic_decrease_is_gentler_and_regrows() {
+        let mut cc = CcState::new(CongestionControl::Cubic);
+        cc.cwnd = 100.0 * MSS;
+        cc.on_loss();
+        assert!((cc.cwnd - 70.0 * MSS).abs() < 1.0);
+        let before = cc.cwnd;
+        // Simulate 40 RTT rounds; CUBIC should recover towards w_max.
+        for _ in 0..40 {
+            cc.on_round(cc.cwnd, 0.05);
+        }
+        assert!(cc.cwnd > before);
+        assert!(cc.cwnd > 90.0 * MSS, "cwnd {} segs", cc.cwnd / MSS);
+    }
+
+    #[test]
+    fn idle_decay_halves_to_restart_window() {
+        let mut cc = CcState::new(CongestionControl::Cubic);
+        cc.cwnd = 400.0 * MSS;
+        // idle of 3 RTOs -> three halvings: 400 -> 200 -> 100 -> 50
+        cc.apply_idle_decay(0.9, 0.3);
+        assert!((cc.cwnd - 50.0 * MSS).abs() < 1.0);
+        // very long idle floors at the initial window
+        cc.apply_idle_decay(1e6, 0.3);
+        assert!((cc.cwnd - INIT_CWND_SEGMENTS * MSS).abs() < 1.0);
+        // short idle: no change
+        let w = cc.cwnd;
+        cc.apply_idle_decay(0.1, 0.3);
+        assert_eq!(cc.cwnd, w);
+    }
+
+    #[test]
+    fn set_cwnd_floors_at_two_mss() {
+        let mut cc = CcState::new(CongestionControl::Reno);
+        cc.set_cwnd(1.0);
+        assert_eq!(cc.cwnd, 2.0 * MSS);
+        cc.set_cwnd(1e6);
+        assert_eq!(cc.cwnd, 1e6);
+    }
+}

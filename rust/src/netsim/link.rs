@@ -1,0 +1,137 @@
+//! Link profiles.
+//!
+//! The paper's three server placements (§4): local on-host, edge on-site
+//! (same 10 Gbps LAN), and remote off-site (~50 ms away). Each profile fixes
+//! the path RTT, bottleneck bandwidth, and a small jitter model so repeated
+//! iterations show realistic spread.
+
+use crate::util::rng::Rng;
+
+/// Server placement used throughout the evaluation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Site {
+    /// Same host (loopback / local bridge).
+    Local,
+    /// Same site, 10 Gbps LAN (the paper's "edge on-site").
+    Edge,
+    /// Off-site WAN path averaging 50 ms (the paper's "remote off-site").
+    Remote,
+}
+
+impl Site {
+    pub fn all() -> [Site; 3] {
+        [Site::Local, Site::Edge, Site::Remote]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Site::Local => "local",
+            Site::Edge => "edge",
+            Site::Remote => "remote",
+        }
+    }
+
+    pub fn link(&self) -> Link {
+        match self {
+            // Loopback: tens of microseconds, memory-bandwidth-ish ceiling.
+            Site::Local => Link::new("local", 50e-6, 20e9 / 8.0),
+            // 10 Gbps LAN, ~200us switch+stack RTT.
+            Site::Edge => Link::new("edge", 200e-6, 10e9 / 8.0),
+            // 50ms WAN, 1 Gbps bottleneck.
+            Site::Remote => Link::new("remote", 50e-3, 1e9 / 8.0),
+        }
+    }
+}
+
+/// A point-to-point path with fixed base RTT and bottleneck bandwidth.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: &'static str,
+    /// Base round-trip time in seconds.
+    pub rtt: f64,
+    /// Bottleneck bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Multiplicative jitter sigma applied per-RTT sample (lognormal).
+    pub jitter_sigma: f64,
+    /// Fixed per-operation endpoint overhead (kernel + runtime), seconds.
+    /// Dominates on-host transfers, negligible on WAN — this is why the
+    /// paper's Figure 6 (edge) shows *larger relative* warming benefit:
+    /// network delay, not system overhead, dominates there.
+    pub endpoint_overhead: f64,
+    /// Probability that a congestion/loss event hits a given send round
+    /// (0 = lossless, the clean-testbed default). Loss triggers the
+    /// congestion controller's multiplicative decrease, so warming's
+    /// benefit degrades realistically on lossy paths.
+    pub loss_per_round: f64,
+}
+
+impl Link {
+    pub fn new(name: &'static str, rtt: f64, bandwidth: f64) -> Link {
+        Link {
+            name,
+            rtt,
+            bandwidth,
+            jitter_sigma: 0.03,
+            endpoint_overhead: 250e-6,
+            loss_per_round: 0.0,
+        }
+    }
+
+    pub fn with_loss(mut self, loss_per_round: f64) -> Link {
+        self.loss_per_round = loss_per_round;
+        self
+    }
+
+    /// Bandwidth-delay product in bytes.
+    pub fn bdp_bytes(&self) -> f64 {
+        self.rtt * self.bandwidth
+    }
+
+    /// One RTT sample with jitter (deterministic given the rng state).
+    pub fn sample_rtt(&self, rng: &mut Rng) -> f64 {
+        if self.jitter_sigma == 0.0 {
+            return self.rtt;
+        }
+        // Lognormal multiplicative jitter centred on 1.0.
+        self.rtt * rng.lognormal(0.0, self.jitter_sigma)
+    }
+
+    /// Serialization time for `bytes` at the bottleneck.
+    pub fn serialize(&self, bytes: f64) -> f64 {
+        bytes / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_profiles_ordered_by_distance() {
+        let local = Site::Local.link();
+        let edge = Site::Edge.link();
+        let remote = Site::Remote.link();
+        assert!(local.rtt < edge.rtt && edge.rtt < remote.rtt);
+        assert!(remote.bandwidth < edge.bandwidth);
+        // Remote BDP is large: warming matters most there.
+        assert!(remote.bdp_bytes() > 1e6);
+        assert!(edge.bdp_bytes() < remote.bdp_bytes());
+    }
+
+    #[test]
+    fn jitter_is_centred_and_bounded() {
+        let link = Site::Remote.link();
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| link.sample_rtt(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean / link.rtt - 1.0).abs() < 0.01, "mean ratio {}", mean / link.rtt);
+    }
+
+    #[test]
+    fn serialization_scales_linearly() {
+        let link = Site::Edge.link();
+        let t1 = link.serialize(1e6);
+        let t10 = link.serialize(1e7);
+        assert!((t10 / t1 - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,160 @@
+//! Kernel TCP metric caching and TCP Fast Open — the existing mechanisms the
+//! paper argues are *insufficient* (§2 "Runtime reuse inefficiencies").
+//!
+//! - Linux caches per-destination metrics (RTT, ssthresh) unless
+//!   `tcp_no_metrics_save` is set, but **not CWND** — a new connection still
+//!   slow-starts from the initial window.
+//! - TCP Fast Open removes the handshake RTT on repeat connections, but
+//!   requires both endpoints to support it and caps the data carried in the
+//!   SYN.
+//!
+//! This module models both so the baselines in Figures 4–6 (and the
+//! ablations) can include them, demonstrating the residual gap freshen
+//! closes.
+
+use std::collections::HashMap;
+
+use crate::util::time::SimTime;
+
+/// Destination key (host:port equivalent).
+pub type DestKey = String;
+
+/// Per-destination cached TCP metrics, as the Linux kernel keeps them.
+#[derive(Debug, Clone, Copy)]
+pub struct DestMetrics {
+    pub rtt_estimate: f64,
+    pub ssthresh: f64,
+    pub recorded_at: SimTime,
+}
+
+/// TFO cookie state for a destination.
+#[derive(Debug, Clone, Copy)]
+pub struct TfoCookie {
+    pub obtained_at: SimTime,
+}
+
+/// Maximum payload a TFO SYN may carry (RFC 7413's practical limit is one
+/// MSS minus options; we use 1420 bytes).
+pub const TFO_SYN_DATA_CAP: f64 = 1420.0;
+
+/// Host-wide TCP metrics cache.
+#[derive(Debug, Clone, Default)]
+pub struct TcpMetricsCache {
+    /// `tcp_no_metrics_save`: when true, nothing is cached (metrics off).
+    pub no_metrics_save: bool,
+    /// Whether this host and its peers support TFO.
+    pub tfo_enabled: bool,
+    metrics: HashMap<DestKey, DestMetrics>,
+    cookies: HashMap<DestKey, TfoCookie>,
+}
+
+impl TcpMetricsCache {
+    pub fn new() -> TcpMetricsCache {
+        TcpMetricsCache::default()
+    }
+
+    /// Record metrics at connection close (kernel behaviour).
+    pub fn record(&mut self, dest: &str, rtt: f64, ssthresh: f64, now: SimTime) {
+        if self.no_metrics_save {
+            return;
+        }
+        self.metrics.insert(
+            dest.to_string(),
+            DestMetrics {
+                rtt_estimate: rtt,
+                ssthresh,
+                recorded_at: now,
+            },
+        );
+    }
+
+    /// ssthresh hint for a new connection to `dest` (NOT cwnd — that is the
+    /// gap freshen's `warm_cwnd` fills).
+    pub fn ssthresh_hint(&self, dest: &str) -> Option<f64> {
+        if self.no_metrics_save {
+            return None;
+        }
+        self.metrics.get(dest).map(|m| m.ssthresh)
+    }
+
+    pub fn rtt_hint(&self, dest: &str) -> Option<f64> {
+        if self.no_metrics_save {
+            return None;
+        }
+        self.metrics.get(dest).map(|m| m.rtt_estimate)
+    }
+
+    /// After a successful full handshake the client holds a TFO cookie.
+    pub fn grant_tfo_cookie(&mut self, dest: &str, now: SimTime) {
+        if self.tfo_enabled {
+            self.cookies
+                .insert(dest.to_string(), TfoCookie { obtained_at: now });
+        }
+    }
+
+    /// Can the next connection to `dest` use TFO (0-RTT SYN data)?
+    pub fn can_fast_open(&self, dest: &str) -> bool {
+        self.tfo_enabled && self.cookies.contains_key(dest)
+    }
+
+    /// How much of `payload` may ride in the TFO SYN; the remainder still
+    /// waits a round trip. Returns `(in_syn, deferred)`.
+    pub fn tfo_split(&self, payload: f64) -> (f64, f64) {
+        let in_syn = payload.min(TFO_SYN_DATA_CAP);
+        (in_syn, payload - in_syn)
+    }
+
+    pub fn len(&self) -> usize {
+        self.metrics.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metrics.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn caches_and_returns_hints() {
+        let mut c = TcpMetricsCache::new();
+        c.record("s3.local:443", 0.05, 90_000.0, SimTime(1));
+        assert_eq!(c.ssthresh_hint("s3.local:443"), Some(90_000.0));
+        assert_eq!(c.rtt_hint("s3.local:443"), Some(0.05));
+        assert_eq!(c.ssthresh_hint("other:80"), None);
+    }
+
+    #[test]
+    fn no_metrics_save_disables_cache() {
+        let mut c = TcpMetricsCache::new();
+        c.no_metrics_save = true;
+        c.record("d", 0.05, 90_000.0, SimTime(1));
+        assert_eq!(c.ssthresh_hint("d"), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn tfo_requires_enablement_and_cookie() {
+        let mut c = TcpMetricsCache::new();
+        // Not enabled: no cookie granted.
+        c.grant_tfo_cookie("d", SimTime(0));
+        assert!(!c.can_fast_open("d"));
+        c.tfo_enabled = true;
+        assert!(!c.can_fast_open("d")); // no cookie yet
+        c.grant_tfo_cookie("d", SimTime(1));
+        assert!(c.can_fast_open("d"));
+    }
+
+    #[test]
+    fn tfo_data_cap_limits_syn_payload() {
+        let c = TcpMetricsCache::new();
+        let (in_syn, deferred) = c.tfo_split(10_000.0);
+        assert_eq!(in_syn, TFO_SYN_DATA_CAP);
+        assert_eq!(deferred, 10_000.0 - TFO_SYN_DATA_CAP);
+        let (small, rest) = c.tfo_split(100.0);
+        assert_eq!(small, 100.0);
+        assert_eq!(rest, 0.0);
+    }
+}

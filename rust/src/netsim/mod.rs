@@ -1,0 +1,29 @@
+//! Fluid-model network simulator.
+//!
+//! The paper's evaluation (Figures 4–6) ran over real TCP on CloudLab: a
+//! local on-host server, an edge server on the same 10 Gbps LAN, and a
+//! remote server ~50 ms away. We reproduce those experiments with a
+//! packet-free **fluid TCP model**: transfer time is computed analytically
+//! from the connection's congestion-window state, the link's RTT/bandwidth,
+//! and the handshake sequence — the quantities that fully determine the
+//! deltas the paper measures.
+//!
+//! Components:
+//! - [`link`] — the three site profiles (plus custom links).
+//! - [`cc`] — congestion-control algorithms (Reno, CUBIC).
+//! - [`tcp`] — connection state machine: handshake, slow start, congestion
+//!   avoidance, RFC 2861 idle decay, keepalive, idle timeout.
+//! - [`tls`] — TLS 1.2/1.3 handshake costs and session resumption.
+//! - [`warm`] — the paper's `warm_cwnd` syscall model + packet-pair probing.
+//! - [`metrics_cache`] — `tcp_no_metrics_save` semantics and TCP Fast Open.
+
+pub mod cc;
+pub mod link;
+pub mod metrics_cache;
+pub mod tcp;
+pub mod tls;
+pub mod warm;
+
+pub use cc::CongestionControl;
+pub use link::{Link, Site};
+pub use tcp::{ConnState, Connection, TransferDirection};

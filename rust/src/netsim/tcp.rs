@@ -1,0 +1,433 @@
+//! TCP connection state machine over the fluid model.
+//!
+//! A [`Connection`] tracks everything the paper's §2/§3.2 discussion turns
+//! on: establishment (3-way handshake), per-direction congestion windows
+//! evolving through slow start and congestion avoidance ([`super::cc`]),
+//! **RFC 2861 idle decay** (the reason keepalives alone don't keep a
+//! connection *fast*), server/NAT idle timeouts (the reason runtime-scoped
+//! connections go dead between invocations), and keepalive probing.
+//!
+//! All methods take the current virtual time and return the operation's
+//! duration; the caller (platform ops or the serve engine) schedules the
+//! completion. The model is deterministic given the `Rng` stream.
+
+use crate::netsim::cc::{CcState, CongestionControl, INIT_CWND_SEGMENTS, MSS};
+use crate::netsim::link::Link;
+use crate::util::rng::Rng;
+use crate::util::time::{SimDuration, SimTime};
+
+/// Lifecycle of a simulated connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnState {
+    /// Never connected (or explicitly closed).
+    Closed,
+    /// Live and usable.
+    Established,
+    /// Silently dropped by the peer/NAT after an idle timeout; the next
+    /// use discovers the failure and must re-establish.
+    Dead,
+}
+
+/// Which direction carries the bulk data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferDirection {
+    /// Remote sends to us (a `DataGet` response).
+    Download,
+    /// We send to remote (a `DataPut`).
+    Upload,
+}
+
+/// Default server-side idle timeout (many LBs/NATs use 300–350 s; ALB
+/// defaults to 60 s — we default to 300 s, configurable per connection).
+pub const DEFAULT_IDLE_TIMEOUT: f64 = 300.0;
+
+/// Receiver window cap in bytes (Linux autotuned buffers, ~8 MB).
+pub const DEFAULT_RWND: f64 = 8.0 * 1024.0 * 1024.0;
+
+/// A simulated TCP connection to one destination.
+#[derive(Debug, Clone)]
+pub struct Connection {
+    pub link: Link,
+    pub state: ConnState,
+    /// Congestion state for data we send (uploads).
+    pub cc_tx: CcState,
+    /// Congestion state of the peer sending to us (downloads).
+    pub cc_rx: CcState,
+    /// Receiver-window cap applied to both directions.
+    pub rwnd: f64,
+    /// Virtual time of last segment in either direction.
+    pub last_activity: SimTime,
+    pub established_at: SimTime,
+    /// Peer idle timeout (seconds); idling longer kills the connection.
+    pub idle_timeout: f64,
+    /// Cumulative bytes moved (both directions) — metrics/billing.
+    pub bytes_transferred: f64,
+    /// Number of times this connection was (re)established.
+    pub establish_count: u32,
+}
+
+impl Connection {
+    pub fn new(link: Link, algo: CongestionControl) -> Connection {
+        Connection {
+            link,
+            state: ConnState::Closed,
+            cc_tx: CcState::new(algo),
+            cc_rx: CcState::new(algo),
+            rwnd: DEFAULT_RWND,
+            last_activity: SimTime::ZERO,
+            established_at: SimTime::ZERO,
+            idle_timeout: DEFAULT_IDLE_TIMEOUT,
+            bytes_transferred: 0.0,
+            establish_count: 0,
+        }
+    }
+
+    /// Retransmission-timeout estimate used for RFC 2861 decay pacing.
+    pub fn rto(&self) -> f64 {
+        (4.0 * self.link.rtt).max(0.2) // Linux TCP_RTO_MIN = 200ms
+    }
+
+    /// Has the peer's idle timeout passed? (Discovered lazily on next use.)
+    pub fn idle_expired(&self, now: SimTime) -> bool {
+        self.state == ConnState::Established
+            && now.since(self.last_activity).as_secs_f64() > self.idle_timeout
+    }
+
+    /// 3-way handshake. Returns the time until the connection is usable
+    /// for data (client may piggyback on the final ACK, so 1 RTT).
+    pub fn connect(&mut self, now: SimTime, rng: &mut Rng) -> SimDuration {
+        let rtt = self.link.sample_rtt(rng);
+        let t = rtt + self.link.endpoint_overhead;
+        let algo = self.cc_tx.algo;
+        self.cc_tx = CcState::new(algo);
+        self.cc_rx = CcState::new(algo);
+        self.state = ConnState::Established;
+        self.establish_count += 1;
+        self.established_at = now + SimDuration::from_secs_f64(t);
+        self.last_activity = self.established_at;
+        SimDuration::from_secs_f64(t)
+    }
+
+    /// Re-establish with cached metrics (see [`super::metrics_cache`]):
+    /// `ssthresh_hint` seeds ssthresh (Linux metric caching), and
+    /// `fast_open` skips the handshake RTT (TFO with a valid cookie).
+    pub fn connect_with(
+        &mut self,
+        now: SimTime,
+        rng: &mut Rng,
+        ssthresh_hint: Option<f64>,
+        fast_open: bool,
+    ) -> SimDuration {
+        let d = if fast_open {
+            // Data rides in the SYN; only endpoint overhead before first data.
+            let algo = self.cc_tx.algo;
+            self.cc_tx = CcState::new(algo);
+            self.cc_rx = CcState::new(algo);
+            self.state = ConnState::Established;
+            self.establish_count += 1;
+            self.established_at = now;
+            self.last_activity = now;
+            SimDuration::from_secs_f64(self.link.endpoint_overhead)
+        } else {
+            self.connect(now, rng)
+        };
+        if let Some(ss) = ssthresh_hint {
+            // Metric caching restores ssthresh but NOT cwnd — the paper's
+            // §2 point: tcp_no_metrics_save "does not apply to important
+            // parameters such as CWND".
+            self.cc_tx.ssthresh = ss;
+            self.cc_rx.ssthresh = ss;
+        }
+        d
+    }
+
+    /// Mark the connection dead (peer idle-timeout or reset).
+    pub fn kill(&mut self) {
+        self.state = ConnState::Dead;
+    }
+
+    /// Lazily apply RFC 2861 idle decay to both directions.
+    fn apply_idle(&mut self, now: SimTime) {
+        let idle = now.since(self.last_activity).as_secs_f64();
+        let rto = self.rto();
+        self.cc_tx.apply_idle_decay(idle, rto);
+        self.cc_rx.apply_idle_decay(idle, rto);
+    }
+
+    /// Fluid send: time from first byte sent until the receiver holds the
+    /// last byte, evolving `cc` round-by-round.
+    fn send_duration(cc: &mut CcState, link: &Link, rwnd: f64, bytes: f64, rng: &mut Rng) -> f64 {
+        debug_assert!(bytes >= 0.0);
+        if bytes == 0.0 {
+            return 0.5 * link.sample_rtt(rng);
+        }
+        let mut remaining = bytes;
+        let mut t = link.endpoint_overhead;
+        loop {
+            let rtt = link.sample_rtt(rng);
+            // Loss event this round? Multiplicative decrease + a recovery
+            // round (fast retransmit: one extra RTT, no forward progress
+            // for the lost portion).
+            if link.loss_per_round > 0.0 && rng.bernoulli(link.loss_per_round) {
+                cc.on_loss();
+                t += rtt;
+            }
+            let w = cc.cwnd.min(rwnd);
+            if remaining <= w {
+                // Final flight: serialize + propagate half an RTT.
+                t += link.serialize(remaining) + 0.5 * rtt;
+                cc.on_round(remaining, rtt);
+                break;
+            }
+            // Full window in flight; round completes when acks return.
+            // max() smoothly hands over to bandwidth-limited behaviour as
+            // the window approaches the BDP.
+            t += link.serialize(w).max(rtt);
+            cc.on_round(w, rtt);
+            remaining -= w;
+        }
+        t
+    }
+
+    /// Request/response exchange (`DataGet`): send `req_bytes`, receive
+    /// `resp_bytes`; includes `server_time` of remote processing.
+    /// Returns total duration. Connection must be `Established`.
+    pub fn request_response(
+        &mut self,
+        now: SimTime,
+        rng: &mut Rng,
+        req_bytes: f64,
+        resp_bytes: f64,
+        server_time: f64,
+    ) -> SimDuration {
+        debug_assert_eq!(self.state, ConnState::Established, "use connect() first");
+        self.apply_idle(now);
+        let up = Self::send_duration(&mut self.cc_tx, &self.link, self.rwnd, req_bytes, rng);
+        let down = Self::send_duration(&mut self.cc_rx, &self.link, self.rwnd, resp_bytes, rng);
+        let total = up + server_time + down;
+        self.bytes_transferred += req_bytes + resp_bytes;
+        self.last_activity = now + SimDuration::from_secs_f64(total);
+        SimDuration::from_secs_f64(total)
+    }
+
+    /// One-way bulk send plus an application-level completion ack
+    /// (`DataPut`, and the Figures 5/6 measurement: "time of a client
+    /// initiating a file transfer to the response from the server
+    /// indicating completion").
+    pub fn send_with_ack(
+        &mut self,
+        now: SimTime,
+        rng: &mut Rng,
+        bytes: f64,
+        server_time: f64,
+    ) -> SimDuration {
+        debug_assert_eq!(self.state, ConnState::Established, "use connect() first");
+        self.apply_idle(now);
+        let up = Self::send_duration(&mut self.cc_tx, &self.link, self.rwnd, bytes, rng);
+        let ack = 0.5 * self.link.sample_rtt(rng);
+        let total = up + server_time + ack;
+        self.bytes_transferred += bytes;
+        self.last_activity = now + SimDuration::from_secs_f64(total);
+        SimDuration::from_secs_f64(total)
+    }
+
+    /// TCP keepalive probe: discovers whether the peer still holds the
+    /// connection. Returns `(probe_duration, alive)`. A dead connection
+    /// transitions to [`ConnState::Dead`] so the caller can re-establish —
+    /// exactly the freshen liveness check of §3.2.
+    pub fn keepalive(&mut self, now: SimTime, rng: &mut Rng) -> (SimDuration, bool) {
+        match self.state {
+            ConnState::Closed | ConnState::Dead => {
+                (SimDuration::from_secs_f64(self.link.endpoint_overhead), false)
+            }
+            ConnState::Established => {
+                if self.idle_expired(now) {
+                    // Peer already dropped it; probe times out after ~RTO.
+                    self.state = ConnState::Dead;
+                    (SimDuration::from_secs_f64(self.rto()), false)
+                } else {
+                    let rtt = self.link.sample_rtt(rng);
+                    // Probe counts as activity (keeps NAT state alive) but
+                    // does NOT regrow cwnd; idle decay up to now applies.
+                    self.apply_idle(now);
+                    let d = SimDuration::from_secs_f64(rtt);
+                    self.last_activity = now + d;
+                    (d, true)
+                }
+            }
+        }
+    }
+
+    /// Effective cwnd (bytes) in the given direction, for reports.
+    pub fn cwnd(&self, dir: TransferDirection) -> f64 {
+        match dir {
+            TransferDirection::Upload => self.cc_tx.cwnd,
+            TransferDirection::Download => self.cc_rx.cwnd,
+        }
+    }
+
+    /// Initial-window bytes (what a fresh connection starts at).
+    pub fn initial_cwnd() -> f64 {
+        INIT_CWND_SEGMENTS * MSS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::Site;
+
+    fn quiet(mut link: Link) -> Link {
+        link.jitter_sigma = 0.0;
+        link
+    }
+
+    fn conn(site: Site) -> Connection {
+        Connection::new(quiet(site.link()), CongestionControl::Cubic)
+    }
+
+    #[test]
+    fn connect_costs_one_rtt() {
+        let mut c = conn(Site::Remote);
+        let mut rng = Rng::new(1);
+        let d = c.connect(SimTime::ZERO, &mut rng);
+        let expected = c.link.rtt + c.link.endpoint_overhead;
+        assert!((d.as_secs_f64() - expected).abs() < 1e-9);
+        assert_eq!(c.state, ConnState::Established);
+        assert_eq!(c.establish_count, 1);
+    }
+
+    #[test]
+    fn transfer_grows_cwnd() {
+        let mut c = conn(Site::Remote);
+        let mut rng = Rng::new(2);
+        c.connect(SimTime::ZERO, &mut rng);
+        let w0 = c.cwnd(TransferDirection::Upload);
+        c.send_with_ack(SimTime(100_000), &mut rng, 1e6, 0.0);
+        assert!(c.cwnd(TransferDirection::Upload) > 4.0 * w0);
+    }
+
+    #[test]
+    fn warmed_transfer_is_much_faster_on_wan() {
+        // The Figure 5/6 effect: a prior large transfer leaves cwnd large,
+        // so the next large send completes in far fewer rounds.
+        let mut rng = Rng::new(3);
+        let mut cold = conn(Site::Remote);
+        cold.connect(SimTime::ZERO, &mut rng);
+        let t_cold = cold.send_with_ack(SimTime(1), &mut rng, 10e6, 0.0);
+
+        let mut warm = conn(Site::Remote);
+        warm.connect(SimTime::ZERO, &mut rng);
+        warm.send_with_ack(SimTime(1), &mut rng, 20e6, 0.0); // warming send
+        let t_warm = warm.send_with_ack(SimTime(2), &mut rng, 10e6, 0.0);
+
+        let saving = 1.0 - t_warm.as_secs_f64() / t_cold.as_secs_f64();
+        assert!(saving > 0.4, "saving {saving}");
+    }
+
+    #[test]
+    fn small_transfers_see_little_warming_benefit() {
+        // Below the initial window the transfer is one flight either way.
+        let mut rng = Rng::new(4);
+        let mut cold = conn(Site::Remote);
+        cold.connect(SimTime::ZERO, &mut rng);
+        let t_cold = cold.send_with_ack(SimTime(1), &mut rng, 1_000.0, 0.0);
+
+        let mut warm = conn(Site::Remote);
+        warm.connect(SimTime::ZERO, &mut rng);
+        warm.send_with_ack(SimTime(1), &mut rng, 20e6, 0.0);
+        let t_warm = warm.send_with_ack(SimTime(2), &mut rng, 1_000.0, 0.0);
+
+        let ratio = t_warm.as_secs_f64() / t_cold.as_secs_f64();
+        assert!((0.9..=1.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn idle_decay_slows_next_transfer() {
+        let mut rng = Rng::new(5);
+        let mut c = conn(Site::Remote);
+        c.connect(SimTime::ZERO, &mut rng);
+        c.send_with_ack(SimTime(1), &mut rng, 10e6, 0.0); // warm it
+        let w_warm = c.cwnd(TransferDirection::Upload);
+        // Idle 30s (< idle_timeout, so still alive) then observe decay.
+        let later = SimTime::ZERO + SimDuration::from_secs(30);
+        c.send_with_ack(later, &mut rng, 1_000.0, 0.0);
+        assert!(
+            c.cwnd(TransferDirection::Upload) < w_warm / 4.0,
+            "cwnd should have decayed: {} vs {}",
+            c.cwnd(TransferDirection::Upload),
+            w_warm
+        );
+    }
+
+    #[test]
+    fn keepalive_detects_dead_connection() {
+        let mut rng = Rng::new(6);
+        let mut c = conn(Site::Edge);
+        c.connect(SimTime::ZERO, &mut rng);
+        // Past the peer idle timeout.
+        let later = SimTime::ZERO + SimDuration::from_secs(400);
+        assert!(c.idle_expired(later));
+        let (d, alive) = c.keepalive(later, &mut rng);
+        assert!(!alive);
+        assert_eq!(c.state, ConnState::Dead);
+        assert!(d.as_secs_f64() >= 0.2); // timed-out probe costs ~RTO
+        // Re-establish works and resets the window.
+        let d2 = c.connect(later + d, &mut rng);
+        assert!(d2.as_secs_f64() > 0.0);
+        assert_eq!(c.state, ConnState::Established);
+    }
+
+    #[test]
+    fn keepalive_keeps_alive_but_does_not_warm() {
+        let mut rng = Rng::new(7);
+        let mut c = conn(Site::Remote);
+        c.connect(SimTime::ZERO, &mut rng);
+        c.send_with_ack(SimTime(1), &mut rng, 10e6, 0.0);
+        let w_warm = c.cwnd(TransferDirection::Upload);
+        // Keepalive every 60s for 5 minutes: stays established...
+        let mut t = SimTime::ZERO;
+        for _ in 0..5 {
+            t = t + SimDuration::from_secs(60);
+            let (_, alive) = c.keepalive(t, &mut rng);
+            assert!(alive);
+        }
+        // ...but cwnd has decayed to the restart window (the paper's point).
+        assert!(c.cwnd(TransferDirection::Upload) < w_warm / 8.0);
+        assert!(
+            (c.cwnd(TransferDirection::Upload) - Connection::initial_cwnd()).abs() < 1.0
+        );
+    }
+
+    #[test]
+    fn metrics_cache_restores_ssthresh_not_cwnd() {
+        let mut rng = Rng::new(8);
+        let mut c = conn(Site::Remote);
+        let d = c.connect_with(SimTime::ZERO, &mut rng, Some(64.0 * MSS), false);
+        assert!(d.as_secs_f64() > 0.0);
+        assert_eq!(c.cc_tx.ssthresh, 64.0 * MSS);
+        assert!((c.cc_tx.cwnd - Connection::initial_cwnd()).abs() < 1.0);
+    }
+
+    #[test]
+    fn fast_open_skips_handshake_rtt() {
+        let mut rng = Rng::new(9);
+        let mut tfo = conn(Site::Remote);
+        let d_tfo = tfo.connect_with(SimTime::ZERO, &mut rng, None, true);
+        let mut normal = conn(Site::Remote);
+        let d_normal = normal.connect(SimTime::ZERO, &mut rng);
+        assert!(d_tfo.as_secs_f64() < 0.1 * d_normal.as_secs_f64());
+    }
+
+    #[test]
+    fn request_response_includes_server_time() {
+        let mut rng = Rng::new(10);
+        let mut c = conn(Site::Edge);
+        c.connect(SimTime::ZERO, &mut rng);
+        let t0 = c.request_response(SimTime(1), &mut rng, 200.0, 1000.0, 0.0);
+        let mut c2 = conn(Site::Edge);
+        c2.connect(SimTime::ZERO, &mut rng);
+        let t1 = c2.request_response(SimTime(1), &mut rng, 200.0, 1000.0, 0.010);
+        assert!((t1.as_secs_f64() - t0.as_secs_f64() - 0.010).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,141 @@
+//! TLS handshake cost model.
+//!
+//! §3.2 "Other connection-oriented protocols": freshen can establish and
+//! warm protocols on top of TCP, TLS foremost, as long as credentials are
+//! constant. We model the handshake's round trips and crypto CPU cost, plus
+//! session resumption (which freshen effectively enables by keeping a live,
+//! recently-used session around).
+
+use crate::netsim::link::Link;
+use crate::util::rng::Rng;
+use crate::util::time::SimDuration;
+
+/// TLS protocol version in play.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TlsVersion {
+    /// Full handshake: 2 RTT.
+    Tls12,
+    /// Full handshake: 1 RTT.
+    Tls13,
+}
+
+/// Handshake flavour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TlsHandshake {
+    Full(TlsVersion),
+    /// Session resumption (TLS 1.2 session IDs / TLS 1.3 PSK): 1 RTT.
+    Resumed(TlsVersion),
+    /// TLS 1.3 0-RTT early data (when the server allows replay risk).
+    ZeroRtt,
+}
+
+/// Crypto CPU cost of the asymmetric handshake (sign + key exchange),
+/// seconds. Measured values for RSA-2048/X25519 are ~1–3 ms on server CPUs.
+pub const FULL_HANDSHAKE_CPU: f64 = 2.0e-3;
+/// Resumption uses symmetric crypto only.
+pub const RESUMED_HANDSHAKE_CPU: f64 = 0.2e-3;
+
+/// Per-session TLS state carried by a connection.
+#[derive(Debug, Clone)]
+pub struct TlsSession {
+    pub version: TlsVersion,
+    pub established: bool,
+    /// Whether a resumption ticket is cached for this destination.
+    pub has_ticket: bool,
+}
+
+impl TlsSession {
+    pub fn new(version: TlsVersion) -> TlsSession {
+        TlsSession {
+            version,
+            established: false,
+            has_ticket: false,
+        }
+    }
+
+    /// Which handshake the next establishment would use.
+    pub fn next_handshake(&self) -> TlsHandshake {
+        if self.has_ticket {
+            TlsHandshake::Resumed(self.version)
+        } else {
+            TlsHandshake::Full(self.version)
+        }
+    }
+
+    /// Perform a handshake: returns its duration and records the ticket.
+    pub fn establish(&mut self, link: &Link, rng: &mut Rng) -> SimDuration {
+        let hs = self.next_handshake();
+        let d = handshake_duration(hs, link, rng);
+        self.established = true;
+        self.has_ticket = true;
+        d
+    }
+
+    /// Drop the session (e.g. connection died); the ticket survives — that
+    /// is precisely what makes freshen re-establishment cheap.
+    pub fn invalidate(&mut self) {
+        self.established = false;
+    }
+}
+
+/// Duration of a given handshake over a given link.
+pub fn handshake_duration(hs: TlsHandshake, link: &Link, rng: &mut Rng) -> SimDuration {
+    let (rtts, cpu) = match hs {
+        TlsHandshake::Full(TlsVersion::Tls12) => (2.0, FULL_HANDSHAKE_CPU),
+        TlsHandshake::Full(TlsVersion::Tls13) => (1.0, FULL_HANDSHAKE_CPU),
+        TlsHandshake::Resumed(_) => (1.0, RESUMED_HANDSHAKE_CPU),
+        TlsHandshake::ZeroRtt => (0.0, RESUMED_HANDSHAKE_CPU),
+    };
+    let mut t = cpu;
+    for _ in 0..rtts as u32 {
+        t += link.sample_rtt(rng);
+    }
+    SimDuration::from_secs_f64(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::Site;
+
+    fn quiet_link() -> Link {
+        let mut l = Site::Remote.link();
+        l.jitter_sigma = 0.0;
+        l
+    }
+
+    #[test]
+    fn tls12_costs_two_rtt_tls13_one() {
+        let link = quiet_link();
+        let mut rng = Rng::new(1);
+        let d12 = handshake_duration(TlsHandshake::Full(TlsVersion::Tls12), &link, &mut rng);
+        let d13 = handshake_duration(TlsHandshake::Full(TlsVersion::Tls13), &link, &mut rng);
+        assert!((d12.as_secs_f64() - (2.0 * link.rtt + FULL_HANDSHAKE_CPU)).abs() < 1e-9);
+        assert!((d13.as_secs_f64() - (link.rtt + FULL_HANDSHAKE_CPU)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resumption_is_cheaper_and_sticky() {
+        let link = quiet_link();
+        let mut rng = Rng::new(2);
+        let mut sess = TlsSession::new(TlsVersion::Tls12);
+        assert_eq!(sess.next_handshake(), TlsHandshake::Full(TlsVersion::Tls12));
+        let d_full = sess.establish(&link, &mut rng);
+        sess.invalidate();
+        assert_eq!(
+            sess.next_handshake(),
+            TlsHandshake::Resumed(TlsVersion::Tls12)
+        );
+        let d_resumed = sess.establish(&link, &mut rng);
+        assert!(d_resumed < d_full);
+        assert!((d_resumed.as_secs_f64() - (link.rtt + RESUMED_HANDSHAKE_CPU)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_rtt_is_cpu_only() {
+        let link = quiet_link();
+        let mut rng = Rng::new(3);
+        let d = handshake_duration(TlsHandshake::ZeroRtt, &link, &mut rng);
+        assert!(d.as_secs_f64() < 1e-3);
+    }
+}

@@ -1,0 +1,280 @@
+//! The `warm_cwnd` syscall model (§3.2 "Connection warming").
+//!
+//! The paper proposes a new system call through which freshen sets a
+//! connection's congestion window before the function runs. The final CWND
+//! value — and whether warming is permitted at all — is decided by the
+//! *provider* (the host kernel), based on an estimate of path capacity:
+//! packet-pair probing [Keshav '95] or the CWND of recent connections to the
+//! same destination.
+
+use crate::netsim::cc::MSS;
+use crate::netsim::link::Link;
+use crate::netsim::tcp::{Connection, TransferDirection};
+use crate::util::rng::Rng;
+use crate::util::time::{SimDuration, SimTime};
+
+/// Provider-side policy for `warm_cwnd` requests.
+#[derive(Debug, Clone)]
+pub struct WarmPolicy {
+    /// Master switch: the host provider may disallow warming entirely.
+    pub allowed: bool,
+    /// Hard cap on the granted window, as a multiple of the path BDP
+    /// estimate (prevents a tenant from pre-loading an abusive burst).
+    pub max_bdp_fraction: f64,
+    /// Absolute cap in bytes regardless of BDP.
+    pub max_bytes: f64,
+}
+
+impl Default for WarmPolicy {
+    fn default() -> WarmPolicy {
+        WarmPolicy {
+            allowed: true,
+            max_bdp_fraction: 1.0,
+            max_bytes: 16.0 * 1024.0 * 1024.0,
+        }
+    }
+}
+
+/// Outcome of a `warm_cwnd` call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WarmOutcome {
+    /// Window set to this many bytes.
+    Granted(f64),
+    /// Provider policy refused; window unchanged.
+    Denied,
+}
+
+/// Packet-pair bandwidth probe: sends two back-to-back MSS segments and
+/// derives the bottleneck bandwidth from their spacing at the receiver.
+/// Returns `(probe_duration, bandwidth_estimate_bytes_per_sec)`. The
+/// estimate carries measurement noise.
+pub fn packet_pair_probe(link: &Link, rng: &mut Rng) -> (SimDuration, f64) {
+    // Two segments + echo: one RTT plus double serialization.
+    let rtt = link.sample_rtt(rng);
+    let dur = rtt + 2.0 * link.serialize(MSS);
+    // Dispersion-based estimate: true bandwidth with ~10% multiplicative
+    // noise (receiver timestamping granularity).
+    let estimate = link.bandwidth * rng.lognormal(0.0, 0.10);
+    (SimDuration::from_secs_f64(dur), estimate)
+}
+
+/// History of recently-observed CWND values per destination — the paper's
+/// second estimation strategy ("analyzing the CWND of recent similar TCP
+/// connections to the same destination").
+#[derive(Debug, Clone, Default)]
+pub struct CwndHistory {
+    samples: Vec<(SimTime, f64)>,
+    cap: usize,
+}
+
+impl CwndHistory {
+    pub fn new() -> CwndHistory {
+        CwndHistory {
+            samples: Vec::new(),
+            cap: 32,
+        }
+    }
+
+    pub fn record(&mut self, at: SimTime, cwnd: f64) {
+        self.samples.push((at, cwnd));
+        if self.samples.len() > self.cap {
+            self.samples.remove(0);
+        }
+    }
+
+    /// Median of samples within `window` of `now`; `None` if no history.
+    pub fn recent_estimate(&self, now: SimTime, window: SimDuration) -> Option<f64> {
+        let mut xs: Vec<f64> = self
+            .samples
+            .iter()
+            .filter(|(t, _)| now.since(*t) <= window)
+            .map(|(_, w)| *w)
+            .collect();
+        if xs.is_empty() {
+            return None;
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(xs[xs.len() / 2])
+    }
+}
+
+/// The `warm_cwnd` syscall: ask the provider to set `conn`'s send window
+/// for `dir` to sustain `anticipated_bytes`. The provider estimates path
+/// capacity (history first, probe as fallback), clamps by policy, and
+/// applies. Returns the outcome and the wall time the call consumed
+/// (probing is not free — freshen pays it off the critical path).
+pub fn warm_cwnd(
+    conn: &mut Connection,
+    dir: TransferDirection,
+    anticipated_bytes: f64,
+    policy: &WarmPolicy,
+    history: &mut CwndHistory,
+    now: SimTime,
+    rng: &mut Rng,
+) -> (WarmOutcome, SimDuration) {
+    if !policy.allowed {
+        return (WarmOutcome::Denied, SimDuration::ZERO);
+    }
+    // Capacity estimate: recent-connection history, else packet-pair probe.
+    let (bw_est, probe_time) =
+        match history.recent_estimate(now, SimDuration::from_secs(60)) {
+            Some(w) => (w / conn.link.rtt, SimDuration::ZERO),
+            None => {
+                let (d, bw) = packet_pair_probe(&conn.link, rng);
+                (bw, d)
+            }
+        };
+    let bdp_est = bw_est * conn.link.rtt;
+    let target = anticipated_bytes
+        .min(bdp_est * policy.max_bdp_fraction)
+        .min(policy.max_bytes)
+        .max(Connection::initial_cwnd());
+    let cc = match dir {
+        TransferDirection::Upload => &mut conn.cc_tx,
+        TransferDirection::Download => &mut conn.cc_rx,
+    };
+    cc.set_cwnd(target);
+    history.record(now, target);
+    (WarmOutcome::Granted(target), probe_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cc::CongestionControl;
+    use crate::netsim::link::Site;
+
+    fn conn() -> Connection {
+        let mut link = Site::Remote.link();
+        link.jitter_sigma = 0.0;
+        Connection::new(link, CongestionControl::Cubic)
+    }
+
+    #[test]
+    fn warm_grows_window_and_speeds_transfer() {
+        let mut rng = Rng::new(1);
+        let mut c = conn();
+        c.connect(SimTime::ZERO, &mut rng);
+        let w0 = c.cwnd(TransferDirection::Upload);
+        let mut hist = CwndHistory::new();
+        let (outcome, _) = warm_cwnd(
+            &mut c,
+            TransferDirection::Upload,
+            8e6,
+            &WarmPolicy::default(),
+            &mut hist,
+            SimTime(1),
+            &mut rng,
+        );
+        match outcome {
+            WarmOutcome::Granted(w) => assert!(w > 10.0 * w0, "granted {w}"),
+            WarmOutcome::Denied => panic!("should grant"),
+        }
+        // Warmed transfer is faster than a cold one.
+        let t_warm = c.send_with_ack(SimTime(2), &mut rng, 5e6, 0.0);
+        let mut cold = conn();
+        cold.connect(SimTime::ZERO, &mut rng);
+        let t_cold = cold.send_with_ack(SimTime(2), &mut rng, 5e6, 0.0);
+        assert!(t_warm.as_secs_f64() < 0.6 * t_cold.as_secs_f64());
+    }
+
+    #[test]
+    fn policy_denies_when_disallowed() {
+        let mut rng = Rng::new(2);
+        let mut c = conn();
+        c.connect(SimTime::ZERO, &mut rng);
+        let w0 = c.cwnd(TransferDirection::Upload);
+        let mut hist = CwndHistory::new();
+        let policy = WarmPolicy {
+            allowed: false,
+            ..WarmPolicy::default()
+        };
+        let (outcome, d) = warm_cwnd(
+            &mut c,
+            TransferDirection::Upload,
+            8e6,
+            &policy,
+            &mut hist,
+            SimTime(1),
+            &mut rng,
+        );
+        assert_eq!(outcome, WarmOutcome::Denied);
+        assert_eq!(d, SimDuration::ZERO);
+        assert_eq!(c.cwnd(TransferDirection::Upload), w0);
+    }
+
+    #[test]
+    fn policy_caps_by_bdp_fraction() {
+        let mut rng = Rng::new(3);
+        let mut c = conn();
+        c.connect(SimTime::ZERO, &mut rng);
+        let mut hist = CwndHistory::new();
+        let policy = WarmPolicy {
+            allowed: true,
+            max_bdp_fraction: 0.1,
+            max_bytes: 1e12,
+        };
+        let (outcome, _) = warm_cwnd(
+            &mut c,
+            TransferDirection::Upload,
+            1e12,
+            &policy,
+            &mut hist,
+            SimTime(1),
+            &mut rng,
+        );
+        let bdp = c.link.bdp_bytes();
+        match outcome {
+            WarmOutcome::Granted(w) => {
+                assert!(w <= bdp * 0.1 * 1.5, "w={w} bdp={bdp}"); // probe noise slack
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn history_avoids_probe_cost() {
+        let mut rng = Rng::new(4);
+        let mut c = conn();
+        c.connect(SimTime::ZERO, &mut rng);
+        let mut hist = CwndHistory::new();
+        // First call probes (non-zero duration)...
+        let (_, d1) = warm_cwnd(
+            &mut c,
+            TransferDirection::Upload,
+            8e6,
+            &WarmPolicy::default(),
+            &mut hist,
+            SimTime(1),
+            &mut rng,
+        );
+        assert!(d1 > SimDuration::ZERO);
+        // ...second call within the window uses history (free).
+        let (_, d2) = warm_cwnd(
+            &mut c,
+            TransferDirection::Upload,
+            8e6,
+            &WarmPolicy::default(),
+            &mut hist,
+            SimTime(2),
+            &mut rng,
+        );
+        assert_eq!(d2, SimDuration::ZERO);
+    }
+
+    #[test]
+    fn history_estimate_windows() {
+        let mut h = CwndHistory::new();
+        h.record(SimTime(0), 100.0);
+        h.record(SimTime(1_000_000), 200.0);
+        let now = SimTime(2_000_000);
+        assert_eq!(
+            h.recent_estimate(now, SimDuration::from_secs(10)),
+            Some(200.0)
+        );
+        assert_eq!(
+            h.recent_estimate(now, SimDuration::from_millis(500)),
+            None
+        );
+    }
+}

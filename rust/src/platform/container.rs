@@ -1,0 +1,242 @@
+//! Containers and the in-container language runtime.
+//!
+//! OpenWhisk semantics (§2): a Docker container hosts a persistent language
+//! runtime listening for hooks. `init` loads the function code; `run`
+//! executes an invocation; our added `freshen` hook runs proactive work.
+//! State held in [`RuntimeEnv`] is **runtime-scoped** — it survives across
+//! invocations in the same container (connections, prefetched data,
+//! `fr_state`) and is destroyed on eviction.
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::freshen::cache::FreshenCache;
+use crate::freshen::state::FrState;
+use crate::netsim::tcp::Connection;
+use crate::netsim::tls::TlsSession;
+use crate::platform::function::FunctionId;
+use crate::util::time::SimTime;
+
+/// Dense container identifier (index into the world's container table).
+pub type ContainerId = usize;
+
+/// Container lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    /// Being provisioned + `init` (a cold start in progress).
+    Initializing,
+    /// Runtime is live and idle; a `run` dispatch is a warm start.
+    Warm,
+    /// Currently executing an invocation.
+    Busy,
+    /// Torn down; slot reusable.
+    Evicted,
+}
+
+/// Runtime-scoped state: everything the language runtime keeps alive
+/// between invocations (§2 "runtime-scoped variables").
+#[derive(Debug, Clone, Default)]
+pub struct RuntimeEnv {
+    /// Persistent connections per endpoint (the paper's canonical use of
+    /// runtime scoping).
+    pub connections: FxHashMap<String, Connection>,
+    /// TLS sessions per endpoint (tickets survive reconnects).
+    pub tls: FxHashMap<String, TlsSession>,
+    /// The freshen resource list shared by hook and wrappers.
+    pub fr_state: FrState,
+    /// The freshen prefetch cache.
+    pub cache: FreshenCache,
+    /// Count of invocations served by this runtime.
+    pub invocations: u64,
+}
+
+impl RuntimeEnv {
+    pub fn new() -> RuntimeEnv {
+        RuntimeEnv::default()
+    }
+
+    /// Wipe everything (container recycled / evicted).
+    pub fn reset(&mut self) {
+        self.connections.clear();
+        self.tls.clear();
+        self.fr_state = FrState::new();
+        self.cache.clear();
+        self.invocations = 0;
+    }
+}
+
+/// A container slot on an invoker host.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: ContainerId,
+    /// Host this container lives on.
+    pub invoker: usize,
+    /// Function whose code was `init`ed into the runtime. Containers are
+    /// per-function unless the platform allows sharing (§2, [13]).
+    pub function: Option<FunctionId>,
+    /// Owning application (set at cold start; under per-app isolation a
+    /// warm container may be re-inited for any sibling function).
+    pub app: Option<String>,
+    pub state: ContainerState,
+    pub runtime: RuntimeEnv,
+    pub created_at: SimTime,
+    pub last_used: SimTime,
+    /// Statistics.
+    pub cold_starts: u32,
+    pub warm_starts: u32,
+    /// Freshen runs executed in this container.
+    pub freshen_runs: u32,
+}
+
+impl Container {
+    pub fn new(id: ContainerId, invoker: usize, now: SimTime) -> Container {
+        Container {
+            id,
+            invoker,
+            function: None,
+            app: None,
+            state: ContainerState::Evicted,
+            runtime: RuntimeEnv::new(),
+            created_at: now,
+            last_used: now,
+            cold_starts: 0,
+            warm_starts: 0,
+            freshen_runs: 0,
+        }
+    }
+
+    /// Begin a cold start for `function` of `app` (provision + `init`).
+    pub fn begin_cold_start(&mut self, function: &str, now: SimTime) {
+        self.begin_cold_start_for_app(function, "", now)
+    }
+
+    /// Cold start with explicit app attribution (per-app isolation needs
+    /// the app on the container).
+    pub fn begin_cold_start_for_app(&mut self, function: &str, app: &str, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Evicted);
+        self.runtime.reset();
+        self.function = Some(function.to_string());
+        self.app = if app.is_empty() {
+            None
+        } else {
+            Some(app.to_string())
+        };
+        self.state = ContainerState::Initializing;
+        self.created_at = now;
+        self.last_used = now;
+        self.cold_starts += 1;
+    }
+
+    /// `init` finished: the runtime is live.
+    pub fn finish_init(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Initializing);
+        self.state = ContainerState::Warm;
+        self.last_used = now;
+    }
+
+    /// Dispatch an invocation (warm start).
+    pub fn begin_run(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Warm);
+        self.state = ContainerState::Busy;
+        self.warm_starts += 1;
+        self.last_used = now;
+        self.runtime.invocations += 1;
+    }
+
+    /// Invocation complete: back to warm.
+    pub fn finish_run(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Busy);
+        self.state = ContainerState::Warm;
+        self.last_used = now;
+    }
+
+    /// Evict: destroy runtime-scoped state.
+    pub fn evict(&mut self) {
+        self.state = ContainerState::Evicted;
+        self.function = None;
+        self.app = None;
+        self.runtime.reset();
+    }
+
+    /// Per-app isolation (§6): swap which sibling function's code the live
+    /// runtime hosts. Keeps connections and the freshen cache (shared
+    /// runtime scope); clears `fr_state` (its indices are positional per
+    /// function body).
+    pub fn reinit_for(&mut self, function: &str, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Warm);
+        self.function = Some(function.to_string());
+        self.runtime.fr_state = crate::freshen::state::FrState::new();
+        self.last_used = now;
+    }
+
+    /// Is this container warm and owned by `app` (any function)?
+    pub fn warm_for_app(&self, app: &str) -> bool {
+        self.state == ContainerState::Warm && self.app.as_deref() == Some(app)
+    }
+
+    /// Can this container serve `function` warm right now?
+    pub fn warm_for(&self, function: &str) -> bool {
+        self.state == ContainerState::Warm && self.function.as_deref() == Some(function)
+    }
+
+    /// Idle duration (only meaningful for warm containers).
+    pub fn idle_for(&self, now: SimTime) -> crate::util::time::SimDuration {
+        now.since(self.last_used)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::SimDuration;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn lifecycle() {
+        let mut c = Container::new(0, 0, t(0));
+        assert_eq!(c.state, ContainerState::Evicted);
+        c.begin_cold_start("f1", t(0));
+        assert_eq!(c.state, ContainerState::Initializing);
+        assert!(!c.warm_for("f1"));
+        c.finish_init(t(1));
+        assert!(c.warm_for("f1"));
+        assert!(!c.warm_for("f2"));
+        c.begin_run(t(2));
+        assert_eq!(c.state, ContainerState::Busy);
+        c.finish_run(t(3));
+        assert!(c.warm_for("f1"));
+        assert_eq!(c.cold_starts, 1);
+        assert_eq!(c.warm_starts, 1);
+        assert_eq!(c.runtime.invocations, 1);
+    }
+
+    #[test]
+    fn eviction_destroys_runtime_state() {
+        let mut c = Container::new(0, 0, t(0));
+        c.begin_cold_start("f1", t(0));
+        c.finish_init(t(1));
+        c.runtime.cache.put(
+            "store",
+            "m",
+            1,
+            100.0,
+            SimDuration::from_secs(60),
+            t(1),
+        );
+        assert_eq!(c.runtime.cache.len(), 1);
+        c.evict();
+        assert_eq!(c.state, ContainerState::Evicted);
+        assert!(c.function.is_none());
+        assert_eq!(c.runtime.cache.len(), 0);
+    }
+
+    #[test]
+    fn idle_tracking() {
+        let mut c = Container::new(0, 0, t(0));
+        c.begin_cold_start("f", t(0));
+        c.finish_init(t(1));
+        assert_eq!(c.idle_for(t(11)), SimDuration::from_secs(10));
+    }
+}

@@ -1,0 +1,130 @@
+//! Versioned object store (the S3-like datastore behind `DataGet`/`DataPut`).
+//!
+//! Objects carry a monotonically-increasing version and a size; the version
+//! is what the freshen cache compares against to detect staleness ("an
+//! object stored within the runtime may need to be retrieved from a
+//! datastore because a newer version is available", §2).
+
+use std::collections::HashMap;
+
+use crate::util::time::SimTime;
+
+/// One stored object's metadata (we simulate payloads by size only).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoredObject {
+    pub version: u64,
+    pub bytes: f64,
+    pub modified: SimTime,
+}
+
+/// A named object store.
+#[derive(Debug, Clone, Default)]
+pub struct ObjectStore {
+    objects: HashMap<String, StoredObject>,
+    /// Operation counters (metrics / billing).
+    pub gets: u64,
+    pub puts: u64,
+    pub heads: u64,
+}
+
+impl ObjectStore {
+    pub fn new() -> ObjectStore {
+        ObjectStore::default()
+    }
+
+    /// Create or overwrite an object; bumps the version.
+    pub fn put(&mut self, id: &str, bytes: f64, now: SimTime) -> u64 {
+        self.puts += 1;
+        let entry = self.objects.entry(id.to_string()).or_insert(StoredObject {
+            version: 0,
+            bytes,
+            modified: now,
+        });
+        entry.version += 1;
+        entry.bytes = bytes;
+        entry.modified = now;
+        entry.version
+    }
+
+    /// Full fetch: returns the object (None if missing).
+    pub fn get(&mut self, id: &str) -> Option<StoredObject> {
+        self.gets += 1;
+        self.objects.get(id).copied()
+    }
+
+    /// Metadata-only check (a HEAD request): cheap version probe used by
+    /// freshen to validate cached copies.
+    pub fn head(&mut self, id: &str) -> Option<u64> {
+        self.heads += 1;
+        self.objects.get(id).map(|o| o.version)
+    }
+
+    /// Read without counting (test/assert helper).
+    pub fn peek(&self, id: &str) -> Option<StoredObject> {
+        self.objects.get(id).copied()
+    }
+
+    /// Simulate an external writer updating the object out-of-band — the
+    /// staleness scenario of §2.
+    pub fn external_update(&mut self, id: &str, bytes: f64, now: SimTime) -> u64 {
+        let entry = self.objects.entry(id.to_string()).or_insert(StoredObject {
+            version: 0,
+            bytes,
+            modified: now,
+        });
+        entry.version += 1;
+        entry.bytes = bytes;
+        entry.modified = now;
+        entry.version
+    }
+
+    pub fn len(&self) -> usize {
+        self.objects.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.objects.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_bumps_version() {
+        let mut s = ObjectStore::new();
+        let v1 = s.put("model", 5e6, SimTime(0));
+        let v2 = s.put("model", 6e6, SimTime(1));
+        assert_eq!((v1, v2), (1, 2));
+        let obj = s.get("model").unwrap();
+        assert_eq!(obj.version, 2);
+        assert_eq!(obj.bytes, 6e6);
+    }
+
+    #[test]
+    fn head_is_cheap_version_probe() {
+        let mut s = ObjectStore::new();
+        s.put("a", 1.0, SimTime(0));
+        assert_eq!(s.head("a"), Some(1));
+        assert_eq!(s.head("zzz"), None);
+        assert_eq!(s.heads, 2);
+        assert_eq!(s.gets, 0);
+    }
+
+    #[test]
+    fn missing_object_is_none() {
+        let mut s = ObjectStore::new();
+        assert!(s.get("nope").is_none());
+        assert_eq!(s.gets, 1);
+    }
+
+    #[test]
+    fn external_update_invalidates_cached_versions() {
+        let mut s = ObjectStore::new();
+        s.put("m", 1.0, SimTime(0));
+        let cached_version = s.peek("m").unwrap().version;
+        s.external_update("m", 2.0, SimTime(5));
+        assert!(s.peek("m").unwrap().version > cached_version);
+    }
+}

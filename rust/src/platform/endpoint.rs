@@ -1,0 +1,101 @@
+//! Remote service endpoints.
+//!
+//! An [`Endpoint`] is a named remote service — the file/model server or
+//! datastore the paper's functions talk to — placed behind a network link
+//! ([`crate::netsim::link`]) at one of the evaluation's sites (local /
+//! edge / remote) with a versioned [`ObjectStore`] and a per-request server
+//! processing time.
+
+use crate::netsim::cc::CongestionControl;
+use crate::netsim::link::{Link, Site};
+use crate::netsim::tcp::Connection;
+use crate::netsim::tls::{TlsSession, TlsVersion};
+use crate::netsim::warm::CwndHistory;
+use crate::platform::datastore::ObjectStore;
+
+/// A remote service the platform's functions use.
+#[derive(Debug, Clone)]
+pub struct Endpoint {
+    pub id: String,
+    pub link: Link,
+    pub store: ObjectStore,
+    /// Per-request server processing time, seconds.
+    pub server_time: f64,
+    /// Whether connections to this endpoint use TLS (and which version).
+    pub tls: Option<TlsVersion>,
+    /// Server-side idle timeout in seconds (connections idle longer die).
+    pub idle_timeout: f64,
+    /// Host-wide history of window sizes toward this endpoint (feeds
+    /// `warm_cwnd`'s recent-connection estimate).
+    pub cwnd_history: CwndHistory,
+    /// Congestion control used for connections to this endpoint.
+    pub cc: CongestionControl,
+}
+
+impl Endpoint {
+    pub fn new(id: &str, site: Site) -> Endpoint {
+        Endpoint {
+            id: id.to_string(),
+            link: site.link(),
+            store: ObjectStore::new(),
+            server_time: 1.0e-3,
+            tls: None,
+            idle_timeout: crate::netsim::tcp::DEFAULT_IDLE_TIMEOUT,
+            cwnd_history: CwndHistory::new(),
+            cc: CongestionControl::Cubic,
+        }
+    }
+
+    pub fn with_tls(mut self, version: TlsVersion) -> Endpoint {
+        self.tls = Some(version);
+        self
+    }
+
+    pub fn with_link(mut self, link: Link) -> Endpoint {
+        self.link = link;
+        self
+    }
+
+    pub fn with_server_time(mut self, seconds: f64) -> Endpoint {
+        self.server_time = seconds;
+        self
+    }
+
+    /// Build a fresh (closed) connection object toward this endpoint.
+    pub fn new_connection(&self) -> Connection {
+        let mut c = Connection::new(self.link.clone(), self.cc);
+        c.idle_timeout = self.idle_timeout;
+        c
+    }
+
+    /// Build the TLS session object if this endpoint uses TLS.
+    pub fn new_tls_session(&self) -> Option<TlsSession> {
+        self.tls.map(TlsSession::new)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_builders() {
+        let e = Endpoint::new("store", Site::Remote)
+            .with_tls(TlsVersion::Tls13)
+            .with_server_time(0.002);
+        assert_eq!(e.id, "store");
+        assert_eq!(e.server_time, 0.002);
+        assert!(e.new_tls_session().is_some());
+        let plain = Endpoint::new("s2", Site::Local);
+        assert!(plain.new_tls_session().is_none());
+    }
+
+    #[test]
+    fn connections_inherit_endpoint_settings() {
+        let mut e = Endpoint::new("store", Site::Edge);
+        e.idle_timeout = 42.0;
+        let c = e.new_connection();
+        assert_eq!(c.idle_timeout, 42.0);
+        assert_eq!(c.link.name, "edge");
+    }
+}

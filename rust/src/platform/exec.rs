@@ -1,0 +1,1113 @@
+//! The event-driven executor: function bodies, the freshen hook, and their
+//! coordination through `fr_state`.
+//!
+//! This is where the paper's Figure 3 plays out. An invocation walks its
+//! ops one event at a time; a freshen run walks its hook's actions
+//! concurrently on the same container. Both sides use the wrapper decision
+//! logic of Algorithms 4/5 ([`crate::freshen::wrappers`]): whoever touches
+//! a resource first claims it (`Running`), the other side waits on the
+//! resource's wait list or consumes the finished result.
+//!
+//! Entry points:
+//! - [`invoke`] — submit an invocation (records arrival for predictors).
+//! - [`start_freshen`] — launch a freshen run on a function's container
+//!   (used by prediction admission, or directly by tests/examples).
+//! - [`emit_prediction`] — gate a prediction and, if admitted, schedule
+//!   the freshen and its accuracy-resolution bookkeeping.
+
+use crate::freshen::hooks::FreshenAction;
+use crate::freshen::state::{Completer, FrResult};
+use crate::freshen::wrappers::{fr_fetch_decision, fr_warm_decision, WrapperDecision};
+use crate::metrics::{InvocationRecord, StartKind};
+use crate::netsim::tcp::{ConnState, TransferDirection};
+use crate::netsim::warm::{warm_cwnd, WarmPolicy};
+use crate::platform::container::{ContainerId, ContainerState, RuntimeEnv};
+use crate::platform::endpoint::Endpoint;
+use crate::platform::function::Op;
+use crate::platform::world::{
+    FreshenRunCtx, InvocationCtx, InvocationId, PendingFreshenCharge, PlatformSim, World,
+};
+use crate::predict::confidence::DEFAULT_MATCH_WINDOW;
+use crate::predict::Prediction;
+use crate::util::rng::Rng;
+use crate::util::time::{SimDuration, SimTime};
+
+use crate::util::fxhash::FxHashMap;
+
+/// Local (in-runtime) access to already-present data, e.g. a prefetched
+/// object handed to the function: sub-millisecond runtime overhead.
+const LOCAL_ACCESS: SimDuration = SimDuration(50);
+/// Cost of committing a trigger request from inside a function.
+const TRIGGER_COMMIT: SimDuration = SimDuration(2_000);
+/// Request payload size for a `DataGet`.
+const REQUEST_BYTES: f64 = 256.0;
+/// Lead before a histogram-predicted invocation at which freshen starts.
+const HIST_LEAD: SimDuration = SimDuration(500_000); // 500 ms
+
+// ====================================================================
+// Invocation path
+// ====================================================================
+
+/// Submit an invocation of `function` now. Returns its id.
+pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> InvocationId {
+    let now = sim.now();
+    debug_assert!(
+        world.registry.function(function).is_some(),
+        "invoke of unknown function '{function}'"
+    );
+    // Arrival is a predictor observation and may confirm a prediction.
+    world.hist_pred.observe(function, now);
+    world.tracker.on_arrival(function, now);
+
+    let id = world.invocations.len();
+    world.invocations.push(InvocationCtx {
+        id,
+        function: function.to_string(),
+        container: None,
+        enqueued_at: now,
+        started_at: now,
+        op_idx: 0,
+        start_kind: StartKind::Warm,
+        freshen_hits: 0,
+        freshen_misses: 0,
+        done: false,
+    });
+    dispatch(sim, world, id);
+    id
+}
+
+/// Route the invocation to a container (or queue it).
+fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+    let now = sim.now();
+    let function = world.invocations[inv].function.clone();
+
+    if let Some(cid) = world.find_warm(&function) {
+        // Warm start: reserve immediately, body begins after dispatch cost.
+        world.containers[cid].begin_run(now);
+        let delay = world.config.warm_start;
+        sim.schedule(delay, move |sim, w| {
+            begin_body(sim, w, inv, cid, StartKind::Warm)
+        });
+        return;
+    }
+
+    // Per-app isolation (§6): a warm sibling container can be re-inited
+    // for this function at a fraction of a cold start, keeping its
+    // runtime-scoped connections and freshen cache.
+    if world.config.isolation == crate::util::config::IsolationScope::PerApp {
+        let app = app_of(world, &function);
+        let sibling = world
+            .containers
+            .iter()
+            .filter(|c| c.warm_for_app(&app))
+            .max_by_key(|c| c.last_used)
+            .map(|c| c.id);
+        if let Some(cid) = sibling {
+            world.containers[cid].reinit_for(&function, now);
+            world.containers[cid].begin_run(now);
+            world.metrics.reinits += 1;
+            let delay = world.config.warm_start + world.config.cold_start.mul_f64(0.25);
+            sim.schedule(delay, move |sim, w| {
+                begin_body(sim, w, inv, cid, StartKind::Warm)
+            });
+            return;
+        }
+    }
+
+    let slot = world.acquire_slot(now).or_else(|| {
+        if world.config.allow_container_sharing {
+            steal_lru_warm(world)
+        } else {
+            None
+        }
+    });
+
+    if let Some(cid) = slot {
+        let app = app_of(world, &function);
+        world.containers[cid].begin_cold_start_for_app(&function, &app, now);
+        let delay = world.config.cold_start;
+        sim.schedule(delay, move |sim, w| {
+            w.containers[cid].finish_init(sim.now());
+            w.containers[cid].begin_run(sim.now());
+            begin_body(sim, w, inv, cid, StartKind::Cold)
+        });
+        return;
+    }
+
+    // Cluster full: queue per function; drained on container release.
+    world.queues.entry(function).or_default().push_back(inv);
+}
+
+/// Evict the least-recently-used warm container (container sharing ON,
+/// §2 [13]: when sharing is allowed a busy cluster repurposes containers
+/// instead of queueing, trading someone's warm state away).
+fn steal_lru_warm(world: &mut World) -> Option<ContainerId> {
+    let victim = world
+        .containers
+        .iter()
+        .filter(|c| c.state == ContainerState::Warm)
+        .min_by_key(|c| c.last_used)?
+        .id;
+    world.containers[victim].evict();
+    world.metrics.evictions += 1;
+    Some(victim)
+}
+
+/// The container is ours and the runtime's `run` hook fired: walk the ops.
+fn begin_body(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    inv: InvocationId,
+    cid: ContainerId,
+    kind: StartKind,
+) {
+    let now = sim.now();
+    let function = world.invocations[inv].function.clone();
+    let (resource_count, prefetch_ttl) = {
+        let spec = world.registry.function(&function).expect("deployed");
+        (
+            spec.resource_count(),
+            spec.prefetch_ttl.unwrap_or(world.config.freshen.default_ttl),
+        )
+    };
+    {
+        let ctx = &mut world.invocations[inv];
+        ctx.container = Some(cid);
+        ctx.started_at = now;
+        ctx.start_kind = kind;
+    }
+    // (Re)build fr_state for this cycle, keeping still-fresh results.
+    world.containers[cid]
+        .runtime
+        .fr_state
+        .ensure_len(resource_count, prefetch_ttl, now);
+    step_op(sim, world, inv);
+}
+
+/// Execute the invocation's current op; schedules its own continuation.
+fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+    let now = sim.now();
+    let (function, op_idx, cid) = {
+        let ctx = &world.invocations[inv];
+        (
+            ctx.function.clone(),
+            ctx.op_idx,
+            ctx.container.expect("dispatched"),
+        )
+    };
+    // Rc handle: no per-step clone of op payloads (hot path; see §Perf).
+    let spec = world.registry.function_rc(&function).expect("deployed");
+    if op_idx >= spec.ops.len() {
+        finish_invocation(sim, world, inv);
+        return;
+    }
+    // Freshen-resource index of the current op, allocation-free.
+    let resource = if spec.ops[op_idx].endpoint().is_some() {
+        Some(
+            spec.ops[..op_idx]
+                .iter()
+                .filter(|o| o.endpoint().is_some())
+                .count(),
+        )
+    } else {
+        None
+    };
+
+    match &spec.ops[op_idx] {
+        Op::Compute { duration } => {
+            sim.schedule(*duration, move |sim, w| advance(sim, w, inv));
+        }
+        Op::Infer { model, .. } => {
+            let d = world.model_latency(model);
+            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+        }
+        Op::InvokeNext { function: next, trigger } => {
+            let trigger = *trigger;
+            // Commit the trigger: the next function starts after the
+            // trigger service's delay (Table 1)...
+            let delay = trigger.sample_delay(&mut world.rng);
+            let next_fn = next.clone();
+            sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
+                invoke(sim, w, &next_fn);
+            });
+            // A deterministic edge: record follow-through for the
+            // predictor's confidence model.
+            world.chain_pred.observe_edge(&function, next, true);
+            // ...and that same delay is freshen's prediction window: the
+            // platform knows `next` is imminent the moment the trigger
+            // commits (Figure 1).
+            let pred = world.chain_pred.predict_successor(
+                &function,
+                next,
+                trigger,
+                now + TRIGGER_COMMIT,
+            );
+            sim.schedule(TRIGGER_COMMIT, move |sim, w| {
+                emit_prediction(sim, w, pred.clone(), sim.now());
+            });
+            sim.schedule(TRIGGER_COMMIT, move |sim, w| advance(sim, w, inv));
+        }
+        Op::InvokeBranch { branches, trigger } => {
+            let trigger = *trigger;
+            // Non-deterministic chain (§6): sample the successor (or no
+            // successor when weights sum below 1). The platform does NOT
+            // know the outcome ahead of time — it predicts from observed
+            // branch frequencies, so some freshens are mispredictions the
+            // owner pays for (the billing story of §3.3).
+            let total: f64 = branches.iter().map(|(_, p)| *p).sum();
+            let roll = world.rng.f64();
+            let mut acc = 0.0;
+            let mut taken: Option<String> = None;
+            for (f, p) in branches.iter() {
+                acc += p;
+                if roll < acc {
+                    taken = Some(f.clone());
+                    break;
+                }
+            }
+            debug_assert!(total <= 1.0 + 1e-9, "branch weights exceed 1");
+            // Observe every edge's follow-through.
+            for (f, _) in branches.iter() {
+                world
+                    .chain_pred
+                    .observe_edge(&function, f, taken.as_deref() == Some(f.as_str()));
+            }
+            if let Some(next) = &taken {
+                let delay = trigger.sample_delay(&mut world.rng);
+                let next_fn = next.clone();
+                sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
+                    invoke(sim, w, &next_fn);
+                });
+            }
+            // Predict (and maybe freshen) every plausible branch — the
+            // learned branch confidence gates which ones are worth it.
+            for (f, _) in branches.iter() {
+                let pred = world.chain_pred.predict_successor(
+                    &function,
+                    f,
+                    trigger,
+                    now + TRIGGER_COMMIT,
+                );
+                sim.schedule(TRIGGER_COMMIT, move |sim, w| {
+                    emit_prediction(sim, w, pred.clone(), sim.now());
+                });
+            }
+            sim.schedule(TRIGGER_COMMIT, move |sim, w| advance(sim, w, inv));
+        }
+        Op::DataGet {
+            endpoint,
+            object_id,
+            ..
+        } => {
+            let r = resource.expect("DataGet is a resource op");
+            let obj = object_id
+                .const_value()
+                .map(str::to_string)
+                // Param-derived ids resolve at run time; simulate with a
+                // per-invocation unique key (never prefetchable).
+                .unwrap_or_else(|| format!("param:{inv}"));
+            exec_data_get(sim, world, inv, cid, r, endpoint.clone(), obj);
+        }
+        Op::DataPut {
+            endpoint,
+            object_id,
+            bytes,
+            ..
+        } => {
+            let r = resource.expect("DataPut is a resource op");
+            let obj = object_id
+                .const_value()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("param:{inv}"));
+            exec_data_put(sim, world, inv, cid, r, endpoint.clone(), obj, *bytes);
+        }
+    }
+}
+
+fn advance(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+    world.invocations[inv].op_idx += 1;
+    step_op(sim, world, inv);
+}
+
+/// `FrFetch(r, DataGet(...))` — Algorithm 4 over the simulator substrate.
+fn exec_data_get(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    inv: InvocationId,
+    cid: ContainerId,
+    r: usize,
+    endpoint: String,
+    object_id: String,
+) {
+    let now = sim.now();
+    let live_version = if world.strict_versions {
+        world
+            .endpoints
+            .get(&endpoint)
+            .and_then(|e| e.store.peek(&object_id))
+            .map(|o| o.version)
+    } else {
+        None
+    };
+    let entry = world.containers[cid]
+        .runtime
+        .fr_state
+        .get_mut(r)
+        .expect("fr_state sized in begin_body");
+    match fr_fetch_decision(entry, now, live_version) {
+        WrapperDecision::UseResult(FrResult::Data { bytes, .. }) => {
+            // Freshen already fetched it: local handoff only.
+            world.invocations[inv].freshen_hits += 1;
+            let app = world
+                .registry
+                .function(&world.invocations[inv].function)
+                .map(|f| f.app.clone())
+                .unwrap_or_default();
+            world.ledger.credit_network_saved(&app, bytes);
+            sim.schedule(LOCAL_ACCESS, move |sim, w| advance(sim, w, inv));
+        }
+        WrapperDecision::UseResult(_) => {
+            // Defensive: a fetch resource finished without data (a
+            // mis-authored developer hook could do this). The connection
+            // may be warm but the data must still be fetched — do it,
+            // without touching the entry.
+            world.invocations[inv].freshen_misses += 1;
+            let (d, result) = do_fetch(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                &object_id,
+                now,
+            );
+            charge_transfer(world, inv, &result);
+            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+        }
+        WrapperDecision::Wait => {
+            // FrWait: park until the freshen thread finishes this resource.
+            world
+                .fr_waiters
+                .entry((cid, r))
+                .or_default()
+                .wait(move |sim, w| exec_retry_get(sim, w, inv));
+        }
+        WrapperDecision::DoItYourself => {
+            world.invocations[inv].freshen_misses += 1;
+            // Check the cross-invocation freshen cache before the network.
+            let ttl = prefetch_ttl(world, inv);
+            let cache_hit = world.containers[cid].runtime.cache.get(
+                &endpoint,
+                &object_id,
+                now,
+                live_version,
+            );
+            if let Some(cached) = cache_hit {
+                let result = FrResult::Data {
+                    object_id: object_id.clone(),
+                    version: cached.version,
+                    bytes: cached.bytes,
+                };
+                sim.schedule(LOCAL_ACCESS, move |sim, w| {
+                    finish_resource(sim, w, cid, r, result.clone(), Completer::Function);
+                    advance(sim, w, inv)
+                });
+                return;
+            }
+            // Real fetch over the (possibly cold/dead) connection.
+            let (d, result) = do_fetch(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                &object_id,
+                now,
+            );
+            charge_transfer(world, inv, &result);
+            let ep = endpoint.clone();
+            sim.schedule(d, move |sim, w| {
+                if let FrResult::Data { version, bytes, .. } = &result {
+                    w.containers[cid].runtime.cache.put(
+                        &ep, &object_id, *version, *bytes, ttl, sim.now(),
+                    );
+                }
+                finish_resource(sim, w, cid, r, result.clone(), Completer::Function);
+                advance(sim, w, inv)
+            });
+        }
+    }
+}
+
+/// Re-entry after an `FrWait` on a fetch resource: the entry is now
+/// finished; consume it (or redo on failure).
+fn exec_retry_get(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+    // Re-run the decision from scratch; the entry is Finished now, so this
+    // lands in UseResult (or DoItYourself if the freshen failed).
+    step_op(sim, world, inv);
+}
+
+/// `FrWarm(r, DataPut(...))` — Algorithm 5. The put itself always runs;
+/// what freshen buys is a live, cwnd-warmed connection.
+fn exec_data_put(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    inv: InvocationId,
+    cid: ContainerId,
+    r: usize,
+    endpoint: String,
+    object_id: String,
+    bytes: f64,
+) {
+    let now = sim.now();
+    let entry = world.containers[cid]
+        .runtime
+        .fr_state
+        .get_mut(r)
+        .expect("fr_state sized");
+    match fr_warm_decision(entry, now) {
+        WrapperDecision::UseResult(_) => {
+            world.invocations[inv].freshen_hits += 1;
+            // Connection is live and warm: straight to the transfer.
+            let d = do_put(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                &object_id,
+                bytes,
+                now,
+            );
+            charge_bytes(world, inv, bytes);
+            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+        }
+        WrapperDecision::Wait => {
+            world
+                .fr_waiters
+                .entry((cid, r))
+                .or_default()
+                .wait(move |sim, w| step_op(sim, w, inv));
+        }
+        WrapperDecision::DoItYourself => {
+            world.invocations[inv].freshen_misses += 1;
+            let d = do_put(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                &object_id,
+                bytes,
+                now,
+            );
+            charge_bytes(world, inv, bytes);
+            sim.schedule(d, move |sim, w| {
+                finish_resource(sim, w, cid, r, FrResult::Warmed, Completer::Function);
+                advance(sim, w, inv)
+            });
+        }
+    }
+}
+
+/// Complete `fr_state[(cid, r)]` and wake any parked waiters.
+fn finish_resource(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    cid: ContainerId,
+    r: usize,
+    result: FrResult,
+    by: Completer,
+) {
+    let now = sim.now();
+    if let Some(entry) = world.containers[cid].runtime.fr_state.get_mut(r) {
+        entry.finish(result, now, by);
+    }
+    if let Some(mut list) = world.fr_waiters.remove(&(cid, r)) {
+        list.wake_all(sim);
+    }
+}
+
+/// Invocation complete: metrics, billing, container release, queue drain.
+fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+    let now = sim.now();
+    let (function, cid) = {
+        let ctx = &mut world.invocations[inv];
+        ctx.done = true;
+        (ctx.function.clone(), ctx.container.expect("dispatched"))
+    };
+    let ctx = world.invocations[inv].clone();
+    world.metrics.record(InvocationRecord {
+        function: function.clone(),
+        enqueued_at: ctx.enqueued_at,
+        started_at: ctx.started_at,
+        finished_at: now,
+        start_kind: ctx.start_kind,
+        freshen_hits: ctx.freshen_hits,
+        freshen_misses: ctx.freshen_misses,
+    });
+    let (app, memory_mb) = {
+        let spec = world.registry.function(&function).expect("deployed");
+        (spec.app.clone(), spec.memory_mb)
+    };
+    world
+        .ledger
+        .charge_execution(&app, memory_mb, now.since(ctx.started_at));
+    world.containers[cid].finish_run(now);
+
+    // Standalone-function prediction: after each completed invocation,
+    // consult the IAT histogram and (if confident) pre-arm a freshen just
+    // before the expected next arrival.
+    if world.auto_hist_predict {
+        if let Some(pred) = world.hist_pred.predict_next(&function, now) {
+            let start_at =
+                SimTime(pred.expected_at.micros().saturating_sub(HIST_LEAD.micros())).max(now);
+            emit_prediction(sim, world, pred, start_at);
+        }
+    }
+
+    // Drain this function's queue onto the now-warm container.
+    if let Some(next) = world
+        .queues
+        .get_mut(&function)
+        .and_then(|q| q.pop_front())
+    {
+        world.containers[cid].begin_run(now);
+        let delay = world.config.warm_start;
+        sim.schedule(delay, move |sim, w| {
+            begin_body(sim, w, next, cid, StartKind::Warm)
+        });
+        return;
+    }
+    // Otherwise schedule the idle-eviction check.
+    let idle = world.config.idle_eviction;
+    sim.schedule(idle, move |sim, w| {
+        let c = &w.containers[cid];
+        if c.state == ContainerState::Warm && c.idle_for(sim.now()) >= idle {
+            w.containers[cid].evict();
+            w.metrics.evictions += 1;
+            // The freed slot may unblock a queued invocation of another
+            // function.
+            redispatch_pending(sim, w);
+        }
+    });
+}
+
+/// Pop one queued invocation (any function) and retry its dispatch; used
+/// when capacity frees up. A failed retry simply re-queues, so this never
+/// spins.
+fn redispatch_pending(sim: &mut PlatformSim, world: &mut World) {
+    let key = world
+        .queues
+        .iter()
+        .find(|(_, q)| !q.is_empty())
+        .map(|(k, _)| k.clone());
+    if let Some(k) = key {
+        if let Some(inv) = world.queues.get_mut(&k).and_then(|q| q.pop_front()) {
+            dispatch(sim, world, inv);
+        }
+    }
+}
+
+// ====================================================================
+// Freshen path
+// ====================================================================
+
+/// Gate a prediction; when admitted, register it with the tracker (for
+/// hit/miss billing) and schedule the freshen run at `start_at`.
+pub fn emit_prediction(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    pred: Prediction,
+    start_at: SimTime,
+) {
+    let now = sim.now();
+    let Some(spec) = world.registry.function(&pred.function) else {
+        return;
+    };
+    let app = spec.app.clone();
+    let category = spec.category;
+    let decision = world
+        .gate
+        .should_freshen(&app, pred.confidence, category, now);
+    if !decision.admitted() {
+        return;
+    }
+    let (pid, deadline) =
+        world
+            .tracker
+            .register(&pred.function, &app, pred.expected_at, DEFAULT_MATCH_WINDOW);
+    // Expiry resolution: hit/miss -> gate feedback + deferred billing.
+    sim.schedule_at(deadline, move |_sim, w| resolve_prediction(w, pid));
+    let function = pred.function.clone();
+    let delay = start_at.since(now);
+    sim.schedule(delay, move |sim, w| {
+        start_freshen(sim, w, &function, Some(pid));
+    });
+    world.metrics.freshens_started += 1;
+}
+
+fn resolve_prediction(world: &mut World, pid: u64) {
+    let Some((app, hit)) = world.tracker.expire(pid) else {
+        return;
+    };
+    world.gate.record_outcome(&app, hit);
+    if !hit {
+        world.metrics.freshens_wasted += 1;
+    }
+    // Settle deferred freshen charges for this prediction.
+    let mut settled = Vec::new();
+    world.pending_charges.retain(|c| {
+        if c.prediction_id == pid {
+            settled.push(c.clone());
+            false
+        } else {
+            true
+        }
+    });
+    for c in settled {
+        world
+            .ledger
+            .charge_freshen(&c.app, c.memory_mb, c.duration, hit);
+    }
+}
+
+/// Launch a freshen run for `function`. Picks a container holding the
+/// function's runtime (warm or busy — the hook runs on a separate runtime
+/// thread, §3.1); optionally pre-provisions one when none exists.
+/// Returns the run id, or `None` when no container could be found/made.
+pub fn start_freshen(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    function: &str,
+    prediction_id: Option<u64>,
+) -> Option<usize> {
+    let now = sim.now();
+    if world.registry.hook(function).map_or(true, |h| h.is_empty()) {
+        return None; // nothing to do (not inferrable — not fatal, §3.3)
+    }
+    // A container whose runtime holds this function, live or about to be.
+    let existing = world
+        .containers
+        .iter()
+        .find(|c| {
+            c.function.as_deref() == Some(function)
+                && matches!(c.state, ContainerState::Warm | ContainerState::Busy)
+        })
+        .map(|c| c.id);
+    let cid = match existing {
+        Some(cid) => cid,
+        None => {
+            // Pre-provision: freshen composes with cold-start avoidance.
+            let cid = world.acquire_slot(now)?;
+            let app = app_of(world, function);
+            world.containers[cid].begin_cold_start_for_app(function, &app, now);
+            let f = function.to_string();
+            let cold = world.config.cold_start;
+            sim.schedule(cold, move |sim, w| {
+                w.containers[cid].finish_init(sim.now());
+                launch_freshen_on(sim, w, &f, cid, prediction_id);
+            });
+            return Some(usize::MAX); // run id assigned at launch
+        }
+    };
+    launch_freshen_on(sim, world, function, cid, prediction_id)
+}
+
+fn launch_freshen_on(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    function: &str,
+    cid: ContainerId,
+    prediction_id: Option<u64>,
+) -> Option<usize> {
+    let now = sim.now();
+    let resource_count = world.registry.function(function)?.resource_count();
+    let ttl = prefetch_ttl_of(world, function);
+    world.containers[cid]
+        .runtime
+        .fr_state
+        .ensure_len(resource_count, ttl, now);
+    let id = world.freshen_runs.len();
+    world.freshen_runs.push(FreshenRunCtx {
+        id,
+        function: function.to_string(),
+        container: cid,
+        action_idx: 0,
+        started_at: now,
+        prediction_id,
+        done: false,
+    });
+    world.containers[cid].freshen_runs += 1;
+    step_freshen(sim, world, id);
+    Some(id)
+}
+
+/// Execute the freshen run's current action (Algorithm 2's body, one
+/// action per event).
+fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
+    let now = sim.now();
+    let (function, cid, action_idx) = {
+        let ctx = &world.freshen_runs[run];
+        (ctx.function.clone(), ctx.container, ctx.action_idx)
+    };
+    let hook = world.registry.hook(&function).expect("hook exists").clone();
+    if action_idx >= hook.actions.len() {
+        finish_freshen(sim, world, run);
+        return;
+    }
+    let (r, action) = hook.actions[action_idx].clone();
+
+    // `EnsureConnection` is a *preparatory* action: the connection object
+    // itself carries the outcome (its liveness/state), and the same
+    // resource index usually has a terminal action (Prefetch/WarmCwnd)
+    // following it. It therefore must not claim or finish the fr_state
+    // entry — doing so would mark a fetch resource "done" without data.
+    if let FreshenAction::EnsureConnection { endpoint } = &action {
+        let d = ensure_connection(
+            &mut world.endpoints,
+            &mut world.rng,
+            &mut world.containers[cid].runtime,
+            endpoint,
+            now,
+        );
+        sim.schedule(d, move |sim, w| {
+            w.freshen_runs[run].action_idx += 1;
+            step_freshen(sim, w, run)
+        });
+        return;
+    }
+
+    // Terminal actions claim the resource; if the function already claimed
+    // or completed it (freshen is late — Figure 3 right), skip.
+    let claimed = world.containers[cid]
+        .runtime
+        .fr_state
+        .get_mut(r)
+        .map(|e| e.try_start(now))
+        .unwrap_or(false);
+    if !claimed {
+        world.freshen_runs[run].action_idx += 1;
+        sim.immediate(move |sim, w| step_freshen(sim, w, run));
+        return;
+    }
+
+    match action {
+        FreshenAction::EnsureConnection { .. } => unreachable!("handled above"),
+        FreshenAction::WarmCwnd {
+            endpoint,
+            direction,
+            anticipated_bytes,
+        } => {
+            let d = do_warm_cwnd(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                direction,
+                anticipated_bytes,
+                now,
+            );
+            sim.schedule(d, move |sim, w| {
+                finish_resource(sim, w, cid, r, FrResult::Warmed, Completer::Freshen);
+                w.freshen_runs[run].action_idx += 1;
+                step_freshen(sim, w, run)
+            });
+        }
+        FreshenAction::Prefetch {
+            endpoint,
+            object_id,
+            ttl,
+        } => {
+            // Skip the network when the cache already holds a fresh copy
+            // ("fetch once every n seconds", §3.2).
+            if world.containers[cid]
+                .runtime
+                .cache
+                .peek_fresh(&endpoint, &object_id, now)
+            {
+                let cached = world.containers[cid]
+                    .runtime
+                    .cache
+                    .get(&endpoint, &object_id, now, None)
+                    .expect("peeked fresh");
+                let result = FrResult::Data {
+                    object_id: object_id.clone(),
+                    version: cached.version,
+                    bytes: cached.bytes,
+                };
+                sim.schedule(LOCAL_ACCESS, move |sim, w| {
+                    finish_resource(sim, w, cid, r, result.clone(), Completer::Freshen);
+                    w.freshen_runs[run].action_idx += 1;
+                    step_freshen(sim, w, run)
+                });
+                return;
+            }
+            let (d, result) = do_fetch(
+                &mut world.endpoints,
+                &mut world.rng,
+                &mut world.containers[cid].runtime,
+                &endpoint,
+                &object_id,
+                now,
+            );
+            // Freshen's network use bills to the app owner too.
+            if let FrResult::Data { bytes, .. } = &result {
+                let app = app_of(world, &function);
+                world.ledger.charge_network(&app, *bytes);
+            }
+            sim.schedule(d, move |sim, w| {
+                if let FrResult::Data { version, bytes, .. } = &result {
+                    w.containers[cid].runtime.cache.put(
+                        &endpoint, &object_id, *version, *bytes, ttl, sim.now(),
+                    );
+                }
+                finish_resource(sim, w, cid, r, result.clone(), Completer::Freshen);
+                w.freshen_runs[run].action_idx += 1;
+                step_freshen(sim, w, run)
+            });
+        }
+    }
+}
+
+fn finish_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
+    let now = sim.now();
+    let ctx = &mut world.freshen_runs[run];
+    ctx.done = true;
+    let duration = now.since(ctx.started_at);
+    let function = ctx.function.clone();
+    let prediction_id = ctx.prediction_id;
+    world.metrics.freshens_completed += 1;
+    let app = app_of(world, &function);
+    let memory_mb = world
+        .registry
+        .function(&function)
+        .map(|f| f.memory_mb)
+        .unwrap_or(256);
+    match prediction_id {
+        // Deferred: usefulness known when the prediction resolves.
+        Some(pid) => world.pending_charges.push(PendingFreshenCharge {
+            prediction_id: pid,
+            app,
+            memory_mb,
+            duration,
+        }),
+        // Developer-invoked freshen bills immediately as useful.
+        None => world.ledger.charge_freshen(&app, memory_mb, duration, true),
+    }
+    let _ = sim;
+}
+
+// ====================================================================
+// Network helpers (disjoint-field borrows)
+// ====================================================================
+
+/// Make the runtime's connection to `endpoint` live, paying whatever it
+/// costs from its current state: keepalive probe, death detection,
+/// (re-)establishment, TLS. Returns the total duration.
+pub fn ensure_connection(
+    endpoints: &mut FxHashMap<String, Endpoint>,
+    rng: &mut Rng,
+    env: &mut RuntimeEnv,
+    endpoint: &str,
+    now: SimTime,
+) -> SimDuration {
+    let Some(ep) = endpoints.get_mut(endpoint) else {
+        return LOCAL_ACCESS; // unknown endpoint: fail fast
+    };
+    let conn = env
+        .connections
+        .entry(endpoint.to_string())
+        .or_insert_with(|| ep.new_connection());
+    let mut t = SimDuration::ZERO;
+    let mut need_connect = false;
+    match conn.state {
+        ConnState::Established => {
+            let (d, alive) = conn.keepalive(now, rng);
+            t += d;
+            if !alive {
+                need_connect = true;
+            }
+        }
+        ConnState::Closed | ConnState::Dead => need_connect = true,
+    }
+    if need_connect {
+        t += conn.connect(now + t, rng);
+        // TLS on top when the endpoint requires it.
+        if let Some(version) = ep.tls {
+            let sess = env
+                .tls
+                .entry(endpoint.to_string())
+                .or_insert_with(|| crate::netsim::tls::TlsSession::new(version));
+            sess.invalidate();
+            t += sess.establish(&ep.link, rng);
+        }
+    }
+    t
+}
+
+/// The function-side variant: using a connection without a prior liveness
+/// check. A silently-dead connection costs a full RTO of detection before
+/// re-establishment — the overhead freshen's `EnsureConnection` removes.
+fn usable_connection(
+    endpoints: &mut FxHashMap<String, Endpoint>,
+    rng: &mut Rng,
+    env: &mut RuntimeEnv,
+    endpoint: &str,
+    now: SimTime,
+) -> SimDuration {
+    let Some(ep) = endpoints.get_mut(endpoint) else {
+        return LOCAL_ACCESS;
+    };
+    let conn = env
+        .connections
+        .entry(endpoint.to_string())
+        .or_insert_with(|| ep.new_connection());
+    let mut t = SimDuration::ZERO;
+    let dead = match conn.state {
+        ConnState::Established => {
+            if conn.idle_expired(now) {
+                // Discover the death the hard way: wait out an RTO.
+                conn.kill();
+                t += SimDuration::from_secs_f64(conn.rto());
+                true
+            } else {
+                false
+            }
+        }
+        ConnState::Closed | ConnState::Dead => true,
+    };
+    if dead {
+        t += conn.connect(now + t, rng);
+        if let Some(version) = ep.tls {
+            let sess = env
+                .tls
+                .entry(endpoint.to_string())
+                .or_insert_with(|| crate::netsim::tls::TlsSession::new(version));
+            sess.invalidate();
+            t += sess.establish(&ep.link, rng);
+        }
+    }
+    t
+}
+
+/// Fetch `object_id` from `endpoint` over the runtime's connection.
+/// Returns `(duration, result)`.
+pub fn do_fetch(
+    endpoints: &mut FxHashMap<String, Endpoint>,
+    rng: &mut Rng,
+    env: &mut RuntimeEnv,
+    endpoint: &str,
+    object_id: &str,
+    now: SimTime,
+) -> (SimDuration, FrResult) {
+    let mut t = usable_connection(endpoints, rng, env, endpoint, now);
+    let Some(ep) = endpoints.get_mut(endpoint) else {
+        return (t, FrResult::Failed);
+    };
+    let conn = env.connections.get_mut(endpoint).expect("ensured");
+    match ep.store.get(object_id) {
+        None => {
+            // 404: a small request/response round.
+            t += conn.request_response(now + t, rng, REQUEST_BYTES, 256.0, ep.server_time);
+            (t, FrResult::Failed)
+        }
+        Some(obj) => {
+            t += conn.request_response(now + t, rng, REQUEST_BYTES, obj.bytes, ep.server_time);
+            // Download grew the server->client window; feed the history
+            // that `warm_cwnd` estimates from.
+            ep.cwnd_history
+                .record(now + t, conn.cwnd(TransferDirection::Download));
+            (
+                t,
+                FrResult::Data {
+                    object_id: object_id.to_string(),
+                    version: obj.version,
+                    bytes: obj.bytes,
+                },
+            )
+        }
+    }
+}
+
+/// Write `bytes` as `object_id` to `endpoint` over the runtime's connection.
+pub fn do_put(
+    endpoints: &mut FxHashMap<String, Endpoint>,
+    rng: &mut Rng,
+    env: &mut RuntimeEnv,
+    endpoint: &str,
+    object_id: &str,
+    bytes: f64,
+    now: SimTime,
+) -> SimDuration {
+    let mut t = usable_connection(endpoints, rng, env, endpoint, now);
+    let Some(ep) = endpoints.get_mut(endpoint) else {
+        return t;
+    };
+    let conn = env.connections.get_mut(endpoint).expect("ensured");
+    t += conn.send_with_ack(now + t, rng, bytes, ep.server_time);
+    ep.store.put(object_id, bytes, now + t);
+    ep.cwnd_history
+        .record(now + t, conn.cwnd(TransferDirection::Upload));
+    t
+}
+
+/// Warm the congestion window (establishing the connection first if
+/// needed) via the provider-mediated `warm_cwnd` syscall.
+fn do_warm_cwnd(
+    endpoints: &mut FxHashMap<String, Endpoint>,
+    rng: &mut Rng,
+    env: &mut RuntimeEnv,
+    endpoint: &str,
+    direction: TransferDirection,
+    anticipated_bytes: f64,
+    now: SimTime,
+) -> SimDuration {
+    let mut t = ensure_connection(endpoints, rng, env, endpoint, now);
+    let Some(ep) = endpoints.get_mut(endpoint) else {
+        return t;
+    };
+    let conn = env.connections.get_mut(endpoint).expect("ensured");
+    let (_outcome, probe) = warm_cwnd(
+        conn,
+        direction,
+        anticipated_bytes,
+        &WarmPolicy::default(),
+        &mut ep.cwnd_history,
+        now + t,
+        rng,
+    );
+    t += probe;
+    t
+}
+
+// ---- small lookups --------------------------------------------------
+
+fn app_of(world: &World, function: &str) -> String {
+    world
+        .registry
+        .function(function)
+        .map(|f| f.app.clone())
+        .unwrap_or_default()
+}
+
+fn prefetch_ttl(world: &World, inv: InvocationId) -> SimDuration {
+    let f = &world.invocations[inv].function;
+    prefetch_ttl_of(world, f)
+}
+
+fn prefetch_ttl_of(world: &World, function: &str) -> SimDuration {
+    world
+        .registry
+        .function(function)
+        .and_then(|f| f.prefetch_ttl)
+        .unwrap_or(world.config.freshen.default_ttl)
+}
+
+fn charge_transfer(world: &mut World, inv: InvocationId, result: &FrResult) {
+    if let FrResult::Data { bytes, .. } = result {
+        let app = app_of(world, &world.invocations[inv].function.clone());
+        world.ledger.charge_network(&app, *bytes);
+    }
+}
+
+fn charge_bytes(world: &mut World, inv: InvocationId, bytes: f64) {
+    let app = app_of(world, &world.invocations[inv].function.clone());
+    world.ledger.charge_network(&app, bytes);
+}

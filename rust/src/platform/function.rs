@@ -1,0 +1,268 @@
+//! Function specifications and the operation DSL.
+//!
+//! Serverless functions in this platform are expressed as a small sequence
+//! of operations rather than opaque code. This mirrors what the paper's
+//! §3.3 inference relies on: "source code is available for static analysis
+//! for such tasks as identification of read-only data fetched using
+//! constant parameters". An [`Op`]'s arguments are explicitly [`Arg::Const`]
+//! (runtime constants, like the paper's `CREDS`, `ID1`, `ID2`) or
+//! [`Arg::Param`] (derived from invocation arguments) — the distinction the
+//! freshen inference engine keys on.
+
+use crate::util::config::ServiceCategory;
+use crate::util::time::SimDuration;
+
+/// Function identifier (unique within the platform).
+pub type FunctionId = String;
+
+/// An operation argument: compile-time constant or invocation-derived.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Arg {
+    /// A runtime constant (e.g. `CREDS`, `ID1` in Algorithm 1).
+    Const(String),
+    /// Derived from the invocation's arguments; unknown before `run`.
+    Param(String),
+}
+
+impl Arg {
+    pub fn is_const(&self) -> bool {
+        matches!(self, Arg::Const(_))
+    }
+
+    /// The constant value, if this is a constant.
+    pub fn const_value(&self) -> Option<&str> {
+        match self {
+            Arg::Const(v) => Some(v),
+            Arg::Param(_) => None,
+        }
+    }
+}
+
+/// One step of a function body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Fetch an object over the endpoint's connection (Algorithm 1 line 3).
+    DataGet {
+        endpoint: String,
+        creds: Arg,
+        object_id: Arg,
+    },
+    /// Write a result over the endpoint's connection (Algorithm 1 line 7).
+    /// `bytes` is the typical payload size (from traces/annotations).
+    DataPut {
+        endpoint: String,
+        creds: Arg,
+        object_id: Arg,
+        bytes: f64,
+    },
+    /// Pure computation for a fixed duration (the `...` of Algorithm 1).
+    Compute { duration: SimDuration },
+    /// Run the AOT-compiled model on the fetched data (the intro's λ1:
+    /// "analyzes an input image"). In the simulator this costs the
+    /// calibrated inference latency; in the serving engine it executes the
+    /// real PJRT artifact.
+    Infer { model: String, input_bytes: f64 },
+    /// Trigger the next function in a chain through a trigger service
+    /// (Figure 1); fires as the function completes.
+    InvokeNext {
+        function: FunctionId,
+        trigger: crate::triggers::TriggerService,
+    },
+    /// Non-deterministic chain step (§6 "Prediction success must be
+    /// additionally quantified, especially in the case of
+    /// non-deterministic function chains"): choose one successor by
+    /// weight, possibly none (weights may sum to < 1; the remainder is
+    /// "chain ends here"). The chain predictor observes which branch ran
+    /// and discounts its confidence accordingly.
+    InvokeBranch {
+        branches: Vec<(FunctionId, f64)>,
+        trigger: crate::triggers::TriggerService,
+    },
+}
+
+impl Op {
+    /// Does this op access a remote resource through a connection?
+    pub fn endpoint(&self) -> Option<&str> {
+        match self {
+            Op::DataGet { endpoint, .. } | Op::DataPut { endpoint, .. } => Some(endpoint),
+            _ => None,
+        }
+    }
+
+    /// Successor functions this op may trigger (chain edges).
+    pub fn successors(&self) -> Vec<&FunctionId> {
+        match self {
+            Op::InvokeNext { function, .. } => vec![function],
+            Op::InvokeBranch { branches, .. } => branches.iter().map(|(f, _)| f).collect(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Are all of this op's arguments constants (freshen-inferrable)?
+    pub fn all_const(&self) -> bool {
+        match self {
+            Op::DataGet {
+                creds, object_id, ..
+            } => creds.is_const() && object_id.is_const(),
+            Op::DataPut {
+                creds, object_id, ..
+            } => creds.is_const() && object_id.is_const(),
+            _ => false,
+        }
+    }
+}
+
+/// A deployed serverless function.
+#[derive(Debug, Clone)]
+pub struct FunctionSpec {
+    pub id: FunctionId,
+    /// Owning application (billing + Figure 2 population unit).
+    pub app: String,
+    pub ops: Vec<Op>,
+    pub memory_mb: u32,
+    pub category: ServiceCategory,
+    /// Per-function TTL override for prefetched data (None = platform
+    /// default) — §3.2: "the TTL could be set ... by freshen configuration
+    /// values specified by the function developer".
+    pub prefetch_ttl: Option<SimDuration>,
+}
+
+impl FunctionSpec {
+    pub fn new(id: &str, app: &str, ops: Vec<Op>) -> FunctionSpec {
+        FunctionSpec {
+            id: id.to_string(),
+            app: app.to_string(),
+            ops,
+            memory_mb: 256,
+            category: ServiceCategory::Standard,
+            prefetch_ttl: None,
+        }
+    }
+
+    /// Number of freshen resources = number of connection-touching ops,
+    /// in program order (DataGet -> 0, DataPut -> 1 for the paper's λ).
+    pub fn resource_count(&self) -> usize {
+        self.ops.iter().filter(|op| op.endpoint().is_some()).count()
+    }
+
+    /// Map op index -> freshen resource index (None for non-resource ops).
+    pub fn resource_indices(&self) -> Vec<Option<usize>> {
+        let mut next = 0;
+        self.ops
+            .iter()
+            .map(|op| {
+                if op.endpoint().is_some() {
+                    let idx = next;
+                    next += 1;
+                    Some(idx)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Endpoints this function touches, deduplicated, program order.
+    pub fn endpoints(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = Vec::new();
+        for op in &self.ops {
+            if let Some(e) = op.endpoint() {
+                if !out.contains(&e) {
+                    out.push(e);
+                }
+            }
+        }
+        out
+    }
+
+    /// Construct the paper's λ (Algorithm 1): DataGet, Compute, DataPut —
+    /// all constant arguments. Used pervasively by tests and benches.
+    pub fn paper_lambda(id: &str, app: &str, endpoint: &str, compute: SimDuration) -> FunctionSpec {
+        FunctionSpec::new(
+            id,
+            app,
+            vec![
+                Op::DataGet {
+                    endpoint: endpoint.to_string(),
+                    creds: Arg::Const("CREDS".into()),
+                    object_id: Arg::Const("ID1".into()),
+                },
+                Op::Compute { duration: compute },
+                Op::DataPut {
+                    endpoint: endpoint.to_string(),
+                    creds: Arg::Const("CREDS".into()),
+                    object_id: Arg::Const("ID2".into()),
+                    bytes: 64.0 * 1024.0,
+                },
+            ],
+        )
+    }
+}
+
+/// A serverless application: a set of functions, possibly chained through
+/// an orchestration framework (Figure 2's population unit).
+#[derive(Debug, Clone)]
+pub struct AppSpec {
+    pub id: String,
+    pub functions: Vec<FunctionId>,
+    /// Is this app managed by an orchestration framework (Step-Functions-
+    /// like)? Orchestrated apps expose explicit chains the predictor uses.
+    pub orchestrated: bool,
+    pub category: ServiceCategory,
+}
+
+impl AppSpec {
+    pub fn new(id: &str, orchestrated: bool) -> AppSpec {
+        AppSpec {
+            id: id.to_string(),
+            functions: Vec::new(),
+            orchestrated,
+            category: ServiceCategory::Standard,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::triggers::TriggerService;
+
+    #[test]
+    fn paper_lambda_shape() {
+        let f = FunctionSpec::paper_lambda("l1", "app", "store", SimDuration::from_millis(50));
+        assert_eq!(f.ops.len(), 3);
+        assert_eq!(f.resource_count(), 2);
+        assert_eq!(f.resource_indices(), vec![Some(0), None, Some(1)]);
+        assert_eq!(f.endpoints(), vec!["store"]);
+        assert!(f.ops[0].all_const());
+        assert!(f.ops[2].all_const());
+        assert!(!f.ops[1].all_const());
+    }
+
+    #[test]
+    fn param_args_are_not_const() {
+        let op = Op::DataGet {
+            endpoint: "store".into(),
+            creds: Arg::Const("CREDS".into()),
+            object_id: Arg::Param("user_key".into()),
+        };
+        assert!(!op.all_const());
+        assert_eq!(op.endpoint(), Some("store"));
+    }
+
+    #[test]
+    fn invoke_next_has_no_endpoint() {
+        let op = Op::InvokeNext {
+            function: "f2".into(),
+            trigger: TriggerService::Direct,
+        };
+        assert_eq!(op.endpoint(), None);
+        assert!(!op.all_const());
+    }
+
+    #[test]
+    fn arg_accessors() {
+        assert_eq!(Arg::Const("x".into()).const_value(), Some("x"));
+        assert_eq!(Arg::Param("y".into()).const_value(), None);
+    }
+}

@@ -1,0 +1,51 @@
+//! Invoker hosts: per-host container pools.
+//!
+//! OpenWhisk's controller dispatches activations to *invokers*, each of
+//! which manages a bounded pool of containers. We model the pool bound
+//! (memory pressure is the reason container resources are limited and
+//! sharing policies matter, §2 [13]).
+
+use crate::platform::container::ContainerId;
+
+/// One invoker host.
+#[derive(Debug, Clone)]
+pub struct Invoker {
+    pub id: usize,
+    /// Containers resident on this host (indices into the world table).
+    pub containers: Vec<ContainerId>,
+    /// Maximum resident containers.
+    pub capacity: usize,
+}
+
+impl Invoker {
+    pub fn new(id: usize, capacity: usize) -> Invoker {
+        Invoker {
+            id,
+            containers: Vec::new(),
+            capacity,
+        }
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.containers.len() < self.capacity
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.containers.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_accounting() {
+        let mut inv = Invoker::new(0, 2);
+        assert!(inv.has_capacity());
+        inv.containers.push(0);
+        inv.containers.push(1);
+        assert!(!inv.has_capacity());
+        assert_eq!(inv.occupancy(), 2);
+    }
+}

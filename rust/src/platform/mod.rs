@@ -1,0 +1,35 @@
+//! The OpenWhisk-like serverless platform (§2 "Serverless runtime reuse").
+//!
+//! The paper's mechanism lives inside a provider's platform: Docker-style
+//! containers host a persistent language runtime; the `init` hook loads the
+//! function, the `run` hook executes it, and (our addition) the `freshen`
+//! hook runs proactive work. This module is that platform, built for the
+//! deterministic simulator substrate ([`crate::simcore`]); the real-time
+//! serving engine ([`crate::serve`]) reuses the same specs and runtime
+//! environment types.
+//!
+//! - [`function`] — function specs and the op DSL static analysis works on.
+//! - [`registry`] — functions, apps, chains.
+//! - [`datastore`] — versioned S3-like object store.
+//! - [`endpoint`] — remote services (store/file/model servers) behind links.
+//! - [`container`] — container lifecycle + the in-container runtime env.
+//! - [`invoker`] — per-host container pools.
+//! - [`world`] — the composed simulation world.
+//! - [`exec`] — the event-driven op executor (function *and* freshen),
+//!   including the controller's dispatch/queue/eviction policies.
+
+pub mod container;
+pub mod datastore;
+pub mod endpoint;
+pub mod exec;
+pub mod function;
+pub mod invoker;
+pub mod registry;
+pub mod world;
+
+pub use container::{Container, ContainerId, ContainerState, RuntimeEnv};
+pub use datastore::ObjectStore;
+pub use endpoint::Endpoint;
+pub use function::{AppSpec, Arg, FunctionId, FunctionSpec, Op};
+pub use registry::Registry;
+pub use world::World;

@@ -1,0 +1,198 @@
+//! Function, application and chain registry.
+//!
+//! The controller's view of what's deployed: function specs, the apps that
+//! own them, explicit orchestration chains (Figure 1), and the freshen
+//! hooks registered (or inferred) per function.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::freshen::hooks::FreshenHook;
+use crate::freshen::infer::infer_hook;
+use crate::freshen::policy::validate_hook;
+use crate::platform::function::{AppSpec, FunctionId, FunctionSpec};
+use crate::util::time::SimDuration;
+
+/// Explicit chain: orchestration frameworks provide these (AWS Step
+/// Functions); otherwise they can be derived via tracing [6]. Linear chains
+/// for now; the predictor walks successor edges.
+#[derive(Debug, Clone)]
+pub struct ChainSpec {
+    pub id: String,
+    pub functions: Vec<FunctionId>,
+}
+
+/// The platform registry.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    functions: HashMap<FunctionId, Rc<FunctionSpec>>,
+    apps: HashMap<String, AppSpec>,
+    chains: Vec<ChainSpec>,
+    hooks: HashMap<FunctionId, FreshenHook>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Deploy a function; creates its app on first reference and infers a
+    /// freshen hook (provider-side code generation, §3.3) unless the
+    /// developer registers their own afterwards.
+    pub fn deploy(&mut self, spec: FunctionSpec, default_ttl: SimDuration) {
+        let app = self
+            .apps
+            .entry(spec.app.clone())
+            .or_insert_with(|| AppSpec::new(&spec.app, false));
+        if !app.functions.contains(&spec.id) {
+            app.functions.push(spec.id.clone());
+        }
+        let report = infer_hook(&spec, default_ttl);
+        self.hooks.insert(spec.id.clone(), report.hook);
+        self.functions.insert(spec.id.clone(), Rc::new(spec));
+    }
+
+    /// Register a developer-written freshen hook (validated per §3.3's
+    /// abuse rules; replaces the inferred one on success).
+    pub fn register_hook(
+        &mut self,
+        function: &str,
+        hook: FreshenHook,
+    ) -> Result<(), String> {
+        if !self.functions.contains_key(function) {
+            return Err(format!("unknown function '{function}'"));
+        }
+        validate_hook(&hook)?;
+        self.hooks.insert(function.to_string(), hook);
+        Ok(())
+    }
+
+    /// Declare an orchestrated chain over already-deployed functions.
+    pub fn register_chain(&mut self, id: &str, functions: Vec<FunctionId>) -> Result<(), String> {
+        for f in &functions {
+            if !self.functions.contains_key(f) {
+                return Err(format!("chain '{id}' references unknown function '{f}'"));
+            }
+        }
+        // Mark all owning apps as orchestrated.
+        for f in &functions {
+            let app_id = self.functions[f].app.clone();
+            if let Some(app) = self.apps.get_mut(&app_id) {
+                app.orchestrated = true;
+            }
+        }
+        self.chains.push(ChainSpec {
+            id: id.to_string(),
+            functions,
+        });
+        Ok(())
+    }
+
+    pub fn function(&self, id: &str) -> Option<&FunctionSpec> {
+        self.functions.get(id).map(Rc::as_ref)
+    }
+
+    /// Cheap shared handle for the executor's hot path (avoids cloning op
+    /// payloads per step).
+    pub fn function_rc(&self, id: &str) -> Option<Rc<FunctionSpec>> {
+        self.functions.get(id).cloned()
+    }
+
+    pub fn app(&self, id: &str) -> Option<&AppSpec> {
+        self.apps.get(id)
+    }
+
+    pub fn app_of(&self, function: &str) -> Option<&AppSpec> {
+        self.function(function).and_then(|f| self.apps.get(&f.app))
+    }
+
+    pub fn hook(&self, function: &str) -> Option<&FreshenHook> {
+        self.hooks.get(function)
+    }
+
+    pub fn chains(&self) -> &[ChainSpec] {
+        &self.chains
+    }
+
+    /// Successor of `function` in any registered chain (first match) —
+    /// the explicit-chain prediction signal of §2.
+    pub fn chain_successor(&self, function: &str) -> Option<&FunctionId> {
+        for chain in &self.chains {
+            if let Some(pos) = chain.functions.iter().position(|f| f == function) {
+                if pos + 1 < chain.functions.len() {
+                    return Some(&chain.functions[pos + 1]);
+                }
+            }
+        }
+        None
+    }
+
+    pub fn function_count(&self) -> usize {
+        self.functions.len()
+    }
+
+    pub fn function_ids(&self) -> Vec<FunctionId> {
+        let mut ids: Vec<FunctionId> = self.functions.keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::freshen::hooks::{FreshenAction, HookOrigin};
+    use crate::util::time::SimDuration;
+
+    fn ttl() -> SimDuration {
+        SimDuration::from_secs(10)
+    }
+
+    fn lambda(id: &str, app: &str) -> FunctionSpec {
+        FunctionSpec::paper_lambda(id, app, "store", SimDuration::from_millis(10))
+    }
+
+    #[test]
+    fn deploy_infers_hook_and_creates_app() {
+        let mut r = Registry::new();
+        r.deploy(lambda("f1", "appA"), ttl());
+        assert!(r.function("f1").is_some());
+        assert!(r.app("appA").is_some());
+        assert!(!r.hook("f1").unwrap().is_empty());
+        assert!(!r.app("appA").unwrap().orchestrated);
+    }
+
+    #[test]
+    fn developer_hook_replaces_inferred() {
+        let mut r = Registry::new();
+        r.deploy(lambda("f1", "a"), ttl());
+        let mut custom = FreshenHook::new(HookOrigin::Developer, 2);
+        custom.push(
+            0,
+            FreshenAction::EnsureConnection {
+                endpoint: "store".into(),
+            },
+        );
+        r.register_hook("f1", custom.clone()).unwrap();
+        assert_eq!(r.hook("f1").unwrap().len(), 1);
+        assert_eq!(r.hook("f1").unwrap().origin, HookOrigin::Developer);
+        assert!(r.register_hook("ghost", custom).is_err());
+    }
+
+    #[test]
+    fn chain_registration_and_successor() {
+        let mut r = Registry::new();
+        for f in ["a", "b", "c"] {
+            r.deploy(lambda(f, "pipeline"), ttl());
+        }
+        r.register_chain("main", vec!["a".into(), "b".into(), "c".into()])
+            .unwrap();
+        assert_eq!(r.chain_successor("a"), Some(&"b".to_string()));
+        assert_eq!(r.chain_successor("b"), Some(&"c".to_string()));
+        assert_eq!(r.chain_successor("c"), None);
+        assert!(r.app("pipeline").unwrap().orchestrated);
+        assert!(r
+            .register_chain("bad", vec!["a".into(), "ghost".into()])
+            .is_err());
+    }
+}

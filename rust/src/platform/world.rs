@@ -1,0 +1,249 @@
+//! The composed simulation world.
+//!
+//! [`World`] owns every mutable piece of platform state; discrete-event
+//! closures receive `(&mut Sim<World>, &mut World)` and the borrow
+//! discipline is "disjoint fields": helpers take the specific fields they
+//! need (`&world.endpoints`, `&mut world.rng`, `&mut world.containers[c]`)
+//! so network, container and predictor state can be touched in one event.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::util::fxhash::FxHashMap;
+
+use crate::billing::Ledger;
+use crate::freshen::policy::FreshenGate;
+use crate::metrics::{MetricsHub, StartKind};
+use crate::platform::container::{Container, ContainerId};
+use crate::platform::endpoint::Endpoint;
+use crate::platform::function::FunctionId;
+use crate::platform::invoker::Invoker;
+use crate::platform::registry::Registry;
+use crate::predict::chain::ChainPredictor;
+use crate::predict::confidence::PredictionTracker;
+use crate::predict::histogram::HistogramPredictor;
+use crate::predict::learned::LearnedScorer;
+use crate::simcore::waitlist::WaitList;
+use crate::simcore::Sim;
+use crate::util::config::Config;
+use crate::util::rng::Rng;
+use crate::util::time::{SimDuration, SimTime};
+
+/// Dense invocation identifier (index into `World::invocations`).
+pub type InvocationId = usize;
+
+/// Per-invocation execution context (the state machine the executor walks).
+#[derive(Debug, Clone)]
+pub struct InvocationCtx {
+    pub id: InvocationId,
+    pub function: FunctionId,
+    pub container: Option<ContainerId>,
+    pub enqueued_at: SimTime,
+    pub started_at: SimTime,
+    /// Index of the op about to execute.
+    pub op_idx: usize,
+    pub start_kind: StartKind,
+    pub freshen_hits: u32,
+    pub freshen_misses: u32,
+    pub done: bool,
+}
+
+/// An in-flight freshen run on a container.
+#[derive(Debug, Clone)]
+pub struct FreshenRunCtx {
+    pub id: usize,
+    pub function: FunctionId,
+    pub container: ContainerId,
+    pub action_idx: usize,
+    pub started_at: SimTime,
+    /// Prediction that admitted this run (billing resolution).
+    pub prediction_id: Option<u64>,
+    pub done: bool,
+}
+
+/// Deferred freshen charge awaiting prediction resolution.
+#[derive(Debug, Clone)]
+pub struct PendingFreshenCharge {
+    pub prediction_id: u64,
+    pub app: String,
+    pub memory_mb: u32,
+    pub duration: SimDuration,
+}
+
+/// The simulation world.
+pub struct World {
+    pub config: Config,
+    pub rng: Rng,
+    pub registry: Registry,
+    pub containers: Vec<Container>,
+    pub invokers: Vec<Invoker>,
+    pub endpoints: FxHashMap<String, Endpoint>,
+    pub metrics: MetricsHub,
+    pub ledger: Ledger,
+    pub gate: FreshenGate,
+    pub chain_pred: ChainPredictor,
+    pub hist_pred: HistogramPredictor,
+    pub tracker: PredictionTracker,
+    pub scorer: LearnedScorer,
+    /// Active + completed invocation contexts (slab; completed stay for
+    /// inspection in tests, metrics copy what reports need).
+    pub invocations: Vec<InvocationCtx>,
+    pub freshen_runs: Vec<FreshenRunCtx>,
+    /// Per-function queues when no container is available.
+    pub queues: FxHashMap<FunctionId, VecDeque<InvocationId>>,
+    /// `FrWait` parking: one wait list per (container, resource index).
+    pub fr_waiters: FxHashMap<(ContainerId, usize), WaitList<World>>,
+    /// Freshen charges awaiting hit/miss resolution.
+    pub pending_charges: Vec<PendingFreshenCharge>,
+    /// Calibrated inference latency per model (simulator stand-in for the
+    /// PJRT execution the serving engine performs for real; can be
+    /// overwritten from measured artifact timings).
+    pub model_latencies: HashMap<String, SimDuration>,
+    /// Strict version checking for prefetched data (§3.2 version numbers).
+    pub strict_versions: bool,
+    /// Emit histogram-based predictions automatically after each completed
+    /// invocation (the standalone-function path). Ablations that inject
+    /// their own prediction streams turn this off to avoid contamination.
+    pub auto_hist_predict: bool,
+}
+
+/// The simulator type every experiment drives.
+pub type PlatformSim = Sim<World>;
+
+impl World {
+    pub fn new(config: Config) -> World {
+        let rng = Rng::new(config.seed);
+        let gate = FreshenGate::new(config.freshen.clone());
+        let invokers = (0..config.invokers)
+            .map(|i| Invoker::new(i, config.containers_per_invoker))
+            .collect();
+        World {
+            rng,
+            gate,
+            invokers,
+            registry: Registry::new(),
+            containers: Vec::new(),
+            endpoints: FxHashMap::default(),
+            metrics: MetricsHub::new(),
+            ledger: Ledger::new(),
+            chain_pred: ChainPredictor::new(),
+            hist_pred: HistogramPredictor::new(),
+            tracker: PredictionTracker::new(),
+            scorer: LearnedScorer::default(),
+            invocations: Vec::new(),
+            freshen_runs: Vec::new(),
+            queues: FxHashMap::default(),
+            fr_waiters: FxHashMap::default(),
+            pending_charges: Vec::new(),
+            model_latencies: HashMap::new(),
+            strict_versions: true,
+            auto_hist_predict: true,
+            config,
+        }
+    }
+
+    /// Add a remote endpoint.
+    pub fn add_endpoint(&mut self, endpoint: Endpoint) {
+        self.endpoints.insert(endpoint.id.clone(), endpoint);
+    }
+
+    /// Deploy a function spec (infers its freshen hook).
+    pub fn deploy(&mut self, spec: crate::platform::function::FunctionSpec) {
+        self.registry.deploy(spec, self.config.freshen.default_ttl);
+    }
+
+    /// Default simulated latency for `Op::Infer` when no calibration is set.
+    pub fn model_latency(&self, model: &str) -> SimDuration {
+        self.model_latencies
+            .get(model)
+            .copied()
+            .unwrap_or(SimDuration::from_millis(5))
+    }
+
+    // ---- container pool -----------------------------------------------
+
+    /// Find a warm container for `function`.
+    pub fn find_warm(&self, function: &str) -> Option<ContainerId> {
+        self.containers
+            .iter()
+            .find(|c| c.warm_for(function))
+            .map(|c| c.id)
+    }
+
+    /// Find (or create) a free container slot: an evicted container, or a
+    /// new slot on an invoker with capacity. Returns `None` when the
+    /// cluster is full.
+    pub fn acquire_slot(&mut self, now: SimTime) -> Option<ContainerId> {
+        if let Some(c) = self
+            .containers
+            .iter()
+            .find(|c| c.state == crate::platform::container::ContainerState::Evicted)
+        {
+            return Some(c.id);
+        }
+        // Create a new container on the least-occupied invoker.
+        let inv = self
+            .invokers
+            .iter_mut()
+            .filter(|i| i.has_capacity())
+            .min_by_key(|i| i.occupancy())?;
+        let id = self.containers.len();
+        inv.containers.push(id);
+        let invoker_id = inv.id;
+        self.containers.push(Container::new(id, invoker_id, now));
+        Some(id)
+    }
+
+    /// Total warm containers (reporting).
+    pub fn warm_count(&self) -> usize {
+        self.containers
+            .iter()
+            .filter(|c| c.state == crate::platform::container::ContainerState::Warm)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::Site;
+    use crate::platform::function::FunctionSpec;
+
+    #[test]
+    fn world_setup() {
+        let mut w = World::new(Config::default());
+        w.add_endpoint(Endpoint::new("store", Site::Edge));
+        w.deploy(FunctionSpec::paper_lambda(
+            "f1",
+            "app",
+            "store",
+            SimDuration::from_millis(10),
+        ));
+        assert!(w.registry.function("f1").is_some());
+        assert!(w.registry.hook("f1").is_some());
+        assert_eq!(w.invokers.len(), Config::default().invokers);
+    }
+
+    #[test]
+    fn acquire_slot_reuses_evicted_then_creates() {
+        let mut cfg = Config::default();
+        cfg.invokers = 1;
+        cfg.containers_per_invoker = 2;
+        let mut w = World::new(cfg);
+        let a = w.acquire_slot(SimTime::ZERO).unwrap();
+        w.containers[a].begin_cold_start("f", SimTime::ZERO);
+        let b = w.acquire_slot(SimTime::ZERO).unwrap();
+        assert_ne!(a, b);
+        w.containers[b].begin_cold_start("g", SimTime::ZERO);
+        // Pool is full now.
+        assert!(w.acquire_slot(SimTime::ZERO).is_none());
+        // Evicting frees the slot for reuse (same id).
+        w.containers[a].evict();
+        assert_eq!(w.acquire_slot(SimTime::ZERO), Some(a));
+    }
+
+    #[test]
+    fn model_latency_defaults() {
+        let w = World::new(Config::default());
+        assert_eq!(w.model_latency("unknown"), SimDuration::from_millis(5));
+    }
+}

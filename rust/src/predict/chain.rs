@@ -1,0 +1,119 @@
+//! Chain-based prediction (Figures 1 and 2).
+//!
+//! Orchestration frameworks make chains explicit, so when function fᵢ
+//! commits its trigger for fᵢ₊₁ the platform *knows* fᵢ₊₁ is coming; the
+//! remaining uncertainty is branching (conditional chains) and the trigger
+//! delay. Confidence starts near-certain for linear chains and is
+//! discounted by observed branching behaviour.
+
+use std::collections::HashMap;
+
+use crate::predict::{Prediction, PredictionSource};
+use crate::triggers::TriggerService;
+use crate::util::time::SimTime;
+
+/// Confidence for a never-observed edge of an explicit chain. Not 1.0:
+/// orchestrators can short-circuit (errors, conditions).
+const BASE_CHAIN_CONFIDENCE: f64 = 0.9;
+
+/// Tracks per-edge follow-through: of the times fᵢ completed, how often did
+/// fᵢ₊₁ actually run? (Handles the paper's "non-deterministic function
+/// chains" discussion item.)
+#[derive(Debug, Clone, Default)]
+pub struct ChainPredictor {
+    /// (from, to) -> (followed, total)
+    edges: HashMap<(String, String), (u64, u64)>,
+}
+
+impl ChainPredictor {
+    pub fn new() -> ChainPredictor {
+        ChainPredictor::default()
+    }
+
+    /// Predict the successor's invocation given that `from` has just
+    /// committed a trigger to `to` via `trigger` at time `now`.
+    pub fn predict_successor(
+        &self,
+        from: &str,
+        to: &str,
+        trigger: TriggerService,
+        now: SimTime,
+    ) -> Prediction {
+        let confidence = self.edge_confidence(from, to);
+        Prediction {
+            function: to.to_string(),
+            expected_at: now + trigger.expected_lead(),
+            confidence,
+            source: PredictionSource::Chain,
+        }
+    }
+
+    /// Observed follow-through rate for an edge, defaulting to the base
+    /// confidence, blended once data accumulates.
+    pub fn edge_confidence(&self, from: &str, to: &str) -> f64 {
+        match self.edges.get(&(from.to_string(), to.to_string())) {
+            None => BASE_CHAIN_CONFIDENCE,
+            Some(&(_followed, total)) if total == 0 => BASE_CHAIN_CONFIDENCE,
+            Some(&(followed, total)) => {
+                // Laplace-smoothed empirical rate.
+                (followed as f64 + BASE_CHAIN_CONFIDENCE) / (total as f64 + 1.0)
+            }
+        }
+    }
+
+    /// Record whether the successor actually ran after `from` completed.
+    pub fn observe_edge(&mut self, from: &str, to: &str, followed: bool) {
+        let e = self
+            .edges
+            .entry((from.to_string(), to.to_string()))
+            .or_insert((0, 0));
+        e.1 += 1;
+        if followed {
+            e.0 += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::SimDuration;
+
+    #[test]
+    fn unobserved_edge_uses_base_confidence() {
+        let p = ChainPredictor::new();
+        let pred = p.predict_successor("a", "b", TriggerService::Direct, SimTime::ZERO);
+        assert_eq!(pred.function, "b");
+        assert_eq!(pred.confidence, BASE_CHAIN_CONFIDENCE);
+        assert_eq!(pred.source, PredictionSource::Chain);
+        // Lead equals the trigger's median delay.
+        assert_eq!(
+            pred.expected_at.since(SimTime::ZERO),
+            SimDuration::from_secs_f64(0.060)
+        );
+    }
+
+    #[test]
+    fn branching_discounts_confidence() {
+        let mut p = ChainPredictor::new();
+        // Edge followed 1 out of 10 times.
+        for i in 0..10 {
+            p.observe_edge("a", "b", i == 0);
+        }
+        let c = p.edge_confidence("a", "b");
+        assert!(c < 0.25, "confidence {c}");
+        // A reliable edge stays high.
+        for _ in 0..10 {
+            p.observe_edge("a", "c", true);
+        }
+        assert!(p.edge_confidence("a", "c") > 0.9);
+    }
+
+    #[test]
+    fn s3_trigger_gives_longest_lead() {
+        let p = ChainPredictor::new();
+        let direct = p.predict_successor("a", "b", TriggerService::Direct, SimTime::ZERO);
+        let s3 = p.predict_successor("a", "b", TriggerService::S3Bucket, SimTime::ZERO);
+        assert!(s3.expected_at > direct.expected_at);
+    }
+}

@@ -1,0 +1,169 @@
+//! Outstanding-prediction tracking.
+//!
+//! Every admitted prediction becomes an outstanding entry with a match
+//! window. When the predicted function actually arrives within the window
+//! the prediction is a **hit**; when the window expires first it is a
+//! **miss** (a wasted freshen the app owner still pays for, §3.3). The
+//! hit/miss stream feeds the freshen gate's accuracy window and the
+//! billing ledger.
+
+use crate::util::time::{SimDuration, SimTime};
+
+/// Default slack around the expected arrival during which an arrival
+/// counts as a hit.
+pub const DEFAULT_MATCH_WINDOW: SimDuration = SimDuration(10_000_000); // 10 s
+
+/// One outstanding prediction.
+#[derive(Debug, Clone)]
+pub struct Outstanding {
+    pub id: u64,
+    pub function: String,
+    pub app: String,
+    pub expected_at: SimTime,
+    pub deadline: SimTime,
+    /// Set when matched by an arrival.
+    pub hit: bool,
+    /// Set when resolved (hit or expired).
+    pub resolved: bool,
+}
+
+/// Tracker for outstanding predictions.
+#[derive(Debug, Clone, Default)]
+pub struct PredictionTracker {
+    outstanding: Vec<Outstanding>,
+    next_id: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PredictionTracker {
+    pub fn new() -> PredictionTracker {
+        PredictionTracker::default()
+    }
+
+    /// Register an admitted prediction; returns its id. The caller should
+    /// schedule an expiry check at the returned deadline.
+    pub fn register(
+        &mut self,
+        function: &str,
+        app: &str,
+        expected_at: SimTime,
+        window: SimDuration,
+    ) -> (u64, SimTime) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let deadline = expected_at + window;
+        self.outstanding.push(Outstanding {
+            id,
+            function: function.to_string(),
+            app: app.to_string(),
+            expected_at,
+            deadline,
+            hit: false,
+            resolved: false,
+        });
+        (id, deadline)
+    }
+
+    /// An invocation of `function` arrived at `now`; match the oldest
+    /// unresolved prediction for it whose window covers `now`. Returns the
+    /// matched prediction id.
+    pub fn on_arrival(&mut self, function: &str, now: SimTime) -> Option<u64> {
+        let entry = self.outstanding.iter_mut().find(|o| {
+            !o.resolved && o.function == function && now <= o.deadline
+        })?;
+        entry.hit = true;
+        entry.resolved = true;
+        self.hits += 1;
+        Some(entry.id)
+    }
+
+    /// Expiry check for prediction `id` at its deadline. Returns
+    /// `Some((app, was_hit))` the first time the prediction resolves as a
+    /// miss or is confirmed; `None` if already handled.
+    pub fn expire(&mut self, id: u64) -> Option<(String, bool)> {
+        let idx = self.outstanding.iter().position(|o| o.id == id)?;
+        let o = &mut self.outstanding[idx];
+        let result = if o.resolved {
+            (o.app.clone(), o.hit)
+        } else {
+            o.resolved = true;
+            self.misses += 1;
+            (o.app.clone(), false)
+        };
+        // Garbage-collect resolved entries to keep the scan short.
+        self.outstanding.retain(|o| !o.resolved);
+        Some(result)
+    }
+
+    pub fn outstanding_count(&self) -> usize {
+        self.outstanding.iter().filter(|o| !o.resolved).count()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn hit_within_window() {
+        let mut tr = PredictionTracker::new();
+        let (id, deadline) = tr.register("f", "app", t(10), SimDuration::from_secs(5));
+        assert_eq!(deadline, t(15));
+        assert_eq!(tr.on_arrival("f", t(12)), Some(id));
+        assert_eq!(tr.hits, 1);
+        // Expiry after a hit reports the hit, not a miss.
+        assert_eq!(tr.expire(id), Some(("app".into(), true)));
+        assert_eq!(tr.misses, 0);
+    }
+
+    #[test]
+    fn miss_on_expiry() {
+        let mut tr = PredictionTracker::new();
+        let (id, _) = tr.register("f", "app", t(10), SimDuration::from_secs(5));
+        assert_eq!(tr.expire(id), Some(("app".into(), false)));
+        assert_eq!(tr.misses, 1);
+        // Double-expire is None (already GC'd).
+        assert_eq!(tr.expire(id), None);
+    }
+
+    #[test]
+    fn arrival_after_deadline_does_not_match() {
+        let mut tr = PredictionTracker::new();
+        tr.register("f", "app", t(10), SimDuration::from_secs(5));
+        assert_eq!(tr.on_arrival("f", t(20)), None);
+    }
+
+    #[test]
+    fn matches_oldest_unresolved_first() {
+        let mut tr = PredictionTracker::new();
+        let (id1, _) = tr.register("f", "app", t(10), SimDuration::from_secs(60));
+        let (_id2, _) = tr.register("f", "app", t(20), SimDuration::from_secs(60));
+        assert_eq!(tr.on_arrival("f", t(15)), Some(id1));
+        assert_eq!(tr.outstanding_count(), 1);
+    }
+
+    #[test]
+    fn accuracy_math() {
+        let mut tr = PredictionTracker::new();
+        let (a, _) = tr.register("f", "app", t(1), SimDuration::from_secs(1));
+        let (b, _) = tr.register("g", "app", t(1), SimDuration::from_secs(1));
+        tr.on_arrival("f", t(1));
+        tr.expire(a);
+        tr.expire(b);
+        assert!((tr.accuracy() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,153 @@
+//! Inter-arrival-time (IAT) histogram prediction.
+//!
+//! For functions outside explicit chains, the paper points at invocation-
+//! history prediction ("Serverless in the Wild" [9], Fifer [3]): most
+//! functions have strongly periodic or concentrated inter-arrival times, so
+//! a per-function IAT histogram predicts the next invocation as
+//! `last_arrival + modal_IAT`, with confidence proportional to how
+//! concentrated the histogram's mass is around the mode.
+
+use std::collections::HashMap;
+
+use crate::predict::{Prediction, PredictionSource};
+use crate::util::stats::Histogram;
+use crate::util::time::{SimDuration, SimTime};
+
+/// Histogram configuration: IATs from 100 ms to `range_s` seconds.
+const RANGE_S: f64 = 3600.0;
+const NBINS: usize = 240; // 15s bins over an hour
+
+/// Per-function IAT state.
+#[derive(Debug, Clone)]
+struct FnHistory {
+    hist: Histogram,
+    last_arrival: Option<SimTime>,
+}
+
+impl FnHistory {
+    fn new() -> FnHistory {
+        FnHistory {
+            hist: Histogram::new(0.0, RANGE_S, NBINS),
+            last_arrival: None,
+        }
+    }
+}
+
+/// The histogram predictor.
+#[derive(Debug, Clone, Default)]
+pub struct HistogramPredictor {
+    functions: HashMap<String, FnHistory>,
+    /// Minimum samples before emitting predictions.
+    pub min_samples: u64,
+}
+
+impl HistogramPredictor {
+    pub fn new() -> HistogramPredictor {
+        HistogramPredictor {
+            functions: HashMap::new(),
+            min_samples: 4,
+        }
+    }
+
+    /// Record an observed invocation arrival.
+    pub fn observe(&mut self, function: &str, at: SimTime) {
+        let h = self
+            .functions
+            .entry(function.to_string())
+            .or_insert_with(FnHistory::new);
+        if let Some(last) = h.last_arrival {
+            let iat = at.since(last).as_secs_f64();
+            h.hist.record(iat);
+        }
+        h.last_arrival = Some(at);
+    }
+
+    /// Predict the next invocation of `function` after `now`, if the
+    /// history supports one.
+    pub fn predict_next(&self, function: &str, now: SimTime) -> Option<Prediction> {
+        let h = self.functions.get(function)?;
+        if h.hist.count() < self.min_samples {
+            return None;
+        }
+        let mode = h.hist.mode_bin()?;
+        let modal_iat = h.hist.bin_center(mode);
+        let confidence = h.hist.mode_concentration();
+        let last = h.last_arrival?;
+        let expected = last + SimDuration::from_secs_f64(modal_iat);
+        // If the modal point is already past, predict "imminent".
+        let expected_at = if expected > now { expected } else { now };
+        Some(Prediction {
+            function: function.to_string(),
+            expected_at,
+            confidence,
+            source: PredictionSource::Histogram,
+        })
+    }
+
+    /// Number of IAT samples recorded for `function`.
+    pub fn samples(&self, function: &str) -> u64 {
+        self.functions
+            .get(function)
+            .map(|h| h.hist.count())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn periodic_arrivals_predict_confidently() {
+        let mut p = HistogramPredictor::new();
+        // Every 60s, 20 observations.
+        for i in 0..20 {
+            p.observe("cron", t(i * 60));
+        }
+        let pred = p.predict_next("cron", t(19 * 60)).unwrap();
+        // Expected at ~last + 60s (bin centre gives +/- half a bin: 7.5s).
+        let delta = pred.expected_at.since(t(19 * 60)).as_secs_f64();
+        assert!((delta - 60.0).abs() <= 8.0, "delta {delta}");
+        assert!(pred.confidence > 0.9, "confidence {}", pred.confidence);
+        assert_eq!(pred.source, PredictionSource::Histogram);
+    }
+
+    #[test]
+    fn irregular_arrivals_predict_with_low_confidence() {
+        let mut p = HistogramPredictor::new();
+        let mut rng = crate::util::rng::Rng::new(11);
+        let mut at = 0u64;
+        for _ in 0..40 {
+            at += (rng.uniform(5.0, 3000.0)) as u64;
+            p.observe("bursty", t(at));
+        }
+        let pred = p.predict_next("bursty", t(at)).unwrap();
+        assert!(pred.confidence < 0.5, "confidence {}", pred.confidence);
+    }
+
+    #[test]
+    fn too_few_samples_yield_none() {
+        let mut p = HistogramPredictor::new();
+        p.observe("f", t(0));
+        p.observe("f", t(60));
+        assert!(p.predict_next("f", t(61)).is_none());
+        assert!(p.predict_next("ghost", t(0)).is_none());
+        assert_eq!(p.samples("f"), 1);
+    }
+
+    #[test]
+    fn past_mode_predicts_imminent() {
+        let mut p = HistogramPredictor::new();
+        for i in 0..10 {
+            p.observe("f", t(i * 10));
+        }
+        // Ask long after the modal IAT has elapsed.
+        let now = t(90 + 500);
+        let pred = p.predict_next("f", now).unwrap();
+        assert_eq!(pred.expected_at, now);
+    }
+}

@@ -1,0 +1,201 @@
+//! Learned next-invocation scorer.
+//!
+//! Combines the chain and histogram signals (plus time-of-flow features)
+//! into a single calibrated probability via a small logistic model. The
+//! model has two execution paths:
+//!
+//! 1. **Native** — the logistic regression evaluated in rust (always
+//!    available; used inside the discrete-event simulator's hot loop).
+//! 2. **AOT artifact** — the same weights baked into the JAX/Pallas
+//!    predictor artifact (`artifacts/predictor.hlo.txt`), executed through
+//!    PJRT by the serving engine. The pytest suite checks the two paths
+//!    agree; the rust integration test checks the artifact matches
+//!    [`LearnedScorer::score`] bit-for-bit-ish (1e-5).
+//!
+//! Features (in order, matching `python/compile/model.py::predictor_fwd`):
+//! `[chain_conf, hist_conf, recency, log_lead]` — see [`Features`].
+
+use crate::util::time::SimDuration;
+
+/// Input features for one candidate prediction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Features {
+    /// Chain-edge follow-through confidence (0 when not in a chain).
+    pub chain_conf: f64,
+    /// Histogram mode concentration (0 when too little history).
+    pub hist_conf: f64,
+    /// exp(-idle/300s): how recently the function last ran.
+    pub recency: f64,
+    /// log1p(expected lead in seconds), normalised by log1p(10).
+    pub log_lead: f64,
+}
+
+impl Features {
+    pub fn build(
+        chain_conf: f64,
+        hist_conf: f64,
+        idle: SimDuration,
+        lead: SimDuration,
+    ) -> Features {
+        Features {
+            chain_conf,
+            hist_conf,
+            recency: (-idle.as_secs_f64() / 300.0).exp(),
+            log_lead: (lead.as_secs_f64()).ln_1p() / 10.0f64.ln_1p(),
+        }
+    }
+
+    pub fn to_vec(&self) -> [f64; 4] {
+        [self.chain_conf, self.hist_conf, self.recency, self.log_lead]
+    }
+}
+
+/// Logistic scorer with fixed, offline-trained weights.
+///
+/// The weights below were fit on synthetic chain+histogram workloads
+/// (see `python/compile/train_predictor.py` which regenerates them and
+/// bakes the same values into the AOT artifact). Chain membership is the
+/// dominant signal, matching the paper's argument that orchestration
+/// chains are the best prediction opportunity.
+#[derive(Debug, Clone, Copy)]
+pub struct LearnedScorer {
+    pub weights: [f64; 4],
+    pub bias: f64,
+}
+
+/// The canonical deployed weights — MUST match python/compile/model.py.
+pub const DEPLOYED_WEIGHTS: [f64; 4] = [3.2, 1.8, 0.9, -0.6];
+pub const DEPLOYED_BIAS: f64 = -2.0;
+
+impl Default for LearnedScorer {
+    fn default() -> LearnedScorer {
+        LearnedScorer {
+            weights: DEPLOYED_WEIGHTS,
+            bias: DEPLOYED_BIAS,
+        }
+    }
+}
+
+impl LearnedScorer {
+    /// Probability that the candidate invocation happens in the window.
+    pub fn score(&self, f: &Features) -> f64 {
+        let x = f.to_vec();
+        let z: f64 = self
+            .weights
+            .iter()
+            .zip(x.iter())
+            .map(|(w, xi)| w * xi)
+            .sum::<f64>()
+            + self.bias;
+        1.0 / (1.0 + (-z).exp())
+    }
+
+    /// Score a batch (the PJRT artifact path is batched; this is the
+    /// native equivalent used by tests and the simulator).
+    pub fn score_batch(&self, batch: &[Features]) -> Vec<f64> {
+        batch.iter().map(|f| self.score(f)).collect()
+    }
+}
+
+/// Convenience: combined confidence for a candidate, preferring the
+/// learned score when both signals exist, else passing through the single
+/// available signal (the simulator's default configuration).
+pub fn combined_confidence(
+    scorer: &LearnedScorer,
+    chain_conf: Option<f64>,
+    hist_conf: Option<f64>,
+    idle: SimDuration,
+    lead: SimDuration,
+) -> f64 {
+    match (chain_conf, hist_conf) {
+        (None, None) => 0.0,
+        (Some(c), None) => c,
+        (None, Some(h)) => h * 0.8, // histogram alone is weaker evidence
+        (Some(c), Some(h)) => scorer.score(&Features::build(c, h, idle, lead)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(chain: f64, hist: f64) -> Features {
+        Features::build(
+            chain,
+            hist,
+            SimDuration::from_secs(10),
+            SimDuration::from_millis(64),
+        )
+    }
+
+    #[test]
+    fn strong_chain_signal_scores_high() {
+        let s = LearnedScorer::default();
+        let hi = s.score(&feats(0.95, 0.8));
+        let lo = s.score(&feats(0.0, 0.0));
+        assert!(hi > 0.85, "hi {hi}");
+        assert!(lo < 0.25, "lo {lo}");
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn monotone_in_each_confidence() {
+        let s = LearnedScorer::default();
+        let mut prev = 0.0;
+        for c in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let v = s.score(&feats(c, 0.5));
+            assert!(v > prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn longer_lead_reduces_score() {
+        let s = LearnedScorer::default();
+        let near = Features::build(
+            0.8,
+            0.8,
+            SimDuration::from_secs(1),
+            SimDuration::from_millis(60),
+        );
+        let far = Features::build(
+            0.8,
+            0.8,
+            SimDuration::from_secs(1),
+            SimDuration::from_secs(600),
+        );
+        assert!(s.score(&near) > s.score(&far));
+    }
+
+    #[test]
+    fn batch_matches_scalar() {
+        let s = LearnedScorer::default();
+        let batch = vec![feats(0.1, 0.2), feats(0.9, 0.9), feats(0.5, 0.0)];
+        let scores = s.score_batch(&batch);
+        for (f, v) in batch.iter().zip(scores.iter()) {
+            assert_eq!(*v, s.score(f));
+        }
+    }
+
+    #[test]
+    fn combined_confidence_fallbacks() {
+        let s = LearnedScorer::default();
+        assert_eq!(
+            combined_confidence(&s, None, None, SimDuration::ZERO, SimDuration::ZERO),
+            0.0
+        );
+        assert_eq!(
+            combined_confidence(&s, Some(0.7), None, SimDuration::ZERO, SimDuration::ZERO),
+            0.7
+        );
+        assert!(
+            (combined_confidence(&s, None, Some(0.5), SimDuration::ZERO, SimDuration::ZERO)
+                - 0.4)
+                .abs()
+                < 1e-12
+        );
+        let both =
+            combined_confidence(&s, Some(0.9), Some(0.9), SimDuration::ZERO, SimDuration::ZERO);
+        assert!(both > 0.8);
+    }
+}

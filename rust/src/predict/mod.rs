@@ -1,0 +1,42 @@
+//! Invocation prediction (§2 "Regaining efficiency via prediction").
+//!
+//! freshen is only useful if the platform can predict *when a function may
+//! run*. The paper identifies the opportunities this module implements:
+//!
+//! - [`chain`] — explicit function chains from orchestration frameworks
+//!   (Figure 1/2): when fᵢ starts (or commits a trigger), fᵢ₊₁ is imminent,
+//!   with the trigger-service delay (Table 1) as the lead window.
+//! - [`histogram`] — inter-arrival-time histograms per function, the
+//!   Shahrad-et-al-style signal for standalone functions.
+//! - [`confidence`] — outstanding-prediction tracking: each admitted
+//!   prediction is matched against actual arrivals to produce the hit/miss
+//!   feedback that drives the freshen gate and billing.
+//! - [`learned`] — a learned scorer combining both signals; its weights are
+//!   trained offline and it can execute via the AOT predictor artifact on
+//!   the PJRT path (see `runtime`).
+
+pub mod chain;
+pub mod confidence;
+pub mod histogram;
+pub mod learned;
+
+use crate::util::time::SimTime;
+
+/// Where a prediction came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictionSource {
+    Chain,
+    Histogram,
+    Learned,
+}
+
+/// A predicted impending invocation.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub function: String,
+    /// When the invocation is expected to start.
+    pub expected_at: SimTime,
+    /// Predictor's confidence in [0, 1].
+    pub confidence: f64,
+    pub source: PredictionSource,
+}

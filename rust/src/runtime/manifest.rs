@@ -1,0 +1,159 @@
+//! `artifacts/manifest.json`: what the AOT pass produced.
+//!
+//! Written by `python/compile/aot.py`; read here so the rust runtime knows
+//! the artifact shapes, available batch sizes, and the sample-check
+//! numerics the integration tests assert against.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub input_dim: usize,
+    pub classes: usize,
+    pub batches: Vec<usize>,
+    pub predictor_batch: usize,
+    pub predictor_weights: Vec<f64>,
+    pub predictor_bias: f64,
+    /// artifact key -> file name
+    pub artifacts: Vec<(String, String)>,
+    /// Expected logits for the linspace(-1,1) sample input (batch 1).
+    pub check_logits_b1: Vec<f64>,
+    /// (features, expected score) rows for the predictor check.
+    pub check_predictor: Vec<(Vec<f64>, f64)>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let batches = j
+            .get("batches")
+            .and_then(Json::as_arr)
+            .context("manifest: batches")?
+            .iter()
+            .filter_map(Json::as_u64)
+            .map(|b| b as usize)
+            .collect::<Vec<_>>();
+        if batches.is_empty() {
+            bail!("manifest: no batch sizes");
+        }
+
+        let artifacts = match j.get("artifacts") {
+            Some(Json::Obj(pairs)) => pairs
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect(),
+            _ => bail!("manifest: artifacts object missing"),
+        };
+
+        let check = j.get("check").context("manifest: check")?;
+        let check_logits_b1 = check
+            .get("classifier_logits_b1")
+            .and_then(Json::as_arr)
+            .context("manifest: check logits")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let feats = check
+            .get("predictor_feats")
+            .and_then(Json::as_arr)
+            .context("manifest: predictor feats")?;
+        let scores = check
+            .get("predictor_scores")
+            .and_then(Json::as_arr)
+            .context("manifest: predictor scores")?;
+        let check_predictor = feats
+            .iter()
+            .zip(scores.iter())
+            .filter_map(|(f, s)| {
+                let row: Vec<f64> = f.as_arr()?.iter().filter_map(Json::as_f64).collect();
+                Some((row, s.as_f64()?))
+            })
+            .collect();
+
+        Ok(Manifest {
+            input_dim: j.u64_or("input_dim", 3072) as usize,
+            classes: j.u64_or("classes", 10) as usize,
+            batches,
+            predictor_batch: j.u64_or("predictor_batch", 16) as usize,
+            predictor_weights: j
+                .get("predictor_weights")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                .unwrap_or_default(),
+            predictor_bias: j.f64_or("predictor_bias", 0.0),
+            artifacts,
+            check_logits_b1,
+            check_predictor,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Path of the classifier artifact for `batch`.
+    pub fn classifier_path(&self, batch: usize) -> Option<PathBuf> {
+        let key = format!("classifier_b{batch}");
+        self.artifacts
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, f)| self.dir.join(f))
+    }
+
+    pub fn predictor_path(&self) -> Option<PathBuf> {
+        self.artifacts
+            .iter()
+            .find(|(k, _)| k == "predictor")
+            .map(|(_, f)| self.dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("freshen-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "input_dim": 8, "classes": 2, "batches": [1, 4],
+              "predictor_batch": 16,
+              "predictor_weights": [3.2, 1.8, 0.9, -0.6], "predictor_bias": -2.0,
+              "artifacts": {"classifier_b1": "c1.hlo.txt", "classifier_b4": "c4.hlo.txt",
+                             "predictor": "p.hlo.txt"},
+              "check": {"classifier_logits_b1": [0.5, -0.5],
+                         "predictor_feats": [[1, 0, 0, 0]],
+                         "predictor_scores": [0.76]}
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.input_dim, 8);
+        assert_eq!(m.batches, vec![1, 4]);
+        assert_eq!(
+            m.classifier_path(4).unwrap().file_name().unwrap(),
+            "c4.hlo.txt"
+        );
+        assert!(m.classifier_path(2).is_none());
+        assert_eq!(m.check_predictor.len(), 1);
+        assert_eq!(m.predictor_weights.len(), 4);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("freshen-manifest-missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime: load and execute the AOT artifacts from rust.
+//!
+//! This is the L3↔L2 bridge. `make artifacts` lowers the JAX/Pallas model
+//! to HLO **text**; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
+//! and exposes typed, batched execution to the serving engine. Python never
+//! runs here — the binary is self-contained once `artifacts/` exists.
+//!
+//! Thread model: the `xla` crate's wrappers hold raw pointers and are not
+//! `Send`, so all PJRT state lives on whichever thread created it; the
+//! serving engine dedicates one inference thread that owns a
+//! [`model::ClassifierRuntime`] (the vLLM-style "engine loop").
+
+pub mod manifest;
+pub mod model;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Load an HLO-text artifact and compile it on `client`.
+pub fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+/// Create the CPU PJRT client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}

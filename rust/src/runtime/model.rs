@@ -1,0 +1,210 @@
+//! Typed, batched execution of the classifier and predictor artifacts.
+//!
+//! [`ClassifierRuntime`] holds one compiled executable per AOT batch size
+//! and serves arbitrary request batches by picking the smallest artifact
+//! batch that fits and zero-padding (standard static-batch serving).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{compile_hlo_file, cpu_client};
+
+/// The λ1 image classifier, compiled for each AOT batch size.
+pub struct ClassifierRuntime {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    /// Cumulative inference statistics.
+    pub executions: u64,
+    pub rows_served: u64,
+    pub padded_rows: u64,
+    pub exec_time: Duration,
+}
+
+impl ClassifierRuntime {
+    /// Load every classifier artifact listed in `dir`'s manifest.
+    pub fn load(dir: &Path) -> Result<ClassifierRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = cpu_client()?;
+        let mut exes = BTreeMap::new();
+        for &b in &manifest.batches {
+            let path = manifest
+                .classifier_path(b)
+                .with_context(|| format!("manifest lacks classifier_b{b}"))?;
+            exes.insert(b, compile_hlo_file(&client, &path)?);
+        }
+        if exes.is_empty() {
+            bail!("no classifier artifacts found in {}", dir.display());
+        }
+        Ok(ClassifierRuntime {
+            client,
+            exes,
+            manifest,
+            executions: 0,
+            rows_served: 0,
+            padded_rows: 0,
+            exec_time: Duration::ZERO,
+        })
+    }
+
+    /// Largest compiled batch (the batcher's cap).
+    pub fn max_batch(&self) -> usize {
+        *self.exes.keys().max().expect("non-empty")
+    }
+
+    /// Smallest compiled batch >= n (or the max batch when n exceeds it).
+    pub fn pick_batch(&self, n: usize) -> usize {
+        self.exes
+            .keys()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_batch())
+    }
+
+    /// Run inference on up to `max_batch()` rows of `input_dim` floats.
+    /// Returns one logits row (`classes` floats) per input row.
+    pub fn infer(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let dim = self.manifest.input_dim;
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != dim {
+                bail!("row {i} has {} features, expected {dim}", r.len());
+            }
+        }
+        if rows.len() > self.max_batch() {
+            bail!(
+                "batch {} exceeds max compiled batch {}",
+                rows.len(),
+                self.max_batch()
+            );
+        }
+        let b = self.pick_batch(rows.len());
+        // Zero-pad to the artifact batch.
+        let mut flat = vec![0f32; b * dim];
+        for (i, r) in rows.iter().enumerate() {
+            flat[i * dim..(i + 1) * dim].copy_from_slice(r);
+        }
+        let x = xla::Literal::vec1(&flat).reshape(&[b as i64, dim as i64])?;
+        let t0 = Instant::now();
+        let exe = self.exes.get(&b).expect("picked existing batch");
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        self.exec_time += t0.elapsed();
+        self.executions += 1;
+        self.rows_served += rows.len() as u64;
+        self.padded_rows += (b - rows.len()) as u64;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        let flat_out = out.to_vec::<f32>()?;
+        let classes = self.manifest.classes;
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(i, _)| flat_out[i * classes..(i + 1) * classes].to_vec())
+            .collect())
+    }
+
+    /// Verify the artifact against the manifest's sample check: the
+    /// linspace input must reproduce the recorded logits. This is the
+    /// rust-side half of the AOT numerics contract.
+    pub fn self_check(&mut self) -> Result<f64> {
+        let dim = self.manifest.input_dim;
+        let row: Vec<f32> = (0..dim)
+            .map(|i| -1.0 + 2.0 * i as f32 / (dim as f32 - 1.0))
+            .collect();
+        let logits = self.infer(&[row])?;
+        let want = &self.manifest.check_logits_b1;
+        if want.len() != logits[0].len() {
+            bail!("class count mismatch");
+        }
+        let mut max_err: f64 = 0.0;
+        for (g, w) in logits[0].iter().zip(want.iter()) {
+            max_err = max_err.max((*g as f64 - w).abs());
+        }
+        if max_err > 1e-3 {
+            bail!("artifact self-check failed: max |err| = {max_err}");
+        }
+        Ok(max_err)
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// The learned next-invocation scorer artifact (fixed batch).
+pub struct PredictorRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub manifest: Manifest,
+}
+
+impl PredictorRuntime {
+    pub fn load(dir: &Path) -> Result<PredictorRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = cpu_client()?;
+        let path = manifest
+            .predictor_path()
+            .context("manifest lacks predictor artifact")?;
+        let exe = compile_hlo_file(&client, &path)?;
+        Ok(PredictorRuntime {
+            exe,
+            batch: manifest.predictor_batch,
+            manifest,
+        })
+    }
+
+    /// Score up to `batch` feature rows `[chain, hist, recency, log_lead]`.
+    pub fn score(&self, rows: &[[f32; 4]]) -> Result<Vec<f32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        if rows.len() > self.batch {
+            bail!("predictor batch {} > {}", rows.len(), self.batch);
+        }
+        let mut flat = vec![0f32; self.batch * 4];
+        for (i, r) in rows.iter().enumerate() {
+            flat[i * 4..(i + 1) * 4].copy_from_slice(r);
+        }
+        let x = xla::Literal::vec1(&flat).reshape(&[self.batch as i64, 4])?;
+        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(out[..rows.len()].to_vec())
+    }
+
+    /// Check the artifact agrees with the manifest's recorded scores AND
+    /// with the native rust scorer in `predict::learned`.
+    pub fn self_check(&self) -> Result<f64> {
+        let rows: Vec<[f32; 4]> = self
+            .manifest
+            .check_predictor
+            .iter()
+            .map(|(f, _)| [f[0] as f32, f[1] as f32, f[2] as f32, f[3] as f32])
+            .collect();
+        let want: Vec<f64> = self.manifest.check_predictor.iter().map(|(_, s)| *s).collect();
+        let got = self.score(&rows)?;
+        let mut max_err: f64 = 0.0;
+        for (g, w) in got.iter().zip(want.iter()) {
+            max_err = max_err.max((*g as f64 - w).abs());
+        }
+        // Native scorer agreement.
+        let native = crate::predict::learned::LearnedScorer::default();
+        for (row, g) in rows.iter().zip(got.iter()) {
+            let f = crate::predict::learned::Features {
+                chain_conf: row[0] as f64,
+                hist_conf: row[1] as f64,
+                recency: row[2] as f64,
+                log_lead: row[3] as f64,
+            };
+            max_err = max_err.max((native.score(&f) - *g as f64).abs());
+        }
+        if max_err > 1e-4 {
+            bail!("predictor self-check failed: max |err| = {max_err}");
+        }
+        Ok(max_err)
+    }
+}

@@ -1,0 +1,92 @@
+//! Dynamic batching for the inference thread.
+//!
+//! Collect requests until either `max_batch` are in hand or `batch_window`
+//! has elapsed since the first request of the batch — the standard serving
+//! trade-off between latency and device utilisation.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Pull one batch from `rx`. Blocks for the first item (up to
+/// `idle_timeout`); then keeps collecting until `max_batch` or
+/// `batch_window` from the first item. Returns an empty vec on idle
+/// timeout and `None` when the channel is closed and drained.
+pub fn next_batch<T>(
+    rx: &Receiver<T>,
+    max_batch: usize,
+    batch_window: Duration,
+    idle_timeout: Duration,
+) -> Option<Vec<T>> {
+    debug_assert!(max_batch >= 1);
+    let first = match rx.recv_timeout(idle_timeout) {
+        Ok(item) => item,
+        Err(RecvTimeoutError::Timeout) => return Some(Vec::new()),
+        Err(RecvTimeoutError::Disconnected) => return None,
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + batch_window;
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break, // flush what we have
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_up_to_max() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = next_batch(&rx, 4, Duration::from_millis(50), Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, 4, Duration::from_millis(50), Duration::from_millis(50))
+            .unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn window_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&rx, 8, Duration::from_millis(30), Duration::from_secs(1))
+            .unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn idle_timeout_returns_empty() {
+        let (_tx, rx) = channel::<u32>();
+        let b = next_batch(&rx, 8, Duration::from_millis(10), Duration::from_millis(20))
+            .unwrap();
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn disconnect_returns_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, 8, Duration::from_millis(10), Duration::from_millis(20))
+            .unwrap();
+        assert_eq!(b, vec![42]);
+        assert!(next_batch(&rx, 8, Duration::from_millis(10), Duration::from_millis(20))
+            .is_none());
+    }
+}

@@ -1,0 +1,393 @@
+//! The serving engine: router, handler workers, dynamic batcher, and the
+//! freshen thread, serving the paper's λ1 pipeline for real.
+//!
+//! Each request walks λ1's ops (Algorithm 1): `FrFetch(0, DataGet(model))`
+//! → PJRT inference (batched) → `FrWarm(1, DataPut(result))`. The freshen
+//! hook — run ahead of predicted bursts — prefetches the model object and
+//! establishes + warms the store connection, so requests hit local data
+//! and a wide congestion window.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::freshen::state::FrResult;
+use crate::netsim::link::{Link, Site};
+use crate::runtime::model::ClassifierRuntime;
+use crate::serve::batcher::next_batch;
+use crate::serve::fr::{Served, SharedFrState};
+use crate::serve::store::LatencyStore;
+use crate::util::stats::Summary;
+use crate::util::time::SimDuration;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Handler worker threads.
+    pub workers: usize,
+    /// Dynamic batch cap (also bounded by the largest AOT batch).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Real seconds slept per simulated network second (0.001 = 1000x).
+    pub time_scale: f64,
+    /// Enable the freshen machinery (false = vanilla baseline).
+    pub freshen: bool,
+    /// TTL for prefetched model data, simulated seconds.
+    pub prefetch_ttl_s: f64,
+    /// Size of the model object λ1 fetches.
+    pub model_bytes: f64,
+    /// Size of the result λ1 writes.
+    pub result_bytes: f64,
+    /// Network path to the store.
+    pub link: Link,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 4,
+            max_batch: 16,
+            batch_window: Duration::from_millis(2),
+            time_scale: 0.001,
+            freshen: true,
+            prefetch_ttl_s: 10.0,
+            model_bytes: 5e6,
+            result_bytes: 64.0 * 1024.0,
+            link: Site::Remote.link(),
+            seed: 0xE2E,
+        }
+    }
+}
+
+/// Outcome of one request.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub fetch_served: Served,
+    pub put_served: Served,
+}
+
+struct Request {
+    row: Vec<f32>,
+    respond: Sender<RequestOutcome>,
+}
+
+struct InferJob {
+    row: Vec<f32>,
+    reply: Sender<Vec<f32>>,
+}
+
+struct Shared {
+    store: LatencyStore,
+    fr: SharedFrState,
+    latencies: Mutex<Vec<Duration>>,
+    fetch_hits: AtomicU64,
+    fetch_misses: AtomicU64,
+    completed: AtomicU64,
+    started: Instant,
+}
+
+/// Aggregated serving report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub latency_ms: Option<Summary>,
+    pub throughput_rps: f64,
+    pub fetch_hit_rate: f64,
+    pub store_gets: u64,
+    pub store_puts: u64,
+    pub wall: Duration,
+}
+
+impl ServeReport {
+    pub fn print(&self, label: &str) {
+        let (p50, p99, mean) = self
+            .latency_ms
+            .as_ref()
+            .map(|s| (s.p50, s.p99, s.mean))
+            .unwrap_or((0.0, 0.0, 0.0));
+        println!(
+            "{label:<18} requests={:<6} p50={p50:>8.2}ms p99={p99:>8.2}ms mean={mean:>8.2}ms \
+             thru={:>7.1} req/s fetch-hit={:>5.1}% store-gets={}",
+            self.requests,
+            self.throughput_rps,
+            100.0 * self.fetch_hit_rate,
+            self.store_gets,
+        );
+    }
+}
+
+/// The engine handle.
+pub struct ServeEngine {
+    req_tx: Option<Sender<Request>>,
+    infer_tx: Option<Sender<InferJob>>,
+    workers: Vec<JoinHandle<()>>,
+    infer_thread: Option<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    pub config: ServeConfig,
+}
+
+impl ServeEngine {
+    /// Start the engine: loads the AOT artifacts on the inference thread
+    /// (PJRT state is not `Send`), spawns handler workers, seeds the store.
+    pub fn start(artifacts_dir: PathBuf, config: ServeConfig) -> Result<ServeEngine> {
+        let shared = Arc::new(Shared {
+            store: LatencyStore::new(config.link.clone(), config.seed, config.time_scale),
+            fr: SharedFrState::new(
+                2,
+                SimDuration::from_secs_f64(if config.freshen {
+                    config.prefetch_ttl_s
+                } else {
+                    // Baseline: no freshen cache; every request refetches
+                    // (invocation-scoped semantics).
+                    0.0
+                }),
+                config.time_scale,
+            ),
+            latencies: Mutex::new(Vec::new()),
+            fetch_hits: AtomicU64::new(0),
+            fetch_misses: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            started: Instant::now(),
+        });
+        shared.store.seed_object("model", config.model_bytes);
+
+        // Inference thread: owns all PJRT state.
+        let (infer_tx, infer_rx) = channel::<InferJob>();
+        let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        let max_batch_cfg = config.max_batch;
+        let window = config.batch_window;
+        let infer_thread = std::thread::Builder::new()
+            .name("inference".into())
+            .spawn(move || {
+                inference_loop(artifacts_dir, infer_rx, ready_tx, max_batch_cfg, window)
+            })
+            .context("spawning inference thread")?;
+        let _max_batch = ready_rx
+            .recv()
+            .context("inference thread died before ready")??;
+
+        // Handler workers.
+        let (req_tx, req_rx) = channel::<Request>();
+        let req_rx = Arc::new(Mutex::new(req_rx));
+        let mut workers = Vec::new();
+        for i in 0..config.workers {
+            let rx = Arc::clone(&req_rx);
+            let sh = Arc::clone(&shared);
+            let itx = infer_tx.clone();
+            let result_bytes = config.result_bytes;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("handler-{i}"))
+                    .spawn(move || handler_loop(rx, sh, itx, result_bytes))
+                    .context("spawning handler")?,
+            );
+        }
+
+        Ok(ServeEngine {
+            req_tx: Some(req_tx),
+            infer_tx: Some(infer_tx),
+            workers,
+            infer_thread: Some(infer_thread),
+            shared,
+            config,
+        })
+    }
+
+    /// Submit one request; returns the channel the outcome arrives on.
+    pub fn submit(&self, row: Vec<f32>) -> Receiver<RequestOutcome> {
+        let (tx, rx) = channel();
+        if let Some(q) = &self.req_tx {
+            let _ = q.send(Request { row, respond: tx });
+        }
+        rx
+    }
+
+    /// Run the freshen hook now (prediction admitted): prefetch the model
+    /// and establish+warm the store connection, concurrently with serving.
+    /// Returns the join handle so callers can overlap or wait.
+    pub fn freshen(&self) -> JoinHandle<()> {
+        let sh = Arc::clone(&self.shared);
+        let put_bytes = self.config.result_bytes;
+        std::thread::spawn(move || {
+            // Resource 0: prefetch the model object (Algorithm 2 lines 3-5).
+            if sh.fr.freshen_claim(0) {
+                let result = match sh.store.get("model") {
+                    Some((version, bytes)) => FrResult::Data {
+                        object_id: "model".into(),
+                        version,
+                        bytes,
+                    },
+                    None => FrResult::Failed,
+                };
+                sh.fr.freshen_finish(0, result);
+            }
+            // Resource 1: ensure + warm the put path (lines 6-8).
+            if sh.fr.freshen_claim(1) {
+                sh.store.ensure_connection();
+                sh.store.warm((put_bytes * 4.0).max(1e6));
+                sh.fr.freshen_finish(1, FrResult::Warmed);
+            }
+        })
+    }
+
+    /// Recycle fr_state (expired entries clear; fresh prefetches persist).
+    pub fn recycle(&self) {
+        self.shared.fr.recycle();
+    }
+
+    /// Aggregate report over everything served so far.
+    pub fn report(&self) -> ServeReport {
+        let lat = self.shared.latencies.lock().unwrap();
+        let ms: Vec<f64> = lat.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        let hits = self.shared.fetch_hits.load(Ordering::Relaxed);
+        let misses = self.shared.fetch_misses.load(Ordering::Relaxed);
+        let (gets, puts) = self.shared.store.counters();
+        let wall = self.shared.started.elapsed();
+        ServeReport {
+            requests: self.shared.completed.load(Ordering::Relaxed),
+            latency_ms: Summary::of(&ms),
+            throughput_rps: lat.len() as f64 / wall.as_secs_f64().max(1e-9),
+            fetch_hit_rate: if hits + misses == 0 {
+                0.0
+            } else {
+                hits as f64 / (hits + misses) as f64
+            },
+            store_gets: gets,
+            store_puts: puts,
+            wall,
+        }
+    }
+
+    /// Graceful shutdown: drain queues, join every thread.
+    pub fn shutdown(mut self) -> ServeReport {
+        let report_before = self.report();
+        self.req_tx.take(); // close the request channel
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.infer_tx.take(); // now the inference channel closes
+        if let Some(h) = self.infer_thread.take() {
+            let _ = h.join();
+        }
+        report_before
+    }
+}
+
+fn inference_loop(
+    artifacts_dir: PathBuf,
+    rx: Receiver<InferJob>,
+    ready: Sender<Result<usize>>,
+    max_batch_cfg: usize,
+    window: Duration,
+) {
+    let mut rt = match ClassifierRuntime::load(&artifacts_dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(rt.max_batch()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let max_batch = max_batch_cfg.min(rt.max_batch());
+    loop {
+        let Some(batch) = next_batch(&rx, max_batch, window, Duration::from_millis(50))
+        else {
+            return; // channel closed and drained
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        let rows: Vec<Vec<f32>> = batch.iter().map(|j| j.row.clone()).collect();
+        match rt.infer(&rows) {
+            Ok(outs) => {
+                for (job, out) in batch.into_iter().zip(outs.into_iter()) {
+                    let _ = job.reply.send(out);
+                }
+            }
+            Err(e) => {
+                eprintln!("inference error: {e:#}");
+                // Replies drop; handlers see a closed channel and fail the
+                // individual requests rather than the engine.
+            }
+        }
+    }
+}
+
+fn handler_loop(
+    rx: Arc<Mutex<Receiver<Request>>>,
+    sh: Arc<Shared>,
+    infer_tx: Sender<InferJob>,
+    result_bytes: f64,
+) {
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(req) = req else { return };
+        let t0 = Instant::now();
+
+        // Op 1 — FrFetch(0, DataGet(CREDS, "model")).
+        let (fetch_result, fetch_served) = sh.fr.fr_fetch(0, None, || {
+            match sh.store.get("model") {
+                Some((version, bytes)) => FrResult::Data {
+                    object_id: "model".into(),
+                    version,
+                    bytes,
+                },
+                None => FrResult::Failed,
+            }
+        });
+        match fetch_served {
+            Served::ByFreshen | Served::AfterWait => {
+                sh.fetch_hits.fetch_add(1, Ordering::Relaxed)
+            }
+            Served::BySelf => sh.fetch_misses.fetch_add(1, Ordering::Relaxed),
+        };
+        let _ = fetch_result; // payload size only matters for latency
+
+        // Op 2 — result := model(image): batched PJRT inference.
+        let (reply_tx, reply_rx) = channel();
+        if infer_tx
+            .send(InferJob {
+                row: req.row,
+                reply: reply_tx,
+            })
+            .is_err()
+        {
+            return; // engine shutting down
+        }
+        let Ok(logits) = reply_rx.recv() else {
+            continue; // inference failed for this request
+        };
+
+        // Op 3 — FrWarm(1, DataPut(CREDS, result)): the put always runs;
+        // freshen buys it a live, warmed connection.
+        let put_served = sh.fr.fr_warm(1, || {
+            // Unfreshened path: the function establishes lazily — i.e. it
+            // does nothing here and pays cold/dead costs inside put().
+        });
+        sh.store.put("result", result_bytes);
+
+        let latency = t0.elapsed();
+        sh.latencies.lock().unwrap().push(latency);
+        sh.completed.fetch_add(1, Ordering::Relaxed);
+        let _ = req.respond.send(RequestOutcome {
+            logits,
+            latency,
+            fetch_served,
+            put_served,
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! `fr_state` for real threads: Algorithms 4/5 with a mutex + condvar.
+//!
+//! The simulator implements `FrWait` as a parked event continuation; here
+//! it is a genuine blocking wait. The decision logic is the same pure
+//! function ([`crate::freshen::wrappers`]); this module supplies the
+//! synchronisation shell around it.
+
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::freshen::state::{Completer, FrEntry, FrResult, FrStatus};
+use crate::freshen::wrappers::{fr_fetch_decision, fr_warm_decision, WrapperDecision};
+use crate::util::time::{SimDuration, SimTime};
+
+/// Shared freshen resource list for one runtime (engine process).
+pub struct SharedFrState {
+    entries: Mutex<Vec<FrEntry>>,
+    cv: Condvar,
+    epoch: Instant,
+    /// Simulated-seconds per real second (matches the store's scale).
+    time_scale: f64,
+}
+
+/// Which side did the work for a resource access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Served {
+    /// Result came from the freshen hook (hit).
+    ByFreshen,
+    /// The caller did the work itself (miss).
+    BySelf,
+    /// The caller waited for an in-flight freshen, then consumed it.
+    AfterWait,
+}
+
+impl SharedFrState {
+    pub fn new(resources: usize, ttl: SimDuration, time_scale: f64) -> SharedFrState {
+        SharedFrState {
+            entries: Mutex::new((0..resources).map(|_| FrEntry::new(ttl)).collect()),
+            cv: Condvar::new(),
+            epoch: Instant::now(),
+            time_scale,
+        }
+    }
+
+    fn now(&self) -> SimTime {
+        let real = self.epoch.elapsed().as_secs_f64();
+        SimTime((real / self.time_scale * 1e6) as u64)
+    }
+
+    /// `FrFetch(id, work)` — returns the result and who produced it.
+    /// `work` runs OUTSIDE the lock (it does real network sleeps).
+    pub fn fr_fetch<F>(&self, id: usize, live_version: Option<u64>, work: F) -> (FrResult, Served)
+    where
+        F: FnOnce() -> FrResult,
+    {
+        let mut waited = false;
+        loop {
+            let mut g = self.entries.lock().unwrap();
+            match fr_fetch_decision(&mut g[id], self.now(), live_version) {
+                WrapperDecision::UseResult(r) => {
+                    return (
+                        r,
+                        if waited { Served::AfterWait } else { Served::ByFreshen },
+                    )
+                }
+                WrapperDecision::Wait => {
+                    waited = true;
+                    let _g = self
+                        .cv
+                        .wait_while(g, |entries| entries[id].status == FrStatus::Running)
+                        .unwrap();
+                    // loop to re-decide
+                }
+                WrapperDecision::DoItYourself => {
+                    drop(g); // run the real work unlocked
+                    let result = work();
+                    let mut g = self.entries.lock().unwrap();
+                    g[id].finish(result.clone(), self.now(), Completer::Function);
+                    self.cv.notify_all();
+                    return (result, Served::BySelf);
+                }
+            }
+        }
+    }
+
+    /// `FrWarm(id, work)` — same shape; `work` warms the resource.
+    pub fn fr_warm<F>(&self, id: usize, work: F) -> Served
+    where
+        F: FnOnce(),
+    {
+        let mut waited = false;
+        loop {
+            let mut g = self.entries.lock().unwrap();
+            match fr_warm_decision(&mut g[id], self.now()) {
+                WrapperDecision::UseResult(_) => {
+                    return if waited { Served::AfterWait } else { Served::ByFreshen }
+                }
+                WrapperDecision::Wait => {
+                    waited = true;
+                    let _g = self
+                        .cv
+                        .wait_while(g, |entries| entries[id].status == FrStatus::Running)
+                        .unwrap();
+                }
+                WrapperDecision::DoItYourself => {
+                    drop(g);
+                    work();
+                    let mut g = self.entries.lock().unwrap();
+                    g[id].finish(FrResult::Warmed, self.now(), Completer::Function);
+                    self.cv.notify_all();
+                    return Served::BySelf;
+                }
+            }
+        }
+    }
+
+    /// The freshen hook's side: claim resource `id` (Algorithm 2's
+    /// `running` marker). Returns false when the function got there first.
+    pub fn freshen_claim(&self, id: usize) -> bool {
+        let mut g = self.entries.lock().unwrap();
+        g[id].try_start(self.now())
+    }
+
+    /// The freshen hook's side: complete a claimed resource.
+    pub fn freshen_finish(&self, id: usize, result: FrResult) {
+        let mut g = self.entries.lock().unwrap();
+        g[id].finish(result, self.now(), Completer::Freshen);
+        self.cv.notify_all();
+    }
+
+    /// Recycle entries for the next cycle (keeps TTL-fresh data).
+    pub fn recycle(&self) {
+        let now = self.now();
+        let mut g = self.entries.lock().unwrap();
+        for e in g.iter_mut() {
+            e.recycle(now);
+        }
+    }
+
+    pub fn freshened_count(&self) -> usize {
+        let g = self.entries.lock().unwrap();
+        g.iter()
+            .filter(|e| e.completed_by == Some(Completer::Freshen))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn fr(n: usize) -> Arc<SharedFrState> {
+        Arc::new(SharedFrState::new(n, SimDuration::from_secs(10), 1.0))
+    }
+
+    fn data(v: u64) -> FrResult {
+        FrResult::Data {
+            object_id: "m".into(),
+            version: v,
+            bytes: 1.0,
+        }
+    }
+
+    #[test]
+    fn function_does_work_when_no_freshen() {
+        let st = fr(1);
+        let (r, served) = st.fr_fetch(0, None, || data(1));
+        assert_eq!(served, Served::BySelf);
+        assert!(matches!(r, FrResult::Data { version: 1, .. }));
+        // Second access within TTL: served from the finished entry.
+        let (_, served2) = st.fr_fetch(0, None, || panic!("must not refetch"));
+        assert_eq!(served2, Served::ByFreshen); // entry reuse path
+    }
+
+    #[test]
+    fn freshen_first_then_function_hits() {
+        let st = fr(1);
+        assert!(st.freshen_claim(0));
+        st.freshen_finish(0, data(7));
+        let (r, served) = st.fr_fetch(0, None, || panic!("freshened"));
+        assert_eq!(served, Served::ByFreshen);
+        assert!(matches!(r, FrResult::Data { version: 7, .. }));
+        assert_eq!(st.freshened_count(), 1);
+    }
+
+    #[test]
+    fn function_waits_for_inflight_freshen() {
+        let st = fr(1);
+        assert!(st.freshen_claim(0));
+        let st2 = Arc::clone(&st);
+        // Freshen completes from another thread after 50ms.
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            st2.freshen_finish(0, data(3));
+        });
+        let t0 = Instant::now();
+        let (r, served) = st.fr_fetch(0, None, || panic!("should wait, not redo"));
+        assert_eq!(served, Served::AfterWait);
+        assert!(matches!(r, FrResult::Data { version: 3, .. }));
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn late_freshen_loses_the_race() {
+        let st = fr(1);
+        let (_, served) = st.fr_fetch(0, None, || data(1));
+        assert_eq!(served, Served::BySelf);
+        // Freshen arrives late: entry is finished-and-fresh, claim fails.
+        assert!(!st.freshen_claim(0));
+    }
+
+    #[test]
+    fn warm_path_claims_and_waits() {
+        let st = fr(2);
+        assert!(st.freshen_claim(1));
+        st.freshen_finish(1, FrResult::Warmed);
+        assert_eq!(st.fr_warm(1, || panic!("warmed")), Served::ByFreshen);
+        // Unfreshened resource: function warms it itself.
+        let mut ran = false;
+        assert_eq!(st.fr_warm(0, || ran = true), Served::BySelf);
+        assert!(ran);
+    }
+
+    #[test]
+    fn concurrent_functions_do_work_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let st = fr(1);
+        let count = Arc::new(AtomicU32::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let st = Arc::clone(&st);
+            let count = Arc::clone(&count);
+            handles.push(std::thread::spawn(move || {
+                let (_, _) = st.fr_fetch(0, None, || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(20));
+                    data(1)
+                });
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 1, "work must run once");
+    }
+}

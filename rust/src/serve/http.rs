@@ -1,0 +1,303 @@
+//! Minimal HTTP/1.1 front end for the serving engine.
+//!
+//! Makes `repro serve --listen ADDR` a real service (the shape of a
+//! vLLM-style router): requests come in over TCP, handlers run the λ1
+//! pipeline (freshen-accelerated), and operational state is inspectable.
+//!
+//! Routes:
+//! - `POST /classify` — body `{"image": [3072 floats]}` (or empty for a
+//!   deterministic test image). Returns logits + latency.
+//! - `POST /freshen` — run the freshen hook now (returns 202).
+//! - `GET /stats` — the engine's aggregate report as JSON.
+//! - `GET /healthz` — liveness.
+//!
+//! No HTTP library exists in the offline vendor set; this is a small,
+//! careful HTTP/1.1 implementation (request-line + headers +
+//! content-length bodies, `Connection: close` semantics).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::serve::engine::ServeEngine;
+use crate::util::json::Json;
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Parse one request from a buffered stream.
+pub fn parse_request<R: BufRead>(r: &mut R) -> Result<HttpRequest> {
+    let mut line = String::new();
+    r.read_line(&mut line).context("reading request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        anyhow::bail!("unsupported version {version}");
+    }
+    // Headers.
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).context("reading header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().context("bad content-length")?;
+            }
+        }
+    }
+    const MAX_BODY: usize = 4 * 1024 * 1024;
+    if content_length > MAX_BODY {
+        anyhow::bail!("body too large: {content_length}");
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body).context("reading body")?;
+    Ok(HttpRequest { method, path, body })
+}
+
+/// Serialize a response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+fn json_response<W: Write>(w: &mut W, status: u16, body: &Json) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write_response(w, status, reason, "application/json", &body.to_string())
+}
+
+/// The HTTP server wrapping a [`ServeEngine`].
+pub struct HttpServer {
+    engine: Arc<ServeEngine>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (e.g. `"127.0.0.1:8080"`; port 0 picks a free port).
+    pub fn bind(engine: Arc<ServeEngine>, addr: &str) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        Ok(HttpServer {
+            engine,
+            listener,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.listener.local_addr().expect("bound")
+    }
+
+    /// A handle that stops the accept loop (from another thread).
+    pub fn stopper(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    /// Accept-and-serve loop; returns when the stopper fires.
+    pub fn run(&self) -> Result<()> {
+        self.listener
+            .set_nonblocking(true)
+            .context("set_nonblocking")?;
+        loop {
+            if self.stop.load(Ordering::Relaxed) {
+                return Ok(());
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let engine = Arc::clone(&self.engine);
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(stream, &engine);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e).context("accept"),
+            }
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, engine: &ServeEngine) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let req = match parse_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let body = Json::obj(vec![("error", Json::str(&format!("{e:#}")))]);
+            json_response(&mut out, 400, &body)?;
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            json_response(&mut out, 200, &Json::obj(vec![("ok", Json::Bool(true))]))?;
+        }
+        ("GET", "/stats") => {
+            let r = engine.report();
+            let lat = r.latency_ms;
+            let body = Json::obj(vec![
+                ("requests", Json::num(r.requests as f64)),
+                (
+                    "p50_ms",
+                    Json::num(lat.as_ref().map(|s| s.p50).unwrap_or(0.0)),
+                ),
+                (
+                    "p99_ms",
+                    Json::num(lat.as_ref().map(|s| s.p99).unwrap_or(0.0)),
+                ),
+                ("throughput_rps", Json::num(r.throughput_rps)),
+                ("fetch_hit_rate", Json::num(r.fetch_hit_rate)),
+                ("store_gets", Json::num(r.store_gets as f64)),
+                ("store_puts", Json::num(r.store_puts as f64)),
+            ]);
+            json_response(&mut out, 200, &body)?;
+        }
+        ("POST", "/freshen") => {
+            // Non-blocking, like the provider calling the hook on a
+            // prediction: fire and acknowledge.
+            let _handle = engine.freshen();
+            json_response(
+                &mut out,
+                202,
+                &Json::obj(vec![("freshen", Json::str("started"))]),
+            )?;
+        }
+        ("POST", "/classify") => {
+            let image: Vec<f32> = if req.body.is_empty() {
+                (0..3072).map(|j| (j % 23) as f32 / 23.0).collect()
+            } else {
+                let text = String::from_utf8_lossy(&req.body);
+                match Json::parse(&text)
+                    .ok()
+                    .and_then(|j| j.get("image").and_then(Json::as_arr).map(|a| a.to_vec()))
+                {
+                    Some(arr) => arr.iter().filter_map(Json::as_f64).map(|v| v as f32).collect(),
+                    None => {
+                        json_response(
+                            &mut out,
+                            400,
+                            &Json::obj(vec![(
+                                "error",
+                                Json::str("body must be {\"image\": [floats]}"),
+                            )]),
+                        )?;
+                        return Ok(());
+                    }
+                }
+            };
+            let rx = engine.submit(image);
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(outcome) => {
+                    let body = Json::obj(vec![
+                        (
+                            "logits",
+                            Json::arr(outcome.logits.iter().map(|&v| Json::num(v as f64))),
+                        ),
+                        (
+                            "latency_ms",
+                            Json::num(outcome.latency.as_secs_f64() * 1e3),
+                        ),
+                        (
+                            "fetch_served_by_freshen",
+                            Json::Bool(!matches!(
+                                outcome.fetch_served,
+                                crate::serve::fr::Served::BySelf
+                            )),
+                        ),
+                    ]);
+                    json_response(&mut out, 200, &body)?;
+                }
+                Err(_) => {
+                    json_response(
+                        &mut out,
+                        500,
+                        &Json::obj(vec![("error", Json::str("request timed out"))]),
+                    )?;
+                }
+            }
+        }
+        _ => {
+            json_response(
+                &mut out,
+                404,
+                &Json::obj(vec![("error", Json::str("not found"))]),
+            )?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /classify HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/classify");
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /stats HTTP/1.1\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        let req = parse_request(&mut r).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_and_oversized() {
+        let raw = b"NONSENSE\r\n\r\n";
+        let mut r = std::io::BufReader::new(&raw[..]);
+        assert!(parse_request(&mut r).is_err());
+        let big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 100 << 20);
+        let mut r = std::io::BufReader::new(big.as_bytes());
+        assert!(parse_request(&mut r).is_err());
+    }
+
+    #[test]
+    fn response_format() {
+        let mut buf = Vec::new();
+        write_response(&mut buf, 200, "OK", "application/json", "{}").unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\n{}"));
+    }
+}

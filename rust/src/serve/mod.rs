@@ -1,0 +1,36 @@
+//! Real-time serving engine.
+//!
+//! The second substrate for the freshen runtime (the first is the
+//! deterministic simulator in [`crate::platform`]): real threads, real
+//! latencies, and the real PJRT-compiled classifier on the request path.
+//! This is what the end-to-end example (`examples/ml_pipeline.rs`) and the
+//! e2e bench run.
+//!
+//! Architecture (vLLM-router-style, scaled to one process):
+//!
+//! ```text
+//!  clients ──> router (mpsc) ──> handler workers ──┐
+//!                                    │ FrFetch     │ submit
+//!                              [LatencyStore]      ▼
+//!                                    │         dynamic batcher
+//!                 freshen thread ────┘              │
+//!               (prefetch + warm,           inference thread
+//!                condvar FrWait)           (owns ClassifierRuntime,
+//!                                            not-Send PJRT state)
+//! ```
+//!
+//! - [`store`] — the remote datastore with netsim-derived latencies
+//!   injected as real (scaled) sleeps.
+//! - [`fr`] — `fr_state` shared across threads: Algorithms 4/5 with a
+//!   mutex + condvar (`FrWait` is a real blocking wait here).
+//! - [`batcher`] — dynamic batching: collect up to `max_batch` requests or
+//!   `batch_window`, whichever first.
+//! - [`engine`] — wiring, lifecycle, latency reporting.
+
+pub mod batcher;
+pub mod engine;
+pub mod fr;
+pub mod http;
+pub mod store;
+
+pub use engine::{ServeConfig, ServeEngine, ServeReport};

@@ -1,0 +1,272 @@
+//! The serving engine's remote datastore.
+//!
+//! An in-process object store whose access latencies come from the same
+//! fluid TCP model the simulator uses ([`crate::netsim`]) — but here they
+//! are *slept* for real (scaled by `time_scale` so tests stay fast). The
+//! connection object carries genuine state: idle decay means a connection
+//! that sat unused really is slower until warmed, which is exactly what
+//! the freshen thread fixes ahead of requests.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::netsim::cc::CongestionControl;
+use crate::netsim::link::Link;
+use crate::netsim::tcp::{Connection, TransferDirection};
+use crate::netsim::warm::{warm_cwnd, CwndHistory, WarmPolicy};
+use crate::util::rng::Rng;
+use crate::util::time::SimTime;
+
+struct Inner {
+    objects: HashMap<String, (u64, f64)>, // id -> (version, bytes)
+    conn: Connection,
+    rng: Rng,
+    history: CwndHistory,
+    pub gets: u64,
+    pub puts: u64,
+}
+
+/// Thread-safe store with latency injection.
+pub struct LatencyStore {
+    inner: Mutex<Inner>,
+    epoch: Instant,
+    /// Real seconds slept per simulated second (0.01 -> 100x faster).
+    pub time_scale: f64,
+}
+
+impl LatencyStore {
+    pub fn new(link: Link, seed: u64, time_scale: f64) -> LatencyStore {
+        LatencyStore {
+            inner: Mutex::new(Inner {
+                objects: HashMap::new(),
+                conn: Connection::new(link, CongestionControl::Cubic),
+                rng: Rng::new(seed),
+                history: CwndHistory::new(),
+                gets: 0,
+                puts: 0,
+            }),
+            epoch: Instant::now(),
+            time_scale,
+        }
+    }
+
+    /// Simulated "now": real elapsed time mapped back to full-rate time,
+    /// so connection idle decay happens at the modelled rate.
+    fn sim_now(&self) -> SimTime {
+        let real = self.epoch.elapsed().as_secs_f64();
+        SimTime((real / self.time_scale * 1e6) as u64)
+    }
+
+    fn sleep_scaled(&self, sim_seconds: f64) {
+        let real = sim_seconds * self.time_scale;
+        if real > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(real));
+        }
+    }
+
+    /// Seed an object without latency (setup).
+    pub fn seed_object(&self, id: &str, bytes: f64) {
+        let mut g = self.inner.lock().unwrap();
+        let v = g.objects.get(id).map(|(v, _)| v + 1).unwrap_or(1);
+        g.objects.insert(id.to_string(), (v, bytes));
+    }
+
+    /// Ensure the connection is live (freshen's `EnsureConnection`):
+    /// keepalive or (re)establish. Returns the simulated seconds spent.
+    pub fn ensure_connection(&self) -> f64 {
+        let now = self.sim_now();
+        let spent;
+        {
+            let g = &mut *self.inner.lock().unwrap();
+            let mut t = 0.0;
+            match g.conn.state {
+                crate::netsim::tcp::ConnState::Established => {
+                    let (d, alive) = g.conn.keepalive(now, &mut g.rng);
+                    t += d.as_secs_f64();
+                    if !alive {
+                        t += g.conn.connect(now, &mut g.rng).as_secs_f64();
+                    }
+                }
+                _ => {
+                    t += g.conn.connect(now, &mut g.rng).as_secs_f64();
+                }
+            }
+            spent = t;
+        }
+        self.sleep_scaled(spent);
+        spent
+    }
+
+    /// Warm the upload window toward `anticipated_bytes` (freshen's
+    /// `WarmCwnd`). Returns simulated seconds spent probing.
+    pub fn warm(&self, anticipated_bytes: f64) -> f64 {
+        self.ensure_connection();
+        let now = self.sim_now();
+        let spent;
+        {
+            let g = &mut *self.inner.lock().unwrap();
+            let (_outcome, probe) = warm_cwnd(
+                &mut g.conn,
+                TransferDirection::Upload,
+                anticipated_bytes,
+                &WarmPolicy::default(),
+                &mut g.history,
+                now,
+                &mut g.rng,
+            );
+            // Symmetric warm for downloads too (model fetches).
+            let (_o2, _p2) = warm_cwnd(
+                &mut g.conn,
+                TransferDirection::Download,
+                anticipated_bytes,
+                &WarmPolicy::default(),
+                &mut g.history,
+                now,
+                &mut g.rng,
+            );
+            spent = probe.as_secs_f64();
+        }
+        self.sleep_scaled(spent);
+        spent
+    }
+
+    /// Fetch an object, paying connection + transfer latency for real.
+    /// Returns `(version, bytes)` or `None` when missing.
+    pub fn get(&self, id: &str) -> Option<(u64, f64)> {
+        let now = self.sim_now();
+        let (spent, found) = {
+            let g = &mut *self.inner.lock().unwrap();
+            g.gets += 1;
+            let mut t = usable(&mut g.conn, &mut g.rng, now);
+            let found = g.objects.get(id).copied();
+            let resp_bytes = found.map(|(_, b)| b).unwrap_or(256.0);
+            t += g
+                .conn
+                .request_response(now, &mut g.rng, 256.0, resp_bytes, 1e-3)
+                .as_secs_f64();
+            (t, found)
+        };
+        self.sleep_scaled(spent);
+        found
+    }
+
+    /// Write an object, paying upload latency (benefits from warming).
+    pub fn put(&self, id: &str, bytes: f64) -> u64 {
+        let now = self.sim_now();
+        let (spent, version) = {
+            let g = &mut *self.inner.lock().unwrap();
+            g.puts += 1;
+            let mut t = usable(&mut g.conn, &mut g.rng, now);
+            t += g.conn.send_with_ack(now, &mut g.rng, bytes, 1e-3).as_secs_f64();
+            let v = g.objects.get(id).map(|(v, _)| v + 1).unwrap_or(1);
+            g.objects.insert(id.to_string(), (v, bytes));
+            (t, v)
+        };
+        self.sleep_scaled(spent);
+        version
+    }
+
+    /// Current store op counters `(gets, puts)`.
+    pub fn counters(&self) -> (u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.gets, g.puts)
+    }
+
+    /// Upload cwnd right now (reporting: shows the warming effect).
+    pub fn upload_cwnd(&self) -> f64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .conn
+            .cwnd(TransferDirection::Upload)
+    }
+}
+
+/// Function-side connection use without a liveness check (see
+/// `platform::exec::usable_connection` for the simulator twin).
+fn usable(conn: &mut Connection, rng: &mut Rng, now: SimTime) -> f64 {
+    use crate::netsim::tcp::ConnState;
+    let mut t = 0.0;
+    let dead = match conn.state {
+        ConnState::Established => {
+            if conn.idle_expired(now) {
+                conn.kill();
+                t += conn.rto();
+                true
+            } else {
+                false
+            }
+        }
+        _ => true,
+    };
+    if dead {
+        t += conn.connect(now, rng).as_secs_f64();
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::Site;
+
+    fn store() -> LatencyStore {
+        // 1000x time compression so tests run in ms.
+        LatencyStore::new(Site::Remote.link(), 7, 0.001)
+    }
+
+    #[test]
+    fn get_put_roundtrip_with_latency() {
+        let s = store();
+        s.seed_object("model", 1e6);
+        let t0 = Instant::now();
+        let got = s.get("model").unwrap();
+        assert_eq!(got.0, 1);
+        assert_eq!(got.1, 1e6);
+        // Paid some (scaled) latency: >= 50ms RTT * 0.001 = 50us.
+        assert!(t0.elapsed() > Duration::from_micros(10));
+        let v = s.put("out", 64.0 * 1024.0);
+        assert_eq!(v, 1);
+        assert_eq!(s.counters(), (1, 1));
+    }
+
+    #[test]
+    fn missing_object_is_none_but_still_costs() {
+        let s = store();
+        assert!(s.get("ghost").is_none());
+        assert_eq!(s.counters(), (1, 0));
+    }
+
+    #[test]
+    fn warm_grows_upload_window() {
+        let s = store();
+        s.ensure_connection();
+        let before = s.upload_cwnd();
+        s.warm(8e6);
+        assert!(s.upload_cwnd() > 4.0 * before);
+    }
+
+    #[test]
+    fn warmed_put_is_faster() {
+        let big = 5e6;
+        let cold = store();
+        cold.seed_object("x", 1.0);
+        cold.ensure_connection();
+        let t0 = Instant::now();
+        cold.put("out", big);
+        let cold_t = t0.elapsed();
+
+        let warm = store();
+        warm.seed_object("x", 1.0);
+        warm.ensure_connection();
+        warm.warm(8e6);
+        let t1 = Instant::now();
+        warm.put("out", big);
+        let warm_t = t1.elapsed();
+        assert!(
+            warm_t < cold_t,
+            "warmed {warm_t:?} should beat cold {cold_t:?}"
+        );
+    }
+}

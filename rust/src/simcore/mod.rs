@@ -1,0 +1,313 @@
+//! Deterministic discrete-event simulation engine.
+//!
+//! Every paper experiment (Table 1's 20 k trigger runs, Figures 4–6's
+//! transfer sweeps, the chain workloads) runs on this engine: a binary-heap
+//! event queue over virtual microseconds ([`crate::util::time::SimTime`]),
+//! with strictly deterministic ordering — events at the same timestamp fire
+//! in schedule order (FIFO by sequence number), so a given seed always
+//! produces the same run.
+//!
+//! # Model
+//!
+//! The engine is generic over a *world* type `W` (the mutable simulation
+//! state — the platform, network, stores). Events are boxed `FnOnce(&mut
+//! Sim<W>, &mut W)` closures; an event may schedule further events, cancel
+//! pending ones, and mutate the world. "Processes" that block (e.g. the
+//! paper's `FrWait`) are written in continuation-passing style: the waiter
+//! registers a callback that the completing event fires.
+
+pub mod waitlist;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::util::fxhash::FxHashSet;
+
+use crate::util::time::{SimDuration, SimTime};
+
+/// Identifier of a scheduled event, usable for cancellation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct EventId(u64);
+
+type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+
+struct Scheduled<W> {
+    at: SimTime,
+    seq: u64,
+    f: EventFn<W>,
+}
+
+// Order the heap as a *min*-heap on (time, seq).
+impl<W> PartialEq for Scheduled<W> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<W> Eq for Scheduled<W> {}
+impl<W> PartialOrd for Scheduled<W> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<W> Ord for Scheduled<W> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// The simulation engine: virtual clock + event queue.
+pub struct Sim<W> {
+    now: SimTime,
+    seq: u64,
+    queue: BinaryHeap<Scheduled<W>>,
+    cancelled: FxHashSet<u64>,
+    executed: u64,
+    /// Hard cap on executed events; guards against runaway feedback loops
+    /// in experiments (0 = unlimited).
+    pub max_events: u64,
+}
+
+impl<W> Default for Sim<W> {
+    fn default() -> Self {
+        Sim::new()
+    }
+}
+
+impl<W> Sim<W> {
+    pub fn new() -> Sim<W> {
+        Sim {
+            now: SimTime::ZERO,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            cancelled: FxHashSet::default(),
+            executed: 0,
+            max_events: 0,
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events executed so far.
+    pub fn executed(&self) -> u64 {
+        self.executed
+    }
+
+    /// Number of events still pending.
+    pub fn pending(&self) -> usize {
+        self.queue.len() - self.cancelled.len().min(self.queue.len())
+    }
+
+    /// Schedule `f` to run after `delay`. Returns an id for cancellation.
+    pub fn schedule<F>(&mut self, delay: SimDuration, f: F) -> EventId
+    where
+        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+    {
+        self.schedule_at(self.now + delay, f)
+    }
+
+    /// Schedule `f` at an absolute virtual time (must not be in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F) -> EventId
+    where
+        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+    {
+        debug_assert!(at >= self.now, "scheduling into the past");
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Scheduled {
+            at: at.max(self.now),
+            seq,
+            f: Box::new(f),
+        });
+        EventId(seq)
+    }
+
+    /// Schedule `f` to run immediately after the current event (same
+    /// timestamp, FIFO order). The paper's freshen hook firing "simultaneously"
+    /// with `run` is modelled with two `immediate` events.
+    pub fn immediate<F>(&mut self, f: F) -> EventId
+    where
+        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+    {
+        self.schedule(SimDuration::ZERO, f)
+    }
+
+    /// Cancel a pending event. Cancelling an already-fired or already-
+    /// cancelled event is a no-op (returns false).
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if id.0 >= self.seq {
+            return false;
+        }
+        self.cancelled.insert(id.0)
+    }
+
+    /// Run one event; returns false when the queue is exhausted.
+    pub fn step(&mut self, world: &mut W) -> bool {
+        loop {
+            match self.queue.pop() {
+                None => return false,
+                Some(ev) => {
+                    // Fast path: no cancellations outstanding (the common
+                    // case) skips the tombstone lookup entirely.
+                    if !self.cancelled.is_empty() && self.cancelled.remove(&ev.seq) {
+                        continue; // tombstoned
+                    }
+                    debug_assert!(ev.at >= self.now);
+                    self.now = ev.at;
+                    self.executed += 1;
+                    (ev.f)(self, world);
+                    return true;
+                }
+            }
+        }
+    }
+
+    /// Run until the queue is empty (or `max_events` is hit).
+    pub fn run(&mut self, world: &mut W) {
+        while self.step(world) {
+            if self.max_events != 0 && self.executed >= self.max_events {
+                panic!(
+                    "simulation exceeded max_events={} at t={}",
+                    self.max_events, self.now
+                );
+            }
+        }
+    }
+
+    /// Run until virtual time `until` (events at exactly `until` still run).
+    pub fn run_until(&mut self, world: &mut W, until: SimTime) {
+        while let Some(head) = self.queue.peek() {
+            if head.at > until {
+                break;
+            }
+            self.step(world);
+            if self.max_events != 0 && self.executed >= self.max_events {
+                panic!("simulation exceeded max_events={}", self.max_events);
+            }
+        }
+        // Even with no events, time logically advances to `until`.
+        if self.now < until {
+            self.now = until;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct World {
+        log: Vec<(u64, &'static str)>,
+    }
+
+    #[test]
+    fn events_fire_in_time_order() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.schedule(SimDuration::from_millis(20), |s, w| {
+            w.log.push((s.now().micros(), "b"))
+        });
+        sim.schedule(SimDuration::from_millis(10), |s, w| {
+            w.log.push((s.now().micros(), "a"))
+        });
+        sim.schedule(SimDuration::from_millis(30), |s, w| {
+            w.log.push((s.now().micros(), "c"))
+        });
+        sim.run(&mut w);
+        assert_eq!(
+            w.log,
+            vec![(10_000, "a"), (20_000, "b"), (30_000, "c")]
+        );
+        assert_eq!(sim.executed(), 3);
+    }
+
+    #[test]
+    fn same_time_events_are_fifo() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        for name in ["first", "second", "third"] {
+            sim.schedule(SimDuration::from_millis(5), move |s, w| {
+                w.log.push((s.now().micros(), name))
+            });
+        }
+        sim.run(&mut w);
+        let names: Vec<&str> = w.log.iter().map(|(_, n)| *n).collect();
+        assert_eq!(names, vec!["first", "second", "third"]);
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.schedule(SimDuration::from_millis(1), |s, _| {
+            s.schedule(SimDuration::from_millis(1), |s, w: &mut World| {
+                w.log.push((s.now().micros(), "nested"));
+            });
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(2_000, "nested")]);
+    }
+
+    #[test]
+    fn cancellation() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        let id = sim.schedule(SimDuration::from_millis(1), |s, w| {
+            w.log.push((s.now().micros(), "cancelled"))
+        });
+        sim.schedule(SimDuration::from_millis(2), |s, w| {
+            w.log.push((s.now().micros(), "kept"))
+        });
+        assert!(sim.cancel(id));
+        assert!(!sim.cancel(id)); // double-cancel is a no-op
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(2_000, "kept")]);
+    }
+
+    #[test]
+    fn run_until_stops_and_advances_clock() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.schedule(SimDuration::from_secs(1), |s, w| {
+            w.log.push((s.now().micros(), "late"))
+        });
+        sim.run_until(&mut w, SimTime(500_000));
+        assert!(w.log.is_empty());
+        assert_eq!(sim.now(), SimTime(500_000));
+        sim.run(&mut w);
+        assert_eq!(w.log.len(), 1);
+    }
+
+    #[test]
+    fn immediate_runs_at_same_timestamp() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.schedule(SimDuration::from_millis(3), |s, w: &mut World| {
+            let t0 = s.now();
+            w.log.push((t0.micros(), "outer"));
+            s.immediate(move |s, w: &mut World| {
+                assert_eq!(s.now(), t0);
+                w.log.push((s.now().micros(), "inner"));
+            });
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(3_000, "outer"), (3_000, "inner")]);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_events")]
+    fn max_events_guards_runaway() {
+        fn tick(s: &mut Sim<World>, _w: &mut World) {
+            s.schedule(SimDuration::from_micros(1), tick);
+        }
+        let mut sim: Sim<World> = Sim::new();
+        sim.max_events = 1000;
+        let mut w = World::default();
+        sim.schedule(SimDuration::ZERO, tick);
+        sim.run(&mut w);
+    }
+}

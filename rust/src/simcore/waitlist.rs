@@ -1,0 +1,133 @@
+//! Wait lists: the continuation-passing primitive behind the paper's
+//! `FrWait` (Algorithms 4/5).
+//!
+//! A [`WaitList`] holds callbacks registered by simulated "threads" that are
+//! blocked on a condition (a freshen resource finishing, a container
+//! becoming free). When the owning component completes the condition it
+//! drains the list and schedules every waiter as an `immediate` event, so
+//! waiters resume at the completion timestamp in registration order —
+//! exactly the semantics of waking threads blocked on a condition variable.
+
+use crate::simcore::Sim;
+
+type Waiter<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+
+/// A set of parked continuations keyed by nothing (one list per condition).
+pub struct WaitList<W> {
+    waiters: Vec<Waiter<W>>,
+}
+
+impl<W: 'static> Default for WaitList<W> {
+    fn default() -> Self {
+        WaitList::new()
+    }
+}
+
+impl<W: 'static> WaitList<W> {
+    pub fn new() -> WaitList<W> {
+        WaitList {
+            waiters: Vec::new(),
+        }
+    }
+
+    /// Park a continuation until [`WaitList::wake_all`].
+    pub fn wait<F>(&mut self, f: F)
+    where
+        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+    {
+        self.waiters.push(Box::new(f));
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.waiters.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.waiters.len()
+    }
+
+    /// Wake every parked waiter at the current timestamp (FIFO).
+    ///
+    /// Waiters are *scheduled*, not called inline, so the waker's own event
+    /// finishes first — mirroring a notify-then-return condition variable.
+    pub fn wake_all(&mut self, sim: &mut Sim<W>) {
+        for w in self.waiters.drain(..) {
+            sim.immediate(w);
+        }
+    }
+
+    /// Wake only the first parked waiter, if any (for capacity tokens).
+    pub fn wake_one(&mut self, sim: &mut Sim<W>) -> bool {
+        if self.waiters.is_empty() {
+            return false;
+        }
+        let w = self.waiters.remove(0);
+        sim.immediate(w);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::SimDuration;
+
+    #[derive(Default)]
+    struct World {
+        list: Option<WaitList<World>>,
+        log: Vec<&'static str>,
+    }
+
+    #[test]
+    fn waiters_wake_in_order_at_completion_time() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World {
+            list: Some(WaitList::new()),
+            ..Default::default()
+        };
+        // Two "threads" block at t=1ms and t=2ms.
+        sim.schedule(SimDuration::from_millis(1), |_, w: &mut World| {
+            w.list.as_mut().unwrap().wait(|s, w| {
+                assert_eq!(s.now().micros(), 5_000);
+                w.log.push("waiter-a");
+            });
+        });
+        sim.schedule(SimDuration::from_millis(2), |_, w: &mut World| {
+            w.list.as_mut().unwrap().wait(|s, w| {
+                assert_eq!(s.now().micros(), 5_000);
+                w.log.push("waiter-b");
+            });
+        });
+        // Completion at t=5ms wakes both.
+        sim.schedule(SimDuration::from_millis(5), |s, w: &mut World| {
+            w.log.push("complete");
+            let mut list = w.list.take().unwrap();
+            list.wake_all(s);
+            w.list = Some(list);
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec!["complete", "waiter-a", "waiter-b"]);
+    }
+
+    #[test]
+    fn wake_one_releases_single_waiter() {
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World {
+            list: Some(WaitList::new()),
+            ..Default::default()
+        };
+        sim.schedule(SimDuration::from_millis(1), |_, w: &mut World| {
+            let list = w.list.as_mut().unwrap();
+            list.wait(|_, w| w.log.push("first"));
+            list.wait(|_, w| w.log.push("second"));
+        });
+        sim.schedule(SimDuration::from_millis(2), |s, w: &mut World| {
+            let mut list = w.list.take().unwrap();
+            assert!(list.wake_one(s));
+            assert_eq!(list.len(), 1);
+            w.list = Some(list);
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec!["first"]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Minimal benchmarking harness (offline `criterion` substitute).
+//!
+//! Used by every target in `rust/benches/` (declared `harness = false`).
+//! Reports per-iteration wall time with warmup, mean, p50, and min —
+//! enough to drive the §Perf iteration loop and to print the paper-table
+//! regeneration timings alongside the tables themselves.
+
+use std::time::{Duration, Instant};
+
+/// Timing result for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<38} iters={:<4} mean={:>12?} p50={:>12?} min={:>12?} max={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.min, self.max
+        );
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` `iters` times (after `warmup` throwaway runs) and report.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        min: samples[0],
+        max: samples[iters - 1],
+    };
+    r.print();
+    r
+}
+
+/// Time one execution of `f`, returning `(result, elapsed)`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+/// Throughput helper: ops per second given work count and duration.
+pub fn throughput(ops: u64, elapsed: Duration) -> f64 {
+    ops as f64 / elapsed.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_stats() {
+        let r = bench("noop", 1, 16, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.iters, 16);
+        assert!(r.min <= r.p50 && r.p50 <= r.max);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput(100, Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d >= Duration::ZERO);
+    }
+}

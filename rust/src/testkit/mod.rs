@@ -1,0 +1,9 @@
+//! Test utilities: the in-repo property-testing harness.
+//!
+//! `proptest` is not in the offline vendor set, so [`prop`] provides the
+//! subset we need: seeded generators, a many-cases runner with failing-seed
+//! reporting, and simple shrinking over integer parameters. Coordinator
+//! invariants (routing, batching, fr_state) use it from `rust/tests/`.
+
+pub mod bench;
+pub mod prop;

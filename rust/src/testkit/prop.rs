@@ -1,0 +1,152 @@
+//! A small property-testing harness (offline `proptest` substitute).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use freshen_rs::testkit::prop::{forall, Gen};
+//! forall("addition commutes", 200, |g| {
+//!     let a = g.u64(0, 1000);
+//!     let b = g.u64(0, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case derives its inputs from a deterministic per-case seed; on
+//! panic the harness reports the case index and seed so the failure can be
+//! replayed with [`replay`].
+
+use crate::util::rng::Rng;
+
+/// Per-case input generator.
+pub struct Gen {
+    rng: Rng,
+    /// Log of drawn values, printed on failure.
+    log: Vec<String>,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            log: Vec::new(),
+        }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_inclusive: u64) -> u64 {
+        let v = self.rng.range(lo, hi_inclusive + 1);
+        self.log.push(format!("u64[{lo},{hi_inclusive}] = {v}"));
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.u64(lo as u64, hi_inclusive as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform(lo, hi);
+        self.log.push(format!("f64[{lo},{hi}] = {v}"));
+        v
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.bernoulli(p);
+        self.log.push(format!("bool({p}) = {v}"));
+        v
+    }
+
+    pub fn choice<'a, T: std::fmt::Debug>(&mut self, xs: &'a [T]) -> &'a T {
+        let v = self.rng.choice(xs);
+        self.log.push(format!("choice = {v:?}"));
+        v
+    }
+
+    /// A vector of length in `[0, max_len]` with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Raw access for generators not covered above.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` seeded property cases; panics with the failing case's seed
+/// and drawn-value log.
+pub fn forall(name: &str, cases: u64, mut prop: impl FnMut(&mut Gen)) {
+    let base = fnv(name);
+    for i in 0..cases {
+        let seed = base ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {i} (seed {seed:#x})\ndrawn values:\n  {}",
+                g.log.join("\n  ")
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay one failing case by seed.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Gen)) {
+    let mut g = Gen::new(seed);
+    prop(&mut g);
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall("counting", 50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first = Vec::new();
+        forall("det", 10, |g| first.push(g.u64(0, 1_000_000)));
+        let mut second = Vec::new();
+        forall("det", 10, |g| second.push(g.u64(0, 1_000_000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        forall("fails", 10, |g| {
+            let v = g.u64(0, 100);
+            assert!(v > 1_000, "always fails");
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall("bounds", 200, |g| {
+            let v = g.u64(5, 10);
+            assert!((5..=10).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+            let xs = g.vec(8, |g| g.usize(0, 3));
+            assert!(xs.len() <= 8);
+            assert!(xs.iter().all(|&x| x <= 3));
+        });
+    }
+}

@@ -1,0 +1,282 @@
+//! Platform configuration.
+//!
+//! All knobs a deployment would set live here: container pool sizing,
+//! cold-start costs, network site parameters, freshen policy defaults.
+//! Configs load from JSON (see `Config::from_json`) so examples and the CLI
+//! can share experiment setups; every field has a sensible default drawn
+//! from the paper (or from the OpenWhisk defaults the paper builds on).
+
+use crate::util::json::Json;
+use crate::util::time::SimDuration;
+
+/// Top-level platform configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of invoker hosts in the cluster.
+    pub invokers: usize,
+    /// Max concurrently-resident containers per invoker host.
+    pub containers_per_invoker: usize,
+    /// Cold-start cost: container provision + runtime `init` hook.
+    pub cold_start: SimDuration,
+    /// Warm-start dispatch overhead (`run` hook on a live runtime).
+    pub warm_start: SimDuration,
+    /// Idle duration after which a warm container is evicted
+    /// (OpenWhisk's default stem-cell keep-alive is 10 minutes).
+    pub idle_eviction: SimDuration,
+    /// Whether different functions may share a warmed container
+    /// (the paper cites [13]: most providers disallow it).
+    pub allow_container_sharing: bool,
+    /// Isolation scope (§6: "integrating freshen into serverless
+    /// architectures that provide different isolation scopes" — Azure
+    /// offers chain-level isolation). Under [`IsolationScope::PerApp`], a
+    /// warm container of the same app can be re-inited for a sibling
+    /// function at a fraction of a cold start, *keeping its runtime-scoped
+    /// connections and freshen cache* — so freshen benefits compound
+    /// across a chain's stages.
+    pub isolation: IsolationScope,
+    /// Freshen policy knobs.
+    pub freshen: FreshenConfig,
+    /// Default TTL for entries in the freshen prefetch cache.
+    pub seed: u64,
+}
+
+/// Freshen policy configuration (§3.3 billing/abuse controls).
+#[derive(Debug, Clone)]
+pub struct FreshenConfig {
+    /// Master switch; `false` reproduces the vanilla-platform baselines.
+    pub enabled: bool,
+    /// Minimum prediction confidence required to launch a freshen
+    /// (mispredicted freshens bill the app owner, so providers gate).
+    pub min_confidence: f64,
+    /// Default TTL for prefetched data in the freshen cache.
+    pub default_ttl: SimDuration,
+    /// Per-app cap on freshen invocations per minute (abuse guard).
+    pub max_freshens_per_min: u32,
+    /// Service category: aggressive freshen for latency-sensitive apps.
+    pub category: ServiceCategory,
+}
+
+/// Container isolation scope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IsolationScope {
+    /// AWS-style: a container only ever hosts one function's code.
+    PerFunction,
+    /// Azure-chain-style: containers are shared within an application;
+    /// switching functions costs a re-init, not a cold start.
+    PerApp,
+}
+
+impl IsolationScope {
+    pub fn parse(s: &str) -> Option<IsolationScope> {
+        match s {
+            "per_function" => Some(IsolationScope::PerFunction),
+            "per_app" => Some(IsolationScope::PerApp),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            IsolationScope::PerFunction => "per_function",
+            IsolationScope::PerApp => "per_app",
+        }
+    }
+}
+
+/// Developer-chosen service category (§3.3): controls how aggressively the
+/// provider freshens on the app's behalf.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServiceCategory {
+    /// Freshen on every confident prediction.
+    LatencySensitive,
+    /// Freshen only on high-confidence predictions.
+    Standard,
+    /// Never freshen.
+    LatencyInsensitive,
+}
+
+impl ServiceCategory {
+    pub fn parse(s: &str) -> Option<ServiceCategory> {
+        match s {
+            "latency_sensitive" => Some(ServiceCategory::LatencySensitive),
+            "standard" => Some(ServiceCategory::Standard),
+            "latency_insensitive" => Some(ServiceCategory::LatencyInsensitive),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ServiceCategory::LatencySensitive => "latency_sensitive",
+            ServiceCategory::Standard => "standard",
+            ServiceCategory::LatencyInsensitive => "latency_insensitive",
+        }
+    }
+
+    /// The confidence threshold this category implies (overrides the
+    /// numeric `min_confidence` when stricter).
+    pub fn confidence_floor(&self) -> f64 {
+        match self {
+            ServiceCategory::LatencySensitive => 0.2,
+            ServiceCategory::Standard => 0.5,
+            ServiceCategory::LatencyInsensitive => f64::INFINITY,
+        }
+    }
+}
+
+impl Default for FreshenConfig {
+    fn default() -> FreshenConfig {
+        FreshenConfig {
+            enabled: true,
+            min_confidence: 0.5,
+            default_ttl: SimDuration::from_secs(10),
+            max_freshens_per_min: 600,
+            category: ServiceCategory::Standard,
+        }
+    }
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            invokers: 4,
+            containers_per_invoker: 16,
+            // OpenWhisk docker cold starts are hundreds of ms; the paper's
+            // related work (SOCK) reports ~100ms-1s. We default to 500ms.
+            cold_start: SimDuration::from_millis(500),
+            warm_start: SimDuration::from_millis(5),
+            idle_eviction: SimDuration::from_secs(600),
+            allow_container_sharing: false,
+            isolation: IsolationScope::PerFunction,
+            freshen: FreshenConfig::default(),
+            seed: 0xF5E5_4E55, // "FRESHENESS"
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON object; missing keys keep their defaults.
+    pub fn from_json(j: &Json) -> Config {
+        let mut c = Config::default();
+        c.invokers = j.u64_or("invokers", c.invokers as u64) as usize;
+        c.containers_per_invoker =
+            j.u64_or("containers_per_invoker", c.containers_per_invoker as u64) as usize;
+        c.cold_start = SimDuration::from_millis_f64(
+            j.f64_or("cold_start_ms", c.cold_start.as_millis_f64()),
+        );
+        c.warm_start = SimDuration::from_millis_f64(
+            j.f64_or("warm_start_ms", c.warm_start.as_millis_f64()),
+        );
+        c.idle_eviction = SimDuration::from_secs_f64(
+            j.f64_or("idle_eviction_s", c.idle_eviction.as_secs_f64()),
+        );
+        c.allow_container_sharing =
+            j.bool_or("allow_container_sharing", c.allow_container_sharing);
+        if let Some(iso) = j.get("isolation").and_then(Json::as_str) {
+            if let Some(parsed) = IsolationScope::parse(iso) {
+                c.isolation = parsed;
+            }
+        }
+        c.seed = j.u64_or("seed", c.seed);
+        if let Some(fj) = j.get("freshen") {
+            c.freshen.enabled = fj.bool_or("enabled", c.freshen.enabled);
+            c.freshen.min_confidence = fj.f64_or("min_confidence", c.freshen.min_confidence);
+            c.freshen.default_ttl = SimDuration::from_secs_f64(
+                fj.f64_or("default_ttl_s", c.freshen.default_ttl.as_secs_f64()),
+            );
+            c.freshen.max_freshens_per_min =
+                fj.u64_or("max_freshens_per_min", c.freshen.max_freshens_per_min as u64) as u32;
+            if let Some(cat) = fj.get("category").and_then(Json::as_str) {
+                if let Some(parsed) = ServiceCategory::parse(cat) {
+                    c.freshen.category = parsed;
+                }
+            }
+        }
+        c
+    }
+
+    /// Serialize back to JSON (for report headers).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("invokers", Json::num(self.invokers as f64)),
+            (
+                "containers_per_invoker",
+                Json::num(self.containers_per_invoker as f64),
+            ),
+            ("cold_start_ms", Json::num(self.cold_start.as_millis_f64())),
+            ("warm_start_ms", Json::num(self.warm_start.as_millis_f64())),
+            (
+                "idle_eviction_s",
+                Json::num(self.idle_eviction.as_secs_f64()),
+            ),
+            (
+                "allow_container_sharing",
+                Json::Bool(self.allow_container_sharing),
+            ),
+            ("isolation", Json::str(self.isolation.as_str())),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "freshen",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.freshen.enabled)),
+                    ("min_confidence", Json::num(self.freshen.min_confidence)),
+                    (
+                        "default_ttl_s",
+                        Json::num(self.freshen.default_ttl.as_secs_f64()),
+                    ),
+                    (
+                        "max_freshens_per_min",
+                        Json::num(self.freshen.max_freshens_per_min as f64),
+                    ),
+                    ("category", Json::str(self.freshen.category.as_str())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.invokers > 0);
+        assert!(c.cold_start > c.warm_start);
+        assert!(c.freshen.enabled);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Config::default();
+        let j = c.to_json();
+        let c2 = Config::from_json(&j);
+        assert_eq!(c2.invokers, c.invokers);
+        assert_eq!(c2.cold_start, c.cold_start);
+        assert_eq!(c2.freshen.category, c.freshen.category);
+        assert_eq!(c2.freshen.default_ttl, c.freshen.default_ttl);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let j = Json::parse(r#"{"invokers": 2, "freshen": {"enabled": false}}"#).unwrap();
+        let c = Config::from_json(&j);
+        assert_eq!(c.invokers, 2);
+        assert!(!c.freshen.enabled);
+        // untouched key keeps default
+        assert_eq!(c.containers_per_invoker, Config::default().containers_per_invoker);
+    }
+
+    #[test]
+    fn category_parse() {
+        assert_eq!(
+            ServiceCategory::parse("latency_sensitive"),
+            Some(ServiceCategory::LatencySensitive)
+        );
+        assert_eq!(ServiceCategory::parse("bogus"), None);
+        assert!(ServiceCategory::LatencyInsensitive
+            .confidence_floor()
+            .is_infinite());
+    }
+}

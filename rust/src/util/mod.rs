@@ -1,0 +1,15 @@
+//! Substrate utilities.
+//!
+//! The offline build has no access to `rand`, `serde`, or `statrs`; these
+//! modules are small, deterministic, in-repo replacements (see DESIGN.md
+//! §Offline-toolchain substitutions).
+
+pub mod config;
+pub mod fxhash;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::Rng;
+pub use time::{SimDuration, SimTime};

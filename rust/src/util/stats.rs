@@ -1,0 +1,338 @@
+//! Descriptive statistics: summaries, percentiles, CDFs, and histograms.
+//!
+//! Every paper artifact we regenerate is either a table of medians (Table 1),
+//! a CDF (Figure 2), or a latency-vs-parameter series (Figures 4–6); this
+//! module is the shared machinery that turns raw samples into those shapes.
+
+use crate::util::time::SimDuration;
+
+/// A five-number-plus summary over a sample of `f64`s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub p25: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; returns `None` on an empty sample.
+    pub fn of(samples: &[f64]) -> Option<Summary> {
+        if samples.is_empty() {
+            return None;
+        }
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Some(Summary {
+            count: n,
+            mean,
+            std_dev: var.sqrt(),
+            min: xs[0],
+            p25: percentile_sorted(&xs, 25.0),
+            p50: percentile_sorted(&xs, 50.0),
+            p90: percentile_sorted(&xs, 90.0),
+            p95: percentile_sorted(&xs, 95.0),
+            p99: percentile_sorted(&xs, 99.0),
+            max: xs[n - 1],
+        })
+    }
+
+    /// Summary over durations, reported in milliseconds.
+    pub fn of_durations_ms(samples: &[SimDuration]) -> Option<Summary> {
+        let xs: Vec<f64> = samples.iter().map(|d| d.as_millis_f64()).collect();
+        Summary::of(&xs)
+    }
+}
+
+/// Percentile with linear interpolation over an already-sorted slice.
+/// `q` is in `[0, 100]`.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = q / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median of an unsorted sample.
+pub fn median(samples: &[f64]) -> f64 {
+    let mut xs = samples.to_vec();
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+    percentile_sorted(&xs, 50.0)
+}
+
+/// An empirical CDF: `points()` yields `(x, F(x))` suitable for plotting,
+/// exactly what Figure 2 shows for functions-per-application.
+#[derive(Debug, Clone)]
+pub struct Cdf {
+    sorted: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn of(samples: &[f64]) -> Cdf {
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        Cdf { sorted }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    /// Fraction of samples `<= x`.
+    pub fn at(&self, x: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return 0.0;
+        }
+        let idx = self.sorted.partition_point(|&v| v <= x);
+        idx as f64 / self.sorted.len() as f64
+    }
+
+    /// Inverse CDF (quantile), `q` in `[0, 100]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q)
+    }
+
+    /// Step points `(x, F(x))`, deduplicated on x (last step wins).
+    pub fn points(&self) -> Vec<(f64, f64)> {
+        let n = self.sorted.len();
+        let mut out: Vec<(f64, f64)> = Vec::new();
+        for (i, &x) in self.sorted.iter().enumerate() {
+            let f = (i + 1) as f64 / n as f64;
+            match out.last_mut() {
+                Some(last) if last.0 == x => last.1 = f,
+                _ => out.push((x, f)),
+            }
+        }
+        out
+    }
+
+    /// Evaluate the CDF over a fixed grid — stable series for reports.
+    pub fn series(&self, grid: &[f64]) -> Vec<(f64, f64)> {
+        grid.iter().map(|&x| (x, self.at(x))).collect()
+    }
+}
+
+/// Fixed-width binned histogram over `[lo, hi)`; used by the IAT predictor
+/// (Shahrad-style) and by latency reports.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+    count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            bins: vec![0; nbins],
+            underflow: 0,
+            overflow: 0,
+            count: 0,
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let w = (self.hi - self.lo) / self.bins.len() as f64;
+            let idx = (((x - self.lo) / w) as usize).min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn overflow(&self) -> u64 {
+        self.overflow
+    }
+
+    pub fn underflow(&self) -> u64 {
+        self.underflow
+    }
+
+    /// Center of bin `i`.
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    /// Index of the modal bin, `None` if no in-range samples.
+    pub fn mode_bin(&self) -> Option<usize> {
+        if self.bins.iter().all(|&b| b == 0) {
+            return None;
+        }
+        let mut best = 0;
+        for (i, &b) in self.bins.iter().enumerate() {
+            if b > self.bins[best] {
+                best = i;
+            }
+        }
+        Some(best)
+    }
+
+    /// Fraction of in-range mass in the modal bin — a simple confidence
+    /// signal for the histogram predictor.
+    pub fn mode_concentration(&self) -> f64 {
+        let in_range: u64 = self.bins.iter().sum();
+        if in_range == 0 {
+            return 0.0;
+        }
+        match self.mode_bin() {
+            Some(i) => self.bins[i] as f64 / in_range as f64,
+            None => 0.0,
+        }
+    }
+}
+
+/// Online mean/max counter for throughput-style metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub count: u64,
+    pub sum: f64,
+    pub max: f64,
+    pub min: f64,
+}
+
+impl Running {
+    pub fn record(&mut self, x: f64) {
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile_sorted(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&xs, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&xs, 100.0), 10.0);
+        assert_eq!(percentile_sorted(&[7.0], 33.0), 7.0);
+    }
+
+    #[test]
+    fn cdf_monotone_and_correct() {
+        let cdf = Cdf::of(&[1.0, 1.0, 2.0, 4.0]);
+        assert_eq!(cdf.at(0.5), 0.0);
+        assert_eq!(cdf.at(1.0), 0.5);
+        assert_eq!(cdf.at(2.0), 0.75);
+        assert_eq!(cdf.at(100.0), 1.0);
+        let pts = cdf.points();
+        assert_eq!(pts, vec![(1.0, 0.5), (2.0, 0.75), (4.0, 1.0)]);
+        // monotone
+        for w in pts.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn cdf_quantile_inverts() {
+        let cdf = Cdf::of(&(0..101).map(|i| i as f64).collect::<Vec<_>>());
+        assert!((cdf.quantile(50.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.record(i as f64 + 0.5);
+        }
+        h.record(-1.0);
+        h.record(42.0);
+        assert_eq!(h.count(), 12);
+        assert_eq!(h.underflow(), 1);
+        assert_eq!(h.overflow(), 1);
+        assert!(h.bins().iter().all(|&b| b == 1));
+        assert!((h.bin_center(0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_mode_and_concentration() {
+        let mut h = Histogram::new(0.0, 4.0, 4);
+        for _ in 0..6 {
+            h.record(1.5);
+        }
+        h.record(0.5);
+        h.record(3.5);
+        assert_eq!(h.mode_bin(), Some(1));
+        assert!((h.mode_concentration() - 0.75).abs() < 1e-12);
+        let empty = Histogram::new(0.0, 1.0, 4);
+        assert_eq!(empty.mode_bin(), None);
+        assert_eq!(empty.mode_concentration(), 0.0);
+    }
+
+    #[test]
+    fn running_counter() {
+        let mut r = Running::default();
+        r.record(2.0);
+        r.record(6.0);
+        assert_eq!(r.count, 2);
+        assert_eq!(r.mean(), 4.0);
+        assert_eq!(r.min, 2.0);
+        assert_eq!(r.max, 6.0);
+    }
+}

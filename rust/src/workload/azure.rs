@@ -1,0 +1,164 @@
+//! Synthetic Azure-like application population (Figure 2).
+//!
+//! Figure 2 compares the CDF of functions-per-application for
+//! **orchestration-framework** apps against **all** apps in the Azure
+//! trace: "applications utilizing Orchestration frameworks typically
+//! consist of more functions: 8 functions in the median Orchestration case
+//! versus 2 functions in the median case of all." The trace itself is not
+//! public in raw form; we synthesize a population matching the published
+//! statistics:
+//!
+//! - all apps: median 2 functions, heavy right tail (most apps are small;
+//!   a few have dozens of functions) — geometric-ish body + Pareto tail;
+//! - orchestration apps: median 8 functions, broader body;
+//! - orchestration apps are a minority of the population (~5%);
+//! - median function runtime ~700 ms (used for the chain-window estimate:
+//!   "opportunities for prediction could be as high as ~5.6 s in the
+//!   extreme case of a linear chain" = 8 × 700 ms).
+
+use crate::util::rng::Rng;
+
+/// One synthesized application.
+#[derive(Debug, Clone)]
+pub struct SynthApp {
+    pub id: String,
+    pub functions: u32,
+    pub orchestrated: bool,
+    /// Median runtime of this app's functions, seconds.
+    pub fn_runtime_s: f64,
+}
+
+/// Population parameters (defaults calibrated to [9]).
+#[derive(Debug, Clone)]
+pub struct AzurePopulationCfg {
+    pub apps: usize,
+    /// Fraction of apps using an orchestration framework.
+    pub orchestration_fraction: f64,
+    /// Target median functions/app over ALL apps.
+    pub median_all: f64,
+    /// Target median functions/app over orchestration apps.
+    pub median_orch: f64,
+    /// Median function runtime (seconds); [9] reports ~0.7s.
+    pub median_runtime_s: f64,
+}
+
+impl Default for AzurePopulationCfg {
+    fn default() -> AzurePopulationCfg {
+        AzurePopulationCfg {
+            apps: 20_000,
+            orchestration_fraction: 0.05,
+            median_all: 2.0,
+            median_orch: 8.0,
+            median_runtime_s: 0.7,
+        }
+    }
+}
+
+/// Sample a function count with median `m` and a heavy right tail:
+/// a lognormal body (median = m) mixed with a Pareto tail, clamped ≥ 1.
+fn sample_fn_count(rng: &mut Rng, median: f64, sigma: f64) -> u32 {
+    let x = if rng.bernoulli(0.95) {
+        rng.lognormal(median.ln(), sigma)
+    } else {
+        rng.pareto(median * 2.0, 1.5)
+    };
+    x.round().max(1.0).min(1_000.0) as u32
+}
+
+/// Synthesize the population.
+pub fn synthesize(cfg: &AzurePopulationCfg, rng: &mut Rng) -> Vec<SynthApp> {
+    (0..cfg.apps)
+        .map(|i| {
+            let orchestrated = rng.bernoulli(cfg.orchestration_fraction);
+            let functions = if orchestrated {
+                sample_fn_count(rng, cfg.median_orch, 0.7)
+            } else {
+                sample_fn_count(rng, cfg.median_all, 0.8)
+            };
+            SynthApp {
+                id: format!("app-{i}"),
+                functions,
+                orchestrated,
+                fn_runtime_s: rng.lognormal(cfg.median_runtime_s.ln(), 0.9),
+            }
+        })
+        .collect()
+}
+
+/// The two Figure 2 series: functions/app CDF samples for (all apps,
+/// orchestration apps).
+pub fn figure2_series(apps: &[SynthApp]) -> (Vec<f64>, Vec<f64>) {
+    let all: Vec<f64> = apps.iter().map(|a| a.functions as f64).collect();
+    let orch: Vec<f64> = apps
+        .iter()
+        .filter(|a| a.orchestrated)
+        .map(|a| a.functions as f64)
+        .collect();
+    (all, orch)
+}
+
+/// The paper's headline chain-window estimate: median chain length ×
+/// median runtime ("~5.6s in the extreme case of a linear chain").
+pub fn linear_chain_window_s(apps: &[SynthApp], median_runtime_s: f64) -> f64 {
+    let mut orch: Vec<f64> = apps
+        .iter()
+        .filter(|a| a.orchestrated)
+        .map(|a| a.functions as f64)
+        .collect();
+    if orch.is_empty() {
+        return 0.0;
+    }
+    orch.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median_len = orch[orch.len() / 2];
+    median_len * median_runtime_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::median;
+
+    #[test]
+    fn medians_match_paper() {
+        let mut rng = Rng::new(2020);
+        let apps = synthesize(&AzurePopulationCfg::default(), &mut rng);
+        let (all, orch) = figure2_series(&apps);
+        let m_all = median(&all);
+        let m_orch = median(&orch);
+        assert!(
+            (1.0..=3.0).contains(&m_all),
+            "all-apps median {m_all} (paper: 2)"
+        );
+        assert!(
+            (6.0..=10.0).contains(&m_orch),
+            "orchestration median {m_orch} (paper: 8)"
+        );
+        assert!(m_orch > m_all);
+    }
+
+    #[test]
+    fn population_shape() {
+        let mut rng = Rng::new(7);
+        let cfg = AzurePopulationCfg {
+            apps: 5_000,
+            ..Default::default()
+        };
+        let apps = synthesize(&cfg, &mut rng);
+        assert_eq!(apps.len(), 5_000);
+        let orch_count = apps.iter().filter(|a| a.orchestrated).count();
+        let frac = orch_count as f64 / apps.len() as f64;
+        assert!((frac - 0.05).abs() < 0.02, "orch fraction {frac}");
+        // Heavy tail: someone has a lot of functions.
+        assert!(apps.iter().map(|a| a.functions).max().unwrap() > 20);
+        assert!(apps.iter().all(|a| a.functions >= 1));
+    }
+
+    #[test]
+    fn chain_window_near_5_6s() {
+        let mut rng = Rng::new(2020);
+        let apps = synthesize(&AzurePopulationCfg::default(), &mut rng);
+        let window = linear_chain_window_s(&apps, 0.7);
+        // paper: 8 x 0.7s = ~5.6s
+        assert!((4.0..=7.5).contains(&window), "window {window}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Arrival-process generators.
+//!
+//! Drives the platform with realistic invocation streams: Poisson (open
+//! loop), periodic-with-jitter (cron-style, the histogram predictor's
+//! best case), and bursty on/off (its worst case).
+
+use crate::util::rng::Rng;
+use crate::util::time::{SimDuration, SimTime};
+
+/// An arrival process emitting invocation times for one function.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    /// Poisson with the given rate (events/sec).
+    Poisson { rate: f64 },
+    /// Periodic with multiplicative jitter (sigma as fraction of period).
+    Periodic { period: SimDuration, jitter: f64 },
+    /// On/off bursts: `burst_len` arrivals spaced `intra`, then an
+    /// exponential gap with mean `off_mean_s`.
+    Bursty {
+        burst_len: u32,
+        intra: SimDuration,
+        off_mean_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Generate arrival times in `[0, horizon)`.
+    pub fn generate(&self, horizon: SimDuration, rng: &mut Rng) -> Vec<SimTime> {
+        let mut out = Vec::new();
+        let end = SimTime::ZERO + horizon;
+        let mut t = SimTime::ZERO;
+        match self {
+            ArrivalProcess::Poisson { rate } => loop {
+                t = t + SimDuration::from_secs_f64(rng.exponential(*rate));
+                if t >= end {
+                    break;
+                }
+                out.push(t);
+            },
+            ArrivalProcess::Periodic { period, jitter } => loop {
+                let step = period.mul_f64(rng.lognormal(0.0, *jitter));
+                t = t + step.max(SimDuration(1));
+                if t >= end {
+                    break;
+                }
+                out.push(t);
+            },
+            ArrivalProcess::Bursty {
+                burst_len,
+                intra,
+                off_mean_s,
+            } => loop {
+                for _ in 0..*burst_len {
+                    if t >= end {
+                        return out;
+                    }
+                    out.push(t);
+                    t = t + *intra;
+                }
+                t = t + SimDuration::from_secs_f64(rng.exponential(1.0 / off_mean_s.max(1e-9)));
+                if t >= end {
+                    break;
+                }
+            },
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let mut rng = Rng::new(1);
+        let arr = ArrivalProcess::Poisson { rate: 10.0 }
+            .generate(SimDuration::from_secs(100), &mut rng);
+        // ~1000 arrivals expected.
+        assert!((900..1100).contains(&arr.len()), "{}", arr.len());
+        assert!(arr.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn periodic_spacing() {
+        let mut rng = Rng::new(2);
+        let arr = ArrivalProcess::Periodic {
+            period: SimDuration::from_secs(10),
+            jitter: 0.05,
+        }
+        .generate(SimDuration::from_secs(1000), &mut rng);
+        assert!((90..=110).contains(&arr.len()), "{}", arr.len());
+    }
+
+    #[test]
+    fn bursts_have_structure() {
+        let mut rng = Rng::new(3);
+        let arr = ArrivalProcess::Bursty {
+            burst_len: 5,
+            intra: SimDuration::from_millis(10),
+            off_mean_s: 30.0,
+        }
+        .generate(SimDuration::from_secs(600), &mut rng);
+        assert!(!arr.is_empty());
+        // Contains both tight gaps and long gaps.
+        let gaps: Vec<f64> = arr.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        assert!(gaps.iter().any(|&g| g < 0.02));
+        assert!(gaps.iter().any(|&g| g > 5.0));
+    }
+}

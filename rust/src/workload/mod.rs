@@ -1,0 +1,12 @@
+//! Workload synthesis and trace handling.
+//!
+//! - [`azure`] — a synthetic application population calibrated to the
+//!   published statistics of the Azure Functions trace (Shahrad et al.
+//!   [9]), which Figure 2 is drawn from.
+//! - [`generator`] — arrival processes (Poisson, periodic-with-jitter,
+//!   bursty) used to drive the platform in benches and examples.
+//! - [`trace`] — JSON-lines trace records: write traces out, replay them in.
+
+pub mod azure;
+pub mod generator;
+pub mod trace;

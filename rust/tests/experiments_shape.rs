@@ -1,0 +1,80 @@
+//! Paper-shape checks at the integration level: each experiment harness
+//! must reproduce the *qualitative* result the paper reports (orderings,
+//! crossovers, factor ranges) — the contract EXPERIMENTS.md documents.
+//! (Unit-level checks live next to each harness; these run the CLI-facing
+//! configurations.)
+
+use freshen_rs::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1};
+use freshen_rs::netsim::link::Site;
+
+#[test]
+fn fig2_orchestration_apps_have_more_functions() {
+    let f = fig2::run(99);
+    assert!(f.median_orch / f.median_all >= 2.5, "paper factor ~4x");
+    // Most apps overall are tiny; most orchestration apps are not.
+    let at3 = f.series.iter().find(|(x, _, _)| *x == 3.0).unwrap();
+    assert!(at3.1 > 0.5, "over half of all apps have <=3 functions");
+    assert!(at3.2 < 0.5, "under half of orchestration apps do");
+}
+
+#[test]
+fn table1_gives_freshen_windows_of_60ms_to_1_3s() {
+    let t = table1::run(4_000, 123);
+    let min = t
+        .rows
+        .iter()
+        .map(|r| r.median_s)
+        .fold(f64::INFINITY, f64::min);
+    let max = t.rows.iter().map(|r| r.median_s).fold(0.0, f64::max);
+    // Paper: "latencies range from 60ms to 1.28s".
+    assert!((0.04..=0.09).contains(&min), "min window {min}");
+    assert!((0.9..=1.7).contains(&max), "max window {max}");
+}
+
+#[test]
+fn fig4_log_scale_separation_and_benefit_band() {
+    let f = fig4::run(7);
+    let local = f.max_benefit_s(Site::Local);
+    let edge = f.max_benefit_s(Site::Edge);
+    let remote = f.max_benefit_s(Site::Remote);
+    assert!(local < edge && edge < remote);
+    // Paper band: 11ms (local) .. 622ms (remote).
+    assert!(remote / local > 20.0, "orders-of-magnitude spread");
+}
+
+#[test]
+fn fig5_fig6_warming_benefit_band_and_edge_dominance() {
+    let cloud = fig5_6::run(fig5_6::Placement::Cloud, 11);
+    let edge = fig5_6::run(fig5_6::Placement::Edge50, 11);
+    // Paper: 51.22%..71.94% at large sizes; allow the simulator band.
+    for f in [&cloud, &edge] {
+        let b = f.large_benefit();
+        assert!((0.40..=0.90).contains(&b), "large benefit {b}");
+    }
+    // 1KB sends see almost no benefit in either placement.
+    assert!(cloud.cells[0].benefit().abs() < 0.15);
+    assert!(edge.cells[0].benefit().abs() < 0.15);
+}
+
+#[test]
+fn e2e_freshen_wins_without_changing_work() {
+    let e = e2e::run(5, 30);
+    assert!(e.freshened.all_latency.p50 < e.baseline.all_latency.p50);
+    assert_eq!(e.baseline.invocations, e.freshened.invocations);
+    // Freshen traffic is accounted, not hidden: total network including
+    // prefetches stays within 2x of baseline.
+    assert!(e.freshened.network_bytes <= 2.0 * e.baseline.network_bytes);
+}
+
+#[test]
+fn ablation_lead_time_has_diminishing_returns() {
+    let rows = ablations::lead_time(&[0, 1000, 4000], 12, 3);
+    let at0 = rows.iter().find(|r| r.lead_ms == 0).unwrap();
+    let at1s = rows.iter().find(|r| r.lead_ms == 1000).unwrap();
+    let at4s = rows.iter().find(|r| r.lead_ms == 4000).unwrap();
+    // 1s of lead captures most of the benefit; 4s adds little.
+    assert!(at1s.latency.p50 <= at0.latency.p50);
+    let gain_01 = at0.latency.p50 - at1s.latency.p50;
+    let gain_14 = at1s.latency.p50 - at4s.latency.p50;
+    assert!(gain_14 <= gain_01.max(1.0), "diminishing returns");
+}

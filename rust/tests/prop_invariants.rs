@@ -1,0 +1,225 @@
+//! Property-based invariants over the coordinator (routing, batching,
+//! fr_state) using the in-repo harness (`testkit::prop`, the offline
+//! proptest substitute).
+
+use freshen_rs::freshen::state::{Completer, FrEntry, FrResult, FrStatus};
+use freshen_rs::freshen::wrappers::{fr_fetch_decision, WrapperDecision};
+use freshen_rs::netsim::cc::{CcState, CongestionControl, INIT_CWND_SEGMENTS, MSS};
+use freshen_rs::netsim::link::Site;
+use freshen_rs::netsim::tcp::Connection;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::invoke;
+use freshen_rs::platform::function::FunctionSpec;
+use freshen_rs::platform::world::World;
+use freshen_rs::simcore::Sim;
+use freshen_rs::testkit::prop::forall;
+use freshen_rs::util::config::Config;
+use freshen_rs::util::rng::Rng;
+use freshen_rs::util::stats::{Cdf, Summary};
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+#[test]
+fn prop_cdf_is_monotone_and_bounded() {
+    forall("cdf monotone", 100, |g| {
+        let n = g.usize(1, 200);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64(-1e3, 1e3)).collect();
+        let cdf = Cdf::of(&xs);
+        let mut prev = 0.0;
+        for i in -10..=10 {
+            let f = cdf.at(i as f64 * 100.0);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f >= prev);
+            prev = f;
+        }
+        assert_eq!(cdf.at(1e9), 1.0);
+    });
+}
+
+#[test]
+fn prop_summary_percentiles_ordered() {
+    forall("summary ordered", 100, |g| {
+        let n = g.usize(1, 300);
+        let xs: Vec<f64> = (0..n).map(|_| g.f64(0.0, 1e4)).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert!(s.min <= s.p25 && s.p25 <= s.p50);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+    });
+}
+
+#[test]
+fn prop_cwnd_never_below_floor_nor_negative() {
+    // Any sequence of rounds, losses, idles, and warms keeps the window in
+    // a sane band.
+    forall("cwnd band", 150, |g| {
+        let algo = *g.choice(&[CongestionControl::Reno, CongestionControl::Cubic]);
+        let mut cc = CcState::new(algo);
+        for _ in 0..g.usize(1, 60) {
+            match g.usize(0, 3) {
+                0 => cc.on_round(g.f64(0.0, cc.cwnd), g.f64(1e-4, 0.2)),
+                1 => cc.on_loss(),
+                2 => cc.apply_idle_decay(g.f64(0.0, 1e4), g.f64(0.05, 1.0)),
+                _ => cc.set_cwnd(g.f64(0.0, 1e8)),
+            }
+            assert!(cc.cwnd >= 2.0 * MSS - 1.0, "cwnd {} too small", cc.cwnd);
+            assert!(cc.cwnd.is_finite());
+            assert!(cc.ssthresh >= 2.0 * MSS - 1.0 || cc.ssthresh.is_infinite());
+        }
+    });
+}
+
+#[test]
+fn prop_transfer_time_monotone_in_size() {
+    // Bigger transfers on identical fresh connections never finish sooner
+    // (jitter disabled).
+    forall("transfer monotone", 60, |g| {
+        let site = *g.choice(&[Site::Local, Site::Edge, Site::Remote]);
+        let mut link = site.link();
+        link.jitter_sigma = 0.0;
+        let a = g.f64(1e2, 1e7);
+        let b = a * g.f64(1.0, 10.0);
+        let seed = g.u64(0, u64::MAX / 2);
+        let mut t = |bytes: f64| {
+            let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
+            let mut rng = Rng::new(seed);
+            let d = conn.connect(SimTime::ZERO, &mut rng);
+            conn.send_with_ack(SimTime::ZERO + d, &mut rng, bytes, 0.0)
+                .as_secs_f64()
+        };
+        assert!(t(b) >= t(a) * 0.999, "size {a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_fr_entry_state_machine_is_sound() {
+    // Random interleavings of try_start/finish/recycle/decide never panic
+    // and never let two workers own the same resource.
+    forall("fr_state machine", 200, |g| {
+        let ttl = SimDuration::from_secs(g.u64(1, 30));
+        let mut entry = FrEntry::new(ttl);
+        let mut owner: Option<u8> = None; // who holds Running
+        let mut now = SimTime::ZERO;
+        for _ in 0..g.usize(1, 40) {
+            now = now + SimDuration::from_millis(g.u64(0, 20_000));
+            match g.usize(0, 2) {
+                0 => {
+                    // A worker tries to claim.
+                    let who = g.u64(0, 1) as u8;
+                    if entry.try_start(now) {
+                        assert!(owner.is_none(), "double ownership");
+                        owner = Some(who);
+                    }
+                }
+                1 => {
+                    // The owner finishes.
+                    if owner.take().is_some() {
+                        let result = if g.bool(0.8) {
+                            FrResult::Data {
+                                object_id: "x".into(),
+                                version: g.u64(1, 5),
+                                bytes: 10.0,
+                            }
+                        } else {
+                            FrResult::Failed
+                        };
+                        entry.finish(result, now, Completer::Freshen);
+                    }
+                }
+                _ => {
+                    if owner.is_none() {
+                        entry.recycle(now);
+                    }
+                }
+            }
+            // Invariants.
+            match entry.status {
+                FrStatus::Running => assert!(owner.is_some()),
+                _ => assert!(owner.is_none()),
+            }
+            if entry.is_fresh(now) {
+                assert!(matches!(
+                    entry.result,
+                    Some(FrResult::Data { .. }) | Some(FrResult::Warmed)
+                ));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fetch_decision_claims_exactly_one_worker() {
+    // N workers race on one NotRun entry: exactly one gets DoItYourself,
+    // the rest Wait.
+    forall("single claimer", 100, |g| {
+        let mut entry = FrEntry::new(SimDuration::from_secs(10));
+        let workers = g.usize(2, 8);
+        let mut doers = 0;
+        let mut waiters = 0;
+        for _ in 0..workers {
+            match fr_fetch_decision(&mut entry, SimTime::ZERO, None) {
+                WrapperDecision::DoItYourself => doers += 1,
+                WrapperDecision::Wait => waiters += 1,
+                WrapperDecision::UseResult(_) => panic!("nothing finished yet"),
+            }
+        }
+        assert_eq!(doers, 1);
+        assert_eq!(waiters, workers - 1);
+    });
+}
+
+#[test]
+fn prop_platform_conserves_invocations() {
+    // Whatever the arrival pattern and pool size: every submitted
+    // invocation completes exactly once, and freshen never changes that.
+    forall("invocation conservation", 25, |g| {
+        let mut cfg = Config::default();
+        cfg.seed = g.u64(0, u64::MAX / 2);
+        cfg.invokers = g.usize(1, 3);
+        cfg.containers_per_invoker = g.usize(1, 4);
+        cfg.freshen.enabled = g.bool(0.5);
+        cfg.freshen.min_confidence = 0.0;
+        // Short eviction so full pools recycle within the test horizon.
+        cfg.idle_eviction = SimDuration::from_secs(g.u64(5, 60));
+        let mut w = World::new(cfg);
+        let mut ep = Endpoint::new("store", Site::Edge);
+        ep.store.put("ID1", g.f64(1e3, 1e6), SimTime::ZERO);
+        w.add_endpoint(ep);
+        let nfns = g.usize(1, 4);
+        for f in 0..nfns {
+            w.deploy(FunctionSpec::paper_lambda(
+                &format!("f{f}"),
+                "app",
+                "store",
+                SimDuration::from_millis(g.u64(1, 50)),
+            ));
+        }
+        let mut sim: Sim<World> = Sim::new();
+        sim.max_events = 20_000_000;
+        let n = g.usize(1, 30);
+        for _ in 0..n {
+            let f = format!("f{}", g.usize(0, nfns - 1));
+            let at = SimTime(g.u64(0, 120_000_000));
+            sim.schedule_at(at, move |sim, w| {
+                invoke(sim, w, &f);
+            });
+        }
+        sim.run(&mut w);
+        assert_eq!(w.metrics.count(), n, "all invocations completed");
+        // Every record is coherent.
+        for r in w.metrics.records() {
+            assert!(r.finished_at >= r.started_at);
+            assert!(r.started_at >= r.enqueued_at);
+        }
+        // Container accounting: busy containers all drained.
+        assert!(w
+            .containers
+            .iter()
+            .all(|c| c.state != freshen_rs::platform::container::ContainerState::Busy));
+    });
+}
+
+#[test]
+fn prop_initial_cwnd_is_rfc6928() {
+    assert_eq!(Connection::initial_cwnd(), INIT_CWND_SEGMENTS * MSS);
+}

@@ -1,0 +1,92 @@
+//! AOT contract tests: the rust/PJRT runtime must reproduce the numerics
+//! the python side recorded in `artifacts/manifest.json`.
+//!
+//! Requires `make artifacts` (skips with a message when absent, so plain
+//! `cargo test` works in a fresh checkout).
+
+use std::path::{Path, PathBuf};
+
+use freshen_rs::runtime::model::{ClassifierRuntime, PredictorRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn classifier_artifact_matches_python_numerics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ClassifierRuntime::load(&dir).expect("load classifier");
+    let max_err = rt.self_check().expect("self-check");
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn classifier_handles_every_compiled_batch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ClassifierRuntime::load(&dir).expect("load");
+    let dim = rt.manifest.input_dim;
+    let classes = rt.manifest.classes;
+    for n in [1usize, 2, 3, 4, 7, 8, 16] {
+        if n > rt.max_batch() {
+            continue;
+        }
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| (0..dim).map(|j| ((i * 31 + j) % 17) as f32 / 17.0).collect())
+            .collect();
+        let out = rt.infer(&rows).expect("infer");
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|r| r.len() == classes));
+        // Identical rows give identical logits regardless of batch size.
+        if n >= 2 {
+            let single = rt.infer(&rows[..1]).expect("single");
+            for (a, b) in single[0].iter().zip(out[0].iter()) {
+                assert!((a - b).abs() < 1e-4, "batch-size-dependent result");
+            }
+        }
+    }
+    assert!(rt.rows_served > 0);
+    assert!(rt.executions > 0);
+}
+
+#[test]
+fn classifier_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ClassifierRuntime::load(&dir).expect("load");
+    // Wrong feature width.
+    assert!(rt.infer(&[vec![0.0; 3]]).is_err());
+    // Oversized batch.
+    let dim = rt.manifest.input_dim;
+    let too_many: Vec<Vec<f32>> = (0..rt.max_batch() + 1).map(|_| vec![0.0; dim]).collect();
+    assert!(rt.infer(&too_many).is_err());
+    // Empty is fine.
+    assert!(rt.infer(&[]).unwrap().is_empty());
+}
+
+#[test]
+fn predictor_artifact_matches_native_scorer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PredictorRuntime::load(&dir).expect("load predictor");
+    let max_err = rt.self_check().expect("self-check");
+    assert!(max_err < 1e-4, "max err {max_err}");
+}
+
+#[test]
+fn predictor_scores_are_probabilities() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PredictorRuntime::load(&dir).expect("load");
+    let rows: Vec<[f32; 4]> = vec![
+        [0.0, 0.0, 0.0, 0.0],
+        [1.0, 1.0, 1.0, 0.0],
+        [0.9, 0.0, 0.5, 0.2],
+    ];
+    let scores = rt.score(&rows).expect("score");
+    assert_eq!(scores.len(), 3);
+    assert!(scores.iter().all(|&s| (0.0..=1.0).contains(&s)));
+    assert!(scores[1] > scores[0], "stronger signal scores higher");
+}

@@ -1,0 +1,187 @@
+//! End-to-end tests of the real-time serving engine (real threads, real
+//! PJRT inference, netsim-derived latencies slept for real at 1000x
+//! compression). Skips when artifacts are missing.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use freshen_rs::serve::{ServeConfig, ServeEngine};
+
+/// These tests measure real wall-clock latency; running several engines
+/// concurrently on one core inverts A/B comparisons. Serialize them.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serial() -> MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn image(seed: usize) -> Vec<f32> {
+    (0..3072).map(|j| ((seed * 131 + j) % 23) as f32 / 23.0).collect()
+}
+
+fn config(freshen: bool) -> ServeConfig {
+    ServeConfig {
+        workers: 2,
+        freshen,
+        time_scale: 0.001,
+        // At 1000x compression a burst takes tens of real ms = tens of
+        // simulated seconds; keep the prefetch fresh across the burst.
+        prefetch_ttl_s: 120.0,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn serves_requests_end_to_end() {
+    let _guard = serial();
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = ServeEngine::start(dir, config(true)).expect("start");
+    let rxs: Vec<_> = (0..8).map(|i| engine.submit(image(i))).collect();
+    for rx in rxs {
+        let out = rx.recv_timeout(Duration::from_secs(30)).expect("outcome");
+        assert_eq!(out.logits.len(), 10);
+        assert!(out.latency > Duration::ZERO);
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.requests, 8);
+    assert!(report.latency_ms.is_some());
+    assert!(report.store_puts >= 8);
+}
+
+#[test]
+fn freshen_reduces_serving_latency() {
+    let _guard = serial();
+    let Some(dir) = artifacts_dir() else { return };
+
+    // Baseline: no freshen — every request refetches the model and pays
+    // cold-connection costs.
+    let base = ServeEngine::start(dir.clone(), config(false)).expect("start");
+    let rxs: Vec<_> = (0..6).map(|i| base.submit(image(i))).collect();
+    for rx in rxs {
+        rx.recv_timeout(Duration::from_secs(30)).expect("outcome");
+    }
+    let base_report = base.shutdown();
+
+    // Freshen: hook runs before the burst.
+    let eng = ServeEngine::start(dir, config(true)).expect("start");
+    eng.freshen().join().expect("freshen run");
+    let rxs: Vec<_> = (0..6).map(|i| eng.submit(image(i))).collect();
+    let mut hits = 0;
+    for rx in rxs {
+        let out = rx.recv_timeout(Duration::from_secs(30)).expect("outcome");
+        if matches!(
+            out.fetch_served,
+            freshen_rs::serve::fr::Served::ByFreshen | freshen_rs::serve::fr::Served::AfterWait
+        ) {
+            hits += 1;
+        }
+    }
+    let fresh_report = eng.shutdown();
+
+    assert!(hits >= 5, "most fetches served by freshen, got {hits}");
+    let b = base_report.latency_ms.as_ref().unwrap().p50;
+    let f = fresh_report.latency_ms.as_ref().unwrap().p50;
+    assert!(
+        f < b,
+        "freshened p50 {f:.2}ms should beat baseline p50 {b:.2}ms"
+    );
+    // Network traffic reduced: fewer store GETs than requests.
+    assert!(fresh_report.store_gets < base_report.store_gets);
+}
+
+#[test]
+fn logits_match_between_modes() {
+    let _guard = serial();
+    // Freshen must not change results, only latency.
+    let Some(dir) = artifacts_dir() else { return };
+    let a = ServeEngine::start(dir.clone(), config(false)).expect("start");
+    let la = a
+        .submit(image(3))
+        .recv_timeout(Duration::from_secs(30))
+        .unwrap()
+        .logits;
+    a.shutdown();
+    let b = ServeEngine::start(dir, config(true)).expect("start");
+    b.freshen().join().unwrap();
+    let lb = b
+        .submit(image(3))
+        .recv_timeout(Duration::from_secs(30))
+        .unwrap()
+        .logits;
+    b.shutdown();
+    for (x, y) in la.iter().zip(lb.iter()) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn http_front_end_serves_classify_and_stats() {
+    let _guard = serial();
+    use freshen_rs::serve::http::HttpServer;
+    use std::io::{Read, Write};
+    use std::sync::Arc;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Arc::new(ServeEngine::start(dir, config(true)).expect("start"));
+    let server = HttpServer::bind(Arc::clone(&engine), "127.0.0.1:0").expect("bind");
+    let addr = server.local_addr();
+    let stop = server.stopper();
+    let h = std::thread::spawn(move || server.run());
+
+    let request = |req: String| -> String {
+        let mut s = std::net::TcpStream::connect(addr).expect("connect");
+        s.write_all(req.as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    // Health.
+    let health = request("GET /healthz HTTP/1.1\r\n\r\n".into());
+    assert!(health.starts_with("HTTP/1.1 200"), "{health}");
+
+    // Freshen, then classify with an explicit image body.
+    let fresh = request("POST /freshen HTTP/1.1\r\nContent-Length: 0\r\n\r\n".into());
+    assert!(fresh.starts_with("HTTP/1.1 202"), "{fresh}");
+    std::thread::sleep(Duration::from_millis(300)); // let the hook finish
+
+    let img: Vec<String> = (0..3072).map(|j| format!("{:.3}", (j % 7) as f32 / 7.0)).collect();
+    let body = format!("{{\"image\": [{}]}}", img.join(","));
+    let resp = request(format!(
+        "POST /classify HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+        body.len(),
+        body
+    ));
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"logits\""), "{resp}");
+    assert!(resp.contains("latency_ms"), "{resp}");
+
+    // Malformed body -> 400.
+    let bad = request(
+        "POST /classify HTTP/1.1\r\nContent-Length: 7\r\n\r\nnotjson".to_string(),
+    );
+    assert!(bad.starts_with("HTTP/1.1 400"), "{bad}");
+
+    // Unknown route -> 404.
+    let nf = request("GET /nope HTTP/1.1\r\n\r\n".into());
+    assert!(nf.starts_with("HTTP/1.1 404"), "{nf}");
+
+    // Stats reflect the served request.
+    let stats = request("GET /stats HTTP/1.1\r\n\r\n".into());
+    assert!(stats.starts_with("HTTP/1.1 200"), "{stats}");
+    assert!(stats.contains("\"requests\""));
+
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    h.join().unwrap().unwrap();
+}

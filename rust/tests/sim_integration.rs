@@ -1,0 +1,457 @@
+//! Integration tests: the full platform on the discrete-event substrate.
+//!
+//! These exercise the paper's scenarios end to end: λ with and without
+//! freshen (Figure 3's predicted and unanticipated timings), chain-driven
+//! prediction through trigger services, staleness handling, billing, and
+//! queueing/eviction behaviour.
+
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::{self, invoke, start_freshen};
+use freshen_rs::platform::function::{Arg, FunctionSpec, Op};
+use freshen_rs::platform::world::{PlatformSim, World};
+use freshen_rs::simcore::Sim;
+use freshen_rs::triggers::TriggerService;
+use freshen_rs::util::config::Config;
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+/// Build a world with one remote store endpoint holding the λ objects.
+fn world_with_store(site: Site) -> World {
+    let mut cfg = Config::default();
+    cfg.seed = 42;
+    let mut w = World::new(cfg);
+    let mut ep = Endpoint::new("store", site);
+    ep.store.put("ID1", 5e6, SimTime::ZERO); // 5 MB model
+    w.add_endpoint(ep);
+    w
+}
+
+fn lambda(id: &str) -> FunctionSpec {
+    FunctionSpec::paper_lambda(id, "app", "store", SimDuration::from_millis(20))
+}
+
+fn run_sim(w: &mut World, f: impl FnOnce(&mut PlatformSim, &mut World)) {
+    let mut sim: PlatformSim = Sim::new();
+    sim.max_events = 10_000_000;
+    f(&mut sim, w);
+    sim.run(w);
+}
+
+#[test]
+fn single_invocation_completes_with_cold_start() {
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(lambda("f"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+    });
+    assert_eq!(w.metrics.count(), 1);
+    assert_eq!(w.metrics.cold_starts, 1);
+    let rec = &w.metrics.records()[0];
+    // Latency >= cold start (500ms) + fetch over 50ms WAN + compute.
+    assert!(rec.latency() > SimDuration::from_millis(550), "{}", rec.latency());
+    // The put landed in the store.
+    assert!(w.endpoints["store"].store.peek("ID2").is_some());
+    // Billing happened.
+    assert!(w.ledger.account("app").exec_gb_s > 0.0);
+    assert_eq!(w.ledger.account("app").invocations, 1);
+}
+
+#[test]
+fn second_invocation_is_warm_and_faster() {
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(lambda("f"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        sim.schedule(SimDuration::from_secs(2), |sim, w| {
+            invoke(sim, w, "f");
+        });
+    });
+    assert_eq!(w.metrics.count(), 2);
+    assert_eq!(w.metrics.cold_starts, 1);
+    assert_eq!(w.metrics.warm_starts, 1);
+    let recs = w.metrics.records();
+    assert!(recs[1].latency() < recs[0].latency());
+}
+
+#[test]
+fn freshen_before_invocation_cuts_latency() {
+    // Figure 3 (left): freshen completes before run; the function consumes
+    // prefetched data and a warmed connection.
+    let mut cold = world_with_store(Site::Remote);
+    cold.deploy(lambda("f"));
+    run_sim(&mut cold, |sim, w| {
+        invoke(sim, w, "f");
+        // second, warm invocation without freshen
+        sim.schedule(SimDuration::from_secs(30), |sim, w| {
+            invoke(sim, w, "f");
+        });
+    });
+    let baseline = cold.metrics.records()[1].latency();
+
+    let mut fresh = world_with_store(Site::Remote);
+    fresh.deploy(lambda("f"));
+    run_sim(&mut fresh, |sim, w| {
+        invoke(sim, w, "f");
+        // freshen fires 1s before the second invocation
+        sim.schedule(SimDuration::from_secs(29), |sim, w| {
+            start_freshen(sim, w, "f", None);
+        });
+        sim.schedule(SimDuration::from_secs(30), |sim, w| {
+            invoke(sim, w, "f");
+        });
+    });
+    let freshened = fresh.metrics.records()[1].latency();
+    assert!(
+        freshened < baseline,
+        "freshened {freshened} should beat baseline {baseline}"
+    );
+    // The function consumed freshen results.
+    assert!(fresh.metrics.records()[1].freshen_hits >= 1);
+    assert_eq!(fresh.metrics.freshens_completed, 1);
+}
+
+#[test]
+fn freshen_simultaneous_with_run_still_correct() {
+    // Figure 3 (right): freshen and run race; wrappers must coordinate via
+    // fr_state (FrWait) and the function must still complete correctly.
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(lambda("f"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f"); // cold start ~500ms
+        sim.schedule(SimDuration::from_secs(5), |sim, w| {
+            // Same instant: freshen + run.
+            start_freshen(sim, w, "f", None);
+            invoke(sim, w, "f");
+        });
+    });
+    assert_eq!(w.metrics.count(), 2, "both invocations completed");
+    let rec = &w.metrics.records()[1];
+    // All resources were handled exactly once (no double-fetch): the put
+    // object exists, and hits+misses == resource count.
+    assert_eq!(rec.freshen_hits + rec.freshen_misses, 2);
+    assert!(w.endpoints["store"].store.peek("ID2").is_some());
+}
+
+#[test]
+fn chain_invocation_triggers_freshen_on_successor() {
+    let mut w = world_with_store(Site::Remote);
+    let mut first = lambda("first");
+    first.ops.push(Op::InvokeNext {
+        function: "second".into(),
+        trigger: TriggerService::Direct,
+    });
+    w.deploy(first);
+    w.deploy(lambda("second"));
+    // Warm up both containers so the chain effect isolates freshen.
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "second");
+        sim.schedule(SimDuration::from_secs(5), |sim, w| {
+            invoke(sim, w, "first");
+        });
+    });
+    // first ran once; second ran twice (warmup + chained).
+    assert_eq!(w.metrics.count(), 3);
+    // The chain prediction admitted a freshen for `second`.
+    assert!(w.metrics.freshens_started >= 1, "chain prediction freshened");
+    assert!(w.tracker.hits >= 1, "prediction confirmed by arrival");
+    // The chained `second` invocation benefited.
+    let chained = w
+        .metrics
+        .records()
+        .iter()
+        .filter(|r| r.function == "second")
+        .last()
+        .unwrap();
+    assert!(chained.freshen_hits >= 1, "successor consumed freshen results");
+}
+
+#[test]
+fn stale_prefetch_is_refetched_strict_versions() {
+    let mut w = world_with_store(Site::Remote);
+    w.strict_versions = true;
+    w.deploy(lambda("f"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f"); // warms container, caches ID1@v1
+        sim.schedule(SimDuration::from_secs(2), |sim, w| {
+            start_freshen(sim, w, "f", None); // prefetches ID1@v1
+        });
+        // External writer bumps the object to v2 after the prefetch.
+        sim.schedule(SimDuration::from_secs(4), |sim, w| {
+            let now = sim.now();
+            w.endpoints.get_mut("store").unwrap().store.external_update("ID1", 5e6, now);
+        });
+        sim.schedule(SimDuration::from_secs(5), |sim, w| {
+            invoke(sim, w, "f");
+        });
+    });
+    // The second invocation must NOT have used the stale v1 prefetch for
+    // its DataGet; it refetched (so that resource was a freshen miss).
+    let rec = w.metrics.records().last().unwrap();
+    assert!(rec.freshen_misses >= 1, "stale data must be refetched");
+}
+
+#[test]
+fn queueing_when_cluster_full() {
+    let mut cfg = Config::default();
+    cfg.invokers = 1;
+    cfg.containers_per_invoker = 1;
+    cfg.seed = 1;
+    let mut w = World::new(cfg);
+    let mut ep = Endpoint::new("store", Site::Edge);
+    ep.store.put("ID1", 1e4, SimTime::ZERO);
+    w.add_endpoint(ep);
+    w.deploy(lambda("f"));
+    w.deploy(lambda("g"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        invoke(sim, w, "g"); // no slot: queued until f's container... never freed for g
+        sim.schedule(SimDuration::from_secs(700), |_sim, _w| {}); // let eviction fire
+    });
+    // g eventually ran: f's container idles out after idle_eviction (600s),
+    // freeing the slot — but our queue drain is per-function, so g's
+    // dispatch happens through the eviction path. Check both completed.
+    assert_eq!(w.metrics.count(), 2, "both invocations completed");
+    assert!(w.metrics.evictions >= 1);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let run = || {
+        let mut w = world_with_store(Site::Remote);
+        w.deploy(lambda("f"));
+        run_sim(&mut w, |sim, w| {
+            for i in 0..10u64 {
+                sim.schedule(SimDuration::from_secs(i * 3), |sim, w| {
+                    invoke(sim, w, "f");
+                });
+            }
+        });
+        w.metrics
+            .records()
+            .iter()
+            .map(|r| r.latency().micros())
+            .collect::<Vec<u64>>()
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn billing_attributes_freshen_to_app_owner() {
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(lambda("f"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        // Past the prefetch TTL (10s default), so the freshen hook has real
+        // work to do (a zero-duration skip would bill zero GB-seconds).
+        sim.schedule(SimDuration::from_secs(20), |sim, w| {
+            start_freshen(sim, w, "f", None); // developer-invoked: bills now
+        });
+    });
+    let acct = w.ledger.account("app");
+    assert!(acct.freshen_useful_gb_s > 0.0, "owner pays for freshen");
+    assert!(acct.network_bytes > 0.0);
+}
+
+#[test]
+fn ensure_connection_is_idempotent_for_live_conn() {
+    // Directly exercise the helper: second ensure on a live connection
+    // costs only a keepalive RTT, not a handshake.
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(lambda("f"));
+    // Remove RTT jitter so the comparison is exact: establish = RTT +
+    // endpoint overhead, keepalive = RTT only.
+    w.endpoints.get_mut("store").unwrap().link.jitter_sigma = 0.0;
+    let mut env = freshen_rs::platform::container::RuntimeEnv::new();
+    let t0 = SimTime::ZERO;
+    let d1 = exec::ensure_connection(&mut w.endpoints, &mut w.rng, &mut env, "store", t0);
+    let t1 = t0 + d1 + SimDuration::from_secs(1);
+    let d2 = exec::ensure_connection(&mut w.endpoints, &mut w.rng, &mut env, "store", t1);
+    assert!(d2 < d1, "keepalive {d2} should be cheaper than establish {d1}");
+    assert_eq!(env.connections["store"].establish_count, 1);
+}
+
+// ====================================================================
+// Extensions: branching chains, isolation scopes, failure injection
+// ====================================================================
+
+#[test]
+fn branching_chain_learns_edge_probabilities() {
+    // §6 non-deterministic chains: a 0.85/0.15 branch. The predictor's
+    // edge confidence converges to the observed frequencies, so the hot
+    // branch keeps being freshened and the cold one gets gated out.
+    let mut w = world_with_store(Site::Remote);
+    w.gate.config.min_confidence = 0.5;
+    let mut head = lambda("head");
+    head.ops.push(Op::InvokeBranch {
+        branches: vec![("hot".into(), 0.85), ("cold".into(), 0.15)],
+        trigger: TriggerService::Direct,
+    });
+    w.deploy(head);
+    w.deploy(lambda("hot"));
+    w.deploy(lambda("cold"));
+    run_sim(&mut w, |sim, w| {
+        for i in 0..40u64 {
+            sim.schedule(SimDuration::from_secs(5 + i * 20), |sim, w| {
+                invoke(sim, w, "head");
+            });
+        }
+    });
+    let hot_conf = w.chain_pred.edge_confidence("head", "hot");
+    let cold_conf = w.chain_pred.edge_confidence("head", "cold");
+    assert!(hot_conf > 0.6, "hot edge confidence {hot_conf}");
+    assert!(cold_conf < 0.5, "cold edge confidence {cold_conf}");
+    assert!(hot_conf > cold_conf + 0.3);
+    // Both targets actually ran at least once (or hot did, at minimum).
+    let hot_runs = w.metrics.records().iter().filter(|r| r.function == "hot").count();
+    assert!(hot_runs >= 20, "hot ran {hot_runs} times");
+}
+
+#[test]
+fn per_app_isolation_reinits_instead_of_cold_starting() {
+    use freshen_rs::util::config::IsolationScope;
+    let run_with = |isolation: IsolationScope| {
+        let mut cfg = Config::default();
+        cfg.seed = 11;
+        cfg.isolation = isolation;
+        cfg.invokers = 1;
+        cfg.containers_per_invoker = 1; // one slot: sharing is forced
+        let mut w = World::new(cfg);
+        let mut ep = Endpoint::new("store", Site::Remote);
+        ep.store.put("ID1", 1e6, SimTime::ZERO);
+        w.add_endpoint(ep);
+        w.deploy(lambda("alpha")); // same app ("app") for both
+        w.deploy(lambda("beta"));
+        let mut sim: PlatformSim = Sim::new();
+        sim.max_events = 10_000_000;
+        invoke(&mut sim, &mut w, "alpha");
+        sim.schedule(SimDuration::from_secs(5), |sim, w| {
+            invoke(sim, w, "beta");
+        });
+        sim.run(&mut w);
+        w
+    };
+    let per_app = run_with(IsolationScope::PerApp);
+    assert_eq!(per_app.metrics.count(), 2, "both ran");
+    assert_eq!(per_app.metrics.cold_starts, 1, "beta re-inited, not cold");
+    assert_eq!(per_app.metrics.reinits, 1);
+    // The shared runtime kept alpha's warmed connection: beta's latency
+    // beats the per-function case, where beta queues for the single slot.
+    let per_fn = run_with(IsolationScope::PerFunction);
+    let beta_app = per_app.metrics.records().iter().find(|r| r.function == "beta").unwrap();
+    let beta_fn = per_fn.metrics.records().iter().find(|r| r.function == "beta");
+    match beta_fn {
+        Some(rec) => assert!(beta_app.latency() < rec.latency()),
+        None => {} // per-function: beta still queued at sim end
+    }
+}
+
+#[test]
+fn unknown_endpoint_is_not_fatal() {
+    // Failure injection: a function whose endpoint was never registered
+    // must still complete (fetches fail fast; freshen inference emits a
+    // hook whose actions no-op).
+    let mut w = world_with_store(Site::Remote);
+    w.deploy(FunctionSpec::paper_lambda(
+        "ghost-ep",
+        "app",
+        "no-such-endpoint",
+        SimDuration::from_millis(5),
+    ));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "ghost-ep");
+        sim.schedule(SimDuration::from_secs(2), |sim, w| {
+            start_freshen(sim, w, "ghost-ep", None);
+        });
+        sim.schedule(SimDuration::from_secs(4), |sim, w| {
+            invoke(sim, w, "ghost-ep");
+        });
+    });
+    assert_eq!(w.metrics.count(), 2, "completes despite missing endpoint");
+}
+
+#[test]
+fn missing_object_fetch_fails_gracefully() {
+    let mut w = world_with_store(Site::Remote);
+    let f = FunctionSpec::new(
+        "fetch-missing",
+        "app",
+        vec![Op::DataGet {
+            endpoint: "store".into(),
+            creds: Arg::Const("CREDS".into()),
+            object_id: Arg::Const("DOES-NOT-EXIST".into()),
+        }],
+    );
+    w.deploy(f);
+    run_sim(&mut w, |sim, w| {
+        // Freshen first: its prefetch fails (404) — "failure to infer is
+        // not fatal" extends to failure to freshen.
+        start_freshen(sim, w, "fetch-missing", None);
+        sim.schedule(SimDuration::from_secs(3), |sim, w| {
+            invoke(sim, w, "fetch-missing");
+        });
+    });
+    assert_eq!(w.metrics.count(), 1);
+    // The wrapper redid the (failing) fetch itself: a freshen miss.
+    assert!(w.metrics.records()[0].freshen_misses >= 1);
+}
+
+#[test]
+fn lossy_link_reduces_but_keeps_warming_benefit() {
+    use freshen_rs::netsim::cc::CongestionControl;
+    use freshen_rs::netsim::tcp::Connection;
+    use freshen_rs::util::rng::Rng;
+    let mut lossless = Site::Remote.link();
+    lossless.jitter_sigma = 0.0;
+    let lossy = lossless.clone().with_loss(0.10);
+    let send = |link: &freshen_rs::netsim::link::Link, warm: bool, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut c = Connection::new(link.clone(), CongestionControl::Cubic);
+        let mut t = SimTime::ZERO + c.connect(SimTime::ZERO, &mut rng);
+        if warm {
+            t = t + c.send_with_ack(t, &mut rng, 2e7, 0.0);
+        }
+        c.send_with_ack(t, &mut rng, 1e7, 0.0).as_secs_f64()
+    };
+    // Average over seeds (loss is stochastic per round).
+    let avg = |link: &freshen_rs::netsim::link::Link, warm: bool| -> f64 {
+        (0..30).map(|s| send(link, warm, s)).sum::<f64>() / 30.0
+    };
+    // Loss makes transfers slower on average...
+    assert!(avg(&lossy, false) > avg(&lossless, false));
+    // ...and erodes the warming advantage: on a heavily lossy path the
+    // congestion controller claws back whatever warm_cwnd granted, so the
+    // benefit must be strictly smaller than on the clean path (it can even
+    // go negative — warmed connections sit in congestion avoidance while
+    // fresh ones slow-start). This bounds when freshen warming is useful.
+    let benefit_clean = 1.0 - avg(&lossless, true) / avg(&lossless, false);
+    let benefit_lossy = 1.0 - avg(&lossy, true) / avg(&lossy, false);
+    assert!(benefit_clean > 0.4, "clean warming benefit {benefit_clean}");
+    assert!(
+        benefit_lossy < benefit_clean - 0.1,
+        "lossy {benefit_lossy} vs clean {benefit_clean}"
+    );
+}
+
+#[test]
+fn variability_quantified_with_freshen() {
+    // §6: "Quantifying how freshen affects variability in application
+    // behavior would be an important component of this evaluation."
+    // Measured finding: freshen shrinks latency in *absolute* terms at
+    // both the body and the tail; the *relative* dispersion (CV) can rise
+    // because the body collapses faster than the tail. Assert the
+    // absolute improvements and that the CV stays in a sane band.
+    let e = freshen_rs::experiments::e2e::run(0xFA12, 40);
+    assert!(
+        e.freshened.all_latency.p50 < e.baseline.all_latency.p50,
+        "p50 {} vs {}",
+        e.freshened.all_latency.p50,
+        e.baseline.all_latency.p50
+    );
+    assert!(
+        e.freshened.all_latency.p99 <= e.baseline.all_latency.p99 * 1.05,
+        "p99 {} vs {}",
+        e.freshened.all_latency.p99,
+        e.baseline.all_latency.p99
+    );
+    assert!(e.freshened.latency_cv() < 3.0, "CV {}", e.freshened.latency_cv());
+}
