@@ -1,11 +1,38 @@
-//! Bench: Ablation A — freshen lead-time sweep (Figure 3's timing axis).
+//! Bench: Ablation A — freshen lead-time sweep (Figure 3's timing axis),
+//! run as a 4-seed sweep through the parallel `SweepRunner` harness. The
+//! merged rows are identical for any worker count (asserted below), so
+//! the parallelism is pure wall-clock win.
 
 use freshen_rs::experiments::ablations;
+use freshen_rs::experiments::harness::SweepRunner;
 use freshen_rs::testkit::bench::time_once;
 
 fn main() {
     let leads = [-200i64, -100, 0, 100, 250, 500, 1000, 2000, 5000];
-    let (rows, elapsed) = time_once(|| ablations::lead_time(&leads, 30, 2020));
+    let seeds = [2020u64, 2021, 2022, 2023];
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let (seq_rows, seq_elapsed) = time_once(|| {
+        ablations::lead_time_multi(&leads, 30, &seeds, &SweepRunner::new(1))
+    });
+    let (rows, par_elapsed) = time_once(|| {
+        ablations::lead_time_multi(&leads, 30, &seeds, &SweepRunner::new(workers))
+    });
+    assert_eq!(
+        format!("{seq_rows:?}"),
+        format!("{rows:?}"),
+        "merged sweep output must not depend on parallelism"
+    );
+
     ablations::print_lead(&rows);
-    println!("\nregenerated in {elapsed:?}");
+    println!(
+        "\n{} grid points ({} leads x {} seeds): sequential {seq_elapsed:?}, \
+         {workers} workers {par_elapsed:?} (x{:.2})",
+        leads.len() * seeds.len(),
+        leads.len(),
+        seeds.len(),
+        seq_elapsed.as_secs_f64() / par_elapsed.as_secs_f64().max(1e-9)
+    );
 }

@@ -1,6 +1,7 @@
-//! Bench: L3 hot paths — raw event-loop throughput, platform invocation
-//! throughput, and netsim transfer computation. The §Perf targets track
-//! these numbers.
+//! Bench: L3 hot paths — raw event-queue throughput (timing wheel vs the
+//! reference binary heap, side by side), engine event-loop overhead,
+//! platform invocation throughput, and netsim transfer computation. The
+//! §Perf targets track these numbers.
 
 use freshen_rs::netsim::cc::CongestionControl;
 use freshen_rs::netsim::link::Site;
@@ -9,14 +10,119 @@ use freshen_rs::platform::endpoint::Endpoint;
 use freshen_rs::platform::exec::invoke;
 use freshen_rs::platform::function::FunctionSpec;
 use freshen_rs::platform::world::World;
+use freshen_rs::simcore::wheel::{BinaryHeapQueue, EventQueue, TimingWheel};
 use freshen_rs::simcore::Sim;
 use freshen_rs::testkit::bench::{bench, throughput, time_once};
 use freshen_rs::util::config::Config;
 use freshen_rs::util::rng::Rng;
 use freshen_rs::util::time::{SimDuration, SimTime};
 
+/// The dense-event workload: `pending` events outstanding at all times,
+/// with pop→reschedule churn and a 10% cancellation mix — the regime the
+/// paper sweeps (Table 1's 20k triggers, the transfer grids) put the
+/// scheduler in. Returns events processed.
+fn dense_churn<Q: EventQueue<u64>>(q: &mut Q, pending: usize, churn: usize) -> u64 {
+    let mut rng = Rng::new(7);
+    let mut seq = 0u64;
+    let mut now = 0u64;
+    for _ in 0..pending {
+        q.insert(
+            SimTime(now + rng.range(1, 1_000_000)),
+            seq,
+            Box::new(|_, _| {}),
+        );
+        seq += 1;
+    }
+    let mut processed = 0u64;
+    for i in 0..churn {
+        let (at, _s, _f) = q.pop().expect("queue stays dense");
+        processed += 1;
+        now = at.micros();
+        q.insert(
+            SimTime(now + rng.range(1, 1_000_000)),
+            seq,
+            Box::new(|_, _| {}),
+        );
+        seq += 1;
+        if i % 10 == 0 {
+            // Cancel one recent event (and immediately replace it to keep
+            // the density constant).
+            let victim = seq - 1 - rng.below(pending as u64 / 2);
+            if q.cancel(victim) {
+                q.insert(
+                    SimTime(now + rng.range(1, 1_000_000)),
+                    seq,
+                    Box::new(|_, _| {}),
+                );
+                seq += 1;
+            }
+        }
+    }
+    processed
+}
+
+/// Sparse self-rescheduling chain on the raw queue: one event pending at
+/// a time — the scheduler's constant-factor floor.
+fn sparse_chain<Q: EventQueue<u64>>(q: &mut Q, events: u64) -> u64 {
+    let mut now = 0u64;
+    q.insert(SimTime(1), 0, Box::new(|_, _| {}));
+    for seq in 1..=events {
+        let (at, _s, _f) = q.pop().expect("chain");
+        now = at.micros();
+        q.insert(SimTime(now + 1), seq, Box::new(|_, _| {}));
+    }
+    q.pop().map(|_| ()).expect("tail");
+    events + 1
+}
+
+fn bench_queue_comparison() {
+    const PENDING: usize = 100_000;
+    const CHURN: usize = 1_000_000;
+    const CHAIN: u64 = 1_000_000;
+    println!("== scheduler: timing wheel vs reference binary heap ==");
+
+    let (wheel_dense, wheel_elapsed) = time_once(|| {
+        let mut q: TimingWheel<u64> = TimingWheel::new();
+        dense_churn(&mut q, PENDING, CHURN)
+    });
+    let (heap_dense, heap_elapsed) = time_once(|| {
+        let mut q: BinaryHeapQueue<u64> = BinaryHeapQueue::new();
+        dense_churn(&mut q, PENDING, CHURN)
+    });
+    assert_eq!(wheel_dense, heap_dense);
+    let wheel_rate = throughput(wheel_dense, wheel_elapsed);
+    let heap_rate = throughput(heap_dense, heap_elapsed);
+    println!(
+        "dense ({PENDING} pending, {CHURN} churn): wheel {:.2}M ev/s ({wheel_elapsed:?})  \
+         heap {:.2}M ev/s ({heap_elapsed:?})  speedup x{:.2}",
+        wheel_rate / 1e6,
+        heap_rate / 1e6,
+        wheel_rate / heap_rate
+    );
+
+    let (wheel_chain, wheel_elapsed) = time_once(|| {
+        let mut q: TimingWheel<u64> = TimingWheel::new();
+        sparse_chain(&mut q, CHAIN)
+    });
+    let (heap_chain, heap_elapsed) = time_once(|| {
+        let mut q: BinaryHeapQueue<u64> = BinaryHeapQueue::new();
+        sparse_chain(&mut q, CHAIN)
+    });
+    assert_eq!(wheel_chain, heap_chain);
+    let wheel_rate = throughput(wheel_chain, wheel_elapsed);
+    let heap_rate = throughput(heap_chain, heap_elapsed);
+    println!(
+        "sparse chain ({CHAIN} events):             wheel {:.2}M ev/s ({wheel_elapsed:?})  \
+         heap {:.2}M ev/s ({heap_elapsed:?})  speedup x{:.2}",
+        wheel_rate / 1e6,
+        heap_rate / 1e6,
+        wheel_rate / heap_rate
+    );
+}
+
 fn bench_event_loop() {
-    // A self-rescheduling event chain: pure engine overhead.
+    // A self-rescheduling event chain through the full engine: pure
+    // engine overhead (now wheel-backed).
     const EVENTS: u64 = 1_000_000;
     let (_, elapsed) = time_once(|| {
         let mut sim: Sim<u64> = Sim::new();
@@ -69,6 +175,7 @@ fn bench_platform_invocations() {
 }
 
 fn main() {
+    bench_queue_comparison();
     bench_event_loop();
     bench_platform_invocations();
     // Netsim transfer-time computation (the inner loop of Figures 4-6).

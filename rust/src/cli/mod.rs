@@ -17,7 +17,8 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1};
+use crate::experiments::harness::parse_seed_spec;
+use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1, SweepRunner};
 use crate::platform::exec::invoke;
 use crate::platform::world::World;
 use crate::serve::{ServeConfig, ServeEngine};
@@ -31,6 +32,10 @@ freshen-rs repro — proactive serverless function resource management
 USAGE:
   repro experiment <fig2|table1|fig4|fig5|fig6|e2e|baselines|prediction|ablations|all>
                    [--seed N] [--runs N] [--gap SECONDS]
+                   [--seeds N|a..b|a..=b] [--parallel N]
+                   # --seeds sweeps fig4/fig5/fig6/prediction/ablations over a
+                   # seed grid on --parallel worker threads; merged output is
+                   # deterministic (identical for any --parallel value)
   repro serve [--requests N] [--artifacts DIR] [--no-freshen]
               [--listen ADDR]          # HTTP mode: POST /classify, /freshen; GET /stats
   repro check-artifacts [--artifacts DIR]
@@ -108,12 +113,20 @@ fn experiment(opts: &Opts) -> Result<()> {
         .context("experiment id required")?
         .as_str();
     let seed = opts.u64("seed", 2020);
+    // Multi-seed sweep grid: `--seeds a..b` overrides `--seed`; without it
+    // every experiment runs its historical single-seed configuration.
+    let seeds: Vec<u64> = match opts.flags.get("seeds") {
+        Some(spec) => parse_seed_spec(spec)
+            .with_context(|| format!("bad --seeds '{spec}' (forms: N, a..b, a..=b)"))?,
+        None => vec![seed],
+    };
+    let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
     match id {
         "fig2" => fig2::run(seed).print(),
         "table1" => table1::run(opts.u64("runs", 20_000) as usize, seed).print(),
-        "fig4" => fig4::run(seed).print(),
-        "fig5" => fig5_6::run(fig5_6::Placement::Cloud, seed).print(),
-        "fig6" => fig5_6::run(fig5_6::Placement::Edge50, seed).print(),
+        "fig4" => fig4::run_multi(&seeds, &runner).print(),
+        "fig5" => fig5_6::run_multi(fig5_6::Placement::Cloud, &seeds, &runner).print(),
+        "fig6" => fig5_6::run_multi(fig5_6::Placement::Edge50, &seeds, &runner).print(),
         "e2e" => e2e::run(seed, opts.u64("runs", 60) as usize).print(),
         "baselines" => {
             crate::experiments::baselines::run(
@@ -123,33 +136,36 @@ fn experiment(opts: &Opts) -> Result<()> {
             )
             .print()
         }
-        "prediction" => crate::experiments::prediction::run(seed).print(),
+        "prediction" => crate::experiments::prediction::run_multi(&seeds, &runner).print(),
         "ablations" => {
-            ablations::print_lead(&ablations::lead_time(
+            ablations::print_lead(&ablations::lead_time_multi(
                 &[-200, -100, 0, 100, 500, 1000, 2000, 5000],
                 20,
-                seed,
+                &seeds,
+                &runner,
             ));
-            ablations::print_confidence(&ablations::confidence(
+            ablations::print_confidence(&ablations::confidence_multi(
                 &[0.0, 0.25, 0.5, 0.75, 1.0],
                 40,
-                seed,
+                &seeds,
+                &runner,
             ));
-            ablations::print_ttl(&ablations::ttl_sweep(
+            ablations::print_ttl(&ablations::ttl_sweep_multi(
                 &[0.0, 1.0, 5.0, 10.0, 30.0, 60.0],
                 48,
-                seed,
+                &seeds,
+                &runner,
             ));
         }
         "all" => {
             fig2::run(seed).print();
             table1::run(opts.u64("runs", 20_000) as usize, seed).print();
-            fig4::run(seed).print();
-            fig5_6::run(fig5_6::Placement::Cloud, seed).print();
-            fig5_6::run(fig5_6::Placement::Edge50, seed).print();
+            fig4::run_multi(&seeds, &runner).print();
+            fig5_6::run_multi(fig5_6::Placement::Cloud, &seeds, &runner).print();
+            fig5_6::run_multi(fig5_6::Placement::Edge50, &seeds, &runner).print();
             e2e::run(seed, opts.u64("runs", 60) as usize).print();
             crate::experiments::baselines::run(50, 120.0, seed).print();
-            crate::experiments::prediction::run(seed).print();
+            crate::experiments::prediction::run_multi(&seeds, &runner).print();
         }
         other => bail!("unknown experiment '{other}'"),
     }
@@ -334,6 +350,20 @@ mod tests {
         assert!(o.flag("no-freshen"));
         assert!(!o.flag("missing"));
         assert_eq!(o.str("artifacts", "artifacts"), "artifacts");
+    }
+
+    #[test]
+    fn seeds_flag_drives_a_parallel_multi_seed_sweep() {
+        let args: Vec<String> = ["experiment", "fig4", "--seeds", "0..2", "--parallel", "2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run(&args).is_ok());
+        let bad: Vec<String> = ["experiment", "fig4", "--seeds", "9..3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(run(&bad).is_err(), "empty seed range must error");
     }
 
     #[test]

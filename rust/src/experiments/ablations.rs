@@ -8,6 +8,7 @@
 //! - **Prefetch TTL** (§3.2 caching): network traffic vs staleness across
 //!   TTLs under periodic re-invocation.
 
+use crate::experiments::harness::SweepRunner;
 use crate::experiments::print_table;
 use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
@@ -52,46 +53,99 @@ pub struct LeadRow {
     pub hit_rate: f64,
 }
 
-/// For each lead, run `iters` warm invocations 30 s apart (past TTL and
-/// into idle decay), freshen firing `lead` before each.
-pub fn lead_time(leads_ms: &[i64], iters: usize, seed: u64) -> Vec<LeadRow> {
-    leads_ms
+/// Raw output of one `(lead, seed)` run, mergeable across seeds.
+struct LeadSample {
+    latencies: Vec<SimDuration>,
+    freshen_hits: u64,
+    freshen_total: u64,
+}
+
+/// One `(lead, seed)` grid point: `iters` warm invocations 30 s apart
+/// (past TTL and into idle decay), freshen firing `lead` before each.
+fn lead_run(lead_ms: i64, iters: usize, seed: u64) -> LeadSample {
+    let mut w = lambda_world(seed ^ lead_ms.unsigned_abs(), true);
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 50_000_000;
+    // Warm up the container.
+    invoke(&mut sim, &mut w, "lambda");
+    sim.run(&mut w);
+    let mut t = sim.now() + SimDuration::from_secs(5);
+    for _ in 0..iters {
+        let invoke_at = t + SimDuration::from_secs(30);
+        let freshen_at = if lead_ms >= 0 {
+            SimTime(invoke_at.micros().saturating_sub(lead_ms as u64 * 1_000))
+        } else {
+            invoke_at + SimDuration::from_millis((-lead_ms) as u64)
+        };
+        sim.schedule_at(freshen_at, |sim, w| {
+            start_freshen(sim, w, "lambda", None);
+        });
+        sim.schedule_at(invoke_at, |sim, w| {
+            invoke(sim, w, "lambda");
+        });
+        t = invoke_at;
+    }
+    sim.run(&mut w);
+    let latencies: Vec<SimDuration> = w
+        .metrics
+        .records()
         .iter()
-        .map(|&lead_ms| {
-            let mut w = lambda_world(seed ^ lead_ms.unsigned_abs(), true);
-            let mut sim: Sim<World> = Sim::new();
-            sim.max_events = 50_000_000;
-            // Warm up the container.
-            invoke(&mut sim, &mut w, "lambda");
-            sim.run(&mut w);
-            let mut t = sim.now() + SimDuration::from_secs(5);
-            for _ in 0..iters {
-                let invoke_at = t + SimDuration::from_secs(30);
-                let freshen_at = if lead_ms >= 0 {
-                    SimTime(invoke_at.micros().saturating_sub(lead_ms as u64 * 1_000))
-                } else {
-                    invoke_at + SimDuration::from_millis((-lead_ms) as u64)
-                };
-                sim.schedule_at(freshen_at, |sim, w| {
-                    start_freshen(sim, w, "lambda", None);
-                });
-                sim.schedule_at(invoke_at, |sim, w| {
-                    invoke(sim, w, "lambda");
-                });
-                t = invoke_at;
+        .skip(1) // warmup
+        .map(|r| r.latency())
+        .collect();
+    let (freshen_hits, freshen_total) =
+        w.metrics.records().iter().fold((0u64, 0u64), |(h, t), r| {
+            (
+                h + r.freshen_hits as u64,
+                t + (r.freshen_hits + r.freshen_misses) as u64,
+            )
+        });
+    LeadSample {
+        latencies,
+        freshen_hits,
+        freshen_total,
+    }
+}
+
+/// For each lead, run `iters` warm invocations 30 s apart (past TTL and
+/// into idle decay), freshen firing `lead` before each. Single-seed
+/// convenience over [`lead_time_multi`].
+pub fn lead_time(leads_ms: &[i64], iters: usize, seed: u64) -> Vec<LeadRow> {
+    lead_time_multi(leads_ms, iters, &[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep of the lead-time ablation: the `leads × seeds` grid
+/// runs on `runner`, and per-lead rows pool latency samples (in seed
+/// order) and sum hit counters — deterministic regardless of parallelism.
+pub fn lead_time_multi(
+    leads_ms: &[i64],
+    iters: usize,
+    seeds: &[u64],
+    runner: &SweepRunner,
+) -> Vec<LeadRow> {
+    assert!(!seeds.is_empty(), "lead_time_multi needs at least one seed");
+    runner
+        .run_grid(leads_ms, seeds, |&lead_ms, seed| {
+            lead_run(lead_ms, iters, seed)
+        })
+        .into_iter()
+        .zip(leads_ms.iter())
+        .map(|(samples, &lead_ms)| {
+            let mut latencies = Vec::new();
+            let (mut hits, mut total) = (0u64, 0u64);
+            for s in samples {
+                latencies.extend(s.latencies);
+                hits += s.freshen_hits;
+                total += s.freshen_total;
             }
-            sim.run(&mut w);
-            let lat: Vec<SimDuration> = w
-                .metrics
-                .records()
-                .iter()
-                .skip(1) // warmup
-                .map(|r| r.latency())
-                .collect();
             LeadRow {
                 lead_ms,
-                latency: Summary::of_durations_ms(&lat).expect("ran"),
-                hit_rate: w.metrics.freshen_hit_rate(),
+                latency: Summary::of_durations_ms(&latencies).expect("ran"),
+                hit_rate: if total == 0 {
+                    0.0
+                } else {
+                    hits as f64 / total as f64
+                },
             }
         })
         .collect()
@@ -127,73 +181,120 @@ pub struct ConfidenceRow {
     pub freshens: u64,
 }
 
-/// Drive predictions with a known mispredict rate; compare gated (accuracy
-/// feedback on) vs ungated (min_confidence 0, accuracy ignored -> we
-/// emulate by feeding confident predictions regardless).
-pub fn confidence(mispredict_rates: &[f64], iters: usize, seed: u64) -> Vec<ConfidenceRow> {
-    let mut out = Vec::new();
-    for &rate in mispredict_rates {
-        for gating in [false, true] {
-            let mut w = lambda_world(seed, true);
-            // This ablation injects its own prediction stream; keep the
-            // platform's automatic histogram predictions out of the way.
-            w.auto_hist_predict = false;
-            if !gating {
-                // Ungated: admit everything the predictor emits, and
-                // ignore the observed-accuracy feedback loop.
-                w.gate.config.min_confidence = 0.0;
-                w.gate.accuracy_gating = false;
-            }
-            let mut sim: Sim<World> = Sim::new();
-            sim.max_events = 50_000_000;
-            invoke(&mut sim, &mut w, "lambda");
-            sim.run(&mut w);
-            let mut predict_rng = w.rng.fork(7);
-            let mut t = sim.now() + SimDuration::from_secs(5);
-            for _ in 0..iters {
-                let expected = t + SimDuration::from_secs(30);
-                let mispredict = predict_rng.bernoulli(rate);
-                // Confidence reflects the true quality only when gating:
-                // the gated platform learns from outcomes; ungated admits
-                // high-confidence claims blindly.
-                let pred = Prediction {
-                    function: "lambda".into(),
-                    expected_at: expected,
-                    confidence: 0.9,
-                    source: PredictionSource::Histogram,
-                };
-                sim.schedule_at(t + SimDuration::from_secs(29), move |sim, w| {
-                    emit_prediction(sim, w, pred.clone(), sim.now());
-                });
-                if !mispredict {
-                    sim.schedule_at(expected, |sim, w| {
-                        invoke(sim, w, "lambda");
-                    });
-                }
-                t = expected;
-            }
-            sim.run(&mut w);
-            let acct = w.ledger.account("app");
-            let lat: Vec<SimDuration> = w
-                .metrics
-                .records()
-                .iter()
-                .skip(1)
-                .map(|r| r.latency())
-                .collect();
-            out.push(ConfidenceRow {
-                mispredict_rate: rate,
-                gating,
-                latency_p50_ms: Summary::of_durations_ms(&lat)
-                    .map(|s| s.p50)
-                    .unwrap_or(0.0),
-                wasted_gb_s: acct.freshen_wasted_gb_s,
-                useful_gb_s: acct.freshen_useful_gb_s,
-                freshens: acct.freshens,
+/// Raw output of one `(rate, gating, seed)` run.
+struct ConfidenceSample {
+    latencies: Vec<SimDuration>,
+    wasted_gb_s: f64,
+    useful_gb_s: f64,
+    freshens: u64,
+}
+
+/// One `(rate, gating, seed)` grid point.
+fn confidence_run(rate: f64, gating: bool, iters: usize, seed: u64) -> ConfidenceSample {
+    let mut w = lambda_world(seed, true);
+    // This ablation injects its own prediction stream; keep the
+    // platform's automatic histogram predictions out of the way.
+    w.auto_hist_predict = false;
+    if !gating {
+        // Ungated: admit everything the predictor emits, and
+        // ignore the observed-accuracy feedback loop.
+        w.gate.config.min_confidence = 0.0;
+        w.gate.accuracy_gating = false;
+    }
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 50_000_000;
+    invoke(&mut sim, &mut w, "lambda");
+    sim.run(&mut w);
+    let mut predict_rng = w.rng.fork(7);
+    let mut t = sim.now() + SimDuration::from_secs(5);
+    for _ in 0..iters {
+        let expected = t + SimDuration::from_secs(30);
+        let mispredict = predict_rng.bernoulli(rate);
+        // Confidence reflects the true quality only when gating:
+        // the gated platform learns from outcomes; ungated admits
+        // high-confidence claims blindly.
+        let pred = Prediction {
+            function: "lambda".into(),
+            expected_at: expected,
+            confidence: 0.9,
+            source: PredictionSource::Histogram,
+        };
+        sim.schedule_at(t + SimDuration::from_secs(29), move |sim, w| {
+            emit_prediction(sim, w, pred.clone(), sim.now());
+        });
+        if !mispredict {
+            sim.schedule_at(expected, |sim, w| {
+                invoke(sim, w, "lambda");
             });
         }
+        t = expected;
     }
-    out
+    sim.run(&mut w);
+    let acct = w.ledger.account("app");
+    let latencies: Vec<SimDuration> = w
+        .metrics
+        .records()
+        .iter()
+        .skip(1)
+        .map(|r| r.latency())
+        .collect();
+    ConfidenceSample {
+        latencies,
+        wasted_gb_s: acct.freshen_wasted_gb_s,
+        useful_gb_s: acct.freshen_useful_gb_s,
+        freshens: acct.freshens,
+    }
+}
+
+/// Drive predictions with a known mispredict rate; compare gated (accuracy
+/// feedback on) vs ungated (min_confidence 0, accuracy ignored -> we
+/// emulate by feeding confident predictions regardless). Single-seed
+/// convenience over [`confidence_multi`].
+pub fn confidence(mispredict_rates: &[f64], iters: usize, seed: u64) -> Vec<ConfidenceRow> {
+    confidence_multi(mispredict_rates, iters, &[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep over the `(rate × mode) × seeds` grid. Latencies pool
+/// in seed order; GB-s spend and freshen counts sum across seeds, so the
+/// merged rows are deterministic for any `--parallel`.
+pub fn confidence_multi(
+    mispredict_rates: &[f64],
+    iters: usize,
+    seeds: &[u64],
+    runner: &SweepRunner,
+) -> Vec<ConfidenceRow> {
+    assert!(!seeds.is_empty(), "confidence_multi needs at least one seed");
+    let params: Vec<(f64, bool)> = mispredict_rates
+        .iter()
+        .flat_map(|&rate| [(rate, false), (rate, true)])
+        .collect();
+    runner
+        .run_grid(&params, seeds, |&(rate, gating), seed| {
+            confidence_run(rate, gating, iters, seed)
+        })
+        .into_iter()
+        .zip(params.iter())
+        .map(|(samples, &(rate, gating))| {
+            let mut latencies = Vec::new();
+            let (mut wasted, mut useful, mut freshens) = (0.0, 0.0, 0u64);
+            for s in samples {
+                latencies.extend(s.latencies);
+                wasted += s.wasted_gb_s;
+                useful += s.useful_gb_s;
+                freshens += s.freshens;
+            }
+            ConfidenceRow {
+                mispredict_rate: rate,
+                gating,
+                latency_p50_ms: Summary::of_durations_ms(&latencies)
+                    .map(|s| s.p50)
+                    .unwrap_or(0.0),
+                wasted_gb_s: wasted,
+                useful_gb_s: useful,
+                freshens,
+            }
+        })
+        .collect()
 }
 
 pub fn print_confidence(rows: &[ConfidenceRow]) {
@@ -230,70 +331,107 @@ pub struct TtlRow {
     pub stale_serves: u64,
 }
 
+/// Raw output of one `(ttl, seed)` run.
+struct TtlSample {
+    latencies: Vec<SimDuration>,
+    network_mb: f64,
+    saved_mb: f64,
+    stale_serves: u64,
+}
+
+/// One `(ttl, seed)` grid point.
+fn ttl_run(ttl_s: f64, iters: usize, seed: u64) -> TtlSample {
+    let mut w = lambda_world(seed, true);
+    w.strict_versions = false; // pure TTL regime: count staleness
+    {
+        let mut spec = w.registry.function("lambda").unwrap().clone();
+        spec.prefetch_ttl = Some(SimDuration::from_secs_f64(ttl_s));
+        w.registry.deploy(spec, w.config.freshen.default_ttl);
+    }
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 50_000_000;
+    invoke(&mut sim, &mut w, "lambda");
+    sim.run(&mut w);
+    let mut t = sim.now() + SimDuration::from_secs(2);
+    for i in 0..iters {
+        sim.schedule_at(t, |sim, w| {
+            invoke(sim, w, "lambda");
+        });
+        if i % 12 == 11 {
+            // External update every ~60s of invocations.
+            sim.schedule_at(t + SimDuration::from_secs(1), |sim, w| {
+                let now = sim.now();
+                w.endpoints
+                    .get_mut("store")
+                    .unwrap()
+                    .store
+                    .external_update("ID1", 5e6, now);
+            });
+        }
+        t = t + SimDuration::from_secs(5);
+    }
+    sim.run(&mut w);
+    // Stale serves: fetch results whose version lagged the store.
+    let stale_serves = w
+        .containers
+        .iter()
+        .map(|c| c.runtime.cache.stats.version_stale)
+        .sum::<u64>();
+    let acct = w.ledger.account("app");
+    let latencies: Vec<SimDuration> = w
+        .metrics
+        .records()
+        .iter()
+        .skip(1)
+        .map(|r| r.latency())
+        .collect();
+    TtlSample {
+        latencies,
+        network_mb: acct.network_bytes / 1e6,
+        saved_mb: acct.network_bytes_saved / 1e6,
+        stale_serves,
+    }
+}
+
 /// Periodic invocations (every 5 s) against an object that's externally
 /// updated every 60 s; sweep the prefetch TTL. Small TTLs refetch often
 /// (more traffic, never stale); large TTLs save traffic but risk staleness
 /// — with strict version checking the staleness converts back into
-/// refetch latency.
+/// refetch latency. Single-seed convenience over [`ttl_sweep_multi`].
 pub fn ttl_sweep(ttls_s: &[f64], iters: usize, seed: u64) -> Vec<TtlRow> {
-    ttls_s
-        .iter()
-        .map(|&ttl_s| {
-            let mut w = lambda_world(seed, true);
-            w.strict_versions = false; // pure TTL regime: count staleness
-            {
-                let spec = w.registry.function("lambda").unwrap().clone();
-                let mut spec = spec;
-                spec.prefetch_ttl = Some(SimDuration::from_secs_f64(ttl_s));
-                w.registry.deploy(spec, w.config.freshen.default_ttl);
+    ttl_sweep_multi(ttls_s, iters, &[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep over the `ttls × seeds` grid: latencies pool in seed
+/// order; traffic and staleness counters sum across seeds.
+pub fn ttl_sweep_multi(
+    ttls_s: &[f64],
+    iters: usize,
+    seeds: &[u64],
+    runner: &SweepRunner,
+) -> Vec<TtlRow> {
+    assert!(!seeds.is_empty(), "ttl_sweep_multi needs at least one seed");
+    runner
+        .run_grid(ttls_s, seeds, |&ttl_s, seed| ttl_run(ttl_s, iters, seed))
+        .into_iter()
+        .zip(ttls_s.iter())
+        .map(|(samples, &ttl_s)| {
+            let mut latencies = Vec::new();
+            let (mut network_mb, mut saved_mb, mut stale) = (0.0, 0.0, 0u64);
+            for s in samples {
+                latencies.extend(s.latencies);
+                network_mb += s.network_mb;
+                saved_mb += s.saved_mb;
+                stale += s.stale_serves;
             }
-            let mut sim: Sim<World> = Sim::new();
-            sim.max_events = 50_000_000;
-            invoke(&mut sim, &mut w, "lambda");
-            sim.run(&mut w);
-            let mut t = sim.now() + SimDuration::from_secs(2);
-            for i in 0..iters {
-                sim.schedule_at(t, |sim, w| {
-                    invoke(sim, w, "lambda");
-                });
-                if i % 12 == 11 {
-                    // External update every ~60s of invocations.
-                    sim.schedule_at(t + SimDuration::from_secs(1), |sim, w| {
-                        let now = sim.now();
-                        w.endpoints
-                            .get_mut("store")
-                            .unwrap()
-                            .store
-                            .external_update("ID1", 5e6, now);
-                    });
-                }
-                t = t + SimDuration::from_secs(5);
-            }
-            sim.run(&mut w);
-            // Stale serves: fetch results whose version lagged the store.
-            let live = w.endpoints["store"].store.peek("ID1").unwrap().version;
-            let stale_serves = w
-                .containers
-                .iter()
-                .map(|c| c.runtime.cache.stats.version_stale)
-                .sum::<u64>()
-                + live.saturating_sub(1) * 0; // placeholder: counted below
-            let acct = w.ledger.account("app");
-            let lat: Vec<SimDuration> = w
-                .metrics
-                .records()
-                .iter()
-                .skip(1)
-                .map(|r| r.latency())
-                .collect();
             TtlRow {
                 ttl_s,
-                latency_p50_ms: Summary::of_durations_ms(&lat)
+                latency_p50_ms: Summary::of_durations_ms(&latencies)
                     .map(|s| s.p50)
                     .unwrap_or(0.0),
-                network_mb: acct.network_bytes / 1e6,
-                saved_mb: acct.network_bytes_saved / 1e6,
-                stale_serves,
+                network_mb,
+                saved_mb,
+                stale_serves: stale,
             }
         })
         .collect()
@@ -317,6 +455,28 @@ pub fn print_ttl(rows: &[TtlRow]) {
 
 #[cfg(test)]
 mod tests {
+    use crate::experiments::harness::SweepRunner;
+
+    #[test]
+    fn multi_seed_sweep_is_identical_across_parallelism() {
+        // Acceptance: a >=4-seed sweep through SweepRunner merges to
+        // byte-identical rows whether run on 1 worker or several.
+        let leads = [0i64, 1000];
+        let seeds = [11u64, 12, 13, 14];
+        let seq = super::lead_time_multi(&leads, 6, &seeds, &SweepRunner::new(1));
+        let par = super::lead_time_multi(&leads, 6, &seeds, &SweepRunner::new(4));
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+    }
+
+    #[test]
+    fn single_seed_multi_matches_legacy_entry_point() {
+        let leads = [0i64, 500];
+        let legacy = super::lead_time(&leads, 5, 0xA11);
+        let multi =
+            super::lead_time_multi(&leads, 5, &[0xA11], &SweepRunner::new(2));
+        assert_eq!(format!("{legacy:?}"), format!("{multi:?}"));
+    }
+
     #[test]
     fn earlier_freshen_is_better_or_equal() {
         let rows = super::lead_time(&[-100, 0, 500, 2000], 10, 0x1EAD);

@@ -44,21 +44,49 @@ pub fn cold_retrieval_s(site: Site, size: f64, rng: &mut Rng) -> f64 {
     (d_conn + d_xfer).as_secs_f64()
 }
 
-pub fn run(seed: u64) -> Fig4 {
+/// Raw per-seed samples, one `(site, size, samples)` triple per cell,
+/// with the rng stream threaded across cells exactly as before.
+fn run_samples(seed: u64) -> Vec<(Site, f64, Vec<f64>)> {
     let mut rng = Rng::new(seed);
-    let mut cells = Vec::new();
+    let mut out = Vec::new();
     for site in Site::all() {
         for &size in &SIZES {
             let samples: Vec<f64> = (0..ITERATIONS)
                 .map(|_| cold_retrieval_s(site, size, &mut rng))
                 .collect();
-            cells.push(Fig4Cell {
+            out.push((site, size, samples));
+        }
+    }
+    out
+}
+
+pub fn run(seed: u64) -> Fig4 {
+    run_multi(&[seed], &crate::experiments::harness::SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: one independent retrieval simulation per seed,
+/// samples pooled per `(site, size)` cell in seed order.
+pub fn run_multi(
+    seeds: &[u64],
+    runner: &crate::experiments::harness::SweepRunner,
+) -> Fig4 {
+    assert!(!seeds.is_empty(), "fig4::run_multi needs at least one seed");
+    let per_seed = runner.run(seeds, |_, &seed| run_samples(seed));
+    let cells = per_seed[0]
+        .iter()
+        .enumerate()
+        .map(|(i, &(site, size, _))| {
+            let mut samples = Vec::new();
+            for seed_run in &per_seed {
+                samples.extend_from_slice(&seed_run[i].2);
+            }
+            Fig4Cell {
                 site,
                 size,
                 stats: Summary::of(&samples).expect("non-empty"),
-            });
-        }
-    }
+            }
+        })
+        .collect();
     Fig4 { cells }
 }
 

@@ -88,10 +88,12 @@ fn warmed_send_s(link: &Link, size: f64, rng: &mut Rng) -> f64 {
     conn.send_with_ack(t, rng, size, 1e-3).as_secs_f64()
 }
 
-pub fn run(placement: Placement, seed: u64) -> FigWarm {
+/// Raw per-seed samples: `(size, cold, warmed)` per swept size, with the
+/// rng stream threaded across cells exactly as the summarised run does.
+fn run_samples(placement: Placement, seed: u64) -> Vec<(f64, Vec<f64>, Vec<f64>)> {
     let link = placement.link();
     let mut rng = Rng::new(seed);
-    let cells = SIZES
+    SIZES
         .iter()
         .map(|&size| {
             let cold: Vec<f64> = (0..ITERATIONS)
@@ -100,6 +102,38 @@ pub fn run(placement: Placement, seed: u64) -> FigWarm {
             let warmed: Vec<f64> = (0..ITERATIONS)
                 .map(|_| warmed_send_s(&link, size, &mut rng))
                 .collect();
+            (size, cold, warmed)
+        })
+        .collect()
+}
+
+pub fn run(placement: Placement, seed: u64) -> FigWarm {
+    run_multi(
+        placement,
+        &[seed],
+        &crate::experiments::harness::SweepRunner::new(1),
+    )
+}
+
+/// Multi-seed sweep: one independent transfer simulation per seed, cold
+/// and warmed samples pooled per size in seed order before summarising.
+pub fn run_multi(
+    placement: Placement,
+    seeds: &[u64],
+    runner: &crate::experiments::harness::SweepRunner,
+) -> FigWarm {
+    assert!(!seeds.is_empty(), "fig5_6::run_multi needs at least one seed");
+    let per_seed = runner.run(seeds, |_, &seed| run_samples(placement, seed));
+    let cells = SIZES
+        .iter()
+        .enumerate()
+        .map(|(i, &size)| {
+            let mut cold = Vec::new();
+            let mut warmed = Vec::new();
+            for samples in &per_seed {
+                cold.extend_from_slice(&samples[i].1);
+                warmed.extend_from_slice(&samples[i].2);
+            }
             WarmCell {
                 size,
                 cold: Summary::of(&cold).unwrap(),

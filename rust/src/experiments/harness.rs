@@ -1,0 +1,202 @@
+//! Parallel multi-seed experiment harness.
+//!
+//! [`SweepRunner`] fans an arbitrary grid — typically `(scenario, seed,
+//! config-override)` tuples — out across `std::thread` workers. Each grid
+//! point runs a self-contained closure that owns its own `Sim<World>`
+//! (nothing simulator-side is shared between threads), and results are
+//! returned **indexed by grid position, never by completion order**, so
+//! the merged output of a sweep is byte-identical whether it ran on one
+//! worker or sixteen.
+//!
+//! Determinism contract:
+//! 1. the per-point closure must derive all randomness from the grid
+//!    point (its seed), and
+//! 2. any cross-point aggregation must consume the returned `Vec` in
+//!    order (it is already grid-ordered).
+//!
+//! The experiment modules (`ablations`, `prediction`, `fig4`, `fig5_6`)
+//! expose `*_multi` entry points built on this; the CLI maps
+//! `--seeds a..b --parallel N` onto them.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A pool of `std::thread` workers executing a grid of independent runs.
+#[derive(Debug, Clone)]
+pub struct SweepRunner {
+    parallel: usize,
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::new(1)
+    }
+}
+
+impl SweepRunner {
+    /// `parallel` worker threads; `0` and `1` both mean sequential.
+    pub fn new(parallel: usize) -> SweepRunner {
+        SweepRunner {
+            parallel: parallel.max(1),
+        }
+    }
+
+    /// Worker threads this runner uses.
+    pub fn parallel(&self) -> usize {
+        self.parallel
+    }
+
+    /// Run `f(index, &points[index])` for every grid point and return the
+    /// results **in grid order**. Work is claimed dynamically (an atomic
+    /// cursor), so stragglers don't serialise the sweep, but the output
+    /// vector is position-indexed and therefore independent of scheduling.
+    ///
+    /// Panics in `f` propagate (the scope re-raises them), so a failing
+    /// grid point fails the sweep rather than silently vanishing.
+    pub fn run<P, R, F>(&self, points: &[P], f: F) -> Vec<R>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(usize, &P) -> R + Sync,
+    {
+        if self.parallel == 1 || points.len() <= 1 {
+            return points.iter().enumerate().map(|(i, p)| f(i, p)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let cells: Vec<Mutex<Option<R>>> = points.iter().map(|_| Mutex::new(None)).collect();
+        let workers = self.parallel.min(points.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= points.len() {
+                        break;
+                    }
+                    let r = f(i, &points[i]);
+                    *cells[i].lock().unwrap() = Some(r);
+                });
+            }
+        });
+        cells
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("every grid point completed")
+            })
+            .collect()
+    }
+
+    /// Convenience: the cartesian grid `params × seeds`, run in parallel,
+    /// regrouped **per parameter** (outer Vec follows `params` order; the
+    /// inner Vec follows `seeds` order). This is the shape every
+    /// multi-seed experiment merge consumes.
+    pub fn run_grid<P, R, F>(&self, params: &[P], seeds: &[u64], f: F) -> Vec<Vec<R>>
+    where
+        P: Sync,
+        R: Send,
+        F: Fn(&P, u64) -> R + Sync,
+    {
+        let grid: Vec<(usize, u64)> = params
+            .iter()
+            .enumerate()
+            .flat_map(|(pi, _)| seeds.iter().map(move |&s| (pi, s)))
+            .collect();
+        let flat = self.run(&grid, |_, &(pi, seed)| f(&params[pi], seed));
+        let mut out: Vec<Vec<R>> = Vec::with_capacity(params.len());
+        let mut it = flat.into_iter();
+        for _ in 0..params.len() {
+            out.push(it.by_ref().take(seeds.len()).collect());
+        }
+        out
+    }
+}
+
+/// Parse a seed specification: `"7"` (one seed), `"a..b"` (half-open
+/// range) or `"a..=b"` (inclusive). Returns `None` on malformed input or
+/// an empty range.
+pub fn parse_seed_spec(s: &str) -> Option<Vec<u64>> {
+    let s = s.trim();
+    if let Some((a, b)) = s.split_once("..") {
+        let (inclusive, b) = match b.strip_prefix('=') {
+            Some(rest) => (true, rest),
+            None => (false, b),
+        };
+        let a: u64 = a.trim().parse().ok()?;
+        let b: u64 = b.trim().parse().ok()?;
+        let end = if inclusive { b.checked_add(1)? } else { b };
+        if end <= a {
+            return None;
+        }
+        Some((a..end).collect())
+    } else {
+        s.parse().ok().map(|n| vec![n])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pseudo_work(i: usize, seed: u64) -> u64 {
+        // Deterministic per-point value with some spin so threads overlap.
+        let mut rng = crate::util::rng::Rng::new(seed ^ (i as u64) << 32);
+        let mut acc = 0u64;
+        for _ in 0..500 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        acc
+    }
+
+    #[test]
+    fn parallel_output_is_byte_identical_to_sequential() {
+        let points: Vec<u64> = (0..23).collect();
+        let seq = SweepRunner::new(1).run(&points, |i, &s| pseudo_work(i, s));
+        for workers in [2, 4, 8] {
+            let par = SweepRunner::new(workers).run(&points, |i, &s| pseudo_work(i, s));
+            assert_eq!(seq, par, "parallel={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn results_are_grid_ordered_not_completion_ordered() {
+        let points: Vec<usize> = (0..16).collect();
+        let out = SweepRunner::new(4).run(&points, |i, &p| {
+            // Make early grid points finish last.
+            std::thread::sleep(std::time::Duration::from_millis(
+                (16 - i) as u64 % 5,
+            ));
+            p * 10
+        });
+        assert_eq!(out, points.iter().map(|p| p * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_grid_groups_by_parameter() {
+        let params = ["a", "b", "c"];
+        let seeds = [1u64, 2, 3, 4];
+        let grouped =
+            SweepRunner::new(3).run_grid(&params, &seeds, |p, s| format!("{p}{s}"));
+        assert_eq!(grouped.len(), 3);
+        assert_eq!(grouped[0], vec!["a1", "a2", "a3", "a4"]);
+        assert_eq!(grouped[2], vec!["c1", "c2", "c3", "c4"]);
+    }
+
+    #[test]
+    fn seed_spec_forms() {
+        assert_eq!(parse_seed_spec("7"), Some(vec![7]));
+        assert_eq!(parse_seed_spec("2..5"), Some(vec![2, 3, 4]));
+        assert_eq!(parse_seed_spec("2..=5"), Some(vec![2, 3, 4, 5]));
+        assert_eq!(parse_seed_spec("5..5"), None);
+        assert_eq!(parse_seed_spec("5..2"), None);
+        assert_eq!(parse_seed_spec("x..y"), None);
+        assert_eq!(parse_seed_spec(" 0..2 "), Some(vec![0, 1]));
+    }
+
+    #[test]
+    fn zero_parallel_is_sequential() {
+        let r = SweepRunner::new(0);
+        assert_eq!(r.parallel(), 1);
+        assert_eq!(r.run(&[1, 2, 3], |_, &x| x + 1), vec![2, 3, 4]);
+    }
+}

@@ -16,6 +16,23 @@
 //! | fig6    | warmed vs cold transfer, edge (~50 ms) link      |
 //! | e2e     | chain workload, freshen on vs off (ours)         |
 //! | abl-*   | lead-time, confidence-gating, TTL ablations      |
+//!
+//! # Multi-seed sweeps
+//!
+//! [`harness::SweepRunner`] fans `(scenario, seed)` grids out over
+//! `std::thread` workers; the `*_multi` entry points in `ablations`,
+//! `prediction`, `fig4` and `fig5_6` run one independent simulation per
+//! grid point and merge the per-run outputs deterministically:
+//!
+//! - the grid is ordered `params × seeds` (seeds innermost), and results
+//!   are collected **by grid index, never by completion order**;
+//! - per-point raw samples (latencies, transfer times) are pooled in grid
+//!   order before summarising, and counters (hits, arrivals, GB-s) are
+//!   summed, so a merged row over seeds `a..b` is byte-identical whether
+//!   produced with `--parallel 1` or `--parallel N`.
+//!
+//! The CLI exposes this as `repro experiment <id> --seeds a..b
+//! --parallel N`.
 
 pub mod ablations;
 pub mod baselines;
@@ -23,8 +40,11 @@ pub mod e2e;
 pub mod fig2;
 pub mod fig4;
 pub mod fig5_6;
+pub mod harness;
 pub mod prediction;
 pub mod table1;
+
+pub use harness::SweepRunner;
 
 /// Render a simple aligned table (used by every harness's `print`).
 pub fn print_table(headers: &[&str], rows: &[Vec<String>]) {

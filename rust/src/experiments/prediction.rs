@@ -80,6 +80,37 @@ pub struct QualityRow {
     pub mean_lead_s: f64,
     pub predictions: u64,
     pub arrivals: u64,
+    /// Raw counters the ratios derive from, kept so multi-seed sweeps can
+    /// merge rows exactly (sum counters, recompute ratios) instead of
+    /// averaging averages.
+    pub hits: u64,
+    pub misses: u64,
+    pub lead_sum_s: f64,
+    pub lead_count: u64,
+}
+
+impl QualityRow {
+    /// Recompute the derived ratios from the raw counters.
+    fn finalize(&mut self) {
+        let hits = self.hits as f64;
+        let misses = self.misses as f64;
+        self.predictions = self.hits + self.misses;
+        self.precision = if hits + misses == 0.0 {
+            0.0
+        } else {
+            hits / (hits + misses)
+        };
+        self.recall = if self.arrivals == 0 {
+            0.0
+        } else {
+            (hits / self.arrivals as f64).min(1.0)
+        };
+        self.mean_lead_s = if self.lead_count == 0 {
+            0.0
+        } else {
+            self.lead_sum_s / self.lead_count as f64
+        };
+    }
 }
 
 /// Score one (regime, predictor) pair over a synthetic timeline.
@@ -220,31 +251,21 @@ fn score(regime: Regime, predictor: Predictor, seed: u64) -> QualityRow {
         tracker.expire(id);
     }
 
-    let hits = tracker.hits as f64;
-    let misses = tracker.misses as f64;
-    let precision = if hits + misses == 0.0 {
-        0.0
-    } else {
-        hits / (hits + misses)
-    };
-    let recall = if arrivals.is_empty() {
-        0.0
-    } else {
-        hits / arrivals.len() as f64
-    };
-    QualityRow {
+    let mut row = QualityRow {
         regime,
         predictor,
-        precision,
-        recall: recall.min(1.0),
-        mean_lead_s: if lead_count == 0 {
-            0.0
-        } else {
-            lead_sum / lead_count as f64
-        },
-        predictions: (tracker.hits + tracker.misses),
+        precision: 0.0,
+        recall: 0.0,
+        mean_lead_s: 0.0,
+        predictions: 0,
         arrivals: arrivals.len() as u64,
-    }
+        hits: tracker.hits,
+        misses: tracker.misses,
+        lead_sum_s: lead_sum,
+        lead_count,
+    };
+    row.finalize();
+    row
 }
 
 #[derive(Debug, Clone)]
@@ -252,8 +273,9 @@ pub struct PredictionQuality {
     pub rows: Vec<QualityRow>,
 }
 
-pub fn run(seed: u64) -> PredictionQuality {
-    let mut rows = Vec::new();
+/// The `(regime, predictor)` cells the quality table reports.
+fn cells() -> Vec<(Regime, Predictor)> {
+    let mut out = Vec::new();
     for regime in Regime::all() {
         let predictors: &[Predictor] = match regime {
             Regime::LinearChain | Regime::BranchyChain => {
@@ -262,9 +284,47 @@ pub fn run(seed: u64) -> PredictionQuality {
             _ => &[Predictor::Histogram],
         };
         for &p in predictors {
-            rows.push(score(regime, p, seed));
+            out.push((regime, p));
         }
     }
+    out
+}
+
+pub fn run(seed: u64) -> PredictionQuality {
+    run_multi(&[seed], &crate::experiments::harness::SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: every `(regime, predictor, seed)` cell is an
+/// independent run; per-cell rows merge by summing the raw counters
+/// (hits, misses, arrivals, lead sums) in seed order and recomputing the
+/// ratios — deterministic for any `--parallel`.
+pub fn run_multi(
+    seeds: &[u64],
+    runner: &crate::experiments::harness::SweepRunner,
+) -> PredictionQuality {
+    assert!(
+        !seeds.is_empty(),
+        "prediction::run_multi needs at least one seed"
+    );
+    let cells = cells();
+    let rows = runner
+        .run_grid(&cells, seeds, |&(regime, predictor), seed| {
+            score(regime, predictor, seed)
+        })
+        .into_iter()
+        .map(|per_seed| {
+            let mut merged = per_seed[0].clone();
+            for row in &per_seed[1..] {
+                merged.hits += row.hits;
+                merged.misses += row.misses;
+                merged.arrivals += row.arrivals;
+                merged.lead_sum_s += row.lead_sum_s;
+                merged.lead_count += row.lead_count;
+            }
+            merged.finalize();
+            merged
+        })
+        .collect();
     PredictionQuality { rows }
 }
 

@@ -1,11 +1,12 @@
 //! Deterministic discrete-event simulation engine.
 //!
 //! Every paper experiment (Table 1's 20 k trigger runs, Figures 4–6's
-//! transfer sweeps, the chain workloads) runs on this engine: a binary-heap
-//! event queue over virtual microseconds ([`crate::util::time::SimTime`]),
-//! with strictly deterministic ordering — events at the same timestamp fire
-//! in schedule order (FIFO by sequence number), so a given seed always
-//! produces the same run.
+//! transfer sweeps, the chain workloads) runs on this engine: a
+//! hierarchical timing-wheel event queue ([`wheel::TimingWheel`]) over
+//! virtual microseconds ([`crate::util::time::SimTime`]), with strictly
+//! deterministic ordering — events at the same timestamp fire in schedule
+//! order (FIFO by sequence number), so a given seed always produces the
+//! same run.
 //!
 //! # Model
 //!
@@ -15,53 +16,36 @@
 //! pending ones, and mutate the world. "Processes" that block (e.g. the
 //! paper's `FrWait`) are written in continuation-passing style: the waiter
 //! registers a callback that the completing event fires.
+//!
+//! # Scheduler
+//!
+//! Scheduling and cancellation are O(1) on the wheel (amortised O(1)
+//! cascading per event), versus O(log n) on the previous global binary
+//! heap; the heap survives as [`wheel::BinaryHeapQueue`], the executable
+//! specification the property tests check the wheel against event for
+//! event. Cancelling marks a per-slot tombstone in place — there is no
+//! global tombstone set, and cancelling an already-fired event is a
+//! `false` no-op that leaks nothing.
 
 pub mod waitlist;
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-use crate::util::fxhash::FxHashSet;
+pub mod wheel;
 
 use crate::util::time::{SimDuration, SimTime};
+
+use wheel::{EventQueue, TimingWheel};
 
 /// Identifier of a scheduled event, usable for cancellation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(u64);
 
-type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+/// A scheduled event body.
+pub type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
 
-struct Scheduled<W> {
-    at: SimTime,
-    seq: u64,
-    f: EventFn<W>,
-}
-
-// Order the heap as a *min*-heap on (time, seq).
-impl<W> PartialEq for Scheduled<W> {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl<W> Eq for Scheduled<W> {}
-impl<W> PartialOrd for Scheduled<W> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<W> Ord for Scheduled<W> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reversed: BinaryHeap is a max-heap, we want earliest first.
-        (other.at, other.seq).cmp(&(self.at, self.seq))
-    }
-}
-
-/// The simulation engine: virtual clock + event queue.
+/// The simulation engine: virtual clock + timing-wheel event queue.
 pub struct Sim<W> {
     now: SimTime,
     seq: u64,
-    queue: BinaryHeap<Scheduled<W>>,
-    cancelled: FxHashSet<u64>,
+    queue: TimingWheel<W>,
     executed: u64,
     /// Hard cap on executed events; guards against runaway feedback loops
     /// in experiments (0 = unlimited).
@@ -79,8 +63,7 @@ impl<W> Sim<W> {
         Sim {
             now: SimTime::ZERO,
             seq: 0,
-            queue: BinaryHeap::new(),
-            cancelled: FxHashSet::default(),
+            queue: TimingWheel::new(),
             executed: 0,
             max_events: 0,
         }
@@ -96,9 +79,9 @@ impl<W> Sim<W> {
         self.executed
     }
 
-    /// Number of events still pending.
+    /// Number of events still pending (cancelled events excluded).
     pub fn pending(&self) -> usize {
-        self.queue.len() - self.cancelled.len().min(self.queue.len())
+        self.queue.len()
     }
 
     /// Schedule `f` to run after `delay`. Returns an id for cancellation.
@@ -117,11 +100,7 @@ impl<W> Sim<W> {
         debug_assert!(at >= self.now, "scheduling into the past");
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(Scheduled {
-            at: at.max(self.now),
-            seq,
-            f: Box::new(f),
-        });
+        self.queue.insert(at.max(self.now), seq, Box::new(f));
         EventId(seq)
     }
 
@@ -136,31 +115,23 @@ impl<W> Sim<W> {
     }
 
     /// Cancel a pending event. Cancelling an already-fired or already-
-    /// cancelled event is a no-op (returns false).
+    /// cancelled event is a no-op (returns false) and leaks nothing: the
+    /// wheel tracks fired/pending status per event, so a stale [`EventId`]
+    /// cannot tombstone anything.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if id.0 >= self.seq {
-            return false;
-        }
-        self.cancelled.insert(id.0)
+        self.queue.cancel(id.0)
     }
 
     /// Run one event; returns false when the queue is exhausted.
     pub fn step(&mut self, world: &mut W) -> bool {
-        loop {
-            match self.queue.pop() {
-                None => return false,
-                Some(ev) => {
-                    // Fast path: no cancellations outstanding (the common
-                    // case) skips the tombstone lookup entirely.
-                    if !self.cancelled.is_empty() && self.cancelled.remove(&ev.seq) {
-                        continue; // tombstoned
-                    }
-                    debug_assert!(ev.at >= self.now);
-                    self.now = ev.at;
-                    self.executed += 1;
-                    (ev.f)(self, world);
-                    return true;
-                }
+        match self.queue.pop() {
+            None => false,
+            Some((at, _seq, f)) => {
+                debug_assert!(at >= self.now);
+                self.now = self.now.max(at);
+                self.executed += 1;
+                f(self, world);
+                true
             }
         }
     }
@@ -179,8 +150,8 @@ impl<W> Sim<W> {
 
     /// Run until virtual time `until` (events at exactly `until` still run).
     pub fn run_until(&mut self, world: &mut W, until: SimTime) {
-        while let Some(head) = self.queue.peek() {
-            if head.at > until {
+        while let Some(head_at) = self.queue.peek_at() {
+            if head_at > until {
                 break;
             }
             self.step(world);
@@ -269,6 +240,40 @@ mod tests {
     }
 
     #[test]
+    fn cancel_after_fire_is_a_false_noop_and_leaks_nothing() {
+        // Regression: the old scheduler returned `true` for a cancel of an
+        // already-fired event and inserted a permanent tombstone, which
+        // also disabled the step() fast path forever.
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        let id = sim.schedule(SimDuration::from_millis(1), |s, w| {
+            w.log.push((s.now().micros(), "fired"))
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(1_000, "fired")]);
+        assert!(!sim.cancel(id), "cancel-after-fire must report false");
+        assert!(!sim.cancel(id), "and stay false on repeat");
+        assert_eq!(sim.pending(), 0, "no tombstone may leak");
+        // The engine keeps running normally afterwards.
+        sim.schedule(SimDuration::from_millis(1), |s, w| {
+            w.log.push((s.now().micros(), "later"))
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log.len(), 2);
+        assert_eq!(sim.pending(), 0);
+    }
+
+    #[test]
+    fn pending_counts_live_events_only() {
+        let mut sim: Sim<World> = Sim::new();
+        let id = sim.schedule(SimDuration::from_millis(1), |_, _| {});
+        sim.schedule(SimDuration::from_millis(2), |_, _| {});
+        assert_eq!(sim.pending(), 2);
+        assert!(sim.cancel(id));
+        assert_eq!(sim.pending(), 1, "cancelled events are not pending");
+    }
+
+    #[test]
     fn run_until_stops_and_advances_clock() {
         let mut sim: Sim<World> = Sim::new();
         let mut w = World::default();
@@ -280,6 +285,23 @@ mod tests {
         assert_eq!(sim.now(), SimTime(500_000));
         sim.run(&mut w);
         assert_eq!(w.log.len(), 1);
+    }
+
+    #[test]
+    fn schedule_after_run_until_fires_in_order() {
+        // run_until peeks past `until`; a subsequent schedule below the
+        // peeked head must still fire before it.
+        let mut sim: Sim<World> = Sim::new();
+        let mut w = World::default();
+        sim.schedule(SimDuration::from_secs(1), |s, w| {
+            w.log.push((s.now().micros(), "late"))
+        });
+        sim.run_until(&mut w, SimTime(200_000));
+        sim.schedule_at(SimTime(300_000), |s, w| {
+            w.log.push((s.now().micros(), "early"))
+        });
+        sim.run(&mut w);
+        assert_eq!(w.log, vec![(300_000, "early"), (1_000_000, "late")]);
     }
 
     #[test]

@@ -8,13 +8,18 @@
 //! waiters resume at the completion timestamp in registration order —
 //! exactly the semantics of waking threads blocked on a condition variable.
 
+use std::collections::VecDeque;
+
 use crate::simcore::Sim;
 
 type Waiter<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
 
 /// A set of parked continuations keyed by nothing (one list per condition).
 pub struct WaitList<W> {
-    waiters: Vec<Waiter<W>>,
+    /// FIFO of parked waiters. A deque, not a `Vec`: [`WaitList::wake_one`]
+    /// releases from the front, which must stay O(1) under the paper's
+    /// capacity-token churn (a `Vec::remove(0)` was O(n) per wake).
+    waiters: VecDeque<Waiter<W>>,
 }
 
 impl<W: 'static> Default for WaitList<W> {
@@ -26,7 +31,7 @@ impl<W: 'static> Default for WaitList<W> {
 impl<W: 'static> WaitList<W> {
     pub fn new() -> WaitList<W> {
         WaitList {
-            waiters: Vec::new(),
+            waiters: VecDeque::new(),
         }
     }
 
@@ -35,7 +40,7 @@ impl<W: 'static> WaitList<W> {
     where
         F: FnOnce(&mut Sim<W>, &mut W) + 'static,
     {
-        self.waiters.push(Box::new(f));
+        self.waiters.push_back(Box::new(f));
     }
 
     pub fn is_empty(&self) -> bool {
@@ -57,13 +62,15 @@ impl<W: 'static> WaitList<W> {
     }
 
     /// Wake only the first parked waiter, if any (for capacity tokens).
+    /// O(1): pops the deque front, preserving FIFO order.
     pub fn wake_one(&mut self, sim: &mut Sim<W>) -> bool {
-        if self.waiters.is_empty() {
-            return false;
+        match self.waiters.pop_front() {
+            Some(w) => {
+                sim.immediate(w);
+                true
+            }
+            None => false,
         }
-        let w = self.waiters.remove(0);
-        sim.immediate(w);
-        true
     }
 }
 

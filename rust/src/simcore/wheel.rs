@@ -1,0 +1,455 @@
+//! Hierarchical timing-wheel event queue — the engine behind [`Sim`].
+//!
+//! The queue maps each pending event to a slot in one of [`LEVELS`] wheels
+//! of [`SLOTS`] slots each. Level `k` buckets timestamps by bit-field
+//! `at[6k .. 6k+6]`; an event lives at the *smallest* level whose next
+//! coarser window it shares with the current cursor (the Linux timer-wheel
+//! placement rule, `level = msb(at ^ now) / 6`). Events further than
+//! `2^(6·LEVELS)` µs (≈ 19 h) ahead go to a sorted overflow heap and are
+//! re-homed onto the wheels when the cursor approaches.
+//!
+//! Determinism: the engine's contract is exact `(timestamp, seq)` FIFO
+//! order. Slots store bare `(at, seq)` pairs; the closures live in a
+//! side table keyed by `seq`. Draining a slot re-inserts its pairs
+//! relative to the advanced cursor, which provably lands them at a
+//! strictly lower level, until they reach the sorted `ready` buffer the
+//! pop path consumes.
+//!
+//! Cancellation is O(1): `cancel` removes the closure from the side
+//! table; the orphaned `(at, seq)` pair stays in its slot as a per-slot
+//! tombstone and is dropped when that slot drains. Nothing is consulted
+//! on the hot pop path beyond the side-table lookup every pop already
+//! does, and a cancel of an already-fired event finds no closure and
+//! reports `false` — there is no global tombstone set to leak into.
+//!
+//! [`Sim`]: crate::simcore::Sim
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::simcore::EventFn;
+use crate::util::fxhash::FxHashMap;
+use crate::util::time::SimTime;
+
+/// log2 of the slot count per level.
+pub const BITS: usize = 6;
+/// Slots per level.
+pub const SLOTS: usize = 1 << BITS;
+/// Number of wheel levels; beyond `2^(BITS·LEVELS)` µs lies the overflow.
+pub const LEVELS: usize = 6;
+
+const SLOT_MASK: u64 = (SLOTS as u64) - 1;
+
+/// A pending event reference: `(timestamp µs, sequence number)`.
+type Pair = (u64, u64);
+
+/// The abstract event-queue interface, so benches and property tests can
+/// drive the wheel and the reference binary heap identically.
+pub trait EventQueue<W> {
+    /// Add an event. `seq` values must be unique and monotonically
+    /// increasing across inserts (the engine's schedule counter).
+    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>);
+    /// Remove a pending event. Returns `false` (and changes nothing) if
+    /// the event already fired, was already cancelled, or never existed.
+    fn cancel(&mut self, seq: u64) -> bool;
+    /// Remove and return the earliest event by `(timestamp, seq)`.
+    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)>;
+    /// Timestamp of the earliest pending event, if any.
+    fn peek_at(&mut self) -> Option<SimTime>;
+    /// Number of live (non-cancelled, non-fired) events.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Hierarchical timing wheel. See the module docs for the invariants.
+pub struct TimingWheel<W> {
+    /// Cursor: all live events have `at >= now` except entries parked in
+    /// `ready` (which may briefly trail `now` after a peek advanced the
+    /// cursor and the engine then scheduled an earlier event).
+    now: u64,
+    /// Imminent events, sorted ascending by `(at, seq)`; every entry
+    /// satisfies `at <= self.now`.
+    ready: VecDeque<Pair>,
+    /// `LEVELS × SLOTS` buckets, flattened; `slots[level * SLOTS + slot]`.
+    slots: Vec<Vec<Pair>>,
+    /// One occupancy bit per slot, per level, for O(1) next-slot scans.
+    occupied: [u64; LEVELS],
+    /// Far-future events, min-heap by `(at, seq)`.
+    overflow: BinaryHeap<Reverse<Pair>>,
+    /// seq → closure. Cancel removes from here; pairs whose seq is gone
+    /// are tombstones, collected when their slot drains.
+    store: FxHashMap<u64, EventFn<W>>,
+}
+
+impl<W> Default for TimingWheel<W> {
+    fn default() -> Self {
+        TimingWheel::new()
+    }
+}
+
+impl<W> TimingWheel<W> {
+    pub fn new() -> TimingWheel<W> {
+        TimingWheel {
+            now: 0,
+            ready: VecDeque::new(),
+            slots: (0..LEVELS * SLOTS).map(|_| Vec::new()).collect(),
+            occupied: [0; LEVELS],
+            overflow: BinaryHeap::new(),
+            store: FxHashMap::default(),
+        }
+    }
+
+    /// Route a pair to `ready`, a wheel slot, or the overflow, relative to
+    /// the current cursor.
+    fn push_pair(&mut self, p: Pair) {
+        let (at, _) = p;
+        if at <= self.now {
+            // Keep `ready` sorted by (at, seq). New seqs are maximal, so
+            // appends dominate; out-of-order inserts only occur after a
+            // peek ran the cursor ahead (run_until), and binary-insert.
+            match self.ready.back() {
+                Some(&back) if back > p => {
+                    let idx = self.ready.partition_point(|&q| q < p);
+                    self.ready.insert(idx, p);
+                }
+                _ => self.ready.push_back(p),
+            }
+            return;
+        }
+        let diff = at ^ self.now; // nonzero: at > now
+        let level = ((63 - diff.leading_zeros()) / BITS as u32) as usize;
+        if level >= LEVELS {
+            self.overflow.push(Reverse(p));
+            return;
+        }
+        let slot = ((at >> (level * BITS)) & SLOT_MASK) as usize;
+        self.slots[level * SLOTS + slot].push(p);
+        self.occupied[level] |= 1u64 << slot;
+    }
+
+    /// Move events toward `ready` until it provably holds the *complete*
+    /// batch for its front timestamp: every remaining wheel slot and the
+    /// overflow head must lie strictly later than `ready`'s front before
+    /// this returns. (A partial batch would break FIFO: `pop` serves
+    /// `ready` without re-consulting the wheels, and an event executed
+    /// from a partial batch could schedule an immediate that would then
+    /// overtake a same-timestamp, lower-seq event still parked in a
+    /// slot.) Returns `false` iff nothing is left anywhere.
+    fn refill(&mut self) -> bool {
+        loop {
+            // Candidate = the occupied slot with the smallest window base
+            // across levels (finer level wins ties), vs the overflow head.
+            let mut best: Option<(u64, usize, usize)> = None; // (bound, level, slot)
+            for level in 0..LEVELS {
+                let occ = self.occupied[level];
+                if occ == 0 {
+                    continue;
+                }
+                let shift = level * BITS;
+                let cursor = ((self.now >> shift) & SLOT_MASK) as u32;
+                let ahead = occ & (u64::MAX << cursor);
+                // Invariant: every resident pair shares the level's coarser
+                // window with the cursor, so no occupied slot trails it.
+                debug_assert_eq!(ahead, occ, "slot behind cursor at level {level}");
+                let slot = ahead.trailing_zeros() as usize;
+                let span = 1u64 << ((level + 1) * BITS);
+                let base = (self.now & !(span - 1)) | ((slot as u64) << shift);
+                let bound = base.max(self.now);
+                if best.map_or(true, |(b, _, _)| bound < b) {
+                    best = Some((bound, level, slot));
+                }
+            }
+            let overflow_at = self.overflow.peek().map(|&Reverse((at, _))| at);
+            let next = match (best, overflow_at) {
+                (None, None) => return !self.ready.is_empty(),
+                (Some((b, _, _)), Some(o)) => b.min(o),
+                (Some((b, _, _)), None) => b,
+                (None, Some(o)) => o,
+            };
+            // Bounds are lower bounds on their source's contents, so once
+            // every source lies strictly past the front timestamp, the
+            // front batch is complete.
+            if let Some(&(front_at, _)) = self.ready.front() {
+                if next > front_at {
+                    return true;
+                }
+            }
+            match (best, overflow_at) {
+                // On a bound tie, drain the overflow first: an
+                // overflow-resident event was scheduled against a farther
+                // horizon than any wheel-resident event with the same
+                // timestamp, so it carries the lower seq. (Order is
+                // restored by the sorted `ready` insert either way; this
+                // just reaches the fixpoint in fewer drains.)
+                (Some((bound, level, slot)), ov) if ov.map_or(true, |o| bound < o) => {
+                    self.drain_slot(level, slot, bound);
+                }
+                _ => self.drain_overflow(),
+            }
+        }
+    }
+
+    /// Advance the cursor to `bound` and re-route every live pair in the
+    /// slot. Pairs land at a strictly lower level (or in `ready`), so
+    /// each event cascades at most `LEVELS` times over its lifetime.
+    fn drain_slot(&mut self, level: usize, slot: usize, bound: u64) {
+        self.occupied[level] &= !(1u64 << slot);
+        let pairs = std::mem::take(&mut self.slots[level * SLOTS + slot]);
+        self.now = self.now.max(bound);
+        for p in pairs {
+            if self.store.contains_key(&p.1) {
+                self.push_pair(p);
+            }
+            // else: tombstone of a cancelled event — collected here.
+        }
+    }
+
+    /// Called when the overflow head is the global minimum: advance the
+    /// cursor to it and re-home every overflow event that now fits on the
+    /// wheels.
+    fn drain_overflow(&mut self) {
+        let Some(Reverse(head)) = self.overflow.pop() else {
+            return;
+        };
+        self.now = self.now.max(head.0);
+        if self.store.contains_key(&head.1) {
+            self.push_pair(head);
+        }
+        while let Some(&Reverse(p)) = self.overflow.peek() {
+            let at = p.0;
+            if at > self.now {
+                let level = ((63 - (at ^ self.now).leading_zeros()) / BITS as u32) as usize;
+                if level >= LEVELS {
+                    break; // still beyond the horizon; stays in overflow
+                }
+            }
+            self.overflow.pop();
+            if self.store.contains_key(&p.1) {
+                self.push_pair(p);
+            }
+        }
+    }
+}
+
+impl<W> EventQueue<W> for TimingWheel<W> {
+    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>) {
+        self.store.insert(seq, f);
+        self.push_pair((at.micros(), seq));
+    }
+
+    fn cancel(&mut self, seq: u64) -> bool {
+        self.store.remove(&seq).is_some()
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)> {
+        loop {
+            while let Some((at, seq)) = self.ready.pop_front() {
+                if let Some(f) = self.store.remove(&seq) {
+                    return Some((SimTime(at), seq, f));
+                }
+            }
+            if !self.refill() {
+                return None;
+            }
+        }
+    }
+
+    fn peek_at(&mut self) -> Option<SimTime> {
+        loop {
+            while let Some(&(at, seq)) = self.ready.front() {
+                if self.store.contains_key(&seq) {
+                    return Some(SimTime(at));
+                }
+                self.ready.pop_front();
+            }
+            if !self.refill() {
+                return None;
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+}
+
+/// The pre-wheel scheduler: a global binary min-heap over `(at, seq)`.
+/// Kept as the executable specification for the property tests and the
+/// heap-vs-wheel bench comparison.
+pub struct BinaryHeapQueue<W> {
+    heap: BinaryHeap<Reverse<Pair>>,
+    store: FxHashMap<u64, EventFn<W>>,
+}
+
+impl<W> Default for BinaryHeapQueue<W> {
+    fn default() -> Self {
+        BinaryHeapQueue::new()
+    }
+}
+
+impl<W> BinaryHeapQueue<W> {
+    pub fn new() -> BinaryHeapQueue<W> {
+        BinaryHeapQueue {
+            heap: BinaryHeap::new(),
+            store: FxHashMap::default(),
+        }
+    }
+}
+
+impl<W> EventQueue<W> for BinaryHeapQueue<W> {
+    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>) {
+        self.store.insert(seq, f);
+        self.heap.push(Reverse((at.micros(), seq)));
+    }
+
+    fn cancel(&mut self, seq: u64) -> bool {
+        self.store.remove(&seq).is_some()
+    }
+
+    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)> {
+        while let Some(Reverse((at, seq))) = self.heap.pop() {
+            if let Some(f) = self.store.remove(&seq) {
+                return Some((SimTime(at), seq, f));
+            }
+        }
+        None
+    }
+
+    fn peek_at(&mut self) -> Option<SimTime> {
+        while let Some(&Reverse((at, seq))) = self.heap.peek() {
+            if self.store.contains_key(&seq) {
+                return Some(SimTime(at));
+            }
+            self.heap.pop();
+        }
+        None
+    }
+
+    fn len(&self) -> usize {
+        self.store.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    type Q = TimingWheel<()>;
+    fn noop() -> EventFn<()> {
+        Box::new(|_, _| {})
+    }
+
+    /// Drain a queue to the popped (at, seq) order.
+    fn drain<W, Q: EventQueue<W>>(q: &mut Q) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        while let Some((at, seq, _f)) = q.pop() {
+            out.push((at.micros(), seq));
+        }
+        out
+    }
+
+    #[test]
+    fn orders_by_time_then_seq_across_levels() {
+        let mut q = Q::new();
+        // Spread across L0 (near), mid levels, and the overflow (~19h+).
+        let times = [
+            5u64,
+            3,
+            3, // same-timestamp FIFO
+            200,
+            70,
+            5_000,
+            64 * 64 * 64 + 17,
+            1u64 << 40, // overflow territory
+            (1u64 << 40) + 1,
+            123_456_789,
+        ];
+        for (i, &t) in times.iter().enumerate() {
+            q.insert(SimTime(t), i as u64, noop());
+        }
+        let got = drain(&mut q);
+        let mut want: Vec<(u64, u64)> = times
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| (t, i as u64))
+            .collect();
+        want.sort();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cancel_is_exact_and_tombstones_collect() {
+        let mut q = Q::new();
+        for i in 0..10u64 {
+            q.insert(SimTime(100 * i), i, noop());
+        }
+        assert!(q.cancel(3));
+        assert!(!q.cancel(3), "double-cancel is a no-op");
+        assert!(!q.cancel(99), "never-scheduled seq");
+        assert_eq!(q.len(), 9);
+        let (at, seq, _) = q.pop().unwrap();
+        assert_eq!((at.micros(), seq), (0, 0));
+        assert!(!q.cancel(0), "cancel-after-fire is a no-op");
+        let rest = drain(&mut q);
+        let want: Vec<(u64, u64)> = (1..10u64)
+            .filter(|&i| i != 3)
+            .map(|i| (100 * i, i))
+            .collect();
+        assert_eq!(rest, want);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn schedule_behind_a_peeked_cursor_still_fires_first() {
+        let mut q = Q::new();
+        q.insert(SimTime(10_000), 0, noop());
+        // Peek advances the internal cursor to 10_000.
+        assert_eq!(q.peek_at(), Some(SimTime(10_000)));
+        // A later schedule below the cursor (run_until semantics).
+        q.insert(SimTime(4_000), 1, noop());
+        q.insert(SimTime(7_000), 2, noop());
+        assert_eq!(q.peek_at(), Some(SimTime(4_000)));
+        assert_eq!(drain(&mut q), vec![(4_000, 1), (7_000, 2), (10_000, 0)]);
+    }
+
+    #[test]
+    fn interleaved_pop_and_insert_keeps_fifo() {
+        let mut q = Q::new();
+        let mut seq = 0u64;
+        let mut sched = |q: &mut Q, at: u64, seq: &mut u64| {
+            q.insert(SimTime(at), *seq, noop());
+            *seq += 1;
+        };
+        sched(&mut q, 50, &mut seq);
+        sched(&mut q, 50, &mut seq);
+        let (at, s, _) = q.pop().unwrap();
+        assert_eq!((at.micros(), s), (50, 0));
+        // "Immediate" events at the popped timestamp go behind seq 1.
+        sched(&mut q, 50, &mut seq);
+        sched(&mut q, 51, &mut seq);
+        assert_eq!(drain(&mut q), vec![(50, 1), (50, 2), (51, 3)]);
+    }
+
+    #[test]
+    fn heap_reference_agrees_on_a_fixed_script() {
+        let mut wheel: TimingWheel<()> = TimingWheel::new();
+        let mut heap: BinaryHeapQueue<()> = BinaryHeapQueue::new();
+        let script: &[(u64, u64)] = &[
+            (9, 0),
+            (1, 1),
+            (1 << 20, 2),
+            (1 << 37, 3),
+            (9, 4),
+            (300, 5),
+        ];
+        for &(at, seq) in script {
+            wheel.insert(SimTime(at), seq, noop());
+            heap.insert(SimTime(at), seq, Box::new(|_, _| {}));
+        }
+        wheel.cancel(5);
+        heap.cancel(5);
+        assert_eq!(drain(&mut wheel), drain(&mut heap));
+    }
+}

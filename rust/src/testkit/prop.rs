@@ -149,4 +149,90 @@ mod tests {
             assert!(xs.iter().all(|&x| x <= 3));
         });
     }
+
+    /// The timing wheel must replay the reference binary heap event for
+    /// event — identical `(timestamp, seq)` pop order, identical cancel
+    /// results (including cancel-after-fire and double-cancel), identical
+    /// peeks and lengths — across randomized schedule/cancel/pop/peek
+    /// workloads spanning immediates, every wheel level, and the overflow.
+    #[test]
+    fn prop_timing_wheel_matches_reference_heap_event_for_event() {
+        use crate::simcore::wheel::{BinaryHeapQueue, EventQueue, TimingWheel};
+        use crate::util::time::SimTime;
+
+        forall("wheel == heap", 60, |g| {
+            let mut wheel: TimingWheel<()> = TimingWheel::new();
+            let mut heap: BinaryHeapQueue<()> = BinaryHeapQueue::new();
+            let mut seq = 0u64;
+            let mut now = 0u64; // timestamp of the last popped event
+            let mut scheduled: Vec<u64> = Vec::new();
+            let mut fired: Vec<u64> = Vec::new();
+            let ops = g.usize(20, 300);
+            for _ in 0..ops {
+                match g.usize(0, 99) {
+                    // 60%: schedule — immediates, near, mid, far/overflow.
+                    0..=59 => {
+                        let delta = match g.usize(0, 3) {
+                            0 => 0, // same-timestamp FIFO
+                            1 => g.u64(1, 100),
+                            2 => g.u64(100, 1_000_000),
+                            _ => g.u64(1_000_000, 1u64 << 44),
+                        };
+                        let at = SimTime(now + delta);
+                        wheel.insert(at, seq, Box::new(|_, _| {}));
+                        heap.insert(at, seq, Box::new(|_, _| {}));
+                        scheduled.push(seq);
+                        seq += 1;
+                    }
+                    // 15%: cancel — live, already-fired, or bogus ids.
+                    60..=74 => {
+                        let target = if !scheduled.is_empty() && g.bool(0.6) {
+                            scheduled[g.usize(0, scheduled.len() - 1)]
+                        } else if !fired.is_empty() && g.bool(0.7) {
+                            // cancel-after-fire must be a false no-op
+                            fired[g.usize(0, fired.len() - 1)]
+                        } else {
+                            seq + 1_000 // never scheduled
+                        };
+                        assert_eq!(
+                            wheel.cancel(target),
+                            heap.cancel(target),
+                            "cancel({target}) diverged"
+                        );
+                    }
+                    // 10%: peek (exercises the run_until cursor path).
+                    75..=84 => {
+                        assert_eq!(wheel.peek_at(), heap.peek_at());
+                    }
+                    // 25%: pop.
+                    _ => {
+                        let a = wheel.pop().map(|(at, s, _)| (at, s));
+                        let b = heap.pop().map(|(at, s, _)| (at, s));
+                        assert_eq!(a, b, "pop order diverged");
+                        if let Some((at, s)) = a {
+                            assert!(at.micros() >= now, "time went backwards");
+                            now = at.micros();
+                            fired.push(s);
+                            scheduled.retain(|&x| x != s);
+                        }
+                    }
+                }
+                assert_eq!(wheel.len(), heap.len());
+            }
+            // Drain: the tails must agree exactly too.
+            loop {
+                let a = wheel.pop().map(|(at, s, _)| (at, s));
+                let b = heap.pop().map(|(at, s, _)| (at, s));
+                assert_eq!(a, b, "drain order diverged");
+                match a {
+                    Some((at, _)) => {
+                        assert!(at.micros() >= now);
+                        now = at.micros();
+                    }
+                    None => break,
+                }
+            }
+            assert_eq!(wheel.len(), 0);
+        });
+    }
 }

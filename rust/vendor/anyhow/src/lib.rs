@@ -1,0 +1,209 @@
+//! Offline shim of the `anyhow` crate, covering the API surface this
+//! workspace uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! on `Result`/`Option`, and the `anyhow!`/`bail!`/`ensure!` macros.
+//!
+//! The build environment has no registry access, so the real crate cannot
+//! be fetched; this shim is drop-in compatible for the subset in use.
+//! Error messages render identically: `{}` shows the outermost message,
+//! `{:#}` shows the full `outer: inner: ...` context chain.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result` with a boxed, context-carrying error. Mirrors `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error chain. Unlike the real crate this stores the
+/// rendered messages rather than the live error values — callers here only
+/// ever display the chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message (no source).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: ctx.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    fn from_std(e: &(dyn StdError + 'static)) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| Box::new(Error::from_std(s))),
+        }
+    }
+
+    /// Iterate the chain outermost-first (for diagnostics).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut out = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        out.into_iter()
+    }
+
+    /// The root (innermost) message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full context chain, outermost first.
+            write!(f, "{}", self.msg)?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, "\n    {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real crate, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` coherent
+// next to core's reflexive `impl From<T> for T`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn context_chains_render_in_alternate_mode() {
+        let e = io_err().context("opening config").unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: gone");
+        assert_eq!(e.root_cause(), "gone");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+
+        fn fails(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            if n == 7 {
+                bail!("unlucky {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(fails(3).unwrap(), 3);
+        assert_eq!(format!("{}", fails(7).unwrap_err()), "unlucky 7");
+        assert_eq!(format!("{}", fails(11).unwrap_err()), "n too big: 11");
+    }
+
+    #[test]
+    fn with_context_is_lazy_and_chains() {
+        let ok: std::result::Result<u32, std::io::Error> = Ok(5);
+        let v = ok
+            .with_context(|| -> String { panic!("must not evaluate") })
+            .unwrap();
+        assert_eq!(v, 5);
+        let e = io_err()
+            .with_context(|| format!("step {}", 2))
+            .unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: gone");
+        assert_eq!(e.chain().collect::<Vec<_>>(), vec!["step 2", "gone"]);
+    }
+}
