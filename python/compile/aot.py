@@ -10,7 +10,30 @@ Artifacts:
   classifier_b{N}.hlo.txt  batched classifier forward, params baked in,
                            one per serving batch size
   predictor.hlo.txt        learned next-invocation scorer (batch 16)
-  manifest.json            shapes + sample numerics for rust-side checks
+  layer{i}.{w,b}.bin       raw little-endian f32 weight/bias blobs, one
+                           pair per layer (the native backend's inputs)
+  manifest.json            shapes + sample numerics for rust-side checks,
+                           plus the "weights" sidecar section
+
+Weight sidecar schema (mirrored in rust/src/runtime/manifest.rs):
+
+  "weights": {
+    "format": "f32-le",
+    "normalize": {"mean": 0.5, "std": 0.25},
+    "layers": [
+      {"in": 3072, "out": 512, "relu": true,
+       "weights": "layer0.w.bin", "bias": "layer0.b.bin"},
+      ...
+    ]
+  }
+
+Each weights blob is the layer's ``(in, out)`` parameter matrix dumped
+row-major as little-endian f32 (exactly JAX's in-memory layout), each
+bias blob is ``out`` values; ``normalize`` carries the input
+standardization constants applied before the first layer. The rust
+native backend (``rust/src/nn``) executes these directly, so the same
+artifact directory serves both backends: HLO text for PJRT, blobs for
+native, one manifest describing both.
 """
 
 import argparse
@@ -19,6 +42,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax._src.lib import xla_client as xc
 
 from compile import model
@@ -56,6 +80,36 @@ def lower_predictor(batch: int) -> str:
 
     spec = jax.ShapeDtypeStruct((batch, model.PREDICTOR_FEATURES), jnp.float32)
     return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def dump_weights(params, out_dir: str) -> dict:
+    """Write per-layer f32-LE weight sidecars; return the manifest section.
+
+    The rust native backend (``rust/src/nn/mlp.rs``) reads these blobs
+    byte-for-byte, so the dtype/order here (``<f4``, row-major) is part of
+    the artifact contract — see the schema in the module docstring.
+    """
+    layers = []
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        wname, bname = f"layer{i}.w.bin", f"layer{i}.b.bin"
+        np.asarray(w, dtype="<f4").tofile(os.path.join(out_dir, wname))
+        np.asarray(b, dtype="<f4").tofile(os.path.join(out_dir, bname))
+        layers.append(
+            {
+                "in": int(w.shape[0]),
+                "out": int(w.shape[1]),
+                "relu": i < n - 1,
+                "weights": wname,
+                "bias": bname,
+            }
+        )
+        print(f"wrote {wname} ({w.shape[0]}x{w.shape[1]}) + {bname}")
+    return {
+        "format": "f32-le",
+        "normalize": {"mean": model.PIXEL_MEAN, "std": model.PIXEL_STD},
+        "layers": layers,
+    }
 
 
 def sample_check(params):
@@ -97,6 +151,7 @@ def main() -> None:
         "predictor_bias": model.PREDICTOR_BIAS,
         "artifacts": {},
         "check": sample_check(params),
+        "weights": dump_weights(params, args.out_dir),
     }
 
     for b in args.batches:

@@ -134,6 +134,44 @@ class TestAotLowering:
         for name in manifest["artifacts"].values():
             assert (tmp_path / name).exists(), name
         assert len(manifest["check"]["classifier_logits_b1"]) == model.CLASSES
+        # The weight sidecar section points at existing blobs.
+        for entry in manifest["weights"]["layers"]:
+            assert (tmp_path / entry["weights"]).exists(), entry
+            assert (tmp_path / entry["bias"]).exists(), entry
+
+
+class TestWeightSidecars:
+    def test_dump_schema_and_blob_roundtrip(self, params, tmp_path):
+        """The native backend's contract: f32-LE blobs, row-major (in, out),
+        relu on every layer but the last, normalize constants recorded."""
+        section = aot.dump_weights(params, str(tmp_path))
+        assert section["format"] == "f32-le"
+        assert section["normalize"] == {
+            "mean": model.PIXEL_MEAN,
+            "std": model.PIXEL_STD,
+        }
+        dims = model.layer_dims()
+        assert len(section["layers"]) == len(dims)
+        for entry, (din, dout), (w, b) in zip(section["layers"], dims, params):
+            assert (entry["in"], entry["out"]) == (din, dout)
+            blob = np.fromfile(tmp_path / entry["weights"], dtype="<f4")
+            np.testing.assert_array_equal(
+                blob.reshape(din, dout), np.asarray(w, dtype=np.float32)
+            )
+            bias = np.fromfile(tmp_path / entry["bias"], dtype="<f4")
+            np.testing.assert_array_equal(bias, np.asarray(b, dtype=np.float32))
+        assert all(e["relu"] for e in section["layers"][:-1])
+        assert section["layers"][-1]["relu"] is False
+
+    def test_dump_is_deterministic(self, params, tmp_path):
+        a_dir = tmp_path / "a"
+        b_dir = tmp_path / "b"
+        a_dir.mkdir()
+        b_dir.mkdir()
+        aot.dump_weights(params, str(a_dir))
+        aot.dump_weights(params, str(b_dir))
+        for name in ["layer0.w.bin", "layer2.b.bin"]:
+            assert (a_dir / name).read_bytes() == (b_dir / name).read_bytes()
 
 
 class TestPreprocessAndProbs:

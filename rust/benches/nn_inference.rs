@@ -1,0 +1,69 @@
+//! Bench: native nn inference hot path — raw blocked-matmul throughput
+//! (serial vs row-parallel) and the end-to-end classifier forward across
+//! every AOT batch size, reported next to `simcore_hotpath`'s numbers.
+//!
+//! The model is the paper λ1 shape (3072 → 512 → 256 → 10) with seeded
+//! weights built in memory by `nn::gen::build_mlp` — no artifact files,
+//! no PJRT.
+
+use freshen_rs::nn::gen::{build_mlp, GenSpec};
+use freshen_rs::nn::kernels::{matmul_bias_act_threads, par_threads};
+use freshen_rs::nn::tensor::Matrix;
+use freshen_rs::testkit::bench::bench;
+use freshen_rs::util::rng::Rng;
+
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_vec(
+        rows,
+        cols,
+        (0..rows * cols)
+            .map(|_| rng.uniform(-1.0, 1.0) as f32)
+            .collect(),
+    )
+    .unwrap()
+}
+
+fn main() {
+    println!("== native nn inference (paper λ1 shape: 3072 -> 512 -> 256 -> 10) ==");
+    let spec = GenSpec::default();
+    let mlp = build_mlp(&spec).expect("build seeded mlp");
+    let mut rng = Rng::new(0xBE7C);
+
+    // Raw matmul: the dominant first-layer shape at the largest AOT batch.
+    let (m, k, n) = (16usize, spec.input_dim, spec.hidden[0]);
+    let x = random_matrix(&mut rng, m, k);
+    let w = random_matrix(&mut rng, k, n);
+    let bias = vec![0.01f32; n];
+    let flops = 2.0 * (m * k * n) as f64;
+    let auto = par_threads(m, n, k);
+    for threads in [1, auto] {
+        let r = bench(
+            &format!("nn/matmul {m}x{k}x{n} threads={threads}"),
+            2,
+            12,
+            || {
+                let out = matmul_bias_act_threads(&x, &w, &bias, true, threads).unwrap();
+                std::hint::black_box(out.data()[0]);
+            },
+        );
+        println!("  -> {:.2} GFLOP/s", flops / r.mean_secs() / 1e9);
+    }
+
+    // End-to-end forward: every AOT batch size, plus oversized batches the
+    // runtime would chunk (shown here as single big executions).
+    let mut batches = spec.batches.clone();
+    batches.extend_from_slice(&[32, 64]);
+    for &b in &batches {
+        let xb = random_matrix(&mut rng, b, spec.input_dim);
+        let iters = if b >= 32 { 6 } else { 10 };
+        let r = bench(&format!("nn/classifier fwd batch={b}"), 2, iters, || {
+            let out = mlp.forward(&xb).unwrap();
+            std::hint::black_box(out.data()[0]);
+        });
+        println!(
+            "  -> {:.0} rows/s ({:.3} ms/row)",
+            b as f64 / r.mean_secs(),
+            r.mean_secs() * 1e3 / b as f64
+        );
+    }
+}

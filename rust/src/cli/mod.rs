@@ -6,6 +6,8 @@
 //! - `serve` — run the real-time serving engine on the AOT artifacts and
 //!   print a latency/throughput report (freshen on/off A/B).
 //! - `check-artifacts` — load the artifacts and run the AOT self-checks.
+//! - `gen-artifacts` — write a native artifact set (manifest + weight
+//!   sidecars) entirely in rust, so serve/check work offline.
 //! - `trace <file>` — replay a JSON-lines invocation trace on the sim.
 //!
 //! No `clap` offline; this is a small hand-rolled parser with `--key value`
@@ -21,6 +23,7 @@ use crate::experiments::harness::parse_seed_spec;
 use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1, SweepRunner};
 use crate::platform::exec::invoke;
 use crate::platform::world::World;
+use crate::runtime::backend::BackendKind;
 use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
 use crate::util::config::Config;
@@ -33,12 +36,16 @@ USAGE:
   repro experiment <fig2|table1|fig4|fig5|fig6|e2e|baselines|prediction|ablations|all>
                    [--seed N] [--runs N] [--gap SECONDS]
                    [--seeds N|a..b|a..=b] [--parallel N]
-                   # --seeds sweeps fig4/fig5/fig6/prediction/ablations over a
+                   # --seeds sweeps every experiment except fig2 over a
                    # seed grid on --parallel worker threads; merged output is
                    # deterministic (identical for any --parallel value)
   repro serve [--requests N] [--artifacts DIR] [--no-freshen]
+              [--backend native|pjrt]  # executor: pure-rust nn (default) or PJRT
               [--listen ADDR]          # HTTP mode: POST /classify, /freshen; GET /stats
-  repro check-artifacts [--artifacts DIR]
+  repro check-artifacts [--artifacts DIR] [--backend native|pjrt]
+  repro gen-artifacts [DIR] [--tiny] [--input-dim N] [--hidden 512,256]
+              [--classes N] [--batches 1,4,8,16] [--seed N]
+              # DIR defaults to 'artifacts'; --tiny writes a small smoke set
   repro trace <file.jsonl> [--config file.json]
   repro gen-trace <out.jsonl> [--functions N] [--horizon SECONDS] [--seed N]
   repro help
@@ -50,6 +57,11 @@ pub struct Opts {
     pub flags: HashMap<String, String>,
 }
 
+/// Flags that never take a value — without this list the generic parser
+/// would swallow a following positional as the flag's value
+/// (`gen-artifacts --tiny DIR` must keep DIR positional).
+const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny"];
+
 pub fn parse_args(args: &[String]) -> Opts {
     let mut positional = Vec::new();
     let mut flags = HashMap::new();
@@ -57,7 +69,10 @@ pub fn parse_args(args: &[String]) -> Opts {
     while i < args.len() {
         let a = &args[i];
         if let Some(key) = a.strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if !BOOL_FLAGS.contains(&key)
+                && i + 1 < args.len()
+                && !args[i + 1].starts_with("--")
+            {
                 flags.insert(key.to_string(), args[i + 1].clone());
                 i += 2;
             } else {
@@ -96,6 +111,7 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("experiment") => experiment(&opts),
         Some("serve") => serve(&opts),
         Some("check-artifacts") => check_artifacts(&opts),
+        Some("gen-artifacts") => gen_artifacts(&opts),
         Some("trace") => trace(&opts),
         Some("gen-trace") => gen_trace(&opts),
         Some("help") | None => {
@@ -123,16 +139,19 @@ fn experiment(opts: &Opts) -> Result<()> {
     let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
     match id {
         "fig2" => fig2::run(seed).print(),
-        "table1" => table1::run(opts.u64("runs", 20_000) as usize, seed).print(),
+        "table1" => {
+            table1::run_multi(opts.u64("runs", 20_000) as usize, &seeds, &runner).print()
+        }
         "fig4" => fig4::run_multi(&seeds, &runner).print(),
         "fig5" => fig5_6::run_multi(fig5_6::Placement::Cloud, &seeds, &runner).print(),
         "fig6" => fig5_6::run_multi(fig5_6::Placement::Edge50, &seeds, &runner).print(),
-        "e2e" => e2e::run(seed, opts.u64("runs", 60) as usize).print(),
+        "e2e" => e2e::run_multi(&seeds, opts.u64("runs", 60) as usize, &runner).print(),
         "baselines" => {
-            crate::experiments::baselines::run(
+            crate::experiments::baselines::run_multi(
                 opts.u64("runs", 50) as usize,
                 opts.u64("gap", 120) as f64,
-                seed,
+                &seeds,
+                &runner,
             )
             .print()
         }
@@ -159,12 +178,12 @@ fn experiment(opts: &Opts) -> Result<()> {
         }
         "all" => {
             fig2::run(seed).print();
-            table1::run(opts.u64("runs", 20_000) as usize, seed).print();
+            table1::run_multi(opts.u64("runs", 20_000) as usize, &seeds, &runner).print();
             fig4::run_multi(&seeds, &runner).print();
             fig5_6::run_multi(fig5_6::Placement::Cloud, &seeds, &runner).print();
             fig5_6::run_multi(fig5_6::Placement::Edge50, &seeds, &runner).print();
-            e2e::run(seed, opts.u64("runs", 60) as usize).print();
-            crate::experiments::baselines::run(50, 120.0, seed).print();
+            e2e::run_multi(&seeds, opts.u64("runs", 60) as usize, &runner).print();
+            crate::experiments::baselines::run_multi(50, 120.0, &seeds, &runner).print();
             crate::experiments::prediction::run_multi(&seeds, &runner).print();
         }
         other => bail!("unknown experiment '{other}'"),
@@ -176,18 +195,25 @@ fn artifacts_dir(opts: &Opts) -> PathBuf {
     PathBuf::from(opts.str("artifacts", "artifacts"))
 }
 
+fn backend_kind(opts: &Opts) -> Result<BackendKind> {
+    BackendKind::parse(&opts.str("backend", "native"))
+}
+
 fn serve(opts: &Opts) -> Result<()> {
     let dir = artifacts_dir(opts);
     let requests = opts.u64("requests", 64) as usize;
     let freshen = !opts.flag("no-freshen");
+    let backend = backend_kind(opts)?;
     let cfg = ServeConfig {
         freshen,
+        backend,
         ..ServeConfig::default()
     };
     println!(
-        "starting serve engine: {} workers, freshen={}, artifacts={}",
+        "starting serve engine: {} workers, freshen={}, backend={}, artifacts={}",
         cfg.workers,
         freshen,
+        backend.as_str(),
         dir.display()
     );
     let engine = ServeEngine::start(dir, cfg).context("starting engine")?;
@@ -204,10 +230,11 @@ fn serve(opts: &Opts) -> Result<()> {
     if freshen {
         engine.freshen().join().ok();
     }
+    let dim = engine.input_dim();
     let rxs: Vec<_> = (0..requests)
         .map(|i| {
             engine.submit(
-                (0..3072)
+                (0..dim)
                     .map(|j| ((i * 131 + j) % 23) as f32 / 23.0)
                     .collect(),
             )
@@ -224,16 +251,67 @@ fn serve(opts: &Opts) -> Result<()> {
 
 fn check_artifacts(opts: &Opts) -> Result<()> {
     let dir = artifacts_dir(opts);
-    let mut classifier = crate::runtime::model::ClassifierRuntime::load(&dir)?;
+    let backend = backend_kind(opts)?;
+    let mut classifier = crate::runtime::model::ClassifierRuntime::load_with(&dir, backend)?;
     let err = classifier.self_check()?;
     println!(
-        "classifier OK on {} (batches {:?}, max |err| {err:.2e})",
+        "classifier OK on {} (backend {}, batches {:?}, max |err| {err:.2e})",
         classifier.platform_name(),
+        backend.as_str(),
         classifier.manifest.batches
     );
-    let predictor = crate::runtime::model::PredictorRuntime::load(&dir)?;
+    let mut predictor = crate::runtime::model::PredictorRuntime::load_with(&dir, backend)?;
     let err = predictor.self_check()?;
     println!("predictor OK (max |err| {err:.2e})");
+    Ok(())
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .with_context(|| format!("bad number '{t}' in list '{s}'"))
+        })
+        .collect()
+}
+
+fn gen_artifacts(opts: &Opts) -> Result<()> {
+    use crate::nn::gen::GenSpec;
+    let dir = PathBuf::from(
+        opts.positional
+            .get(1)
+            .map(String::as_str)
+            .unwrap_or("artifacts"),
+    );
+    let mut spec = if opts.flag("tiny") {
+        GenSpec::tiny()
+    } else {
+        GenSpec::default()
+    };
+    if let Some(v) = opts.flags.get("input-dim") {
+        spec.input_dim = v.parse().context("--input-dim")?;
+    }
+    if let Some(v) = opts.flags.get("hidden") {
+        spec.hidden = parse_usize_list(v)?;
+    }
+    if let Some(v) = opts.flags.get("classes") {
+        spec.classes = v.parse().context("--classes")?;
+    }
+    if let Some(v) = opts.flags.get("batches") {
+        spec.batches = parse_usize_list(v)?;
+    }
+    spec.seed = opts.u64("seed", spec.seed);
+    let manifest = crate::nn::gen::generate(&dir, &spec)?;
+    println!(
+        "wrote native artifact set to {}: {} -> {:?} -> {} classes, batches {:?}, seed {:#x}",
+        dir.display(),
+        manifest.input_dim,
+        spec.hidden,
+        manifest.classes,
+        manifest.batches,
+        spec.seed
+    );
     Ok(())
 }
 
@@ -370,6 +448,59 @@ mod tests {
     fn unknown_command_errors() {
         let args = vec!["bogus".to_string()];
         assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn gen_artifacts_then_check_artifacts_native() {
+        let dir = std::env::temp_dir().join("freshen-cli-gen-artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        let gen: Vec<String> = vec!["gen-artifacts".into(), d.clone(), "--tiny".into()];
+        assert!(run(&gen).is_ok(), "gen-artifacts failed");
+        let check: Vec<String> =
+            vec!["check-artifacts".into(), "--artifacts".into(), d.clone()];
+        assert!(run(&check).is_ok(), "check-artifacts failed on generated set");
+        let bad: Vec<String> = vec![
+            "check-artifacts".into(),
+            "--artifacts".into(),
+            d,
+            "--backend".into(),
+            "tpu".into(),
+        ];
+        assert!(run(&bad).is_err(), "unknown backend must error");
+    }
+
+    #[test]
+    fn boolean_flags_never_swallow_positionals() {
+        let args: Vec<String> = ["gen-artifacts", "--tiny", "outdir", "--seed", "7"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_args(&args);
+        assert!(o.flag("tiny"));
+        assert_eq!(o.positional, vec!["gen-artifacts", "outdir"]);
+        assert_eq!(o.u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn gen_artifacts_accepts_tiny_before_the_dir() {
+        // `--tiny DIR`: --tiny is a known boolean flag, so DIR stays
+        // positional and the tiny set lands in DIR.
+        let dir = std::env::temp_dir().join("freshen-cli-gen-tiny-first");
+        let _ = std::fs::remove_dir_all(&dir);
+        let d = dir.to_str().unwrap().to_string();
+        let gen: Vec<String> = vec!["gen-artifacts".into(), "--tiny".into(), d];
+        assert!(run(&gen).is_ok(), "gen-artifacts --tiny DIR failed");
+        let m = crate::runtime::manifest::Manifest::load(&dir).expect("set written to DIR");
+        assert_eq!(m.input_dim, 32, "tiny spec applied");
+    }
+
+    #[test]
+    fn bad_number_lists_error() {
+        assert!(parse_usize_list("1,4,8").is_ok());
+        assert!(parse_usize_list("1, 4 , 8").is_ok());
+        assert!(parse_usize_list("1,x").is_err());
+        assert!(parse_usize_list("").is_err());
     }
 
     #[test]

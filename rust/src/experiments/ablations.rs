@@ -93,13 +93,7 @@ fn lead_run(lead_ms: i64, iters: usize, seed: u64) -> LeadSample {
         .skip(1) // warmup
         .map(|r| r.latency())
         .collect();
-    let (freshen_hits, freshen_total) =
-        w.metrics.records().iter().fold((0u64, 0u64), |(h, t), r| {
-            (
-                h + r.freshen_hits as u64,
-                t + (r.freshen_hits + r.freshen_misses) as u64,
-            )
-        });
+    let (freshen_hits, freshen_total) = w.metrics.freshen_hit_counts();
     LeadSample {
         latencies,
         freshen_hits,

@@ -20,6 +20,7 @@
 //! | + TCP Fast Open    | 0-RTT re-establish      | initial | refetched |
 //! | freshen (§3)       | kept alive + warmed     | warmed  | prefetched |
 
+use crate::experiments::harness::SweepRunner;
 use crate::experiments::{fmt_secs, print_table};
 use crate::netsim::cc::CongestionControl;
 use crate::netsim::link::Site;
@@ -77,14 +78,16 @@ pub struct Baselines {
     pub put_bytes: f64,
 }
 
-fn run_mechanism(
+/// One `(mechanism, seed)` grid point: `iters` raw critical-path
+/// latencies (seconds), mergeable across seeds.
+fn mechanism_samples(
     mech: Mechanism,
     iters: usize,
     gap_s: f64,
     fetch_bytes: f64,
     put_bytes: f64,
     seed: u64,
-) -> BaselineRow {
+) -> Vec<f64> {
     let mut link = Site::Remote.link();
     link.jitter_sigma = 0.02;
     let mut rng = Rng::new(seed);
@@ -183,18 +186,38 @@ fn run_mechanism(
         kernel_cache.record(dest, link.rtt, conn.cc_tx.ssthresh, now);
         samples.push(t);
     }
-    BaselineRow {
-        mechanism: mech,
-        latency: Summary::of(&samples).expect("non-empty"),
-    }
+    samples
 }
 
+/// Single-seed convenience over [`run_multi`].
 pub fn run(iters: usize, gap_s: f64, seed: u64) -> Baselines {
+    run_multi(iters, gap_s, &[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: the `mechanisms × seeds` grid runs on `runner`;
+/// per-mechanism latency samples pool in seed order before summarising,
+/// so merged rows are deterministic for any `--parallel`.
+pub fn run_multi(iters: usize, gap_s: f64, seeds: &[u64], runner: &SweepRunner) -> Baselines {
+    assert!(!seeds.is_empty(), "baselines needs at least one seed");
     let fetch_bytes = 5e6;
     let put_bytes = 64.0 * 1024.0;
-    let rows = Mechanism::all()
-        .iter()
-        .map(|&m| run_mechanism(m, iters, gap_s, fetch_bytes, put_bytes, seed))
+    let mechanisms = Mechanism::all();
+    let rows = runner
+        .run_grid(&mechanisms, seeds, |&m, seed| {
+            mechanism_samples(m, iters, gap_s, fetch_bytes, put_bytes, seed)
+        })
+        .into_iter()
+        .zip(mechanisms.iter())
+        .map(|(per_seed, &mechanism)| {
+            let mut samples = Vec::new();
+            for s in per_seed {
+                samples.extend(s);
+            }
+            BaselineRow {
+                mechanism,
+                latency: Summary::of(&samples).expect("non-empty"),
+            }
+        })
         .collect();
     Baselines {
         rows,
@@ -285,5 +308,20 @@ mod tests {
         let frequent = run(30, 2.0, 0xBA5F);
         let sparse = run(30, 120.0, 0xBA5F);
         assert!(frequent.freshen_speedup() <= sparse.freshen_speedup() * 1.5);
+    }
+
+    #[test]
+    fn multi_seed_sweep_is_identical_across_parallelism() {
+        let seeds = [3u64, 4, 5];
+        let seq = run_multi(12, 120.0, &seeds, &SweepRunner::new(1));
+        let par = run_multi(12, 120.0, &seeds, &SweepRunner::new(4));
+        assert_eq!(format!("{:?}", seq.rows), format!("{:?}", par.rows));
+    }
+
+    #[test]
+    fn single_seed_multi_matches_legacy_entry_point() {
+        let legacy = run(10, 60.0, 0xBA60);
+        let multi = run_multi(10, 60.0, &[0xBA60], &SweepRunner::new(2));
+        assert_eq!(format!("{:?}", legacy.rows), format!("{:?}", multi.rows));
     }
 }

@@ -5,9 +5,15 @@
 //! simulator substrate. We compare the vanilla platform against the same
 //! platform with freshen admitted by chain prediction, reporting
 //! end-to-end chain latency, freshen hit rate, cold starts, and billing.
-//! (The real-time twin of this experiment — real PJRT inference, real
+//! (The real-time twin of this experiment — real batched inference, real
 //! sleeps — is `examples/ml_pipeline.rs` / the `e2e_serving` bench.)
+//!
+//! Multi-seed: [`run_multi`] fans the `mode × seeds` grid over a
+//! [`SweepRunner`]; per-mode raw latency samples pool in seed order and
+//! counters sum, so the merged comparison is deterministic for any
+//! `--parallel`.
 
+use crate::experiments::harness::SweepRunner;
 use crate::experiments::print_table;
 use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
@@ -147,7 +153,21 @@ fn build_world(freshen: bool, seed: u64) -> World {
     w
 }
 
-fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eRun {
+/// Raw output of one `(mode, seed)` run, mergeable across seeds.
+struct E2eSample {
+    tail: Vec<SimDuration>,
+    all: Vec<SimDuration>,
+    freshen_hits: u64,
+    freshen_total: u64,
+    cold_starts: u64,
+    freshens_completed: u64,
+    freshens_wasted: u64,
+    network_bytes: f64,
+    network_bytes_saved: f64,
+    invocations: usize,
+}
+
+fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eSample {
     let mut w = build_world(freshen, seed);
     let mut sim: Sim<World> = Sim::new();
     sim.max_events = 100_000_000;
@@ -177,12 +197,13 @@ fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eRun {
         .map(|r| r.latency())
         .collect();
     let all: Vec<SimDuration> = w.metrics.records().iter().map(|r| r.latency()).collect();
+    let (freshen_hits, freshen_total) = w.metrics.freshen_hit_counts();
     let acct = w.ledger.account("pipeline");
-    E2eRun {
-        label: if freshen { "freshen" } else { "baseline" },
-        tail_latency: Summary::of_durations_ms(&tail).expect("persist ran"),
-        all_latency: Summary::of_durations_ms(&all).expect("records"),
-        freshen_hit_rate: w.metrics.freshen_hit_rate(),
+    E2eSample {
+        tail,
+        all,
+        freshen_hits,
+        freshen_total,
         cold_starts: w.metrics.cold_starts,
         freshens_completed: w.metrics.freshens_completed,
         freshens_wasted: w.metrics.freshens_wasted,
@@ -192,10 +213,63 @@ fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eRun {
     }
 }
 
+/// Pool one mode's per-seed samples (latencies in seed order, counters
+/// summed) into the reported run.
+fn merge(label: &'static str, samples: Vec<E2eSample>) -> E2eRun {
+    let mut tail = Vec::new();
+    let mut all = Vec::new();
+    let (mut hits, mut total) = (0u64, 0u64);
+    let (mut cold, mut completed, mut wasted) = (0u64, 0u64, 0u64);
+    let (mut net, mut saved) = (0.0f64, 0.0f64);
+    let mut invocations = 0usize;
+    for s in samples {
+        tail.extend(s.tail);
+        all.extend(s.all);
+        hits += s.freshen_hits;
+        total += s.freshen_total;
+        cold += s.cold_starts;
+        completed += s.freshens_completed;
+        wasted += s.freshens_wasted;
+        net += s.network_bytes;
+        saved += s.network_bytes_saved;
+        invocations += s.invocations;
+    }
+    E2eRun {
+        label,
+        tail_latency: Summary::of_durations_ms(&tail).expect("persist ran"),
+        all_latency: Summary::of_durations_ms(&all).expect("records"),
+        freshen_hit_rate: if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        },
+        cold_starts: cold,
+        freshens_completed: completed,
+        freshens_wasted: wasted,
+        network_bytes: net,
+        network_bytes_saved: saved,
+        invocations,
+    }
+}
+
+/// Single-seed convenience over [`run_multi`].
 pub fn run(seed: u64, chains: usize) -> E2e {
+    run_multi(&[seed], chains, &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: both modes run for every seed on `runner`, and each
+/// mode's rows merge deterministically regardless of parallelism.
+pub fn run_multi(seeds: &[u64], chains: usize, runner: &SweepRunner) -> E2e {
+    assert!(!seeds.is_empty(), "e2e needs at least one seed");
+    let modes = [false, true];
+    let mut grouped = runner
+        .run_grid(&modes, seeds, |&freshen, seed| run_one(freshen, seed, chains))
+        .into_iter();
+    let baseline = merge("baseline", grouped.next().expect("baseline grid row"));
+    let freshened = merge("freshen", grouped.next().expect("freshen grid row"));
     E2e {
-        baseline: run_one(false, seed, chains),
-        freshened: run_one(true, seed, chains),
+        baseline,
+        freshened,
     }
 }
 
@@ -255,5 +329,17 @@ mod tests {
         );
         // Same number of invocations processed.
         assert_eq!(e.baseline.invocations, e.freshened.invocations);
+    }
+
+    #[test]
+    fn multi_seed_sweep_is_identical_across_parallelism() {
+        use crate::experiments::SweepRunner;
+        let seeds = [0xE2E0u64, 0xE2E1];
+        let seq = super::run_multi(&seeds, 10, &SweepRunner::new(1));
+        let par = super::run_multi(&seeds, 10, &SweepRunner::new(4));
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+        // Both seeds' invocations are pooled.
+        let single = super::run(0xE2E0, 10);
+        assert!(seq.baseline.invocations > single.baseline.invocations);
     }
 }

@@ -21,8 +21,9 @@
 //!
 //! [`harness::SweepRunner`] fans `(scenario, seed)` grids out over
 //! `std::thread` workers; the `*_multi` entry points in `ablations`,
-//! `prediction`, `fig4` and `fig5_6` run one independent simulation per
-//! grid point and merge the per-run outputs deterministically:
+//! `prediction`, `fig4`, `fig5_6`, `table1`, `e2e` and `baselines` run
+//! one independent simulation per grid point and merge the per-run
+//! outputs deterministically:
 //!
 //! - the grid is ordered `params × seeds` (seeds innermost), and results
 //!   are collected **by grid index, never by completion order**;

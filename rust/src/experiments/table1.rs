@@ -5,7 +5,13 @@
 //! function, over 20 k runs per service, with cold starts carefully
 //! avoided (the target container is pre-warmed). The measured delay is the
 //! trigger service's delivery latency plus the platform's warm dispatch.
+//!
+//! Multi-seed: [`run_multi`] fans the `services × seeds` grid over a
+//! [`SweepRunner`]; per-service raw delay samples pool in seed order
+//! before the median/p95 are taken, so merged rows are deterministic for
+//! any `--parallel`.
 
+use crate::experiments::harness::SweepRunner;
 use crate::experiments::{fmt_secs, print_table};
 use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
@@ -33,8 +39,9 @@ pub struct Table1 {
     pub rows: Vec<Table1Row>,
 }
 
-/// Measure one service: `runs` trigger->start delays through the DES.
-fn measure(service: TriggerService, runs: usize, seed: u64) -> Table1Row {
+/// Measure one service: `runs` raw trigger->start delays (seconds)
+/// through the DES — one `(service, seed)` grid point.
+fn measure_samples(service: TriggerService, runs: usize, seed: u64) -> Vec<f64> {
     let mut cfg = Config::default();
     cfg.seed = seed;
     cfg.warm_start = SimDuration::from_millis(1); // dispatch cost within
@@ -80,22 +87,44 @@ fn measure(service: TriggerService, runs: usize, seed: u64) -> Table1Row {
         .map(|(r, commit)| r.started_at.since(*commit).as_secs_f64())
         .collect();
     assert_eq!(samples.len(), runs);
-    let mut sorted = samples.clone();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    Table1Row {
-        service,
-        median_s: median(&samples),
-        p95_s: crate::util::stats::percentile_sorted(&sorted, 95.0),
-        paper_s: service.paper_median(),
-        runs,
-    }
+    samples
 }
 
+/// Single-seed convenience over [`run_multi`].
 pub fn run(runs_per_service: usize, seed: u64) -> Table1 {
-    let rows = TriggerService::all()
+    run_multi(runs_per_service, &[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: the `services × seeds` grid runs on `runner`;
+/// per-service delay samples pool in seed order before summarising.
+pub fn run_multi(runs_per_service: usize, seeds: &[u64], runner: &SweepRunner) -> Table1 {
+    assert!(!seeds.is_empty(), "table1 needs at least one seed");
+    let services: Vec<(usize, TriggerService)> = TriggerService::all()
         .iter()
+        .copied()
         .enumerate()
-        .map(|(i, &svc)| measure(svc, runs_per_service, seed ^ (i as u64) << 8))
+        .collect();
+    let rows = runner
+        .run_grid(&services, seeds, |&(i, svc), seed| {
+            measure_samples(svc, runs_per_service, seed ^ (i as u64) << 8)
+        })
+        .into_iter()
+        .zip(services.iter())
+        .map(|(per_seed, &(_, service))| {
+            let mut samples = Vec::new();
+            for s in per_seed {
+                samples.extend(s);
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            Table1Row {
+                service,
+                median_s: median(&samples),
+                p95_s: crate::util::stats::percentile_sorted(&sorted, 95.0),
+                paper_s: service.paper_median(),
+                runs: samples.len(),
+            }
+        })
         .collect();
     Table1 { rows }
 }
@@ -154,5 +183,22 @@ mod tests {
         assert!(by["Direct (Boto3)"] < by["Step Functions"]);
         assert!(by["Step Functions"] < by["SNS Pub/Sub"]);
         assert!(by["SNS Pub/Sub"] < by["S3 bucket"]);
+    }
+
+    #[test]
+    fn multi_seed_sweep_is_identical_across_parallelism() {
+        let seeds = [7u64, 8];
+        let seq = run_multi(200, &seeds, &crate::experiments::SweepRunner::new(1));
+        let par = run_multi(200, &seeds, &crate::experiments::SweepRunner::new(4));
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+        // Pooled rows carry every seed's samples.
+        assert!(seq.rows.iter().all(|r| r.runs == 400));
+    }
+
+    #[test]
+    fn single_seed_multi_matches_legacy_entry_point() {
+        let legacy = run(150, 0xAB);
+        let multi = run_multi(150, &[0xAB], &crate::experiments::SweepRunner::new(2));
+        assert_eq!(format!("{legacy:?}"), format!("{multi:?}"));
     }
 }

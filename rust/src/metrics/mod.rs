@@ -89,15 +89,22 @@ impl MetricsHub {
         Summary::of_durations_ms(&samples)
     }
 
-    /// Freshen hit rate across all invocations (resources served by the
-    /// hook / total resources).
-    pub fn freshen_hit_rate(&self) -> f64 {
-        let (hits, total) = self.records.iter().fold((0u64, 0u64), |(h, t), r| {
+    /// Raw freshen counters across all invocations: `(resources served
+    /// by the hook, total resources)`. Summable across runs — the
+    /// multi-seed merges pool these instead of averaging rates.
+    pub fn freshen_hit_counts(&self) -> (u64, u64) {
+        self.records.iter().fold((0u64, 0u64), |(h, t), r| {
             (
                 h + r.freshen_hits as u64,
                 t + (r.freshen_hits + r.freshen_misses) as u64,
             )
-        });
+        })
+    }
+
+    /// Freshen hit rate across all invocations (resources served by the
+    /// hook / total resources).
+    pub fn freshen_hit_rate(&self) -> f64 {
+        let (hits, total) = self.freshen_hit_counts();
         if total == 0 {
             0.0
         } else {

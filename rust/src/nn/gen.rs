@@ -1,0 +1,320 @@
+//! Deterministic native artifact-set generator.
+//!
+//! Writes everything the native backend needs to serve — a
+//! `manifest.json` (with the `weights` sidecar section and the sample
+//! check numerics) plus per-layer raw `f32` little-endian blobs — using
+//! only this crate: no python, no JAX, no PJRT, no network. This is what
+//! makes the `serve`/`check-artifacts` path testable in CI from a fresh
+//! offline checkout: `repro gen-artifacts` (or a test calling
+//! [`generate`]) replaces `make artifacts` for the native backend.
+//!
+//! The recorded `check.classifier_logits_b1` values come from
+//! [`Mlp::forward_reference`], the naive `f64` forward — so the
+//! runtime's `self_check` replays a genuinely independent computation
+//! against the blocked/threaded f32 kernels, the same contract the
+//! python-generated manifests enforce with JAX-computed logits. The
+//! predictor rows are scored by [`LearnedScorer`], keeping the
+//! deployed-weights agreement check meaningful.
+//!
+//! Weights are seeded He-initialised normals, so two runs with the same
+//! [`GenSpec`] produce byte-identical artifact sets.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::mlp::{write_f32_blob, Layer, Mlp};
+use crate::nn::tensor::Matrix;
+use crate::predict::learned::{Features, LearnedScorer, DEPLOYED_BIAS, DEPLOYED_WEIGHTS};
+use crate::runtime::manifest::Manifest;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Shape and seed of a generated artifact set.
+#[derive(Debug, Clone)]
+pub struct GenSpec {
+    pub input_dim: usize,
+    pub hidden: Vec<usize>,
+    pub classes: usize,
+    /// AOT batch sizes the pad policy may pick from.
+    pub batches: Vec<usize>,
+    pub predictor_batch: usize,
+    pub seed: u64,
+    /// Input standardization constants baked into the manifest.
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Default for GenSpec {
+    /// The paper model's shape (λ1: 3072 → 512 → 256 → 10).
+    fn default() -> GenSpec {
+        GenSpec {
+            input_dim: 3072,
+            hidden: vec![512, 256],
+            classes: 10,
+            batches: vec![1, 4, 8, 16],
+            predictor_batch: 16,
+            seed: 0x5EED,
+            mean: 0.5,
+            std: 0.25,
+        }
+    }
+}
+
+impl GenSpec {
+    /// A deliberately small network for smoke tests (fast to generate,
+    /// fast to execute, still multi-layer).
+    pub fn tiny() -> GenSpec {
+        GenSpec {
+            input_dim: 32,
+            hidden: vec![16, 8],
+            classes: 5,
+            batches: vec![1, 2, 4],
+            predictor_batch: 16,
+            seed: 0x7111,
+            ..GenSpec::default()
+        }
+    }
+
+    /// `[in, hidden..., classes]` — the full dimension chain.
+    fn dims(&self) -> Vec<usize> {
+        let mut d = Vec::with_capacity(self.hidden.len() + 2);
+        d.push(self.input_dim);
+        d.extend_from_slice(&self.hidden);
+        d.push(self.classes);
+        d
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.input_dim < 2 {
+            bail!("input_dim must be >= 2 (the linspace check probe needs it)");
+        }
+        if self.classes == 0 || self.hidden.iter().any(|&h| h == 0) {
+            bail!("layer widths must be positive");
+        }
+        if self.batches.is_empty() || self.batches.contains(&0) {
+            bail!("need at least one positive batch size");
+        }
+        if self.predictor_batch == 0 {
+            bail!("predictor_batch must be positive");
+        }
+        if self.std <= 0.0 {
+            bail!("std must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Build the seeded network in memory (shared by [`generate`] and the
+/// `nn_inference` bench, which doesn't need files on disk).
+pub fn build_mlp(spec: &GenSpec) -> Result<Mlp> {
+    spec.validate()?;
+    let mut rng = Rng::new(spec.seed);
+    let dims = spec.dims();
+    let mut layers = Vec::with_capacity(dims.len() - 1);
+    for i in 0..dims.len() - 1 {
+        let (din, dout) = (dims[i], dims[i + 1]);
+        // He initialisation, like python/compile/model.py::init_params —
+        // keeps activations O(1) so f32-vs-reference drift stays small.
+        let scale = (2.0 / din as f64).sqrt();
+        let w: Vec<f32> = (0..din * dout)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        let bias: Vec<f32> = (0..dout).map(|_| rng.uniform(-0.05, 0.05) as f32).collect();
+        layers.push(Layer {
+            w: Matrix::from_vec(din, dout, w)?,
+            bias,
+            relu: i + 2 < dims.len(),
+        });
+    }
+    Mlp::from_layers(layers, spec.mean as f32, spec.std as f32)
+}
+
+/// The deterministic probe row the classifier check replays
+/// (`linspace(-1, 1, input_dim)`, matching `aot.py::sample_check`).
+pub fn check_probe(input_dim: usize) -> Vec<f32> {
+    (0..input_dim)
+        .map(|i| -1.0 + 2.0 * i as f32 / (input_dim as f32 - 1.0))
+        .collect()
+}
+
+/// Predictor feature rows recorded in the check section (same rows
+/// `aot.py` uses).
+pub fn predictor_check_feats() -> Vec<[f64; 4]> {
+    vec![[0.9, 0.8, 0.7, 0.3], [0.0, 0.0, 0.0, 0.0]]
+}
+
+/// Generate a complete native artifact set in `dir` and load it back.
+pub fn generate(dir: &Path, spec: &GenSpec) -> Result<Manifest> {
+    spec.validate()?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let mlp = build_mlp(spec)?;
+
+    // Weight sidecars + their manifest entries.
+    let mut layer_entries = Vec::with_capacity(mlp.layers.len());
+    for (i, layer) in mlp.layers.iter().enumerate() {
+        let wname = format!("layer{i}.w.bin");
+        let bname = format!("layer{i}.b.bin");
+        write_f32_blob(&dir.join(&wname), layer.w.data())?;
+        write_f32_blob(&dir.join(&bname), &layer.bias)?;
+        layer_entries.push(Json::obj(vec![
+            ("in", Json::num(layer.w.rows() as f64)),
+            ("out", Json::num(layer.w.cols() as f64)),
+            ("relu", Json::Bool(layer.relu)),
+            ("weights", Json::str(&wname)),
+            ("bias", Json::str(&bname)),
+        ]));
+    }
+
+    // Sample-check numerics: naive f64 reference for the classifier, the
+    // native learned scorer for the predictor.
+    let logits = mlp.forward_reference(&check_probe(spec.input_dim));
+    let scorer = LearnedScorer::default();
+    let feats = predictor_check_feats();
+    let scores: Vec<f64> = feats
+        .iter()
+        .map(|f| {
+            scorer.score(&Features {
+                chain_conf: f[0],
+                hist_conf: f[1],
+                recency: f[2],
+                log_lead: f[3],
+            })
+        })
+        .collect();
+
+    let manifest = Json::obj(vec![
+        ("generator", Json::str("repro gen-artifacts (native-rust)")),
+        ("input_dim", Json::num(spec.input_dim as f64)),
+        ("classes", Json::num(spec.classes as f64)),
+        (
+            "hidden",
+            Json::arr(spec.hidden.iter().map(|&h| Json::num(h as f64))),
+        ),
+        ("param_seed", Json::num(spec.seed as f64)),
+        (
+            "batches",
+            Json::arr(spec.batches.iter().map(|&b| Json::num(b as f64))),
+        ),
+        ("predictor_batch", Json::num(spec.predictor_batch as f64)),
+        (
+            "predictor_weights",
+            Json::arr(DEPLOYED_WEIGHTS.iter().map(|&w| Json::num(w))),
+        ),
+        ("predictor_bias", Json::num(DEPLOYED_BIAS)),
+        // No HLO artifacts: this set serves the native backend only.
+        ("artifacts", Json::Obj(Vec::new())),
+        (
+            "check",
+            Json::obj(vec![
+                (
+                    "classifier_input",
+                    Json::str(&format!("linspace(-1,1,{})", spec.input_dim)),
+                ),
+                (
+                    "classifier_logits_b1",
+                    Json::arr(logits.iter().map(|&v| Json::num(v))),
+                ),
+                (
+                    "predictor_feats",
+                    Json::arr(
+                        feats
+                            .iter()
+                            .map(|row| Json::arr(row.iter().map(|&v| Json::num(v)))),
+                    ),
+                ),
+                (
+                    "predictor_scores",
+                    Json::arr(scores.iter().map(|&v| Json::num(v))),
+                ),
+            ]),
+        ),
+        (
+            "weights",
+            Json::obj(vec![
+                ("format", Json::str("f32-le")),
+                (
+                    "normalize",
+                    Json::obj(vec![
+                        ("mean", Json::num(spec.mean)),
+                        ("std", Json::num(spec.std)),
+                    ]),
+                ),
+                ("layers", Json::Arr(layer_entries)),
+            ]),
+        ),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.pretty())
+        .with_context(|| format!("writing manifest.json in {}", dir.display()))?;
+    Manifest::load(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("freshen-nn-gen-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn generated_set_loads_and_matches_its_own_check() {
+        let dir = temp("roundtrip");
+        let m = generate(&dir, &GenSpec::tiny()).unwrap();
+        assert_eq!(m.input_dim, 32);
+        assert_eq!(m.classes, 5);
+        assert_eq!(m.batches, vec![1, 2, 4]);
+        assert!(m.weights.is_some());
+
+        // The fast kernels must reproduce the recorded reference logits.
+        let mlp = Mlp::load(&m).unwrap();
+        let got = mlp.forward_flat(1, &check_probe(m.input_dim)).unwrap();
+        assert_eq!(got.len(), m.classes);
+        for (g, want) in got.iter().zip(m.check_logits_b1.iter()) {
+            assert!((*g as f64 - want).abs() < 1e-3, "{g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = GenSpec::tiny();
+        let d1 = temp("det-a");
+        let d2 = temp("det-b");
+        generate(&d1, &spec).unwrap();
+        generate(&d2, &spec).unwrap();
+        for name in ["manifest.json", "layer0.w.bin", "layer2.b.bin"] {
+            let a = std::fs::read(d1.join(name)).unwrap();
+            let b = std::fs::read(d2.join(name)).unwrap();
+            assert_eq!(a, b, "{name} differs between identical specs");
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let dir = temp("bad");
+        for spec in [
+            GenSpec {
+                input_dim: 1,
+                ..GenSpec::tiny()
+            },
+            GenSpec {
+                batches: vec![],
+                ..GenSpec::tiny()
+            },
+            GenSpec {
+                classes: 0,
+                ..GenSpec::tiny()
+            },
+            GenSpec {
+                std: 0.0,
+                ..GenSpec::tiny()
+            },
+        ] {
+            assert!(generate(&dir, &spec).is_err(), "{spec:?} should fail");
+        }
+    }
+}

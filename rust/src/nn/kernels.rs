@@ -1,0 +1,300 @@
+//! Inference kernels over [`Matrix`]: blocked matmul with a fused
+//! bias+activation epilogue, row softmax, input standardization, and the
+//! logistic scorer.
+//!
+//! # Matmul shape and blocking
+//!
+//! `matmul_bias_act(x, w, bias, relu)` computes `act(x·w + bias)` for
+//! activations `x: m×k` and weights `w: k×n`, both row-major — the layout
+//! `python/compile/aot.py` dumps, so weight blobs map straight into the
+//! kernel with no transpose. The loop nest is k-streaming with row-quad
+//! blocking: weight rows are read in k order (contiguous, prefetch
+//! friendly) and each is applied to up to [`ROW_BLOCK`] input rows before
+//! moving on, so a streamed `w` row is reused from L1 instead of being
+//! re-fetched per input row. Zero input values skip their weight row —
+//! this makes the zero-padded tail rows of a static batch nearly free.
+//!
+//! # Parallelism and determinism
+//!
+//! Batches large enough to amortize thread spawn ([`par_threads`]) split
+//! their *rows* across `std::thread::scope` workers; every output row is
+//! always accumulated by exactly one thread in fixed k-ascending order,
+//! so results are bit-identical for any thread count (asserted by tests).
+
+use anyhow::{bail, Result};
+
+use crate::nn::tensor::Matrix;
+
+/// Input rows sharing one streamed weight row (register/L1 reuse).
+pub const ROW_BLOCK: usize = 4;
+
+/// Threads are only worth spawning above this many flops (2·m·n·k).
+const PAR_FLOPS_MIN: f64 = 4e6;
+
+/// Cap on worker threads for one matmul.
+const PAR_THREADS_MAX: usize = 8;
+
+/// Worker threads the auto path would use for an `m×k · k×n` matmul.
+pub fn par_threads(m: usize, n: usize, k: usize) -> usize {
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    if m < 2 || flops < PAR_FLOPS_MIN {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1)
+        .min(PAR_THREADS_MAX)
+        .min(m)
+}
+
+/// `act(x·w + bias)` with the thread count chosen by [`par_threads`].
+pub fn matmul_bias_act(x: &Matrix, w: &Matrix, bias: &[f32], relu: bool) -> Result<Matrix> {
+    let threads = par_threads(x.rows(), w.cols(), x.cols());
+    matmul_bias_act_threads(x, w, bias, relu, threads)
+}
+
+/// `act(x·w + bias)` on an explicit number of worker threads (`<=1` runs
+/// inline). Exposed for the `nn_inference` bench's serial-vs-parallel
+/// comparison; results are identical across `threads`.
+pub fn matmul_bias_act_threads(
+    x: &Matrix,
+    w: &Matrix,
+    bias: &[f32],
+    relu: bool,
+    threads: usize,
+) -> Result<Matrix> {
+    if x.cols() != w.rows() {
+        bail!(
+            "matmul shape mismatch: x is {}x{}, w is {}x{}",
+            x.rows(),
+            x.cols(),
+            w.rows(),
+            w.cols()
+        );
+    }
+    if bias.len() != w.cols() {
+        bail!("bias length {} != output width {}", bias.len(), w.cols());
+    }
+    let (m, n) = (x.rows(), w.cols());
+    let mut out = Matrix::zeros(m, n);
+    if m == 0 || n == 0 {
+        return Ok(out);
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 {
+        block_forward(x, 0, w, bias, relu, out.data_mut());
+    } else {
+        let rows_per = (m + threads - 1) / threads;
+        std::thread::scope(|scope| {
+            for (ci, chunk) in out.data_mut().chunks_mut(rows_per * n).enumerate() {
+                scope.spawn(move || block_forward(x, ci * rows_per, w, bias, relu, chunk));
+            }
+        });
+    }
+    Ok(out)
+}
+
+/// Compute output rows `row0..row0 + out_chunk.len()/n` into `out_chunk`.
+fn block_forward(
+    x: &Matrix,
+    row0: usize,
+    w: &Matrix,
+    bias: &[f32],
+    relu: bool,
+    out_chunk: &mut [f32],
+) {
+    let n = w.cols();
+    let kdim = w.rows();
+    let mut done = 0usize;
+    for quad in out_chunk.chunks_mut(ROW_BLOCK * n) {
+        let rows_here = quad.len() / n;
+        for r in 0..rows_here {
+            quad[r * n..(r + 1) * n].copy_from_slice(bias);
+        }
+        for k in 0..kdim {
+            let wrow = w.row(k);
+            for r in 0..rows_here {
+                let a = x.get(row0 + done + r, k);
+                if a != 0.0 {
+                    let orow = &mut quad[r * n..(r + 1) * n];
+                    for (o, wv) in orow.iter_mut().zip(wrow.iter()) {
+                        *o += a * wv;
+                    }
+                }
+            }
+        }
+        if relu {
+            for v in quad.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        done += rows_here;
+    }
+}
+
+/// In-place input standardization: `x = (x - mean) / std`.
+pub fn normalize(x: &mut Matrix, mean: f32, std: f32) -> Result<()> {
+    if std == 0.0 || !std.is_finite() {
+        bail!("normalize: std must be finite and non-zero, got {std}");
+    }
+    let inv = 1.0 / std;
+    for v in x.data_mut() {
+        *v = (*v - mean) * inv;
+    }
+    Ok(())
+}
+
+/// In-place row-wise softmax (max-subtracted for stability).
+pub fn softmax_rows(x: &mut Matrix) {
+    for i in 0..x.rows() {
+        let row = x.row_mut(i);
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        if sum > 0.0 {
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+}
+
+/// `sigmoid(x·weights + bias)` per row — the learned next-invocation
+/// scorer ([`crate::predict::learned`]) evaluated batched in f32.
+pub fn logistic_score(x: &Matrix, weights: &[f32], bias: f32) -> Result<Vec<f32>> {
+    if x.cols() != weights.len() {
+        bail!(
+            "logistic feature width {} != weight count {}",
+            x.cols(),
+            weights.len()
+        );
+    }
+    let mut out = Vec::with_capacity(x.rows());
+    for i in 0..x.rows() {
+        let z: f32 = x
+            .row(i)
+            .iter()
+            .zip(weights.iter())
+            .map(|(a, b)| a * b)
+            .sum::<f32>()
+            + bias;
+        out.push(1.0 / (1.0 + (-z).exp()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, vals: &[f32]) -> Matrix {
+        Matrix::from_slice(rows, cols, vals).unwrap()
+    }
+
+    #[test]
+    fn matmul_matches_hand_computation() {
+        // [1 2; 3 4] · [5 6; 7 8] + [10, 20] = [29 42; 53 70]
+        let x = mat(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let w = mat(2, 2, &[5.0, 6.0, 7.0, 8.0]);
+        let out = matmul_bias_act(&x, &w, &[10.0, 20.0], false).unwrap();
+        assert_eq!(out.data(), &[29.0, 42.0, 53.0, 70.0]);
+    }
+
+    #[test]
+    fn relu_epilogue_clamps() {
+        let x = mat(1, 2, &[1.0, -3.0]);
+        let w = mat(2, 2, &[1.0, 0.0, 0.0, 1.0]);
+        let lin = matmul_bias_act(&x, &w, &[0.0, 0.0], false).unwrap();
+        assert_eq!(lin.data(), &[1.0, -3.0]);
+        let act = matmul_bias_act(&x, &w, &[0.0, 0.0], true).unwrap();
+        assert_eq!(act.data(), &[1.0, 0.0]);
+    }
+
+    #[test]
+    fn shape_mismatches_error() {
+        let x = mat(1, 3, &[0.0; 3]);
+        let w = mat(2, 2, &[0.0; 4]);
+        assert!(matmul_bias_act(&x, &w, &[0.0, 0.0], false).is_err());
+        let w3 = mat(3, 2, &[0.0; 6]);
+        assert!(matmul_bias_act(&x, &w3, &[0.0], false).is_err());
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        // Deterministic pseudo-random fill; dims straddle the quad block.
+        let mut rng = crate::util::rng::Rng::new(0x17E);
+        let m = 13;
+        let k = 37;
+        let n = 29;
+        let x = Matrix::from_vec(
+            m,
+            k,
+            (0..m * k).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+        .unwrap();
+        let w = Matrix::from_vec(
+            k,
+            n,
+            (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+        )
+        .unwrap();
+        let bias: Vec<f32> = (0..n).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let serial = matmul_bias_act_threads(&x, &w, &bias, true, 1).unwrap();
+        for threads in [2, 3, 4, 8, 64] {
+            let par = matmul_bias_act_threads(&x, &w, &bias, true, threads).unwrap();
+            assert_eq!(serial.data(), par.data(), "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn par_threads_keeps_small_work_serial() {
+        assert_eq!(par_threads(1, 512, 3072), 1, "batch 1 stays inline");
+        assert_eq!(par_threads(4, 2, 2), 1, "tiny matmul stays inline");
+        assert!(par_threads(16, 512, 3072) >= 1);
+    }
+
+    #[test]
+    fn softmax_rows_are_distributions() {
+        let mut x = mat(2, 3, &[1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        softmax_rows(&mut x);
+        for i in 0..2 {
+            let sum: f32 = x.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(x.row(i).iter().all(|&v| v > 0.0));
+            // Monotone in the logits.
+            assert!(x.get(i, 2) > x.get(i, 0));
+        }
+    }
+
+    #[test]
+    fn normalize_standardizes() {
+        let mut x = mat(1, 2, &[0.5, 1.0]);
+        normalize(&mut x, 0.5, 0.25).unwrap();
+        assert_eq!(x.data(), &[0.0, 2.0]);
+        assert!(normalize(&mut x, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn logistic_matches_native_scorer() {
+        let x = mat(1, 4, &[0.9, 0.8, 0.7, 0.3]);
+        let w: Vec<f32> = crate::predict::learned::DEPLOYED_WEIGHTS
+            .iter()
+            .map(|&v| v as f32)
+            .collect();
+        let got = logistic_score(&x, &w, crate::predict::learned::DEPLOYED_BIAS as f32).unwrap();
+        let native = crate::predict::learned::LearnedScorer::default().score(
+            &crate::predict::learned::Features {
+                chain_conf: 0.9,
+                hist_conf: 0.8,
+                recency: 0.7,
+                log_lead: 0.3,
+            },
+        );
+        assert!((got[0] as f64 - native).abs() < 1e-6, "{} vs {native}", got[0]);
+    }
+}

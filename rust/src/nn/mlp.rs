@@ -1,0 +1,265 @@
+//! The classifier MLP assembled from manifest weight sidecars.
+//!
+//! [`Mlp::load`] reads the `weights` section of `artifacts/manifest.json`
+//! (see [`crate::runtime::manifest::WeightsSpec`] for the schema) and the
+//! per-layer raw little-endian `f32` blobs next to it, producing the same
+//! network `python/compile/model.py::classifier_fwd` lowers into the HLO
+//! artifacts: standardize → (linear + ReLU)* → linear → logits. The blob
+//! layout is row-major `in × out` exactly as JAX holds the parameters, so
+//! loading is a straight byte reinterpretation.
+//!
+//! [`Mlp::forward_reference`] is a deliberately naive `f64` re-computation
+//! used by tests to cross-check the blocked/threaded f32 kernels — two
+//! implementations, one contract.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::kernels;
+use crate::nn::tensor::Matrix;
+use crate::runtime::manifest::Manifest;
+
+/// One dense layer: weights `in × out` (row-major), bias `out`.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub w: Matrix,
+    pub bias: Vec<f32>,
+    pub relu: bool,
+}
+
+/// The loaded network plus its input standardization constants.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+    pub mean: f32,
+    pub std: f32,
+}
+
+impl Mlp {
+    /// Assemble from in-memory layers, validating the dimension chain.
+    pub fn from_layers(layers: Vec<Layer>, mean: f32, std: f32) -> Result<Mlp> {
+        if layers.is_empty() {
+            bail!("mlp needs at least one layer");
+        }
+        for (i, l) in layers.iter().enumerate() {
+            if l.bias.len() != l.w.cols() {
+                bail!(
+                    "layer {i}: bias length {} != output width {}",
+                    l.bias.len(),
+                    l.w.cols()
+                );
+            }
+            if i + 1 < layers.len() && l.w.cols() != layers[i + 1].w.rows() {
+                bail!(
+                    "layer {i} output {} does not feed layer {} input {}",
+                    l.w.cols(),
+                    i + 1,
+                    layers[i + 1].w.rows()
+                );
+            }
+        }
+        Ok(Mlp { layers, mean, std })
+    }
+
+    /// Load the classifier weights listed in `manifest`'s sidecar section.
+    pub fn load(manifest: &Manifest) -> Result<Mlp> {
+        let spec = manifest.weights.as_ref().context(
+            "manifest has no 'weights' section (native backend needs the \
+             weight sidecars; regenerate with `make artifacts` / `repro \
+             gen-artifacts`, or use the pjrt backend)",
+        )?;
+        let mut layers = Vec::with_capacity(spec.layers.len());
+        for (i, l) in spec.layers.iter().enumerate() {
+            let w = read_f32_blob(&manifest.dir.join(&l.weights_file), l.input * l.output)
+                .with_context(|| format!("layer {i} weights ({})", l.weights_file))?;
+            let bias = read_f32_blob(&manifest.dir.join(&l.bias_file), l.output)
+                .with_context(|| format!("layer {i} bias ({})", l.bias_file))?;
+            layers.push(Layer {
+                w: Matrix::from_vec(l.input, l.output, w)?,
+                bias,
+                relu: l.relu,
+            });
+        }
+        let mlp = Mlp::from_layers(layers, spec.mean as f32, spec.std as f32)?;
+        if mlp.input_dim() != manifest.input_dim {
+            bail!(
+                "weights input dim {} != manifest input_dim {}",
+                mlp.input_dim(),
+                manifest.input_dim
+            );
+        }
+        if mlp.output_dim() != manifest.classes {
+            bail!(
+                "weights output dim {} != manifest classes {}",
+                mlp.output_dim(),
+                manifest.classes
+            );
+        }
+        Ok(mlp)
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.layers[0].w.rows()
+    }
+
+    pub fn output_dim(&self) -> usize {
+        self.layers[self.layers.len() - 1].w.cols()
+    }
+
+    /// Batched forward pass: standardize, then every layer through the
+    /// blocked (and, for large batches, row-parallel) kernels.
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        if x.cols() != self.input_dim() {
+            bail!(
+                "input width {} != model input dim {}",
+                x.cols(),
+                self.input_dim()
+            );
+        }
+        let mut h = x.clone();
+        kernels::normalize(&mut h, self.mean, self.std)?;
+        for layer in &self.layers {
+            h = kernels::matmul_bias_act(&h, &layer.w, &layer.bias, layer.relu)?;
+        }
+        Ok(h)
+    }
+
+    /// Forward over a flat row-major buffer of `rows × input_dim` floats;
+    /// returns `rows × output_dim` flat logits.
+    pub fn forward_flat(&self, rows: usize, flat: &[f32]) -> Result<Vec<f32>> {
+        let x = Matrix::from_slice(rows, self.input_dim(), flat)?;
+        Ok(self.forward(&x)?.into_data())
+    }
+
+    /// Naive single-row `f64` forward — the executable spec the fast
+    /// kernels are tested against (and the source of the generated
+    /// manifests' `check_logits_b1` numerics).
+    pub fn forward_reference(&self, row: &[f32]) -> Vec<f64> {
+        let mut h: Vec<f64> = row
+            .iter()
+            .map(|&v| (v as f64 - self.mean as f64) / self.std as f64)
+            .collect();
+        for layer in &self.layers {
+            let mut next = vec![0.0f64; layer.w.cols()];
+            for (j, slot) in next.iter_mut().enumerate() {
+                let mut acc = layer.bias[j] as f64;
+                for (k, &a) in h.iter().enumerate() {
+                    acc += a * layer.w.get(k, j) as f64;
+                }
+                *slot = if layer.relu { acc.max(0.0) } else { acc };
+            }
+            h = next;
+        }
+        h
+    }
+}
+
+/// Read a raw little-endian `f32` blob of exactly `expect` values.
+pub fn read_f32_blob(path: &Path, expect: usize) -> Result<Vec<f32>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect * 4 {
+        bail!(
+            "{}: expected {} f32 values ({} bytes), found {} bytes",
+            path.display(),
+            expect,
+            expect * 4,
+            bytes.len()
+        );
+    }
+    let mut out = Vec::with_capacity(expect);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+/// Write a raw little-endian `f32` blob (the sidecar format `aot.py`
+/// emits and [`read_f32_blob`] parses).
+pub fn write_f32_blob(path: &Path, values: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(values.len() * 4);
+    for v in values {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp() -> Mlp {
+        // 3 -> 2 (relu) -> 2
+        let l0 = Layer {
+            w: Matrix::from_slice(3, 2, &[0.5, -0.25, 1.0, 0.75, -0.5, 0.25]).unwrap(),
+            bias: vec![0.1, -0.1],
+            relu: true,
+        };
+        let l1 = Layer {
+            w: Matrix::from_slice(2, 2, &[1.0, -1.0, 0.5, 0.5]).unwrap(),
+            bias: vec![0.0, 0.2],
+            relu: false,
+        };
+        Mlp::from_layers(vec![l0, l1], 0.0, 1.0).unwrap()
+    }
+
+    #[test]
+    fn forward_matches_reference() {
+        let mlp = tiny_mlp();
+        let rows = [
+            vec![1.0f32, -2.0, 0.5],
+            vec![0.0, 0.0, 0.0],
+            vec![-1.5, 2.5, 3.0],
+        ];
+        let x = Matrix::from_vec(3, 3, rows.concat()).unwrap();
+        let fast = mlp.forward(&x).unwrap();
+        for (i, row) in rows.iter().enumerate() {
+            let want = mlp.forward_reference(row);
+            for (a, b) in fast.row(i).iter().zip(want.iter()) {
+                assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn dimension_chain_is_validated() {
+        let bad = Layer {
+            w: Matrix::zeros(3, 4),
+            bias: vec![0.0; 4],
+            relu: true,
+        };
+        let mismatched = Layer {
+            w: Matrix::zeros(5, 2),
+            bias: vec![0.0; 2],
+            relu: false,
+        };
+        assert!(Mlp::from_layers(vec![bad, mismatched], 0.0, 1.0).is_err());
+        assert!(Mlp::from_layers(vec![], 0.0, 1.0).is_err());
+        let wrong_bias = Layer {
+            w: Matrix::zeros(2, 2),
+            bias: vec![0.0; 3],
+            relu: false,
+        };
+        assert!(Mlp::from_layers(vec![wrong_bias], 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn forward_rejects_wrong_width() {
+        let mlp = tiny_mlp();
+        let x = Matrix::zeros(1, 5);
+        assert!(mlp.forward(&x).is_err());
+    }
+
+    #[test]
+    fn blob_roundtrip_and_length_check() {
+        let dir = std::env::temp_dir().join("freshen-nn-blob-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals = [1.5f32, -2.25, 0.0, 3.0e-8];
+        write_f32_blob(&path, &vals).unwrap();
+        assert_eq!(read_f32_blob(&path, 4).unwrap(), vals.to_vec());
+        assert!(read_f32_blob(&path, 5).is_err(), "length is enforced");
+        assert!(read_f32_blob(&dir.join("missing.bin"), 1).is_err());
+    }
+}

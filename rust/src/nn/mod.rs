@@ -1,0 +1,42 @@
+//! Native-rust neural inference: the offline twin of the PJRT runtime.
+//!
+//! The default build vendors a compile-time `xla` stub, so the AOT
+//! artifacts cannot execute through PJRT without patching in the real
+//! crate. This subsystem closes that gap: a small, dependency-free tensor
+//! and MLP engine that executes the *same model* — the manifest's weight
+//! sidecars, written by `python/compile/aot.py` (or by [`gen`] entirely in
+//! rust) — so `repro serve` and `repro check-artifacts` run end-to-end in
+//! any checkout.
+//!
+//! Layout:
+//!
+//! - [`tensor`] — [`tensor::Matrix`], a flat row-major `f32` buffer with
+//!   shape; the only data type the kernels traffic in.
+//! - [`kernels`] — blocked matmul with a fused bias+activation epilogue
+//!   (row-quad blocking: each streamed weight row is reused across four
+//!   input rows), a row-parallel `std::thread` path for large batches,
+//!   plus row softmax, input standardization, and the logistic scorer.
+//! - [`mlp`] — [`mlp::Mlp`]: normalize → (linear+ReLU)* → logits, loaded
+//!   from a [`crate::runtime::manifest::Manifest`]'s weight sidecars, with
+//!   a naive `f64` reference forward for parity tests.
+//! - [`gen`] — deterministic artifact-set generator: writes a manifest +
+//!   weight blobs (and their sample-check numerics) without python, JAX,
+//!   or network access. Backs the CI smoke tests and `repro gen-artifacts`.
+//!
+//! Determinism contract: every kernel accumulates in a fixed k-ascending
+//! order per output row, and the parallel path only partitions *rows*
+//! across threads, so results are bit-identical for any thread count.
+//!
+//! The serving integration lives in [`crate::runtime::backend`]: the
+//! [`crate::runtime::backend::NativeMlpBackend`] adapter exposes
+//! [`mlp::Mlp`] through the same `InferenceBackend` trait the PJRT path
+//! implements, and `ClassifierRuntime` applies the identical
+//! pad-to-AOT-batch policy on top of either.
+
+pub mod gen;
+pub mod kernels;
+pub mod mlp;
+pub mod tensor;
+
+pub use mlp::Mlp;
+pub use tensor::Matrix;

@@ -1,0 +1,115 @@
+//! A minimal dense matrix over a flat row-major `f32` buffer.
+//!
+//! This is deliberately not a general tensor library: the inference
+//! kernels need exactly one layout (row-major, contiguous) and two
+//! shapes (activations `batch × features`, weights `in × out`), so the
+//! type stays small enough to audit and the kernels can slice rows
+//! without stride arithmetic.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major `f32` matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Wrap an existing flat row-major buffer; `data.len()` must equal
+    /// `rows * cols`.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            bail!(
+                "matrix shape {rows}x{cols} needs {} values, got {}",
+                rows * cols,
+                data.len()
+            );
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Copy a flat slice of `rows * cols` values.
+    pub fn from_slice(rows: usize, cols: usize, data: &[f32]) -> Result<Matrix> {
+        Matrix::from_vec(rows, cols, data.to_vec())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i` as a slice of `cols` values.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// The whole buffer, row-major.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_rows() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+        assert!(Matrix::from_slice(1, 2, &[0.0; 2]).is_ok());
+    }
+
+    #[test]
+    fn mutation_through_rows() {
+        let mut m = Matrix::zeros(2, 2);
+        m.row_mut(1)[0] = 7.0;
+        m.set(0, 1, 3.0);
+        assert_eq!(m.data(), &[0.0, 3.0, 7.0, 0.0]);
+        assert_eq!(m.into_data(), vec![0.0, 3.0, 7.0, 0.0]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Pluggable inference execution: one trait, two engines.
+//!
+//! [`InferenceBackend`] is the seam between the typed runtimes
+//! ([`crate::runtime::model`]) and whatever actually executes the model.
+//! The runtimes own everything batch-policy-shaped — input validation,
+//! chunking, pad-to-AOT-size, statistics, self-checks — and hand the
+//! backend a fully padded flat buffer; the backend only runs math:
+//!
+//! - [`NativeMlpBackend`] / [`NativeLogisticBackend`] — the pure-rust
+//!   engines in [`crate::nn`], fed from the manifest's weight sidecars.
+//!   Always available; the default.
+//! - [`PjrtBackend`] — the compiled HLO artifacts through PJRT. Only
+//!   works when the real `xla` crate is patched in over the vendored
+//!   stub; with the stub it fails at load time with a descriptive error.
+//!
+//! Because both backends execute behind the same padded-batch contract,
+//! A/B-ing them (`repro serve --backend native|pjrt`) exercises identical
+//! batcher and runtime behavior — only the executor changes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::{compile_hlo_file, cpu_client};
+
+/// Which executor a runtime should load.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-rust `nn` engine (weight sidecars; works offline).
+    #[default]
+    Native,
+    /// PJRT execution of the HLO artifacts (needs the real `xla` crate).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend '{other}' (expected 'native' or 'pjrt')"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// An executor for one model: given exactly `rows` rows of flat row-major
+/// `f32` input (a compiled AOT batch size for PJRT; any row count for
+/// native), produce `rows` rows of flat output.
+///
+/// Implementations are used from a single thread (the serving engine's
+/// inference thread owns its runtime); PJRT state is not `Send`, so the
+/// trait deliberately has no `Send` bound.
+pub trait InferenceBackend {
+    /// Human-readable platform tag (`check-artifacts` prints it).
+    fn name(&self) -> String;
+
+    /// Execute on `rows × in_dim` values; returns `rows × out_dim`.
+    fn execute(&mut self, rows: usize, flat: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// The classifier MLP on the native `nn` engine.
+pub struct NativeMlpBackend {
+    mlp: nn::Mlp,
+}
+
+impl NativeMlpBackend {
+    pub fn load(manifest: &Manifest) -> Result<NativeMlpBackend> {
+        Ok(NativeMlpBackend {
+            mlp: nn::Mlp::load(manifest)?,
+        })
+    }
+}
+
+impl InferenceBackend for NativeMlpBackend {
+    fn name(&self) -> String {
+        "native-rust".to_string()
+    }
+
+    fn execute(&mut self, rows: usize, flat: &[f32]) -> Result<Vec<f32>> {
+        self.mlp.forward_flat(rows, flat)
+    }
+}
+
+/// The learned next-invocation scorer on the native engine (the logistic
+/// weights ride in the manifest itself — no sidecar files needed).
+pub struct NativeLogisticBackend {
+    weights: Vec<f32>,
+    bias: f32,
+}
+
+impl NativeLogisticBackend {
+    pub fn load(manifest: &Manifest) -> Result<NativeLogisticBackend> {
+        if manifest.predictor_weights.is_empty() {
+            bail!("manifest has no predictor_weights (native predictor backend needs them)");
+        }
+        Ok(NativeLogisticBackend {
+            weights: manifest.predictor_weights.iter().map(|&w| w as f32).collect(),
+            bias: manifest.predictor_bias as f32,
+        })
+    }
+}
+
+impl InferenceBackend for NativeLogisticBackend {
+    fn name(&self) -> String {
+        "native-rust".to_string()
+    }
+
+    fn execute(&mut self, rows: usize, flat: &[f32]) -> Result<Vec<f32>> {
+        let x = nn::Matrix::from_slice(rows, self.weights.len(), flat)?;
+        nn::kernels::logistic_score(&x, &self.weights, self.bias)
+    }
+}
+
+/// Compiled HLO artifacts executed through PJRT, one executable per AOT
+/// batch size.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    in_dim: usize,
+}
+
+impl PjrtBackend {
+    /// Compile every `classifier_b{N}` artifact listed in the manifest.
+    pub fn load_classifier(manifest: &Manifest) -> Result<PjrtBackend> {
+        let client = cpu_client()?;
+        let mut exes = BTreeMap::new();
+        for &b in &manifest.batches {
+            let path = manifest
+                .classifier_path(b)
+                .with_context(|| format!("manifest lacks classifier_b{b}"))?;
+            exes.insert(b, compile_hlo_file(&client, &path)?);
+        }
+        if exes.is_empty() {
+            bail!("no classifier artifacts found in {}", manifest.dir.display());
+        }
+        Ok(PjrtBackend {
+            client,
+            exes,
+            in_dim: manifest.input_dim,
+        })
+    }
+
+    /// Compile the predictor artifact (fixed batch).
+    pub fn load_predictor(manifest: &Manifest) -> Result<PjrtBackend> {
+        let client = cpu_client()?;
+        let path = manifest
+            .predictor_path()
+            .context("manifest lacks predictor artifact")?;
+        let exe = compile_hlo_file(&client, &path)?;
+        let mut exes = BTreeMap::new();
+        exes.insert(manifest.predictor_batch, exe);
+        Ok(PjrtBackend {
+            client,
+            exes,
+            in_dim: 4,
+        })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn execute(&mut self, rows: usize, flat: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .exes
+            .get(&rows)
+            .with_context(|| format!("no compiled executable for batch {rows}"))?;
+        let x = xla::Literal::vec1(flat).reshape(&[rows as i64, self.in_dim as i64])?;
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::default(), BackendKind::Native);
+        assert_eq!(BackendKind::Native.as_str(), "native");
+        assert_eq!(BackendKind::Pjrt.as_str(), "pjrt");
+    }
+
+    #[test]
+    fn pjrt_backend_fails_descriptively_on_the_stub() {
+        // With the vendored xla stub, PJRT load errors mention the patch
+        // path instead of panicking.
+        let dir = std::env::temp_dir().join("freshen-backend-stub");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "input_dim": 4, "classes": 2, "batches": [1],
+              "artifacts": {"classifier_b1": "c1.hlo.txt", "predictor": "p.hlo.txt"},
+              "check": {"classifier_logits_b1": [0, 0],
+                         "predictor_feats": [], "predictor_scores": []}
+            }"#,
+        )
+        .unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let err = PjrtBackend::load_classifier(&manifest).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("unavailable"),
+            "stub error should say the backend is unavailable: {err:#}"
+        );
+    }
+}

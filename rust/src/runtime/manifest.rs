@@ -1,8 +1,31 @@
 //! `artifacts/manifest.json`: what the AOT pass produced.
 //!
-//! Written by `python/compile/aot.py`; read here so the rust runtime knows
-//! the artifact shapes, available batch sizes, and the sample-check
-//! numerics the integration tests assert against.
+//! Written by `python/compile/aot.py` (or `repro gen-artifacts` for
+//! native-only sets); read here so the rust runtime knows the artifact
+//! shapes, available batch sizes, the sample-check numerics the
+//! integration tests assert against, and — since the native backend —
+//! where the raw weight sidecars live.
+//!
+//! # Weight sidecar schema (`"weights"`)
+//!
+//! ```json
+//! "weights": {
+//!   "format": "f32-le",
+//!   "normalize": {"mean": 0.5, "std": 0.25},
+//!   "layers": [
+//!     {"in": 3072, "out": 512, "relu": true,
+//!      "weights": "layer0.w.bin", "bias": "layer0.b.bin"},
+//!     ...
+//!   ]
+//! }
+//! ```
+//!
+//! Each `weights` blob is `in × out` raw little-endian `f32`s, row-major
+//! exactly as JAX holds the parameter (so `aot.py` dumps with
+//! `np.asarray(w, dtype="<f4").tofile(...)`); each `bias` blob is `out`
+//! values. `normalize` carries the input-standardization constants the
+//! forward pass applies before the first layer. The section is optional:
+//! manifests without it can only serve the PJRT backend.
 
 use std::path::{Path, PathBuf};
 
@@ -10,11 +33,31 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// One classifier layer's sidecar entry.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub input: usize,
+    pub output: usize,
+    pub relu: bool,
+    pub weights_file: String,
+    pub bias_file: String,
+}
+
+/// The parsed `weights` sidecar section.
+#[derive(Debug, Clone)]
+pub struct WeightsSpec {
+    /// Input standardization constants ((x - mean) / std).
+    pub mean: f64,
+    pub std: f64,
+    pub layers: Vec<LayerSpec>,
+}
+
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub input_dim: usize,
     pub classes: usize,
+    /// AOT batch sizes, sorted ascending and deduplicated.
     pub batches: Vec<usize>,
     pub predictor_batch: usize,
     pub predictor_weights: Vec<f64>,
@@ -25,6 +68,8 @@ pub struct Manifest {
     pub check_logits_b1: Vec<f64>,
     /// (features, expected score) rows for the predictor check.
     pub check_predictor: Vec<(Vec<f64>, f64)>,
+    /// Native-backend weight sidecars (absent on PJRT-only manifests).
+    pub weights: Option<WeightsSpec>,
     pub dir: PathBuf,
 }
 
@@ -35,7 +80,7 @@ impl Manifest {
             .with_context(|| format!("reading {}", path.display()))?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
 
-        let batches = j
+        let mut batches = j
             .get("batches")
             .and_then(Json::as_arr)
             .context("manifest: batches")?
@@ -43,8 +88,13 @@ impl Manifest {
             .filter_map(Json::as_u64)
             .map(|b| b as usize)
             .collect::<Vec<_>>();
+        batches.sort_unstable();
+        batches.dedup();
         if batches.is_empty() {
             bail!("manifest: no batch sizes");
+        }
+        if batches[0] == 0 {
+            bail!("manifest: batch size 0 is invalid");
         }
 
         let artifacts = match j.get("artifacts") {
@@ -71,6 +121,13 @@ impl Manifest {
             .get("predictor_scores")
             .and_then(Json::as_arr)
             .context("manifest: predictor scores")?;
+        if feats.len() != scores.len() {
+            bail!(
+                "manifest: {} predictor_feats rows but {} predictor_scores",
+                feats.len(),
+                scores.len()
+            );
+        }
         let check_predictor = feats
             .iter()
             .zip(scores.iter())
@@ -79,6 +136,11 @@ impl Manifest {
                 Some((row, s.as_f64()?))
             })
             .collect();
+
+        let weights = match j.get("weights") {
+            Some(section) => Some(parse_weights(section)?),
+            None => None,
+        };
 
         Ok(Manifest {
             input_dim: j.u64_or("input_dim", 3072) as usize,
@@ -94,6 +156,7 @@ impl Manifest {
             artifacts,
             check_logits_b1,
             check_predictor,
+            weights,
             dir: dir.to_path_buf(),
         })
     }
@@ -113,6 +176,64 @@ impl Manifest {
             .find(|(k, _)| k == "predictor")
             .map(|(_, f)| self.dir.join(f))
     }
+}
+
+/// Parse and validate the `weights` sidecar section (schema in the
+/// module docs).
+fn parse_weights(section: &Json) -> Result<WeightsSpec> {
+    let format = section.str_or("format", "f32-le");
+    if format != "f32-le" {
+        bail!("manifest: unsupported weights format '{format}' (want f32-le)");
+    }
+    let (mean, std) = match section.get("normalize") {
+        Some(n) => (n.f64_or("mean", 0.0), n.f64_or("std", 1.0)),
+        None => (0.0, 1.0),
+    };
+    if std <= 0.0 {
+        bail!("manifest: weights normalize.std must be positive, got {std}");
+    }
+    let layers_json = section
+        .get("layers")
+        .and_then(Json::as_arr)
+        .context("manifest: weights.layers array")?;
+    if layers_json.is_empty() {
+        bail!("manifest: weights.layers is empty");
+    }
+    let mut layers = Vec::with_capacity(layers_json.len());
+    for (i, l) in layers_json.iter().enumerate() {
+        let input = l.u64_or("in", 0) as usize;
+        let output = l.u64_or("out", 0) as usize;
+        if input == 0 || output == 0 {
+            bail!("manifest: weights layer {i} needs positive 'in' and 'out'");
+        }
+        let weights_file = l
+            .get("weights")
+            .and_then(Json::as_str)
+            .with_context(|| format!("manifest: weights layer {i} 'weights' file"))?
+            .to_string();
+        let bias_file = l
+            .get("bias")
+            .and_then(Json::as_str)
+            .with_context(|| format!("manifest: weights layer {i} 'bias' file"))?
+            .to_string();
+        layers.push(LayerSpec {
+            input,
+            output,
+            relu: l.bool_or("relu", false),
+            weights_file,
+            bias_file,
+        });
+    }
+    for pair in layers.windows(2) {
+        if pair[0].output != pair[1].input {
+            bail!(
+                "manifest: weights layer chain broken ({} out vs {} in)",
+                pair[0].output,
+                pair[1].input
+            );
+        }
+    }
+    Ok(WeightsSpec { mean, std, layers })
 }
 
 #[cfg(test)]
@@ -155,5 +276,124 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    /// Write `text` as a manifest in a fresh temp dir and load it.
+    fn load_text(name: &str, text: &str) -> Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("freshen-manifest-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        Manifest::load(&dir)
+    }
+
+    const VALID: &str = r#"{
+      "input_dim": 8, "classes": 2, "batches": [4, 1, 4],
+      "predictor_batch": 16,
+      "predictor_weights": [3.2, 1.8, 0.9, -0.6], "predictor_bias": -2.0,
+      "artifacts": {},
+      "check": {"classifier_logits_b1": [0.5, -0.5],
+                 "predictor_feats": [[1, 0, 0, 0]],
+                 "predictor_scores": [0.76]}
+    }"#;
+
+    #[test]
+    fn batches_are_sorted_and_deduplicated() {
+        let m = load_text("sortdedup", VALID).unwrap();
+        assert_eq!(m.batches, vec![1, 4]);
+        assert!(m.weights.is_none(), "no weights section parsed as None");
+    }
+
+    #[test]
+    fn missing_batches_errors() {
+        let text = VALID.replacen(r#""batches": [4, 1, 4],"#, "", 1);
+        assert!(load_text("nobatches", &text).is_err());
+        let empty = VALID.replacen("[4, 1, 4]", "[]", 1);
+        assert!(load_text("emptybatches", &empty).is_err());
+        let zero = VALID.replacen("[4, 1, 4]", "[0, 1]", 1);
+        assert!(load_text("zerobatch", &zero).is_err());
+    }
+
+    #[test]
+    fn malformed_artifacts_object_errors() {
+        for (name, bad) in [
+            ("arr", r#""artifacts": [1, 2]"#),
+            ("str", r#""artifacts": "classifier_b1.hlo.txt""#),
+            ("num", r#""artifacts": 7"#),
+        ] {
+            let text = VALID.replacen(r#""artifacts": {}"#, bad, 1);
+            assert!(
+                load_text(&format!("badart-{name}"), &text).is_err(),
+                "artifacts as {name} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn mismatched_predictor_check_lengths_error() {
+        let text = VALID.replacen("[0.76]", "[0.76, 0.12]", 1);
+        let err = load_text("mismatch", &text).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("predictor_scores"),
+            "error should name the mismatch: {err:#}"
+        );
+    }
+
+    fn with_weights(weights: &str) -> String {
+        VALID.replacen(
+            r#""artifacts": {},"#,
+            &format!(r#""artifacts": {{}}, "weights": {weights},"#),
+            1,
+        )
+    }
+
+    #[test]
+    fn weights_section_parses() {
+        let text = with_weights(
+            r#"{
+              "format": "f32-le",
+              "normalize": {"mean": 0.5, "std": 0.25},
+              "layers": [
+                {"in": 8, "out": 4, "relu": true,
+                 "weights": "l0.w.bin", "bias": "l0.b.bin"},
+                {"in": 4, "out": 2, "relu": false,
+                 "weights": "l1.w.bin", "bias": "l1.b.bin"}
+              ]
+            }"#,
+        );
+        let m = load_text("weights-ok", &text).unwrap();
+        let w = m.weights.expect("parsed");
+        assert_eq!(w.mean, 0.5);
+        assert_eq!(w.std, 0.25);
+        assert_eq!(w.layers.len(), 2);
+        assert!(w.layers[0].relu && !w.layers[1].relu);
+        assert_eq!(w.layers[1].weights_file, "l1.w.bin");
+    }
+
+    #[test]
+    fn weights_section_is_validated() {
+        // Broken dimension chain (layer 0 emits 4, layer 1 expects 5).
+        let broken = with_weights(
+            r#"{"layers": [
+                {"in": 8, "out": 4, "weights": "a.bin", "bias": "b.bin"},
+                {"in": 5, "out": 2, "weights": "c.bin", "bias": "d.bin"}
+            ]}"#,
+        );
+        assert!(load_text("weights-chain", &broken).is_err());
+        // Unknown blob format.
+        let fmt = with_weights(r#"{"format": "f64-be", "layers": []}"#);
+        assert!(load_text("weights-fmt", &fmt).is_err());
+        // Empty layer list.
+        let empty = with_weights(r#"{"layers": []}"#);
+        assert!(load_text("weights-empty", &empty).is_err());
+        // Missing file names.
+        let nofile = with_weights(r#"{"layers": [{"in": 8, "out": 2}]}"#);
+        assert!(load_text("weights-nofile", &nofile).is_err());
+        // Non-positive std.
+        let badstd = with_weights(
+            r#"{"normalize": {"mean": 0, "std": 0},
+                "layers": [{"in": 8, "out": 2, "weights": "a", "bias": "b"}]}"#,
+        );
+        assert!(load_text("weights-std", &badstd).is_err());
     }
 }

@@ -1,16 +1,44 @@
-//! PJRT runtime: load and execute the AOT artifacts from rust.
+//! Model runtime: load the AOT artifact set and execute it from rust,
+//! on a pluggable backend.
 //!
 //! This is the L3↔L2 bridge. `make artifacts` lowers the JAX/Pallas model
-//! to HLO **text**; this module loads the text with
-//! `HloModuleProto::from_text_file`, compiles it on the PJRT CPU client,
-//! and exposes typed, batched execution to the serving engine. Python never
-//! runs here — the binary is self-contained once `artifacts/` exists.
+//! and writes an artifact directory containing `manifest.json` (shapes,
+//! batch sizes, sample-check numerics — see [`manifest`]), HLO **text**
+//! modules for PJRT, and raw `f32` weight sidecars for the native engine;
+//! `repro gen-artifacts` writes a native-only set without python. The
+//! typed runtimes in [`model`] load the manifest and serve batched,
+//! validated inference to the serving engine; python never runs here.
+//!
+//! # Architecture: backend trait under the batch policy
+//!
+//! ```text
+//!   serve::engine (batcher, one inference thread)
+//!        │ rows
+//!   model::{ClassifierRuntime, PredictorRuntime}
+//!        │   validate → chunk to max_batch → zero-pad to AOT batch
+//!        │   (identical policy for every backend)
+//!        ▼ padded flat f32 batch
+//!   backend::InferenceBackend          ← the seam
+//!     ├── NativeMlpBackend / NativeLogisticBackend   (nn, default)
+//!     └── PjrtBackend                                 (real `xla` crate)
+//! ```
+//!
+//! The **native** backend ([`crate::nn`]) is pure rust and always
+//! available — a fresh offline checkout can generate, check, and serve an
+//! artifact set with no external dependencies. The **PJRT** backend
+//! compiles the HLO text with `HloModuleProto::from_text_file` on the
+//! PJRT CPU client; in the default build it is a vendored compile-time
+//! stub that errors descriptively at load, and patching the real `xla`
+//! crate into the workspace enables it with no source changes
+//! (`--backend pjrt`).
 //!
 //! Thread model: the `xla` crate's wrappers hold raw pointers and are not
-//! `Send`, so all PJRT state lives on whichever thread created it; the
-//! serving engine dedicates one inference thread that owns a
-//! [`model::ClassifierRuntime`] (the vLLM-style "engine loop").
+//! `Send`, so runtimes live on whichever thread created them; the serving
+//! engine dedicates one inference thread that owns its
+//! [`model::ClassifierRuntime`] (the vLLM-style "engine loop"). The
+//! native backend has no such constraint but follows the same discipline.
 
+pub mod backend;
 pub mod manifest;
 pub mod model;
 

@@ -1,22 +1,26 @@
-//! Typed, batched execution of the classifier and predictor artifacts.
+//! Typed, batched execution of the classifier and predictor models.
 //!
-//! [`ClassifierRuntime`] holds one compiled executable per AOT batch size
-//! and serves arbitrary request batches by picking the smallest artifact
-//! batch that fits and zero-padding (standard static-batch serving).
+//! [`ClassifierRuntime`] serves arbitrary request batches over any
+//! [`InferenceBackend`]: it picks the smallest AOT batch size that fits,
+//! zero-pads up to it (standard static-batch serving), and chunks
+//! oversized inputs into `max_batch()`-sized slices. The pad/chunk policy
+//! lives here — *above* the backend seam — so batcher behavior is
+//! identical whether the executor is PJRT or the native `nn` engine.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::runtime::backend::{
+    BackendKind, InferenceBackend, NativeLogisticBackend, NativeMlpBackend, PjrtBackend,
+};
 use crate::runtime::manifest::Manifest;
-use crate::runtime::{compile_hlo_file, cpu_client};
 
-/// The λ1 image classifier, compiled for each AOT batch size.
+/// The λ1 image classifier behind the pad-to-AOT-batch policy.
 pub struct ClassifierRuntime {
-    client: xla::PjRtClient,
-    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    backend: Box<dyn InferenceBackend>,
+    pub kind: BackendKind,
     pub manifest: Manifest,
     /// Cumulative inference statistics.
     pub executions: u64,
@@ -26,23 +30,21 @@ pub struct ClassifierRuntime {
 }
 
 impl ClassifierRuntime {
-    /// Load every classifier artifact listed in `dir`'s manifest.
+    /// Load from `dir`'s manifest on the default backend (native).
     pub fn load(dir: &Path) -> Result<ClassifierRuntime> {
+        ClassifierRuntime::load_with(dir, BackendKind::default())
+    }
+
+    /// Load on an explicit backend.
+    pub fn load_with(dir: &Path, kind: BackendKind) -> Result<ClassifierRuntime> {
         let manifest = Manifest::load(dir)?;
-        let client = cpu_client()?;
-        let mut exes = BTreeMap::new();
-        for &b in &manifest.batches {
-            let path = manifest
-                .classifier_path(b)
-                .with_context(|| format!("manifest lacks classifier_b{b}"))?;
-            exes.insert(b, compile_hlo_file(&client, &path)?);
-        }
-        if exes.is_empty() {
-            bail!("no classifier artifacts found in {}", dir.display());
-        }
+        let backend: Box<dyn InferenceBackend> = match kind {
+            BackendKind::Native => Box::new(NativeMlpBackend::load(&manifest)?),
+            BackendKind::Pjrt => Box::new(PjrtBackend::load_classifier(&manifest)?),
+        };
         Ok(ClassifierRuntime {
-            client,
-            exes,
+            backend,
+            kind,
             manifest,
             executions: 0,
             rows_served: 0,
@@ -51,21 +53,24 @@ impl ClassifierRuntime {
         })
     }
 
-    /// Largest compiled batch (the batcher's cap).
+    /// Largest AOT batch (one backend execution never exceeds this).
     pub fn max_batch(&self) -> usize {
-        *self.exes.keys().max().expect("non-empty")
+        *self.manifest.batches.last().expect("manifest has batches")
     }
 
-    /// Smallest compiled batch >= n (or the max batch when n exceeds it).
+    /// Smallest AOT batch >= n (or the max batch when n exceeds it).
     pub fn pick_batch(&self, n: usize) -> usize {
-        self.exes
-            .keys()
+        self.manifest
+            .batches
+            .iter()
             .copied()
             .find(|&b| b >= n)
             .unwrap_or_else(|| self.max_batch())
     }
 
-    /// Run inference on up to `max_batch()` rows of `input_dim` floats.
+    /// Run inference on any number of rows of `input_dim` floats.
+    /// Oversized inputs are chunked into `max_batch()`-sized executions;
+    /// each chunk is zero-padded to the smallest AOT batch that fits.
     /// Returns one logits row (`classes` floats) per input row.
     pub fn infer(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         if rows.is_empty() {
@@ -77,45 +82,57 @@ impl ClassifierRuntime {
                 bail!("row {i} has {} features, expected {dim}", r.len());
             }
         }
-        if rows.len() > self.max_batch() {
-            bail!(
-                "batch {} exceeds max compiled batch {}",
-                rows.len(),
-                self.max_batch()
-            );
+        let max = self.max_batch();
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(max) {
+            out.extend(self.infer_chunk(chunk)?);
         }
+        Ok(out)
+    }
+
+    /// One padded backend execution for `rows.len() <= max_batch()` rows.
+    fn infer_chunk(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let dim = self.manifest.input_dim;
         let b = self.pick_batch(rows.len());
-        // Zero-pad to the artifact batch.
-        let mut flat = vec![0f32; b * dim];
+        // Pad to the artifact batch. Padded rows' outputs are discarded,
+        // so the fill value is free to choose: use the normalize mean,
+        // which standardizes to exactly 0.0 and lets the native kernel's
+        // zero-skip path make the padded tail nearly free.
+        let pad = self
+            .manifest
+            .weights
+            .as_ref()
+            .map(|w| w.mean as f32)
+            .unwrap_or(0.0);
+        let mut flat = vec![pad; b * dim];
         for (i, r) in rows.iter().enumerate() {
             flat[i * dim..(i + 1) * dim].copy_from_slice(r);
         }
-        let x = xla::Literal::vec1(&flat).reshape(&[b as i64, dim as i64])?;
         let t0 = Instant::now();
-        let exe = self.exes.get(&b).expect("picked existing batch");
-        let result = exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let flat_out = self.backend.execute(b, &flat)?;
         self.exec_time += t0.elapsed();
         self.executions += 1;
         self.rows_served += rows.len() as u64;
         self.padded_rows += (b - rows.len()) as u64;
-        let out = result.to_tuple1()?; // lowered with return_tuple=True
-        let flat_out = out.to_vec::<f32>()?;
         let classes = self.manifest.classes;
-        Ok(rows
-            .iter()
-            .enumerate()
-            .map(|(i, _)| flat_out[i * classes..(i + 1) * classes].to_vec())
+        if flat_out.len() != b * classes {
+            bail!(
+                "backend returned {} values, expected {} ({b} rows x {classes} classes)",
+                flat_out.len(),
+                b * classes
+            );
+        }
+        Ok((0..rows.len())
+            .map(|i| flat_out[i * classes..(i + 1) * classes].to_vec())
             .collect())
     }
 
-    /// Verify the artifact against the manifest's sample check: the
+    /// Verify the loaded model against the manifest's sample check: the
     /// linspace input must reproduce the recorded logits. This is the
-    /// rust-side half of the AOT numerics contract.
+    /// rust-side half of the AOT numerics contract — and, on the native
+    /// backend, the blocked-kernel-vs-reference parity check.
     pub fn self_check(&mut self) -> Result<f64> {
-        let dim = self.manifest.input_dim;
-        let row: Vec<f32> = (0..dim)
-            .map(|i| -1.0 + 2.0 * i as f32 / (dim as f32 - 1.0))
-            .collect();
+        let row = crate::nn::gen::check_probe(self.manifest.input_dim);
         let logits = self.infer(&[row])?;
         let want = &self.manifest.check_logits_b1;
         if want.len() != logits[0].len() {
@@ -132,34 +149,40 @@ impl ClassifierRuntime {
     }
 
     pub fn platform_name(&self) -> String {
-        self.client.platform_name()
+        self.backend.name()
     }
 }
 
-/// The learned next-invocation scorer artifact (fixed batch).
+/// The learned next-invocation scorer (fixed AOT batch).
 pub struct PredictorRuntime {
-    exe: xla::PjRtLoadedExecutable,
+    backend: Box<dyn InferenceBackend>,
+    pub kind: BackendKind,
     pub batch: usize,
     pub manifest: Manifest,
 }
 
 impl PredictorRuntime {
+    /// Load from `dir`'s manifest on the default backend (native).
     pub fn load(dir: &Path) -> Result<PredictorRuntime> {
+        PredictorRuntime::load_with(dir, BackendKind::default())
+    }
+
+    pub fn load_with(dir: &Path, kind: BackendKind) -> Result<PredictorRuntime> {
         let manifest = Manifest::load(dir)?;
-        let client = cpu_client()?;
-        let path = manifest
-            .predictor_path()
-            .context("manifest lacks predictor artifact")?;
-        let exe = compile_hlo_file(&client, &path)?;
+        let backend: Box<dyn InferenceBackend> = match kind {
+            BackendKind::Native => Box::new(NativeLogisticBackend::load(&manifest)?),
+            BackendKind::Pjrt => Box::new(PjrtBackend::load_predictor(&manifest)?),
+        };
         Ok(PredictorRuntime {
-            exe,
+            backend,
+            kind,
             batch: manifest.predictor_batch,
             manifest,
         })
     }
 
     /// Score up to `batch` feature rows `[chain, hist, recency, log_lead]`.
-    pub fn score(&self, rows: &[[f32; 4]]) -> Result<Vec<f32>> {
+    pub fn score(&mut self, rows: &[[f32; 4]]) -> Result<Vec<f32>> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
@@ -170,15 +193,24 @@ impl PredictorRuntime {
         for (i, r) in rows.iter().enumerate() {
             flat[i * 4..(i + 1) * 4].copy_from_slice(r);
         }
-        let x = xla::Literal::vec1(&flat).reshape(&[self.batch as i64, 4])?;
-        let result = self.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        let out = self.backend.execute(self.batch, &flat)?;
+        if out.len() < rows.len() {
+            bail!("backend returned {} scores for {} rows", out.len(), rows.len());
+        }
         Ok(out[..rows.len()].to_vec())
     }
 
-    /// Check the artifact agrees with the manifest's recorded scores AND
+    /// Check the model agrees with the manifest's recorded scores AND
     /// with the native rust scorer in `predict::learned`.
-    pub fn self_check(&self) -> Result<f64> {
+    pub fn self_check(&mut self) -> Result<f64> {
+        for (i, (f, _)) in self.manifest.check_predictor.iter().enumerate() {
+            if f.len() != 4 {
+                bail!(
+                    "manifest predictor check row {i} has {} features, expected 4",
+                    f.len()
+                );
+            }
+        }
         let rows: Vec<[f32; 4]> = self
             .manifest
             .check_predictor
@@ -206,5 +238,9 @@ impl PredictorRuntime {
             bail!("predictor self-check failed: max |err| = {max_err}");
         }
         Ok(max_err)
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.backend.name()
     }
 }

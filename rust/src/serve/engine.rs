@@ -2,7 +2,8 @@
 //! freshen thread, serving the paper's λ1 pipeline for real.
 //!
 //! Each request walks λ1's ops (Algorithm 1): `FrFetch(0, DataGet(model))`
-//! → PJRT inference (batched) → `FrWarm(1, DataPut(result))`. The freshen
+//! → batched inference (native or PJRT backend, per
+//! [`ServeConfig::backend`]) → `FrWarm(1, DataPut(result))`. The freshen
 //! hook — run ahead of predicted bursts — prefetches the model object and
 //! establishes + warms the store connection, so requests hit local data
 //! and a wide congestion window.
@@ -18,6 +19,7 @@ use anyhow::{Context, Result};
 
 use crate::freshen::state::FrResult;
 use crate::netsim::link::{Link, Site};
+use crate::runtime::backend::BackendKind;
 use crate::runtime::model::ClassifierRuntime;
 use crate::serve::batcher::next_batch;
 use crate::serve::fr::{Served, SharedFrState};
@@ -47,6 +49,8 @@ pub struct ServeConfig {
     /// Network path to the store.
     pub link: Link,
     pub seed: u64,
+    /// Inference executor (native rust or PJRT).
+    pub backend: BackendKind,
 }
 
 impl Default for ServeConfig {
@@ -62,6 +66,7 @@ impl Default for ServeConfig {
             result_bytes: 64.0 * 1024.0,
             link: Site::Remote.link(),
             seed: 0xE2E,
+            backend: BackendKind::default(),
         }
     }
 }
@@ -132,6 +137,7 @@ pub struct ServeEngine {
     workers: Vec<JoinHandle<()>>,
     infer_thread: Option<JoinHandle<()>>,
     shared: Arc<Shared>,
+    input_dim: usize,
     pub config: ServeConfig,
 }
 
@@ -160,18 +166,20 @@ impl ServeEngine {
         });
         shared.store.seed_object("model", config.model_bytes);
 
-        // Inference thread: owns all PJRT state.
+        // Inference thread: owns all model state (PJRT state is not
+        // `Send`; the native backend follows the same discipline).
         let (infer_tx, infer_rx) = channel::<InferJob>();
-        let (ready_tx, ready_rx) = channel::<Result<usize>>();
+        let (ready_tx, ready_rx) = channel::<Result<(usize, usize)>>();
         let max_batch_cfg = config.max_batch;
         let window = config.batch_window;
+        let backend = config.backend;
         let infer_thread = std::thread::Builder::new()
             .name("inference".into())
             .spawn(move || {
-                inference_loop(artifacts_dir, infer_rx, ready_tx, max_batch_cfg, window)
+                inference_loop(artifacts_dir, backend, infer_rx, ready_tx, max_batch_cfg, window)
             })
             .context("spawning inference thread")?;
-        let _max_batch = ready_rx
+        let (_max_batch, input_dim) = ready_rx
             .recv()
             .context("inference thread died before ready")??;
 
@@ -198,8 +206,16 @@ impl ServeEngine {
             workers,
             infer_thread: Some(infer_thread),
             shared,
+            input_dim,
             config,
         })
+    }
+
+    /// Feature width of one request row (the loaded manifest's
+    /// `input_dim`) — callers generating synthetic traffic should size
+    /// rows with this instead of hard-coding the paper model's 3072.
+    pub fn input_dim(&self) -> usize {
+        self.input_dim
     }
 
     /// Submit one request; returns the channel the outcome arrives on.
@@ -284,14 +300,15 @@ impl ServeEngine {
 
 fn inference_loop(
     artifacts_dir: PathBuf,
+    backend: BackendKind,
     rx: Receiver<InferJob>,
-    ready: Sender<Result<usize>>,
+    ready: Sender<Result<(usize, usize)>>,
     max_batch_cfg: usize,
     window: Duration,
 ) {
-    let mut rt = match ClassifierRuntime::load(&artifacts_dir) {
+    let mut rt = match ClassifierRuntime::load_with(&artifacts_dir, backend) {
         Ok(rt) => {
-            let _ = ready.send(Ok(rt.max_batch()));
+            let _ = ready.send(Ok((rt.max_batch(), rt.manifest.input_dim)));
             rt
         }
         Err(e) => {

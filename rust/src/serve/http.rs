@@ -5,8 +5,8 @@
 //! pipeline (freshen-accelerated), and operational state is inspectable.
 //!
 //! Routes:
-//! - `POST /classify` — body `{"image": [3072 floats]}` (or empty for a
-//!   deterministic test image). Returns logits + latency.
+//! - `POST /classify` — body `{"image": [input_dim floats]}` (or empty
+//!   for a deterministic test image). Returns logits + latency.
 //! - `POST /freshen` — run the freshen hook now (returns 202).
 //! - `GET /stats` — the engine's aggregate report as JSON.
 //! - `GET /healthz` — liveness.
@@ -195,7 +195,7 @@ fn handle_connection(stream: TcpStream, engine: &ServeEngine) -> Result<()> {
         }
         ("POST", "/classify") => {
             let image: Vec<f32> = if req.body.is_empty() {
-                (0..3072).map(|j| (j % 23) as f32 / 23.0).collect()
+                (0..engine.input_dim()).map(|j| (j % 23) as f32 / 23.0).collect()
             } else {
                 let text = String::from_utf8_lossy(&req.body);
                 match Json::parse(&text)

@@ -1,0 +1,62 @@
+"""Generate the checked-in tiny_manifest fixture for rust weight-loading tests.
+
+Independent of rust/src/nn/gen.rs: values come from numpy, check numerics
+from a float64 naive forward — the rust native backend must reproduce them
+within the manifest contract (1e-3 classifier, 1e-4 predictor).
+"""
+import json, os
+import numpy as np
+
+out = os.path.dirname(os.path.abspath(__file__))
+rng = np.random.default_rng(20260801)
+dims = [(8, 6), (6, 3)]
+MEAN, STD = 0.5, 0.25
+
+layers, params = [], []
+for i, (din, dout) in enumerate(dims):
+    w = (rng.standard_normal((din, dout)) * np.sqrt(2.0 / din)).astype("<f4")
+    b = rng.uniform(-0.05, 0.05, dout).astype("<f4")
+    w.tofile(os.path.join(out, f"layer{i}.w.bin"))
+    b.tofile(os.path.join(out, f"layer{i}.b.bin"))
+    params.append((w, b))
+    layers.append({"in": din, "out": dout, "relu": i < len(dims) - 1,
+                   "weights": f"layer{i}.w.bin", "bias": f"layer{i}.b.bin"})
+
+def forward(row):
+    h = (np.asarray(row, dtype=np.float64) - MEAN) / STD
+    for i, (w, b) in enumerate(params):
+        h = h @ w.astype(np.float64) + b.astype(np.float64)
+        if i < len(params) - 1:
+            h = np.maximum(h, 0.0)
+    return h
+
+probe = np.linspace(-1.0, 1.0, 8, dtype=np.float32)
+logits = forward(probe)
+
+PRED_W = np.array([3.2, 1.8, 0.9, -0.6])
+PRED_B = -2.0
+feats = [[0.9, 0.8, 0.7, 0.3], [0.0, 0.0, 0.0, 0.0]]
+scores = [float(1.0 / (1.0 + np.exp(-(np.dot(f, PRED_W) + PRED_B)))) for f in feats]
+
+manifest = {
+    "generator": "python/tests fixture (make_fixture.py)",
+    "input_dim": 8, "classes": 3, "hidden": [6],
+    "batches": [1, 2], "predictor_batch": 4,
+    "predictor_weights": PRED_W.tolist(), "predictor_bias": PRED_B,
+    "artifacts": {},
+    "check": {
+        "classifier_input": "linspace(-1,1,8)",
+        "classifier_logits_b1": [float(v) for v in logits],
+        "predictor_feats": feats,
+        "predictor_scores": scores,
+    },
+    "weights": {"format": "f32-le",
+                 "normalize": {"mean": MEAN, "std": STD},
+                 "layers": layers},
+}
+with open(os.path.join(out, "manifest.json"), "w") as f:
+    json.dump(manifest, f, indent=2)
+    f.write("\n")
+print("logits:", logits)
+print("scores:", scores)
+print("files:", sorted(os.listdir(out)))

@@ -1,0 +1,181 @@
+//! Always-on native-backend tests: no `make artifacts`, no PJRT, no
+//! registry access. Artifact sets are generated in-test by
+//! `nn::gen::generate` (or loaded from the checked-in
+//! `tests/fixtures/tiny_manifest`, whose blobs and check numerics were
+//! produced independently by numpy — see `make_fixture.py` there), so the
+//! full generate → check → serve path runs in every checkout and CI.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use freshen_rs::nn::gen::{self, GenSpec};
+use freshen_rs::nn::Mlp;
+use freshen_rs::runtime::backend::BackendKind;
+use freshen_rs::runtime::manifest::Manifest;
+use freshen_rs::runtime::model::{ClassifierRuntime, PredictorRuntime};
+use freshen_rs::serve::{ServeConfig, ServeEngine};
+
+fn fixture_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_manifest")
+}
+
+/// Generate a fresh artifact set under a unique temp dir.
+fn gen_dir(name: &str, spec: &GenSpec) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("freshen-native-it-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    gen::generate(&dir, spec).expect("generate artifact set");
+    dir
+}
+
+#[test]
+fn checked_in_fixture_passes_both_self_checks() {
+    // The fixture's check numerics come from numpy float64 — the native
+    // f32 kernels must reproduce them within the manifest contract.
+    let dir = fixture_dir();
+    let mut c = ClassifierRuntime::load(&dir).expect("load fixture classifier");
+    assert_eq!(c.kind, BackendKind::Native);
+    assert_eq!(c.platform_name(), "native-rust");
+    let err = c.self_check().expect("classifier self-check");
+    assert!(err < 1e-3, "classifier err {err}");
+    let mut p = PredictorRuntime::load(&dir).expect("load fixture predictor");
+    let err = p.self_check().expect("predictor self-check");
+    assert!(err < 1e-4, "predictor err {err}");
+}
+
+#[test]
+fn fixture_weights_load_into_the_expected_shape() {
+    let m = Manifest::load(&fixture_dir()).unwrap();
+    let spec = m.weights.as_ref().expect("fixture has a weights section");
+    assert_eq!(spec.layers.len(), 2);
+    assert_eq!(spec.mean, 0.5);
+    let mlp = Mlp::load(&m).unwrap();
+    assert_eq!(mlp.input_dim(), 8);
+    assert_eq!(mlp.output_dim(), 3);
+    assert!(mlp.layers[0].relu && !mlp.layers[1].relu);
+}
+
+#[test]
+fn generated_set_serves_every_batch_and_matches_reference() {
+    let spec = GenSpec::tiny();
+    let dir = gen_dir("batches", &spec);
+    let mut rt = ClassifierRuntime::load(&dir).unwrap();
+    let dim = rt.manifest.input_dim;
+    let classes = rt.manifest.classes;
+    let mlp = Mlp::load(&rt.manifest).unwrap();
+    for n in [1usize, 2, 3, 4] {
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|i| {
+                (0..dim)
+                    .map(|j| ((i * 31 + j) % 17) as f32 / 17.0 - 0.3)
+                    .collect()
+            })
+            .collect();
+        let out = rt.infer(&rows).unwrap();
+        assert_eq!(out.len(), n);
+        for (row, got) in rows.iter().zip(out.iter()) {
+            assert_eq!(got.len(), classes);
+            let want = mlp.forward_reference(row);
+            for (a, b) in got.iter().zip(want.iter()) {
+                assert!((*a as f64 - b).abs() < 1e-4, "{a} vs reference {b}");
+            }
+        }
+        // Pad-to-AOT-batch must not change row 0's logits.
+        let single = rt.infer(&rows[..1]).unwrap();
+        for (a, b) in single[0].iter().zip(out[0].iter()) {
+            assert!((a - b).abs() < 1e-6, "batch-size-dependent result");
+        }
+    }
+    assert!(rt.rows_served > 0 && rt.executions > 0);
+}
+
+#[test]
+fn oversized_batches_chunk_instead_of_erroring() {
+    // Regression: `infer` used to bail when rows.len() > max_batch.
+    let spec = GenSpec::tiny(); // max AOT batch 4
+    let dir = gen_dir("chunking", &spec);
+    let mut rt = ClassifierRuntime::load(&dir).unwrap();
+    assert_eq!(rt.max_batch(), 4);
+    let dim = rt.manifest.input_dim;
+    let n = 11; // chunks of 4 + 4 + 3
+    let rows: Vec<Vec<f32>> = (0..n)
+        .map(|i| (0..dim).map(|j| ((i * 13 + j) % 19) as f32 / 19.0).collect())
+        .collect();
+    let out = rt.infer(&rows).unwrap();
+    assert_eq!(out.len(), n);
+    assert_eq!(rt.executions, 3, "11 rows over max_batch 4 = 3 executions");
+    assert_eq!(rt.rows_served, 11);
+    assert_eq!(rt.padded_rows, 1, "the 3-row tail pads to batch 4");
+    // Every chunked row matches its individually-inferred logits.
+    for (i, row) in rows.iter().enumerate() {
+        let single = rt.infer(std::slice::from_ref(row)).unwrap();
+        for (a, b) in single[0].iter().zip(out[i].iter()) {
+            assert!((a - b).abs() < 1e-6, "row {i} changed under chunking");
+        }
+    }
+}
+
+#[test]
+fn serve_engine_runs_end_to_end_on_the_native_backend() {
+    let dir = gen_dir("serve", &GenSpec::tiny());
+    let engine = ServeEngine::start(
+        dir,
+        ServeConfig {
+            workers: 2,
+            freshen: true,
+            time_scale: 0.001,
+            prefetch_ttl_s: 120.0,
+            backend: BackendKind::Native,
+            ..ServeConfig::default()
+        },
+    )
+    .expect("start engine on native backend");
+    assert_eq!(engine.input_dim(), 32, "engine reports the manifest's dim");
+    engine.freshen().join().ok();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            engine.submit(
+                (0..32)
+                    .map(|j| ((i * 7 + j) % 11) as f32 / 11.0)
+                    .collect(),
+            )
+        })
+        .collect();
+    for rx in rxs {
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("request served");
+        assert_eq!(out.logits.len(), 5);
+        assert!(out.logits.iter().all(|v| v.is_finite()));
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.requests, 8);
+    assert!(report.store_puts >= 8);
+}
+
+#[test]
+fn cli_gen_check_serve_cycle_is_offline_clean() {
+    // The acceptance path: `repro gen-artifacts` → `repro check-artifacts`
+    // → `repro serve`, all in the default build (xla stub, no python).
+    let dir = std::env::temp_dir().join("freshen-native-it-cli");
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = dir.to_str().unwrap().to_string();
+    let run = |args: &[&str]| {
+        freshen_rs::cli::run(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    };
+    run(&["gen-artifacts", &d, "--tiny"]).expect("gen-artifacts");
+    run(&["check-artifacts", "--artifacts", &d]).expect("check-artifacts");
+    run(&["serve", "--artifacts", &d, "--requests", "6"]).expect("serve freshen");
+    run(&["serve", "--artifacts", &d, "--requests", "4", "--no-freshen"])
+        .expect("serve baseline");
+}
+
+#[test]
+fn pjrt_backend_is_selectable_but_unavailable_on_the_stub() {
+    let dir = gen_dir("pjrt", &GenSpec::tiny());
+    let err = ClassifierRuntime::load_with(&dir, BackendKind::Pjrt).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("unavailable"),
+        "stub should explain PJRT is unavailable: {msg}"
+    );
+}

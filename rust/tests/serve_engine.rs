@@ -18,11 +18,19 @@ fn serial() -> MutexGuard<'static, ()> {
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
+    if !dir.join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
-        None
+        return None;
+    }
+    // The engine defaults to the native backend; artifact sets written
+    // before the weights sidecar existed can only serve PJRT, so skip
+    // rather than fail on them.
+    match freshen_rs::runtime::manifest::Manifest::load(&dir) {
+        Ok(m) if m.weights.is_some() => Some(dir),
+        _ => {
+            eprintln!("skipping: artifacts lack the weights sidecar; re-run `make artifacts`");
+            None
+        }
     }
 }
 
