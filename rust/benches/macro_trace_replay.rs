@@ -1,0 +1,99 @@
+//! Bench: Azure-trace macro pipeline — ingest throughput (rows/s and
+//! invocation-counts/s through the streaming CSV reader) and replay
+//! throughput (simulated invocations/s through the full platform), serial
+//! vs sharded, plus the end-to-end `azure-macro` grid rate.
+
+use std::io::BufWriter;
+
+use freshen_rs::experiments::SweepRunner;
+use freshen_rs::testkit::bench::{throughput, time_once};
+use freshen_rs::workload::macrotrace::ingest::AzureTraceReader;
+use freshen_rs::workload::macrotrace::replay::ReplayCfg;
+use freshen_rs::workload::macrotrace::shard::{replay_sharded, TraceSource};
+use freshen_rs::workload::macrotrace::synth::{write_csv, SynthTraceCfg};
+
+fn bench_cfg() -> SynthTraceCfg {
+    SynthTraceCfg {
+        apps: 220,
+        minutes: 45,
+        seed: 0xBE7C,
+        ..SynthTraceCfg::default()
+    }
+}
+
+fn main() {
+    let synth = bench_cfg();
+    let dir = std::env::temp_dir().join("freshen-macro-trace-bench");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let path = dir.join("azure.csv");
+
+    // --- synthesis + CSV write ---------------------------------------
+    let (summary, elapsed) = time_once(|| {
+        let file = std::fs::File::create(&path).expect("create bench trace");
+        write_csv(&synth, BufWriter::new(file)).expect("write bench trace")
+    });
+    let bytes = std::fs::metadata(&path).expect("trace written").len();
+    println!(
+        "synth+write: {} rows / {} invocations ({:.1} MB) in {elapsed:?}  \
+         ({:.0} rows/s)",
+        summary.functions,
+        summary.invocations,
+        bytes as f64 / 1e6,
+        throughput(summary.functions, elapsed)
+    );
+
+    // --- streaming ingest --------------------------------------------
+    let (counted, elapsed) = time_once(|| {
+        let mut reader = AzureTraceReader::open(&path).expect("open bench trace");
+        let mut rows = 0u64;
+        let mut invocations = 0u64;
+        for row in reader.by_ref() {
+            rows += 1;
+            invocations += row.invocations();
+        }
+        assert_eq!(reader.skipped(), 0);
+        (rows, invocations)
+    });
+    assert_eq!(counted.0, summary.functions);
+    println!(
+        "ingest: {} rows in {elapsed:?}  ({:.0} rows/s, {:.2}M counts/s)",
+        counted.0,
+        throughput(counted.0, elapsed),
+        throughput(counted.0 * synth.minutes as u64, elapsed) / 1e6
+    );
+
+    // --- replay: serial vs sharded -----------------------------------
+    let src = TraceSource::Csv(path);
+    let cfg = ReplayCfg {
+        warmup_minutes: 8,
+        ..ReplayCfg::default()
+    };
+    let (serial, serial_elapsed) = time_once(|| {
+        replay_sharded(&src, 1, &cfg, &SweepRunner::new(1)).expect("serial replay")
+    });
+    let serial_rate = throughput(serial.metrics.invocations, serial_elapsed);
+    println!(
+        "replay serial   (1 shard,  1 worker):  {} invocations, {} sim events in \
+         {serial_elapsed:?}  ({serial_rate:.0} inv/s)",
+        serial.metrics.invocations, serial.metrics.sim_events
+    );
+    for (shards, workers) in [(4usize, 4usize), (8, 8)] {
+        let (sharded, elapsed) = time_once(|| {
+            replay_sharded(&src, shards, &cfg, &SweepRunner::new(workers))
+                .expect("sharded replay")
+        });
+        assert_eq!(
+            serial.metrics.digest(),
+            sharded.metrics.digest(),
+            "sharded replay must be byte-identical to serial"
+        );
+        let rate = throughput(sharded.metrics.invocations, elapsed);
+        println!(
+            "replay sharded ({shards} shards, {workers} workers): {} invocations in \
+             {elapsed:?}  ({rate:.0} inv/s, x{:.2} vs serial)",
+            sharded.metrics.invocations,
+            rate / serial_rate.max(1e-9)
+        );
+    }
+}

@@ -8,7 +8,12 @@
 //! - `check-artifacts` — load the artifacts and run the AOT self-checks.
 //! - `gen-artifacts` — write a native artifact set (manifest + weight
 //!   sidecars) entirely in rust, so serve/check work offline.
-//! - `trace <file>` — replay a JSON-lines invocation trace on the sim.
+//! - `trace <file>` — replay a JSON-lines invocation trace on the sim
+//!   (streamed: records schedule as they are read).
+//! - `azure-macro` — the platform-scale Azure-trace macro benchmark:
+//!   deterministic sharded replay of a real or synthesized trace.
+//! - `gen-azure-trace <out.csv>` — write a synthetic Azure-2019-schema
+//!   trace CSV for offline macro runs.
 //!
 //! No `clap` offline; this is a small hand-rolled parser with `--key value`
 //! options.
@@ -19,6 +24,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::experiments::azure_macro::{self, AzureMacroCfg, Variant};
 use crate::experiments::harness::parse_seed_spec;
 use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1, SweepRunner};
 use crate::platform::exec::invoke;
@@ -28,6 +34,8 @@ use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
 use crate::util::config::Config;
 use crate::util::json::Json;
+use crate::workload::macrotrace::shard::TraceSource;
+use crate::workload::macrotrace::synth::SynthTraceCfg;
 
 pub const USAGE: &str = "\
 freshen-rs repro — proactive serverless function resource management
@@ -36,9 +44,17 @@ USAGE:
   repro experiment <fig2|table1|fig4|fig5|fig6|e2e|baselines|prediction|ablations|all>
                    [--seed N] [--runs N] [--gap SECONDS]
                    [--seeds N|a..b|a..=b] [--parallel N]
-                   # --seeds sweeps every experiment except fig2 over a
-                   # seed grid on --parallel worker threads; merged output is
+                   # --seeds sweeps every experiment over a seed grid on
+                   # --parallel worker threads; merged output is
                    # deterministic (identical for any --parallel value)
+  repro azure-macro [--trace <file.csv|synth>] [--shards N] [--parallel N]
+                    [--seeds N|a..b|a..=b] [--warmup-min N]
+                    [--variants baseline,hist,chain,both]
+                    [--apps N] [--minutes N] [--trace-seed N]  # synth knobs
+                    # platform-scale Azure-trace macro benchmark; the
+                    # merged metrics are byte-identical for ANY
+                    # --shards x --parallel combination
+  repro gen-azure-trace <out.csv> [--apps N] [--minutes N] [--seed N]
   repro serve [--requests N] [--artifacts DIR] [--no-freshen]
               [--backend native|pjrt]  # executor: pure-rust nn (default) or PJRT
               [--listen ADDR]          # HTTP mode: POST /classify, /freshen; GET /stats
@@ -114,6 +130,8 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("gen-artifacts") => gen_artifacts(&opts),
         Some("trace") => trace(&opts),
         Some("gen-trace") => gen_trace(&opts),
+        Some("azure-macro") => azure_macro_cmd(&opts),
+        Some("gen-azure-trace") => gen_azure_trace(&opts),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -138,7 +156,7 @@ fn experiment(opts: &Opts) -> Result<()> {
     };
     let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
     match id {
-        "fig2" => fig2::run(seed).print(),
+        "fig2" => fig2::run_multi(&seeds, &runner).print(),
         "table1" => {
             table1::run_multi(opts.u64("runs", 20_000) as usize, &seeds, &runner).print()
         }
@@ -177,7 +195,7 @@ fn experiment(opts: &Opts) -> Result<()> {
             ));
         }
         "all" => {
-            fig2::run(seed).print();
+            fig2::run_multi(&seeds, &runner).print();
             table1::run_multi(opts.u64("runs", 20_000) as usize, &seeds, &runner).print();
             fig4::run_multi(&seeds, &runner).print();
             fig5_6::run_multi(fig5_6::Placement::Cloud, &seeds, &runner).print();
@@ -318,10 +336,6 @@ fn gen_artifacts(opts: &Opts) -> Result<()> {
 fn trace(opts: &Opts) -> Result<()> {
     let path = opts.positional.get(1).context("trace file required")?;
     let file = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
-    let (records, skipped) = crate::workload::trace::read_trace(std::io::BufReader::new(file));
-    if skipped > 0 {
-        eprintln!("warning: skipped {skipped} malformed lines");
-    }
     let config = match opts.flags.get("config") {
         Some(p) => {
             let text = std::fs::read_to_string(p)?;
@@ -337,24 +351,33 @@ fn trace(opts: &Opts) -> Result<()> {
     );
     ep.store.put("ID1", 5e6, crate::util::time::SimTime::ZERO);
     world.add_endpoint(ep);
-    let mut fns: Vec<String> = records.iter().map(|r| r.function.clone()).collect();
-    fns.sort();
-    fns.dedup();
-    for f in &fns {
-        world.deploy(crate::platform::function::FunctionSpec::paper_lambda(
-            f,
-            "traced",
-            "store",
-            crate::util::time::SimDuration::from_millis(20),
-        ));
-    }
+    // Stream the trace straight into the scheduler: one line in memory at
+    // a time, functions deployed on first sight. (`schedule_at` accepts
+    // any future time, so file order needs no sorting pass.)
     let mut sim: Sim<World> = Sim::new();
     sim.max_events = 200_000_000;
-    for rec in &records {
-        let f = rec.function.clone();
+    let mut reader =
+        crate::workload::trace::TraceReader::new(std::io::BufReader::new(file));
+    let mut fns = std::collections::HashSet::new();
+    for rec in reader.by_ref() {
+        if fns.insert(rec.function.clone()) {
+            world.deploy(crate::platform::function::FunctionSpec::paper_lambda(
+                &rec.function,
+                "traced",
+                "store",
+                crate::util::time::SimDuration::from_millis(20),
+            ));
+        }
+        let f = rec.function;
         sim.schedule_at(rec.at, move |sim, w| {
             invoke(sim, w, &f);
         });
+    }
+    if let Some(e) = reader.io_error() {
+        bail!("reading {path}: {e}");
+    }
+    if reader.skipped() > 0 {
+        eprintln!("warning: skipped {} malformed lines", reader.skipped());
     }
     sim.run(&mut world);
     println!(
@@ -408,6 +431,65 @@ fn gen_trace(opts: &Opts) -> Result<()> {
     println!(
         "wrote {} invocations over {functions} functions to {path}",
         records.len()
+    );
+    Ok(())
+}
+
+/// Synth-trace knobs shared by `azure-macro --trace synth` and
+/// `gen-azure-trace`; `seed_key` names the flag carrying the trace seed
+/// (the benchmark reserves `--seeds` for the replay seed grid).
+fn synth_cfg(opts: &Opts, seed_key: &str) -> SynthTraceCfg {
+    let mut cfg = SynthTraceCfg::default();
+    cfg.apps = opts.u64("apps", cfg.apps as u64) as usize;
+    cfg.minutes = opts.u64("minutes", cfg.minutes as u64) as usize;
+    cfg.seed = opts.u64(seed_key, cfg.seed);
+    cfg
+}
+
+fn azure_macro_cmd(opts: &Opts) -> Result<()> {
+    let trace = opts.str("trace", "synth");
+    let source = if trace == "synth" {
+        TraceSource::Synth(synth_cfg(opts, "trace-seed"))
+    } else {
+        TraceSource::Csv(PathBuf::from(trace))
+    };
+    let mut cfg = AzureMacroCfg::new(source);
+    cfg.shards = opts.u64("shards", cfg.shards as u64) as usize;
+    cfg.warmup_minutes = opts.u64("warmup-min", cfg.warmup_minutes as u64) as usize;
+    if let Some(list) = opts.flags.get("variants") {
+        cfg.variants = list
+            .split(',')
+            .map(|v| {
+                Variant::parse(v.trim()).with_context(|| {
+                    format!("unknown variant '{v}' (use baseline|hist|chain|both)")
+                })
+            })
+            .collect::<Result<Vec<Variant>>>()?;
+        if cfg.variants.is_empty() {
+            bail!("--variants must name at least one variant");
+        }
+    }
+    let seeds: Vec<u64> = match opts.flags.get("seeds") {
+        Some(spec) => parse_seed_spec(spec)
+            .with_context(|| format!("bad --seeds '{spec}' (forms: N, a..b, a..=b)"))?,
+        None => vec![opts.u64("seed", 2020)],
+    };
+    let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
+    azure_macro::run_multi(&cfg, &seeds, &runner)?.print();
+    Ok(())
+}
+
+fn gen_azure_trace(opts: &Opts) -> Result<()> {
+    let path = opts.positional.get(1).context("output file required")?;
+    let cfg = synth_cfg(opts, "seed");
+    let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    let summary = crate::workload::macrotrace::synth::write_csv(
+        &cfg,
+        std::io::BufWriter::new(file),
+    )?;
+    println!(
+        "wrote {} invocations over {} functions / {} apps ({} minutes, seed {:#x}) to {path}",
+        summary.invocations, summary.functions, summary.apps, cfg.minutes, cfg.seed
     );
     Ok(())
 }
@@ -493,6 +575,73 @@ mod tests {
         assert!(run(&gen).is_ok(), "gen-artifacts --tiny DIR failed");
         let m = crate::runtime::manifest::Manifest::load(&dir).expect("set written to DIR");
         assert_eq!(m.input_dim, 32, "tiny spec applied");
+    }
+
+    #[test]
+    fn gen_azure_trace_then_macro_replay_from_csv() {
+        let dir = std::env::temp_dir().join("freshen-cli-azure-macro");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv = dir.join("azure.csv").to_str().unwrap().to_string();
+        let gen: Vec<String> = vec![
+            "gen-azure-trace".into(),
+            csv.clone(),
+            "--apps".into(),
+            "12".into(),
+            "--minutes".into(),
+            "8".into(),
+            "--seed".into(),
+            "5".into(),
+        ];
+        assert!(run(&gen).is_ok(), "gen-azure-trace failed");
+        let replay: Vec<String> = vec![
+            "azure-macro".into(),
+            "--trace".into(),
+            csv,
+            "--shards".into(),
+            "2".into(),
+            "--parallel".into(),
+            "2".into(),
+            "--warmup-min".into(),
+            "2".into(),
+            "--variants".into(),
+            "baseline,both".into(),
+        ];
+        assert!(run(&replay).is_ok(), "azure-macro replay failed");
+    }
+
+    #[test]
+    fn azure_macro_synth_source_and_bad_variant() {
+        let ok: Vec<String> = vec![
+            "azure-macro".into(),
+            "--apps".into(),
+            "10".into(),
+            "--minutes".into(),
+            "6".into(),
+            "--shards".into(),
+            "2".into(),
+            "--warmup-min".into(),
+            "2".into(),
+            "--variants".into(),
+            "baseline".into(),
+        ];
+        assert!(run(&ok).is_ok(), "synth azure-macro failed");
+        let bad: Vec<String> = vec![
+            "azure-macro".into(),
+            "--apps".into(),
+            "4".into(),
+            "--minutes".into(),
+            "4".into(),
+            "--variants".into(),
+            "bogus".into(),
+        ];
+        assert!(run(&bad).is_err(), "unknown variant must error");
+        let missing: Vec<String> = vec![
+            "azure-macro".into(),
+            "--trace".into(),
+            "/nonexistent/azure.csv".into(),
+        ];
+        assert!(run(&missing).is_err(), "missing trace file must error");
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! `azure-macro` — the platform-scale Azure-trace macro benchmark.
+//!
+//! Replays an Azure-Functions-shaped trace (a real CSV or the offline
+//! synthesizer) through the full platform under the paper's ablation axes:
+//! freshen off (`baseline`) and freshen on with histogram-only /
+//! chain-only / combined prediction. Reports the metrics the literature
+//! compares on — cold-start rate, p50/p99 end-to-end latency, freshen hit
+//! rate, and the wasted-freshen fraction — per variant, merged across
+//! shards and seeds.
+//!
+//! The grid is **shard-major**: each [`SweepRunner`] worker gathers its
+//! shard's rows ONCE (one streaming pass over a CSV, or direct synthesis
+//! of its apps) and replays that slice under every `(variant × seed)`
+//! combination — a real 1440-minute trace is scanned `shards` times total,
+//! not `variants × seeds × shards` times. Parallelism therefore tops out
+//! at `--shards`; run with `--shards >= --parallel`. Merges follow the
+//! macrotrace determinism contract: byte-identical output for any
+//! `--shards` × `--parallel` combination (regression-tested in
+//! `tests/azure_macro_determinism.rs`).
+
+use anyhow::Result;
+
+use crate::experiments::harness::SweepRunner;
+use crate::experiments::print_table;
+use crate::workload::macrotrace::replay::{replay_app, MacroMetrics, PredictorPolicy, ReplayCfg};
+use crate::workload::macrotrace::shard::{load_shard_apps, TraceSource};
+
+/// One benchmark variant: a freshen switch + predictor policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Vanilla platform, freshen off.
+    Baseline,
+    /// Freshen admitted by IAT-histogram predictions only.
+    Histogram,
+    /// Freshen admitted by explicit-chain predictions only.
+    Chain,
+    /// The full system: both prediction sources.
+    Both,
+}
+
+impl Variant {
+    pub fn all() -> [Variant; 4] {
+        [Variant::Baseline, Variant::Histogram, Variant::Chain, Variant::Both]
+    }
+
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "baseline" | "off" => Some(Variant::Baseline),
+            "hist" | "histogram" => Some(Variant::Histogram),
+            "chain" => Some(Variant::Chain),
+            "both" | "full" => Some(Variant::Both),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Baseline => "baseline",
+            Variant::Histogram => "hist",
+            Variant::Chain => "chain",
+            Variant::Both => "both",
+        }
+    }
+
+    fn policy(&self) -> PredictorPolicy {
+        match self {
+            Variant::Baseline => PredictorPolicy::None,
+            Variant::Histogram => PredictorPolicy::Histogram,
+            Variant::Chain => PredictorPolicy::Chain,
+            Variant::Both => PredictorPolicy::Both,
+        }
+    }
+
+    fn freshen_enabled(&self) -> bool {
+        !matches!(self, Variant::Baseline)
+    }
+
+    /// The replay configuration this variant runs under.
+    pub fn replay_cfg(&self, seed: u64, warmup_minutes: usize) -> ReplayCfg {
+        let mut cfg = ReplayCfg::default();
+        cfg.base.freshen.enabled = self.freshen_enabled();
+        cfg.policy = self.policy();
+        cfg.seed = seed;
+        cfg.warmup_minutes = warmup_minutes;
+        cfg
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct AzureMacroCfg {
+    pub source: TraceSource,
+    pub shards: usize,
+    pub warmup_minutes: usize,
+    pub variants: Vec<Variant>,
+}
+
+impl AzureMacroCfg {
+    pub fn new(source: TraceSource) -> AzureMacroCfg {
+        AzureMacroCfg {
+            source,
+            shards: 4,
+            warmup_minutes: 10,
+            variants: Variant::all().to_vec(),
+        }
+    }
+}
+
+/// The merged benchmark result.
+#[derive(Debug, Clone)]
+pub struct AzureMacro {
+    /// Per-variant metrics, merged across shards and seeds.
+    pub variants: Vec<(Variant, MacroMetrics)>,
+    pub shards: usize,
+    pub seeds: Vec<u64>,
+    /// Rows in one pass over the trace (and malformed rows skipped).
+    pub trace_rows: u64,
+    pub skipped_rows: u64,
+}
+
+/// One shard worker's output: per-variant metrics (seeds merged in), the
+/// shard's row count, and the scan's skip count.
+struct ShardSlice {
+    per_variant: Vec<MacroMetrics>,
+    rows: u64,
+    skipped: u64,
+}
+
+/// Run the benchmark. Shard-major: each worker ingests its shard once and
+/// replays it under every `(variant × seed)`; shard slices then merge per
+/// variant in shard order (commutative sums — any order gives the bytes).
+pub fn run_multi(
+    cfg: &AzureMacroCfg,
+    seeds: &[u64],
+    runner: &SweepRunner,
+) -> Result<AzureMacro> {
+    assert!(!seeds.is_empty(), "azure-macro needs at least one seed");
+    assert!(!cfg.variants.is_empty(), "azure-macro needs at least one variant");
+    let shards = cfg.shards.max(1);
+    let grid: Vec<usize> = (0..shards).collect();
+    let flat = runner.run(&grid, |_, &shard| -> Result<ShardSlice> {
+        let (apps, skipped) = load_shard_apps(&cfg.source, shard, shards)?;
+        let rows = apps.iter().map(|(_, r)| r.len() as u64).sum();
+        let mut per_variant = vec![MacroMetrics::default(); cfg.variants.len()];
+        for (vi, variant) in cfg.variants.iter().enumerate() {
+            for &seed in seeds {
+                let rcfg = variant.replay_cfg(seed, cfg.warmup_minutes);
+                for (app, app_rows) in &apps {
+                    per_variant[vi].merge(&replay_app(app, app_rows, &rcfg));
+                }
+            }
+        }
+        Ok(ShardSlice {
+            per_variant,
+            rows,
+            skipped,
+        })
+    });
+
+    let mut variants: Vec<(Variant, MacroMetrics)> = cfg
+        .variants
+        .iter()
+        .map(|&v| (v, MacroMetrics::default()))
+        .collect();
+    let mut trace_rows = 0u64;
+    let mut skipped_rows = 0u64;
+    for (shard, slice) in flat.into_iter().enumerate() {
+        let slice = slice?;
+        for (vi, m) in slice.per_variant.iter().enumerate() {
+            variants[vi].1.merge(m);
+        }
+        trace_rows += slice.rows;
+        // Every CSV shard scans (and skip-counts) the whole file; report
+        // the per-scan number once.
+        if shard == 0 {
+            skipped_rows = slice.skipped;
+        }
+    }
+    Ok(AzureMacro {
+        variants,
+        shards,
+        seeds: seeds.to_vec(),
+        trace_rows,
+        skipped_rows,
+    })
+}
+
+impl AzureMacro {
+    /// Canonical fingerprint of the merged metrics (one line per variant)
+    /// — what the determinism regression tests compare byte-for-byte.
+    pub fn digest(&self) -> String {
+        self.variants
+            .iter()
+            .map(|(v, m)| format!("{}: {}", v.as_str(), m.digest()))
+            .collect::<Vec<String>>()
+            .join("\n")
+    }
+
+    pub fn print(&self) {
+        let first = &self.variants[0].1;
+        println!(
+            "\n== azure-macro: {} invocations / {} functions / {} apps per variant, \
+             {} shards, seeds {:?} ==",
+            first.invocations, first.functions, first.apps, self.shards, self.seeds
+        );
+        if self.skipped_rows > 0 {
+            println!("(skipped {} malformed trace rows)", self.skipped_rows);
+        }
+        let rows: Vec<Vec<String>> = self
+            .variants
+            .iter()
+            .map(|(v, m)| {
+                vec![
+                    v.as_str().to_string(),
+                    m.invocations.to_string(),
+                    format!("{:.2}%", 100.0 * m.cold_start_rate()),
+                    format!("{:.1}", m.p50_ms()),
+                    format!("{:.1}", m.p99_ms()),
+                    format!("{:.0}%", 100.0 * m.freshen_hit_rate()),
+                    format!("{:.1}%", 100.0 * m.wasted_freshen_fraction()),
+                    format!("{:.1}MB", m.network_bytes_saved as f64 / 1e6),
+                ]
+            })
+            .collect();
+        print_table(
+            &[
+                "variant",
+                "invocations",
+                "cold rate",
+                "p50 ms",
+                "p99 ms",
+                "fr hits",
+                "fr wasted",
+                "net saved",
+            ],
+            &rows,
+        );
+        let demoted = self
+            .variants
+            .iter()
+            .map(|(_, m)| m.chains_demoted)
+            .max()
+            .unwrap_or(0);
+        if demoted > 0 {
+            println!(
+                "({demoted} apps had non-mirrored chain counts and replayed as \
+                 independent rows)"
+            );
+        }
+        if let Some((_, base)) = self
+            .variants
+            .iter()
+            .find(|(v, _)| *v == Variant::Baseline)
+        {
+            for (v, m) in &self.variants {
+                if *v == Variant::Baseline || m.p50_ms() == 0.0 {
+                    continue;
+                }
+                println!(
+                    "{}: p50 speedup {:.2}x, cold starts {} -> {}",
+                    v.as_str(),
+                    base.p50_ms() / m.p50_ms(),
+                    base.cold_starts,
+                    m.cold_starts
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::macrotrace::synth::SynthTraceCfg;
+
+    fn small_cfg() -> AzureMacroCfg {
+        let mut cfg = AzureMacroCfg::new(TraceSource::Synth(SynthTraceCfg {
+            apps: 24,
+            minutes: 12,
+            seed: 3,
+            ..SynthTraceCfg::default()
+        }));
+        cfg.shards = 2;
+        cfg.warmup_minutes = 3;
+        cfg.variants = vec![Variant::Baseline, Variant::Both];
+        cfg
+    }
+
+    #[test]
+    fn baseline_never_freshens_and_full_system_does() {
+        let r = run_multi(&small_cfg(), &[1], &SweepRunner::new(2)).unwrap();
+        let base = &r.variants[0].1;
+        let both = &r.variants[1].1;
+        assert!(base.invocations > 0);
+        assert_eq!(base.freshens_started, 0);
+        assert!(both.freshens_started > 0);
+        assert!(r.trace_rows > 0);
+        // Every variant replays the same trace volume.
+        assert_eq!(base.functions, both.functions);
+        assert_eq!(base.apps, both.apps);
+    }
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::all() {
+            assert_eq!(Variant::parse(v.as_str()), Some(v));
+        }
+        assert_eq!(Variant::parse("full"), Some(Variant::Both));
+        assert_eq!(Variant::parse("bogus"), None);
+    }
+
+    #[test]
+    fn multi_seed_pools_across_seeds() {
+        let cfg = small_cfg();
+        let one = run_multi(&cfg, &[1], &SweepRunner::new(1)).unwrap();
+        let two = run_multi(&cfg, &[1, 2], &SweepRunner::new(4)).unwrap();
+        assert!(
+            two.variants[0].1.invocations > one.variants[0].1.invocations,
+            "two seeds pool more invocations"
+        );
+        // Trace accounting is per pass, not per grid point.
+        assert_eq!(one.trace_rows, two.trace_rows);
+    }
+}

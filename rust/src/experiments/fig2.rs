@@ -3,11 +3,19 @@
 //! Paper: "8 functions in the median Orchestration case versus 2 functions
 //! in the median case of all", and the derived prediction window "~5.6s in
 //! the extreme case of a linear chain" (8 x ~700 ms median runtime).
+//!
+//! Multi-seed: [`run_multi`] synthesizes one population per seed on a
+//! [`SweepRunner`] and pools the per-app function-count samples in seed
+//! order before computing the CDFs, so the merged figure is deterministic
+//! for any `--parallel`.
 
+use crate::experiments::harness::SweepRunner;
 use crate::experiments::print_table;
 use crate::util::rng::Rng;
 use crate::util::stats::Cdf;
-use crate::workload::azure::{figure2_series, linear_chain_window_s, synthesize, AzurePopulationCfg};
+use crate::workload::azure::{
+    figure2_series, linear_chain_window_from_counts, synthesize, AzurePopulationCfg,
+};
 
 /// The regenerated figure.
 #[derive(Debug, Clone)]
@@ -26,22 +34,39 @@ pub const GRID: [f64; 12] = [
 ];
 
 pub fn run(seed: u64) -> Fig2 {
-    let mut rng = Rng::new(seed);
+    run_multi(&[seed], &SweepRunner::new(1))
+}
+
+/// Multi-seed sweep: one synthesized population per seed, function-count
+/// samples pooled in seed order. Single-seed output is identical to the
+/// historical `run(seed)`.
+pub fn run_multi(seeds: &[u64], runner: &SweepRunner) -> Fig2 {
+    assert!(!seeds.is_empty(), "fig2 needs at least one seed");
     let cfg = AzurePopulationCfg::default();
-    let apps = synthesize(&cfg, &mut rng);
-    let (all, orch) = figure2_series(&apps);
+    let per_seed = runner.run(seeds, |_, &seed| {
+        let mut rng = Rng::new(seed);
+        let apps = synthesize(&cfg, &mut rng);
+        figure2_series(&apps)
+    });
+    let mut all = Vec::new();
+    let mut orch = Vec::new();
+    for (a, o) in per_seed {
+        all.extend(a);
+        orch.extend(o);
+    }
     let cdf_all = Cdf::of(&all);
     let cdf_orch = Cdf::of(&orch);
     let series = GRID
         .iter()
         .map(|&x| (x, cdf_all.at(x), cdf_orch.at(x)))
         .collect();
+    let chain_window_s = linear_chain_window_from_counts(&orch, cfg.median_runtime_s);
     Fig2 {
         series,
         median_all: cdf_all.quantile(50.0),
         median_orch: cdf_orch.quantile(50.0),
-        chain_window_s: linear_chain_window_s(&apps, cfg.median_runtime_s),
-        apps: apps.len(),
+        chain_window_s,
+        apps: all.len(),
     }
 }
 
@@ -73,6 +98,8 @@ impl Fig2 {
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn shape_matches_paper() {
         let f = super::run(2020);
@@ -85,5 +112,17 @@ mod tests {
         }
         let at2 = f.series.iter().find(|(x, _, _)| *x == 2.0).unwrap();
         assert!(at2.1 > at2.2, "all-apps CDF dominates at small counts");
+    }
+
+    #[test]
+    fn multi_seed_is_identical_across_parallelism_and_pools_apps() {
+        let seeds = [2020u64, 2021, 2022];
+        let seq = run_multi(&seeds, &SweepRunner::new(1));
+        let par = run_multi(&seeds, &SweepRunner::new(4));
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+        // Pooled population is seeds x the single-seed population.
+        let single = super::run(2020);
+        assert_eq!(seq.apps, seeds.len() * single.apps);
+        assert!((6.0..=10.0).contains(&seq.median_orch));
     }
 }

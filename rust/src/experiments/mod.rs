@@ -16,6 +16,7 @@
 //! | fig6    | warmed vs cold transfer, edge (~50 ms) link      |
 //! | e2e     | chain workload, freshen on vs off (ours)         |
 //! | abl-*   | lead-time, confidence-gating, TTL ablations      |
+//! | azure-macro | Azure-trace macro benchmark (platform scale) |
 //!
 //! # Multi-seed sweeps
 //!
@@ -34,8 +35,15 @@
 //!
 //! The CLI exposes this as `repro experiment <id> --seeds a..b
 //! --parallel N`.
+//!
+//! [`azure_macro`] extends the contract from "across grid points" to
+//! *within one trace*: a shard-major grid where each worker ingests its
+//! hash-of-app slice once and replays it under every `(variant × seed)`,
+//! merging integer-only metrics — so its output is byte-identical for any
+//! `--shards` × `--parallel` combination.
 
 pub mod ablations;
+pub mod azure_macro;
 pub mod baselines;
 pub mod e2e;
 pub mod fig2;

@@ -1,0 +1,201 @@
+//! Order-independent latency aggregation for sharded replay.
+//!
+//! [`LatencyHist`] is a log-bucketed (HDR-style) histogram over integer
+//! microseconds: 16 linear buckets below 16 µs, then 16 sub-buckets per
+//! power of two (~6% relative resolution) up to `u64::MAX`. Everything in
+//! it is a `u64` count, so [`LatencyHist::merge`] is a bin-wise sum —
+//! commutative and associative — and a metric merged from any partition of
+//! the same underlying samples (1 shard or 8, any worker interleaving) is
+//! **byte-identical**. This is the property the `azure-macro` benchmark's
+//! determinism contract rests on: raw-sample pooling is only deterministic
+//! for a fixed grid order, while binned counts are deterministic for *any*
+//! grouping.
+//!
+//! Quantiles are recovered from the merged bins (bucket midpoint, ~6%
+//! resolution — plenty for p50/p99 reporting at platform scale).
+
+use crate::util::time::SimDuration;
+
+/// Linear buckets below this value (exact single-µs resolution).
+const LINEAR: usize = 16;
+/// Sub-buckets per power of two above the linear range.
+const SUB: usize = 16;
+/// Total buckets: 16 linear + 16 per octave for exponents 4..=63.
+pub const BINS: usize = LINEAR + (64 - 4) * SUB;
+
+/// Log-bucketed latency histogram with order-independent merging.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHist {
+    bins: Vec<u64>,
+    count: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist {
+            bins: vec![0; BINS],
+            count: 0,
+        }
+    }
+}
+
+/// Bucket index for a sample of `us` microseconds.
+fn bucket_of(us: u64) -> usize {
+    if us < LINEAR as u64 {
+        return us as usize;
+    }
+    let exp = 63 - us.leading_zeros() as usize; // floor(log2), >= 4 here
+    let mantissa = ((us >> (exp - 4)) & 0xF) as usize; // top 4 bits after the leading 1
+    (LINEAR + (exp - 4) * SUB + mantissa).min(BINS - 1)
+}
+
+/// Representative (midpoint) value of bucket `idx`, in microseconds.
+fn bucket_mid_us(idx: usize) -> f64 {
+    if idx < LINEAR {
+        return idx as f64; // exact: the bucket holds a single integer value
+    }
+    let exp = (idx - LINEAR) / SUB + 4;
+    let mantissa = ((idx - LINEAR) % SUB) as f64;
+    let base = (2f64).powi(exp as i32);
+    let lo = base * (1.0 + mantissa / SUB as f64);
+    lo + base / (2.0 * SUB as f64)
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist::default()
+    }
+
+    /// Record one sample (microseconds).
+    pub fn record_us(&mut self, us: u64) {
+        self.bins[bucket_of(us)] += 1;
+        self.count += 1;
+    }
+
+    /// Record one duration sample.
+    pub fn record(&mut self, d: SimDuration) {
+        self.record_us(d.micros());
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Bin-wise sum; commutative and associative, so the merged histogram
+    /// is independent of how the samples were partitioned.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Quantile (`q` in `[0, 100]`) in milliseconds, from the bucket
+    /// midpoint. Returns 0 for an empty histogram.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q / 100.0) * (self.count as f64 - 1.0)).round() as u64;
+        let mut acc = 0u64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            if b == 0 {
+                continue;
+            }
+            acc += b;
+            if acc > rank {
+                return bucket_mid_us(i) / 1e3;
+            }
+        }
+        bucket_mid_us(BINS - 1) / 1e3
+    }
+
+    /// Order-insensitive content fingerprint (FxHash-style fold over the
+    /// bins) — what the shard-determinism regression tests compare.
+    pub fn digest(&self) -> u64 {
+        const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        let mut h = self.count;
+        for &b in &self.bins {
+            h = (h.rotate_left(5) ^ b).wrapping_mul(SEED);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for exp in 0..64u32 {
+            let us = 1u64 << exp;
+            for probe in [us, us + us / 3, us + us / 2] {
+                let b = bucket_of(probe);
+                assert!(b < BINS);
+                assert!(b >= prev, "bucket regressed at {probe}");
+                prev = b;
+            }
+        }
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(15), 15);
+        assert_eq!(bucket_of(16), LINEAR);
+        assert_eq!(bucket_of(u64::MAX), BINS - 1);
+    }
+
+    #[test]
+    fn bucket_midpoint_is_within_relative_error() {
+        for us in [20u64, 137, 1_000, 64_000, 1_000_000, 123_456_789] {
+            let mid = bucket_mid_us(bucket_of(us));
+            let rel = (mid - us as f64).abs() / us as f64;
+            assert!(rel < 0.07, "us={us} mid={mid} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn quantiles_track_samples() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000u64 {
+            h.record_us(i * 1000); // 1..1000 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_ms(50.0);
+        let p99 = h.quantile_ms(99.0);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.08, "p50 {p50}");
+        assert!((p99 - 990.0).abs() / 990.0 < 0.08, "p99 {p99}");
+        assert!(p50 < p99);
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        let samples: Vec<u64> = (0..5000u64).map(|i| (i * 2654435761) % 10_000_000).collect();
+        let mut whole = LatencyHist::new();
+        for &s in &samples {
+            whole.record_us(s);
+        }
+        // Partition into 3 odd-sized pieces, merge in a scrambled order.
+        let mut parts = vec![LatencyHist::new(), LatencyHist::new(), LatencyHist::new()];
+        for (i, &s) in samples.iter().enumerate() {
+            parts[i % 3].record_us(s);
+        }
+        let mut merged = LatencyHist::new();
+        for idx in [2usize, 0, 1] {
+            merged.merge(&parts[idx]);
+        }
+        assert_eq!(whole, merged);
+        assert_eq!(whole.digest(), merged.digest());
+    }
+
+    #[test]
+    fn empty_hist_is_safe() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile_ms(50.0), 0.0);
+        assert!(h.is_empty());
+        assert_eq!(h.digest(), LatencyHist::new().digest());
+    }
+}

@@ -2,7 +2,11 @@
 //!
 //! Each invocation contributes an [`InvocationRecord`]; the hub aggregates
 //! per-function latency samples and platform-wide counters. Reports feed
-//! EXPERIMENTS.md and the benches.
+//! EXPERIMENTS.md and the benches. [`hist::LatencyHist`] is the
+//! order-independent (log-bucketed) aggregation the sharded macro-trace
+//! replay merges across workers.
+
+pub mod hist;
 
 use std::collections::HashMap;
 

@@ -72,6 +72,23 @@ impl ChainPredictor {
             e.0 += 1;
         }
     }
+
+    /// Bulk-warmup path for trace replay: credit an edge with `followed`
+    /// follow-throughs out of `total` completions in one map operation,
+    /// instead of `total` individual [`observe_edge`] calls. Used to seed
+    /// chain confidence from the warmup window of a macro trace before
+    /// replay starts.
+    ///
+    /// [`observe_edge`]: ChainPredictor::observe_edge
+    pub fn warm_edge(&mut self, from: &str, to: &str, followed: u64, total: u64) {
+        debug_assert!(followed <= total);
+        let e = self
+            .edges
+            .entry((from.to_string(), to.to_string()))
+            .or_insert((0, 0));
+        e.0 += followed;
+        e.1 += total;
+    }
 }
 
 #[cfg(test)]
@@ -107,6 +124,21 @@ mod tests {
             p.observe_edge("a", "c", true);
         }
         assert!(p.edge_confidence("a", "c") > 0.9);
+    }
+
+    #[test]
+    fn warm_edge_matches_incremental_observes() {
+        let mut bulk = ChainPredictor::new();
+        bulk.warm_edge("a", "b", 7, 10);
+        let mut inc = ChainPredictor::new();
+        for i in 0..10 {
+            inc.observe_edge("a", "b", i < 7);
+        }
+        assert_eq!(bulk.edge_confidence("a", "b"), inc.edge_confidence("a", "b"));
+        // Warmup composes with later live observations.
+        bulk.observe_edge("a", "b", true);
+        inc.observe_edge("a", "b", true);
+        assert_eq!(bulk.edge_confidence("a", "b"), inc.edge_confidence("a", "b"));
     }
 
     #[test]

@@ -65,24 +65,28 @@ fn sample_fn_count(rng: &mut Rng, median: f64, sigma: f64) -> u32 {
     x.round().max(1.0).min(1_000.0) as u32
 }
 
+/// Synthesize a single application with index `i`. Public so the
+/// macro-trace synthesizer (`workload::macrotrace::synth`) can sample app
+/// `i` from its *own* per-app RNG stream — the property that lets every
+/// shard materialise exactly its apps without a shared sequential stream.
+pub fn sample_app(cfg: &AzurePopulationCfg, i: usize, rng: &mut Rng) -> SynthApp {
+    let orchestrated = rng.bernoulli(cfg.orchestration_fraction);
+    let functions = if orchestrated {
+        sample_fn_count(rng, cfg.median_orch, 0.7)
+    } else {
+        sample_fn_count(rng, cfg.median_all, 0.8)
+    };
+    SynthApp {
+        id: format!("app-{i}"),
+        functions,
+        orchestrated,
+        fn_runtime_s: rng.lognormal(cfg.median_runtime_s.ln(), 0.9),
+    }
+}
+
 /// Synthesize the population.
 pub fn synthesize(cfg: &AzurePopulationCfg, rng: &mut Rng) -> Vec<SynthApp> {
-    (0..cfg.apps)
-        .map(|i| {
-            let orchestrated = rng.bernoulli(cfg.orchestration_fraction);
-            let functions = if orchestrated {
-                sample_fn_count(rng, cfg.median_orch, 0.7)
-            } else {
-                sample_fn_count(rng, cfg.median_all, 0.8)
-            };
-            SynthApp {
-                id: format!("app-{i}"),
-                functions,
-                orchestrated,
-                fn_runtime_s: rng.lognormal(cfg.median_runtime_s.ln(), 0.9),
-            }
-        })
-        .collect()
+    (0..cfg.apps).map(|i| sample_app(cfg, i, rng)).collect()
 }
 
 /// The two Figure 2 series: functions/app CDF samples for (all apps,
@@ -97,20 +101,28 @@ pub fn figure2_series(apps: &[SynthApp]) -> (Vec<f64>, Vec<f64>) {
     (all, orch)
 }
 
-/// The paper's headline chain-window estimate: median chain length ×
-/// median runtime ("~5.6s in the extreme case of a linear chain").
+/// The paper's headline chain-window estimate over raw orchestration
+/// chain-length samples: median chain length × median runtime ("~5.6s in
+/// the extreme case of a linear chain"). The upper-median element is used
+/// (not an interpolated percentile) to match the paper's integer chain
+/// length. `fig2::run_multi` pools samples across seeds and calls this.
+pub fn linear_chain_window_from_counts(orch_counts: &[f64], median_runtime_s: f64) -> f64 {
+    if orch_counts.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = orch_counts.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN chain length"));
+    sorted[sorted.len() / 2] * median_runtime_s
+}
+
+/// [`linear_chain_window_from_counts`] over a synthesized population.
 pub fn linear_chain_window_s(apps: &[SynthApp], median_runtime_s: f64) -> f64 {
-    let mut orch: Vec<f64> = apps
+    let orch: Vec<f64> = apps
         .iter()
         .filter(|a| a.orchestrated)
         .map(|a| a.functions as f64)
         .collect();
-    if orch.is_empty() {
-        return 0.0;
-    }
-    orch.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let median_len = orch[orch.len() / 2];
-    median_len * median_runtime_s
+    linear_chain_window_from_counts(&orch, median_runtime_s)
 }
 
 #[cfg(test)]

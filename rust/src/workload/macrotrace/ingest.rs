@@ -1,0 +1,375 @@
+//! Streaming ingestion of Azure-Functions-2019-shaped trace CSVs.
+//!
+//! The Azure Functions 2019 dataset (Shahrad et al. [9]) ships
+//! per-function rows of per-minute invocation counts: hash columns
+//! identifying owner/app/function, a trigger class, then one column per
+//! minute of the day. [`AzureTraceReader`] consumes that shape — plus two
+//! optional columns folding in the companion duration/memory percentile
+//! files — **one row at a time**: the full trace is never materialised in
+//! memory. A row's `Vec<u32>` of counts *is* the compact representation;
+//! expanding counts into individual invocation events only happens lazily,
+//! per app, inside the replay engine.
+//!
+//! Header layout (column order is free; names are matched):
+//!
+//! ```csv
+//! HashApp,HashFunction,Trigger,AvgDurationMs,MemoryMb,1,2,3,...,N
+//! ```
+//!
+//! - `HashApp`, `HashFunction` — required identifiers (any string).
+//! - `HashOwner` — accepted and ignored (the public dataset has it).
+//! - `Trigger` — optional; `orchestration` rows form explicit chains,
+//!   anything else (`http`, `queue`, `storage`, `timer`, ...) is a
+//!   standalone function. Defaults to `http`.
+//! - `AvgDurationMs` (alias `percentile_Average_50`) — optional p50
+//!   execution time; defaults to the paper's ~700 ms median.
+//! - `MemoryMb` (alias `AverageAllocatedMb`) — optional; defaults 256.
+//! - Every remaining column whose header parses as an integer is a
+//!   per-minute invocation-count column, in header order.
+//!
+//! Malformed rows are skipped and counted, mirroring
+//! [`crate::workload::trace::read_trace`]'s lenient contract.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// p50 function execution time when the trace carries no duration column
+/// (the paper reports a ~700 ms median across the Azure population).
+pub const DEFAULT_DURATION_MS: f64 = 700.0;
+/// Allocated memory when the trace carries no memory column.
+pub const DEFAULT_MEMORY_MB: u32 = 256;
+
+/// One function's row: identity, shape, and its per-minute counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRow {
+    pub app: String,
+    pub function: String,
+    /// Trigger class; `"orchestration"` marks explicit-chain membership.
+    pub trigger: String,
+    /// p50 execution time, milliseconds.
+    pub duration_ms: f64,
+    pub memory_mb: u32,
+    /// Invocation count per minute, in trace order.
+    pub counts: Vec<u32>,
+}
+
+impl TraceRow {
+    /// Total invocations across the row's horizon.
+    pub fn invocations(&self) -> u64 {
+        self.counts.iter().map(|&c| c as u64).sum()
+    }
+}
+
+/// Column map resolved from the header line.
+#[derive(Debug, Clone)]
+struct Columns {
+    app: usize,
+    function: usize,
+    trigger: Option<usize>,
+    duration: Option<usize>,
+    memory: Option<usize>,
+    /// Indices of the per-minute count columns, in header order.
+    minutes: Vec<usize>,
+}
+
+fn parse_header(line: &str) -> Result<Columns> {
+    let mut app = None;
+    let mut function = None;
+    let mut trigger = None;
+    let mut duration = None;
+    let mut memory = None;
+    let mut minutes = Vec::new();
+    for (i, raw) in line.split(',').enumerate() {
+        let name = raw.trim();
+        match name {
+            "HashApp" => app = Some(i),
+            "HashFunction" => function = Some(i),
+            "Trigger" => trigger = Some(i),
+            "AvgDurationMs" | "percentile_Average_50" => duration = Some(i),
+            "MemoryMb" | "AverageAllocatedMb" => memory = Some(i),
+            // The public dataset's owner hash and any future metadata
+            // columns are tolerated; integer headers are minute columns.
+            _ => {
+                if name.parse::<u32>().is_ok() {
+                    minutes.push(i);
+                }
+            }
+        }
+    }
+    let app = app.context("trace header is missing a HashApp column")?;
+    let function = function.context("trace header is missing a HashFunction column")?;
+    if minutes.is_empty() {
+        bail!("trace header has no per-minute count columns (integer headers)");
+    }
+    Ok(Columns {
+        app,
+        function,
+        trigger,
+        duration,
+        memory,
+        minutes,
+    })
+}
+
+/// Streaming reader: one [`TraceRow`] in memory at a time.
+///
+/// Iteration ends at EOF *or* on an I/O error; the two are distinguished
+/// by [`io_error`](AzureTraceReader::io_error), which callers that must
+/// not silently truncate (the sharded replay) check after draining.
+pub struct AzureTraceReader<R: BufRead> {
+    src: R,
+    cols: Columns,
+    line: String,
+    fields: Vec<(usize, usize)>, // (start, end) byte ranges per field
+    skipped: usize,
+    rows: u64,
+    io_error: Option<std::io::Error>,
+}
+
+impl AzureTraceReader<BufReader<File>> {
+    /// Open a trace CSV from disk.
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<AzureTraceReader<BufReader<File>>> {
+        let path = path.as_ref();
+        let file = File::open(path)
+            .with_context(|| format!("opening trace {}", path.display()))?;
+        AzureTraceReader::new(BufReader::new(file))
+            .with_context(|| format!("reading trace header of {}", path.display()))
+    }
+}
+
+impl<R: BufRead> AzureTraceReader<R> {
+    /// Parse the header and wrap the source.
+    pub fn new(mut src: R) -> Result<AzureTraceReader<R>> {
+        let mut header = String::new();
+        src.read_line(&mut header).context("reading trace header")?;
+        if header.trim().is_empty() {
+            bail!("empty trace: no header line");
+        }
+        let cols = parse_header(header.trim_end())?;
+        Ok(AzureTraceReader {
+            src,
+            cols,
+            line: String::new(),
+            fields: Vec::new(),
+            skipped: 0,
+            rows: 0,
+            io_error: None,
+        })
+    }
+
+    /// The I/O error that ended iteration early, if any. `None` after a
+    /// clean EOF.
+    pub fn io_error(&self) -> Option<&std::io::Error> {
+        self.io_error.as_ref()
+    }
+
+    /// Minutes per row in this trace.
+    pub fn minutes(&self) -> usize {
+        self.cols.minutes.len()
+    }
+
+    /// Malformed data rows skipped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Well-formed rows yielded so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    fn field(&self, i: usize) -> Option<&str> {
+        let &(s, e) = self.fields.get(i)?;
+        Some(self.line[s..e].trim())
+    }
+
+    /// Parse the current `line` buffer into a row, or `None` if malformed.
+    fn parse_row(&self) -> Option<TraceRow> {
+        let app = self.field(self.cols.app)?;
+        let function = self.field(self.cols.function)?;
+        if app.is_empty() || function.is_empty() {
+            return None;
+        }
+        let trigger = self
+            .cols
+            .trigger
+            .and_then(|i| self.field(i))
+            .filter(|t| !t.is_empty())
+            .unwrap_or("http")
+            .to_string();
+        let duration_ms = match self.cols.duration.and_then(|i| self.field(i)) {
+            Some(t) if !t.is_empty() => t.parse::<f64>().ok().filter(|d| *d >= 0.0)?,
+            _ => DEFAULT_DURATION_MS,
+        };
+        let memory_mb = match self.cols.memory.and_then(|i| self.field(i)) {
+            Some(t) if !t.is_empty() => t.parse::<u32>().ok()?,
+            _ => DEFAULT_MEMORY_MB,
+        };
+        let mut counts = Vec::with_capacity(self.cols.minutes.len());
+        for &i in &self.cols.minutes {
+            let t = self.field(i)?;
+            // Blank minute cells read as zero (the dataset leaves quiet
+            // minutes empty); anything else must parse.
+            counts.push(if t.is_empty() { 0 } else { t.parse::<u32>().ok()? });
+        }
+        Some(TraceRow {
+            app: app.to_string(),
+            function: function.to_string(),
+            trigger,
+            duration_ms,
+            memory_mb,
+            counts,
+        })
+    }
+}
+
+impl<R: BufRead> Iterator for AzureTraceReader<R> {
+    type Item = TraceRow;
+
+    fn next(&mut self) -> Option<TraceRow> {
+        loop {
+            self.line.clear();
+            match self.src.read_line(&mut self.line) {
+                Ok(0) => return None,
+                Err(e) => {
+                    self.io_error = Some(e);
+                    return None;
+                }
+                Ok(_) => {}
+            }
+            if self.line.trim().is_empty() {
+                continue;
+            }
+            // Split once into byte ranges (no per-field allocation).
+            self.fields.clear();
+            let trimmed_len = self.line.trim_end().len();
+            let mut start = 0usize;
+            for (i, b) in self.line.as_bytes()[..trimmed_len].iter().enumerate() {
+                if *b == b',' {
+                    self.fields.push((start, i));
+                    start = i + 1;
+                }
+            }
+            self.fields.push((start, trimmed_len));
+            match self.parse_row() {
+                Some(row) => {
+                    self.rows += 1;
+                    return Some(row);
+                }
+                None => self.skipped += 1,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV: &str = "\
+HashApp,HashFunction,Trigger,AvgDurationMs,MemoryMb,1,2,3,4
+app-a,f0,http,120.5,128,0,3,,1
+app-a,f1,orchestration,700,256,1,0,2,0
+app-b,g0,timer,50,512,1,1,1,1
+";
+
+    #[test]
+    fn streams_rows_with_defaults_and_blanks() {
+        let mut r = AzureTraceReader::new(CSV.as_bytes()).unwrap();
+        assert_eq!(r.minutes(), 4);
+        let a = r.next().unwrap();
+        assert_eq!(a.app, "app-a");
+        assert_eq!(a.function, "f0");
+        assert_eq!(a.counts, vec![0, 3, 0, 1]); // blank cell -> 0
+        assert_eq!(a.invocations(), 4);
+        assert!((a.duration_ms - 120.5).abs() < 1e-12);
+        let b = r.next().unwrap();
+        assert_eq!(b.trigger, "orchestration");
+        let c = r.next().unwrap();
+        assert_eq!(c.memory_mb, 512);
+        assert!(r.next().is_none());
+        assert_eq!(r.rows(), 3);
+        assert_eq!(r.skipped(), 0);
+    }
+
+    #[test]
+    fn malformed_rows_are_skipped_not_fatal() {
+        let csv = "\
+HashApp,HashFunction,1,2
+a,f,1,2
+a,,3,4
+a,g,nope,4
+a,h,5,6
+";
+        let mut r = AzureTraceReader::new(csv.as_bytes()).unwrap();
+        let rows: Vec<TraceRow> = r.by_ref().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].function, "f");
+        assert_eq!(rows[1].function, "h");
+        assert_eq!(r.skipped(), 2);
+        // Missing optional columns fall back to defaults.
+        assert_eq!(rows[0].trigger, "http");
+        assert_eq!(rows[0].memory_mb, DEFAULT_MEMORY_MB);
+        assert!((rows[0].duration_ms - DEFAULT_DURATION_MS).abs() < 1e-12);
+    }
+
+    #[test]
+    fn header_order_is_free_and_owner_is_ignored() {
+        let csv = "HashOwner,1,HashFunction,2,HashApp\nowner,7,f,8,a\n";
+        let mut r = AzureTraceReader::new(csv.as_bytes()).unwrap();
+        let row = r.next().unwrap();
+        assert_eq!(row.app, "a");
+        assert_eq!(row.function, "f");
+        assert_eq!(row.counts, vec![7, 8]);
+    }
+
+    #[test]
+    fn mid_file_io_errors_are_surfaced_not_swallowed() {
+        /// Reader that fails after the first `ok_reads` fills.
+        struct Flaky {
+            data: &'static [u8],
+            pos: usize,
+            ok_reads: usize,
+        }
+        impl std::io::Read for Flaky {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.ok_reads == 0 {
+                    return Err(std::io::Error::other("disk gone"));
+                }
+                self.ok_reads -= 1;
+                let n = buf.len().min(self.data.len() - self.pos);
+                buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+                self.pos += n;
+                Ok(n)
+            }
+        }
+        // Small capacity so the header read succeeds and a later fill hits
+        // the injected failure mid-file.
+        let src = std::io::BufReader::with_capacity(
+            8,
+            Flaky {
+                data: CSV.as_bytes(),
+                pos: 0,
+                ok_reads: 8,
+            },
+        );
+        let mut r = AzureTraceReader::new(src).unwrap();
+        let drained: Vec<TraceRow> = r.by_ref().collect();
+        assert!(drained.len() < 3, "error must end iteration early");
+        assert!(r.io_error().is_some(), "the I/O error must be observable");
+        // Clean EOF leaves no error behind.
+        let mut clean = AzureTraceReader::new(CSV.as_bytes()).unwrap();
+        assert_eq!(clean.by_ref().count(), 3);
+        assert!(clean.io_error().is_none());
+    }
+
+    #[test]
+    fn bad_headers_error() {
+        assert!(AzureTraceReader::new("".as_bytes()).is_err());
+        assert!(AzureTraceReader::new("HashApp,1,2\n".as_bytes()).is_err());
+        assert!(AzureTraceReader::new("HashApp,HashFunction\n".as_bytes()).is_err());
+    }
+}

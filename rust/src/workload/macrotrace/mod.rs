@@ -1,0 +1,43 @@
+//! Azure-trace macro benchmark: streaming ingestion, offline synthesis,
+//! per-app platform replay, and deterministic hash-of-app sharding.
+//!
+//! This is the subsystem behind `repro azure-macro` — the repo's first
+//! literature-comparable, platform-scale benchmark (SPES and the vHive
+//! snapshot study both evaluate against the Azure Functions 2019 trace).
+//! Four modules, composing bottom-up:
+//!
+//! - [`ingest`] — a streaming, chunked reader for the Azure Functions 2019
+//!   CSV schema (per-function per-minute invocation counts plus optional
+//!   duration/memory columns). One row in memory at a time; the full trace
+//!   is never materialised.
+//! - [`synth`] — a deterministic synthesizer calibrated to the published
+//!   distributions (via [`crate::workload::azure`]), so the benchmark runs
+//!   offline with no trace download. App `i`'s rows depend only on
+//!   `(seed, i)`, which is what lets shards materialise exactly the apps
+//!   they own.
+//! - [`replay`] — drives one app through the full [`platform::World`]
+//!   (freshen gate, chain + histogram predictors with their bulk-warmup
+//!   paths, container pool, netsim), producing integer-only, mergeable
+//!   [`replay::MacroMetrics`].
+//! - [`shard`] — partitions a trace across [`SweepRunner`] workers by
+//!   hash-of-app (whole chains stay on one shard) with a merge that is
+//!   byte-identical for any `--shards` × `--parallel` combination.
+//!
+//! The experiment harness on top lives in
+//! [`crate::experiments::azure_macro`]; the CLI entry points are
+//! `repro azure-macro` and `repro gen-azure-trace`.
+//!
+//! [`platform::World`]: crate::platform::world::World
+//! [`SweepRunner`]: crate::experiments::harness::SweepRunner
+
+pub mod ingest;
+pub mod replay;
+pub mod shard;
+pub mod synth;
+
+pub use ingest::{AzureTraceReader, TraceRow};
+pub use replay::{replay_app, MacroMetrics, PredictorPolicy, ReplayCfg};
+pub use shard::{
+    load_shard_apps, replay_shard, replay_sharded, shard_of, ShardApps, ShardOut, TraceSource,
+};
+pub use synth::{app_rows, write_csv, SynthSummary, SynthTraceCfg};

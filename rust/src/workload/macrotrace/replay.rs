@@ -1,0 +1,511 @@
+//! Per-app trace replay onto the full platform (`platform::World`).
+//!
+//! **Unit of replay = one application.** Each app runs in its own `World`
+//! whose RNG stream is derived from `(run seed, hash(app))`, with all of
+//! its functions deployed together (so chain prediction and per-app
+//! isolation see the complete invocation sequence — the reason sharding
+//! partitions by hash-of-app, never by row). Azure apps are isolated
+//! tenants: containers are never shared across apps on the real platform
+//! either, so per-app worlds change no semantics — and they are what makes
+//! the merged metrics *provably* independent of the shard map. An app's
+//! replay depends only on its own rows and the run seed; the merge
+//! ([`MacroMetrics::merge`]) is a commutative sum of `u64` counters and
+//! histogram bins. Shards 1/2/8, parallel 1/4 — same bytes out.
+//!
+//! Replay of one app:
+//! 1. deploy every row as a paper-λ (`DataGet → Compute(duration) →
+//!    DataPut`), wiring `orchestration` rows into an explicit chain
+//!    (`InvokeNext` via the Step Functions trigger) when the predictor
+//!    policy enables chains;
+//! 2. bulk-warm the histogram/chain predictors from the first
+//!    `warmup_minutes` of counts (no simulator events — the predictors'
+//!    dedicated warmup path);
+//! 3. expand the remaining per-minute counts lazily into `invoke`
+//!    events (counts are the compact form; the event stream never
+//!    materialises outside the wheel) and run the world to quiescence.
+
+use std::hash::Hasher;
+
+use crate::metrics::hist::LatencyHist;
+use crate::netsim::link::Site;
+use crate::platform::endpoint::Endpoint;
+use crate::platform::exec::invoke;
+use crate::platform::function::{Arg, FunctionSpec, Op};
+use crate::platform::world::World;
+use crate::simcore::Sim;
+use crate::triggers::TriggerService;
+use crate::util::config::Config;
+use crate::util::fxhash::FxHasher;
+use crate::util::rng::{mix64, Rng};
+use crate::util::time::{SimDuration, SimTime};
+use crate::workload::macrotrace::ingest::TraceRow;
+
+/// One trace minute, in simulator microseconds.
+pub const MINUTE: SimDuration = SimDuration(60_000_000);
+
+/// Which prediction sources feed freshen during replay (the experiment's
+/// ablation axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PredictorPolicy {
+    /// No prediction at all (the freshen-off baseline).
+    None,
+    /// IAT-histogram predictions only; chains replay as independent rows.
+    Histogram,
+    /// Explicit-chain predictions only.
+    Chain,
+    /// Both sources (the paper's full system).
+    Both,
+}
+
+impl PredictorPolicy {
+    // User-facing string parsing lives on `experiments::azure_macro::
+    // Variant` (the CLI surface); this enum stays a plain internal switch.
+    fn histogram(&self) -> bool {
+        matches!(self, PredictorPolicy::Histogram | PredictorPolicy::Both)
+    }
+
+    fn chain(&self) -> bool {
+        matches!(self, PredictorPolicy::Chain | PredictorPolicy::Both)
+    }
+}
+
+/// Replay configuration shared by every app of a run.
+#[derive(Debug, Clone)]
+pub struct ReplayCfg {
+    /// Platform config template (freshen switch, pool sizing); the seed
+    /// field is overwritten per app.
+    pub base: Config,
+    /// Run seed; app worlds derive their streams from `(seed, app)`.
+    pub seed: u64,
+    /// Leading minutes fed to the predictors instead of simulated.
+    pub warmup_minutes: usize,
+    pub policy: PredictorPolicy,
+}
+
+impl Default for ReplayCfg {
+    fn default() -> ReplayCfg {
+        let mut base = Config::default();
+        // Match the e2e experiment's admission threshold so macro results
+        // compare against the repo's headline numbers.
+        base.freshen.min_confidence = 0.3;
+        ReplayCfg {
+            base,
+            seed: 2020,
+            warmup_minutes: 10,
+            policy: PredictorPolicy::Both,
+        }
+    }
+}
+
+/// Merged replay metrics. Integer-only by design: merging is a
+/// commutative, associative sum, so the result is byte-identical for any
+/// partition of the same apps across shards/workers. (Latency percentiles
+/// and rates are *derived* from these integers at report time.)
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MacroMetrics {
+    pub apps: u64,
+    pub functions: u64,
+    pub invocations: u64,
+    pub cold_starts: u64,
+    pub warm_starts: u64,
+    pub freshens_started: u64,
+    pub freshens_completed: u64,
+    pub freshens_wasted: u64,
+    /// Freshen resource hits / total resource touches across invocations.
+    pub freshen_hits: u64,
+    pub freshen_total: u64,
+    /// Network bytes billed / saved (rounded to integer bytes so merges
+    /// stay order-independent — f64 addition is not associative).
+    pub network_bytes: u64,
+    pub network_bytes_saved: u64,
+    /// Simulator events executed (replay throughput accounting).
+    pub sim_events: u64,
+    /// Apps replayed with an active explicit chain.
+    pub chains: u64,
+    /// Apps whose `orchestration` rows did NOT mirror the head's counts
+    /// and were therefore replayed as independent rows (real-CSV safety:
+    /// keeps every variant's invocation volume comparable).
+    pub chains_demoted: u64,
+    pub latency: LatencyHist,
+}
+
+impl MacroMetrics {
+    /// Commutative merge (see type-level docs).
+    pub fn merge(&mut self, other: &MacroMetrics) {
+        self.apps += other.apps;
+        self.functions += other.functions;
+        self.invocations += other.invocations;
+        self.cold_starts += other.cold_starts;
+        self.warm_starts += other.warm_starts;
+        self.freshens_started += other.freshens_started;
+        self.freshens_completed += other.freshens_completed;
+        self.freshens_wasted += other.freshens_wasted;
+        self.freshen_hits += other.freshen_hits;
+        self.freshen_total += other.freshen_total;
+        self.network_bytes += other.network_bytes;
+        self.network_bytes_saved += other.network_bytes_saved;
+        self.sim_events += other.sim_events;
+        self.chains += other.chains;
+        self.chains_demoted += other.chains_demoted;
+        self.latency.merge(&other.latency);
+    }
+
+    pub fn cold_start_rate(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.cold_starts as f64 / self.invocations as f64
+        }
+    }
+
+    pub fn freshen_hit_rate(&self) -> f64 {
+        if self.freshen_total == 0 {
+            0.0
+        } else {
+            self.freshen_hits as f64 / self.freshen_total as f64
+        }
+    }
+
+    /// Fraction of admitted freshens whose predicted invocation never
+    /// arrived (the paper's wasted-work/billing concern).
+    pub fn wasted_freshen_fraction(&self) -> f64 {
+        if self.freshens_started == 0 {
+            0.0
+        } else {
+            self.freshens_wasted as f64 / self.freshens_started as f64
+        }
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.latency.quantile_ms(50.0)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.latency.quantile_ms(99.0)
+    }
+
+    /// Canonical content fingerprint — the string the shard-determinism
+    /// regression tests compare byte-for-byte.
+    pub fn digest(&self) -> String {
+        format!(
+            "apps={} fns={} inv={} cold={} warm={} fs={} fc={} fw={} fh={}/{} \
+             net={} saved={} ev={} ch={}/{} lat={:016x}",
+            self.apps,
+            self.functions,
+            self.invocations,
+            self.cold_starts,
+            self.warm_starts,
+            self.freshens_started,
+            self.freshens_completed,
+            self.freshens_wasted,
+            self.freshen_hits,
+            self.freshen_total,
+            self.network_bytes,
+            self.network_bytes_saved,
+            self.sim_events,
+            self.chains,
+            self.chains_demoted,
+            self.latency.digest(),
+        )
+    }
+}
+
+/// Stable 64-bit app identity (FxHash of the app name) — seeds the
+/// per-app world and drives shard assignment.
+pub fn app_hash(app: &str) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(app.as_bytes());
+    h.finish()
+}
+
+/// The 1 MB model-like object every replayed λ fetches (the paper's λ1
+/// shape: constant-argument read of a hot object).
+const FETCH_BYTES: f64 = 1e6;
+const PUT_BYTES: f64 = 64.0 * 1024.0;
+
+/// Replay one app's rows; returns its (mergeable) metrics contribution.
+/// Deterministic in `(app, rows, cfg)` — independent of every other app,
+/// of shard layout, and of worker scheduling.
+pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics {
+    let mut config = cfg.base.clone();
+    config.seed = mix64(cfg.seed, app_hash(app));
+    let world_seed = config.seed;
+    let mut w = World::new(config);
+    w.auto_hist_predict = cfg.policy.histogram() && w.config.freshen.enabled;
+
+    let mut store = Endpoint::new("store", Site::Remote);
+    store.store.put("ID1", FETCH_BYTES, SimTime::ZERO);
+    w.add_endpoint(store);
+
+    // Explicit chain: the app's `orchestration` rows, in row order.
+    let chain: Vec<usize> = rows
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| r.trigger == "orchestration")
+        .map(|(i, _)| i)
+        .collect();
+    // Chain replay drives only the head row and lets triggers produce the
+    // successors, so it is only workload-preserving when every chain row
+    // mirrors the head's counts (the synthesizer guarantees this; a real
+    // CSV may not). A non-mirrored chain is DEMOTED to independent-row
+    // replay — counted in `chains_demoted` — so every variant of the
+    // benchmark replays the same invocation volume and the cross-variant
+    // comparison stays honest.
+    let mirrored = chain.len() > 1
+        && chain
+            .iter()
+            .all(|&i| rows[i].counts == rows[chain[0]].counts);
+    let chained = cfg.policy.chain() && mirrored;
+
+    for (i, row) in rows.iter().enumerate() {
+        let mut ops = vec![
+            Op::DataGet {
+                endpoint: "store".into(),
+                creds: Arg::Const("CREDS".into()),
+                object_id: Arg::Const("ID1".into()),
+            },
+            Op::Compute {
+                duration: SimDuration::from_millis_f64(row.duration_ms),
+            },
+            Op::DataPut {
+                endpoint: "store".into(),
+                creds: Arg::Const("CREDS".into()),
+                object_id: Arg::Const(format!("out-{i}")),
+                bytes: PUT_BYTES,
+            },
+        ];
+        if chained {
+            if let Some(pos) = chain.iter().position(|&c| c == i) {
+                if pos + 1 < chain.len() {
+                    ops.push(Op::InvokeNext {
+                        function: rows[chain[pos + 1]].function.clone(),
+                        trigger: TriggerService::StepFunctions,
+                    });
+                }
+            }
+        }
+        let mut spec = FunctionSpec::new(&row.function, app, ops);
+        spec.memory_mb = row.memory_mb.max(64);
+        w.deploy(spec);
+    }
+    if chained {
+        let fns: Vec<String> = chain.iter().map(|&i| rows[i].function.clone()).collect();
+        w.registry
+            .register_chain(app, fns)
+            .expect("chain functions were just deployed");
+    }
+
+    // Bulk predictor warmup from the leading minutes (no sim events).
+    let horizon = rows.iter().map(|r| r.counts.len()).max().unwrap_or(0);
+    let warm = cfg.warmup_minutes.min(horizon);
+    if warm > 0 {
+        // Only warm the predictor this policy will actually consult.
+        if cfg.policy.histogram() {
+            for row in rows {
+                let w_counts = &row.counts[..warm.min(row.counts.len())];
+                w.hist_pred.warm_from_minute_counts(
+                    &row.function,
+                    w_counts,
+                    SimTime::ZERO,
+                    MINUTE,
+                );
+            }
+        }
+        if chained {
+            let head_warm: u64 = rows[chain[0]].counts[..warm.min(rows[chain[0]].counts.len())]
+                .iter()
+                .map(|&c| c as u64)
+                .sum();
+            if head_warm > 0 {
+                for pair in chain.windows(2) {
+                    w.chain_pred.warm_edge(
+                        &rows[pair[0]].function,
+                        &rows[pair[1]].function,
+                        head_warm,
+                        head_warm,
+                    );
+                }
+            }
+        }
+    }
+
+    // Rows the trace drives directly: everything, except that when the
+    // chain is active only its head receives external arrivals (successor
+    // counts mirror the head's and are produced by the chain itself).
+    let driven: Vec<&TraceRow> = rows
+        .iter()
+        .enumerate()
+        .filter(|(i, r)| {
+            if chained && r.trigger == "orchestration" {
+                *i == chain[0]
+            } else {
+                true
+            }
+        })
+        .map(|(_, r)| r)
+        .collect();
+
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 2_000_000_000;
+    let mut jitter = Rng::new(mix64(world_seed, 0xA11C_E500));
+    for row in &driven {
+        for (m, &c) in row.counts.iter().enumerate().skip(warm) {
+            if c == 0 {
+                continue;
+            }
+            let base_us = m as u64 * MINUTE.micros();
+            for j in 0..c as u64 {
+                let off = ((j as f64 + jitter.f64()) / c as f64
+                    * MINUTE.micros() as f64) as u64;
+                let f = row.function.clone();
+                sim.schedule_at(SimTime(base_us + off), move |sim, w| {
+                    invoke(sim, w, &f);
+                });
+            }
+        }
+    }
+    sim.run(&mut w);
+
+    let mut out = MacroMetrics {
+        apps: 1,
+        functions: rows.len() as u64,
+        invocations: w.metrics.count() as u64,
+        cold_starts: w.metrics.cold_starts,
+        warm_starts: w.metrics.warm_starts,
+        freshens_started: w.metrics.freshens_started,
+        freshens_completed: w.metrics.freshens_completed,
+        freshens_wasted: w.metrics.freshens_wasted,
+        sim_events: sim.executed(),
+        chains: u64::from(chained),
+        chains_demoted: u64::from(cfg.policy.chain() && chain.len() > 1 && !mirrored),
+        ..MacroMetrics::default()
+    };
+    let (hits, total) = w.metrics.freshen_hit_counts();
+    out.freshen_hits = hits;
+    out.freshen_total = total;
+    let acct = w.ledger.account(app);
+    out.network_bytes = acct.network_bytes.round() as u64;
+    out.network_bytes_saved = acct.network_bytes_saved.round() as u64;
+    for rec in w.metrics.records() {
+        out.latency.record(rec.latency());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::macrotrace::synth::{app_rows, app_spec, SynthTraceCfg};
+
+    fn cfg_with(policy: PredictorPolicy, freshen: bool) -> ReplayCfg {
+        let mut cfg = ReplayCfg::default();
+        cfg.base.freshen.enabled = freshen;
+        cfg.policy = policy;
+        cfg.warmup_minutes = 5;
+        cfg
+    }
+
+    fn synth() -> SynthTraceCfg {
+        SynthTraceCfg {
+            apps: 40,
+            minutes: 20,
+            seed: 99,
+            ..SynthTraceCfg::default()
+        }
+    }
+
+    #[test]
+    fn replay_is_deterministic_per_app() {
+        let s = synth();
+        let rows = app_rows(&s, 3);
+        let cfg = cfg_with(PredictorPolicy::Both, true);
+        let a = replay_app("app-3", &rows, &cfg);
+        let b = replay_app("app-3", &rows, &cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.apps, 1);
+        assert_eq!(a.functions, rows.len() as u64);
+    }
+
+    #[test]
+    fn freshen_reduces_latency_on_an_orchestrated_app() {
+        let s = synth();
+        // Find an orchestrated app with real traffic.
+        let idx = (0..s.apps)
+            .find(|&i| {
+                app_spec(&s, i).orchestrated
+                    && app_rows(&s, i).iter().map(|r| r.invocations()).sum::<u64>() > 20
+                    && app_rows(&s, i).len() > 1
+            })
+            .expect("synth population contains a busy orchestrated app");
+        let rows = app_rows(&s, idx);
+        let app = rows[0].app.clone();
+        let off = replay_app(&app, &rows, &cfg_with(PredictorPolicy::None, false));
+        let on = replay_app(&app, &rows, &cfg_with(PredictorPolicy::Both, true));
+        assert_eq!(off.freshens_started, 0, "baseline must not freshen");
+        assert!(on.freshens_completed > 0, "freshen ran");
+        assert!(on.freshen_hits > 0, "freshen produced hits");
+        // Same workload arrived on both (chain-driven totals match).
+        assert_eq!(off.invocations, on.invocations);
+        assert!(
+            on.p50_ms() <= off.p50_ms(),
+            "freshen p50 {} should not exceed baseline {}",
+            on.p50_ms(),
+            off.p50_ms()
+        );
+    }
+
+    #[test]
+    fn chain_policy_drives_head_only_and_hist_policy_drives_all_rows() {
+        let s = synth();
+        let idx = (0..s.apps)
+            .find(|&i| app_spec(&s, i).orchestrated && app_rows(&s, i).len() > 2)
+            .expect("orchestrated app with a >2-stage chain");
+        let rows = app_rows(&s, idx);
+        let app = rows[0].app.clone();
+        let chain = replay_app(&app, &rows, &cfg_with(PredictorPolicy::Chain, true));
+        let hist = replay_app(&app, &rows, &cfg_with(PredictorPolicy::Histogram, true));
+        // Both replays process the full workload: under the chain policy
+        // successors are invoked by triggers, under the histogram policy
+        // by their own (mirrored) trace rows.
+        assert_eq!(chain.invocations, hist.invocations);
+        assert_eq!(chain.functions, hist.functions);
+    }
+
+    #[test]
+    fn non_mirrored_chain_is_demoted_to_keep_variants_comparable() {
+        let s = synth();
+        let idx = (0..s.apps)
+            .find(|&i| app_spec(&s, i).orchestrated && app_rows(&s, i).len() > 1)
+            .expect("orchestrated app");
+        let mut rows = app_rows(&s, idx);
+        let app = rows[0].app.clone();
+        // Real-CSV shape: a successor row whose counts do NOT mirror the
+        // head's (e.g. a fan-out stage invoked more often).
+        let last = rows.len() - 1;
+        rows[last].counts[0] += 7;
+        let chain = replay_app(&app, &rows, &cfg_with(PredictorPolicy::Chain, true));
+        let none = replay_app(&app, &rows, &cfg_with(PredictorPolicy::None, false));
+        assert_eq!(chain.chains, 0, "mismatched chain must not replay as a chain");
+        assert_eq!(chain.chains_demoted, 1);
+        assert_eq!(none.chains_demoted, 0, "policies without chains never demote");
+        // The demoted replay drives every row independently, so the chain
+        // variant processes the same volume as the baseline.
+        assert_eq!(chain.invocations, none.invocations);
+        // The untouched app really does chain under the same policy.
+        let intact = app_rows(&s, idx);
+        let chained = replay_app(&app, &intact, &cfg_with(PredictorPolicy::Chain, true));
+        assert_eq!(chained.chains, 1);
+        assert_eq!(chained.chains_demoted, 0);
+    }
+
+    #[test]
+    fn empty_rows_yield_empty_metrics() {
+        let cfg = cfg_with(PredictorPolicy::Both, true);
+        let m = replay_app("ghost", &[], &cfg);
+        assert_eq!(m.invocations, 0);
+        assert_eq!(m.functions, 0);
+        assert_eq!(m.apps, 1);
+        assert!(m.latency.is_empty());
+    }
+}

@@ -1,0 +1,251 @@
+//! Hash-of-app sharding of one trace across `SweepRunner` workers.
+//!
+//! A shard owns the apps whose [`app_hash`] lands on it; every row of an
+//! app — its whole invocation chain — therefore replays on exactly one
+//! shard, so chain prediction always sees complete sequences. Each worker
+//! streams the trace itself (CSV: its own reader over the file; synth: it
+//! materialises only the apps it owns), replays its apps in sorted-app
+//! order, and folds their metrics into one [`MacroMetrics`].
+//!
+//! **Determinism contract** (the harness's "across grid points" guarantee
+//! extended to *within one trace*): per-app replay depends only on
+//! `(app rows, run seed)`, and the merge is a commutative sum of `u64`s —
+//! so the merged metrics are byte-identical for ANY `--shards` value and
+//! ANY `--parallel` value, not merely for a fixed grid. The
+//! `azure_macro_determinism` regression test pins `--shards 1/2/8 ×
+//! --parallel 1/4`.
+//!
+//! Cost model: a CSV replay scans the file once per shard (workers scan
+//! concurrently); rows not owned by the shard are parsed and dropped, and
+//! only the owned rows' compact per-minute counts are held in memory.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::experiments::harness::SweepRunner;
+use crate::util::fxhash::FxHashMap;
+use crate::workload::macrotrace::ingest::{AzureTraceReader, TraceRow};
+use crate::workload::macrotrace::replay::{app_hash, replay_app, MacroMetrics, ReplayCfg};
+use crate::workload::macrotrace::synth::{app_rows, SynthTraceCfg};
+
+/// Stable shard assignment for an app.
+pub fn shard_of(app: &str, shards: usize) -> usize {
+    debug_assert!(shards > 0, "shard_of with zero shards");
+    (app_hash(app) % shards.max(1) as u64) as usize
+}
+
+/// Where the trace comes from: a CSV on disk, or the offline synthesizer.
+#[derive(Debug, Clone)]
+pub enum TraceSource {
+    Csv(PathBuf),
+    Synth(SynthTraceCfg),
+}
+
+/// One shard's replay output.
+#[derive(Debug, Clone, Default)]
+pub struct ShardOut {
+    pub metrics: MacroMetrics,
+    /// Trace rows this shard parsed and owned.
+    pub rows: u64,
+    /// Malformed rows its reader skipped (CSV only; whole-file count).
+    pub skipped: u64,
+}
+
+/// One shard's materialised slice of the trace: its apps (sorted by name,
+/// rows in trace order) plus the scan's skip count. This is the unit the
+/// experiment grid reuses — gather once, replay under every
+/// `(variant, seed)` combination.
+pub type ShardApps = Vec<(String, Vec<TraceRow>)>;
+
+/// Gather the rows owned by `shard` (of `shards`): one streaming pass for
+/// CSV sources (an I/O error mid-scan is a hard error, never a silent
+/// truncation), direct materialisation of owned apps for synth sources.
+/// Returns `(apps, skipped_rows)`.
+pub fn load_shard_apps(
+    src: &TraceSource,
+    shard: usize,
+    shards: usize,
+) -> Result<(ShardApps, u64)> {
+    match src {
+        TraceSource::Csv(path) => {
+            let mut reader = AzureTraceReader::open(path)?;
+            let mut by_app: FxHashMap<String, Vec<TraceRow>> = FxHashMap::default();
+            for row in &mut reader {
+                if shard_of(&row.app, shards) == shard {
+                    by_app.entry(row.app.clone()).or_default().push(row);
+                }
+            }
+            if let Some(e) = reader.io_error() {
+                bail!("reading trace {}: {e}", path.display());
+            }
+            // Sorted-app order: deterministic regardless of hash-map
+            // iteration order (rows within an app keep file order).
+            let mut apps: ShardApps = by_app.into_iter().collect();
+            apps.sort_by(|a, b| a.0.cmp(&b.0));
+            Ok((apps, reader.skipped() as u64))
+        }
+        TraceSource::Synth(synth) => {
+            let mut apps: ShardApps = Vec::new();
+            for i in 0..synth.apps {
+                let app = format!("app-{i}");
+                if shard_of(&app, shards) != shard {
+                    continue;
+                }
+                apps.push((app, app_rows(synth, i)));
+            }
+            // Already sorted-by-construction? No: "app-10" < "app-2"
+            // lexicographically — sort to match the CSV path exactly.
+            apps.sort_by(|a, b| a.0.cmp(&b.0));
+            Ok((apps, 0))
+        }
+    }
+}
+
+/// Replay the slice of `src` owned by `shard` (of `shards`).
+pub fn replay_shard(
+    src: &TraceSource,
+    shard: usize,
+    shards: usize,
+    cfg: &ReplayCfg,
+) -> Result<ShardOut> {
+    let (apps, skipped) = load_shard_apps(src, shard, shards)?;
+    let mut out = ShardOut {
+        skipped,
+        ..ShardOut::default()
+    };
+    for (app, rows) in &apps {
+        out.rows += rows.len() as u64;
+        out.metrics.merge(&replay_app(app, rows, cfg));
+    }
+    Ok(out)
+}
+
+/// Replay the whole trace: fan the shards over `runner`'s workers and
+/// merge in shard order (the sums are order-independent anyway; the fixed
+/// order keeps `rows`/`skipped` reporting stable too).
+pub fn replay_sharded(
+    src: &TraceSource,
+    shards: usize,
+    cfg: &ReplayCfg,
+    runner: &SweepRunner,
+) -> Result<ShardOut> {
+    let shards = shards.max(1);
+    let grid: Vec<usize> = (0..shards).collect();
+    let results = runner.run(&grid, |_, &shard| replay_shard(src, shard, shards, cfg));
+    let mut merged = ShardOut::default();
+    for (shard, r) in results.into_iter().enumerate() {
+        let out = r?;
+        merged.metrics.merge(&out.metrics);
+        merged.rows += out.rows;
+        // Every CSV shard scans (and skip-counts) the whole file; report
+        // the per-scan number once, not `shards` times.
+        if shard == 0 {
+            merged.skipped = out.skipped;
+        }
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_src() -> TraceSource {
+        TraceSource::Synth(SynthTraceCfg {
+            apps: 30,
+            minutes: 12,
+            seed: 5,
+            ..SynthTraceCfg::default()
+        })
+    }
+
+    fn cfg() -> ReplayCfg {
+        let mut c = ReplayCfg::default();
+        c.warmup_minutes = 3;
+        c
+    }
+
+    #[test]
+    fn every_app_lands_on_exactly_one_shard() {
+        for shards in [1usize, 2, 3, 8] {
+            for i in 0..50 {
+                let app = format!("app-{i}");
+                let s = shard_of(&app, shards);
+                assert!(s < shards);
+                // Stable across calls.
+                assert_eq!(s, shard_of(&app, shards));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_slices_partition_the_trace_exactly() {
+        let src = synth_src();
+        let shards = 3;
+        let mut seen = std::collections::HashSet::new();
+        let mut total_rows = 0u64;
+        for s in 0..shards {
+            let (apps, skipped) = load_shard_apps(&src, s, shards).unwrap();
+            assert_eq!(skipped, 0);
+            // Sorted-app order within the slice.
+            assert!(apps.windows(2).all(|w| w[0].0 < w[1].0));
+            for (app, rows) in &apps {
+                assert!(seen.insert(app.clone()), "app {app} landed on two shards");
+                total_rows += rows.len() as u64;
+            }
+        }
+        let (all, _) = load_shard_apps(&src, 0, 1).unwrap();
+        assert_eq!(seen.len(), all.len(), "every app on exactly one shard");
+        assert_eq!(
+            total_rows,
+            all.iter().map(|(_, r)| r.len() as u64).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn sharded_merge_matches_serial_replay() {
+        let src = synth_src();
+        let cfg = cfg();
+        let serial = replay_sharded(&src, 1, &cfg, &SweepRunner::new(1)).unwrap();
+        assert!(serial.metrics.invocations > 0, "synth trace drove work");
+        for (shards, parallel) in [(2usize, 1usize), (3, 4), (8, 4)] {
+            let sharded =
+                replay_sharded(&src, shards, &cfg, &SweepRunner::new(parallel)).unwrap();
+            assert_eq!(
+                serial.metrics.digest(),
+                sharded.metrics.digest(),
+                "shards={shards} parallel={parallel} diverged"
+            );
+            assert_eq!(serial.metrics, sharded.metrics);
+            assert_eq!(serial.rows, sharded.rows);
+        }
+    }
+
+    #[test]
+    fn csv_and_synth_sources_replay_identically() {
+        let TraceSource::Synth(synth) = synth_src() else {
+            unreachable!()
+        };
+        let mut buf = Vec::new();
+        crate::workload::macrotrace::synth::write_csv(&synth, &mut buf).unwrap();
+        let dir = std::env::temp_dir().join("freshen-macrotrace-shard-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.csv");
+        std::fs::write(&path, &buf).unwrap();
+        let cfg = cfg();
+        let from_synth =
+            replay_sharded(&TraceSource::Synth(synth), 2, &cfg, &SweepRunner::new(2)).unwrap();
+        let from_csv =
+            replay_sharded(&TraceSource::Csv(path), 2, &cfg, &SweepRunner::new(2)).unwrap();
+        assert_eq!(from_synth.metrics.digest(), from_csv.metrics.digest());
+        assert_eq!(from_synth.rows, from_csv.rows);
+        assert_eq!(from_csv.skipped, 0);
+    }
+
+    #[test]
+    fn missing_csv_errors() {
+        let src = TraceSource::Csv(PathBuf::from("/nonexistent/azure.csv"));
+        assert!(replay_shard(&src, 0, 1, &cfg()).is_err());
+    }
+}

@@ -5,8 +5,13 @@
 //!   [9]), which Figure 2 is drawn from.
 //! - [`generator`] — arrival processes (Poisson, periodic-with-jitter,
 //!   bursty) used to drive the platform in benches and examples.
-//! - [`trace`] — JSON-lines trace records: write traces out, replay them in.
+//! - [`trace`] — JSON-lines trace records: write traces out, replay them
+//!   in (streaming via [`trace::TraceReader`]).
+//! - [`macrotrace`] — the Azure-trace macro benchmark: streaming CSV
+//!   ingestion, offline trace synthesis, per-app platform replay, and
+//!   deterministic hash-of-app sharding.
 
 pub mod azure;
 pub mod generator;
+pub mod macrotrace;
 pub mod trace;

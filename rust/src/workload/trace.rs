@@ -39,22 +39,76 @@ pub fn write_trace<W: Write>(records: &[TraceRecord], mut w: W) -> std::io::Resu
     Ok(())
 }
 
-/// Read records from JSON lines; skips malformed lines with a count.
-pub fn read_trace<R: BufRead>(r: R) -> (Vec<TraceRecord>, usize) {
-    let mut out = Vec::new();
-    let mut skipped = 0;
-    for line in r.lines().map_while(Result::ok) {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        match Json::parse(line).ok().and_then(|j| TraceRecord::from_json(&j)) {
-            Some(rec) => out.push(rec),
-            None => skipped += 1,
+/// Streaming trace reader: yields records one line at a time (file order,
+/// NOT time-sorted), skipping malformed lines with a count. One line
+/// buffer in memory regardless of trace size — callers that schedule as
+/// they read (the CLI replayer, the macro benchmark's JSONL path) never
+/// buffer the trace at all. [`read_trace`] remains the collect-and-sort
+/// convenience wrapper on top.
+pub struct TraceReader<R: BufRead> {
+    src: R,
+    line: String,
+    skipped: usize,
+    io_error: Option<std::io::Error>,
+}
+
+impl<R: BufRead> TraceReader<R> {
+    pub fn new(src: R) -> TraceReader<R> {
+        TraceReader {
+            src,
+            line: String::new(),
+            skipped: 0,
+            io_error: None,
         }
     }
+
+    /// Malformed lines skipped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// The I/O error that ended iteration early, if any — `None` after a
+    /// clean EOF. Callers that must not silently truncate (the CLI
+    /// replayer) check this after draining.
+    pub fn io_error(&self) -> Option<&std::io::Error> {
+        self.io_error.as_ref()
+    }
+}
+
+impl<R: BufRead> Iterator for TraceReader<R> {
+    type Item = TraceRecord;
+
+    fn next(&mut self) -> Option<TraceRecord> {
+        loop {
+            self.line.clear();
+            match self.src.read_line(&mut self.line) {
+                Ok(0) => return None,
+                Err(e) => {
+                    self.io_error = Some(e);
+                    return None;
+                }
+                Ok(_) => {}
+            }
+            let line = self.line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            match Json::parse(line).ok().and_then(|j| TraceRecord::from_json(&j)) {
+                Some(rec) => return Some(rec),
+                None => self.skipped += 1,
+            }
+        }
+    }
+}
+
+/// Read records from JSON lines, sorted by time; skips malformed lines
+/// with a count. Thin buffering wrapper over [`TraceReader`] — prefer the
+/// iterator for large traces.
+pub fn read_trace<R: BufRead>(r: R) -> (Vec<TraceRecord>, usize) {
+    let mut reader = TraceReader::new(r);
+    let mut out: Vec<TraceRecord> = reader.by_ref().collect();
     out.sort_by_key(|r| r.at);
-    (out, skipped)
+    (out, reader.skipped())
 }
 
 #[cfg(test)]
@@ -88,5 +142,44 @@ mod tests {
         let (recs, skipped) = read_trace(text.as_bytes());
         assert_eq!(recs.len(), 1);
         assert_eq!(skipped, 2);
+    }
+
+    #[test]
+    fn streaming_reader_preserves_file_order_and_counts_skips() {
+        let text = "{\"t_us\": 5000, \"function\": \"late\"}\n\nbogus\n{\"t_us\": 1000, \"function\": \"early\"}\n";
+        let mut reader = TraceReader::new(text.as_bytes());
+        // File order, not time order: streaming never buffers to sort.
+        assert_eq!(reader.next().unwrap().function, "late");
+        assert_eq!(reader.skipped(), 0, "skips counted lazily as lines pass");
+        assert_eq!(reader.next().unwrap().function, "early");
+        assert!(reader.next().is_none());
+        assert_eq!(reader.skipped(), 1);
+        // The wrapper sorts the same records.
+        let (recs, skipped) = read_trace(text.as_bytes());
+        assert_eq!(skipped, 1);
+        assert_eq!(recs[0].function, "early");
+        assert_eq!(recs[1].function, "late");
+    }
+
+    #[test]
+    fn io_errors_end_iteration_but_are_observable() {
+        struct Flaky(usize);
+        impl std::io::Read for Flaky {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.0 == 0 {
+                    return Err(std::io::Error::other("disk gone"));
+                }
+                self.0 -= 1;
+                let line = b"{\"t_us\": 1, \"function\": \"a\"}\n";
+                buf[..line.len()].copy_from_slice(line);
+                Ok(line.len())
+            }
+        }
+        let mut reader = TraceReader::new(std::io::BufReader::new(Flaky(2)));
+        assert_eq!(reader.by_ref().count(), 2, "reads before the fault parse");
+        assert!(reader.io_error().is_some(), "the I/O error must be visible");
+        let mut clean = TraceReader::new("{\"t_us\": 1, \"function\": \"a\"}\n".as_bytes());
+        assert_eq!(clean.by_ref().count(), 1);
+        assert!(clean.io_error().is_none());
     }
 }

@@ -1,0 +1,128 @@
+//! Shard-determinism regression tests for the `azure-macro` benchmark.
+//!
+//! The acceptance property of the macro subsystem: merged metrics are
+//! **byte-identical** across `--shards 1/2/8` × `--parallel 1/4`. This is
+//! stronger than the sweep harness's original contract (determinism for a
+//! fixed grid across `--parallel`): the shard map itself may change and
+//! the bytes must not.
+
+use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
+use freshen_rs::experiments::SweepRunner;
+use freshen_rs::workload::macrotrace::shard::TraceSource;
+use freshen_rs::workload::macrotrace::synth::SynthTraceCfg;
+
+fn trace() -> SynthTraceCfg {
+    SynthTraceCfg {
+        apps: 36,
+        minutes: 14,
+        seed: 0xDE7E_2019,
+        ..SynthTraceCfg::default()
+    }
+}
+
+fn cfg(shards: usize) -> AzureMacroCfg {
+    let mut cfg = AzureMacroCfg::new(TraceSource::Synth(trace()));
+    cfg.shards = shards;
+    cfg.warmup_minutes = 4;
+    cfg.variants = vec![Variant::Baseline, Variant::Both];
+    cfg
+}
+
+#[test]
+fn merged_metrics_are_byte_identical_across_shards_and_parallelism() {
+    let seeds = [7u64, 8];
+    let reference = run_multi(&cfg(1), &seeds, &SweepRunner::new(1))
+        .expect("reference run")
+        .digest();
+    assert!(
+        reference.contains("inv="),
+        "digest should carry counters: {reference}"
+    );
+    for shards in [1usize, 2, 8] {
+        for parallel in [1usize, 4] {
+            let digest = run_multi(&cfg(shards), &seeds, &SweepRunner::new(parallel))
+                .expect("sharded run")
+                .digest();
+            assert_eq!(
+                reference, digest,
+                "shards={shards} parallel={parallel} diverged from the serial merge"
+            );
+        }
+    }
+}
+
+#[test]
+fn csv_replay_matches_synth_replay_byte_for_byte() {
+    // The same trace via the CSV ingestion path and the direct synthesizer
+    // path must merge to identical bytes — the reader round-trips exactly.
+    let synth = trace();
+    let dir = std::env::temp_dir().join("freshen-azure-macro-determinism");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    {
+        let file = std::fs::File::create(&path).unwrap();
+        freshen_rs::workload::macrotrace::synth::write_csv(
+            &synth,
+            std::io::BufWriter::new(file),
+        )
+        .unwrap();
+    }
+    let seeds = [7u64];
+    let from_synth = run_multi(&cfg(2), &seeds, &SweepRunner::new(2)).unwrap();
+    let mut csv_cfg = cfg(8);
+    csv_cfg.source = TraceSource::Csv(path);
+    let from_csv = run_multi(&csv_cfg, &seeds, &SweepRunner::new(4)).unwrap();
+    assert_eq!(from_synth.digest(), from_csv.digest());
+    assert_eq!(from_synth.trace_rows, from_csv.trace_rows);
+    assert_eq!(from_csv.skipped_rows, 0);
+}
+
+#[test]
+fn prop_any_shard_and_parallel_combination_merges_identically() {
+    // Property form: for randomized small traces, run seeds, shard counts
+    // and worker counts, the merged digest always equals the serial
+    // 1-shard merge. Complements the pinned 1/2/8 × 1/4 matrix above.
+    use freshen_rs::testkit::prop::forall;
+    forall("azure-macro shard/parallel invariance", 4, |g| {
+        let trace = SynthTraceCfg {
+            apps: g.usize(6, 18),
+            minutes: g.usize(6, 12),
+            seed: g.u64(0, u64::MAX - 1),
+            ..SynthTraceCfg::default()
+        };
+        let seed = g.u64(0, u64::MAX - 1);
+        let shards = g.usize(2, 9);
+        let parallel = g.usize(2, 6);
+        let mk = |n: usize| {
+            let mut c = AzureMacroCfg::new(TraceSource::Synth(trace.clone()));
+            c.shards = n;
+            c.warmup_minutes = 2;
+            c.variants = vec![Variant::Both];
+            c
+        };
+        let reference = run_multi(&mk(1), &[seed], &SweepRunner::new(1))
+            .expect("reference")
+            .digest();
+        let sharded = run_multi(&mk(shards), &[seed], &SweepRunner::new(parallel))
+            .expect("sharded")
+            .digest();
+        assert_eq!(reference, sharded, "shards={shards} parallel={parallel}");
+    });
+}
+
+#[test]
+fn benchmark_actually_exercises_the_platform() {
+    let r = run_multi(&cfg(2), &[7], &SweepRunner::new(2)).expect("run");
+    let base = &r.variants[0].1;
+    let both = &r.variants[1].1;
+    assert!(base.invocations > 500, "trace too small: {}", base.invocations);
+    assert!(base.cold_starts > 0, "cold starts must appear");
+    assert_eq!(base.freshens_started, 0);
+    assert!(both.freshens_completed > 0, "full system freshens");
+    assert!(both.freshen_hits > 0, "freshen produces hits");
+    assert!(both.p50_ms() > 0.0 && both.p99_ms() >= both.p50_ms());
+    // Freshen must not lose work: both variants replay the same trace.
+    assert_eq!(base.functions, both.functions);
+    assert_eq!(base.apps, both.apps);
+}
