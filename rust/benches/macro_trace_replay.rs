@@ -1,14 +1,19 @@
 //! Bench: Azure-trace macro pipeline — ingest throughput (rows/s and
 //! invocation-counts/s through the streaming CSV reader) and replay
 //! throughput (simulated invocations/s through the full platform), serial
-//! vs sharded, plus the end-to-end `azure-macro` grid rate.
+//! vs sharded, per-app vs shared-pool, plus the end-to-end `azure-macro`
+//! grid rate. The printed `sim events` figures are also the visibility
+//! check for the stale-idle-timer fix: superseded eviction checks are
+//! cancelled instead of executing as no-ops, so event counts track real
+//! work.
 
 use std::io::BufWriter;
 
 use freshen_rs::experiments::SweepRunner;
 use freshen_rs::testkit::bench::{throughput, time_once};
+use freshen_rs::util::config::KeepAliveKind;
 use freshen_rs::workload::macrotrace::ingest::AzureTraceReader;
-use freshen_rs::workload::macrotrace::replay::ReplayCfg;
+use freshen_rs::workload::macrotrace::replay::{PoolMode, ReplayCfg};
 use freshen_rs::workload::macrotrace::shard::{replay_sharded, TraceSource};
 use freshen_rs::workload::macrotrace::synth::{write_csv, SynthTraceCfg};
 
@@ -94,6 +99,35 @@ fn main() {
              {elapsed:?}  ({rate:.0} inv/s, x{:.2} vs serial)",
             sharded.metrics.invocations,
             rate / serial_rate.max(1e-9)
+        );
+    }
+
+    // --- shared-pool contention replay -------------------------------
+    // One memory-bounded world per shard: tenants compete for warm
+    // containers, so keep-alive policy shows up in the eviction mix.
+    for kind in [KeepAliveKind::FixedTtl, KeepAliveKind::HybridHistogram] {
+        let mut shared = cfg.clone();
+        shared.pool = PoolMode::Shared;
+        shared.base.keep_alive = kind;
+        shared.base.memory_accounting =
+            freshen_rs::util::config::MemoryAccounting::FunctionMb;
+        let (out, elapsed) = time_once(|| {
+            replay_sharded(&src, 4, &shared, &SweepRunner::new(4))
+                .expect("shared-pool replay")
+        });
+        let m = &out.metrics;
+        println!(
+            "replay shared  (4 shards, keep-alive {:>6}): {} invocations, {} sim events \
+             in {elapsed:?}  (cold {:.2}%, evict idle/press {}/{}, warm kills {}, \
+             peak {} MB)",
+            kind.as_str(),
+            m.invocations,
+            m.sim_events,
+            100.0 * m.cold_start_rate(),
+            m.evictions_idle,
+            m.evictions_pressure,
+            m.warm_kills,
+            m.peak_resident_mb
         );
     }
 }

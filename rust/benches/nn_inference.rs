@@ -1,14 +1,18 @@
 //! Bench: native nn inference hot path — raw blocked-matmul throughput
-//! (serial vs row-parallel) and the end-to-end classifier forward across
-//! every AOT batch size, reported next to `simcore_hotpath`'s numbers.
+//! (serial vs row-parallel), the end-to-end classifier forward across
+//! every AOT batch size, and the pad-to-AOT-batch vs exact-size ("no
+//! pad") A/B through `ClassifierRuntime` — the dynamic batch-size
+//! selection the native engine enables.
 //!
 //! The model is the paper λ1 shape (3072 → 512 → 256 → 10) with seeded
-//! weights built in memory by `nn::gen::build_mlp` — no artifact files,
-//! no PJRT.
+//! weights: built in memory by `nn::gen::build_mlp` for the kernel
+//! benches, and written as a real artifact set for the runtime A/B — no
+//! PJRT either way.
 
-use freshen_rs::nn::gen::{build_mlp, GenSpec};
+use freshen_rs::nn::gen::{build_mlp, generate, GenSpec};
 use freshen_rs::nn::kernels::{matmul_bias_act_threads, par_threads};
 use freshen_rs::nn::tensor::Matrix;
+use freshen_rs::runtime::model::ClassifierRuntime;
 use freshen_rs::testkit::bench::bench;
 use freshen_rs::util::rng::Rng;
 
@@ -66,4 +70,44 @@ fn main() {
             r.mean_secs() * 1e3 / b as f64
         );
     }
+
+    // Pad-to-AOT vs exact-size A/B through the runtime: request sizes
+    // that fall BETWEEN the AOT batches pay the padding tax under the
+    // static policy; `--no-pad` executes them exactly. (PJRT keeps
+    // padding — its executables are compiled per batch size.)
+    println!("== pad-to-AOT vs --no-pad (ClassifierRuntime, native backend) ==");
+    let dir = std::env::temp_dir().join("freshen-nn-inference-bench-artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    generate(&dir, &spec).expect("write bench artifact set");
+    let mut padded = ClassifierRuntime::load_with(&dir, Default::default())
+        .expect("load padded runtime");
+    assert!(padded.pads_to_aot());
+    let mut exact = ClassifierRuntime::load_with(&dir, Default::default())
+        .expect("load exact runtime");
+    assert!(!exact.set_pad_to_aot(false), "native backend honours no-pad");
+    for &n in &[1usize, 2, 3, 5, 6, 9, 12, 13] {
+        let rows: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                (0..spec.input_dim)
+                    .map(|_| rng.uniform(-1.0, 1.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let aot = padded.pick_batch(n);
+        let rp = bench(&format!("runtime/pad  n={n} (runs as {aot})"), 1, 8, || {
+            let out = padded.infer(&rows).unwrap();
+            std::hint::black_box(out[0][0]);
+        });
+        let re = bench(&format!("runtime/exact n={n}"), 1, 8, || {
+            let out = exact.infer(&rows).unwrap();
+            std::hint::black_box(out[0][0]);
+        });
+        println!(
+            "  n={n}: pad {:.3} ms vs exact {:.3} ms ({:.2}x)",
+            rp.mean_secs() * 1e3,
+            re.mean_secs() * 1e3,
+            rp.mean_secs() / re.mean_secs().max(1e-12)
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -32,8 +32,9 @@ use crate::platform::world::World;
 use crate::runtime::backend::BackendKind;
 use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
-use crate::util::config::Config;
+use crate::util::config::{Config, KeepAliveKind};
 use crate::util::json::Json;
+use crate::workload::macrotrace::replay::PoolMode;
 use crate::workload::macrotrace::shard::TraceSource;
 use crate::workload::macrotrace::synth::SynthTraceCfg;
 
@@ -50,13 +51,21 @@ USAGE:
   repro azure-macro [--trace <file.csv|synth>] [--shards N] [--parallel N]
                     [--seeds N|a..b|a..=b] [--warmup-min N]
                     [--variants baseline,hist,chain,both]
+                    [--pool per-app|shared]   # shared: one memory-bounded
+                    #   world per shard, warm containers compete across apps
+                    [--keep-alive fixed,lru,hybrid]  # keep-alive ablation axis
+                    [--days N]                # synth day slices with pool +
+                    #   predictor state carried across day boundaries
+                    [--invokers N] [--invoker-mb MB]  # cluster sizing
                     [--apps N] [--minutes N] [--trace-seed N]  # synth knobs
-                    # platform-scale Azure-trace macro benchmark; the
-                    # merged metrics are byte-identical for ANY
-                    # --shards x --parallel combination
+                    # platform-scale Azure-trace macro benchmark; merged
+                    # metrics are byte-identical for ANY --shards x
+                    # --parallel combination (per-app pool), and for any
+                    # --parallel at fixed --shards (shared pool)
   repro gen-azure-trace <out.csv> [--apps N] [--minutes N] [--seed N]
   repro serve [--requests N] [--artifacts DIR] [--no-freshen]
               [--backend native|pjrt]  # executor: pure-rust nn (default) or PJRT
+              [--no-pad]               # native only: run exact batch sizes
               [--listen ADDR]          # HTTP mode: POST /classify, /freshen; GET /stats
   repro check-artifacts [--artifacts DIR] [--backend native|pjrt]
   repro gen-artifacts [DIR] [--tiny] [--input-dim N] [--hidden 512,256]
@@ -76,7 +85,7 @@ pub struct Opts {
 /// Flags that never take a value — without this list the generic parser
 /// would swallow a following positional as the flag's value
 /// (`gen-artifacts --tiny DIR` must keep DIR positional).
-const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny"];
+const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad"];
 
 pub fn parse_args(args: &[String]) -> Opts {
     let mut positional = Vec::new();
@@ -222,16 +231,22 @@ fn serve(opts: &Opts) -> Result<()> {
     let requests = opts.u64("requests", 64) as usize;
     let freshen = !opts.flag("no-freshen");
     let backend = backend_kind(opts)?;
+    let pad_to_aot = !opts.flag("no-pad");
+    if !pad_to_aot && backend == BackendKind::Pjrt {
+        bail!("--no-pad needs the native backend (PJRT executables have fixed batch sizes)");
+    }
     let cfg = ServeConfig {
         freshen,
         backend,
+        pad_to_aot,
         ..ServeConfig::default()
     };
     println!(
-        "starting serve engine: {} workers, freshen={}, backend={}, artifacts={}",
+        "starting serve engine: {} workers, freshen={}, backend={}{}, artifacts={}",
         cfg.workers,
         freshen,
         backend.as_str(),
+        if pad_to_aot { "" } else { " (no-pad)" },
         dir.display()
     );
     let engine = ServeEngine::start(dir, cfg).context("starting engine")?;
@@ -456,6 +471,30 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
     let mut cfg = AzureMacroCfg::new(source);
     cfg.shards = opts.u64("shards", cfg.shards as u64) as usize;
     cfg.warmup_minutes = opts.u64("warmup-min", cfg.warmup_minutes as u64) as usize;
+    cfg.days = opts.u64("days", cfg.days as u64) as usize;
+    if let Some(pool) = opts.flags.get("pool") {
+        cfg.pool = PoolMode::parse(pool)
+            .with_context(|| format!("unknown pool mode '{pool}' (use per-app|shared)"))?;
+    }
+    if let Some(list) = opts.flags.get("keep-alive") {
+        cfg.policies = list
+            .split(',')
+            .map(|k| {
+                KeepAliveKind::parse(k.trim()).with_context(|| {
+                    format!("unknown keep-alive policy '{k}' (use fixed|lru|hybrid)")
+                })
+            })
+            .collect::<Result<Vec<KeepAliveKind>>>()?;
+        if cfg.policies.is_empty() {
+            bail!("--keep-alive must name at least one policy");
+        }
+    }
+    if let Some(n) = opts.flags.get("invokers") {
+        cfg.invokers = Some(n.parse().context("--invokers")?);
+    }
+    if let Some(mb) = opts.flags.get("invoker-mb") {
+        cfg.invoker_memory_mb = Some(mb.parse().context("--invoker-mb")?);
+    }
     if let Some(list) = opts.flags.get("variants") {
         cfg.variants = list
             .split(',')
@@ -642,6 +681,48 @@ mod tests {
             "/nonexistent/azure.csv".into(),
         ];
         assert!(run(&missing).is_err(), "missing trace file must error");
+    }
+
+    #[test]
+    fn azure_macro_pool_policy_and_days_flags() {
+        let base = |extra: &[&str]| -> Vec<String> {
+            let mut v: Vec<String> = vec![
+                "azure-macro".into(),
+                "--apps".into(),
+                "10".into(),
+                "--minutes".into(),
+                "6".into(),
+                "--shards".into(),
+                "2".into(),
+                "--warmup-min".into(),
+                "2".into(),
+                "--variants".into(),
+                "baseline,both".into(),
+            ];
+            v.extend(extra.iter().map(|s| s.to_string()));
+            v
+        };
+        assert!(
+            run(&base(&["--pool", "shared", "--keep-alive", "fixed,lru,hybrid"])).is_ok(),
+            "shared pool with a keep-alive ablation must run"
+        );
+        assert!(
+            run(&base(&["--days", "2", "--pool", "shared", "--invoker-mb", "2048"])).is_ok(),
+            "multi-day shared replay must run"
+        );
+        assert!(run(&base(&["--pool", "bogus"])).is_err(), "bad pool mode errors");
+        assert!(
+            run(&base(&["--keep-alive", "bogus"])).is_err(),
+            "bad keep-alive policy errors"
+        );
+        let csv_days: Vec<String> = vec![
+            "azure-macro".into(),
+            "--trace".into(),
+            "/nonexistent/azure.csv".into(),
+            "--days".into(),
+            "2".into(),
+        ];
+        assert!(run(&csv_days).is_err(), "--days on a CSV source errors");
     }
 
     #[test]

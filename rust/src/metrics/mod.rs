@@ -20,6 +20,15 @@ pub enum StartKind {
     Warm,
 }
 
+/// Why a container was evicted (drives the per-cause counters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionCause {
+    /// The keep-alive policy retired an idle container.
+    Idle,
+    /// Memory pressure reclaimed it to admit another cold start.
+    Pressure,
+}
+
 /// Outcome record for one completed invocation.
 #[derive(Debug, Clone)]
 pub struct InvocationRecord {
@@ -56,6 +65,21 @@ pub struct MetricsHub {
     pub cold_starts: u64,
     pub warm_starts: u64,
     pub evictions: u64,
+    /// Evictions by cause: the keep-alive policy retired an idle
+    /// container, vs. memory pressure reclaimed one to admit a cold start.
+    pub evictions_idle: u64,
+    pub evictions_pressure: u64,
+    /// Pressure evictions that destroyed live warm state (the victim had
+    /// served at least one invocation since its cold start) — the
+    /// "warm kill" cost of running a contended cluster.
+    pub warm_kills: u64,
+    /// Peak resident container memory, MB (exact integer; tracked by the
+    /// world on every charge/release).
+    pub peak_resident_mb: u64,
+    /// Time integral of resident container memory, in MB·microseconds
+    /// (divide by 1e6 for MB·s). Integer so merged reports stay
+    /// order-independent.
+    pub resident_mb_us: u64,
     /// Per-app isolation re-inits (warm container swapped to a sibling
     /// function instead of cold-starting a new one).
     pub reinits: u64,

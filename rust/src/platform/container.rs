@@ -14,6 +14,7 @@ use crate::freshen::state::FrState;
 use crate::netsim::tcp::Connection;
 use crate::netsim::tls::TlsSession;
 use crate::platform::function::FunctionId;
+use crate::simcore::EventId;
 use crate::util::time::SimTime;
 
 /// Dense container identifier (index into the world's container table).
@@ -80,6 +81,17 @@ pub struct Container {
     pub runtime: RuntimeEnv,
     pub created_at: SimTime,
     pub last_used: SimTime,
+    /// Memory (MB) this container currently charges its invoker host
+    /// (0 while evicted). Set by the world at slot acquisition.
+    pub charged_mb: u32,
+    /// Reuse generation: bumped whenever the container leaves the idle
+    /// Warm state (dispatch, cold start, eviction). An idle-eviction
+    /// check scheduled for generation g is stale — and must skip — once
+    /// the generation moves on.
+    pub reuse_gen: u64,
+    /// The pending idle-eviction check, if any, so a re-release can
+    /// cancel it instead of piling up one no-op wheel event per release.
+    pub idle_timer: Option<EventId>,
     /// Statistics.
     pub cold_starts: u32,
     pub warm_starts: u32,
@@ -98,6 +110,9 @@ impl Container {
             runtime: RuntimeEnv::new(),
             created_at: now,
             last_used: now,
+            charged_mb: 0,
+            reuse_gen: 0,
+            idle_timer: None,
             cold_starts: 0,
             warm_starts: 0,
             freshen_runs: 0,
@@ -123,6 +138,7 @@ impl Container {
         self.state = ContainerState::Initializing;
         self.created_at = now;
         self.last_used = now;
+        self.reuse_gen += 1;
         self.cold_starts += 1;
     }
 
@@ -139,6 +155,7 @@ impl Container {
         self.state = ContainerState::Busy;
         self.warm_starts += 1;
         self.last_used = now;
+        self.reuse_gen += 1;
         self.runtime.invocations += 1;
     }
 
@@ -149,11 +166,16 @@ impl Container {
         self.last_used = now;
     }
 
-    /// Evict: destroy runtime-scoped state.
+    /// Evict: destroy runtime-scoped state. Memory release against the
+    /// invoker is the world's job (`World::evict_container`); this only
+    /// clears the container-side charge record.
     pub fn evict(&mut self) {
         self.state = ContainerState::Evicted;
         self.function = None;
         self.app = None;
+        self.charged_mb = 0;
+        self.reuse_gen += 1;
+        self.idle_timer = None;
         self.runtime.reset();
     }
 
@@ -230,6 +252,24 @@ mod tests {
         assert_eq!(c.state, ContainerState::Evicted);
         assert!(c.function.is_none());
         assert_eq!(c.runtime.cache.len(), 0);
+    }
+
+    #[test]
+    fn reuse_generation_tracks_idle_exits() {
+        let mut c = Container::new(0, 0, t(0));
+        let g0 = c.reuse_gen;
+        c.begin_cold_start("f", t(0));
+        c.finish_init(t(1));
+        let g1 = c.reuse_gen;
+        assert!(g1 > g0, "cold start leaves a new generation");
+        c.begin_run(t(2));
+        assert!(c.reuse_gen > g1, "dispatch invalidates pending idle checks");
+        c.finish_run(t(3));
+        let g2 = c.reuse_gen;
+        c.evict();
+        assert!(c.reuse_gen > g2, "eviction invalidates pending idle checks");
+        assert_eq!(c.charged_mb, 0);
+        assert!(c.idle_timer.is_none());
     }
 
     #[test]

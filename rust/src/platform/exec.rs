@@ -18,12 +18,13 @@
 use crate::freshen::hooks::FreshenAction;
 use crate::freshen::state::{Completer, FrResult};
 use crate::freshen::wrappers::{fr_fetch_decision, fr_warm_decision, WrapperDecision};
-use crate::metrics::{InvocationRecord, StartKind};
+use crate::metrics::{EvictionCause, InvocationRecord, StartKind};
 use crate::netsim::tcp::{ConnState, TransferDirection};
 use crate::netsim::warm::{warm_cwnd, WarmPolicy};
 use crate::platform::container::{ContainerId, ContainerState, RuntimeEnv};
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::Op;
+use crate::platform::keepalive::{IdleCtx, IdleVerdict};
 use crate::platform::world::{
     FreshenRunCtx, InvocationCtx, InvocationId, PendingFreshenCharge, PlatformSim, World,
 };
@@ -83,6 +84,7 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
 
     if let Some(cid) = world.find_warm(&function) {
         // Warm start: reserve immediately, body begins after dispatch cost.
+        cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
         sim.schedule(delay, move |sim, w| {
@@ -103,7 +105,10 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             .max_by_key(|c| c.last_used)
             .map(|c| c.id);
         if let Some(cid) = sibling {
+            cancel_idle_timer(sim, world, cid);
             world.containers[cid].reinit_for(&function, now);
+            let mb = world.charge_for_function(&function);
+            world.recharge_container(cid, mb, now);
             world.containers[cid].begin_run(now);
             world.metrics.reinits += 1;
             let delay = world.config.warm_start + world.config.cold_start.mul_f64(0.25);
@@ -114,13 +119,12 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
         }
     }
 
-    let slot = world.acquire_slot(now).or_else(|| {
-        if world.config.allow_container_sharing {
-            steal_lru_warm(world)
-        } else {
-            None
-        }
-    });
+    // Cold start: charge the function's memory against the cluster; when
+    // it is full, the keep-alive policy may reclaim warm containers.
+    let mb = world.charge_for_function(&function);
+    let slot = world
+        .acquire_slot(now, mb)
+        .or_else(|| evict_for_pressure(sim, world, mb, now));
 
     if let Some(cid) = slot {
         let app = app_of(world, &function);
@@ -138,19 +142,85 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
     world.queues.entry(function).or_default().push_back(inv);
 }
 
-/// Evict the least-recently-used warm container (container sharing ON,
-/// §2 [13]: when sharing is allowed a busy cluster repurposes containers
-/// instead of queueing, trading someone's warm state away).
-fn steal_lru_warm(world: &mut World) -> Option<ContainerId> {
-    let victim = world
-        .containers
-        .iter()
-        .filter(|c| c.state == ContainerState::Warm)
-        .min_by_key(|c| c.last_used)?
-        .id;
-    world.containers[victim].evict();
-    world.metrics.evictions += 1;
-    Some(victim)
+/// Memory pressure: ask the keep-alive policy for warm victims until the
+/// `mb` charge fits (one eviction per 256 MB slot under uniform
+/// accounting — the historical LRU steal — possibly several small
+/// containers for one heavy function under per-function accounting).
+/// Victims only come from hosts that can actually make room (free +
+/// reclaimable-warm memory covers the charge), so an oversized request
+/// never cannibalises warm state it can't use; under uniform accounting
+/// every warm container's host qualifies, preserving the legacy global
+/// LRU choice. Returns the acquired slot, or `None` when the policy
+/// forbids pressure eviction or no host can be made to fit.
+///
+/// NOTE: an in-flight freshen run on a reclaimed container keeps
+/// stepping against the recycled slot (legacy semantics, kept for the
+/// byte-identical default-path guarantee); prefetch staleness is bounded
+/// by the version checks in `fr_fetch_decision`. A container-incarnation
+/// guard for freshen runs is an open ROADMAP item.
+fn evict_for_pressure(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    mb: u32,
+    now: SimTime,
+) -> Option<ContainerId> {
+    let policy = world.keep_alive.clone();
+    if !policy.evicts_under_pressure(&world.config) {
+        return None;
+    }
+    // Once a victim's host is chosen, later rounds stay on it while it
+    // can still make room: the evictions then pay off on the host that
+    // receives the container instead of scattering warm kills across the
+    // cluster. (The first pick is still the policy's global choice, so
+    // the uniform-slot steal — which always admits after one eviction —
+    // is byte-identical to the historical global LRU.)
+    let mut target: Option<usize> = None;
+    loop {
+        // Recompute host feasibility each round: a host qualifies if its
+        // capacity admits the charge at all and evicting warm state could
+        // actually free enough memory on it.
+        let mut reclaimable = vec![0u64; world.invokers.len()];
+        for c in &world.containers {
+            if c.state == ContainerState::Warm {
+                reclaimable[c.invoker] += c.charged_mb as u64;
+            }
+        }
+        let host_ok: Vec<bool> = world
+            .invokers
+            .iter()
+            .map(|inv| {
+                inv.capacity_mb >= mb as u64
+                    && inv.free_mb() + reclaimable[inv.id] >= mb as u64
+            })
+            .collect();
+        let masked: Vec<bool> = match target {
+            Some(t) if host_ok[t] => host_ok
+                .iter()
+                .enumerate()
+                .map(|(i, &ok)| ok && i == t)
+                .collect(),
+            _ => {
+                target = None;
+                host_ok
+            }
+        };
+        let victim = match policy.pressure_victim(&world.containers, &masked) {
+            Some(v) => v,
+            // The locked host ran dry without fitting: fall back to the
+            // full feasible set next round.
+            None if target.is_some() => {
+                target = None;
+                continue;
+            }
+            None => return None,
+        };
+        target = Some(world.containers[victim].invoker);
+        cancel_idle_timer(sim, world, victim);
+        world.evict_container(victim, EvictionCause::Pressure, now);
+        if let Some(cid) = world.acquire_slot(now, mb) {
+            return Some(cid);
+        }
+    }
 }
 
 /// The container is ours and the runtime's `run` hook fired: walk the ops.
@@ -568,6 +638,7 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
         .get_mut(&function)
         .and_then(|q| q.pop_front())
     {
+        cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
         sim.schedule(delay, move |sim, w| {
@@ -575,18 +646,99 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
         });
         return;
     }
-    // Otherwise schedule the idle-eviction check.
-    let idle = world.config.idle_eviction;
-    sim.schedule(idle, move |sim, w| {
-        let c = &w.containers[cid];
-        if c.state == ContainerState::Warm && c.idle_for(sim.now()) >= idle {
-            w.containers[cid].evict();
-            w.metrics.evictions += 1;
-            // The freed slot may unblock a queued invocation of another
-            // function.
-            redispatch_pending(sim, w);
+    // Otherwise hand the idle container to the keep-alive policy. A
+    // pressure-only policy arms no timer — and therefore would never
+    // reach `redispatch_pending` through an idle eviction — so it gives
+    // queued work of other functions its chance right now: the idle
+    // container is exactly the reclaimable memory a queued cold start
+    // needs. (Timer-based policies keep the historical behavior: queued
+    // work waits for the eviction.)
+    if !schedule_idle_check(sim, world, cid) {
+        redispatch_pending(sim, world);
+    }
+}
+
+// ====================================================================
+// Keep-alive: policy-driven idle eviction
+// ====================================================================
+
+/// Cancel the container's pending idle check, if any. Called whenever
+/// the container leaves the idle Warm state, so a hot container never
+/// accumulates superseded no-op wheel events (it used to gather one per
+/// release).
+fn cancel_idle_timer(sim: &mut PlatformSim, world: &mut World, cid: ContainerId) {
+    if let Some(ev) = world.containers[cid].idle_timer.take() {
+        sim.cancel(ev);
+    }
+}
+
+/// Ask the policy when to check on a container that just went idle, and
+/// arm (or replace) its idle timer. The check closure is stamped with the
+/// container's reuse generation: a dispatch or eviction in the meantime
+/// bumps the generation, turning any timer that escaped cancellation into
+/// a guaranteed no-op. Returns whether a timer was armed (`false` for
+/// pressure-only policies).
+fn schedule_idle_check(sim: &mut PlatformSim, world: &mut World, cid: ContainerId) -> bool {
+    let policy = world.keep_alive.clone();
+    let delay = {
+        let ctx = IdleCtx {
+            now: sim.now(),
+            container: &world.containers[cid],
+            config: &world.config,
+            hist_pred: &world.hist_pred,
+        };
+        policy.idle_check_after(&ctx)
+    };
+    let Some(delay) = delay else {
+        return false; // pressure-only policy: no timer at all
+    };
+    cancel_idle_timer(sim, world, cid);
+    arm_idle_check(sim, world, cid, delay);
+    true
+}
+
+fn arm_idle_check(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    cid: ContainerId,
+    delay: SimDuration,
+) {
+    let gen = world.containers[cid].reuse_gen;
+    let ev = sim.schedule(delay, move |sim, w| idle_check_fired(sim, w, cid, gen));
+    world.containers[cid].idle_timer = Some(ev);
+}
+
+fn idle_check_fired(sim: &mut PlatformSim, world: &mut World, cid: ContainerId, gen: u64) {
+    let now = sim.now();
+    {
+        let c = &mut world.containers[cid];
+        // Stale: the container was dispatched, recycled or evicted since
+        // this check was armed.
+        if c.reuse_gen != gen || c.state != ContainerState::Warm {
+            return;
         }
-    });
+        c.idle_timer = None;
+    }
+    let policy = world.keep_alive.clone();
+    let verdict = {
+        let ctx = IdleCtx {
+            now,
+            container: &world.containers[cid],
+            config: &world.config,
+            hist_pred: &world.hist_pred,
+        };
+        policy.idle_verdict(&ctx)
+    };
+    match verdict {
+        IdleVerdict::Evict => {
+            world.evict_container(cid, EvictionCause::Idle, now);
+            // The freed memory may unblock a queued invocation of another
+            // function.
+            redispatch_pending(sim, world);
+        }
+        IdleVerdict::Recheck(delay) => arm_idle_check(sim, world, cid, delay),
+        IdleVerdict::Keep => {}
+    }
 }
 
 /// Pop one queued invocation (any function) and retry its dispatch; used
@@ -695,7 +847,10 @@ pub fn start_freshen(
         Some(cid) => cid,
         None => {
             // Pre-provision: freshen composes with cold-start avoidance.
-            let cid = world.acquire_slot(now)?;
+            // (It never evicts anyone for the privilege — speculative work
+            // only uses genuinely free memory.)
+            let mb = world.charge_for_function(function);
+            let cid = world.acquire_slot(now, mb)?;
             let app = app_of(world, function);
             world.containers[cid].begin_cold_start_for_app(function, &app, now);
             let f = function.to_string();

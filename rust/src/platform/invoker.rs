@@ -1,9 +1,20 @@
-//! Invoker hosts: per-host container pools.
+//! Invoker hosts: per-host, memory-accounted container pools.
 //!
 //! OpenWhisk's controller dispatches activations to *invokers*, each of
-//! which manages a bounded pool of containers. We model the pool bound
-//! (memory pressure is the reason container resources are limited and
-//! sharing policies matter, §2 [13]).
+//! which manages a bounded pool of containers. The bound is **memory**:
+//! a host has `capacity_mb` of container memory, and every resident
+//! container charges it (memory pressure is the reason container
+//! resources are limited and sharing policies matter, §2 [13]).
+//!
+//! Under [`MemoryAccounting::UniformSlot`] every container charges one
+//! uniform 256 MB slot, which makes the MB bound arithmetically identical
+//! to the historical `containers_per_invoker` count bound. Under
+//! [`MemoryAccounting::FunctionMb`] a container charges its function's
+//! declared `memory_mb`, so a 4 GB model server really does displace
+//! sixteen 256 MB lambdas.
+//!
+//! [`MemoryAccounting::UniformSlot`]: crate::util::config::MemoryAccounting
+//! [`MemoryAccounting::FunctionMb`]: crate::util::config::MemoryAccounting
 
 use crate::platform::container::ContainerId;
 
@@ -13,23 +24,45 @@ pub struct Invoker {
     pub id: usize,
     /// Containers resident on this host (indices into the world table).
     pub containers: Vec<ContainerId>,
-    /// Maximum resident containers.
-    pub capacity: usize,
+    /// Memory capacity, MB.
+    pub capacity_mb: u64,
+    /// Memory charged by live (non-evicted) containers, MB.
+    pub used_mb: u64,
 }
 
 impl Invoker {
-    pub fn new(id: usize, capacity: usize) -> Invoker {
+    pub fn new(id: usize, capacity_mb: u64) -> Invoker {
         Invoker {
             id,
             containers: Vec::new(),
-            capacity,
+            capacity_mb,
+            used_mb: 0,
         }
     }
 
-    pub fn has_capacity(&self) -> bool {
-        self.containers.len() < self.capacity
+    /// Free memory, MB.
+    pub fn free_mb(&self) -> u64 {
+        self.capacity_mb.saturating_sub(self.used_mb)
     }
 
+    /// Can this host charge another `mb` of container memory?
+    pub fn has_room(&self, mb: u64) -> bool {
+        self.free_mb() >= mb
+    }
+
+    /// Charge `mb` against the host (a container cold-starting here).
+    /// May transiently exceed capacity only through re-init recharges;
+    /// plain admission always checks [`Invoker::has_room`] first.
+    pub fn charge(&mut self, mb: u64) {
+        self.used_mb = self.used_mb.saturating_add(mb);
+    }
+
+    /// Release `mb` back to the host (a container evicted).
+    pub fn release(&mut self, mb: u64) {
+        self.used_mb = self.used_mb.saturating_sub(mb);
+    }
+
+    /// Container slots ever created on this host (live + evicted).
     pub fn occupancy(&self) -> usize {
         self.containers.len()
     }
@@ -40,12 +73,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn capacity_accounting() {
-        let mut inv = Invoker::new(0, 2);
-        assert!(inv.has_capacity());
-        inv.containers.push(0);
-        inv.containers.push(1);
-        assert!(!inv.has_capacity());
-        assert_eq!(inv.occupancy(), 2);
+    fn memory_accounting() {
+        let mut inv = Invoker::new(0, 512);
+        assert!(inv.has_room(512));
+        inv.charge(256);
+        assert_eq!(inv.free_mb(), 256);
+        assert!(inv.has_room(256));
+        assert!(!inv.has_room(257));
+        inv.charge(256);
+        assert!(!inv.has_room(1));
+        inv.release(256);
+        assert!(inv.has_room(256));
+        // Releases never underflow.
+        inv.release(10_000);
+        assert_eq!(inv.used_mb, 0);
+        assert_eq!(inv.free_mb(), 512);
     }
 }

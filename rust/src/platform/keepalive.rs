@@ -1,0 +1,379 @@
+//! Pluggable container keep-alive: who decides when warm state dies.
+//!
+//! The executor used to hard-code one answer — a fixed idle TTL scheduled
+//! inline in `exec.rs`, plus an LRU steal when container sharing was on.
+//! [`KeepAlivePolicy`] extracts both decision points behind a trait:
+//!
+//! - **idle**: a container just went Warm with an empty queue. The policy
+//!   says when to check on it ([`KeepAlivePolicy::idle_check_after`]) and,
+//!   when the check fires, whether to evict, keep, or re-check later
+//!   ([`KeepAlivePolicy::idle_verdict`]).
+//! - **pressure**: a cold start found no free memory. The policy says
+//!   whether reclaiming warm containers is allowed at all
+//!   ([`KeepAlivePolicy::evicts_under_pressure`]) and which victim dies
+//!   ([`KeepAlivePolicy::pressure_victim`]).
+//!
+//! Three implementations reproduce the design space the lifecycle-control
+//! literature compares (SPES, slot-survival prediction):
+//!
+//! - [`FixedTtl`] — evict after `config.idle_eviction` of idleness;
+//!   pressure reclaim only when `allow_container_sharing` is on. This is
+//!   byte-identical to the historical inline behavior and is the default.
+//! - [`LruPressure`] — never evict on idle; reclaim the LRU warm
+//!   container only when memory pressure demands it.
+//! - [`HybridHistogram`] — per-function keep-alive windows derived from
+//!   the IAT [`HistogramPredictor`]: predictable functions stay warm
+//!   until just past their predicted next arrival (even beyond the fixed
+//!   TTL), unpredictable ones are retired after a short fallback TTL,
+//!   and pressure reclaims LRU. Pre-warming ahead of the predicted
+//!   arrival rides the existing freshen/prediction path; this policy
+//!   contributes the survival half of the window.
+//!
+//! Policies are stateless (per-function state lives in the predictor),
+//! so the world holds one `Rc<dyn KeepAlivePolicy>` shared by every
+//! decision site.
+
+use std::rc::Rc;
+
+use crate::platform::container::{Container, ContainerId, ContainerState};
+use crate::predict::histogram::HistogramPredictor;
+use crate::util::config::{Config, KeepAliveKind};
+use crate::util::time::{SimDuration, SimTime};
+
+/// Everything an idle decision may consult. Narrow borrows (not
+/// `&World`) so the executor can hold the policy and the context at once.
+pub struct IdleCtx<'a> {
+    pub now: SimTime,
+    pub container: &'a Container,
+    pub config: &'a Config,
+    pub hist_pred: &'a HistogramPredictor,
+}
+
+/// Outcome of a fired idle check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdleVerdict {
+    /// Retire the container now.
+    Evict,
+    /// Leave it warm with no further checks (a later release re-arms).
+    Keep,
+    /// Leave it warm and check again after this delay.
+    Recheck(SimDuration),
+}
+
+/// A container keep-alive policy (see module docs).
+pub trait KeepAlivePolicy {
+    /// Stable identifier (reports, CLI echo).
+    fn name(&self) -> &'static str;
+
+    /// Delay until the idle check for a container that just went idle;
+    /// `None` schedules no check (the container lives until pressure).
+    fn idle_check_after(&self, ctx: &IdleCtx) -> Option<SimDuration>;
+
+    /// Decide the fate of a still-idle container when its check fires.
+    fn idle_verdict(&self, ctx: &IdleCtx) -> IdleVerdict;
+
+    /// May a failed admission reclaim warm containers?
+    fn evicts_under_pressure(&self, config: &Config) -> bool;
+
+    /// Pick the pressure victim among resident containers whose host can
+    /// still make room (`host_ok[invoker]`); default: LRU warm — §2
+    /// [13]'s repurposing rule. Under uniform accounting every host with
+    /// a warm container is eligible, so this matches the historical
+    /// global-LRU steal exactly.
+    fn pressure_victim(
+        &self,
+        containers: &[Container],
+        host_ok: &[bool],
+    ) -> Option<ContainerId> {
+        lru_warm_victim(containers, host_ok)
+    }
+}
+
+/// The least-recently-used warm container on an eligible host, if any
+/// (ties break toward the lowest container id, matching the historical
+/// scan order).
+pub fn lru_warm_victim(containers: &[Container], host_ok: &[bool]) -> Option<ContainerId> {
+    containers
+        .iter()
+        .filter(|c| {
+            c.state == ContainerState::Warm && host_ok.get(c.invoker).copied().unwrap_or(false)
+        })
+        .min_by_key(|c| c.last_used)
+        .map(|c| c.id)
+}
+
+/// Build the policy a [`KeepAliveKind`] names.
+pub fn build(kind: KeepAliveKind) -> Rc<dyn KeepAlivePolicy> {
+    match kind {
+        KeepAliveKind::FixedTtl => Rc::new(FixedTtl),
+        KeepAliveKind::LruPressure => Rc::new(LruPressure),
+        KeepAliveKind::HybridHistogram => Rc::new(HybridHistogram::default()),
+    }
+}
+
+// ====================================================================
+// FixedTtl
+// ====================================================================
+
+/// Evict after a fixed idle TTL (`config.idle_eviction`); reclaim under
+/// pressure only when the platform allows container sharing. Byte-
+/// identical to the pre-trait inline executor logic (regression-tested in
+/// `tests/keepalive_policies.rs`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FixedTtl;
+
+impl KeepAlivePolicy for FixedTtl {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn idle_check_after(&self, ctx: &IdleCtx) -> Option<SimDuration> {
+        Some(ctx.config.idle_eviction)
+    }
+
+    fn idle_verdict(&self, ctx: &IdleCtx) -> IdleVerdict {
+        if ctx.container.idle_for(ctx.now) >= ctx.config.idle_eviction {
+            IdleVerdict::Evict
+        } else {
+            IdleVerdict::Keep
+        }
+    }
+
+    fn evicts_under_pressure(&self, config: &Config) -> bool {
+        config.allow_container_sharing
+    }
+}
+
+// ====================================================================
+// LruPressure
+// ====================================================================
+
+/// Keep warm containers forever; evict the LRU one only when a cold
+/// start needs the memory. Maximizes warm hits at low load, pays the
+/// warm-kill cost only when the cluster is genuinely full.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LruPressure;
+
+impl KeepAlivePolicy for LruPressure {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn idle_check_after(&self, _ctx: &IdleCtx) -> Option<SimDuration> {
+        None
+    }
+
+    fn idle_verdict(&self, _ctx: &IdleCtx) -> IdleVerdict {
+        IdleVerdict::Keep
+    }
+
+    fn evicts_under_pressure(&self, _config: &Config) -> bool {
+        true
+    }
+}
+
+// ====================================================================
+// HybridHistogram
+// ====================================================================
+
+/// Prediction-driven keep-alive windows (slot-survival style): keep a
+/// container warm until just past its function's predicted next arrival;
+/// fall back to a short TTL when the IAT history is absent or too
+/// scattered to trust. Pressure reclaims LRU.
+#[derive(Debug, Clone, Copy)]
+pub struct HybridHistogram {
+    /// Minimum predictor confidence to trust a window.
+    pub min_confidence: f64,
+    /// Slack past the predicted arrival before declaring it missed.
+    pub grace: SimDuration,
+    /// TTL for functions without a trustworthy prediction.
+    pub fallback_ttl: SimDuration,
+    /// Hard cap on any single keep-alive window.
+    pub max_window: SimDuration,
+}
+
+impl Default for HybridHistogram {
+    fn default() -> HybridHistogram {
+        HybridHistogram {
+            min_confidence: 0.2,
+            grace: SimDuration::from_secs(10),
+            fallback_ttl: SimDuration::from_secs(60),
+            // The IAT histogram spans an hour; windows never exceed it.
+            max_window: SimDuration::from_secs(3600),
+        }
+    }
+}
+
+impl HybridHistogram {
+    /// The keep-alive window for the container's function as seen from
+    /// `ctx.now`: predicted-IAT remainder + grace, or the fallback TTL.
+    /// `None` means the prediction window has already closed.
+    fn window(&self, ctx: &IdleCtx) -> Option<SimDuration> {
+        let function = ctx.container.function.as_deref()?;
+        match ctx.hist_pred.predict_next(function, ctx.now) {
+            Some(p) if p.confidence >= self.min_confidence => {
+                if p.expected_at > ctx.now {
+                    Some((p.expected_at.since(ctx.now) + self.grace).min(self.max_window))
+                } else {
+                    // The modal arrival is already due ("imminent"); the
+                    // grace we would grant has effectively been spent by
+                    // the time a verdict fires, so the window is closed.
+                    None
+                }
+            }
+            _ => Some(self.fallback_ttl),
+        }
+    }
+}
+
+impl KeepAlivePolicy for HybridHistogram {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn idle_check_after(&self, ctx: &IdleCtx) -> Option<SimDuration> {
+        // At release time even a closed window gets the grace period: the
+        // predicted arrival may be microseconds away.
+        Some(self.window(ctx).unwrap_or(self.grace).max(SimDuration::from_secs(1)))
+    }
+
+    fn idle_verdict(&self, ctx: &IdleCtx) -> IdleVerdict {
+        match self.window(ctx) {
+            // A live prediction window extends the container's life —
+            // re-check at its end rather than holding the TTL fixed.
+            Some(w) if ctx.container.idle_for(ctx.now) < w => {
+                IdleVerdict::Recheck(w.max(SimDuration::from_secs(1)))
+            }
+            _ => IdleVerdict::Evict,
+        }
+    }
+
+    fn evicts_under_pressure(&self, _config: &Config) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    fn warm_container(id: ContainerId, function: &str, last_used: SimTime) -> Container {
+        let mut c = Container::new(id, 0, SimTime::ZERO);
+        c.begin_cold_start(function, SimTime::ZERO);
+        c.finish_init(SimTime::ZERO);
+        c.last_used = last_used;
+        c
+    }
+
+    fn ctx<'a>(
+        now: SimTime,
+        container: &'a Container,
+        config: &'a Config,
+        hist: &'a HistogramPredictor,
+    ) -> IdleCtx<'a> {
+        IdleCtx {
+            now,
+            container,
+            config,
+            hist_pred: hist,
+        }
+    }
+
+    #[test]
+    fn fixed_ttl_matches_legacy_constants() {
+        let cfg = Config::default();
+        let hist = HistogramPredictor::new();
+        let c = warm_container(0, "f", t(0));
+        let p = FixedTtl;
+        let cx = ctx(t(0), &c, &cfg, &hist);
+        assert_eq!(p.idle_check_after(&cx), Some(cfg.idle_eviction));
+        // Exactly at the TTL: evict (the legacy closure used `>=`).
+        let cx = ctx(SimTime::ZERO + cfg.idle_eviction, &c, &cfg, &hist);
+        assert_eq!(p.idle_verdict(&cx), IdleVerdict::Evict);
+        // A container reused since the check was scheduled is kept.
+        let cx = ctx(t(1), &c, &cfg, &hist);
+        assert_eq!(p.idle_verdict(&cx), IdleVerdict::Keep);
+        // Pressure reclaim is gated on the sharing switch, like the old
+        // `steal_lru_warm` call site.
+        assert!(!p.evicts_under_pressure(&cfg));
+        let mut sharing = cfg.clone();
+        sharing.allow_container_sharing = true;
+        assert!(p.evicts_under_pressure(&sharing));
+    }
+
+    #[test]
+    fn pressure_victim_is_lru_warm_with_stable_ties() {
+        let ok = [true];
+        let a = warm_container(0, "a", t(30));
+        let b = warm_container(1, "b", t(10));
+        let mut busy = warm_container(2, "c", t(1));
+        busy.begin_run(t(40)); // busy containers are never victims
+        let d = warm_container(3, "d", t(10)); // ties with b -> lower id wins
+        let pool = vec![a, b, busy, d];
+        assert_eq!(lru_warm_victim(&pool, &ok), Some(1));
+        // Hosts that cannot make room are excluded entirely.
+        assert_eq!(lru_warm_victim(&pool, &[false]), None);
+        // All-busy pools have no victim.
+        let mut all_busy = pool;
+        for c in &mut all_busy {
+            if c.state == ContainerState::Warm {
+                c.begin_run(t(50));
+            }
+        }
+        assert_eq!(lru_warm_victim(&all_busy, &ok), None);
+    }
+
+    #[test]
+    fn lru_pressure_never_times_out_but_always_reclaims() {
+        let cfg = Config::default();
+        let hist = HistogramPredictor::new();
+        let c = warm_container(0, "f", t(0));
+        let p = LruPressure;
+        let cx = ctx(t(100_000), &c, &cfg, &hist);
+        assert_eq!(p.idle_check_after(&cx), None);
+        assert_eq!(p.idle_verdict(&cx), IdleVerdict::Keep);
+        assert!(p.evicts_under_pressure(&cfg), "pressure reclaim is unconditional");
+    }
+
+    #[test]
+    fn hybrid_window_tracks_the_predictor() {
+        let cfg = Config::default();
+        let p = HybridHistogram::default();
+        // Periodic function: 20 arrivals every 60 s.
+        let mut hist = HistogramPredictor::new();
+        for i in 0..20 {
+            hist.observe("cron", t(i * 60));
+        }
+        let c = warm_container(0, "cron", t(19 * 60));
+        let cx = ctx(t(19 * 60), &c, &cfg, &hist);
+        let w = p.idle_check_after(&cx).unwrap();
+        // Window ~= modal IAT (60 s +/- half a 15 s bin) + 10 s grace.
+        assert!(
+            w >= SimDuration::from_secs(55) && w <= SimDuration::from_secs(85),
+            "window {w}"
+        );
+        // While the window is open the verdict extends, after it closes
+        // (prediction missed) the verdict evicts.
+        assert!(matches!(p.idle_verdict(&cx), IdleVerdict::Recheck(_)));
+        let cx = ctx(t(19 * 60 + 120), &c, &cfg, &hist);
+        assert_eq!(p.idle_verdict(&cx), IdleVerdict::Evict);
+        // Unknown functions get the short fallback TTL, far below the
+        // fixed policy's 600 s.
+        let unknown = warm_container(1, "ghost", t(0));
+        let cx = ctx(t(0), &unknown, &cfg, &hist);
+        assert_eq!(p.idle_check_after(&cx), Some(p.fallback_ttl));
+        assert!(p.fallback_ttl < cfg.idle_eviction);
+    }
+
+    #[test]
+    fn build_maps_kinds_to_policies() {
+        for kind in KeepAliveKind::all() {
+            let policy = build(kind);
+            assert_eq!(policy.name(), kind.as_str());
+        }
+    }
+}

@@ -24,6 +24,7 @@ pub mod endpoint;
 pub mod exec;
 pub mod function;
 pub mod invoker;
+pub mod keepalive;
 pub mod registry;
 pub mod world;
 

@@ -7,16 +7,18 @@
 //! so network, container and predictor state can be touched in one event.
 
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 
 use crate::util::fxhash::FxHashMap;
 
 use crate::billing::Ledger;
 use crate::freshen::policy::FreshenGate;
-use crate::metrics::{MetricsHub, StartKind};
-use crate::platform::container::{Container, ContainerId};
+use crate::metrics::{EvictionCause, MetricsHub, StartKind};
+use crate::platform::container::{Container, ContainerId, ContainerState};
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::FunctionId;
 use crate::platform::invoker::Invoker;
+use crate::platform::keepalive::{self, KeepAlivePolicy};
 use crate::platform::registry::Registry;
 use crate::predict::chain::ChainPredictor;
 use crate::predict::confidence::PredictionTracker;
@@ -24,7 +26,7 @@ use crate::predict::histogram::HistogramPredictor;
 use crate::predict::learned::LearnedScorer;
 use crate::simcore::waitlist::WaitList;
 use crate::simcore::Sim;
-use crate::util::config::Config;
+use crate::util::config::{Config, MemoryAccounting, UNIFORM_SLOT_MB};
 use crate::util::rng::Rng;
 use crate::util::time::{SimDuration, SimTime};
 
@@ -104,6 +106,15 @@ pub struct World {
     /// invocation (the standalone-function path). Ablations that inject
     /// their own prediction streams turn this off to avoid contamination.
     pub auto_hist_predict: bool,
+    /// The container keep-alive policy (built from `config.keep_alive`;
+    /// swappable for tests/ablations). Shared by every decision site.
+    pub keep_alive: Rc<dyn KeepAlivePolicy>,
+    /// Total memory currently charged by live containers, MB (exact
+    /// integer mirror of the invokers' `used_mb` sums).
+    pub resident_mb: u64,
+    /// When `resident_mb` last changed (drives the MB·µs integral in
+    /// `metrics.resident_mb_us`).
+    resident_last_change: SimTime,
 }
 
 /// The simulator type every experiment drives.
@@ -113,13 +124,18 @@ impl World {
     pub fn new(config: Config) -> World {
         let rng = Rng::new(config.seed);
         let gate = FreshenGate::new(config.freshen.clone());
+        let capacity_mb = config.invoker_capacity_mb();
         let invokers = (0..config.invokers)
-            .map(|i| Invoker::new(i, config.containers_per_invoker))
+            .map(|i| Invoker::new(i, capacity_mb))
             .collect();
+        let keep_alive = keepalive::build(config.keep_alive);
         World {
             rng,
             gate,
             invokers,
+            keep_alive,
+            resident_mb: 0,
+            resident_last_change: SimTime::ZERO,
             registry: Registry::new(),
             containers: Vec::new(),
             endpoints: FxHashMap::default(),
@@ -159,7 +175,7 @@ impl World {
             .unwrap_or(SimDuration::from_millis(5))
     }
 
-    // ---- container pool -----------------------------------------------
+    // ---- container pool (memory-accounted) -----------------------------
 
     /// Find a warm container for `function`.
     pub fn find_warm(&self, function: &str) -> Option<ContainerId> {
@@ -169,35 +185,129 @@ impl World {
             .map(|c| c.id)
     }
 
-    /// Find (or create) a free container slot: an evicted container, or a
-    /// new slot on an invoker with capacity. Returns `None` when the
-    /// cluster is full.
-    pub fn acquire_slot(&mut self, now: SimTime) -> Option<ContainerId> {
-        if let Some(c) = self
+    /// The MB a container hosting `function` charges its invoker:
+    /// one uniform 256 MB slot, or the function's declared `memory_mb`
+    /// under per-function accounting.
+    pub fn charge_for_function(&self, function: &str) -> u32 {
+        match self.config.memory_accounting {
+            MemoryAccounting::UniformSlot => UNIFORM_SLOT_MB,
+            MemoryAccounting::FunctionMb => self
+                .registry
+                .function(function)
+                .map(|f| f.memory_mb.max(1))
+                .unwrap_or(UNIFORM_SLOT_MB),
+        }
+    }
+
+    /// Find a container slot with `memory_mb` of host memory behind it —
+    /// an evicted container on a host with room, or a new container on
+    /// the freest host — and charge the memory. Returns `None` when no
+    /// host can take the charge (the cluster is memory-full).
+    ///
+    /// Under uniform accounting this admits byte-identically to the old
+    /// count-bounded pool: an evicted slot's host always has a free slot's
+    /// worth of memory (its eviction released it), and "freest host" is
+    /// "least-occupied host" when every charge is equal.
+    pub fn acquire_slot(&mut self, now: SimTime, memory_mb: u32) -> Option<ContainerId> {
+        let mb = memory_mb as u64;
+        let reuse = self
             .containers
             .iter()
-            .find(|c| c.state == crate::platform::container::ContainerState::Evicted)
-        {
-            return Some(c.id);
+            .find(|c| {
+                c.state == ContainerState::Evicted && self.invokers[c.invoker].has_room(mb)
+            })
+            .map(|c| c.id);
+        let cid = match reuse {
+            Some(cid) => cid,
+            None => {
+                // Create a new container on the invoker with the most
+                // free memory (ties: lowest id).
+                let inv = self
+                    .invokers
+                    .iter_mut()
+                    .filter(|i| i.has_room(mb))
+                    .min_by_key(|i| i.used_mb)?;
+                let id = self.containers.len();
+                inv.containers.push(id);
+                let invoker_id = inv.id;
+                self.containers.push(Container::new(id, invoker_id, now));
+                id
+            }
+        };
+        self.charge_container(cid, memory_mb, now);
+        Some(cid)
+    }
+
+    /// Evict a container: release its memory charge, count the eviction
+    /// by cause, and destroy its runtime state. Idempotent on an already-
+    /// evicted container (no double release, no double count).
+    pub fn evict_container(&mut self, cid: ContainerId, cause: EvictionCause, now: SimTime) {
+        if self.containers[cid].state != ContainerState::Evicted {
+            let mb = self.containers[cid].charged_mb;
+            let inv = self.containers[cid].invoker;
+            self.invokers[inv].release(mb as u64);
+            self.note_resident_delta(now, -(mb as i64));
+            self.metrics.evictions += 1;
+            match cause {
+                EvictionCause::Idle => self.metrics.evictions_idle += 1,
+                EvictionCause::Pressure => {
+                    self.metrics.evictions_pressure += 1;
+                    if self.containers[cid].runtime.invocations > 0 {
+                        self.metrics.warm_kills += 1;
+                    }
+                }
+            }
         }
-        // Create a new container on the least-occupied invoker.
-        let inv = self
-            .invokers
-            .iter_mut()
-            .filter(|i| i.has_capacity())
-            .min_by_key(|i| i.occupancy())?;
-        let id = self.containers.len();
-        inv.containers.push(id);
-        let invoker_id = inv.id;
-        self.containers.push(Container::new(id, invoker_id, now));
-        Some(id)
+        self.containers[cid].evict();
+    }
+
+    /// Re-point a live container's memory charge at a different function
+    /// (per-app re-init). Under uniform accounting this is a no-op; under
+    /// per-function accounting the host may transiently exceed capacity
+    /// when the sibling is heavier — re-init trades that slack for the
+    /// kept runtime state.
+    pub fn recharge_container(&mut self, cid: ContainerId, memory_mb: u32, now: SimTime) {
+        let old = self.containers[cid].charged_mb;
+        if old == memory_mb {
+            return;
+        }
+        let inv = self.containers[cid].invoker;
+        self.invokers[inv].release(old as u64);
+        self.invokers[inv].charge(memory_mb as u64);
+        self.containers[cid].charged_mb = memory_mb;
+        self.note_resident_delta(now, memory_mb as i64 - old as i64);
+    }
+
+    fn charge_container(&mut self, cid: ContainerId, memory_mb: u32, now: SimTime) {
+        let inv = self.containers[cid].invoker;
+        self.invokers[inv].charge(memory_mb as u64);
+        self.containers[cid].charged_mb = memory_mb;
+        self.note_resident_delta(now, memory_mb as i64);
+    }
+
+    /// Advance the resident-memory integral to `now` and apply a change.
+    fn note_resident_delta(&mut self, now: SimTime, delta_mb: i64) {
+        let dt = now.since(self.resident_last_change).micros();
+        self.metrics.resident_mb_us = self
+            .metrics
+            .resident_mb_us
+            .saturating_add(self.resident_mb.saturating_mul(dt));
+        self.resident_last_change = now;
+        self.resident_mb = (self.resident_mb as i64).saturating_add(delta_mb).max(0) as u64;
+        self.metrics.peak_resident_mb = self.metrics.peak_resident_mb.max(self.resident_mb);
+    }
+
+    /// Flush the resident-memory integral up to `now` (call once before
+    /// reading `metrics.resident_mb_us` at the end of a run).
+    pub fn seal_resident_accounting(&mut self, now: SimTime) {
+        self.note_resident_delta(now, 0);
     }
 
     /// Total warm containers (reporting).
     pub fn warm_count(&self) -> usize {
         self.containers
             .iter()
-            .filter(|c| c.state == crate::platform::container::ContainerState::Warm)
+            .filter(|c| c.state == ContainerState::Warm)
             .count()
     }
 }
@@ -229,16 +339,81 @@ mod tests {
         cfg.invokers = 1;
         cfg.containers_per_invoker = 2;
         let mut w = World::new(cfg);
-        let a = w.acquire_slot(SimTime::ZERO).unwrap();
+        let a = w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).unwrap();
         w.containers[a].begin_cold_start("f", SimTime::ZERO);
-        let b = w.acquire_slot(SimTime::ZERO).unwrap();
+        let b = w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).unwrap();
         assert_ne!(a, b);
         w.containers[b].begin_cold_start("g", SimTime::ZERO);
-        // Pool is full now.
-        assert!(w.acquire_slot(SimTime::ZERO).is_none());
-        // Evicting frees the slot for reuse (same id).
-        w.containers[a].evict();
-        assert_eq!(w.acquire_slot(SimTime::ZERO), Some(a));
+        // Pool is full now (2 uniform slots = 512 MB charged).
+        assert_eq!(w.resident_mb, 2 * UNIFORM_SLOT_MB as u64);
+        assert!(w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).is_none());
+        // Evicting releases the memory and frees the slot for reuse
+        // (same id).
+        w.evict_container(a, EvictionCause::Idle, SimTime::ZERO);
+        assert_eq!(w.metrics.evictions_idle, 1);
+        assert_eq!(w.resident_mb, UNIFORM_SLOT_MB as u64);
+        assert_eq!(
+            w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB),
+            Some(a)
+        );
+    }
+
+    #[test]
+    fn function_mb_accounting_crowds_out_heavy_functions() {
+        let mut cfg = Config::default();
+        cfg.invokers = 1;
+        cfg.invoker_memory_mb = Some(1024);
+        cfg.memory_accounting = MemoryAccounting::FunctionMb;
+        let mut w = World::new(cfg);
+        // Three light containers fit; the 512 MB one then doesn't.
+        for f in ["a", "b", "c"] {
+            let cid = w.acquire_slot(SimTime::ZERO, 256).unwrap();
+            w.containers[cid].begin_cold_start(f, SimTime::ZERO);
+        }
+        assert_eq!(w.invokers[0].free_mb(), 256);
+        assert!(w.acquire_slot(SimTime::ZERO, 512).is_none());
+        // A 256 MB one still fits.
+        assert!(w.acquire_slot(SimTime::ZERO, 256).is_some());
+        assert_eq!(w.invokers[0].free_mb(), 0);
+        assert_eq!(w.metrics.peak_resident_mb, 1024);
+    }
+
+    #[test]
+    fn resident_integral_accumulates_mb_time() {
+        let mut cfg = Config::default();
+        cfg.invokers = 1;
+        let mut w = World::new(cfg);
+        let a = w.acquire_slot(SimTime::ZERO, 256).unwrap();
+        w.containers[a].begin_cold_start("f", SimTime::ZERO);
+        // 256 MB resident for 2 simulated seconds.
+        w.evict_container(a, EvictionCause::Pressure, SimTime(2_000_000));
+        w.seal_resident_accounting(SimTime(5_000_000));
+        assert_eq!(w.metrics.resident_mb_us, 256 * 2_000_000);
+        assert_eq!(w.metrics.evictions_pressure, 1);
+        // Never ran an invocation: a cold kill, not a warm kill.
+        assert_eq!(w.metrics.warm_kills, 0);
+        // Double eviction neither double-releases nor double-counts.
+        w.evict_container(a, EvictionCause::Pressure, SimTime(6_000_000));
+        assert_eq!(w.metrics.evictions, 1);
+        assert_eq!(w.resident_mb, 0);
+    }
+
+    #[test]
+    fn charge_for_function_follows_the_accounting_mode() {
+        let mut w = World::new(Config::default());
+        let mut spec = FunctionSpec::paper_lambda(
+            "big",
+            "app",
+            "store",
+            SimDuration::from_millis(10),
+        );
+        spec.memory_mb = 2048;
+        w.deploy(spec);
+        assert_eq!(w.charge_for_function("big"), UNIFORM_SLOT_MB);
+        assert_eq!(w.charge_for_function("ghost"), UNIFORM_SLOT_MB);
+        w.config.memory_accounting = MemoryAccounting::FunctionMb;
+        assert_eq!(w.charge_for_function("big"), 2048);
+        assert_eq!(w.charge_for_function("ghost"), UNIFORM_SLOT_MB);
     }
 
     #[test]

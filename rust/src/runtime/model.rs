@@ -22,6 +22,12 @@ pub struct ClassifierRuntime {
     backend: Box<dyn InferenceBackend>,
     pub kind: BackendKind,
     pub manifest: Manifest,
+    /// Pad each chunk up to the smallest AOT batch that fits (the static-
+    /// batch serving discipline). The native engine can execute any row
+    /// count, so this can be switched off (`--no-pad`) for exact-size
+    /// executions; PJRT executables are compiled per batch size and
+    /// always pad.
+    pad_to_aot: bool,
     /// Cumulative inference statistics.
     pub executions: u64,
     pub rows_served: u64,
@@ -46,11 +52,25 @@ impl ClassifierRuntime {
             backend,
             kind,
             manifest,
+            pad_to_aot: true,
             executions: 0,
             rows_served: 0,
             padded_rows: 0,
             exec_time: Duration::ZERO,
         })
+    }
+
+    /// Switch the pad-to-AOT-batch policy. A `false` is honoured only on
+    /// the native backend — PJRT executables exist per compiled batch
+    /// size, so they silently keep padding. Returns the effective value.
+    pub fn set_pad_to_aot(&mut self, pad: bool) -> bool {
+        self.pad_to_aot = pad || self.kind == BackendKind::Pjrt;
+        self.pad_to_aot
+    }
+
+    /// Is the pad-to-AOT-batch policy active?
+    pub fn pads_to_aot(&self) -> bool {
+        self.pad_to_aot
     }
 
     /// Largest AOT batch (one backend execution never exceeds this).
@@ -90,10 +110,16 @@ impl ClassifierRuntime {
         Ok(out)
     }
 
-    /// One padded backend execution for `rows.len() <= max_batch()` rows.
+    /// One backend execution for `rows.len() <= max_batch()` rows —
+    /// padded to the smallest fitting AOT batch, or exact-size when the
+    /// pad policy is off (native backend only).
     fn infer_chunk(&mut self, rows: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let dim = self.manifest.input_dim;
-        let b = self.pick_batch(rows.len());
+        let b = if self.pad_to_aot {
+            self.pick_batch(rows.len())
+        } else {
+            rows.len()
+        };
         // Pad to the artifact batch. Padded rows' outputs are discarded,
         // so the fill value is free to choose: use the normalize mean,
         // which standardizes to exactly 0.0 and lets the native kernel's

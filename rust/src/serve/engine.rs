@@ -51,6 +51,9 @@ pub struct ServeConfig {
     pub seed: u64,
     /// Inference executor (native rust or PJRT).
     pub backend: BackendKind,
+    /// Pad batches up to the smallest AOT size that fits (`false` runs
+    /// exact batch sizes; native backend only — PJRT always pads).
+    pub pad_to_aot: bool,
 }
 
 impl Default for ServeConfig {
@@ -67,6 +70,7 @@ impl Default for ServeConfig {
             link: Site::Remote.link(),
             seed: 0xE2E,
             backend: BackendKind::default(),
+            pad_to_aot: true,
         }
     }
 }
@@ -173,10 +177,19 @@ impl ServeEngine {
         let max_batch_cfg = config.max_batch;
         let window = config.batch_window;
         let backend = config.backend;
+        let pad_to_aot = config.pad_to_aot;
         let infer_thread = std::thread::Builder::new()
             .name("inference".into())
             .spawn(move || {
-                inference_loop(artifacts_dir, backend, infer_rx, ready_tx, max_batch_cfg, window)
+                inference_loop(
+                    artifacts_dir,
+                    backend,
+                    pad_to_aot,
+                    infer_rx,
+                    ready_tx,
+                    max_batch_cfg,
+                    window,
+                )
             })
             .context("spawning inference thread")?;
         let (_max_batch, input_dim) = ready_rx
@@ -301,13 +314,15 @@ impl ServeEngine {
 fn inference_loop(
     artifacts_dir: PathBuf,
     backend: BackendKind,
+    pad_to_aot: bool,
     rx: Receiver<InferJob>,
     ready: Sender<Result<(usize, usize)>>,
     max_batch_cfg: usize,
     window: Duration,
 ) {
     let mut rt = match ClassifierRuntime::load_with(&artifacts_dir, backend) {
-        Ok(rt) => {
+        Ok(mut rt) => {
+            rt.set_pad_to_aot(pad_to_aot);
             let _ = ready.send(Ok((rt.max_batch(), rt.manifest.input_dim)));
             rt
         }

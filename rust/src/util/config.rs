@@ -9,13 +9,28 @@
 use crate::util::json::Json;
 use crate::util::time::SimDuration;
 
+/// The uniform container slot size (MB) used by legacy count-bounded
+/// pools: under [`MemoryAccounting::UniformSlot`] every container charges
+/// exactly this much, so "capacity = N slots" and "capacity = N × 256 MB"
+/// admit byte-identically.
+pub const UNIFORM_SLOT_MB: u32 = 256;
+
 /// Top-level platform configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
     /// Number of invoker hosts in the cluster.
     pub invokers: usize,
-    /// Max concurrently-resident containers per invoker host.
+    /// Legacy pool-sizing knob: when [`Config::invoker_memory_mb`] is
+    /// unset, each host's memory capacity is `containers_per_invoker`
+    /// uniform 256 MB slots (exactly the old count-bounded pool).
     pub containers_per_invoker: usize,
+    /// Memory capacity per invoker host in MB. `None` (default) derives
+    /// the capacity from `containers_per_invoker` (see above).
+    pub invoker_memory_mb: Option<u64>,
+    /// How a container charges its host's memory capacity.
+    pub memory_accounting: MemoryAccounting,
+    /// Keep-alive / eviction policy for idle warm containers.
+    pub keep_alive: KeepAliveKind,
     /// Cold-start cost: container provision + runtime `init` hook.
     pub cold_start: SimDuration,
     /// Warm-start dispatch overhead (`run` hook on a live runtime).
@@ -54,6 +69,80 @@ pub struct FreshenConfig {
     pub max_freshens_per_min: u32,
     /// Service category: aggressive freshen for latency-sensitive apps.
     pub category: ServiceCategory,
+}
+
+/// How containers are charged against an invoker host's memory capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemoryAccounting {
+    /// Every container charges one uniform 256 MB slot — byte-identical to
+    /// the historical count-bounded pool (`containers_per_invoker` slots).
+    #[default]
+    UniformSlot,
+    /// Every container charges its function's declared `memory_mb`, so
+    /// heavy functions genuinely crowd out light ones (the contended
+    /// multi-tenant cluster model).
+    FunctionMb,
+}
+
+impl MemoryAccounting {
+    pub fn parse(s: &str) -> Option<MemoryAccounting> {
+        match s {
+            "uniform_slot" | "uniform" => Some(MemoryAccounting::UniformSlot),
+            "function_mb" | "function" => Some(MemoryAccounting::FunctionMb),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MemoryAccounting::UniformSlot => "uniform_slot",
+            MemoryAccounting::FunctionMb => "function_mb",
+        }
+    }
+}
+
+/// Which keep-alive policy governs idle warm containers (the
+/// implementations live in [`crate::platform::keepalive`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KeepAliveKind {
+    /// Fixed idle TTL (`idle_eviction`), OpenWhisk-style — the historical
+    /// inline behavior, kept byte-identical.
+    #[default]
+    FixedTtl,
+    /// Never evict on idle; evict the LRU warm container only under
+    /// memory pressure.
+    LruPressure,
+    /// Per-function keep-alive windows driven by the IAT histogram
+    /// predictor (slot-survival-style lifecycle control), with LRU
+    /// eviction under pressure.
+    HybridHistogram,
+}
+
+impl KeepAliveKind {
+    pub fn all() -> [KeepAliveKind; 3] {
+        [
+            KeepAliveKind::FixedTtl,
+            KeepAliveKind::LruPressure,
+            KeepAliveKind::HybridHistogram,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<KeepAliveKind> {
+        match s {
+            "fixed" | "fixed_ttl" => Some(KeepAliveKind::FixedTtl),
+            "lru" | "lru_pressure" => Some(KeepAliveKind::LruPressure),
+            "hybrid" | "hybrid_histogram" => Some(KeepAliveKind::HybridHistogram),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KeepAliveKind::FixedTtl => "fixed",
+            KeepAliveKind::LruPressure => "lru",
+            KeepAliveKind::HybridHistogram => "hybrid",
+        }
+    }
 }
 
 /// Container isolation scope.
@@ -141,6 +230,9 @@ impl Default for Config {
         Config {
             invokers: 4,
             containers_per_invoker: 16,
+            invoker_memory_mb: None,
+            memory_accounting: MemoryAccounting::UniformSlot,
+            keep_alive: KeepAliveKind::FixedTtl,
             // OpenWhisk docker cold starts are hundreds of ms; the paper's
             // related work (SOCK) reports ~100ms-1s. We default to 500ms.
             cold_start: SimDuration::from_millis(500),
@@ -155,12 +247,29 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Effective memory capacity of one invoker host, in MB.
+    pub fn invoker_capacity_mb(&self) -> u64 {
+        self.invoker_memory_mb
+            .unwrap_or(self.containers_per_invoker as u64 * UNIFORM_SLOT_MB as u64)
+    }
+
     /// Load from a JSON object; missing keys keep their defaults.
     pub fn from_json(j: &Json) -> Config {
         let mut c = Config::default();
         c.invokers = j.u64_or("invokers", c.invokers as u64) as usize;
         c.containers_per_invoker =
             j.u64_or("containers_per_invoker", c.containers_per_invoker as u64) as usize;
+        c.invoker_memory_mb = j.get("invoker_memory_mb").and_then(Json::as_u64);
+        if let Some(acc) = j.get("memory_accounting").and_then(Json::as_str) {
+            if let Some(parsed) = MemoryAccounting::parse(acc) {
+                c.memory_accounting = parsed;
+            }
+        }
+        if let Some(ka) = j.get("keep_alive").and_then(Json::as_str) {
+            if let Some(parsed) = KeepAliveKind::parse(ka) {
+                c.keep_alive = parsed;
+            }
+        }
         c.cold_start = SimDuration::from_millis_f64(
             j.f64_or("cold_start_ms", c.cold_start.as_millis_f64()),
         );
@@ -197,12 +306,17 @@ impl Config {
 
     /// Serialize back to JSON (for report headers).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("invokers", Json::num(self.invokers as f64)),
             (
                 "containers_per_invoker",
                 Json::num(self.containers_per_invoker as f64),
             ),
+            (
+                "memory_accounting",
+                Json::str(self.memory_accounting.as_str()),
+            ),
+            ("keep_alive", Json::str(self.keep_alive.as_str())),
             ("cold_start_ms", Json::num(self.cold_start.as_millis_f64())),
             ("warm_start_ms", Json::num(self.warm_start.as_millis_f64())),
             (
@@ -231,7 +345,11 @@ impl Config {
                     ("category", Json::str(self.freshen.category.as_str())),
                 ]),
             ),
-        ])
+        ]);
+        if let Some(mb) = self.invoker_memory_mb {
+            j.set("invoker_memory_mb", Json::num(mb as f64));
+        }
+        j
     }
 }
 
@@ -266,6 +384,34 @@ mod tests {
         assert!(!c.freshen.enabled);
         // untouched key keeps default
         assert_eq!(c.containers_per_invoker, Config::default().containers_per_invoker);
+    }
+
+    #[test]
+    fn memory_and_keepalive_knobs_roundtrip() {
+        let mut c = Config::default();
+        assert_eq!(c.invoker_capacity_mb(), 16 * UNIFORM_SLOT_MB as u64);
+        c.invoker_memory_mb = Some(8192);
+        c.memory_accounting = MemoryAccounting::FunctionMb;
+        c.keep_alive = KeepAliveKind::HybridHistogram;
+        assert_eq!(c.invoker_capacity_mb(), 8192);
+        let c2 = Config::from_json(&c.to_json());
+        assert_eq!(c2.invoker_memory_mb, Some(8192));
+        assert_eq!(c2.memory_accounting, MemoryAccounting::FunctionMb);
+        assert_eq!(c2.keep_alive, KeepAliveKind::HybridHistogram);
+        // Defaults serialize without an explicit capacity and parse back.
+        let d = Config::from_json(&Config::default().to_json());
+        assert_eq!(d.invoker_memory_mb, None);
+        assert_eq!(d.memory_accounting, MemoryAccounting::UniformSlot);
+        assert_eq!(d.keep_alive, KeepAliveKind::FixedTtl);
+        // Short and long spellings both parse.
+        assert_eq!(KeepAliveKind::parse("lru_pressure"), Some(KeepAliveKind::LruPressure));
+        assert_eq!(KeepAliveKind::parse("hybrid"), Some(KeepAliveKind::HybridHistogram));
+        assert_eq!(KeepAliveKind::parse("bogus"), None);
+        assert_eq!(MemoryAccounting::parse("function"), Some(MemoryAccounting::FunctionMb));
+        assert_eq!(MemoryAccounting::parse("bogus"), None);
+        for k in KeepAliveKind::all() {
+            assert_eq!(KeepAliveKind::parse(k.as_str()), Some(k));
+        }
     }
 
     #[test]

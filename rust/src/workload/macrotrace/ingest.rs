@@ -205,7 +205,14 @@ impl<R: BufRead> AzureTraceReader<R> {
             _ => DEFAULT_DURATION_MS,
         };
         let memory_mb = match self.cols.memory.and_then(|i| self.field(i)) {
-            Some(t) if !t.is_empty() => t.parse::<u32>().ok()?,
+            // The real dataset's memory averages are fractional
+            // (`AverageAllocatedMb` like `170.33`): accept floats and
+            // round, exactly as the duration column does. Integer-valued
+            // cells (what `write_csv` emits) round-trip unchanged.
+            Some(t) if !t.is_empty() => {
+                let mb = t.parse::<f64>().ok().filter(|m| *m >= 0.0 && m.is_finite())?;
+                mb.round().min(u32::MAX as f64) as u32
+            }
             _ => DEFAULT_MEMORY_MB,
         };
         let mut counts = Vec::with_capacity(self.cols.minutes.len());
@@ -314,6 +321,24 @@ a,h,5,6
         assert_eq!(rows[0].trigger, "http");
         assert_eq!(rows[0].memory_mb, DEFAULT_MEMORY_MB);
         assert!((rows[0].duration_ms - DEFAULT_DURATION_MS).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fractional_memory_rounds_instead_of_skipping() {
+        // The real dataset's AverageAllocatedMb averages are fractional;
+        // they must round like the duration column, not drop the row.
+        let csv = "\
+HashApp,HashFunction,AvgDurationMs,MemoryMb,1,2
+a,f,120.5,170.33,1,2
+a,g,50,169.5,0,1
+a,h,50,-3.0,1,1
+";
+        let mut r = AzureTraceReader::new(csv.as_bytes()).unwrap();
+        let rows: Vec<TraceRow> = r.by_ref().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].memory_mb, 170);
+        assert_eq!(rows[1].memory_mb, 170, "round half up");
+        assert_eq!(r.skipped(), 1, "negative memory is still malformed");
     }
 
     #[test]

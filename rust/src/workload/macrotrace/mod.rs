@@ -15,13 +15,19 @@
 //!   offline with no trace download. App `i`'s rows depend only on
 //!   `(seed, i)`, which is what lets shards materialise exactly the apps
 //!   they own.
-//! - [`replay`] — drives one app through the full [`platform::World`]
+//! - [`replay`] — drives apps through the full [`platform::World`]
 //!   (freshen gate, chain + histogram predictors with their bulk-warmup
-//!   paths, container pool, netsim), producing integer-only, mergeable
-//!   [`replay::MacroMetrics`].
+//!   paths, memory-accounted container pool, netsim), producing
+//!   integer-only, mergeable [`replay::MacroMetrics`]. Two pool modes:
+//!   isolated per-app worlds (default) or one shared memory-bounded
+//!   world per shard ([`replay::PoolMode::Shared`]) where tenants
+//!   genuinely contend for warm containers; plus multi-day replay with
+//!   state carried across day boundaries ([`replay::replay_pool_days`]).
 //! - [`shard`] — partitions a trace across [`SweepRunner`] workers by
 //!   hash-of-app (whole chains stay on one shard) with a merge that is
-//!   byte-identical for any `--shards` × `--parallel` combination.
+//!   byte-identical for any `--shards` × `--parallel` combination in
+//!   per-app mode, and for any `--parallel` at fixed `--shards` in
+//!   shared mode.
 //!
 //! The experiment harness on top lives in
 //! [`crate::experiments::azure_macro`]; the CLI entry points are
@@ -36,8 +42,10 @@ pub mod shard;
 pub mod synth;
 
 pub use ingest::{AzureTraceReader, TraceRow};
-pub use replay::{replay_app, MacroMetrics, PredictorPolicy, ReplayCfg};
+pub use replay::{
+    replay_app, replay_pool_days, MacroMetrics, PoolMode, PredictorPolicy, ReplayCfg,
+};
 pub use shard::{
     load_shard_apps, replay_shard, replay_sharded, shard_of, ShardApps, ShardOut, TraceSource,
 };
-pub use synth::{app_rows, write_csv, SynthSummary, SynthTraceCfg};
+pub use synth::{app_rows, app_rows_for_day, write_csv, SynthSummary, SynthTraceCfg};

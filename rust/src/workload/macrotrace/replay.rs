@@ -1,18 +1,29 @@
-//! Per-app trace replay onto the full platform (`platform::World`).
+//! Trace replay onto the full platform (`platform::World`), in two pool
+//! modes.
 //!
-//! **Unit of replay = one application.** Each app runs in its own `World`
-//! whose RNG stream is derived from `(run seed, hash(app))`, with all of
-//! its functions deployed together (so chain prediction and per-app
-//! isolation see the complete invocation sequence — the reason sharding
-//! partitions by hash-of-app, never by row). Azure apps are isolated
-//! tenants: containers are never shared across apps on the real platform
-//! either, so per-app worlds change no semantics — and they are what makes
-//! the merged metrics *provably* independent of the shard map. An app's
-//! replay depends only on its own rows and the run seed; the merge
-//! ([`MacroMetrics::merge`]) is a commutative sum of `u64` counters and
-//! histogram bins. Shards 1/2/8, parallel 1/4 — same bytes out.
+//! **Per-app mode (default): unit of replay = one application.** Each app
+//! runs in its own `World` whose RNG stream is derived from `(run seed,
+//! hash(app))`, with all of its functions deployed together (so chain
+//! prediction and per-app isolation see the complete invocation sequence
+//! — the reason sharding partitions by hash-of-app, never by row). Azure
+//! apps are isolated tenants: containers are never shared across apps on
+//! the real platform either, so per-app worlds change no semantics — and
+//! they are what makes the merged metrics *provably* independent of the
+//! shard map. An app's replay depends only on its own rows and the run
+//! seed; the merge ([`MacroMetrics::merge`]) is a commutative sum of
+//! `u64` counters and histogram bins. Shards 1/2/8, parallel 1/4 — same
+//! bytes out.
 //!
-//! Replay of one app:
+//! **Shared-pool mode** ([`PoolMode::Shared`]): all of a shard's apps are
+//! deployed into ONE memory-bounded `World`, so warm containers genuinely
+//! compete — the cross-app contention that makes keep-alive policy
+//! matter. The price is a weaker determinism contract: an app's replay
+//! now depends on its shard-mates, so merged metrics are byte-identical
+//! only at a **fixed `--shards`** (still for ANY `--parallel`, because
+//! shard contents and the per-shard world seed depend only on the shard
+//! index).
+//!
+//! Replay of one world (one app, or a shard's worth):
 //! 1. deploy every row as a paper-λ (`DataGet → Compute(duration) →
 //!    DataPut`), wiring `orchestration` rows into an explicit chain
 //!    (`InvokeNext` via the Step Functions trigger) when the predictor
@@ -20,11 +31,21 @@
 //! 2. bulk-warm the histogram/chain predictors from the first
 //!    `warmup_minutes` of counts (no simulator events — the predictors'
 //!    dedicated warmup path);
-//! 3. expand the remaining per-minute counts lazily into `invoke`
-//!    events (counts are the compact form; the event stream never
-//!    materialises outside the wheel) and run the world to quiescence.
+//! 3. expand the remaining per-minute counts lazily into `invoke` events
+//!    (counts are the compact form; the event stream never materialises
+//!    outside the wheel) and run the world to quiescence.
+//!
+//! **Multi-day horizons:** [`replay_pool_days`] takes one row set per
+//! day (same apps, same functions; only the counts differ — see
+//! [`crate::workload::macrotrace::synth::app_rows_for_day`]), schedules
+//! every day's arrivals up front at `day × day_minutes` offsets, and
+//! drops a snapshot event at each day boundary. The world — container
+//! pool, predictor state, freshen caches — carries across days; metrics
+//! come back per-day (cumulative = merge of the days).
 
+use std::cell::RefCell;
 use std::hash::Hasher;
+use std::rc::Rc;
 
 use crate::metrics::hist::LatencyHist;
 use crate::netsim::link::Site;
@@ -34,7 +55,7 @@ use crate::platform::function::{Arg, FunctionSpec, Op};
 use crate::platform::world::World;
 use crate::simcore::Sim;
 use crate::triggers::TriggerService;
-use crate::util::config::Config;
+use crate::util::config::{Config, KeepAliveKind};
 use crate::util::fxhash::FxHasher;
 use crate::util::rng::{mix64, Rng};
 use crate::util::time::{SimDuration, SimTime};
@@ -42,6 +63,10 @@ use crate::workload::macrotrace::ingest::TraceRow;
 
 /// One trace minute, in simulator microseconds.
 pub const MINUTE: SimDuration = SimDuration(60_000_000);
+
+/// One world's worth of apps: `(name, rows)` pairs in name-sorted order
+/// (the same shape `shard::ShardApps` aliases).
+pub type AppRows = Vec<(String, Vec<TraceRow>)>;
 
 /// Which prediction sources feed freshen during replay (the experiment's
 /// ablation axis).
@@ -69,17 +94,51 @@ impl PredictorPolicy {
     }
 }
 
+/// How a replay worlds its apps: isolated per-app microcosms, or one
+/// shared memory-bounded cluster per shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolMode {
+    /// One `World` per application (the historical mode; byte-identical
+    /// merges for ANY shards × parallel).
+    #[default]
+    PerApp,
+    /// One `World` per shard: every app in the shard shares one
+    /// memory-bounded container pool (byte-identical merges at fixed
+    /// shards, for any parallel).
+    Shared,
+}
+
+impl PoolMode {
+    pub fn parse(s: &str) -> Option<PoolMode> {
+        match s {
+            "per-app" | "per_app" | "perapp" => Some(PoolMode::PerApp),
+            "shared" => Some(PoolMode::Shared),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PoolMode::PerApp => "per-app",
+            PoolMode::Shared => "shared",
+        }
+    }
+}
+
 /// Replay configuration shared by every app of a run.
 #[derive(Debug, Clone)]
 pub struct ReplayCfg {
-    /// Platform config template (freshen switch, pool sizing); the seed
-    /// field is overwritten per app.
+    /// Platform config template (freshen switch, pool sizing, keep-alive
+    /// policy); the seed field is overwritten per world.
     pub base: Config,
-    /// Run seed; app worlds derive their streams from `(seed, app)`.
+    /// Run seed; worlds derive their streams from `(seed, app)` (per-app
+    /// mode) or `(seed, shard)` (shared mode).
     pub seed: u64,
     /// Leading minutes fed to the predictors instead of simulated.
     pub warmup_minutes: usize,
     pub policy: PredictorPolicy,
+    /// Per-app worlds or one shared pool per shard.
+    pub pool: PoolMode,
 }
 
 impl Default for ReplayCfg {
@@ -93,14 +152,17 @@ impl Default for ReplayCfg {
             seed: 2020,
             warmup_minutes: 10,
             policy: PredictorPolicy::Both,
+            pool: PoolMode::PerApp,
         }
     }
 }
 
 /// Merged replay metrics. Integer-only by design: merging is a
-/// commutative, associative sum, so the result is byte-identical for any
-/// partition of the same apps across shards/workers. (Latency percentiles
-/// and rates are *derived* from these integers at report time.)
+/// commutative, associative sum (`peak_resident_mb` merges by `max`,
+/// also commutative/associative), so the result is byte-identical for
+/// any partition of the same worlds across shards/workers. (Latency
+/// percentiles and rates are *derived* from these integers at report
+/// time.)
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct MacroMetrics {
     pub apps: u64,
@@ -126,6 +188,19 @@ pub struct MacroMetrics {
     /// and were therefore replayed as independent rows (real-CSV safety:
     /// keeps every variant's invocation volume comparable).
     pub chains_demoted: u64,
+    /// Container evictions, total and by cause (idle-TTL/keep-alive
+    /// expiry vs memory-pressure reclaim).
+    pub evictions: u64,
+    pub evictions_idle: u64,
+    pub evictions_pressure: u64,
+    /// Pressure evictions that destroyed live warm state.
+    pub warm_kills: u64,
+    /// Peak resident container memory over any constituent world, MB
+    /// (merged by `max`: the largest single-world peak).
+    pub peak_resident_mb: u64,
+    /// Integral of resident container memory, MB·µs (divide by 1e6 for
+    /// MB·s), summed across worlds.
+    pub resident_mb_us: u64,
     pub latency: LatencyHist,
 }
 
@@ -147,6 +222,12 @@ impl MacroMetrics {
         self.sim_events += other.sim_events;
         self.chains += other.chains;
         self.chains_demoted += other.chains_demoted;
+        self.evictions += other.evictions;
+        self.evictions_idle += other.evictions_idle;
+        self.evictions_pressure += other.evictions_pressure;
+        self.warm_kills += other.warm_kills;
+        self.peak_resident_mb = self.peak_resident_mb.max(other.peak_resident_mb);
+        self.resident_mb_us = self.resident_mb_us.saturating_add(other.resident_mb_us);
         self.latency.merge(&other.latency);
     }
 
@@ -176,6 +257,21 @@ impl MacroMetrics {
         }
     }
 
+    /// Fraction of evictions that killed live warm state under pressure.
+    pub fn warm_kill_rate(&self) -> f64 {
+        if self.evictions == 0 {
+            0.0
+        } else {
+            self.warm_kills as f64 / self.evictions as f64
+        }
+    }
+
+    /// Resident-memory integral in MB·s (derived; the stored counter is
+    /// integer MB·µs).
+    pub fn resident_mb_s(&self) -> f64 {
+        self.resident_mb_us as f64 / 1e6
+    }
+
     pub fn p50_ms(&self) -> f64 {
         self.latency.quantile_ms(50.0)
     }
@@ -187,6 +283,23 @@ impl MacroMetrics {
     /// Canonical content fingerprint — the string the shard-determinism
     /// regression tests compare byte-for-byte.
     pub fn digest(&self) -> String {
+        format!(
+            "{} evict={}/{}/{} wk={} peak={} res={}",
+            self.digest_legacy(),
+            self.evictions,
+            self.evictions_idle,
+            self.evictions_pressure,
+            self.warm_kills,
+            self.peak_resident_mb,
+            self.resident_mb_us,
+        )
+    }
+
+    /// The pre-memory-accounting digest fields, in their historical
+    /// format: what the `FixedTtl`-equals-legacy golden test pins (the
+    /// new contention counters did not exist before the refactor, so
+    /// they are excluded here).
+    pub fn digest_legacy(&self) -> String {
         format!(
             "apps={} fns={} inv={} cold={} warm={} fs={} fc={} fw={} fh={}/{} \
              net={} saved={} ev={} ch={}/{} lat={:016x}",
@@ -218,25 +331,50 @@ pub fn app_hash(app: &str) -> u64 {
     h.finish()
 }
 
+/// World seed for a shared-pool shard: depends only on `(run seed,
+/// shard index)`, so fixed-shard replays are parallelism-invariant.
+pub fn shared_world_seed(seed: u64, shard: usize) -> u64 {
+    mix64(seed, mix64(0x5EA6_ED90_0175, shard as u64))
+}
+
 /// The 1 MB model-like object every replayed λ fetches (the paper's λ1
 /// shape: constant-argument read of a hot object).
 const FETCH_BYTES: f64 = 1e6;
 const PUT_BYTES: f64 = 64.0 * 1024.0;
 
-/// Replay one app's rows; returns its (mergeable) metrics contribution.
-/// Deterministic in `(app, rows, cfg)` — independent of every other app,
-/// of shard layout, and of worker scheduling.
-pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics {
-    let mut config = cfg.base.clone();
-    config.seed = mix64(cfg.seed, app_hash(app));
-    let world_seed = config.seed;
-    let mut w = World::new(config);
-    w.auto_hist_predict = cfg.policy.histogram() && w.config.freshen.enabled;
+/// Jitter-stream tag (see [`Rng`] derivation in [`replay_pool_days`]).
+const JITTER_STREAM: u64 = 0xA11C_E500;
 
-    let mut store = Endpoint::new("store", Site::Remote);
-    store.store.put("ID1", FETCH_BYTES, SimTime::ZERO);
-    w.add_endpoint(store);
+/// One deployed app inside a replay world.
+struct AppDeployment {
+    /// Row indices forming the explicit chain (trigger == orchestration).
+    chain: Vec<usize>,
+    /// Chain replay active (policy wants chains AND counts mirror).
+    chained: bool,
+    demoted: bool,
+    functions: u64,
+    /// Day-0 warmup minutes actually consumed for this app.
+    warm: usize,
+    /// Deployed function id per row. Per-app worlds use the raw trace
+    /// names; a shared world app-qualifies them (`app/function`), because
+    /// the Azure dataset's `HashFunction` is a hash of the bare function
+    /// NAME and collides across apps — aliasing two tenants onto one
+    /// function would silently share their warm containers.
+    names: Vec<Rc<str>>,
+}
 
+/// Deploy one app's rows into `w` (chain detection + function specs +
+/// predictor warmup), mirroring the historical per-app sequence exactly.
+fn deploy_and_warm(w: &mut World, app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> AppDeployment {
+    // See `AppDeployment::names`: only the shared pool needs the
+    // qualification (and per-app replay must stay byte-identical).
+    let names: Vec<Rc<str>> = rows
+        .iter()
+        .map(|r| match cfg.pool {
+            PoolMode::PerApp => Rc::from(r.function.as_str()),
+            PoolMode::Shared => Rc::from(format!("{app}/{}", r.function).as_str()),
+        })
+        .collect();
     // Explicit chain: the app's `orchestration` rows, in row order.
     let chain: Vec<usize> = rows
         .iter()
@@ -270,7 +408,9 @@ pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics
             Op::DataPut {
                 endpoint: "store".into(),
                 creds: Arg::Const("CREDS".into()),
-                object_id: Arg::Const(format!("out-{i}")),
+                // App-scoped output id: in a shared world two apps must
+                // not collide on the same store key.
+                object_id: Arg::Const(format!("out-{app}-{i}")),
                 bytes: PUT_BYTES,
             },
         ];
@@ -278,18 +418,18 @@ pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics
             if let Some(pos) = chain.iter().position(|&c| c == i) {
                 if pos + 1 < chain.len() {
                     ops.push(Op::InvokeNext {
-                        function: rows[chain[pos + 1]].function.clone(),
+                        function: names[chain[pos + 1]].to_string(),
                         trigger: TriggerService::StepFunctions,
                     });
                 }
             }
         }
-        let mut spec = FunctionSpec::new(&row.function, app, ops);
+        let mut spec = FunctionSpec::new(&names[i], app, ops);
         spec.memory_mb = row.memory_mb.max(64);
         w.deploy(spec);
     }
     if chained {
-        let fns: Vec<String> = chain.iter().map(|&i| rows[i].function.clone()).collect();
+        let fns: Vec<String> = chain.iter().map(|&i| names[i].to_string()).collect();
         w.registry
             .register_chain(app, fns)
             .expect("chain functions were just deployed");
@@ -299,12 +439,16 @@ pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics
     let horizon = rows.iter().map(|r| r.counts.len()).max().unwrap_or(0);
     let warm = cfg.warmup_minutes.min(horizon);
     if warm > 0 {
-        // Only warm the predictor this policy will actually consult.
-        if cfg.policy.histogram() {
-            for row in rows {
+        // Only warm the predictor something will actually consult: the
+        // freshen admission path under a histogram policy, or the
+        // HybridHistogram keep-alive windows.
+        let hist_consulted = cfg.policy.histogram()
+            || cfg.base.keep_alive == KeepAliveKind::HybridHistogram;
+        if hist_consulted {
+            for (i, row) in rows.iter().enumerate() {
                 let w_counts = &row.counts[..warm.min(row.counts.len())];
                 w.hist_pred.warm_from_minute_counts(
-                    &row.function,
+                    &names[i],
                     w_counts,
                     SimTime::ZERO,
                     MINUTE,
@@ -319,8 +463,8 @@ pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics
             if head_warm > 0 {
                 for pair in chain.windows(2) {
                     w.chain_pred.warm_edge(
-                        &rows[pair[0]].function,
-                        &rows[pair[1]].function,
+                        &names[pair[0]],
+                        &names[pair[1]],
                         head_warm,
                         head_warm,
                     );
@@ -328,74 +472,240 @@ pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics
             }
         }
     }
+    AppDeployment {
+        demoted: cfg.policy.chain() && chain.len() > 1 && !mirrored,
+        chained,
+        chain,
+        functions: rows.len() as u64,
+        warm,
+        names,
+    }
+}
 
-    // Rows the trace drives directly: everything, except that when the
-    // chain is active only its head receives external arrivals (successor
-    // counts mirror the head's and are produced by the chain itself).
-    let driven: Vec<&TraceRow> = rows
-        .iter()
-        .enumerate()
-        .filter(|(i, r)| {
-            if chained && r.trigger == "orchestration" {
-                *i == chain[0]
-            } else {
-                true
-            }
-        })
-        .map(|(_, r)| r)
-        .collect();
-
-    let mut sim: Sim<World> = Sim::new();
-    sim.max_events = 2_000_000_000;
-    let mut jitter = Rng::new(mix64(world_seed, 0xA11C_E500));
-    for row in &driven {
-        for (m, &c) in row.counts.iter().enumerate().skip(warm) {
+/// Schedule one app's arrivals for one day. Rows the trace drives
+/// directly: everything, except that when the chain is active only its
+/// head receives external arrivals (successor counts mirror the head's
+/// and are produced by the chain itself).
+fn schedule_app_day(
+    sim: &mut Sim<World>,
+    dep: &AppDeployment,
+    rows: &[TraceRow],
+    skip_minutes: usize,
+    day_base_us: u64,
+    jitter: &mut Rng,
+) {
+    for (i, row) in rows.iter().enumerate() {
+        let driven = if dep.chained && row.trigger == "orchestration" {
+            i == dep.chain[0]
+        } else {
+            true
+        };
+        if !driven {
+            continue;
+        }
+        let name = Rc::clone(&dep.names[i]);
+        for (m, &c) in row.counts.iter().enumerate().skip(skip_minutes) {
             if c == 0 {
                 continue;
             }
-            let base_us = m as u64 * MINUTE.micros();
+            let base_us = day_base_us + m as u64 * MINUTE.micros();
             for j in 0..c as u64 {
                 let off = ((j as f64 + jitter.f64()) / c as f64
                     * MINUTE.micros() as f64) as u64;
-                let f = row.function.clone();
+                let f = Rc::clone(&name);
                 sim.schedule_at(SimTime(base_us + off), move |sim, w| {
                     invoke(sim, w, &f);
                 });
             }
         }
     }
+}
+
+/// Counter snapshot at a day boundary (or run end); per-day metrics are
+/// deltas between consecutive snapshots.
+#[derive(Debug, Clone, Default)]
+struct DaySnap {
+    records: usize,
+    cold_starts: u64,
+    warm_starts: u64,
+    freshens_started: u64,
+    freshens_completed: u64,
+    freshens_wasted: u64,
+    evictions: u64,
+    evictions_idle: u64,
+    evictions_pressure: u64,
+    warm_kills: u64,
+    /// Peak within the slice ending at this snapshot (the world's peak
+    /// tracker is reset to the current residency after each capture).
+    peak_resident_mb: u64,
+    resident_mb_us: u64,
+    network_bytes: f64,
+    network_bytes_saved: f64,
+    executed: u64,
+}
+
+impl DaySnap {
+    fn capture(sim: &Sim<World>, w: &mut World, apps: &[String]) -> DaySnap {
+        w.seal_resident_accounting(sim.now());
+        let (mut net, mut saved) = (0.0f64, 0.0f64);
+        for app in apps {
+            let acct = w.ledger.account(app);
+            net += acct.network_bytes;
+            saved += acct.network_bytes_saved;
+        }
+        let snap = DaySnap {
+            records: w.metrics.count(),
+            cold_starts: w.metrics.cold_starts,
+            warm_starts: w.metrics.warm_starts,
+            freshens_started: w.metrics.freshens_started,
+            freshens_completed: w.metrics.freshens_completed,
+            freshens_wasted: w.metrics.freshens_wasted,
+            evictions: w.metrics.evictions,
+            evictions_idle: w.metrics.evictions_idle,
+            evictions_pressure: w.metrics.evictions_pressure,
+            warm_kills: w.metrics.warm_kills,
+            peak_resident_mb: w.metrics.peak_resident_mb,
+            resident_mb_us: w.metrics.resident_mb_us,
+            network_bytes: net,
+            network_bytes_saved: saved,
+            executed: sim.executed(),
+        };
+        // Per-day peaks: the next slice starts from the current residency.
+        w.metrics.peak_resident_mb = w.resident_mb;
+        snap
+    }
+}
+
+/// Replay one world — one app (per-app mode) or a whole shard's apps
+/// (shared mode) — across one or more day slices, with pool + predictor
+/// state carried over day boundaries. `days[d]` holds day `d`'s rows for
+/// the SAME apps in the SAME order; `days[0]` is also the deployment
+/// basis. Returns one [`MacroMetrics`] per day (`apps`/`functions`/
+/// `chains` are attributed to day 0, so merging the days gives correct
+/// cumulative totals).
+pub fn replay_pool_days(
+    days: &[AppRows],
+    cfg: &ReplayCfg,
+    world_seed: u64,
+    day_minutes: usize,
+) -> Vec<MacroMetrics> {
+    assert!(!days.is_empty(), "replay needs at least one day");
+    let day0 = &days[0];
+    let mut config = cfg.base.clone();
+    config.seed = world_seed;
+    let mut w = World::new(config);
+    w.auto_hist_predict = cfg.policy.histogram() && w.config.freshen.enabled;
+
+    let mut store = Endpoint::new("store", Site::Remote);
+    store.store.put("ID1", FETCH_BYTES, SimTime::ZERO);
+    w.add_endpoint(store);
+
+    let mut deps = Vec::with_capacity(day0.len());
+    let mut jitters = Vec::with_capacity(day0.len());
+    for (app, rows) in day0 {
+        deps.push(deploy_and_warm(&mut w, app, rows, cfg));
+        // The per-app jitter stream is derived from the app, not the
+        // world, so per-app and shared replays of the same trace see the
+        // same arrival instants.
+        jitters.push(Rng::new(mix64(mix64(cfg.seed, app_hash(app)), JITTER_STREAM)));
+    }
+
+    let mut sim: Sim<World> = Sim::new();
+    sim.max_events = 2_000_000_000;
+
+    let app_names: Rc<Vec<String>> = Rc::new(day0.iter().map(|(a, _)| a.clone()).collect());
+    let snaps: Rc<RefCell<Vec<DaySnap>>> = Rc::new(RefCell::new(Vec::new()));
+    for (day, day_apps) in days.iter().enumerate() {
+        debug_assert_eq!(
+            day_apps.len(),
+            day0.len(),
+            "every day must replay the same apps"
+        );
+        let day_base_us = day as u64 * day_minutes as u64 * MINUTE.micros();
+        if day > 0 {
+            // Boundary snapshot: scheduled before this day's arrivals, so
+            // at the boundary instant it fires first (FIFO sequencing).
+            let snaps = Rc::clone(&snaps);
+            let names = Rc::clone(&app_names);
+            sim.schedule_at(SimTime(day_base_us), move |sim, w| {
+                let snap = DaySnap::capture(sim, w, &names);
+                snaps.borrow_mut().push(snap);
+            });
+        }
+        for (i, (_, rows)) in day_apps.iter().enumerate() {
+            let skip = if day == 0 { deps[i].warm } else { 0 };
+            schedule_app_day(&mut sim, &deps[i], rows, skip, day_base_us, &mut jitters[i]);
+        }
+    }
     sim.run(&mut w);
 
-    let mut out = MacroMetrics {
-        apps: 1,
-        functions: rows.len() as u64,
-        invocations: w.metrics.count() as u64,
-        cold_starts: w.metrics.cold_starts,
-        warm_starts: w.metrics.warm_starts,
-        freshens_started: w.metrics.freshens_started,
-        freshens_completed: w.metrics.freshens_completed,
-        freshens_wasted: w.metrics.freshens_wasted,
-        sim_events: sim.executed(),
-        chains: u64::from(chained),
-        chains_demoted: u64::from(cfg.policy.chain() && chain.len() > 1 && !mirrored),
-        ..MacroMetrics::default()
-    };
-    let (hits, total) = w.metrics.freshen_hit_counts();
-    out.freshen_hits = hits;
-    out.freshen_total = total;
-    let acct = w.ledger.account(app);
-    out.network_bytes = acct.network_bytes.round() as u64;
-    out.network_bytes_saved = acct.network_bytes_saved.round() as u64;
-    for rec in w.metrics.records() {
-        out.latency.record(rec.latency());
+    // Final snapshot covers the last day plus its drain tail. Every
+    // boundary event has fired (the sim ran to quiescence), so this is
+    // the only live handle.
+    let last = DaySnap::capture(&sim, &mut w, &app_names);
+    let mut bounds = Rc::try_unwrap(snaps)
+        .expect("all day-boundary snapshot events fired")
+        .into_inner();
+    bounds.push(last);
+    debug_assert_eq!(bounds.len(), days.len());
+
+    let mut out = Vec::with_capacity(days.len());
+    let mut prev = DaySnap::default();
+    for (day, cur) in bounds.iter().enumerate() {
+        let mut m = MacroMetrics::default();
+        if day == 0 {
+            m.apps = deps.len() as u64;
+            m.functions = deps.iter().map(|d| d.functions).sum();
+            m.chains = deps.iter().filter(|d| d.chained).count() as u64;
+            m.chains_demoted = deps.iter().filter(|d| d.demoted).count() as u64;
+        }
+        m.invocations = (cur.records - prev.records) as u64;
+        m.cold_starts = cur.cold_starts - prev.cold_starts;
+        m.warm_starts = cur.warm_starts - prev.warm_starts;
+        m.freshens_started = cur.freshens_started - prev.freshens_started;
+        m.freshens_completed = cur.freshens_completed - prev.freshens_completed;
+        m.freshens_wasted = cur.freshens_wasted - prev.freshens_wasted;
+        m.evictions = cur.evictions - prev.evictions;
+        m.evictions_idle = cur.evictions_idle - prev.evictions_idle;
+        m.evictions_pressure = cur.evictions_pressure - prev.evictions_pressure;
+        m.warm_kills = cur.warm_kills - prev.warm_kills;
+        m.peak_resident_mb = cur.peak_resident_mb;
+        m.resident_mb_us = cur.resident_mb_us - prev.resident_mb_us;
+        m.network_bytes = (cur.network_bytes - prev.network_bytes).max(0.0).round() as u64;
+        m.network_bytes_saved = (cur.network_bytes_saved - prev.network_bytes_saved)
+            .max(0.0)
+            .round() as u64;
+        m.sim_events = cur.executed - prev.executed;
+        for rec in &w.metrics.records()[prev.records..cur.records] {
+            m.latency.record(rec.latency());
+            m.freshen_hits += rec.freshen_hits as u64;
+            m.freshen_total += (rec.freshen_hits + rec.freshen_misses) as u64;
+        }
+        out.push(m);
+        prev = cur.clone();
     }
     out
+}
+
+/// Replay one app's rows in its own world; returns its (mergeable)
+/// metrics contribution. Deterministic in `(app, rows, cfg)` —
+/// independent of every other app, of shard layout, and of worker
+/// scheduling. This is the per-app pool mode's unit of work, unchanged
+/// (byte-identically) through the memory-accounting refactor.
+pub fn replay_app(app: &str, rows: &[TraceRow], cfg: &ReplayCfg) -> MacroMetrics {
+    let days = [vec![(app.to_string(), rows.to_vec())]];
+    let world_seed = mix64(cfg.seed, app_hash(app));
+    replay_pool_days(&days, cfg, world_seed, 0)
+        .pop()
+        .expect("single-day replay yields one metrics slice")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::macrotrace::synth::{app_rows, app_spec, SynthTraceCfg};
+    use crate::workload::macrotrace::synth::{
+        app_rows, app_rows_for_day, app_spec, SynthTraceCfg,
+    };
 
     fn cfg_with(policy: PredictorPolicy, freshen: bool) -> ReplayCfg {
         let mut cfg = ReplayCfg::default();
@@ -507,5 +817,119 @@ mod tests {
         assert_eq!(m.functions, 0);
         assert_eq!(m.apps, 1);
         assert!(m.latency.is_empty());
+    }
+
+    #[test]
+    fn pool_mode_parses() {
+        assert_eq!(PoolMode::parse("per-app"), Some(PoolMode::PerApp));
+        assert_eq!(PoolMode::parse("per_app"), Some(PoolMode::PerApp));
+        assert_eq!(PoolMode::parse("shared"), Some(PoolMode::Shared));
+        assert_eq!(PoolMode::parse("bogus"), None);
+        assert_eq!(PoolMode::default(), PoolMode::PerApp);
+        for m in [PoolMode::PerApp, PoolMode::Shared] {
+            assert_eq!(PoolMode::parse(m.as_str()), Some(m));
+        }
+    }
+
+    #[test]
+    fn shared_world_replays_apps_together_and_deterministically() {
+        let s = synth();
+        let apps: Vec<(String, Vec<TraceRow>)> = (0..6)
+            .map(|i| (format!("app-{i}"), app_rows(&s, i)))
+            .collect();
+        let mut cfg = cfg_with(PredictorPolicy::Both, true);
+        cfg.pool = PoolMode::Shared;
+        let days = [apps.clone()];
+        let seed = shared_world_seed(cfg.seed, 0);
+        let a = replay_pool_days(&days, &cfg, seed, s.minutes).pop().unwrap();
+        let b = replay_pool_days(&days, &cfg, seed, s.minutes).pop().unwrap();
+        assert_eq!(a, b, "shared replay is deterministic");
+        assert_eq!(a.apps, 6);
+        let per_app_inv: u64 = apps
+            .iter()
+            .map(|(app, rows)| replay_app(app, rows, &cfg_with(PredictorPolicy::Both, true)).invocations)
+            .sum();
+        assert_eq!(
+            a.invocations, per_app_inv,
+            "shared pool replays the same arrival volume as per-app worlds"
+        );
+    }
+
+    #[test]
+    fn shared_pool_keeps_colliding_function_names_apart() {
+        // The Azure dataset's HashFunction hashes the bare function name,
+        // so two apps can carry the same function id. In a shared world
+        // they must not alias onto one deployment (which would share warm
+        // containers across tenants): qualified ids make the colliding
+        // trace replay exactly like the same trace with distinct names.
+        let mk_row = |app: &str, function: &str, counts: Vec<u32>| TraceRow {
+            app: app.to_string(),
+            function: function.to_string(),
+            trigger: "http".to_string(),
+            duration_ms: 25.0,
+            memory_mb: 128,
+            counts,
+        };
+        let colliding = [vec![
+            ("a".to_string(), vec![mk_row("a", "run", vec![2, 1, 2])]),
+            ("b".to_string(), vec![mk_row("b", "run", vec![1, 2, 1])]),
+        ]];
+        let distinct = [vec![
+            ("a".to_string(), vec![mk_row("a", "run-a", vec![2, 1, 2])]),
+            ("b".to_string(), vec![mk_row("b", "run-b", vec![1, 2, 1])]),
+        ]];
+        let mut cfg = cfg_with(PredictorPolicy::Both, true);
+        cfg.pool = PoolMode::Shared;
+        cfg.warmup_minutes = 0;
+        let seed = shared_world_seed(cfg.seed, 0);
+        let c = replay_pool_days(&colliding, &cfg, seed, 3).pop().unwrap();
+        let d = replay_pool_days(&distinct, &cfg, seed, 3).pop().unwrap();
+        assert_eq!(c.invocations, 9);
+        assert_eq!(c.invocations, d.invocations);
+        assert_eq!(
+            (c.cold_starts, c.warm_starts),
+            (d.cold_starts, d.warm_starts),
+            "colliding names must behave exactly like distinct ones"
+        );
+    }
+
+    #[test]
+    fn multi_day_replay_carries_state_and_reports_per_day() {
+        let s = SynthTraceCfg {
+            apps: 8,
+            minutes: 10,
+            seed: 1234,
+            ..SynthTraceCfg::default()
+        };
+        let mk_day = |day: usize| -> Vec<(String, Vec<TraceRow>)> {
+            (0..s.apps)
+                .map(|i| (format!("app-{i}"), app_rows_for_day(&s, i, day)))
+                .collect()
+        };
+        let days: Vec<_> = (0..3).map(mk_day).collect();
+        let cfg = cfg_with(PredictorPolicy::Both, true);
+        let seed = shared_world_seed(cfg.seed, 0);
+        let mut shared_cfg = cfg.clone();
+        shared_cfg.pool = PoolMode::Shared;
+        let per_day = replay_pool_days(&days, &shared_cfg, seed, s.minutes);
+        assert_eq!(per_day.len(), 3);
+        // Apps/functions are attributed once (day 0), so the cumulative
+        // merge counts them once.
+        assert_eq!(per_day[0].apps, s.apps as u64);
+        assert_eq!(per_day[1].apps, 0);
+        let mut cumulative = MacroMetrics::default();
+        for d in &per_day {
+            cumulative.merge(d);
+        }
+        assert_eq!(cumulative.apps, s.apps as u64);
+        let expected: u64 = per_day.iter().map(|d| d.invocations).sum();
+        assert_eq!(cumulative.invocations, expected);
+        assert!(cumulative.invocations > 0, "the trace drove work");
+        // Day 0 skips its warmup minutes; days 1+ replay their full
+        // horizon (warmup is a day-0-only affair).
+        assert!(per_day[1].invocations > 0, "day 1 saw arrivals");
+        // Determinism across reruns.
+        let again = replay_pool_days(&days, &shared_cfg, seed, s.minutes);
+        assert_eq!(per_day, again);
     }
 }

@@ -15,6 +15,12 @@
 //! `azure_macro_determinism` regression test pins `--shards 1/2/8 ×
 //! --parallel 1/4`.
 //!
+//! **Shared-pool mode** keeps the weaker half of that contract: a shard's
+//! world depends only on `(shard contents, shard index, run seed)`, so at
+//! a FIXED `--shards` the merge is still byte-identical for any
+//! `--parallel` — but changing the shard count regroups tenants into
+//! different clusters and legitimately changes contention.
+//!
 //! Cost model: a CSV replay scans the file once per shard (workers scan
 //! concurrently); rows not owned by the shard are parsed and dropped, and
 //! only the owned rows' compact per-minute counts are held in memory.
@@ -26,8 +32,11 @@ use anyhow::{bail, Result};
 use crate::experiments::harness::SweepRunner;
 use crate::util::fxhash::FxHashMap;
 use crate::workload::macrotrace::ingest::{AzureTraceReader, TraceRow};
-use crate::workload::macrotrace::replay::{app_hash, replay_app, MacroMetrics, ReplayCfg};
-use crate::workload::macrotrace::synth::{app_rows, SynthTraceCfg};
+use crate::workload::macrotrace::replay::{
+    app_hash, replay_app, replay_pool_days, shared_world_seed, MacroMetrics, PoolMode,
+    ReplayCfg,
+};
+use crate::workload::macrotrace::synth::{app_rows, app_rows_for_day, SynthTraceCfg};
 
 /// Stable shard assignment for an app.
 pub fn shard_of(app: &str, shards: usize) -> usize {
@@ -56,7 +65,7 @@ pub struct ShardOut {
 /// rows in trace order) plus the scan's skip count. This is the unit the
 /// experiment grid reuses — gather once, replay under every
 /// `(variant, seed)` combination.
-pub type ShardApps = Vec<(String, Vec<TraceRow>)>;
+pub type ShardApps = crate::workload::macrotrace::replay::AppRows;
 
 /// Gather the rows owned by `shard` (of `shards`): one streaming pass for
 /// CSV sources (an I/O error mid-scan is a hard error, never a silent
@@ -102,6 +111,61 @@ pub fn load_shard_apps(
     }
 }
 
+/// The synth app indices owned by `shard`, paired with their names and
+/// sorted by name (matching [`load_shard_apps`]' ordering exactly). The
+/// index is what multi-day replays need to materialise later day slices.
+pub fn shard_synth_apps(
+    synth: &SynthTraceCfg,
+    shard: usize,
+    shards: usize,
+) -> Vec<(String, usize)> {
+    let mut apps: Vec<(String, usize)> = (0..synth.apps)
+        .map(|i| (format!("app-{i}"), i))
+        .filter(|(app, _)| shard_of(app, shards) == shard)
+        .collect();
+    apps.sort_by(|a, b| a.0.cmp(&b.0));
+    apps
+}
+
+/// Materialise day `day`'s rows for a shard's synth apps, in the same
+/// (name-sorted) order as the day-0 slice.
+pub fn shard_synth_day(
+    synth: &SynthTraceCfg,
+    apps: &[(String, usize)],
+    day: usize,
+) -> ShardApps {
+    apps.iter()
+        .map(|(app, i)| (app.clone(), app_rows_for_day(synth, *i, day)))
+        .collect()
+}
+
+/// Replay one shard's apps under `cfg`'s pool mode: isolated per-app
+/// worlds, or one shared memory-bounded world for the whole slice.
+pub fn replay_shard_apps(
+    apps: &[(String, Vec<TraceRow>)],
+    shard: usize,
+    cfg: &ReplayCfg,
+) -> MacroMetrics {
+    match cfg.pool {
+        PoolMode::PerApp => {
+            let mut out = MacroMetrics::default();
+            for (app, rows) in apps {
+                out.merge(&replay_app(app, rows, cfg));
+            }
+            out
+        }
+        PoolMode::Shared => {
+            if apps.is_empty() {
+                return MacroMetrics::default();
+            }
+            let days = [apps.to_vec()];
+            replay_pool_days(&days, cfg, shared_world_seed(cfg.seed, shard), 0)
+                .pop()
+                .expect("single-day replay yields one slice")
+        }
+    }
+}
+
 /// Replay the slice of `src` owned by `shard` (of `shards`).
 pub fn replay_shard(
     src: &TraceSource,
@@ -114,10 +178,8 @@ pub fn replay_shard(
         skipped,
         ..ShardOut::default()
     };
-    for (app, rows) in &apps {
-        out.rows += rows.len() as u64;
-        out.metrics.merge(&replay_app(app, rows, cfg));
-    }
+    out.rows = apps.iter().map(|(_, r)| r.len() as u64).sum();
+    out.metrics = replay_shard_apps(&apps, shard, cfg);
     Ok(out)
 }
 
@@ -247,5 +309,47 @@ mod tests {
     fn missing_csv_errors() {
         let src = TraceSource::Csv(PathBuf::from("/nonexistent/azure.csv"));
         assert!(replay_shard(&src, 0, 1, &cfg()).is_err());
+    }
+
+    #[test]
+    fn synth_index_slices_match_the_row_loader() {
+        let TraceSource::Synth(synth) = synth_src() else {
+            unreachable!()
+        };
+        for shard in 0..3 {
+            let idx = shard_synth_apps(&synth, shard, 3);
+            let (apps, _) = load_shard_apps(&synth_src(), shard, 3).unwrap();
+            assert_eq!(idx.len(), apps.len());
+            for ((name_i, i), (name_a, rows)) in idx.iter().zip(apps.iter()) {
+                assert_eq!(name_i, name_a, "index slice order matches loader order");
+                let day0 = shard_synth_day(&synth, &[(name_i.clone(), *i)], 0);
+                assert_eq!(&day0[0].1, rows);
+            }
+        }
+    }
+
+    #[test]
+    fn shared_pool_is_parallelism_invariant_at_fixed_shards() {
+        let src = synth_src();
+        let mut cfg = cfg();
+        cfg.pool = crate::workload::macrotrace::replay::PoolMode::Shared;
+        let shards = 3;
+        let serial = replay_sharded(&src, shards, &cfg, &SweepRunner::new(1)).unwrap();
+        assert!(serial.metrics.invocations > 0);
+        let parallel = replay_sharded(&src, shards, &cfg, &SweepRunner::new(4)).unwrap();
+        assert_eq!(
+            serial.metrics.digest(),
+            parallel.metrics.digest(),
+            "fixed shards must be parallelism-invariant in shared mode"
+        );
+        // Shared pools genuinely contend: the same trace through one
+        // 16 GB-equivalent cluster differs from isolated microcosms.
+        let mut per_app = cfg.clone();
+        per_app.pool = crate::workload::macrotrace::replay::PoolMode::PerApp;
+        let isolated = replay_sharded(&src, shards, &per_app, &SweepRunner::new(2)).unwrap();
+        assert_eq!(
+            isolated.metrics.invocations, serial.metrics.invocations,
+            "both modes replay the same arrival volume"
+        );
     }
 }

@@ -155,20 +155,41 @@ pub fn app_spec(cfg: &SynthTraceCfg, index: usize) -> SynthApp {
 }
 
 /// Synthesize app `index`'s trace rows. Deterministic in `(cfg, index)`;
-/// independent of every other app.
+/// independent of every other app. Equivalent to
+/// [`app_rows_for_day`]`(cfg, index, 0)`.
 ///
 /// Orchestrated apps emit a chain: function 0 carries the external
 /// arrivals and successors mirror its counts (each stage runs once per
 /// chain execution; stage runtimes are well under a minute), with the
 /// `orchestration` trigger marking chain membership for the replayer.
 pub fn app_rows(cfg: &SynthTraceCfg, index: usize) -> Vec<TraceRow> {
+    app_rows_for_day(cfg, index, 0)
+}
+
+/// Day-sliced synthesis for multi-day horizons: day `d` keeps day 0's
+/// population, arrival classes, durations, memory and triggers (the app
+/// *is* the same app every day) and redraws only the per-minute counts
+/// from a `(seed, index, day)`-forked stream. Day 0 draws its counts
+/// inline from the app's base stream, so `app_rows_for_day(cfg, i, 0)` is
+/// byte-identical to the historical `app_rows(cfg, i)` — the single-day
+/// replay contract is untouched.
+pub fn app_rows_for_day(cfg: &SynthTraceCfg, index: usize, day: usize) -> Vec<TraceRow> {
     let mut rng = app_rng(cfg.seed, index);
     let app = sample_app(&cfg.population, index, &mut rng);
     let nfns = app.functions.min(MAX_FUNCTIONS_PER_APP) as usize;
+    // The day fork: only consulted for day > 0 counts, so the base
+    // stream's draw sequence is identical for every day.
+    let mut day_rng =
+        Rng::new(mix64(mix64(cfg.seed, index as u64), 0xDA11_511C_ED00 + day as u64));
     let mut rows = Vec::with_capacity(nfns);
     if app.orchestrated {
         let head_class = sample_class(&mut rng, cfg.peak_rpm);
-        let head_counts = class_counts(head_class, cfg.minutes, &mut rng);
+        let base_head = class_counts(head_class, cfg.minutes, &mut rng);
+        let head_counts = if day == 0 {
+            base_head
+        } else {
+            class_counts(head_class, cfg.minutes, &mut day_rng)
+        };
         for f in 0..nfns {
             rows.push(TraceRow {
                 app: app.id.clone(),
@@ -183,7 +204,12 @@ pub fn app_rows(cfg: &SynthTraceCfg, index: usize) -> Vec<TraceRow> {
     } else {
         for f in 0..nfns {
             let class = sample_class(&mut rng, cfg.peak_rpm);
-            let counts = class_counts(class, cfg.minutes, &mut rng);
+            let base_counts = class_counts(class, cfg.minutes, &mut rng);
+            let counts = if day == 0 {
+                base_counts
+            } else {
+                class_counts(class, cfg.minutes, &mut day_rng)
+            };
             let trigger = *rng.choice(&["http", "queue", "storage", "timer"]);
             rows.push(TraceRow {
                 app: app.id.clone(),
@@ -290,6 +316,37 @@ mod tests {
             }
         }
         assert!(saw_chain, "population should contain orchestrated apps");
+    }
+
+    #[test]
+    fn day_slices_keep_the_population_and_redraw_counts() {
+        let cfg = small();
+        for i in [0usize, 3, 17] {
+            let d0 = app_rows_for_day(&cfg, i, 0);
+            assert_eq!(d0, app_rows(&cfg, i), "day 0 must be the legacy rows");
+            let d1 = app_rows_for_day(&cfg, i, 1);
+            let d1_again = app_rows_for_day(&cfg, i, 1);
+            assert_eq!(d1, d1_again, "day slices are deterministic");
+            assert_eq!(d0.len(), d1.len(), "same functions every day");
+            for (a, b) in d0.iter().zip(d1.iter()) {
+                assert_eq!(a.function, b.function);
+                assert_eq!(a.trigger, b.trigger);
+                assert_eq!(a.duration_ms, b.duration_ms, "durations are stable");
+                assert_eq!(a.memory_mb, b.memory_mb, "memory is stable");
+                assert_eq!(a.counts.len(), b.counts.len());
+            }
+            // Chain mirroring survives the day fork.
+            if d1.len() > 1 && d1[0].trigger == "orchestration" {
+                assert!(d1.iter().all(|r| r.counts == d1[0].counts));
+            }
+        }
+        // Some busy app's counts actually change across days.
+        let changed = (0..cfg.apps).any(|i| {
+            let d0 = app_rows_for_day(&cfg, i, 0);
+            let d1 = app_rows_for_day(&cfg, i, 1);
+            d0.iter().zip(d1.iter()).any(|(a, b)| a.counts != b.counts)
+        });
+        assert!(changed, "day slicing must redraw arrival counts");
     }
 
     #[test]

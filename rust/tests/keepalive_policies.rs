@@ -1,0 +1,336 @@
+//! Keep-alive policy integration tests.
+//!
+//! Two jobs: (1) pin the `FixedTtl` default to the **legacy inline
+//! semantics** the trait refactor extracted from `exec.rs` (eviction at
+//! exactly `idle_eviction` after the last release; LRU steal only when
+//! container sharing is on; queueing otherwise), and (2) exercise the new
+//! policies — `LruPressure`'s pressure-ordered eviction and the
+//! stale-idle-timer cancellation bugfix.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::container::ContainerState;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::invoke;
+use freshen_rs::platform::world::{PlatformSim, World};
+use freshen_rs::simcore::Sim;
+use freshen_rs::util::config::{Config, KeepAliveKind};
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+fn small_world(cfg: Config) -> World {
+    let mut w = World::new(cfg);
+    let mut ep = Endpoint::new("store", Site::Edge);
+    ep.store.put("ID1", 1e4, SimTime::ZERO); // small object: fast bodies
+    w.add_endpoint(ep);
+    w
+}
+
+fn lambda(id: &str) -> freshen_rs::platform::function::FunctionSpec {
+    freshen_rs::platform::function::FunctionSpec::paper_lambda(
+        id,
+        "app",
+        "store",
+        SimDuration::from_millis(20),
+    )
+}
+
+fn run_sim(w: &mut World, f: impl FnOnce(&mut PlatformSim, &mut World)) -> PlatformSim {
+    let mut sim: PlatformSim = Sim::new();
+    sim.max_events = 10_000_000;
+    f(&mut sim, w);
+    sim.run(w);
+    sim
+}
+
+// ====================================================================
+// The stale-timer bugfix
+// ====================================================================
+
+#[test]
+fn superseded_idle_timers_are_cancelled_not_accumulated() {
+    // Regression: every container release used to schedule a fresh
+    // idle-eviction closure and leave the previous one pending, so a hot
+    // container accumulated O(releases) no-op wheel events. Now each
+    // release replaces the pending check.
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    let mut w = small_world(cfg);
+    w.deploy(lambda("f"));
+    let pending_at_probe = Rc::new(Cell::new(usize::MAX));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        sim.schedule(SimDuration::from_secs(1), |sim, w| {
+            invoke(sim, w, "f");
+        });
+        sim.schedule(SimDuration::from_secs(2), |sim, w| {
+            invoke(sim, w, "f");
+        });
+        // Probe after all three invocations are done but long before any
+        // idle TTL: the ONLY pending events should be exactly one idle
+        // check (it used to be three).
+        let seen = Rc::clone(&pending_at_probe);
+        sim.schedule(SimDuration::from_secs(100), move |sim, _w| {
+            seen.set(sim.pending());
+        });
+    });
+    assert_eq!(w.metrics.count(), 3);
+    assert_eq!(
+        pending_at_probe.get(),
+        1,
+        "exactly one idle check may be pending; superseded timers must be cancelled"
+    );
+    // The single surviving check still evicts at the TTL.
+    assert_eq!(w.metrics.evictions, 1);
+    assert_eq!(w.metrics.evictions_idle, 1);
+}
+
+// ====================================================================
+// FixedTtl == the legacy inline behavior
+// ====================================================================
+
+#[test]
+fn fixed_ttl_evicts_exactly_at_the_legacy_idle_ttl() {
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    assert_eq!(cfg.keep_alive, KeepAliveKind::FixedTtl, "FixedTtl is the default");
+    let mut w = small_world(cfg);
+    w.deploy(lambda("f"));
+    let warm_at_600 = Rc::new(Cell::new(false));
+    let evicted_at_610 = Rc::new(Cell::new(false));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        // The invocation releases its container well before t=10s; the
+        // legacy TTL is 600s from the release. At t=600s the container
+        // must still be warm (idle < 600), by t=610s it must be gone.
+        let warm = Rc::clone(&warm_at_600);
+        sim.schedule(SimDuration::from_secs(600), move |_sim, w| {
+            warm.set(w.containers[0].state == ContainerState::Warm);
+        });
+        let evicted = Rc::clone(&evicted_at_610);
+        sim.schedule(SimDuration::from_secs(610), move |_sim, w| {
+            evicted.set(w.containers[0].state == ContainerState::Evicted);
+        });
+    });
+    assert!(warm_at_600.get(), "no early eviction: the TTL runs from the release");
+    assert!(evicted_at_610.get(), "eviction fires at release + 600s");
+    assert_eq!(w.metrics.evictions_idle, 1);
+    assert_eq!(w.metrics.evictions_pressure, 0);
+}
+
+#[test]
+fn fixed_ttl_steals_lru_only_when_sharing_is_allowed() {
+    // Legacy `steal_lru_warm` semantics: with sharing ON a full cluster
+    // repurposes the LRU warm container (a pressure eviction); with
+    // sharing OFF the invocation queues until an idle eviction frees the
+    // slot.
+    let run = |sharing: bool| {
+        let mut cfg = Config::default();
+        cfg.seed = 7;
+        cfg.invokers = 1;
+        cfg.containers_per_invoker = 1;
+        cfg.allow_container_sharing = sharing;
+        let mut w = small_world(cfg);
+        w.deploy(lambda("f"));
+        w.deploy(lambda("g"));
+        run_sim(&mut w, |sim, w| {
+            invoke(sim, w, "f");
+            sim.schedule(SimDuration::from_secs(5), |sim, w| {
+                invoke(sim, w, "g");
+            });
+        });
+        w
+    };
+    let shared = run(true);
+    assert_eq!(shared.metrics.count(), 2, "both ran");
+    assert_eq!(shared.metrics.cold_starts, 2);
+    assert_eq!(shared.metrics.evictions_pressure, 1, "g stole f's warm container");
+    assert_eq!(shared.metrics.warm_kills, 1, "the victim held live warm state");
+    let isolated = run(false);
+    assert_eq!(isolated.metrics.count(), 2, "g ran after the idle eviction");
+    assert_eq!(isolated.metrics.evictions_pressure, 0, "no steal without sharing");
+    assert!(isolated.metrics.evictions_idle >= 1);
+    // Queued g waited for the 600s TTL; stolen g ran right away.
+    let g_shared = shared.metrics.records().iter().find(|r| r.function == "g").unwrap();
+    let g_isolated = isolated.metrics.records().iter().find(|r| r.function == "g").unwrap();
+    assert!(g_isolated.latency() > g_shared.latency());
+}
+
+// ====================================================================
+// LruPressure
+// ====================================================================
+
+#[test]
+fn lru_pressure_evicts_in_lru_order_and_never_on_idle() {
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.invokers = 1;
+    cfg.containers_per_invoker = 2;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    let mut w = small_world(cfg);
+    for f in ["f", "g", "h"] {
+        w.deploy(lambda(f));
+    }
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        sim.schedule(SimDuration::from_secs(10), |sim, w| {
+            invoke(sim, w, "g");
+        });
+        sim.schedule(SimDuration::from_secs(20), |sim, w| {
+            invoke(sim, w, "h");
+        });
+    });
+    assert_eq!(w.metrics.count(), 3);
+    // h's cold start reclaimed the LRU victim — f, not g.
+    assert_eq!(w.metrics.evictions_pressure, 1);
+    assert_eq!(w.metrics.warm_kills, 1);
+    assert_eq!(w.metrics.evictions_idle, 0, "LruPressure never idles out");
+    assert!(w.find_warm("f").is_none(), "f (LRU) was the victim");
+    assert!(w.find_warm("g").is_some(), "g survived");
+    assert!(w.find_warm("h").is_some(), "h runs in the reclaimed slot");
+    // No idle timers: the simulation drained without a 600s tail.
+}
+
+#[test]
+fn lru_pressure_drains_cross_function_queues_without_idle_timers() {
+    // Regression: LruPressure arms no idle timers, and the historical
+    // cross-function retry path only ran from idle evictions — so an
+    // invocation queued while every container was Busy would have been
+    // stranded forever. A release with no same-function queue now offers
+    // the idle capacity to queued work immediately.
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.invokers = 1;
+    cfg.containers_per_invoker = 1;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    let mut w = small_world(cfg);
+    // A long-running f so g arrives while the only container is Busy.
+    w.deploy(freshen_rs::platform::function::FunctionSpec::paper_lambda(
+        "f",
+        "app",
+        "store",
+        SimDuration::from_secs(5),
+    ));
+    w.deploy(lambda("g"));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        sim.schedule(SimDuration::from_secs(1), |sim, w| {
+            invoke(sim, w, "g"); // Busy cluster, no warm victim: queues
+        });
+    });
+    assert_eq!(w.metrics.count(), 2, "the queued invocation must not be stranded");
+    assert!(
+        w.metrics.records().iter().any(|r| r.function == "g"),
+        "g ran after f's release"
+    );
+    // g reclaimed f's just-idled container under pressure.
+    assert_eq!(w.metrics.evictions_pressure, 1);
+}
+
+#[test]
+fn policies_diverge_under_slot_contention() {
+    // Two functions alternating on a one-slot cluster: FixedTtl (sharing
+    // off) serializes b behind the 600s TTL, LruPressure trades cold
+    // starts for immediacy. The policies must be *measurably* different —
+    // the property the keep-alive ablation axis exists to expose.
+    let run = |kind: KeepAliveKind| {
+        let mut cfg = Config::default();
+        cfg.seed = 11;
+        cfg.invokers = 1;
+        cfg.containers_per_invoker = 1;
+        cfg.keep_alive = kind;
+        let mut w = small_world(cfg);
+        w.deploy(lambda("a"));
+        w.deploy(lambda("b"));
+        run_sim(&mut w, |sim, w| {
+            for i in 0..20u64 {
+                sim.schedule(SimDuration::from_secs(i * 10), |sim, w| {
+                    invoke(sim, w, "a");
+                });
+                sim.schedule(SimDuration::from_secs(i * 10 + 5), |sim, w| {
+                    invoke(sim, w, "b");
+                });
+            }
+        });
+        w
+    };
+    let fixed = run(KeepAliveKind::FixedTtl);
+    let lru = run(KeepAliveKind::LruPressure);
+    assert_eq!(fixed.metrics.count(), 40);
+    assert_eq!(lru.metrics.count(), 40, "both policies conserve invocations");
+    assert!(
+        lru.metrics.cold_starts > fixed.metrics.cold_starts + 10,
+        "LRU stealing cold-starts every switch ({} vs {})",
+        lru.metrics.cold_starts,
+        fixed.metrics.cold_starts
+    );
+    assert!(lru.metrics.warm_kills > 10);
+    // FixedTtl pays in queueing latency instead.
+    let slow_fixed = fixed
+        .metrics
+        .records()
+        .iter()
+        .map(|r| r.latency())
+        .max()
+        .unwrap();
+    let slow_lru = lru.metrics.records().iter().map(|r| r.latency()).max().unwrap();
+    assert!(
+        slow_fixed > slow_lru,
+        "queueing tail under FixedTtl ({slow_fixed}) exceeds LRU's ({slow_lru})"
+    );
+}
+
+// ====================================================================
+// HybridHistogram
+// ====================================================================
+
+#[test]
+fn hybrid_retires_unpredictable_containers_early_and_keeps_periodic_ones() {
+    // One periodic function invoked every 60s: the IAT histogram predicts
+    // each next arrival, so the container survives gaps far longer than
+    // the hybrid fallback TTL (60s) — every arrival after the history
+    // warms up is a warm start. A one-shot function's container, by
+    // contrast, is retired after the fallback TTL instead of squatting
+    // for the fixed 600s.
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.keep_alive = KeepAliveKind::HybridHistogram;
+    let mut w = small_world(cfg);
+    w.deploy(lambda("cron"));
+    w.deploy(lambda("oneshot"));
+    let oneshot_gone_at = Rc::new(Cell::new(false));
+    run_sim(&mut w, |sim, w| {
+        for i in 0..12u64 {
+            sim.schedule(SimDuration::from_secs(i * 60), |sim, w| {
+                invoke(sim, w, "cron");
+            });
+        }
+        invoke(sim, w, "oneshot");
+        // The one-shot container must be gone well before the fixed
+        // 600s TTL (hybrid fallback is 60s).
+        let gone = Rc::clone(&oneshot_gone_at);
+        sim.schedule(SimDuration::from_secs(200), move |_sim, w| {
+            gone.set(w.find_warm("oneshot").is_none());
+        });
+    });
+    assert_eq!(w.metrics.count(), 13);
+    assert!(
+        oneshot_gone_at.get(),
+        "unpredictable container retired after the short fallback TTL"
+    );
+    // The periodic function cold-started once; the predicted keep-alive
+    // windows carried its container across every 60s gap that followed
+    // the histogram's warmup (min_samples = 4).
+    let cron_colds = w
+        .metrics
+        .records()
+        .iter()
+        .filter(|r| r.function == "cron")
+        .filter(|r| r.start_kind == freshen_rs::metrics::StartKind::Cold)
+        .count();
+    assert!(
+        cron_colds <= 5,
+        "predicted windows keep the periodic container warm (saw {cron_colds} colds)"
+    );
+}

@@ -115,6 +115,51 @@ fn oversized_batches_chunk_instead_of_erroring() {
 }
 
 #[test]
+fn no_pad_executes_exact_batches_with_identical_logits() {
+    // Dynamic batch-size selection: the native engine runs any row count,
+    // so `--no-pad` skips the pad-to-AOT policy entirely — zero padded
+    // rows, one execution per chunk, and logits identical to the padded
+    // path.
+    let spec = GenSpec::tiny(); // AOT batches [1, 2, 4]
+    let dir = gen_dir("no-pad", &spec);
+    let dim;
+    let padded_out;
+    {
+        let mut padded = ClassifierRuntime::load(&dir).unwrap();
+        assert!(padded.pads_to_aot());
+        dim = padded.manifest.input_dim;
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..dim).map(|j| ((i * 5 + j) % 13) as f32 / 13.0).collect())
+            .collect();
+        padded_out = padded.infer(&rows).unwrap();
+        assert_eq!(padded.padded_rows, 1, "3 rows pad to the AOT batch of 4");
+    }
+    let mut exact = ClassifierRuntime::load(&dir).unwrap();
+    assert!(!exact.set_pad_to_aot(false), "native backend honours no-pad");
+    assert!(!exact.pads_to_aot());
+    let rows: Vec<Vec<f32>> = (0..3)
+        .map(|i| (0..dim).map(|j| ((i * 5 + j) % 13) as f32 / 13.0).collect())
+        .collect();
+    let out = exact.infer(&rows).unwrap();
+    assert_eq!(exact.padded_rows, 0, "no-pad executes exactly 3 rows");
+    assert_eq!(exact.executions, 1);
+    for (a, b) in out.iter().flatten().zip(padded_out.iter().flatten()) {
+        assert!((a - b).abs() < 1e-6, "no-pad changed the logits");
+    }
+    // The self-check passes either way (the probe is a 1-row batch).
+    assert!(exact.self_check().is_ok());
+    // And the serve CLI accepts the flag end-to-end on the native backend.
+    let d = dir.to_str().unwrap().to_string();
+    let run = |args: &[&str]| {
+        freshen_rs::cli::run(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    };
+    run(&["serve", "--artifacts", &d, "--requests", "5", "--no-pad"])
+        .expect("serve --no-pad");
+    run(&["serve", "--artifacts", &d, "--no-pad", "--backend", "pjrt"])
+        .expect_err("--no-pad must reject the PJRT backend");
+}
+
+#[test]
 fn serve_engine_runs_end_to_end_on_the_native_backend() {
     let dir = gen_dir("serve", &GenSpec::tiny());
     let engine = ServeEngine::start(
