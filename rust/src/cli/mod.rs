@@ -32,7 +32,7 @@ use crate::platform::world::World;
 use crate::runtime::backend::BackendKind;
 use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
-use crate::util::config::{Config, KeepAliveKind};
+use crate::util::config::{Config, KeepAliveKind, QueueKind};
 use crate::util::json::Json;
 use crate::workload::macrotrace::replay::PoolMode;
 use crate::workload::macrotrace::shard::TraceSource;
@@ -54,6 +54,10 @@ USAGE:
                     [--pool per-app|shared]   # shared: one memory-bounded
                     #   world per shard, warm containers compete across apps
                     [--keep-alive fixed,lru,hybrid]  # keep-alive ablation axis
+                    [--queue legacy,fifo,memaware]   # dispatch-queue ablation axis
+                    [--freshen-guard]         # abort stale freshen runs on
+                    #   pressure-reclaimed containers (container-incarnation
+                    #   guard; default off = legacy keep-stepping semantics)
                     [--days N]                # synth day slices with pool +
                     #   predictor state carried across day boundaries
                     [--invokers N] [--invoker-mb MB]  # cluster sizing
@@ -85,7 +89,7 @@ pub struct Opts {
 /// Flags that never take a value — without this list the generic parser
 /// would swallow a following positional as the flag's value
 /// (`gen-artifacts --tiny DIR` must keep DIR positional).
-const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad"];
+const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad", "freshen-guard"];
 
 pub fn parse_args(args: &[String]) -> Opts {
     let mut positional = Vec::new();
@@ -489,6 +493,20 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
             bail!("--keep-alive must name at least one policy");
         }
     }
+    if let Some(list) = opts.flags.get("queue") {
+        cfg.queues = list
+            .split(',')
+            .map(|q| {
+                QueueKind::parse(q.trim()).with_context(|| {
+                    format!("unknown queue discipline '{q}' (use legacy|fifo|memaware)")
+                })
+            })
+            .collect::<Result<Vec<QueueKind>>>()?;
+        if cfg.queues.is_empty() {
+            bail!("--queue must name at least one discipline");
+        }
+    }
+    cfg.freshen_guard = opts.flag("freshen-guard");
     if let Some(n) = opts.flags.get("invokers") {
         cfg.invokers = Some(n.parse().context("--invokers")?);
     }
@@ -714,6 +732,23 @@ mod tests {
         assert!(
             run(&base(&["--keep-alive", "bogus"])).is_err(),
             "bad keep-alive policy errors"
+        );
+        assert!(
+            run(&base(&[
+                "--pool",
+                "shared",
+                "--queue",
+                "legacy,fifo,memaware",
+                "--keep-alive",
+                "lru",
+                "--freshen-guard",
+            ]))
+            .is_ok(),
+            "queue-discipline ablation with the incarnation guard must run"
+        );
+        assert!(
+            run(&base(&["--queue", "bogus"])).is_err(),
+            "bad queue discipline errors"
         );
         let csv_days: Vec<String> = vec![
             "azure-macro".into(),

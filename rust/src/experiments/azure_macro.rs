@@ -10,15 +10,19 @@
 //!   tenants genuinely compete;
 //! - **keep-alive policy** (`--keep-alive fixed,lru,hybrid`) — which
 //!   [`KeepAlivePolicy`](crate::platform::keepalive::KeepAlivePolicy)
-//!   governs idle/pressure eviction.
+//!   governs idle/pressure eviction;
+//! - **queue discipline** (`--queue legacy,fifo,memaware`) — which
+//!   [`QueueDiscipline`](crate::platform::dispatch::QueueDiscipline)
+//!   holds and drains invocations waiting on cluster memory.
 //!
 //! Reports the metrics the literature compares on — cold-start rate,
 //! p50/p99 end-to-end latency, freshen hit rate, wasted-freshen fraction
 //! — plus, for contended configurations, evictions by cause, warm-kill
-//! rate, and peak/integral resident memory; per variant×policy cell,
-//! merged across shards and seeds. `--days N` replays N day slices with
-//! pool + predictor state carried across day boundaries and per-day
-//! metrics.
+//! rate, and peak/integral resident memory, and (on a queue-discipline
+//! grid) queue depth, time-in-queue and stale-freshen-abort counters; per
+//! variant×policy×queue cell, merged across shards and seeds. `--days N`
+//! replays N day slices with pool + predictor state carried across day
+//! boundaries and per-day metrics.
 //!
 //! The grid is **shard-major**: each [`SweepRunner`] worker gathers its
 //! shard's rows ONCE (one streaming pass over a CSV, or direct synthesis
@@ -35,7 +39,7 @@ use anyhow::{bail, Result};
 
 use crate::experiments::harness::SweepRunner;
 use crate::experiments::print_table;
-use crate::util::config::{KeepAliveKind, MemoryAccounting};
+use crate::util::config::{KeepAliveKind, MemoryAccounting, QueueKind};
 use crate::util::rng::mix64;
 use crate::workload::macrotrace::replay::{
     app_hash, replay_pool_days, shared_world_seed, MacroMetrics, PoolMode, PredictorPolicy,
@@ -119,6 +123,12 @@ pub struct AzureMacroCfg {
     /// Keep-alive policies to ablate (default: `[FixedTtl]`, the legacy
     /// behavior).
     pub policies: Vec<KeepAliveKind>,
+    /// Queue disciplines to ablate (default: `[LegacyOneShot]`, the
+    /// legacy behavior).
+    pub queues: Vec<QueueKind>,
+    /// Abort stale freshen runs on pressure-reclaimed containers
+    /// (`Config::freshen_incarnation_guard`; default off = legacy).
+    pub freshen_guard: bool,
     /// Day slices to replay with cross-day state carry (synth only; 1 =
     /// the historical single-horizon run).
     pub days: usize,
@@ -136,17 +146,28 @@ impl AzureMacroCfg {
             variants: Variant::all().to_vec(),
             pool: PoolMode::PerApp,
             policies: vec![KeepAliveKind::FixedTtl],
+            queues: vec![QueueKind::LegacyOneShot],
+            freshen_guard: false,
             days: 1,
             invokers: None,
             invoker_memory_mb: None,
         }
     }
 
-    /// The replay config for one `(variant, policy, seed)` grid cell.
-    fn cell_cfg(&self, variant: Variant, policy: KeepAliveKind, seed: u64) -> ReplayCfg {
+    /// The replay config for one `(queue, policy, variant, seed)` grid
+    /// cell.
+    fn cell_cfg(
+        &self,
+        variant: Variant,
+        policy: KeepAliveKind,
+        queue: QueueKind,
+        seed: u64,
+    ) -> ReplayCfg {
         let mut r = variant.replay_cfg(seed, self.warmup_minutes);
         r.pool = self.pool;
         r.base.keep_alive = policy;
+        r.base.queue = queue;
+        r.base.freshen_incarnation_guard = self.freshen_guard;
         if let Some(n) = self.invokers {
             r.base.invokers = n;
         }
@@ -166,14 +187,18 @@ impl AzureMacroCfg {
         self.pool == PoolMode::Shared
             || self.days > 1
             || self.policies != vec![KeepAliveKind::FixedTtl]
+            || self.queues != vec![QueueKind::LegacyOneShot]
+            || self.freshen_guard
     }
 }
 
-/// One `(variant, keep-alive policy)` cell of the merged benchmark.
+/// One `(variant, keep-alive policy, queue discipline)` cell of the
+/// merged benchmark.
 #[derive(Debug, Clone)]
 pub struct MacroRow {
     pub variant: Variant,
     pub policy: KeepAliveKind,
+    pub queue: QueueKind,
     /// Metrics merged across shards, seeds and days.
     pub metrics: MacroMetrics,
     /// Per-day metrics (length = `days`), merged across shards and seeds.
@@ -181,21 +206,28 @@ pub struct MacroRow {
 }
 
 impl MacroRow {
-    /// Row label: the variant, qualified by the policy when the policy
-    /// axis is in play.
-    fn label(&self, with_policy: bool) -> String {
+    /// Row label: the variant, qualified by the policy / queue discipline
+    /// when those axes are in play.
+    fn label(&self, with_policy: bool, with_queue: bool) -> String {
+        let mut s = self.variant.as_str().to_string();
         if with_policy {
-            format!("{}/{}", self.variant.as_str(), self.policy.as_str())
-        } else {
-            self.variant.as_str().to_string()
+            s.push('/');
+            s.push_str(self.policy.as_str());
         }
+        if with_queue {
+            s.push('/');
+            s.push_str(self.queue.as_str());
+        }
+        s
     }
 }
 
 /// The merged benchmark result.
 #[derive(Debug, Clone)]
 pub struct AzureMacro {
-    /// Per-cell metrics (policy-major, variants in request order within).
+    /// Per-cell metrics (queue-major, then policy, variants in request
+    /// order within — the default single-queue grid is policy-major, as
+    /// before).
     pub rows: Vec<MacroRow>,
     pub shards: usize,
     pub seeds: Vec<u64>,
@@ -206,6 +238,9 @@ pub struct AzureMacro {
     pub skipped_rows: u64,
     /// Whether the report carries the contention extras.
     contended: bool,
+    /// Whether the incarnation guard ran (gates the queue table even on a
+    /// single-discipline grid, so the stale-abort counter is visible).
+    guard: bool,
 }
 
 /// One shard worker's output: per-cell, per-day metrics (seeds merged
@@ -217,9 +252,9 @@ struct ShardSlice {
 }
 
 /// Run the benchmark. Shard-major: each worker ingests its shard once and
-/// replays it under every `(variant × policy × seed)`; shard slices then
-/// merge per cell in shard order (commutative merges — any order gives
-/// the same bytes).
+/// replays it under every `(queue × policy × variant × seed)`; shard
+/// slices then merge per cell in shard order (commutative merges — any
+/// order gives the same bytes).
 pub fn run_multi(
     cfg: &AzureMacroCfg,
     seeds: &[u64],
@@ -228,15 +263,18 @@ pub fn run_multi(
     assert!(!seeds.is_empty(), "azure-macro needs at least one seed");
     assert!(!cfg.variants.is_empty(), "azure-macro needs at least one variant");
     assert!(!cfg.policies.is_empty(), "azure-macro needs at least one keep-alive policy");
+    assert!(!cfg.queues.is_empty(), "azure-macro needs at least one queue discipline");
     let days = cfg.days.max(1);
     if days > 1 && !matches!(cfg.source, TraceSource::Synth(_)) {
         bail!("--days needs the synthesizer (day-sliced CSVs are not ingestable yet)");
     }
     let shards = cfg.shards.max(1);
-    let cells: Vec<(KeepAliveKind, Variant)> = cfg
-        .policies
+    let cells: Vec<(QueueKind, KeepAliveKind, Variant)> = cfg
+        .queues
         .iter()
-        .flat_map(|&p| cfg.variants.iter().map(move |&v| (p, v)))
+        .flat_map(|&q| {
+            cfg.policies.iter().flat_map(move |&p| cfg.variants.iter().map(move |&v| (q, p, v)))
+        })
         .collect();
     let grid: Vec<usize> = (0..shards).collect();
     let flat = runner.run(&grid, |_, &shard| -> Result<ShardSlice> {
@@ -277,9 +315,9 @@ pub fn run_multi(
         };
         let rows = apps.iter().map(|(_, r)| r.len() as u64).sum();
         let mut per_cell = vec![vec![MacroMetrics::default(); days]; cells.len()];
-        for (ci, &(policy, variant)) in cells.iter().enumerate() {
+        for (ci, &(queue, policy, variant)) in cells.iter().enumerate() {
             for &seed in seeds {
-                let rcfg = cfg.cell_cfg(variant, policy, seed);
+                let rcfg = cfg.cell_cfg(variant, policy, queue, seed);
                 let per_day: Vec<MacroMetrics> = if days > 1 {
                     match cfg.pool {
                         PoolMode::Shared => replay_pool_days(
@@ -322,9 +360,10 @@ pub fn run_multi(
 
     let mut rows_out: Vec<MacroRow> = cells
         .iter()
-        .map(|&(policy, variant)| MacroRow {
+        .map(|&(queue, policy, variant)| MacroRow {
             variant,
             policy,
+            queue,
             metrics: MacroMetrics::default(),
             per_day: vec![MacroMetrics::default(); days],
         })
@@ -355,6 +394,7 @@ pub fn run_multi(
         trace_rows,
         skipped_rows,
         contended: cfg.contended(),
+        guard: cfg.freshen_guard,
     })
 }
 
@@ -365,19 +405,25 @@ impl AzureMacro {
         self.rows.iter().any(|r| r.policy != KeepAliveKind::FixedTtl)
     }
 
+    /// Does the report label rows with their queue discipline?
+    fn queue_axis(&self) -> bool {
+        self.rows.iter().any(|r| r.queue != QueueKind::LegacyOneShot)
+    }
+
     /// Canonical fingerprint of the merged metrics (one line per cell,
     /// plus per-day lines on multi-day runs) — what the determinism
-    /// regression tests compare byte-for-byte.
+    /// regression tests compare byte-for-byte. Labels are fully
+    /// qualified (`variant/policy/queue`).
     pub fn digest(&self) -> String {
         let mut lines: Vec<String> = self
             .rows
             .iter()
-            .map(|r| format!("{}: {}", r.label(true), r.metrics.digest()))
+            .map(|r| format!("{}: {}", r.label(true, true), r.metrics.digest()))
             .collect();
         if self.days > 1 {
             for r in &self.rows {
                 for (d, m) in r.per_day.iter().enumerate() {
-                    lines.push(format!("{} day{}: {}", r.label(true), d, m.digest()));
+                    lines.push(format!("{} day{}: {}", r.label(true, true), d, m.digest()));
                 }
             }
         }
@@ -386,6 +432,7 @@ impl AzureMacro {
 
     pub fn print(&self) {
         let with_policy = self.policy_axis();
+        let with_queue = self.queue_axis();
         let first = &self.rows[0].metrics;
         println!(
             "\n== azure-macro: {} invocations / {} functions / {} apps per variant, \
@@ -409,7 +456,7 @@ impl AzureMacro {
             .map(|r| {
                 let m = &r.metrics;
                 vec![
-                    r.label(with_policy),
+                    r.label(with_policy, with_queue),
                     m.invocations.to_string(),
                     format!("{:.2}%", 100.0 * m.cold_start_rate()),
                     format!("{:.1}", m.p50_ms()),
@@ -441,7 +488,7 @@ impl AzureMacro {
                 .map(|r| {
                     let m = &r.metrics;
                     vec![
-                        r.label(with_policy),
+                        r.label(with_policy, with_queue),
                         m.evictions.to_string(),
                         m.evictions_idle.to_string(),
                         m.evictions_pressure.to_string(),
@@ -464,6 +511,39 @@ impl AzureMacro {
                 &rows,
             );
         }
+        if with_queue || self.guard {
+            // Queue-discipline extras: depth, time-in-queue, stale aborts.
+            // Only printed when the queue axis (or the incarnation guard)
+            // is in play, so legacy-default stdout stays byte-identical.
+            let rows: Vec<Vec<String>> = self
+                .rows
+                .iter()
+                .map(|r| {
+                    let m = &r.metrics;
+                    vec![
+                        r.label(with_policy, with_queue),
+                        m.queued_total.to_string(),
+                        m.queue_peak_depth.to_string(),
+                        format!("{:.1}", m.queue_wait_s()),
+                        format!("{:.1}", m.queue_wait_max_ms()),
+                        m.stale_freshen_aborts.to_string(),
+                        m.dropped_infeasible.to_string(),
+                    ]
+                })
+                .collect();
+            print_table(
+                &[
+                    "variant",
+                    "queued",
+                    "peak depth",
+                    "wait s",
+                    "wait max ms",
+                    "stale aborts",
+                    "dropped",
+                ],
+                &rows,
+            );
+        }
         if self.days > 1 {
             for r in &self.rows {
                 let per: Vec<String> = r
@@ -479,7 +559,7 @@ impl AzureMacro {
                         )
                     })
                     .collect();
-                println!("{} per-day: {}", r.label(with_policy), per.join("; "));
+                println!("{} per-day: {}", r.label(with_policy, with_queue), per.join("; "));
             }
         }
         let demoted = self
@@ -495,21 +575,20 @@ impl AzureMacro {
             );
         }
         // Speedups vs the baseline variant under the SAME keep-alive
-        // policy (cross-policy comparisons live in the table itself).
+        // policy and queue discipline (cross-axis comparisons live in the
+        // tables themselves).
         for r in &self.rows {
             if r.variant == Variant::Baseline || r.metrics.p50_ms() == 0.0 {
                 continue;
             }
-            let Some(base) = self
-                .rows
-                .iter()
-                .find(|b| b.variant == Variant::Baseline && b.policy == r.policy)
-            else {
+            let Some(base) = self.rows.iter().find(|b| {
+                b.variant == Variant::Baseline && b.policy == r.policy && b.queue == r.queue
+            }) else {
                 continue;
             };
             println!(
                 "{}: p50 speedup {:.2}x, cold starts {} -> {}",
-                r.label(with_policy),
+                r.label(with_policy, with_queue),
                 base.metrics.p50_ms() / r.metrics.p50_ms(),
                 base.metrics.cold_starts,
                 r.metrics.cold_starts
@@ -590,7 +669,30 @@ mod tests {
             r.rows[0].metrics.invocations,
             r.rows[2].metrics.invocations
         );
-        assert!(r.digest().contains("baseline/fixed:"));
+        assert!(r.digest().contains("baseline/fixed/legacy:"));
+    }
+
+    #[test]
+    fn queue_axis_produces_queue_major_rows() {
+        let mut cfg = small_cfg();
+        cfg.variants = vec![Variant::Baseline];
+        cfg.policies = vec![KeepAliveKind::FixedTtl, KeepAliveKind::LruPressure];
+        cfg.queues = vec![QueueKind::LegacyOneShot, QueueKind::FifoFair];
+        let r = run_multi(&cfg, &[1], &SweepRunner::new(2)).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        assert!(r.queue_axis());
+        // Queue-major ordering, then policy.
+        assert_eq!(r.rows[0].queue, QueueKind::LegacyOneShot);
+        assert_eq!(r.rows[0].policy, KeepAliveKind::FixedTtl);
+        assert_eq!(r.rows[1].policy, KeepAliveKind::LruPressure);
+        assert_eq!(r.rows[2].queue, QueueKind::FifoFair);
+        assert!(r.digest().contains("baseline/fixed/fifo:"));
+        // Lightly-loaded per-app worlds never queue, so disciplines agree
+        // on volume.
+        assert_eq!(
+            r.rows[0].metrics.invocations,
+            r.rows[2].metrics.invocations
+        );
     }
 
     #[test]

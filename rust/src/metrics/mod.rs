@@ -83,6 +83,24 @@ pub struct MetricsHub {
     /// Per-app isolation re-inits (warm container swapped to a sibling
     /// function instead of cold-starting a new one).
     pub reinits: u64,
+    /// Distinct invocations that ever waited in the dispatch queue
+    /// (retry re-enqueues don't recount).
+    pub queued_total: u64,
+    /// Deepest the dispatch queue ever got.
+    pub queue_peak_depth: u64,
+    /// Total time invocations spent queued waiting for cluster memory,
+    /// µs (integer so merged reports stay order-independent).
+    pub queue_wait_us: u64,
+    /// Longest single queue wait, µs.
+    pub queue_wait_max_us: u64,
+    /// Freshen runs aborted by the container-incarnation guard
+    /// (`Config::freshen_incarnation_guard`): the run's container was
+    /// pressure-reclaimed mid-flight.
+    pub stale_freshen_aborts: u64,
+    /// Invocations dropped explicitly because no host could EVER admit
+    /// their memory charge (queueing them would strand them forever).
+    /// Conservation: scheduled == completed + dropped.
+    pub dropped_infeasible: u64,
 }
 
 impl MetricsHub {

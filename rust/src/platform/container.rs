@@ -89,6 +89,14 @@ pub struct Container {
     /// check scheduled for generation g is stale — and must skip — once
     /// the generation moves on.
     pub reuse_gen: u64,
+    /// Incarnation: bumped only when the slot is RECLAIMED — evicted, or
+    /// re-inited for a sibling function (both destroy/repoint the state a
+    /// freshen run works against) — so it names one hosted-function
+    /// lifetime of this slot (coarser than `reuse_gen`, which also moves
+    /// on every dispatch). A freshen run stamped with incarnation i is
+    /// stale once the slot is reclaimed, and the incarnation guard aborts
+    /// it.
+    pub incarnation: u64,
     /// The pending idle-eviction check, if any, so a re-release can
     /// cancel it instead of piling up one no-op wheel event per release.
     pub idle_timer: Option<EventId>,
@@ -112,6 +120,7 @@ impl Container {
             last_used: now,
             charged_mb: 0,
             reuse_gen: 0,
+            incarnation: 0,
             idle_timer: None,
             cold_starts: 0,
             warm_starts: 0,
@@ -175,6 +184,7 @@ impl Container {
         self.app = None;
         self.charged_mb = 0;
         self.reuse_gen += 1;
+        self.incarnation += 1;
         self.idle_timer = None;
         self.runtime.reset();
     }
@@ -182,11 +192,13 @@ impl Container {
     /// Per-app isolation (§6): swap which sibling function's code the live
     /// runtime hosts. Keeps connections and the freshen cache (shared
     /// runtime scope); clears `fr_state` (its indices are positional per
-    /// function body).
+    /// function body). A reclaim from any in-flight freshen run's point
+    /// of view, so the incarnation moves on.
     pub fn reinit_for(&mut self, function: &str, now: SimTime) {
         debug_assert_eq!(self.state, ContainerState::Warm);
         self.function = Some(function.to_string());
         self.runtime.fr_state = crate::freshen::state::FrState::new();
+        self.incarnation += 1;
         self.last_used = now;
     }
 
@@ -270,6 +282,29 @@ mod tests {
         assert!(c.reuse_gen > g2, "eviction invalidates pending idle checks");
         assert_eq!(c.charged_mb, 0);
         assert!(c.idle_timer.is_none());
+    }
+
+    #[test]
+    fn incarnation_moves_only_on_reclaim() {
+        let mut c = Container::new(0, 0, t(0));
+        assert_eq!(c.incarnation, 0);
+        c.begin_cold_start("f", t(0));
+        c.finish_init(t(1));
+        c.begin_run(t(2));
+        c.finish_run(t(3));
+        assert_eq!(c.incarnation, 0, "dispatch never changes the incarnation");
+        // A per-app re-init repoints the slot at a sibling function —
+        // a reclaim from a freshen run's point of view.
+        c.reinit_for("f2", t(4));
+        assert_eq!(c.incarnation, 1);
+        c.evict();
+        assert_eq!(c.incarnation, 2);
+        // A recycled slot is a NEW incarnation: anything stamped with the
+        // old one (an in-flight freshen run) is recognizably stale.
+        c.begin_cold_start("g", t(5));
+        assert_eq!(c.incarnation, 2);
+        c.evict();
+        assert_eq!(c.incarnation, 3);
     }
 
     #[test]

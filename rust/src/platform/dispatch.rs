@@ -1,0 +1,451 @@
+//! Pluggable dispatch queueing: who waits, and in what order, when the
+//! cluster is memory-full.
+//!
+//! The executor used to hard-code one answer — a per-function
+//! `FxHashMap<FunctionId, VecDeque>` living on the `World`, drained one
+//! invocation per eviction in hash-map iteration order. Under a contended
+//! shared pool that is neither fair (hash order is arbitrary) nor
+//! memory-efficient (one retry per eviction leaves freed memory idle).
+//! [`QueueDiscipline`] extracts the three decision points behind a trait:
+//!
+//! - **enqueue**: a dispatch found no memory anywhere; the invocation
+//!   waits ([`QueueDiscipline::enqueue`]). Retries that fail again
+//!   re-enqueue with their original arrival stamp, so seniority is stable.
+//! - **same-function drain**: a container just released and its function
+//!   has queued work — every discipline hands over the *oldest* queued
+//!   invocation of that function ([`QueueDiscipline::take_for_function`]);
+//!   warm reuse is the platform's cheapest move and jumping the global
+//!   order for it is the historical (and universal) fast path.
+//! - **capacity drain**: memory was freed (an eviction, or a release
+//!   under a pressure-only policy); the discipline picks which waiting
+//!   invocation(s) to retry ([`QueueDiscipline::next_candidate`]) and how
+//!   far to push ([`QueueDiscipline::drains_until_full`],
+//!   [`QueueDiscipline::retries_past_failure`]).
+//!
+//! Three implementations span the fairness/efficiency design space:
+//!
+//! - [`LegacyOneShot`] — the pre-extraction behavior, kept byte-identical:
+//!   per-function queues, ONE retry per drain, candidate = front of the
+//!   first non-empty queue in hash-map iteration order. This is the
+//!   default ([`QueueKind::LegacyOneShot`]), so every historical digest
+//!   holds.
+//! - [`FifoFair`] — one global arrival-order FIFO. A drain retries the
+//!   head, then the next head, until a retry fails to place (the freed
+//!   memory is exhausted). Strict head-of-line: nothing ever overtakes an
+//!   older invocation, which bounds every function's time-in-queue by the
+//!   queue's total service time.
+//! - [`MemoryAware`] — smallest-memory-charge-first: a drain resumes as
+//!   many invocations per freed MB as possible. An aging bound
+//!   ([`MemoryAware::aging_bound`]) promotes the oldest entry once it has
+//!   waited too long, so a large-memory function is guaranteed retry
+//!   priority instead of starving behind an endless stream of small ones;
+//!   a failed aged head falls back to the smallest candidate (one skip)
+//!   so the promotion never livelocks the drain.
+//!
+//! Determinism: every discipline is a deterministic function of the
+//! enqueue/drain call sequence. `LegacyOneShot` iterates an `FxHashMap`
+//! whose key-insertion history is replay-deterministic (same trace, same
+//! order), `FifoFair` orders by the dense arrival-ordered invocation id,
+//! and `MemoryAware` breaks charge ties by that same id — no ambient
+//! hashing, no wall-clock.
+
+use std::collections::VecDeque;
+
+use crate::platform::function::FunctionId;
+use crate::platform::world::InvocationId;
+use crate::util::config::QueueKind;
+use crate::util::fxhash::FxHashMap;
+use crate::util::time::{SimDuration, SimTime};
+
+/// One waiting invocation, as the discipline sees it.
+#[derive(Debug, Clone)]
+pub struct Waiting {
+    pub inv: InvocationId,
+    pub function: FunctionId,
+    /// MB the invocation's cold start would charge (fixed at first
+    /// enqueue; the accounting mode never changes mid-run).
+    pub charge_mb: u32,
+    /// Arrival stamp — re-enqueues after a failed retry carry the
+    /// original one, so seniority survives retries.
+    pub enqueued_at: SimTime,
+}
+
+/// A dispatch queue discipline (see module docs).
+pub trait QueueDiscipline {
+    /// Stable identifier (reports, CLI echo).
+    fn name(&self) -> &'static str;
+
+    /// Add a waiting invocation (fresh arrival or failed retry).
+    fn enqueue(&mut self, w: Waiting);
+
+    /// The oldest waiting invocation of `function`, if any (same-function
+    /// warm drain on container release).
+    fn take_for_function(&mut self, function: &str) -> Option<InvocationId>;
+
+    /// The next invocation to retry now that capacity freed, skipping
+    /// the ones that already failed this drain round. `now` drives aging.
+    fn next_candidate(&mut self, now: SimTime, skip: &[InvocationId]) -> Option<InvocationId>;
+
+    /// Keep retrying further candidates after a successful placement?
+    /// (`false` = the historical one-retry-per-drain behavior.)
+    fn drains_until_full(&self) -> bool;
+
+    /// Keep offering candidates after `failures` retries failed to place
+    /// this drain round? Strict-FIFO head-of-line blocking says no;
+    /// `MemoryAware` allows one skip past a failed aged head.
+    fn retries_past_failure(&self, failures: usize) -> bool;
+
+    /// Waiting invocations.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Build the discipline a [`QueueKind`] names.
+pub fn build(kind: QueueKind) -> Box<dyn QueueDiscipline> {
+    match kind {
+        QueueKind::LegacyOneShot => Box::new(LegacyOneShot::default()),
+        QueueKind::FifoFair => Box::new(FifoFair::default()),
+        QueueKind::MemoryAware => Box::new(MemoryAware::default()),
+    }
+}
+
+// ====================================================================
+// LegacyOneShot
+// ====================================================================
+
+/// The pre-extraction inline behavior, byte-identical: per-function
+/// `VecDeque`s in an `FxHashMap`, retries exactly one invocation per
+/// drain, chosen as the front of the first non-empty queue in hash-map
+/// iteration order. Failed retries push to the BACK of their function's
+/// queue (the historical re-queue), and emptied queues keep their map
+/// entry — both details matter for iteration-order identity.
+#[derive(Default)]
+pub struct LegacyOneShot {
+    queues: FxHashMap<FunctionId, VecDeque<Waiting>>,
+    len: usize,
+}
+
+impl QueueDiscipline for LegacyOneShot {
+    fn name(&self) -> &'static str {
+        "legacy"
+    }
+
+    fn enqueue(&mut self, w: Waiting) {
+        self.queues.entry(w.function.clone()).or_default().push_back(w);
+        self.len += 1;
+    }
+
+    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
+        let w = self.queues.get_mut(function).and_then(|q| q.pop_front())?;
+        self.len -= 1;
+        Some(w.inv)
+    }
+
+    fn next_candidate(&mut self, _now: SimTime, _skip: &[InvocationId]) -> Option<InvocationId> {
+        let key = self
+            .queues
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(k, _)| k.clone())?;
+        let w = self.queues.get_mut(&key).and_then(|q| q.pop_front())?;
+        self.len -= 1;
+        Some(w.inv)
+    }
+
+    fn drains_until_full(&self) -> bool {
+        false
+    }
+
+    fn retries_past_failure(&self, _failures: usize) -> bool {
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// ====================================================================
+// FifoFair
+// ====================================================================
+
+/// One global FIFO in arrival order (invocation ids are dense and
+/// arrival-ordered, so ordering by id IS arrival order). Drains head by
+/// head until a placement fails: strict head-of-line, so the maximum
+/// time-in-queue of ANY function is bounded by the backlog ahead of it.
+/// (The one sanctioned overtake is the same-function warm fast path —
+/// it consumes no memory the head could have used.)
+#[derive(Default)]
+pub struct FifoFair {
+    q: VecDeque<Waiting>,
+}
+
+impl FifoFair {
+    /// Insert preserving arrival (id) order. Fresh arrivals carry the
+    /// largest id yet and land at the back; a failed retry is the
+    /// just-popped oldest and lands back at the front.
+    fn insert_ordered(q: &mut VecDeque<Waiting>, w: Waiting) {
+        let pos = q.partition_point(|e| e.inv < w.inv);
+        q.insert(pos, w);
+    }
+}
+
+impl QueueDiscipline for FifoFair {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn enqueue(&mut self, w: Waiting) {
+        Self::insert_ordered(&mut self.q, w);
+    }
+
+    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
+        let idx = self.q.iter().position(|e| e.function == function)?;
+        self.q.remove(idx).map(|w| w.inv)
+    }
+
+    fn next_candidate(&mut self, _now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
+        let idx = self.q.iter().position(|e| !skip.contains(&e.inv))?;
+        self.q.remove(idx).map(|w| w.inv)
+    }
+
+    fn drains_until_full(&self) -> bool {
+        true
+    }
+
+    fn retries_past_failure(&self, _failures: usize) -> bool {
+        false
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+// ====================================================================
+// MemoryAware
+// ====================================================================
+
+/// Smallest-charge-first drain: each freed chunk of memory resumes as
+/// many waiting invocations as it can hold. Ties break by arrival order
+/// (lowest id). The aging bound keeps it starvation-free: once the
+/// oldest entry has waited `aging_bound`, it is offered FIRST regardless
+/// of size; if that aged retry fails to place, the drain falls back to
+/// the smallest candidate (one skip) so small work keeps flowing while
+/// the aged entry retains its priority for every later drain.
+pub struct MemoryAware {
+    q: VecDeque<Waiting>,
+    /// Queue wait after which the oldest entry outranks smaller charges.
+    pub aging_bound: SimDuration,
+    /// Was the most recent candidate an aged-head promotion? Only then is
+    /// a post-failure retry worth anything: if the SMALLEST charge failed
+    /// to place, every other candidate fails too.
+    last_was_aged: bool,
+}
+
+/// Default promotion threshold: long enough that smallest-first wins the
+/// common case, short enough that a heavy function waits seconds — not a
+/// trace horizon — under sustained small-function pressure.
+pub const MEMAWARE_AGING_BOUND: SimDuration = SimDuration(30_000_000); // 30 s
+
+impl Default for MemoryAware {
+    fn default() -> MemoryAware {
+        MemoryAware::with_aging_bound(MEMAWARE_AGING_BOUND)
+    }
+}
+
+impl MemoryAware {
+    /// An empty queue with a custom promotion threshold (tests and
+    /// ablations; the platform default is [`MEMAWARE_AGING_BOUND`]).
+    pub fn with_aging_bound(aging_bound: SimDuration) -> MemoryAware {
+        MemoryAware {
+            q: VecDeque::new(),
+            aging_bound,
+            last_was_aged: false,
+        }
+    }
+}
+
+impl QueueDiscipline for MemoryAware {
+    fn name(&self) -> &'static str {
+        "memaware"
+    }
+
+    fn enqueue(&mut self, w: Waiting) {
+        // Same arrival-ordered backbone as FifoFair: the front is always
+        // the oldest entry (the aging probe), selection scans for charge.
+        FifoFair::insert_ordered(&mut self.q, w);
+    }
+
+    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
+        let idx = self.q.iter().position(|e| e.function == function)?;
+        self.q.remove(idx).map(|w| w.inv)
+    }
+
+    fn next_candidate(&mut self, now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
+        // Aged head first — but only as the round's FIRST candidate: once
+        // anything failed this round (the aged head included), the drain
+        // falls back to smallest-charge so small work keeps flowing
+        // instead of burning the round on further aged heavyweights.
+        if skip.is_empty() {
+            let front = self.q.front()?;
+            if now.since(front.enqueued_at) >= self.aging_bound {
+                self.last_was_aged = true;
+                return self.q.pop_front().map(|w| w.inv);
+            }
+        }
+        // The smallest charge, ties to the oldest (lowest id — the deque
+        // is id-ordered, so the first minimum IS the oldest).
+        let idx = self
+            .q
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| !skip.contains(&e.inv))
+            .min_by_key(|(_, e)| e.charge_mb)
+            .map(|(i, _)| i)?;
+        self.last_was_aged = false;
+        self.q.remove(idx).map(|w| w.inv)
+    }
+
+    fn drains_until_full(&self) -> bool {
+        true
+    }
+
+    fn retries_past_failure(&self, failures: usize) -> bool {
+        // One skip, and only past a failed AGED head: it must not
+        // head-of-line-block the small work that still fits. If the
+        // smallest candidate was the one that failed, no other candidate
+        // can place either — stop.
+        failures < 2 && self.last_was_aged
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(inv: InvocationId, function: &str, mb: u32, at_s: u64) -> Waiting {
+        Waiting {
+            inv,
+            function: function.to_string(),
+            charge_mb: mb,
+            enqueued_at: SimTime(at_s * 1_000_000),
+        }
+    }
+
+    fn t(s: u64) -> SimTime {
+        SimTime(s * 1_000_000)
+    }
+
+    #[test]
+    fn build_maps_kinds_to_disciplines() {
+        for kind in QueueKind::all() {
+            let d = build(kind);
+            assert_eq!(d.name(), kind.as_str());
+            assert!(d.is_empty());
+        }
+    }
+
+    #[test]
+    fn legacy_is_per_function_fifo_with_one_shot_drain() {
+        let mut d = LegacyOneShot::default();
+        d.enqueue(w(0, "f", 256, 0));
+        d.enqueue(w(1, "g", 256, 1));
+        d.enqueue(w(2, "f", 256, 2));
+        assert_eq!(d.len(), 3);
+        // Same-function drain is per-function FIFO.
+        assert_eq!(d.take_for_function("f"), Some(0));
+        assert_eq!(d.take_for_function("f"), Some(2));
+        assert_eq!(d.take_for_function("f"), None);
+        assert_eq!(d.len(), 1);
+        // One-shot drain: a single candidate per round, never more.
+        assert!(!d.drains_until_full());
+        assert!(!d.retries_past_failure(0));
+        assert_eq!(d.next_candidate(t(10), &[]), Some(1));
+        assert_eq!(d.next_candidate(t(10), &[]), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn legacy_candidate_follows_hash_map_iteration_order() {
+        // The candidate must be the front of the FIRST non-empty queue in
+        // FxHashMap iteration order — whatever that order is, it must
+        // match an identically-built map (the byte-identity property the
+        // executor relies on).
+        let mut d = LegacyOneShot::default();
+        let mut reference: FxHashMap<FunctionId, VecDeque<InvocationId>> = FxHashMap::default();
+        for (i, f) in ["a", "b", "c", "d", "e"].iter().enumerate() {
+            d.enqueue(w(i, f, 256, 0));
+            reference.entry(f.to_string()).or_default().push_back(i);
+        }
+        let expected = reference
+            .iter()
+            .find(|(_, q)| !q.is_empty())
+            .map(|(_, q)| q[0])
+            .unwrap();
+        assert_eq!(d.next_candidate(t(0), &[]), Some(expected));
+    }
+
+    #[test]
+    fn fifo_orders_globally_by_arrival_and_reinserts_at_seniority() {
+        let mut d = FifoFair::default();
+        d.enqueue(w(3, "a", 256, 3));
+        d.enqueue(w(5, "b", 512, 5));
+        assert_eq!(d.next_candidate(t(9), &[]), Some(3));
+        // Failed retry: re-enqueue with the original stamp → back to the
+        // head, ahead of the younger entry.
+        d.enqueue(w(3, "a", 256, 3));
+        assert_eq!(d.next_candidate(t(9), &[]), Some(3));
+        d.enqueue(w(3, "a", 256, 3));
+        // A failed head is skipped for the rest of the drain round.
+        assert_eq!(d.next_candidate(t(9), &[3]), Some(5), "skip honors the failed head");
+        d.enqueue(w(7, "a", 256, 7));
+        d.enqueue(w(8, "a", 128, 8));
+        // Same-function drain hands over the oldest of that function.
+        assert_eq!(d.take_for_function("a"), Some(3));
+        assert_eq!(d.take_for_function("a"), Some(7));
+        assert_eq!(d.take_for_function("b"), None, "5 was drained above");
+        assert_eq!(d.len(), 1);
+        assert!(d.drains_until_full());
+        assert!(!d.retries_past_failure(1), "strict head-of-line");
+    }
+
+    #[test]
+    fn memaware_picks_smallest_charge_until_the_aging_bound_promotes() {
+        let mut d = MemoryAware::default();
+        d.enqueue(w(0, "big", 2048, 0));
+        d.enqueue(w(1, "small", 128, 1));
+        d.enqueue(w(2, "mid", 512, 2));
+        // Under the bound: smallest charge wins.
+        assert_eq!(d.next_candidate(t(5), &[]), Some(1));
+        d.enqueue(w(1, "small", 128, 1));
+        // Ties break to the oldest entry.
+        d.enqueue(w(3, "small2", 128, 3));
+        assert_eq!(d.next_candidate(t(5), &[]), Some(1));
+        // A failed smallest pick ends the round: nothing larger could
+        // place where it failed.
+        assert!(!d.retries_past_failure(1), "failed smallest stops the drain");
+        // Past the bound, the oldest entry outranks everything. (At
+        // t=31 s entry 0 has waited 31 s ≥ the 30 s bound; entry 2 only
+        // 29 s.)
+        assert_eq!(d.next_candidate(t(31), &[]), Some(0), "aged head promoted");
+        // A failed AGED head is worth one skip — the smallest flows again.
+        assert!(d.retries_past_failure(1), "one skip past a failed aged head");
+        assert!(!d.retries_past_failure(2), "then stop");
+        d.enqueue(w(0, "big", 2048, 0));
+        assert_eq!(d.next_candidate(t(31), &[0]), Some(3));
+        assert!(
+            !d.retries_past_failure(1),
+            "the fallback pick was the smallest: a failure is terminal"
+        );
+        assert_eq!(d.take_for_function("mid"), Some(2));
+        assert_eq!(d.len(), 1);
+    }
+}

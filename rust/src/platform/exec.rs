@@ -22,6 +22,7 @@ use crate::metrics::{EvictionCause, InvocationRecord, StartKind};
 use crate::netsim::tcp::{ConnState, TransferDirection};
 use crate::netsim::warm::{warm_cwnd, WarmPolicy};
 use crate::platform::container::{ContainerId, ContainerState, RuntimeEnv};
+use crate::platform::dispatch::Waiting;
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::Op;
 use crate::platform::keepalive::{IdleCtx, IdleVerdict};
@@ -71,26 +72,30 @@ pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> Invoc
         start_kind: StartKind::Warm,
         freshen_hits: 0,
         freshen_misses: 0,
+        queued: false,
         done: false,
     });
     dispatch(sim, world, id);
     id
 }
 
-/// Route the invocation to a container (or queue it).
-fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
+/// Route the invocation to a container (or queue it). Returns whether it
+/// was placed (`false` = handed to the dispatch queue), so capacity
+/// drains know when the freed memory is exhausted.
+fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool {
     let now = sim.now();
     let function = world.invocations[inv].function.clone();
 
     if let Some(cid) = world.find_warm(&function) {
         // Warm start: reserve immediately, body begins after dispatch cost.
+        note_queue_wait(world, inv, now);
         cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
         sim.schedule(delay, move |sim, w| {
             begin_body(sim, w, inv, cid, StartKind::Warm)
         });
-        return;
+        return true;
     }
 
     // Per-app isolation (§6): a warm sibling container can be re-inited
@@ -105,6 +110,7 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             .max_by_key(|c| c.last_used)
             .map(|c| c.id);
         if let Some(cid) = sibling {
+            note_queue_wait(world, inv, now);
             cancel_idle_timer(sim, world, cid);
             world.containers[cid].reinit_for(&function, now);
             let mb = world.charge_for_function(&function);
@@ -115,7 +121,7 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             sim.schedule(delay, move |sim, w| {
                 begin_body(sim, w, inv, cid, StartKind::Warm)
             });
-            return;
+            return true;
         }
     }
 
@@ -127,6 +133,7 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
         .or_else(|| evict_for_pressure(sim, world, mb, now));
 
     if let Some(cid) = slot {
+        note_queue_wait(world, inv, now);
         let app = app_of(world, &function);
         world.containers[cid].begin_cold_start_for_app(&function, &app, now);
         let delay = world.config.cold_start;
@@ -135,11 +142,49 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             w.containers[cid].begin_run(sim.now());
             begin_body(sim, w, inv, cid, StartKind::Cold)
         });
-        return;
+        return true;
     }
 
-    // Cluster full: queue per function; drained on container release.
-    world.queues.entry(function).or_default().push_back(inv);
+    // A charge NO host could ever admit must not queue: it would strand
+    // forever (and under strict-FIFO drain head-of-line-block everything
+    // behind it), so it is dropped explicitly and counted. The legacy
+    // path let such requests queue silently; the drop only fires where
+    // that path would have hung, so feasible workloads — including every
+    // pinned digest — are byte-identical.
+    if !world.invokers.iter().any(|i| i.feasible(mb as u64)) {
+        world.invocations[inv].done = true;
+        world.metrics.dropped_infeasible += 1;
+        return true; // terminally handled: nothing to retry later
+    }
+
+    // Cluster full: hand the invocation to the queue discipline. Failed
+    // retries land here too, carrying their original arrival stamp so
+    // seniority survives. Drained on container release / eviction.
+    if !world.invocations[inv].queued {
+        world.invocations[inv].queued = true;
+        world.metrics.queued_total += 1;
+    }
+    let enqueued_at = world.invocations[inv].enqueued_at;
+    world.dispatch.enqueue(Waiting {
+        inv,
+        function,
+        charge_mb: mb,
+        enqueued_at,
+    });
+    let depth = world.dispatch.len() as u64;
+    world.metrics.queue_peak_depth = world.metrics.queue_peak_depth.max(depth);
+    false
+}
+
+/// Record the queue wait an invocation paid, at placement time. Fresh
+/// arrivals dispatch in their arrival event (zero wait); only retries of
+/// queued work observe `now` past the arrival stamp.
+fn note_queue_wait(world: &mut World, inv: InvocationId, now: SimTime) {
+    let waited = now.since(world.invocations[inv].enqueued_at).micros();
+    if world.invocations[inv].queued && waited > 0 {
+        world.metrics.queue_wait_us = world.metrics.queue_wait_us.saturating_add(waited);
+        world.metrics.queue_wait_max_us = world.metrics.queue_wait_max_us.max(waited);
+    }
 }
 
 /// Memory pressure: ask the keep-alive policy for warm victims until the
@@ -153,11 +198,12 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
 /// LRU choice. Returns the acquired slot, or `None` when the policy
 /// forbids pressure eviction or no host can be made to fit.
 ///
-/// NOTE: an in-flight freshen run on a reclaimed container keeps
-/// stepping against the recycled slot (legacy semantics, kept for the
-/// byte-identical default-path guarantee); prefetch staleness is bounded
-/// by the version checks in `fr_fetch_decision`. A container-incarnation
-/// guard for freshen runs is an open ROADMAP item.
+/// NOTE: by default an in-flight freshen run on a reclaimed container
+/// keeps stepping against the recycled slot (legacy semantics, kept for
+/// the byte-identical default-path guarantee); prefetch staleness is
+/// bounded by the version checks in `fr_fetch_decision`. Switching on
+/// `Config::freshen_incarnation_guard` aborts such runs instead (see
+/// [`abort_if_stale_freshen`]).
 fn evict_for_pressure(
     sim: &mut PlatformSim,
     world: &mut World,
@@ -188,10 +234,7 @@ fn evict_for_pressure(
         let host_ok: Vec<bool> = world
             .invokers
             .iter()
-            .map(|inv| {
-                inv.capacity_mb >= mb as u64
-                    && inv.free_mb() + reclaimable[inv.id] >= mb as u64
-            })
+            .map(|inv| inv.feasible(mb as u64) && inv.free_mb() + reclaimable[inv.id] >= mb as u64)
             .collect();
         let masked: Vec<bool> = match target {
             Some(t) if host_ok[t] => host_ok
@@ -594,7 +637,9 @@ fn finish_resource(
     }
 }
 
-/// Invocation complete: metrics, billing, container release, queue drain.
+/// Invocation complete: metrics, billing, container release, queue drain
+/// (the same-function fast path here; cross-function drains go through
+/// [`redispatch_pending`] and the configured queue discipline).
 fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
     let now = sim.now();
     let (function, cid) = {
@@ -632,12 +677,10 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
         }
     }
 
-    // Drain this function's queue onto the now-warm container.
-    if let Some(next) = world
-        .queues
-        .get_mut(&function)
-        .and_then(|q| q.pop_front())
-    {
+    // Drain this function's queue onto the now-warm container (every
+    // discipline hands over its oldest queued invocation of `function`).
+    if let Some(next) = world.dispatch.take_for_function(&function) {
+        note_queue_wait(world, next, now);
         cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
@@ -741,18 +784,30 @@ fn idle_check_fired(sim: &mut PlatformSim, world: &mut World, cid: ContainerId, 
     }
 }
 
-/// Pop one queued invocation (any function) and retry its dispatch; used
-/// when capacity frees up. A failed retry simply re-queues, so this never
-/// spins.
+/// Retry queued invocations now that capacity freed (an eviction, or a
+/// release under a pressure-only policy). The discipline drives the
+/// drain: `LegacyOneShot` retries exactly one candidate (the historical
+/// behavior), `FifoFair`/`MemoryAware` keep going until a retry fails to
+/// place — the freed memory is exhausted — or the queue empties. A failed
+/// retry re-queues with its original seniority and is skipped for the
+/// rest of the round, so the loop never spins: every iteration either
+/// permanently removes a queue entry or grows the skip list, and the
+/// discipline caps how many failures it tolerates.
 fn redispatch_pending(sim: &mut PlatformSim, world: &mut World) {
-    let key = world
-        .queues
-        .iter()
-        .find(|(_, q)| !q.is_empty())
-        .map(|(k, _)| k.clone());
-    if let Some(k) = key {
-        if let Some(inv) = world.queues.get_mut(&k).and_then(|q| q.pop_front()) {
-            dispatch(sim, world, inv);
+    let mut failed: Vec<InvocationId> = Vec::new();
+    loop {
+        let Some(inv) = world.dispatch.next_candidate(sim.now(), &failed) else {
+            return;
+        };
+        let placed = dispatch(sim, world, inv);
+        if !world.dispatch.drains_until_full() {
+            return;
+        }
+        if !placed {
+            failed.push(inv);
+            if !world.dispatch.retries_past_failure(failed.len()) {
+                return;
+            }
         }
     }
 }
@@ -884,6 +939,7 @@ fn launch_freshen_on(
         id,
         function: function.to_string(),
         container: cid,
+        incarnation: world.containers[cid].incarnation,
         action_idx: 0,
         started_at: now,
         prediction_id,
@@ -894,9 +950,33 @@ fn launch_freshen_on(
     Some(id)
 }
 
+/// Incarnation guard (`Config::freshen_incarnation_guard`): a freshen
+/// run whose container was reclaimed since launch — the slot's
+/// incarnation moved on — aborts instead of stepping against recycled
+/// state. The aborted run bills nothing and completes nothing; the
+/// prediction that admitted it still resolves on its own schedule.
+/// Returns whether the run was aborted. With the guard off (the
+/// default), stale runs keep the legacy keep-stepping semantics and
+/// every historical digest holds.
+fn abort_if_stale_freshen(world: &mut World, run: usize) -> bool {
+    if !world.config.freshen_incarnation_guard {
+        return false;
+    }
+    let ctx = &world.freshen_runs[run];
+    if ctx.done || world.containers[ctx.container].incarnation == ctx.incarnation {
+        return false;
+    }
+    world.freshen_runs[run].done = true;
+    world.metrics.stale_freshen_aborts += 1;
+    true
+}
+
 /// Execute the freshen run's current action (Algorithm 2's body, one
 /// action per event).
 fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
+    if abort_if_stale_freshen(world, run) {
+        return;
+    }
     let now = sim.now();
     let (function, cid, action_idx) = {
         let ctx = &world.freshen_runs[run];
@@ -960,6 +1040,9 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
                 now,
             );
             sim.schedule(d, move |sim, w| {
+                if abort_if_stale_freshen(w, run) {
+                    return;
+                }
                 finish_resource(sim, w, cid, r, FrResult::Warmed, Completer::Freshen);
                 w.freshen_runs[run].action_idx += 1;
                 step_freshen(sim, w, run)
@@ -988,6 +1071,9 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
                     bytes: cached.bytes,
                 };
                 sim.schedule(LOCAL_ACCESS, move |sim, w| {
+                    if abort_if_stale_freshen(w, run) {
+                        return;
+                    }
                     finish_resource(sim, w, cid, r, result.clone(), Completer::Freshen);
                     w.freshen_runs[run].action_idx += 1;
                     step_freshen(sim, w, run)
@@ -1008,6 +1094,9 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
                 world.ledger.charge_network(&app, *bytes);
             }
             sim.schedule(d, move |sim, w| {
+                if abort_if_stale_freshen(w, run) {
+                    return;
+                }
                 if let FrResult::Data { version, bytes, .. } = &result {
                     w.containers[cid].runtime.cache.put(
                         &endpoint, &object_id, *version, *bytes, ttl, sim.now(),

@@ -50,6 +50,13 @@ impl Invoker {
         self.free_mb() >= mb
     }
 
+    /// Could this host EVER admit `mb`, were every container evicted?
+    /// The pressure path refuses requests no host can satisfy (they
+    /// queue instead of cannibalising warm state they can't use).
+    pub fn feasible(&self, mb: u64) -> bool {
+        self.capacity_mb >= mb
+    }
+
     /// Charge `mb` against the host (a container cold-starting here).
     /// May transiently exceed capacity only through re-init recharges;
     /// plain admission always checks [`Invoker::has_room`] first.
@@ -88,5 +95,9 @@ mod tests {
         inv.release(10_000);
         assert_eq!(inv.used_mb, 0);
         assert_eq!(inv.free_mb(), 512);
+        // Feasibility is about capacity, not current occupancy.
+        inv.charge(512);
+        assert!(inv.feasible(512));
+        assert!(!inv.feasible(513));
     }
 }

@@ -32,6 +32,10 @@
 //! Policies are stateless (per-function state lives in the predictor),
 //! so the world holds one `Rc<dyn KeepAlivePolicy>` shared by every
 //! decision site.
+//!
+//! A policy only decides WHO dies; what happens to the memory it frees —
+//! which queued invocation(s) get retried, and in what order — is the
+//! dispatch subsystem's job ([`crate::platform::dispatch`]).
 
 use std::rc::Rc;
 

@@ -15,11 +15,14 @@
 //! - [`container`] — container lifecycle + the in-container runtime env.
 //! - [`invoker`] — per-host container pools.
 //! - [`world`] — the composed simulation world.
+//! - [`dispatch`] — pluggable queue disciplines for invocations waiting
+//!   on cluster memory (legacy one-shot / FIFO-fair / memory-aware).
 //! - [`exec`] — the event-driven op executor (function *and* freshen),
 //!   including the controller's dispatch/queue/eviction policies.
 
 pub mod container;
 pub mod datastore;
+pub mod dispatch;
 pub mod endpoint;
 pub mod exec;
 pub mod function;

@@ -6,7 +6,7 @@
 //! need (`&world.endpoints`, `&mut world.rng`, `&mut world.containers[c]`)
 //! so network, container and predictor state can be touched in one event.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::fxhash::FxHashMap;
@@ -15,6 +15,7 @@ use crate::billing::Ledger;
 use crate::freshen::policy::FreshenGate;
 use crate::metrics::{EvictionCause, MetricsHub, StartKind};
 use crate::platform::container::{Container, ContainerId, ContainerState};
+use crate::platform::dispatch::{self, QueueDiscipline};
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::FunctionId;
 use crate::platform::invoker::Invoker;
@@ -46,6 +47,9 @@ pub struct InvocationCtx {
     pub start_kind: StartKind,
     pub freshen_hits: u32,
     pub freshen_misses: u32,
+    /// Ever held by the dispatch queue (drives the distinct-queued
+    /// counter; re-enqueues after failed retries don't recount).
+    pub queued: bool,
     pub done: bool,
 }
 
@@ -55,6 +59,11 @@ pub struct FreshenRunCtx {
     pub id: usize,
     pub function: FunctionId,
     pub container: ContainerId,
+    /// The container incarnation this run launched against. When
+    /// `Config::freshen_incarnation_guard` is on, a step that finds the
+    /// container reclaimed (incarnation moved on) aborts instead of
+    /// touching the recycled slot.
+    pub incarnation: u64,
     pub action_idx: usize,
     pub started_at: SimTime,
     /// Prediction that admitted this run (billing resolution).
@@ -90,8 +99,9 @@ pub struct World {
     /// inspection in tests, metrics copy what reports need).
     pub invocations: Vec<InvocationCtx>,
     pub freshen_runs: Vec<FreshenRunCtx>,
-    /// Per-function queues when no container is available.
-    pub queues: FxHashMap<FunctionId, VecDeque<InvocationId>>,
+    /// Invocations waiting for cluster memory, behind the configured
+    /// queue discipline (built from `config.queue`; swappable for tests).
+    pub dispatch: Box<dyn QueueDiscipline>,
     /// `FrWait` parking: one wait list per (container, resource index).
     pub fr_waiters: FxHashMap<(ContainerId, usize), WaitList<World>>,
     /// Freshen charges awaiting hit/miss resolution.
@@ -129,7 +139,9 @@ impl World {
             .map(|i| Invoker::new(i, capacity_mb))
             .collect();
         let keep_alive = keepalive::build(config.keep_alive);
+        let dispatch = dispatch::build(config.queue);
         World {
+            dispatch,
             rng,
             gate,
             invokers,
@@ -147,7 +159,6 @@ impl World {
             scorer: LearnedScorer::default(),
             invocations: Vec::new(),
             freshen_runs: Vec::new(),
-            queues: FxHashMap::default(),
             fr_waiters: FxHashMap::default(),
             pending_charges: Vec::new(),
             model_latencies: HashMap::new(),

@@ -31,6 +31,15 @@ pub struct Config {
     pub memory_accounting: MemoryAccounting,
     /// Keep-alive / eviction policy for idle warm containers.
     pub keep_alive: KeepAliveKind,
+    /// Queue discipline for invocations waiting on cluster memory
+    /// (the implementations live in [`crate::platform::dispatch`]).
+    pub queue: QueueKind,
+    /// Abort in-flight freshen runs whose container was reclaimed
+    /// (pressure-evicted and possibly recycled) since the run launched.
+    /// Off by default: the legacy semantics let a stale run keep stepping
+    /// against the recycled slot, and the default replay digests pin that
+    /// behavior byte-for-byte.
+    pub freshen_incarnation_guard: bool,
     /// Cold-start cost: container provision + runtime `init` hook.
     pub cold_start: SimDuration,
     /// Warm-start dispatch overhead (`run` hook on a live runtime).
@@ -145,6 +154,53 @@ impl KeepAliveKind {
     }
 }
 
+/// Which queue discipline holds invocations waiting for cluster memory
+/// (the implementations live in [`crate::platform::dispatch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// Per-function queues; a freed slot retries ONE queued invocation in
+    /// hash-map iteration order — the historical inline behavior, kept
+    /// byte-identical.
+    #[default]
+    LegacyOneShot,
+    /// One global arrival-order FIFO; freed memory drains the queue head
+    /// by head until a retry fails to place (strict head-of-line: no
+    /// queue DRAIN overtakes an older invocation — the warm-container
+    /// fast paths still place directly, as in every discipline).
+    FifoFair,
+    /// Smallest-memory-charge-first drain (maximizes invocations resumed
+    /// per freed MB), with an aging bound that promotes the oldest entry
+    /// so large functions cannot starve.
+    MemoryAware,
+}
+
+impl QueueKind {
+    pub fn all() -> [QueueKind; 3] {
+        [
+            QueueKind::LegacyOneShot,
+            QueueKind::FifoFair,
+            QueueKind::MemoryAware,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<QueueKind> {
+        match s {
+            "legacy" | "legacy_one_shot" => Some(QueueKind::LegacyOneShot),
+            "fifo" | "fifo_fair" => Some(QueueKind::FifoFair),
+            "memaware" | "memory_aware" => Some(QueueKind::MemoryAware),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QueueKind::LegacyOneShot => "legacy",
+            QueueKind::FifoFair => "fifo",
+            QueueKind::MemoryAware => "memaware",
+        }
+    }
+}
+
 /// Container isolation scope.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IsolationScope {
@@ -233,6 +289,8 @@ impl Default for Config {
             invoker_memory_mb: None,
             memory_accounting: MemoryAccounting::UniformSlot,
             keep_alive: KeepAliveKind::FixedTtl,
+            queue: QueueKind::LegacyOneShot,
+            freshen_incarnation_guard: false,
             // OpenWhisk docker cold starts are hundreds of ms; the paper's
             // related work (SOCK) reports ~100ms-1s. We default to 500ms.
             cold_start: SimDuration::from_millis(500),
@@ -270,6 +328,13 @@ impl Config {
                 c.keep_alive = parsed;
             }
         }
+        if let Some(q) = j.get("queue").and_then(Json::as_str) {
+            if let Some(parsed) = QueueKind::parse(q) {
+                c.queue = parsed;
+            }
+        }
+        c.freshen_incarnation_guard =
+            j.bool_or("freshen_incarnation_guard", c.freshen_incarnation_guard);
         c.cold_start = SimDuration::from_millis_f64(
             j.f64_or("cold_start_ms", c.cold_start.as_millis_f64()),
         );
@@ -317,6 +382,11 @@ impl Config {
                 Json::str(self.memory_accounting.as_str()),
             ),
             ("keep_alive", Json::str(self.keep_alive.as_str())),
+            ("queue", Json::str(self.queue.as_str())),
+            (
+                "freshen_incarnation_guard",
+                Json::Bool(self.freshen_incarnation_guard),
+            ),
             ("cold_start_ms", Json::num(self.cold_start.as_millis_f64())),
             ("warm_start_ms", Json::num(self.warm_start.as_millis_f64())),
             (
@@ -412,6 +482,29 @@ mod tests {
         for k in KeepAliveKind::all() {
             assert_eq!(KeepAliveKind::parse(k.as_str()), Some(k));
         }
+    }
+
+    #[test]
+    fn queue_and_guard_knobs_roundtrip() {
+        let d = Config::default();
+        assert_eq!(d.queue, QueueKind::LegacyOneShot, "legacy is the default");
+        assert!(!d.freshen_incarnation_guard, "guard defaults off");
+        let mut c = Config::default();
+        c.queue = QueueKind::MemoryAware;
+        c.freshen_incarnation_guard = true;
+        let c2 = Config::from_json(&c.to_json());
+        assert_eq!(c2.queue, QueueKind::MemoryAware);
+        assert!(c2.freshen_incarnation_guard);
+        for k in QueueKind::all() {
+            assert_eq!(QueueKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(QueueKind::parse("fifo_fair"), Some(QueueKind::FifoFair));
+        assert_eq!(QueueKind::parse("memory_aware"), Some(QueueKind::MemoryAware));
+        assert_eq!(QueueKind::parse("bogus"), None);
+        // Defaults parse back from JSON unchanged.
+        let back = Config::from_json(&Config::default().to_json());
+        assert_eq!(back.queue, QueueKind::LegacyOneShot);
+        assert!(!back.freshen_incarnation_guard);
     }
 
     #[test]

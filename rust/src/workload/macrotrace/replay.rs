@@ -195,6 +195,21 @@ pub struct MacroMetrics {
     pub evictions_pressure: u64,
     /// Pressure evictions that destroyed live warm state.
     pub warm_kills: u64,
+    /// Distinct invocations that waited in the dispatch queue.
+    pub queued_total: u64,
+    /// Deepest any constituent world's dispatch queue got (merged by
+    /// `max`, like the resident-memory peak).
+    pub queue_peak_depth: u64,
+    /// Total time invocations spent queued for cluster memory, µs.
+    pub queue_wait_us: u64,
+    /// Longest single queue wait over any constituent world, µs
+    /// (merged by `max`).
+    pub queue_wait_max_us: u64,
+    /// Freshen runs aborted by the container-incarnation guard.
+    pub stale_freshen_aborts: u64,
+    /// Invocations dropped because no host could ever admit their charge
+    /// (conservation: arrivals == completions + drops).
+    pub dropped_infeasible: u64,
     /// Peak resident container memory over any constituent world, MB
     /// (merged by `max`: the largest single-world peak).
     pub peak_resident_mb: u64,
@@ -226,6 +241,12 @@ impl MacroMetrics {
         self.evictions_idle += other.evictions_idle;
         self.evictions_pressure += other.evictions_pressure;
         self.warm_kills += other.warm_kills;
+        self.queued_total += other.queued_total;
+        self.queue_peak_depth = self.queue_peak_depth.max(other.queue_peak_depth);
+        self.queue_wait_us = self.queue_wait_us.saturating_add(other.queue_wait_us);
+        self.queue_wait_max_us = self.queue_wait_max_us.max(other.queue_wait_max_us);
+        self.stale_freshen_aborts += other.stale_freshen_aborts;
+        self.dropped_infeasible += other.dropped_infeasible;
         self.peak_resident_mb = self.peak_resident_mb.max(other.peak_resident_mb);
         self.resident_mb_us = self.resident_mb_us.saturating_add(other.resident_mb_us);
         self.latency.merge(&other.latency);
@@ -272,6 +293,16 @@ impl MacroMetrics {
         self.resident_mb_us as f64 / 1e6
     }
 
+    /// Total queue wait in seconds (derived; stored as integer µs).
+    pub fn queue_wait_s(&self) -> f64 {
+        self.queue_wait_us as f64 / 1e6
+    }
+
+    /// Longest single queue wait in ms.
+    pub fn queue_wait_max_ms(&self) -> f64 {
+        self.queue_wait_max_us as f64 / 1e3
+    }
+
     pub fn p50_ms(&self) -> f64 {
         self.latency.quantile_ms(50.0)
     }
@@ -283,6 +314,24 @@ impl MacroMetrics {
     /// Canonical content fingerprint — the string the shard-determinism
     /// regression tests compare byte-for-byte.
     pub fn digest(&self) -> String {
+        format!(
+            "{} q={}/{} qw={}/{} sa={} dr={}",
+            self.digest_pr4(),
+            self.queued_total,
+            self.queue_peak_depth,
+            self.queue_wait_us,
+            self.queue_wait_max_us,
+            self.stale_freshen_aborts,
+            self.dropped_infeasible,
+        )
+    }
+
+    /// The pre-dispatch-subsystem digest fields, in their historical
+    /// format: what the `LegacyOneShot`-equals-PR-4 golden test pins (the
+    /// queue/stale-abort counters did not exist before the extraction, so
+    /// they are excluded here; under legacy defaults they are provably
+    /// zero-or-derived and the underlying counters are untouched).
+    pub fn digest_pr4(&self) -> String {
         format!(
             "{} evict={}/{}/{} wk={} peak={} res={}",
             self.digest_legacy(),
@@ -535,9 +584,17 @@ struct DaySnap {
     evictions_idle: u64,
     evictions_pressure: u64,
     warm_kills: u64,
+    queued_total: u64,
+    queue_wait_us: u64,
+    stale_freshen_aborts: u64,
+    dropped_infeasible: u64,
     /// Peak within the slice ending at this snapshot (the world's peak
     /// tracker is reset to the current residency after each capture).
     peak_resident_mb: u64,
+    /// Queue-depth peak and wait maximum within the slice (the hub's
+    /// trackers are reset after each capture, like the residency peak).
+    queue_peak_depth: u64,
+    queue_wait_max_us: u64,
     resident_mb_us: u64,
     network_bytes: f64,
     network_bytes_saved: f64,
@@ -564,14 +621,23 @@ impl DaySnap {
             evictions_idle: w.metrics.evictions_idle,
             evictions_pressure: w.metrics.evictions_pressure,
             warm_kills: w.metrics.warm_kills,
+            queued_total: w.metrics.queued_total,
+            queue_wait_us: w.metrics.queue_wait_us,
+            stale_freshen_aborts: w.metrics.stale_freshen_aborts,
+            dropped_infeasible: w.metrics.dropped_infeasible,
             peak_resident_mb: w.metrics.peak_resident_mb,
+            queue_peak_depth: w.metrics.queue_peak_depth,
+            queue_wait_max_us: w.metrics.queue_wait_max_us,
             resident_mb_us: w.metrics.resident_mb_us,
             network_bytes: net,
             network_bytes_saved: saved,
             executed: sim.executed(),
         };
-        // Per-day peaks: the next slice starts from the current residency.
+        // Per-day peaks: the next slice starts from the current residency
+        // (and queue depth); the wait maximum restarts from zero.
         w.metrics.peak_resident_mb = w.resident_mb;
+        w.metrics.queue_peak_depth = w.dispatch.len() as u64;
+        w.metrics.queue_wait_max_us = 0;
         snap
     }
 }
@@ -669,6 +735,12 @@ pub fn replay_pool_days(
         m.evictions_idle = cur.evictions_idle - prev.evictions_idle;
         m.evictions_pressure = cur.evictions_pressure - prev.evictions_pressure;
         m.warm_kills = cur.warm_kills - prev.warm_kills;
+        m.queued_total = cur.queued_total - prev.queued_total;
+        m.queue_wait_us = cur.queue_wait_us - prev.queue_wait_us;
+        m.stale_freshen_aborts = cur.stale_freshen_aborts - prev.stale_freshen_aborts;
+        m.dropped_infeasible = cur.dropped_infeasible - prev.dropped_infeasible;
+        m.queue_peak_depth = cur.queue_peak_depth;
+        m.queue_wait_max_us = cur.queue_wait_max_us;
         m.peak_resident_mb = cur.peak_resident_mb;
         m.resident_mb_us = cur.resident_mb_us - prev.resident_mb_us;
         m.network_bytes = (cur.network_bytes - prev.network_bytes).max(0.0).round() as u64;

@@ -1,0 +1,451 @@
+//! Dispatch-subsystem integration tests.
+//!
+//! Four jobs:
+//! 1. pin the `LegacyOneShot` default to the pre-extraction behavior
+//!    (the PR 4 shared-pool digest): a default-config `azure-macro` run
+//!    must be byte-identical to an explicitly legacy-configured one, and
+//!    the historical digest fields must survive unchanged inside the
+//!    extended digest;
+//! 2. prove `FifoFair`/`MemoryAware` actually change outcomes under
+//!    contention (not silently aliased to legacy) — deterministically at
+//!    the platform level, and as digests at the benchmark level;
+//! 3. starvation/fairness: `FifoFair` strict head-of-line bounds a large
+//!    function's time-in-queue under sustained small-function pressure,
+//!    and `MemoryAware`'s aging bound rescues it where pure
+//!    smallest-first would park it until the pressure ends;
+//! 4. the freshen container-incarnation guard: a run in flight across a
+//!    pressure eviction aborts (counted) with the switch on and keeps
+//!    the legacy complete-against-the-recycled-slot semantics with it
+//!    off.
+
+use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
+use freshen_rs::experiments::SweepRunner;
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::dispatch::{self, MemoryAware, Waiting};
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::{invoke, start_freshen};
+use freshen_rs::platform::world::{PlatformSim, World};
+use freshen_rs::simcore::Sim;
+use freshen_rs::util::config::{Config, KeepAliveKind, QueueKind};
+use freshen_rs::util::time::{SimDuration, SimTime};
+use freshen_rs::workload::macrotrace::replay::PoolMode;
+use freshen_rs::workload::macrotrace::shard::TraceSource;
+use freshen_rs::workload::macrotrace::synth::SynthTraceCfg;
+
+fn small_world(cfg: Config) -> World {
+    let mut w = World::new(cfg);
+    let mut ep = Endpoint::new("store", Site::Edge);
+    ep.store.put("ID1", 1e4, SimTime::ZERO);
+    w.add_endpoint(ep);
+    w
+}
+
+fn run_sim(w: &mut World, f: impl FnOnce(&mut PlatformSim, &mut World)) -> PlatformSim {
+    let mut sim: PlatformSim = Sim::new();
+    sim.max_events = 20_000_000;
+    f(&mut sim, w);
+    sim.run(w);
+    sim
+}
+
+fn lambda_mb(id: &str, mb: u32, dur: SimDuration) -> freshen_rs::platform::function::FunctionSpec {
+    let mut spec =
+        freshen_rs::platform::function::FunctionSpec::paper_lambda(id, "app", "store", dur);
+    spec.memory_mb = mb;
+    spec
+}
+
+// ====================================================================
+// Divergence probes (platform level, fully deterministic)
+// ====================================================================
+
+/// Run five one-slot-contended functions queued behind a long holder and
+/// return the order their invocations completed in.
+fn contended_completion_order(queue: QueueKind, arrival_order: &[&str]) -> Vec<String> {
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.invokers = 1;
+    cfg.containers_per_invoker = 1;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    cfg.queue = queue;
+    cfg.freshen.enabled = false;
+    let mut w = small_world(cfg);
+    w.deploy(lambda_mb("hold", 256, SimDuration::from_secs(5)));
+    for f in arrival_order {
+        w.deploy(lambda_mb(f, 256, SimDuration::from_millis(20)));
+    }
+    let arrivals: Vec<String> = arrival_order.iter().map(|s| s.to_string()).collect();
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "hold");
+        for (i, f) in arrivals.iter().enumerate() {
+            let f = f.clone();
+            sim.schedule(
+                SimDuration::from_millis(1_000 + 100 * i as u64),
+                move |sim, w| {
+                    invoke(sim, w, &f);
+                },
+            );
+        }
+    });
+    assert!(w.dispatch.is_empty(), "no stranded entries");
+    w.metrics
+        .records()
+        .iter()
+        .filter(|r| r.function != "hold")
+        .map(|r| r.function.clone())
+        .collect()
+}
+
+#[test]
+fn fifo_completes_in_arrival_order_and_legacy_in_hash_map_order() {
+    // Choose the arrival order to be the REVERSE of the hash-map drain
+    // order, computed with the very discipline the executor uses — so
+    // legacy and fifo are guaranteed to diverge without pinning any
+    // particular hash layout.
+    let names = ["qa", "qb", "qc", "qd", "qe"];
+    let pop_order = |insertion: &[String]| -> Vec<String> {
+        let mut d = dispatch::build(QueueKind::LegacyOneShot);
+        for (i, f) in insertion.iter().enumerate() {
+            d.enqueue(Waiting {
+                inv: i,
+                function: f.clone(),
+                charge_mb: 256,
+                enqueued_at: SimTime::ZERO,
+            });
+        }
+        let mut order = Vec::new();
+        while let Some(inv) = d.next_candidate(SimTime::ZERO, &[]) {
+            order.push(insertion[inv].clone());
+        }
+        order
+    };
+    let seed_order: Vec<String> = names.iter().map(|s| s.to_string()).collect();
+    let mut arrival: Vec<String> = pop_order(&seed_order);
+    arrival.reverse();
+    let arrival_refs: Vec<&str> = arrival.iter().map(String::as_str).collect();
+    // The map order the real run will see (keys inserted in arrival
+    // order — exactly what the executor's enqueues do).
+    let expected_legacy = pop_order(&arrival);
+
+    let fifo = contended_completion_order(QueueKind::FifoFair, &arrival_refs);
+    assert_eq!(fifo, arrival, "FifoFair must complete in global arrival order");
+
+    let legacy = contended_completion_order(QueueKind::LegacyOneShot, &arrival_refs);
+    assert_eq!(
+        legacy, expected_legacy,
+        "LegacyOneShot must drain in hash-map iteration order"
+    );
+    assert_ne!(
+        legacy, fifo,
+        "the probe arrival order was built to separate legacy from fifo"
+    );
+}
+
+#[test]
+fn memaware_completes_smallest_charge_first_under_contention() {
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.invokers = 1;
+    cfg.invoker_memory_mb = Some(256);
+    cfg.memory_accounting = freshen_rs::util::config::MemoryAccounting::FunctionMb;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    cfg.freshen.enabled = false;
+    let run = |queue: QueueKind| -> Vec<String> {
+        let mut cfg = cfg.clone();
+        cfg.queue = queue;
+        let mut w = small_world(cfg);
+        w.deploy(lambda_mb("hold", 256, SimDuration::from_secs(5)));
+        // Any two of these exceed the 256 MB host, so placements are
+        // strictly sequential and completion order IS drain order.
+        w.deploy(lambda_mb("big", 256, SimDuration::from_millis(20)));
+        w.deploy(lambda_mb("mid", 224, SimDuration::from_millis(20)));
+        w.deploy(lambda_mb("small", 192, SimDuration::from_millis(20)));
+        run_sim(&mut w, |sim, w| {
+            invoke(sim, w, "hold");
+            // Arrival order big → mid → small, the reverse of charge
+            // order.
+            for (i, f) in ["big", "mid", "small"].iter().enumerate() {
+                let f = f.to_string();
+                sim.schedule(
+                    SimDuration::from_millis(1_000 + 100 * i as u64),
+                    move |sim, w| {
+                        invoke(sim, w, &f);
+                    },
+                );
+            }
+        });
+        assert!(w.dispatch.is_empty());
+        w.metrics
+            .records()
+            .iter()
+            .filter(|r| r.function != "hold")
+            .map(|r| r.function.clone())
+            .collect()
+    };
+    assert_eq!(run(QueueKind::FifoFair), vec!["big", "mid", "small"]);
+    assert_eq!(
+        run(QueueKind::MemoryAware),
+        vec!["small", "mid", "big"],
+        "MemoryAware drains smallest charge first"
+    );
+}
+
+// ====================================================================
+// Starvation / fairness under sustained pressure
+// ====================================================================
+
+/// Sustained small-function pressure: a stream of unique 160 MB lambdas
+/// (unique names, so the same-function warm fast path never bypasses the
+/// cross-function drain) overloads a single 256 MB host, and one 256 MB
+/// "big" function arrives early. Returns `(big wait, max wait, count)`.
+fn pressure_run(w_cfg: impl FnOnce(&mut World)) -> (SimDuration, SimDuration, usize) {
+    let mut cfg = Config::default();
+    cfg.seed = 11;
+    cfg.invokers = 1;
+    cfg.invoker_memory_mb = Some(256);
+    cfg.memory_accounting = freshen_rs::util::config::MemoryAccounting::FunctionMb;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    cfg.freshen.enabled = false;
+    let mut w = small_world(cfg);
+    w_cfg(&mut w);
+    const SMALLS: usize = 60;
+    for i in 0..SMALLS {
+        w.deploy(lambda_mb(&format!("s{i}"), 160, SimDuration::from_millis(500)));
+    }
+    w.deploy(lambda_mb("big", 256, SimDuration::from_millis(100)));
+    run_sim(&mut w, |sim, w| {
+        for i in 0..SMALLS {
+            let f = format!("s{i}");
+            sim.schedule(SimDuration::from_millis(300 * i as u64), move |sim, w| {
+                invoke(sim, w, &f);
+            });
+        }
+        sim.schedule(SimDuration::from_millis(2_050), |sim, w| {
+            invoke(sim, w, "big");
+        });
+    });
+    assert_eq!(w.metrics.count(), SMALLS + 1, "conservation under pressure");
+    assert!(w.dispatch.is_empty(), "no stranded entries");
+    let big = w
+        .metrics
+        .records()
+        .iter()
+        .find(|r| r.function == "big")
+        .expect("big completed");
+    let big_wait = big.started_at.since(big.enqueued_at);
+    (
+        big_wait,
+        SimDuration::from_micros(w.metrics.queue_wait_max_us),
+        w.metrics.count(),
+    )
+}
+
+#[test]
+fn fifo_head_of_line_bounds_the_big_functions_wait() {
+    let (big_wait, _, _) = pressure_run(|w| {
+        w.dispatch = dispatch::build(QueueKind::FifoFair);
+    });
+    // Strict FIFO: big only waits out the handful of smalls ahead of it
+    // (each ~1 s cold + body), never the whole 18 s stream.
+    assert!(
+        big_wait >= SimDuration::from_secs(1),
+        "big genuinely queued ({big_wait})"
+    );
+    assert!(
+        big_wait <= SimDuration::from_secs(15),
+        "FifoFair must bound the big function's time-in-queue ({big_wait})"
+    );
+}
+
+#[test]
+fn memaware_aging_bound_rescues_the_big_function() {
+    // Default aging (30 s): smallest-first parks big while smalls are
+    // queued, the aging bound then gives it drain priority.
+    let (aged_wait, _, _) = pressure_run(|w| {
+        w.dispatch = dispatch::build(QueueKind::MemoryAware);
+    });
+    assert!(
+        aged_wait >= MemoryAware::default().aging_bound,
+        "big cannot jump the smalls before the bound ({aged_wait})"
+    );
+    assert!(
+        aged_wait <= SimDuration::from_secs(45),
+        "the aging bound must rescue big shortly after it trips ({aged_wait})"
+    );
+    // With the bound pushed past the horizon, pure smallest-first parks
+    // big until the small stream has fully drained — the starvation the
+    // bound exists to prevent.
+    let (parked_wait, _, _) = pressure_run(|w| {
+        w.dispatch = Box::new(MemoryAware::with_aging_bound(SimDuration::from_secs(
+            100_000,
+        )));
+    });
+    assert!(
+        parked_wait > aged_wait + SimDuration::from_secs(10),
+        "without the bound big waits out the whole stream \
+         ({parked_wait} vs {aged_wait})"
+    );
+}
+
+// ====================================================================
+// Freshen container-incarnation guard
+// ====================================================================
+
+/// A freshen run in flight on `f`'s warm container when a pressure
+/// eviction reclaims the container for `g`. Returns the finished world.
+fn stale_freshen_world(guard: bool) -> World {
+    let mut cfg = Config::default();
+    cfg.seed = 7;
+    cfg.invokers = 1;
+    cfg.containers_per_invoker = 1;
+    cfg.keep_alive = KeepAliveKind::LruPressure;
+    cfg.freshen_incarnation_guard = guard;
+    let mut w = World::new(cfg);
+    // A Remote store: freshen's EnsureConnection + Prefetch take real
+    // simulated time, so the eviction lands mid-run.
+    let mut ep = Endpoint::new("store", Site::Remote);
+    ep.store.put("ID1", 1e6, SimTime::ZERO);
+    w.add_endpoint(ep);
+    w.deploy(lambda_mb("f", 256, SimDuration::from_millis(20)));
+    w.deploy(lambda_mb("g", 256, SimDuration::from_millis(20)));
+    run_sim(&mut w, |sim, w| {
+        invoke(sim, w, "f");
+        // f's container is warm by t=2 s; launch a developer freshen,
+        // then immediately steal the container for g under pressure.
+        sim.schedule(SimDuration::from_secs(2), |sim, w| {
+            let _ = start_freshen(sim, w, "f", None);
+        });
+        sim.schedule(SimDuration::from_micros(2_000_100), |sim, w| {
+            invoke(sim, w, "g");
+        });
+    });
+    w
+}
+
+#[test]
+fn incarnation_guard_aborts_the_stale_run_and_counts_it() {
+    let w = stale_freshen_world(true);
+    assert_eq!(w.metrics.count(), 2, "both invocations completed");
+    assert_eq!(
+        w.metrics.evictions_pressure, 1,
+        "g reclaimed f's container mid-freshen"
+    );
+    assert_eq!(
+        w.metrics.stale_freshen_aborts, 1,
+        "exactly the one in-flight run aborts"
+    );
+    assert_eq!(
+        w.metrics.freshens_completed, 0,
+        "an aborted run never completes"
+    );
+    let run = &w.freshen_runs[0];
+    assert!(run.done, "the aborted run is closed out");
+    // The stamp recorded the launch-time incarnation; the slot has moved
+    // on since.
+    assert!(w.containers[run.container].incarnation > run.incarnation);
+}
+
+#[test]
+fn guard_off_keeps_the_legacy_keep_stepping_semantics() {
+    let w = stale_freshen_world(false);
+    assert_eq!(w.metrics.count(), 2);
+    assert_eq!(w.metrics.evictions_pressure, 1, "same eviction as the guarded run");
+    assert_eq!(w.metrics.stale_freshen_aborts, 0, "no guard, no aborts");
+    assert_eq!(
+        w.metrics.freshens_completed, 1,
+        "legacy semantics: the stale run steps to completion against the \
+         recycled slot"
+    );
+}
+
+// ====================================================================
+// azure-macro: legacy pinning + divergence + determinism
+// ====================================================================
+
+fn macro_cfg(shards: usize) -> AzureMacroCfg {
+    let mut cfg = AzureMacroCfg::new(TraceSource::Synth(SynthTraceCfg {
+        apps: 36,
+        minutes: 14,
+        seed: 0xDE7E_2019,
+        ..SynthTraceCfg::default()
+    }));
+    cfg.shards = shards;
+    cfg.warmup_minutes = 4;
+    cfg.variants = vec![Variant::Both];
+    cfg.pool = PoolMode::Shared;
+    // A tight cluster so the shared pool genuinely queues. (Functions
+    // the 1024 MB hosts can never admit drop explicitly — identically
+    // under every discipline, so volume comparisons stay exact.)
+    cfg.invokers = Some(2);
+    cfg.invoker_memory_mb = Some(1024);
+    cfg.policies = vec![KeepAliveKind::LruPressure];
+    cfg
+}
+
+#[test]
+fn default_queue_is_byte_identical_to_explicit_legacy() {
+    // The PR 4 pinning: AzureMacroCfg's defaults (no queue axis, no
+    // guard) must produce EXACTLY the bytes of an explicitly
+    // legacy-configured grid — if the dispatch extraction had changed
+    // the default path, these digests would differ. The historical
+    // digest fields additionally survive as a prefix of the extended
+    // digest, so pre-extraction digests remain comparable.
+    let implicit = run_multi(&macro_cfg(2), &[7], &SweepRunner::new(2)).unwrap();
+    let mut explicit_cfg = macro_cfg(2);
+    explicit_cfg.queues = vec![QueueKind::LegacyOneShot];
+    explicit_cfg.freshen_guard = false;
+    let explicit = run_multi(&explicit_cfg, &[7], &SweepRunner::new(1)).unwrap();
+    assert_eq!(implicit.digest(), explicit.digest());
+    for row in &implicit.rows {
+        assert!(row.metrics.digest().starts_with(&row.metrics.digest_pr4()));
+        assert!(row.metrics.digest_pr4().starts_with(&row.metrics.digest_legacy()));
+    }
+    // The default config really is legacy.
+    let probe = Config::default();
+    assert_eq!(probe.queue, QueueKind::LegacyOneShot);
+    assert!(!probe.freshen_incarnation_guard);
+}
+
+#[test]
+fn fifo_and_memaware_change_contended_outcomes_and_stay_deterministic() {
+    let mut cfg = macro_cfg(2);
+    cfg.queues = vec![
+        QueueKind::LegacyOneShot,
+        QueueKind::FifoFair,
+        QueueKind::MemoryAware,
+    ];
+    let serial = run_multi(&cfg, &[7], &SweepRunner::new(1)).unwrap();
+    let parallel = run_multi(&cfg, &[7], &SweepRunner::new(4)).unwrap();
+    assert_eq!(
+        serial.digest(),
+        parallel.digest(),
+        "every discipline stays parallel-invariant at fixed shards"
+    );
+    assert_eq!(serial.rows.len(), 3);
+    let legacy = &serial.rows[0].metrics;
+    let fifo = &serial.rows[1].metrics;
+    let memaware = &serial.rows[2].metrics;
+    // The probe's premise: the tight shared pool genuinely queued.
+    assert!(
+        legacy.queued_total > 0,
+        "contended config must queue (got {})",
+        legacy.queued_total
+    );
+    // Volume is conserved whatever the discipline (feasibility drops are
+    // discipline-independent)...
+    assert_eq!(legacy.invocations, fifo.invocations);
+    assert_eq!(legacy.invocations, memaware.invocations);
+    assert_eq!(legacy.dropped_infeasible, fifo.dropped_infeasible);
+    assert_eq!(legacy.dropped_infeasible, memaware.dropped_infeasible);
+    // ...but the outcomes must move: not silently aliased to legacy.
+    assert_ne!(
+        legacy.digest(),
+        fifo.digest(),
+        "FifoFair must change contended outcomes"
+    );
+    assert_ne!(
+        legacy.digest(),
+        memaware.digest(),
+        "MemoryAware must change contended outcomes"
+    );
+}

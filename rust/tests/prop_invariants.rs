@@ -13,7 +13,7 @@ use freshen_rs::platform::function::FunctionSpec;
 use freshen_rs::platform::world::World;
 use freshen_rs::simcore::Sim;
 use freshen_rs::testkit::prop::forall;
-use freshen_rs::util::config::Config;
+use freshen_rs::util::config::{Config, KeepAliveKind, MemoryAccounting, QueueKind};
 use freshen_rs::util::rng::Rng;
 use freshen_rs::util::stats::{Cdf, Summary};
 use freshen_rs::util::time::{SimDuration, SimTime};
@@ -222,4 +222,127 @@ fn prop_platform_conserves_invocations() {
 #[test]
 fn prop_initial_cwnd_is_rfc6928() {
     assert_eq!(Connection::initial_cwnd(), INIT_CWND_SEGMENTS * MSS);
+}
+
+/// The cross-policy conservation property (the dispatch subsystem's
+/// acceptance bar): for EVERY queue discipline × keep-alive policy ×
+/// memory-accounting combination, a randomized contention workload ends
+/// with
+///
+///   scheduled == completed + explicitly-dropped,
+///
+/// no stranded dispatch-queue entries, no double dispatch, no busy
+/// containers, and coherent per-invocation timelines. One function's
+/// charge is deliberately infeasible (larger than any host) under
+/// per-function accounting, so the explicit-drop bucket is exercised
+/// rather than vacuous; everything else fits a host by construction.
+#[test]
+fn prop_conservation_across_queue_keepalive_and_accounting() {
+    forall("queue x keep-alive x accounting conservation", 8, |g| {
+        let seed = g.u64(0, u64::MAX / 2);
+        let invokers = g.usize(1, 2);
+        let slots = g.usize(1, 3);
+        let nfns = g.usize(2, 5);
+        let n = g.usize(5, 40);
+        // Pre-draw the workload so every grid cell replays the SAME
+        // arrivals (the property is per-cell; drawing inside the cell
+        // loop would give each cell a different workload, which is fine
+        // too but makes failures harder to compare).
+        let arrivals: Vec<(usize, u64)> = (0..n)
+            .map(|_| (g.usize(0, nfns - 1), g.u64(0, 90_000_000)))
+            .collect();
+        let mut memories: Vec<u32> = (0..nfns).map(|_| g.u64(64, 256) as u32).collect();
+        // f0's charge exceeds ANY host under per-function accounting
+        // (capacity tops out at 3 slots × 256 MB); under uniform slots it
+        // charges 256 like everyone else and completes.
+        memories[0] = 10_000;
+        let durations: Vec<u64> = (0..nfns).map(|_| g.u64(1, 2_000)).collect();
+        let freshen_on = g.bool(0.5);
+        let guard_on = g.bool(0.5);
+        for queue in QueueKind::all() {
+            for keep_alive in KeepAliveKind::all() {
+                for accounting in [MemoryAccounting::UniformSlot, MemoryAccounting::FunctionMb] {
+                    let mut cfg = Config::default();
+                    cfg.seed = seed;
+                    cfg.invokers = invokers;
+                    cfg.containers_per_invoker = slots;
+                    cfg.queue = queue;
+                    cfg.keep_alive = keep_alive;
+                    cfg.memory_accounting = accounting;
+                    cfg.freshen.enabled = freshen_on;
+                    cfg.freshen.min_confidence = 0.0;
+                    cfg.freshen_incarnation_guard = guard_on;
+                    cfg.idle_eviction = SimDuration::from_secs(30);
+                    let mut w = World::new(cfg);
+                    let mut ep = Endpoint::new("store", Site::Edge);
+                    ep.store.put("ID1", 1e5, SimTime::ZERO);
+                    w.add_endpoint(ep);
+                    for f in 0..nfns {
+                        let mut spec = FunctionSpec::paper_lambda(
+                            &format!("f{f}"),
+                            "app",
+                            "store",
+                            SimDuration::from_millis(durations[f]),
+                        );
+                        // f0 is deliberately infeasible under FunctionMb
+                        // (see `memories` above); the rest fit one slot.
+                        spec.memory_mb = memories[f];
+                        w.deploy(spec);
+                    }
+                    let mut sim: Sim<World> = Sim::new();
+                    sim.max_events = 20_000_000;
+                    for &(f, at) in &arrivals {
+                        let name = format!("f{f}");
+                        sim.schedule_at(SimTime(at), move |sim, w| {
+                            invoke(sim, w, &name);
+                        });
+                    }
+                    sim.run(&mut w);
+                    let tag = format!(
+                        "queue={} keep_alive={:?} accounting={:?}",
+                        queue.as_str(),
+                        keep_alive,
+                        accounting
+                    );
+                    // Conservation: scheduled == completed + explicitly-
+                    // dropped; nothing stranded, nothing double-dispatched.
+                    assert_eq!(
+                        w.metrics.count() as u64 + w.metrics.dropped_infeasible,
+                        n as u64,
+                        "lost/duplicated invocations [{tag}]"
+                    );
+                    if accounting == MemoryAccounting::UniformSlot {
+                        assert_eq!(
+                            w.metrics.dropped_infeasible, 0,
+                            "uniform slots are always feasible [{tag}]"
+                        );
+                    }
+                    assert_eq!(
+                        w.invocations.iter().filter(|c| c.done).count(),
+                        n,
+                        "every context must terminate [{tag}]"
+                    );
+                    assert!(
+                        w.dispatch.is_empty(),
+                        "stranded queue entries [{tag}]"
+                    );
+                    assert!(
+                        w.containers.iter().all(|c| c.state
+                            != freshen_rs::platform::container::ContainerState::Busy),
+                        "busy container at quiescence [{tag}]"
+                    );
+                    for r in w.metrics.records() {
+                        assert!(r.finished_at >= r.started_at, "[{tag}]");
+                        assert!(r.started_at >= r.enqueued_at, "[{tag}]");
+                    }
+                    // The start-kind split accounts for every completion.
+                    assert_eq!(
+                        w.metrics.cold_starts + w.metrics.warm_starts,
+                        w.metrics.count() as u64,
+                        "start kinds must partition completions [{tag}]"
+                    );
+                }
+            }
+        }
+    });
 }
