@@ -10,7 +10,7 @@
 use std::io::BufWriter;
 
 use freshen_rs::experiments::SweepRunner;
-use freshen_rs::testkit::bench::{throughput, time_once};
+use freshen_rs::testkit::bench::{throughput, time_once, Snapshot};
 use freshen_rs::util::config::KeepAliveKind;
 use freshen_rs::workload::macrotrace::ingest::AzureTraceReader;
 use freshen_rs::workload::macrotrace::replay::{PoolMode, ReplayCfg};
@@ -27,6 +27,7 @@ fn bench_cfg() -> SynthTraceCfg {
 }
 
 fn main() {
+    let mut snap = Snapshot::new("macro_trace_replay");
     let synth = bench_cfg();
     let dir = std::env::temp_dir().join("freshen-macro-trace-bench");
     let _ = std::fs::remove_dir_all(&dir);
@@ -39,6 +40,7 @@ fn main() {
         write_csv(&synth, BufWriter::new(file)).expect("write bench trace")
     });
     let bytes = std::fs::metadata(&path).expect("trace written").len();
+    snap.rate("synth/rows-written", summary.functions, elapsed);
     println!(
         "synth+write: {} rows / {} invocations ({:.1} MB) in {elapsed:?}  \
          ({:.0} rows/s)",
@@ -61,6 +63,8 @@ fn main() {
         (rows, invocations)
     });
     assert_eq!(counted.0, summary.functions);
+    snap.rate("ingest/rows", counted.0, elapsed);
+    snap.rate("ingest/invocation-counts", counted.0 * synth.minutes as u64, elapsed);
     println!(
         "ingest: {} rows in {elapsed:?}  ({:.0} rows/s, {:.2}M counts/s)",
         counted.0,
@@ -78,6 +82,7 @@ fn main() {
         replay_sharded(&src, 1, &cfg, &SweepRunner::new(1)).expect("serial replay")
     });
     let serial_rate = throughput(serial.metrics.invocations, serial_elapsed);
+    snap.rate("replay/serial", serial.metrics.invocations, serial_elapsed);
     println!(
         "replay serial   (1 shard,  1 worker):  {} invocations, {} sim events in \
          {serial_elapsed:?}  ({serial_rate:.0} inv/s)",
@@ -94,6 +99,11 @@ fn main() {
             "sharded replay must be byte-identical to serial"
         );
         let rate = throughput(sharded.metrics.invocations, elapsed);
+        snap.rate(
+            &format!("replay/sharded-{shards}x{workers}"),
+            sharded.metrics.invocations,
+            elapsed,
+        );
         println!(
             "replay sharded ({shards} shards, {workers} workers): {} invocations in \
              {elapsed:?}  ({rate:.0} inv/s, x{:.2} vs serial)",
@@ -116,6 +126,11 @@ fn main() {
                 .expect("shared-pool replay")
         });
         let m = &out.metrics;
+        snap.rate(
+            &format!("replay/shared-pool-{}", kind.as_str()),
+            m.invocations,
+            elapsed,
+        );
         println!(
             "replay shared  (4 shards, keep-alive {:>6}): {} invocations, {} sim events \
              in {elapsed:?}  (cold {:.2}%, evict idle/press {}/{}, warm kills {}, \
@@ -129,5 +144,9 @@ fn main() {
             m.warm_kills,
             m.peak_resident_mb
         );
+    }
+
+    if let Some(path) = snap.write_if_requested().expect("snapshot write") {
+        println!("snapshot written to {}", path.display());
     }
 }

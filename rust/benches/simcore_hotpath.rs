@@ -12,7 +12,7 @@ use freshen_rs::platform::function::FunctionSpec;
 use freshen_rs::platform::world::World;
 use freshen_rs::simcore::wheel::{BinaryHeapQueue, EventQueue, TimingWheel};
 use freshen_rs::simcore::Sim;
-use freshen_rs::testkit::bench::{bench, throughput, time_once};
+use freshen_rs::testkit::bench::{bench, throughput, time_once, Snapshot};
 use freshen_rs::util::config::Config;
 use freshen_rs::util::rng::Rng;
 use freshen_rs::util::time::{SimDuration, SimTime};
@@ -75,7 +75,7 @@ fn sparse_chain<Q: EventQueue<u64>>(q: &mut Q, events: u64) -> u64 {
     events + 1
 }
 
-fn bench_queue_comparison() {
+fn bench_queue_comparison(snap: &mut Snapshot) {
     const PENDING: usize = 100_000;
     const CHURN: usize = 1_000_000;
     const CHAIN: u64 = 1_000_000;
@@ -90,6 +90,8 @@ fn bench_queue_comparison() {
         dense_churn(&mut q, PENDING, CHURN)
     });
     assert_eq!(wheel_dense, heap_dense);
+    snap.rate("scheduler/dense-churn/wheel", wheel_dense, wheel_elapsed);
+    snap.rate("scheduler/dense-churn/heap", heap_dense, heap_elapsed);
     let wheel_rate = throughput(wheel_dense, wheel_elapsed);
     let heap_rate = throughput(heap_dense, heap_elapsed);
     println!(
@@ -109,6 +111,8 @@ fn bench_queue_comparison() {
         sparse_chain(&mut q, CHAIN)
     });
     assert_eq!(wheel_chain, heap_chain);
+    snap.rate("scheduler/sparse-chain/wheel", wheel_chain, wheel_elapsed);
+    snap.rate("scheduler/sparse-chain/heap", heap_chain, heap_elapsed);
     let wheel_rate = throughput(wheel_chain, wheel_elapsed);
     let heap_rate = throughput(heap_chain, heap_elapsed);
     println!(
@@ -120,7 +124,7 @@ fn bench_queue_comparison() {
     );
 }
 
-fn bench_event_loop() {
+fn bench_event_loop(snap: &mut Snapshot) {
     // A self-rescheduling event chain through the full engine: pure
     // engine overhead (now wheel-backed).
     const EVENTS: u64 = 1_000_000;
@@ -137,13 +141,14 @@ fn bench_event_loop() {
         sim.run(&mut w);
         assert_eq!(w, EVENTS);
     });
+    snap.rate("simcore/event-loop", EVENTS, elapsed);
     println!(
         "simcore: {:.2}M events/sec ({elapsed:?} for {EVENTS})",
         throughput(EVENTS, elapsed) / 1e6
     );
 }
 
-fn bench_platform_invocations() {
+fn bench_platform_invocations(snap: &mut Snapshot) {
     const INVOCATIONS: usize = 20_000;
     let (_, elapsed) = time_once(|| {
         let mut cfg = Config::default();
@@ -168,6 +173,7 @@ fn bench_platform_invocations() {
         sim.run(&mut w);
         assert_eq!(w.metrics.count(), INVOCATIONS);
     });
+    snap.rate("platform/invocations", INVOCATIONS as u64, elapsed);
     println!(
         "platform: {:.0} simulated invocations/sec ({elapsed:?} for {INVOCATIONS})",
         throughput(INVOCATIONS as u64, elapsed)
@@ -175,15 +181,20 @@ fn bench_platform_invocations() {
 }
 
 fn main() {
-    bench_queue_comparison();
-    bench_event_loop();
-    bench_platform_invocations();
+    let mut snap = Snapshot::new("simcore_hotpath");
+    bench_queue_comparison(&mut snap);
+    bench_event_loop(&mut snap);
+    bench_platform_invocations(&mut snap);
     // Netsim transfer-time computation (the inner loop of Figures 4-6).
     let link = Site::Remote.link();
     let mut rng = Rng::new(3);
-    bench("netsim/10MB-transfer-model", 10, 200, || {
+    let transfer = bench("netsim/10MB-transfer-model", 10, 200, || {
         let mut conn = Connection::new(link.clone(), CongestionControl::Cubic);
         let d = conn.connect(SimTime::ZERO, &mut rng);
         std::hint::black_box(conn.send_with_ack(SimTime::ZERO + d, &mut rng, 1e7, 0.0));
     });
+    snap.stats(&transfer);
+    if let Some(path) = snap.write_if_requested().expect("snapshot write") {
+        println!("snapshot written to {}", path.display());
+    }
 }

@@ -1,0 +1,482 @@
+//! A minimal, dependency-free Rust lexer for `simlint` (`repro lint`).
+//!
+//! The workspace is offline — no `syn`, no `proc-macro2` — so the analyzer
+//! tokenizes source by hand: identifiers, literals (including raw and byte
+//! strings), lifetimes, and single-character punctuation (`::` arrives as two
+//! `:` tokens). Comments are captured out-of-band — suppression directives
+//! live there — and every token carries a 1-based line number. It does NOT
+//! parse: the rule engine works on token sequences plus a little context
+//! (struct bodies, `#[cfg(test)]` items), which is all the determinism rules
+//! need.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident,
+    /// Numeric, string, char, or byte literal (raw strings included).
+    Literal,
+    /// A single punctuation character.
+    Punct,
+    /// A lifetime such as `'a` — distinct from char literals.
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// A comment (line or block), keyed by its starting line. Block-comment text
+/// keeps interior newlines; directive parsing only looks at the first line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub text: String,
+    pub line: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let at = line;
+            let start = i + 2;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                text: cs[start.min(i)..i].iter().collect(),
+                line: at,
+            });
+        } else if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let at = line;
+            i += 2;
+            let start = i;
+            let mut depth = 1u32;
+            while i < n && depth > 0 {
+                if cs[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            let end = i.saturating_sub(2).max(start);
+            out.comments.push(Comment {
+                text: cs[start..end].iter().collect(),
+                line: at,
+            });
+        } else if c == '"' {
+            let at = line;
+            let text = lex_string(&cs, &mut i, &mut line);
+            out.toks.push(Tok {
+                kind: TokKind::Literal,
+                text,
+                line: at,
+            });
+        } else if c == '\'' {
+            // Lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+            let next_is_ident = i + 1 < n && is_ident_start(cs[i + 1]);
+            let closes = i + 2 < n && cs[i + 2] == '\'';
+            if next_is_ident && !closes {
+                let at = line;
+                let start = i;
+                i += 2;
+                while i < n && is_ident_continue(cs[i]) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: cs[start..i].iter().collect(),
+                    line: at,
+                });
+            } else {
+                let at = line;
+                let start = i;
+                i += 1;
+                while i < n {
+                    if cs[i] == '\\' {
+                        i += 2;
+                    } else if cs[i] == '\'' {
+                        i += 1;
+                        break;
+                    } else {
+                        i += 1;
+                    }
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Literal,
+                    text: cs[start..i.min(n)].iter().collect(),
+                    line: at,
+                });
+            }
+        } else if (c == 'r' || c == 'b') && lex_prefixed_literal(&cs, &mut i, &mut line, &mut out) {
+            // raw / byte string consumed by the helper
+        } else if is_ident_start(c) {
+            let at = line;
+            let start = i;
+            while i < n && is_ident_continue(cs[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: cs[start..i].iter().collect(),
+                line: at,
+            });
+        } else if c.is_ascii_digit() {
+            let at = line;
+            let start = i;
+            let mut seen_dot = false;
+            while i < n {
+                let d = cs[i];
+                if is_ident_continue(d) {
+                    i += 1;
+                } else if d == '.'
+                    && !seen_dot
+                    && i + 1 < n
+                    && cs[i + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Literal,
+                text: cs[start..i].iter().collect(),
+                line: at,
+            });
+        } else {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: c.to_string(),
+                line,
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Lex a `"..."` string starting at `*i` (which must point at the opening
+/// quote). Returns the full text including quotes; tracks newlines.
+fn lex_string(cs: &[char], i: &mut usize, line: &mut u32) -> String {
+    let n = cs.len();
+    let start = *i;
+    *i += 1;
+    while *i < n {
+        match cs[*i] {
+            '\\' => *i += 2,
+            '\n' => {
+                *line += 1;
+                *i += 1;
+            }
+            '"' => {
+                *i += 1;
+                break;
+            }
+            _ => *i += 1,
+        }
+    }
+    cs[start..(*i).min(n)].iter().collect()
+}
+
+/// Try to lex a raw string (`r"…"`, `r#"…"#`), byte string (`b"…"`,
+/// `br#"…"#`), or byte char (`b'…'`) starting at `*i`. Returns true (and
+/// pushes a Literal) when one was consumed; false leaves `*i` untouched so
+/// the caller lexes a plain identifier.
+fn lex_prefixed_literal(cs: &[char], i: &mut usize, line: &mut u32, out: &mut Lexed) -> bool {
+    let n = cs.len();
+    let start = *i;
+    let mut j = *i;
+    let mut raw = false;
+    if cs[j] == 'b' {
+        j += 1;
+        if j < n && cs[j] == 'r' {
+            raw = true;
+            j += 1;
+        }
+    } else {
+        // cs[j] == 'r'
+        raw = true;
+        j += 1;
+    }
+
+    if raw {
+        let mut hashes = 0usize;
+        while j < n && cs[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        if j >= n || cs[j] != '"' {
+            return false; // e.g. `r#ident` or a plain ident like `rng`
+        }
+        let at = *line;
+        j += 1;
+        // Scan for `"` followed by `hashes` hash marks.
+        while j < n {
+            if cs[j] == '\n' {
+                *line += 1;
+                j += 1;
+            } else if cs[j] == '"' && cs[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes {
+                j += 1 + hashes;
+                break;
+            } else {
+                j += 1;
+            }
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Literal,
+            text: cs[start..j.min(n)].iter().collect(),
+            line: at,
+        });
+        *i = j;
+        true
+    } else if j < n && cs[j] == '"' {
+        // b"..." — escapes apply.
+        let at = *line;
+        *i = j;
+        let body = lex_string(cs, i, line);
+        out.toks.push(Tok {
+            kind: TokKind::Literal,
+            text: format!("b{body}"),
+            line: at,
+        });
+        true
+    } else if j < n && cs[j] == '\'' {
+        // b'x' byte char.
+        let at = *line;
+        j += 1;
+        while j < n {
+            if cs[j] == '\\' {
+                j += 2;
+            } else if cs[j] == '\'' {
+                j += 1;
+                break;
+            } else {
+                j += 1;
+            }
+        }
+        out.toks.push(Tok {
+            kind: TokKind::Literal,
+            text: cs[start..j.min(n)].iter().collect(),
+            line: at,
+        });
+        *i = j;
+        true
+    } else {
+        false
+    }
+}
+
+/// Remove every item annotated `#[cfg(test)]` from the token stream (test
+/// mods, test-only fns/structs). Returns the surviving tokens plus the
+/// skipped (start, end) line spans so comment handling can ignore
+/// suppressions inside test code.
+pub fn strip_cfg_test(toks: &[Tok]) -> (Vec<Tok>, Vec<(u32, u32)>) {
+    let mut keep: Vec<Tok> = Vec::with_capacity(toks.len());
+    let mut spans: Vec<(u32, u32)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_at(toks, i) {
+            let first_line = toks[i].line;
+            let mut j = i + 7; // past `# [ cfg ( test ) ]`
+            // Skip any further attribute groups (`#[allow(...)]`, ...).
+            while j + 1 < toks.len() && toks[j].text == "#" && toks[j + 1].text == "[" {
+                let mut depth = 0usize;
+                j += 1;
+                while j < toks.len() {
+                    match toks[j].text.as_str() {
+                        "[" => depth += 1,
+                        "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                j += 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+            }
+            // Skip the annotated item: everything up to the first `;` at
+            // nesting depth 0, or through the matching `}` of its first block.
+            let mut braces = 0usize;
+            let mut nest = 0usize; // parens + brackets, e.g. the `;` in `[u8; 4]`
+            while j < toks.len() {
+                match toks[j].text.as_str() {
+                    "{" => braces += 1,
+                    "}" => {
+                        braces = braces.saturating_sub(1);
+                        if braces == 0 {
+                            j += 1;
+                            break;
+                        }
+                    }
+                    "(" | "[" => nest += 1,
+                    ")" | "]" => nest = nest.saturating_sub(1),
+                    ";" if braces == 0 && nest == 0 => {
+                        j += 1;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let last_line = toks[j.saturating_sub(1).min(toks.len() - 1)].line;
+            spans.push((first_line, last_line));
+            i = j;
+        } else {
+            keep.push(toks[i].clone());
+            i += 1;
+        }
+    }
+    (keep, spans)
+}
+
+fn is_cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + PAT.len() && PAT.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_puncts_lines() {
+        let l = lex("let x = a::b;\nfoo()");
+        let t: Vec<(&str, u32)> = l.toks.iter().map(|t| (t.text.as_str(), t.line)).collect();
+        assert_eq!(
+            t,
+            vec![
+                ("let", 1),
+                ("x", 1),
+                ("=", 1),
+                ("a", 1),
+                (":", 1),
+                (":", 1),
+                ("b", 1),
+                (";", 1),
+                ("foo", 2),
+                ("(", 2),
+                (")", 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("a // HashMap here\nb /* Instant::now */ c");
+        let toks: Vec<&str> = l.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(toks, vec!["a", "b", "c"]);
+        assert_eq!(l.comments.len(), 2);
+        assert_eq!(l.comments[0].line, 1);
+        assert!(l.comments[0].text.contains("HashMap"));
+        assert_eq!(l.comments[1].line, 2);
+    }
+
+    #[test]
+    fn strings_hide_contents() {
+        let t = texts(r#"f("HashMap::new()", r"SystemTime", b"x")"#);
+        assert!(!t.iter().any(|s| s == "HashMap" || s == "SystemTime"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes_and_newlines() {
+        let l = lex("let s = r#\"a \"quoted\" b\nsecond\"#;\nnext");
+        let last = l.toks.last().unwrap();
+        assert_eq!(last.text, "next");
+        assert_eq!(last.line, 3);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { match c { 'x' => 1, '\\n' => 2, '0'..='9' => 3 } }");
+        let lifetimes: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        let chars: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Literal && t.text.starts_with('\''))
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(chars, vec!["'x'", "'\\n'", "'0'", "'9'"]);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let t = texts("a /* outer /* inner */ still comment */ b");
+        assert_eq!(t, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn numbers_lex_as_single_literals() {
+        let t = texts("1.0e-3 0x7ACE 2f64 1_000 0..3");
+        assert_eq!(t, vec!["1.0e", "-", "3", "0x7ACE", "2f64", "1_000", "0", ".", ".", "3"]);
+    }
+
+    #[test]
+    fn strip_cfg_test_removes_mod_and_reports_span() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    use super::*;\n    #[test]\n    fn t() { HashMap::new(); }\n}\nfn after() {}";
+        let l = lex(src);
+        let (kept, spans) = strip_cfg_test(&l.toks);
+        let names: Vec<&str> = kept.iter().map(|t| t.text.as_str()).collect();
+        assert!(names.contains(&"live"));
+        assert!(names.contains(&"after"));
+        assert!(!names.contains(&"HashMap"));
+        assert_eq!(spans, vec![(2, 7)]);
+    }
+
+    #[test]
+    fn strip_cfg_test_handles_semicolon_items() {
+        let src = "#[cfg(test)]\nmod tests;\nfn live() {}";
+        let l = lex(src);
+        let (kept, _) = strip_cfg_test(&l.toks);
+        let names: Vec<&str> = kept.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(names, vec!["fn", "live", "(", ")", "{", "}"]);
+    }
+}

@@ -1,0 +1,306 @@
+//! `simlint` — the determinism & invariant static-analysis pass (`repro lint`).
+//!
+//! Every headline number in this repo rests on byte-identical replay digests
+//! (shard × parallel invariance, pinned legacy prefixes). The rules that keep
+//! those digests stable used to live in reviewers' heads; this module turns
+//! them into a dependency-free analyzer that scans the crate's own sources on
+//! every build: a hand-rolled lexer ([`lexer`]) feeds token-sequence rules
+//! ([`rules`], D001–D006), findings carry file:line + rule + fix hint, and
+//! suppression is explicit and audited via
+//! `// simlint: allow(D00x, reason)` comments (same line or the line above
+//! the finding; a missing reason is itself a finding, S001, and an allow that
+//! matches nothing is flagged stale, S002).
+//!
+//! The static rules are paired with `debug_assertions`-gated dynamic
+//! invariants in `platform/` (memory accounting never negative, queue
+//! seniority monotone, container incarnation monotone) so the two layers
+//! cover each other: the lint catches nondeterminism sources the asserts
+//! can't see, the asserts catch logic drift the lexer can't prove.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint finding: where, which rule, what, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Source path relative to the lint root, `/`-separated.
+    pub path: String,
+    /// 1-based line.
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} {}\n    fix: {}",
+            self.path, self.line, self.rule, self.message, self.hint
+        )
+    }
+}
+
+// ---- suppression directives ----------------------------------------------
+
+#[derive(Debug)]
+struct Directive {
+    line: u32,
+    rules: Vec<String>,
+    used: bool,
+}
+
+/// Parse `simlint:` directives out of a file's comments. A directive must
+/// *lead* the comment (after doc markers), so prose that merely mentions
+/// the tool — like this module's own docs — is not parsed. Malformed ones
+/// (no rule ids, or an empty reason) become S001 findings directly.
+fn parse_directives(
+    path: &str,
+    comments: &[lexer::Comment],
+    skipped: &[(u32, u32)],
+) -> (Vec<Directive>, Vec<Finding>) {
+    let mut dirs = Vec::new();
+    let mut bad = Vec::new();
+    for c in comments {
+        if skipped.iter().any(|&(a, b)| c.line >= a && c.line <= b) {
+            continue; // test code is not linted; its directives are inert
+        }
+        let content = c.text.trim_start_matches(['/', '!', ' ', '\t']);
+        if !content.starts_with("simlint") {
+            continue;
+        }
+        match parse_allow(content) {
+            Some((rules, reason)) if !rules.is_empty() && !reason.is_empty() => {
+                dirs.push(Directive {
+                    line: c.line,
+                    rules,
+                    used: false,
+                });
+            }
+            _ => bad.push(Finding {
+                path: path.to_string(),
+                line: c.line,
+                rule: "S001",
+                message: format!("malformed simlint directive: `{}`", c.text.trim()),
+                hint: rules::rule("S001").hint,
+            }),
+        }
+    }
+    (dirs, bad)
+}
+
+/// Parse `simlint: allow(D001 D002, reason...)` starting at the `simlint`
+/// keyword. Returns (rule ids, reason) or None when the shape is wrong.
+fn parse_allow(text: &str) -> Option<(Vec<String>, String)> {
+    let rest = text.strip_prefix("simlint")?.trim_start();
+    let rest = rest.strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let body = &rest[..rest.rfind(')')?];
+    // Leading comma/space-separated rule ids, then the reason.
+    let mut rules = Vec::new();
+    let mut reason = String::new();
+    for (i, part) in body.split(',').enumerate() {
+        let p = part.trim();
+        if reason.is_empty() && p.split_whitespace().all(is_rule_id) && !p.is_empty() {
+            rules.extend(p.split_whitespace().map(str::to_string));
+        } else {
+            if i == 0 {
+                return None; // first segment must be rule ids
+            }
+            if !reason.is_empty() {
+                reason.push(',');
+            }
+            reason.push_str(p);
+        }
+    }
+    Some((rules, reason.trim().to_string()))
+}
+
+fn is_rule_id(s: &str) -> bool {
+    s.len() == 4
+        && (s.starts_with('D') || s.starts_with('S'))
+        && s[1..].chars().all(|c| c.is_ascii_digit())
+}
+
+// ---- the engine -----------------------------------------------------------
+
+/// Lint one source file. `path` is the root-relative, `/`-separated path the
+/// scoping rules key on. Returns findings sorted by (line, rule).
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lexer::lex(src);
+    let (toks, skipped) = lexer::strip_cfg_test(&lexed.toks);
+    let (mut dirs, mut out) = parse_directives(path, &lexed.comments, &skipped);
+
+    for f in rules::scan(path, &toks) {
+        // A directive on the finding's line, or the line directly above it,
+        // naming the finding's rule, suppresses it (and is marked used).
+        let mut suppressed = false;
+        for d in dirs.iter_mut() {
+            if (d.line == f.line || d.line + 1 == f.line) && d.rules.iter().any(|r| r == f.rule) {
+                d.used = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(f);
+        }
+    }
+
+    for d in &dirs {
+        if !d.used {
+            out.push(Finding {
+                path: path.to_string(),
+                line: d.line,
+                rule: "S002",
+                message: format!("suppression allow({}) matched no finding", d.rules.join(" ")),
+                hint: rules::rule("S002").hint,
+            });
+        }
+    }
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Lint every `.rs` file under `root` (recursively, in sorted path order).
+/// Returns findings sorted by (path, line, rule) plus the file count.
+pub fn lint_tree(root: &Path) -> io::Result<(Vec<Finding>, usize)> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    let mut rels: Vec<(String, PathBuf)> = files
+        .into_iter()
+        .map(|p| {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            (rel, p)
+        })
+        .collect();
+    rels.sort();
+
+    let mut out = Vec::new();
+    let count = rels.len();
+    for (rel, full) in rels {
+        let src = fs::read_to_string(&full)?;
+        out.extend(lint_source(&rel, &src));
+    }
+    out.sort_by(|a, b| (&a.path, a.line, a.rule).cmp(&(&b.path, b.line, b.rule)));
+    Ok((out, count))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .collect::<Result<Vec<_>, _>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_allow_single_rule() {
+        let (rules, reason) = parse_allow("simlint: allow(D001, legacy digest is pinned)").unwrap();
+        assert_eq!(rules, vec!["D001"]);
+        assert_eq!(reason, "legacy digest is pinned");
+    }
+
+    #[test]
+    fn parse_allow_multiple_rules_and_commas_in_reason() {
+        let (rules, reason) =
+            parse_allow("simlint: allow(D003 D005, rounded, then clamped)").unwrap();
+        assert_eq!(rules, vec!["D003", "D005"]);
+        assert_eq!(reason, "rounded, then clamped");
+    }
+
+    #[test]
+    fn parse_allow_rejects_missing_reason_or_rules() {
+        assert_eq!(parse_allow("simlint: allow(D001)").unwrap().1, "");
+        assert!(parse_allow("simlint: allow(, because)").is_none());
+        assert!(parse_allow("simlint: D001 please").is_none());
+    }
+
+    #[test]
+    fn suppression_same_line_and_next_line() {
+        let src = "\
+use std::collections::HashMap; // simlint: allow(D001, exercised below)
+// simlint: allow(D001, wrapper type, never iterated)
+fn f() -> HashMap<u32, u32> {
+    HashMap::new()
+}";
+        let out = lint_source("platform/x.rs", src);
+        // Line 1 and line 3 are suppressed; line 4's HashMap::new is not.
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, "D001");
+        assert_eq!(out[0].line, 4);
+    }
+
+    #[test]
+    fn missing_reason_is_s001() {
+        let src = "use std::collections::HashMap; // simlint: allow(D001)";
+        let out = lint_source("platform/x.rs", src);
+        assert!(out.iter().any(|f| f.rule == "S001"));
+        assert!(out.iter().any(|f| f.rule == "D001"), "unparsed allow must not suppress");
+    }
+
+    #[test]
+    fn unused_suppression_is_s002() {
+        let src = "// simlint: allow(D002, no clock here after refactor)\nfn f() {}";
+        let out = lint_source("platform/x.rs", src);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, "S002");
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn prose_mentions_are_not_directives() {
+        // Doc comments talking *about* simlint (like this module's header)
+        // must not parse as directives or raise S001.
+        let src = "\
+//! The `simlint` analyzer and its allow(...) form are documented here.
+// write `// simlint: allow(D00x, reason)` to suppress
+fn f() {}";
+        assert!(lint_source("platform/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn directives_inside_cfg_test_are_inert() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    // simlint: allow(D001, never fires, test code is unlinted)
+    fn t() {}
+}";
+        assert!(lint_source("platform/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn findings_render_with_hint() {
+        let out = lint_source("metrics/x.rs", "fn f(x: u64) -> u32 { x as u32 }");
+        let s = out[0].to_string();
+        assert!(s.contains("metrics/x.rs:1: D005"));
+        assert!(s.contains("fix:"));
+    }
+}

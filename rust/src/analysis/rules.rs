@@ -1,0 +1,365 @@
+//! The `simlint` determinism rules (D001–D006).
+//!
+//! Each rule is a token-sequence check scoped to the path prefixes where the
+//! determinism contract applies. Paths are relative to the source root and
+//! `/`-separated (`platform/world.rs`). `#[cfg(test)]` items are stripped
+//! before rules run — test code may use wall clocks, ad-hoc seeds, and std
+//! maps freely.
+//!
+//! The engine-hygiene findings S001 (malformed suppression) and S002 (unused
+//! suppression) live in `mod.rs` with the suppression machinery.
+
+use super::lexer::{Tok, TokKind};
+use super::Finding;
+
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+    pub hint: &'static str,
+}
+
+/// The shipped rule catalog, in id order (rendered by `repro lint --rules`
+/// and the README).
+pub const CATALOG: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D001",
+        summary: "std HashMap/HashSet in a sim/metrics/digest path: iteration order is \
+                  per-instance random, so any drain that feeds output breaks replay digests",
+        hint: "use util::fxhash::FxHashMap/FxHashSet (deterministic fixed-seed order) and \
+               sort before draining into output, or a BTreeMap",
+    },
+    RuleInfo {
+        id: "D002",
+        summary: "wall-clock read (Instant::now/SystemTime) outside the serve/runtime/testkit \
+                  allowlist: simulated components must take time from the Sim clock",
+        hint: "thread SimTime through the call, or move the timing into serve/ or testkit/",
+    },
+    RuleInfo {
+        id: "D003",
+        summary: "float field in a mergeable-metrics struct: the digest contract requires \
+                  shard-merged metrics to be integer-only so merges commute exactly",
+        hint: "store integer units (us, bytes, counts) and convert to float at report time",
+    },
+    RuleInfo {
+        id: "D004",
+        summary: "Rng::new with a hard-coded literal seed in a sim path: derived streams must \
+                  come from the config seed via util::rng::mix64 or Rng::fork",
+        hint: "seed from Rng::new(mix64(run_seed, stable_id)) or fork an existing stream",
+    },
+    RuleInfo {
+        id: "D005",
+        summary: "unchecked `as` narrowing on a metric/counter value: silent truncation \
+                  corrupts merged counters without failing any test",
+        hint: "use try_from(..).expect(..) so overflow is loud, or widen the counter",
+    },
+    RuleInfo {
+        id: "D006",
+        summary: "cross-thread fan-out outside serve/testkit: results collected in completion \
+                  order are nondeterministic; merges must be grid-index ordered",
+        hint: "write each worker's result into a position-indexed slot (see \
+               experiments::harness::SweepRunner) and reduce in index order",
+    },
+    RuleInfo {
+        id: "S001",
+        summary: "malformed simlint directive: allow(...) needs rule ids and a non-empty reason",
+        hint: "write `// simlint: allow(D00x, reason)` — the reason is the audit trail",
+    },
+    RuleInfo {
+        id: "S002",
+        summary: "unused simlint suppression: the allow(...) matched no finding on its line \
+                  or the next",
+        hint: "delete the stale directive, or move it onto the line it is meant to cover",
+    },
+];
+
+pub fn rule(id: &str) -> &'static RuleInfo {
+    CATALOG
+        .iter()
+        .find(|r| r.id == id)
+        .expect("unknown rule id")
+}
+
+// ---- path scoping ---------------------------------------------------------
+
+/// Paths where map-iteration order can reach simulator state, metrics, or
+/// digests. `util/` (the FxHashMap wrapper itself), `cli/`, `serve/`,
+/// `runtime/`, `nn/`, `analysis/`, and `testkit/` are exempt.
+const SIM_PATHS: &[&str] = &[
+    "platform/", "metrics/", "simcore/", "workload/", "predict/", "freshen/", "netsim/",
+    "billing/", "experiments/", "triggers/",
+];
+
+/// Paths allowed to read the wall clock: the real-time serving engine, the
+/// real-time inference runtime, and the bench harness.
+const WALL_CLOCK_ALLOW: &[&str] = &["serve/", "runtime/", "testkit/"];
+
+/// Paths whose structs feed the shard-merged, digest-pinned reports.
+const MERGED_METRICS_PATHS: &[&str] = &["metrics/", "workload/macrotrace/"];
+
+/// Paths where `as` narrowing lands on counters that reach merged metrics.
+const COUNTER_PATHS: &[&str] = &["metrics/", "workload/", "billing/"];
+
+/// Paths exempt from the cross-thread heuristic: serve/ is genuinely
+/// real-time, testkit/ hosts the bench/property harnesses.
+const THREAD_EXEMPT: &[&str] = &["serve/", "testkit/"];
+
+fn in_any(path: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p))
+}
+
+// ---- matching helpers -----------------------------------------------------
+
+fn seq(toks: &[Tok], i: usize, pat: &[&str]) -> bool {
+    toks.len() >= i + pat.len() && pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+fn finding(path: &str, line: u32, id: &'static str, message: String) -> Finding {
+    Finding {
+        path: path.to_string(),
+        line,
+        rule: id,
+        message,
+        hint: rule(id).hint,
+    }
+}
+
+// ---- the rules ------------------------------------------------------------
+
+/// Run every determinism rule over one file's (cfg(test)-stripped) tokens.
+pub fn scan(path: &str, toks: &[Tok]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    d001_std_maps(path, toks, &mut out);
+    d002_wall_clock(path, toks, &mut out);
+    d003_float_metrics(path, toks, &mut out);
+    d004_literal_seed(path, toks, &mut out);
+    d005_as_narrowing(path, toks, &mut out);
+    d006_thread_fanout(path, toks, &mut out);
+    out
+}
+
+fn d001_std_maps(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, SIM_PATHS) {
+        return;
+    }
+    for t in toks {
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push(finding(
+                path,
+                t.line,
+                "D001",
+                format!("std::collections::{} in a determinism-sensitive path", t.text),
+            ));
+        }
+    }
+}
+
+fn d002_wall_clock(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if in_any(path, WALL_CLOCK_ALLOW) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if t.text == "SystemTime" {
+            out.push(finding(
+                path,
+                t.line,
+                "D002",
+                "SystemTime outside the wall-clock allowlist".to_string(),
+            ));
+        } else if seq(toks, i, &["Instant", ":", ":", "now"]) {
+            out.push(finding(
+                path,
+                t.line,
+                "D002",
+                "Instant::now() outside the wall-clock allowlist".to_string(),
+            ));
+        }
+    }
+}
+
+fn d003_float_metrics(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, MERGED_METRICS_PATHS) {
+        return;
+    }
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind == TokKind::Ident && toks[i].text == "struct" && i + 1 < toks.len() {
+            let name = &toks[i + 1].text;
+            let mergeable =
+                name.contains("Metrics") || name.contains("Snap") || name.contains("Hist");
+            // Find the struct body (skip a possible generics list).
+            let mut j = i + 2;
+            while j < toks.len() && toks[j].text != "{" && toks[j].text != ";" && toks[j].text != "(" {
+                j += 1;
+            }
+            if mergeable && j < toks.len() && toks[j].text == "{" {
+                let mut depth = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && depth > 0 {
+                    match toks[k].text.as_str() {
+                        "{" => depth += 1,
+                        "}" => depth -= 1,
+                        "f64" | "f32" if toks[k].kind == TokKind::Ident => {
+                            out.push(finding(
+                                path,
+                                toks[k].line,
+                                "D003",
+                                format!("{} field in mergeable-metrics struct `{name}`", toks[k].text),
+                            ));
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+}
+
+fn d004_literal_seed(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, SIM_PATHS) && !path.starts_with("nn/") {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "Rng" && seq(toks, i, &["Rng", ":", ":", "new", "("]) {
+            if let (Some(arg), Some(close)) = (toks.get(i + 5), toks.get(i + 6)) {
+                let literal = arg.kind == TokKind::Literal
+                    && arg.text.starts_with(|c: char| c.is_ascii_digit());
+                if literal && close.text == ")" {
+                    out.push(finding(
+                        path,
+                        t.line,
+                        "D004",
+                        format!("Rng::new({}) hard-codes a seed, bypassing mix64/fork", arg.text),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn d005_as_narrowing(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, COUNTER_PATHS) {
+        return;
+    }
+    const NARROW: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident && t.text == "as" {
+            if let Some(ty) = toks.get(i + 1) {
+                if ty.kind == TokKind::Ident && NARROW.contains(&ty.text.as_str()) {
+                    out.push(finding(
+                        path,
+                        t.line,
+                        "D005",
+                        format!("unchecked `as {}` narrowing", ty.text),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn d006_thread_fanout(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if in_any(path, THREAD_EXEMPT) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "thread"
+            && (seq(toks, i, &["thread", ":", ":", "spawn"])
+                || seq(toks, i, &["thread", ":", ":", "scope"])
+                || seq(toks, i, &["thread", ":", ":", "Builder"]))
+        {
+            out.push(finding(
+                path,
+                t.line,
+                "D006",
+                format!("cross-thread fan-out (thread::{})", toks[i + 3].text),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer;
+
+    fn scan_src(path: &str, src: &str) -> Vec<Finding> {
+        let lexed = lexer::lex(src);
+        let (toks, _) = lexer::strip_cfg_test(&lexed.toks);
+        scan(path, &toks)
+    }
+
+    #[test]
+    fn d001_fires_in_scope_only() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+        let hits = scan_src("platform/foo.rs", src);
+        assert_eq!(hits.iter().filter(|f| f.rule == "D001").count(), 3);
+        assert!(scan_src("cli/foo.rs", src).is_empty());
+        assert!(scan_src("util/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d001_ignores_fxhashmap() {
+        let src = "use crate::util::fxhash::FxHashMap;\nfn f() { let m: FxHashMap<u32, u32> = FxHashMap::default(); }";
+        assert!(scan_src("platform/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d002_allowlist() {
+        let src = "fn f() { let t = Instant::now(); let s = SystemTime::now(); }";
+        let hits = scan_src("simcore/clock.rs", src);
+        assert_eq!(hits.iter().filter(|f| f.rule == "D002").count(), 2);
+        assert!(scan_src("serve/engine.rs", src).is_empty());
+        assert!(scan_src("testkit/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d003_only_mergeable_structs() {
+        let src = "struct DayMetrics { cold: u64, rate: f64 }\nstruct Helper { x: f64 }";
+        let hits = scan_src("workload/macrotrace/replay.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "D003");
+        assert_eq!(hits[0].line, 1);
+        assert!(scan_src("experiments/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d004_literal_seed_only() {
+        let bad = "fn f() { let r = Rng::new(42); }";
+        let good = "fn f(seed: u64) { let r = Rng::new(seed); let q = Rng::new(mix64(seed, 3)); }";
+        assert_eq!(scan_src("workload/gen.rs", bad).len(), 1);
+        assert!(scan_src("workload/gen.rs", good).is_empty());
+    }
+
+    #[test]
+    fn d005_narrowing() {
+        let src = "fn f(x: u64) -> u32 { x as u32 }";
+        let hits = scan_src("metrics/mod.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "D005");
+        assert!(scan_src("simcore/wheel.rs", src).is_empty());
+        // `as u64` widening is fine.
+        assert!(scan_src("metrics/mod.rs", "fn f(x: u32) -> u64 { x as u64 }").is_empty());
+    }
+
+    #[test]
+    fn d006_thread_heuristic() {
+        let src = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }";
+        let hits = scan_src("experiments/harness.rs", src);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "D006");
+        assert!(scan_src("serve/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_items_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { let r = Rng::new(7); }\n}";
+        assert!(scan_src("platform/foo.rs", src).is_empty());
+    }
+}

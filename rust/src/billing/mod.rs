@@ -8,8 +8,7 @@
 //! the revenue case ("a way to monetize warmed containers that are
 //! otherwise sitting idle").
 
-use std::collections::HashMap;
-
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimDuration;
 
 /// Billable line items per app.
@@ -49,7 +48,10 @@ impl AppAccount {
 /// Platform-wide ledger.
 #[derive(Debug, Clone, Default)]
 pub struct Ledger {
-    accounts: HashMap<String, AppAccount>,
+    /// Fx (deterministic-order) map: [`Ledger::totals`] sums f64 line items
+    /// by iterating values, and float addition does not commute exactly —
+    /// a std HashMap here would make total rounding differ run-to-run.
+    accounts: FxHashMap<String, AppAccount>,
 }
 
 impl Ledger {

@@ -77,6 +77,10 @@ USAGE:
               # DIR defaults to 'artifacts'; --tiny writes a small smoke set
   repro trace <file.jsonl> [--config file.json]
   repro gen-trace <out.jsonl> [--functions N] [--horizon SECONDS] [--seed N]
+  repro lint [--root DIR] [--rules]
+              # simlint: the determinism static-analysis pass over the
+              # crate's own sources (D001..D006); nonzero exit on findings.
+              # --rules prints the rule catalog and exits.
   repro help
 ";
 
@@ -89,7 +93,7 @@ pub struct Opts {
 /// Flags that never take a value — without this list the generic parser
 /// would swallow a following positional as the flag's value
 /// (`gen-artifacts --tiny DIR` must keep DIR positional).
-const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad", "freshen-guard"];
+const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad", "freshen-guard", "rules"];
 
 pub fn parse_args(args: &[String]) -> Opts {
     let mut positional = Vec::new();
@@ -145,6 +149,7 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("gen-trace") => gen_trace(&opts),
         Some("azure-macro") => azure_macro_cmd(&opts),
         Some("gen-azure-trace") => gen_azure_trace(&opts),
+        Some("lint") => lint(&opts),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -534,6 +539,34 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
     let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
     azure_macro::run_multi(&cfg, &seeds, &runner)?.print();
     Ok(())
+}
+
+/// `repro lint` — run the simlint determinism pass over the crate sources.
+/// `--root DIR` lints a different tree (the self-clean CI gate uses the
+/// default, which resolves to this crate's `src/` at compile time).
+fn lint(opts: &Opts) -> Result<()> {
+    if opts.flag("rules") {
+        for r in crate::analysis::rules::CATALOG {
+            println!("{}  {}\n      fix: {}", r.id, r.summary, r.hint);
+        }
+        return Ok(());
+    }
+    let root = PathBuf::from(opts.str("root", concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+    let (findings, files) = crate::analysis::lint_tree(&root)
+        .with_context(|| format!("linting {}", root.display()))?;
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("simlint: {files} files clean ({})", root.display());
+        Ok(())
+    } else {
+        bail!(
+            "simlint: {} finding(s) in {files} files — fix or add an audited \
+             `// simlint: allow(rule, reason)`",
+            findings.len()
+        )
+    }
 }
 
 fn gen_azure_trace(opts: &Opts) -> Result<()> {

@@ -65,6 +65,7 @@ impl SweepRunner {
         let next = AtomicUsize::new(0);
         let cells: Vec<Mutex<Option<R>>> = points.iter().map(|_| Mutex::new(None)).collect();
         let workers = self.parallel.min(points.len());
+        // simlint: allow(D006, results land in position-indexed cells and are drained in grid order below)
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| loop {

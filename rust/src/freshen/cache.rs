@@ -11,8 +11,7 @@
 //! or the platform default. Entries carry the object version so staleness
 //! can also be decided by version comparison.
 
-use std::collections::HashMap;
-
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::{SimDuration, SimTime};
 
 /// One cached object.
@@ -56,7 +55,7 @@ impl CacheStats {
 /// Runtime-scoped prefetch cache.
 #[derive(Debug, Clone, Default)]
 pub struct FreshenCache {
-    entries: HashMap<(String, String), CachedObject>,
+    entries: FxHashMap<(String, String), CachedObject>,
     pub stats: CacheStats,
 }
 

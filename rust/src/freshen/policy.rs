@@ -11,9 +11,8 @@
 //! the numeric confidence threshold, a per-app rate limiter (abuse guard),
 //! and a feedback loop from observed prediction accuracy.
 
-use std::collections::HashMap;
-
 use crate::util::config::{FreshenConfig, ServiceCategory};
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimTime;
 
 /// Why a freshen request was (not) admitted.
@@ -92,8 +91,8 @@ pub struct FreshenGate {
     /// When false, the observed-accuracy feedback loop is bypassed
     /// (the "ungated" arm of the confidence ablation).
     pub accuracy_gating: bool,
-    buckets: HashMap<String, Bucket>,
-    accuracy: HashMap<String, AccuracyWindow>,
+    buckets: FxHashMap<String, Bucket>,
+    accuracy: FxHashMap<String, AccuracyWindow>,
     /// Counters by decision (reporting).
     pub admitted: u64,
     pub skipped: u64,
@@ -104,8 +103,8 @@ impl FreshenGate {
         FreshenGate {
             config,
             accuracy_gating: true,
-            buckets: HashMap::new(),
-            accuracy: HashMap::new(),
+            buckets: FxHashMap::default(),
+            accuracy: FxHashMap::default(),
             admitted: 0,
             skipped: 0,
         }

@@ -36,5 +36,6 @@ pub mod nn;
 pub mod runtime;
 pub mod serve;
 pub mod experiments;
+pub mod analysis;
 pub mod testkit;
 pub mod cli;

@@ -56,7 +56,7 @@ fn bucket_mid_us(idx: usize) -> f64 {
     }
     let exp = (idx - LINEAR) / SUB + 4;
     let mantissa = ((idx - LINEAR) % SUB) as f64;
-    let base = (2f64).powi(exp as i32);
+    let base = (2f64).powi(i32::try_from(exp).expect("bucket exponent fits i32"));
     let lo = base * (1.0 + mantissa / SUB as f64);
     lo + base / (2.0 * SUB as f64)
 }

@@ -8,8 +8,7 @@
 
 pub mod hist;
 
-use std::collections::HashMap;
-
+use crate::util::fxhash::FxHashMap;
 use crate::util::stats::Summary;
 use crate::util::time::{SimDuration, SimTime};
 
@@ -175,7 +174,7 @@ impl MetricsHub {
 
     /// Per-function latency table, sorted by function id.
     pub fn per_function(&self) -> Vec<(String, Summary)> {
-        let mut by_fn: HashMap<&str, Vec<SimDuration>> = HashMap::new();
+        let mut by_fn: FxHashMap<&str, Vec<SimDuration>> = FxHashMap::default();
         for r in &self.records {
             by_fn.entry(&r.function).or_default().push(r.latency());
         }

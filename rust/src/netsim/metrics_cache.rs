@@ -12,8 +12,7 @@
 //! ablations) can include them, demonstrating the residual gap freshen
 //! closes.
 
-use std::collections::HashMap;
-
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimTime;
 
 /// Destination key (host:port equivalent).
@@ -44,8 +43,8 @@ pub struct TcpMetricsCache {
     pub no_metrics_save: bool,
     /// Whether this host and its peers support TFO.
     pub tfo_enabled: bool,
-    metrics: HashMap<DestKey, DestMetrics>,
-    cookies: HashMap<DestKey, TfoCookie>,
+    metrics: FxHashMap<DestKey, DestMetrics>,
+    cookies: FxHashMap<DestKey, TfoCookie>,
 }
 
 impl TcpMetricsCache {

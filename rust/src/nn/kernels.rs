@@ -85,6 +85,7 @@ pub fn matmul_bias_act_threads(
         block_forward(x, 0, w, bias, relu, out.data_mut());
     } else {
         let rows_per = (m + threads - 1) / threads;
+        // simlint: allow(D006, each worker owns a disjoint row chunk of the output; no collection order exists)
         std::thread::scope(|scope| {
             for (ci, chunk) in out.data_mut().chunks_mut(rows_per * n).enumerate() {
                 scope.spawn(move || block_forward(x, ci * rows_per, w, bias, relu, chunk));

@@ -5,8 +5,7 @@
 //! object stored within the runtime may need to be retrieved from a
 //! datastore because a newer version is available", §2).
 
-use std::collections::HashMap;
-
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimTime;
 
 /// One stored object's metadata (we simulate payloads by size only).
@@ -20,7 +19,7 @@ pub struct StoredObject {
 /// A named object store.
 #[derive(Debug, Clone, Default)]
 pub struct ObjectStore {
-    objects: HashMap<String, StoredObject>,
+    objects: FxHashMap<String, StoredObject>,
     /// Operation counters (metrics / billing).
     pub gets: u64,
     pub puts: u64,

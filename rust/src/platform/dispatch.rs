@@ -128,6 +128,20 @@ pub struct LegacyOneShot {
     len: usize,
 }
 
+impl LegacyOneShot {
+    /// The cached `len` counter must always equal the per-function queue
+    /// totals — a divergence means a discipline method lost or double
+    /// counted a waiter.
+    #[inline]
+    fn debug_check_len(&self) {
+        debug_assert_eq!(
+            self.len,
+            self.queues.values().map(VecDeque::len).sum::<usize>(),
+            "legacy queue len counter diverged from its per-function queues"
+        );
+    }
+}
+
 impl QueueDiscipline for LegacyOneShot {
     fn name(&self) -> &'static str {
         "legacy"
@@ -136,11 +150,13 @@ impl QueueDiscipline for LegacyOneShot {
     fn enqueue(&mut self, w: Waiting) {
         self.queues.entry(w.function.clone()).or_default().push_back(w);
         self.len += 1;
+        self.debug_check_len();
     }
 
     fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
         let w = self.queues.get_mut(function).and_then(|q| q.pop_front())?;
         self.len -= 1;
+        self.debug_check_len();
         Some(w.inv)
     }
 
@@ -152,6 +168,7 @@ impl QueueDiscipline for LegacyOneShot {
             .map(|(k, _)| k.clone())?;
         let w = self.queues.get_mut(&key).and_then(|q| q.pop_front())?;
         self.len -= 1;
+        self.debug_check_len();
         Some(w.inv)
     }
 
@@ -190,6 +207,11 @@ impl FifoFair {
     fn insert_ordered(q: &mut VecDeque<Waiting>, w: Waiting) {
         let pos = q.partition_point(|e| e.inv < w.inv);
         q.insert(pos, w);
+        debug_assert!(
+            (pos == 0 || q[pos - 1].inv <= q[pos].inv)
+                && (pos + 1 >= q.len() || q[pos].inv <= q[pos + 1].inv),
+            "dispatch queue lost arrival (id) order around position {pos}"
+        );
     }
 }
 
@@ -293,6 +315,13 @@ impl QueueDiscipline for MemoryAware {
         if skip.is_empty() {
             let front = self.q.front()?;
             if now.since(front.enqueued_at) >= self.aging_bound {
+                // The deque is id-ordered, so the promoted front must be
+                // the globally most-senior waiter — promotion may never
+                // jump a younger entry over an older one.
+                debug_assert!(
+                    self.q.iter().all(|e| e.inv >= front.inv),
+                    "aged-head promotion picked a non-senior entry"
+                );
                 self.last_was_aged = true;
                 return self.q.pop_front().map(|w| w.inv);
             }

@@ -180,6 +180,10 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
 /// arrivals dispatch in their arrival event (zero wait); only retries of
 /// queued work observe `now` past the arrival stamp.
 fn note_queue_wait(world: &mut World, inv: InvocationId, now: SimTime) {
+    debug_assert!(
+        now >= world.invocations[inv].enqueued_at,
+        "invocation {inv} placed before its arrival stamp (queue wait would underflow)"
+    );
     let waited = now.since(world.invocations[inv].enqueued_at).micros();
     if world.invocations[inv].queued && waited > 0 {
         world.metrics.queue_wait_us = world.metrics.queue_wait_us.saturating_add(waited);
@@ -959,6 +963,14 @@ fn launch_freshen_on(
 /// default), stale runs keep the legacy keep-stepping semantics and
 /// every historical digest holds.
 fn abort_if_stale_freshen(world: &mut World, run: usize) -> bool {
+    // Incarnations only move forward (evict/reinit bump the counter): a
+    // slot observed at an OLDER incarnation than a run's launch stamp
+    // means the monotone guard itself is broken.
+    debug_assert!(
+        world.containers[world.freshen_runs[run].container].incarnation
+            >= world.freshen_runs[run].incarnation,
+        "container incarnation moved backwards under freshen run {run}"
+    );
     if !world.config.freshen_incarnation_guard {
         return false;
     }

@@ -64,8 +64,17 @@ impl Invoker {
         self.used_mb = self.used_mb.saturating_add(mb);
     }
 
-    /// Release `mb` back to the host (a container evicted).
+    /// Release `mb` back to the host (a container evicted). Releasing more
+    /// than is charged is always a caller bug (a double release, or a
+    /// charge/release pairing gone wrong): debug builds fail loudly; release
+    /// builds saturate to zero so accounting can never go negative.
     pub fn release(&mut self, mb: u64) {
+        debug_assert!(
+            mb <= self.used_mb,
+            "invoker {}: releasing {mb} MB with only {} MB charged (double release?)",
+            self.id,
+            self.used_mb
+        );
         self.used_mb = self.used_mb.saturating_sub(mb);
     }
 
@@ -91,13 +100,24 @@ mod tests {
         assert!(!inv.has_room(1));
         inv.release(256);
         assert!(inv.has_room(256));
-        // Releases never underflow.
-        inv.release(10_000);
+        // Exact charge/release pairing returns the host to empty.
+        inv.release(256);
         assert_eq!(inv.used_mb, 0);
         assert_eq!(inv.free_mb(), 512);
         // Feasibility is about capacity, not current occupancy.
         inv.charge(512);
         assert!(inv.feasible(512));
         assert!(!inv.feasible(513));
+    }
+
+    /// The no-negative-accounting invariant: over-releasing is a caller bug
+    /// and debug builds (the test profile) must refuse it loudly.
+    #[test]
+    #[should_panic(expected = "double release")]
+    #[cfg(debug_assertions)]
+    fn over_release_panics_in_debug() {
+        let mut inv = Invoker::new(0, 512);
+        inv.charge(256);
+        inv.release(10_000);
     }
 }

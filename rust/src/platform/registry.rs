@@ -4,13 +4,13 @@
 //! own them, explicit orchestration chains (Figure 1), and the freshen
 //! hooks registered (or inferred) per function.
 
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::freshen::hooks::FreshenHook;
 use crate::freshen::infer::infer_hook;
 use crate::freshen::policy::validate_hook;
 use crate::platform::function::{AppSpec, FunctionId, FunctionSpec};
+use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimDuration;
 
 /// Explicit chain: orchestration frameworks provide these (AWS Step
@@ -25,10 +25,10 @@ pub struct ChainSpec {
 /// The platform registry.
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
-    functions: HashMap<FunctionId, Rc<FunctionSpec>>,
-    apps: HashMap<String, AppSpec>,
+    functions: FxHashMap<FunctionId, Rc<FunctionSpec>>,
+    apps: FxHashMap<String, AppSpec>,
     chains: Vec<ChainSpec>,
-    hooks: HashMap<FunctionId, FreshenHook>,
+    hooks: FxHashMap<FunctionId, FreshenHook>,
 }
 
 impl Registry {

@@ -6,7 +6,6 @@
 //! need (`&world.endpoints`, `&mut world.rng`, `&mut world.containers[c]`)
 //! so network, container and predictor state can be touched in one event.
 
-use std::collections::HashMap;
 use std::rc::Rc;
 
 use crate::util::fxhash::FxHashMap;
@@ -109,7 +108,7 @@ pub struct World {
     /// Calibrated inference latency per model (simulator stand-in for the
     /// PJRT execution the serving engine performs for real; can be
     /// overwritten from measured artifact timings).
-    pub model_latencies: HashMap<String, SimDuration>,
+    pub model_latencies: FxHashMap<String, SimDuration>,
     /// Strict version checking for prefetched data (§3.2 version numbers).
     pub strict_versions: bool,
     /// Emit histogram-based predictions automatically after each completed
@@ -161,7 +160,7 @@ impl World {
             freshen_runs: Vec::new(),
             fr_waiters: FxHashMap::default(),
             pending_charges: Vec::new(),
-            model_latencies: HashMap::new(),
+            model_latencies: FxHashMap::default(),
             strict_versions: true,
             auto_hist_predict: true,
             config,
@@ -246,6 +245,7 @@ impl World {
             }
         };
         self.charge_container(cid, memory_mb, now);
+        self.debug_check_memory_accounting();
         Some(cid)
     }
 
@@ -256,6 +256,12 @@ impl World {
         if self.containers[cid].state != ContainerState::Evicted {
             let mb = self.containers[cid].charged_mb;
             let inv = self.containers[cid].invoker;
+            debug_assert!(
+                self.invokers[inv].used_mb >= mb as u64,
+                "evicting container {cid} would release {mb} MB from invoker {inv} \
+                 holding only {} MB (double release?)",
+                self.invokers[inv].used_mb
+            );
             self.invokers[inv].release(mb as u64);
             self.note_resident_delta(now, -(mb as i64));
             self.metrics.evictions += 1;
@@ -270,6 +276,7 @@ impl World {
             }
         }
         self.containers[cid].evict();
+        self.debug_check_memory_accounting();
     }
 
     /// Re-point a live container's memory charge at a different function
@@ -287,6 +294,7 @@ impl World {
         self.invokers[inv].charge(memory_mb as u64);
         self.containers[cid].charged_mb = memory_mb;
         self.note_resident_delta(now, memory_mb as i64 - old as i64);
+        self.debug_check_memory_accounting();
     }
 
     fn charge_container(&mut self, cid: ContainerId, memory_mb: u32, now: SimTime) {
@@ -312,6 +320,38 @@ impl World {
     /// reading `metrics.resident_mb_us` at the end of a run).
     pub fn seal_resident_accounting(&mut self, now: SimTime) {
         self.note_resident_delta(now, 0);
+    }
+
+    /// Debug-build cross-check of the memory-accounting invariant: the sum
+    /// of container charges on each host equals that invoker's `used_mb`,
+    /// and the grand total equals `resident_mb` — i.e. memory is never
+    /// double-charged, double-released, or driven negative. Containers keep
+    /// `charged_mb == 0` while evicted, so summing every slot is exact even
+    /// in the acquire-before-cold-start window. Runs after every charge /
+    /// release / recharge in debug builds (the tier-1 test profile); compiles
+    /// to nothing in release, keeping the replay hot path untouched.
+    #[inline]
+    pub fn debug_check_memory_accounting(&self) {
+        #[cfg(debug_assertions)]
+        {
+            let mut per_inv = vec![0u64; self.invokers.len()];
+            for c in &self.containers {
+                per_inv[c.invoker] += c.charged_mb as u64;
+            }
+            let mut total = 0u64;
+            for (inv, want) in self.invokers.iter().zip(&per_inv) {
+                debug_assert_eq!(
+                    inv.used_mb, *want,
+                    "invoker {} used_mb diverged from its containers' charges",
+                    inv.id
+                );
+                total += *want;
+            }
+            debug_assert_eq!(
+                self.resident_mb, total,
+                "resident_mb diverged from the per-invoker charge total"
+            );
+        }
     }
 
     /// Total warm containers (reporting).

@@ -6,9 +6,8 @@
 //! delay. Confidence starts near-certain for linear chains and is
 //! discounted by observed branching behaviour.
 
-use std::collections::HashMap;
-
 use crate::predict::{Prediction, PredictionSource};
+use crate::util::fxhash::FxHashMap;
 use crate::triggers::TriggerService;
 use crate::util::time::SimTime;
 
@@ -22,7 +21,7 @@ const BASE_CHAIN_CONFIDENCE: f64 = 0.9;
 #[derive(Debug, Clone, Default)]
 pub struct ChainPredictor {
     /// (from, to) -> (followed, total)
-    edges: HashMap<(String, String), (u64, u64)>,
+    edges: FxHashMap<(String, String), (u64, u64)>,
 }
 
 impl ChainPredictor {

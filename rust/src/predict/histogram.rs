@@ -7,9 +7,8 @@
 //! `last_arrival + modal_IAT`, with confidence proportional to how
 //! concentrated the histogram's mass is around the mode.
 
-use std::collections::HashMap;
-
 use crate::predict::{Prediction, PredictionSource};
+use crate::util::fxhash::FxHashMap;
 use crate::util::stats::Histogram;
 use crate::util::time::{SimDuration, SimTime};
 
@@ -36,7 +35,7 @@ impl FnHistory {
 /// The histogram predictor.
 #[derive(Debug, Clone, Default)]
 pub struct HistogramPredictor {
-    functions: HashMap<String, FnHistory>,
+    functions: FxHashMap<String, FnHistory>,
     /// Minimum samples before emitting predictions.
     pub min_samples: u64,
 }
@@ -44,7 +43,7 @@ pub struct HistogramPredictor {
 impl HistogramPredictor {
     pub fn new() -> HistogramPredictor {
         HistogramPredictor {
-            functions: HashMap::new(),
+            functions: FxHashMap::default(),
             min_samples: 4,
         }
     }

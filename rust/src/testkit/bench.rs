@@ -4,8 +4,15 @@
 //! Reports per-iteration wall time with warmup, mean, p50, and min —
 //! enough to drive the §Perf iteration loop and to print the paper-table
 //! regeneration timings alongside the tables themselves.
+//!
+//! [`Snapshot`] persists a bench run as JSON when `BENCH_SNAPSHOT=<path>`
+//! is set, so CI can commit `BENCH_*.json` performance baselines (the
+//! ROADMAP raw-replay-speed item) instead of scraping stdout.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// Timing result for one benchmark.
 #[derive(Debug, Clone)]
@@ -69,6 +76,80 @@ pub fn throughput(ops: u64, elapsed: Duration) -> f64 {
     ops as f64 / elapsed.as_secs_f64().max(1e-12)
 }
 
+/// Environment variable naming the snapshot output file. When unset,
+/// benches only print; when set, they also persist a [`Snapshot`].
+pub const SNAPSHOT_ENV: &str = "BENCH_SNAPSHOT";
+
+/// Schema tag stamped into every snapshot file, bumped on layout change.
+pub const SNAPSHOT_SCHEMA: &str = "freshen-bench-snapshot/1";
+
+/// Accumulates one bench binary's measurements and serializes them as a
+/// stable JSON document. Durations are integer nanoseconds so snapshots
+/// diff cleanly; derived rates keep their float precision.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    bench: String,
+    results: Vec<Json>,
+}
+
+impl Snapshot {
+    pub fn new(bench: &str) -> Snapshot {
+        Snapshot {
+            bench: bench.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Record a throughput measurement: `ops` operations in `elapsed`.
+    pub fn rate(&mut self, name: &str, ops: u64, elapsed: Duration) {
+        self.results.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("kind", Json::str("rate")),
+            ("ops", Json::num(ops as f64)),
+            ("elapsed_ns", Json::num(elapsed.as_nanos() as f64)),
+            ("per_sec", Json::num(throughput(ops, elapsed))),
+        ]));
+    }
+
+    /// Record a [`BenchResult`] distribution (iters, mean/p50/min/max).
+    pub fn stats(&mut self, r: &BenchResult) {
+        self.results.push(Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("kind", Json::str("stats")),
+            ("iters", Json::num(r.iters as f64)),
+            ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+            ("p50_ns", Json::num(r.p50.as_nanos() as f64)),
+            ("min_ns", Json::num(r.min.as_nanos() as f64)),
+            ("max_ns", Json::num(r.max.as_nanos() as f64)),
+        ]));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SNAPSHOT_SCHEMA)),
+            ("bench", Json::str(&self.bench)),
+            ("results", Json::Arr(self.results.clone())),
+        ])
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+
+    /// Persist to the file named by [`SNAPSHOT_ENV`], if set. Returns the
+    /// path written so the bench can mention it in its output.
+    pub fn write_if_requested(&self) -> std::io::Result<Option<PathBuf>> {
+        match std::env::var_os(SNAPSHOT_ENV) {
+            Some(p) => {
+                let path = PathBuf::from(p);
+                self.write_to(&path)?;
+                Ok(Some(path))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +173,48 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d >= Duration::ZERO);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let mut snap = Snapshot::new("unit");
+        snap.rate("replay", 2_000, Duration::from_millis(4));
+        snap.stats(&BenchResult {
+            name: "transfer".to_string(),
+            iters: 8,
+            mean: Duration::from_nanos(1_500),
+            p50: Duration::from_nanos(1_400),
+            min: Duration::from_nanos(1_000),
+            max: Duration::from_nanos(3_000),
+        });
+        let parsed = Json::parse(&snap.to_json().pretty()).expect("snapshot parses");
+        assert_eq!(parsed.str_or("schema", ""), SNAPSHOT_SCHEMA);
+        assert_eq!(parsed.str_or("bench", ""), "unit");
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].str_or("kind", ""), "rate");
+        assert_eq!(results[0].u64_or("ops", 0), 2_000);
+        assert_eq!(results[0].u64_or("elapsed_ns", 0), 4_000_000);
+        assert!((results[0].f64_or("per_sec", 0.0) - 500_000.0).abs() < 1e-6);
+        assert_eq!(results[1].str_or("kind", ""), "stats");
+        assert_eq!(results[1].u64_or("iters", 0), 8);
+        assert_eq!(results[1].u64_or("mean_ns", 0), 1_500);
+        assert_eq!(results[1].u64_or("max_ns", 0), 3_000);
+    }
+
+    #[test]
+    fn snapshot_writes_and_reparses_from_disk() {
+        let path = std::env::temp_dir().join("freshen-bench-snapshot-test.json");
+        let mut snap = Snapshot::new("disk");
+        snap.rate("x", 10, Duration::from_micros(5));
+        snap.write_to(&path).expect("snapshot written");
+        let text = std::fs::read_to_string(&path).expect("snapshot readable");
+        let parsed = Json::parse(&text).expect("snapshot parses");
+        assert_eq!(parsed.str_or("bench", ""), "disk");
+        assert_eq!(
+            parsed.get("results").unwrap().as_arr().unwrap()[0].u64_or("ops", 0),
+            10
+        );
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -62,6 +62,7 @@ fn sample_fn_count(rng: &mut Rng, median: f64, sigma: f64) -> u32 {
     } else {
         rng.pareto(median * 2.0, 1.5)
     };
+    // simlint: allow(D005, float-to-u32 casts saturate and the max/min pins the range anyway)
     x.round().max(1.0).min(1_000.0) as u32
 }
 

@@ -211,6 +211,7 @@ impl<R: BufRead> AzureTraceReader<R> {
             // cells (what `write_csv` emits) round-trip unchanged.
             Some(t) if !t.is_empty() => {
                 let mb = t.parse::<f64>().ok().filter(|m| *m >= 0.0 && m.is_finite())?;
+                // simlint: allow(D005, value is validated non-negative finite and clamped below u32::MAX)
                 mb.round().min(u32::MAX as f64) as u32
             }
             _ => DEFAULT_MEMORY_MB,

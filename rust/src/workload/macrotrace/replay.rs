@@ -596,7 +596,13 @@ struct DaySnap {
     queue_peak_depth: u64,
     queue_wait_max_us: u64,
     resident_mb_us: u64,
+    // The ledger accounts in f64 bytes; the per-day delta rounds AFTER
+    // subtracting (round-then-subtract would change pinned digests), so
+    // these two snapshot fields must stay floats. DaySnap is world-local
+    // scratch — it is never merged across shards, only differenced.
+    // simlint: allow(D003, snapshot holds the ledger's raw f64 bytes and is differenced then rounded)
     network_bytes: f64,
+    // simlint: allow(D003, snapshot holds the ledger's raw f64 bytes and is differenced then rounded)
     network_bytes_saved: f64,
     executed: u64,
 }

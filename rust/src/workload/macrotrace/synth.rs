@@ -85,7 +85,7 @@ fn sample_class(rng: &mut Rng, peak_rpm: f64) -> ArrivalClass {
         let period_min = *rng.choice(&[1u32, 5, 5, 15, 15, 30, 60]);
         ArrivalClass::Cron {
             period_min,
-            phase: rng.below(period_min as u64) as u32,
+            phase: u32::try_from(rng.below(period_min as u64)).expect("phase below period"),
         }
     } else if roll < 0.90 {
         ArrivalClass::Steady {
@@ -94,7 +94,7 @@ fn sample_class(rng: &mut Rng, peak_rpm: f64) -> ArrivalClass {
     } else {
         ArrivalClass::Hot {
             per_min: rng.pareto(5.0, 1.2).min(peak_rpm),
-            period_min: rng.range(10, 40) as u32,
+            period_min: u32::try_from(rng.range(10, 40)).expect("period fits u32"),
             duty: rng.uniform(0.2, 0.6),
         }
     }
@@ -107,6 +107,7 @@ fn poisson(rng: &mut Rng, lambda: f64) -> u32 {
         return 0;
     }
     if lambda > 30.0 {
+        // simlint: allow(D005, float-to-u32 casts saturate and the value is clamped non-negative)
         return rng.normal_with(lambda, lambda.sqrt()).round().max(0.0) as u32;
     }
     let l = (-lambda).exp();
@@ -123,20 +124,23 @@ fn poisson(rng: &mut Rng, lambda: f64) -> u32 {
 
 fn class_counts(class: ArrivalClass, minutes: usize, rng: &mut Rng) -> Vec<u32> {
     (0..minutes)
-        .map(|m| match class {
-            ArrivalClass::Rare { per_min } => poisson(rng, per_min),
-            ArrivalClass::Cron { period_min, phase } => {
-                u32::from((m as u32 + phase) % period_min == 0)
-            }
-            ArrivalClass::Steady { per_min } => poisson(rng, per_min),
-            ArrivalClass::Hot {
-                per_min,
-                period_min,
-                duty,
-            } => {
-                let pos = (m as u32 % period_min) as f64 / period_min as f64;
-                let rate = if pos < duty { per_min } else { per_min * 0.05 };
-                poisson(rng, rate)
+        .map(|m| {
+            let minute = u32::try_from(m).expect("minute index fits u32");
+            match class {
+                ArrivalClass::Rare { per_min } => poisson(rng, per_min),
+                ArrivalClass::Cron { period_min, phase } => {
+                    u32::from((minute + phase) % period_min == 0)
+                }
+                ArrivalClass::Steady { per_min } => poisson(rng, per_min),
+                ArrivalClass::Hot {
+                    per_min,
+                    period_min,
+                    duty,
+                } => {
+                    let pos = (minute % period_min) as f64 / period_min as f64;
+                    let rate = if pos < duty { per_min } else { per_min * 0.05 };
+                    poisson(rng, rate)
+                }
             }
         })
         .collect()
@@ -226,6 +230,7 @@ pub fn app_rows_for_day(cfg: &SynthTraceCfg, index: usize, day: usize) -> Vec<Tr
 }
 
 fn sample_memory(rng: &mut Rng) -> u32 {
+    // simlint: allow(D005, float-to-u32 casts saturate and the clamp pins the range anyway)
     (rng.lognormal((256.0f64).ln(), 0.6) as u32).clamp(64, 4096)
 }
 

@@ -1,0 +1,9 @@
+//! Fixture for D005: unchecked `as` narrowing on a counter.
+
+pub fn pack(count: u64) -> u32 {
+    count as u32
+}
+
+pub fn widen(count: u32) -> u64 {
+    count as u64
+}

@@ -1,0 +1,8 @@
+//! Fixture for S001: a directive missing its reason (and thus
+//! suppressing nothing).
+
+use std::collections::HashMap; // simlint: allow(D001)
+
+pub fn m() -> Option<HashMap<u8, u8>> {
+    None
+}

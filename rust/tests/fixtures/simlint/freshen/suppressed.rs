@@ -1,0 +1,6 @@
+//! Fixture for a justified, working suppression: lints clean.
+
+// simlint: allow(D001, fixture exercises the suppression path; never drained)
+use std::collections::HashMap;
+
+pub type PoolId = u64;

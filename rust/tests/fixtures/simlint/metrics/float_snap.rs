@@ -1,0 +1,10 @@
+//! Fixture for D003: float field in a mergeable-metrics struct.
+
+pub struct WindowMetrics {
+    pub cold: u64,
+    pub rate: f64,
+}
+
+pub struct Scratch {
+    pub tmp: f64,
+}

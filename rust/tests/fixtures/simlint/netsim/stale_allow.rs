@@ -1,0 +1,4 @@
+//! Fixture for S002: a suppression that matches nothing.
+
+// simlint: allow(D002, there is no clock here any more)
+pub fn quiet() {}

@@ -1,0 +1,7 @@
+//! Fixture for D001: std map in a determinism-sensitive path.
+
+use std::collections::HashMap;
+
+pub fn hot_pool() -> HashMap<u64, u64> {
+    HashMap::new()
+}

@@ -1,0 +1,7 @@
+//! Fixture for D006: completion-order thread fan-out.
+
+pub fn fan(jobs: Vec<u64>) {
+    for j in jobs {
+        std::thread::spawn(move || j + 1);
+    }
+}

@@ -1,0 +1,10 @@
+//! Fixture for D002: wall-clock reads outside the allowlist.
+
+pub fn stamp() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn epoch() -> bool {
+    std::time::SystemTime::now().elapsed().is_ok()
+}

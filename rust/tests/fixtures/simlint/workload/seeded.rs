@@ -1,0 +1,11 @@
+//! Fixture for D004: hard-coded literal seed bypassing mix64/fork.
+
+pub fn stream() -> u64 {
+    let mut rng = Rng::new(42);
+    rng.next_u64()
+}
+
+pub fn derived(seed: u64) -> u64 {
+    let mut rng = Rng::new(mix64(seed, 7));
+    rng.next_u64()
+}

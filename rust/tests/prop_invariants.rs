@@ -205,6 +205,10 @@ fn prop_platform_conserves_invocations() {
             });
         }
         sim.run(&mut w);
+        // The debug accounting cross-check (used_mb == Σ charged_mb per
+        // host, resident_mb == the grand total) must hold at quiescence —
+        // the world also re-checks it at every charge/release internally.
+        w.debug_check_memory_accounting();
         assert_eq!(w.metrics.count(), n, "all invocations completed");
         // Every record is coherent.
         for r in w.metrics.records() {
@@ -304,6 +308,7 @@ fn prop_conservation_across_queue_keepalive_and_accounting() {
                         keep_alive,
                         accounting
                     );
+                    w.debug_check_memory_accounting();
                     // Conservation: scheduled == completed + explicitly-
                     // dropped; nothing stranded, nothing double-dispatched.
                     assert_eq!(

@@ -1,0 +1,177 @@
+//! Integration tests for the `simlint` determinism pass (`repro lint`).
+//!
+//! Three layers: (1) the on-disk fixture corpus under
+//! `tests/fixtures/simlint/` — one dirty file per rule, arranged in scoped
+//! subdirectories so path scoping applies exactly as it does over
+//! `rust/src` — is linted via `lint_tree` and must produce the expected
+//! findings; (2) per-rule source fixtures via `lint_source` pin the scope
+//! boundaries and suppression semantics; (3) the self-clean gate: the
+//! crate's own sources lint to zero findings, which is the invariant CI
+//! enforces.
+
+use std::path::Path;
+
+use freshen_rs::analysis::{lint_source, lint_tree, rules};
+
+fn fixture_root() -> &'static Path {
+    Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/simlint"
+    ))
+}
+
+#[test]
+fn fixture_corpus_produces_expected_findings() {
+    let (findings, files) = lint_tree(fixture_root()).expect("fixture corpus lints");
+    assert_eq!(files, 9, "fixture corpus file count");
+
+    let count = |rule: &str| findings.iter().filter(|f| f.rule == rule).count();
+    assert_eq!(count("D001"), 5, "{findings:?}");
+    assert_eq!(count("D002"), 2, "{findings:?}");
+    assert_eq!(count("D003"), 1, "{findings:?}");
+    assert_eq!(count("D004"), 1, "{findings:?}");
+    assert_eq!(count("D005"), 1, "{findings:?}");
+    assert_eq!(count("D006"), 1, "{findings:?}");
+    assert_eq!(count("S001"), 1, "{findings:?}");
+    assert_eq!(count("S002"), 1, "{findings:?}");
+    assert_eq!(findings.len(), 13, "no unexpected findings");
+
+    // Findings carry root-relative `/`-separated paths and stable ordering.
+    assert!(findings.iter().all(|f| !f.path.contains('\\')));
+    let mut sorted = findings.iter().map(|f| (&f.path, f.line, f.rule)).collect::<Vec<_>>();
+    sorted.sort();
+    assert_eq!(
+        sorted,
+        findings.iter().map(|f| (&f.path, f.line, f.rule)).collect::<Vec<_>>()
+    );
+
+    // The clean fixture (a used, justified allow) contributes nothing.
+    assert!(findings.iter().all(|f| f.path != "freshen/suppressed.rs"));
+    // The malformed directive is reported AND fails to suppress.
+    assert!(findings
+        .iter()
+        .any(|f| f.path == "experiments/malformed.rs" && f.rule == "S001"));
+    assert!(findings
+        .iter()
+        .any(|f| f.path == "experiments/malformed.rs" && f.rule == "D001" && f.line == 4));
+}
+
+#[test]
+fn d001_scope_boundaries() {
+    let src = "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }";
+    assert_eq!(lint_source("platform/world.rs", src).len(), 2);
+    assert_eq!(lint_source("metrics/mod.rs", src).len(), 2);
+    assert!(lint_source("util/fxhash.rs", src).is_empty());
+    assert!(lint_source("cli/mod.rs", src).is_empty());
+    assert!(lint_source("analysis/rules.rs", src).is_empty());
+}
+
+#[test]
+fn d002_wall_clock_allowlist() {
+    let src = "fn f() { let t0 = Instant::now(); }";
+    assert_eq!(lint_source("netsim/tcp.rs", src).len(), 1);
+    assert!(lint_source("serve/engine.rs", src).is_empty());
+    assert!(lint_source("runtime/host.rs", src).is_empty());
+    assert!(lint_source("testkit/bench.rs", src).is_empty());
+}
+
+#[test]
+fn d003_only_flags_mergeable_struct_floats() {
+    let merge = "struct ShardMetrics { warm: u64, ratio: f64 }";
+    let scratch = "struct Planner { ratio: f64 }";
+    assert_eq!(lint_source("metrics/hist.rs", merge).len(), 1);
+    assert!(lint_source("metrics/hist.rs", scratch).is_empty());
+    // Out of the merged-metrics scope entirely.
+    assert!(lint_source("netsim/cc.rs", merge).is_empty());
+}
+
+#[test]
+fn d004_flags_literal_seeds_not_derived_ones() {
+    assert_eq!(
+        lint_source("predict/chain.rs", "fn f() { let r = Rng::new(0xBEEF); }").len(),
+        1
+    );
+    assert!(lint_source(
+        "predict/chain.rs",
+        "fn f(s: u64) { let r = Rng::new(mix64(s, 1)); let q = r.fork(2); }"
+    )
+    .is_empty());
+}
+
+#[test]
+fn d005_narrowing_casts_in_counter_paths() {
+    let src = "fn f(x: u64) -> u32 { x as u32 }";
+    assert_eq!(lint_source("workload/azure.rs", src).len(), 1);
+    assert!(lint_source("simcore/wheel.rs", src).is_empty());
+    assert!(lint_source("workload/azure.rs", "fn f(x: u32) -> u64 { x as u64 }").is_empty());
+}
+
+#[test]
+fn d006_thread_fanout_outside_exempt_paths() {
+    let src = "fn f() { std::thread::scope(|s| {}); }";
+    assert_eq!(lint_source("platform/world.rs", src).len(), 1);
+    assert!(lint_source("serve/pool.rs", src).is_empty());
+    assert!(lint_source("testkit/harness.rs", src).is_empty());
+    // Non-fan-out thread APIs never match.
+    assert!(lint_source(
+        "platform/world.rs",
+        "fn f() { let n = std::thread::available_parallelism(); }"
+    )
+    .is_empty());
+}
+
+#[test]
+fn suppression_covers_same_and_next_line_only() {
+    let hit_then_clean = "\
+// simlint: allow(D001, pinned digest exercises this map)
+use std::collections::HashMap;
+fn f() -> HashMap<u8, u8> { HashMap::new() }";
+    let out = lint_source("platform/x.rs", hit_then_clean);
+    // Line 2 suppressed; line 3 has two unsuppressed hits.
+    assert_eq!(out.iter().filter(|f| f.rule == "D001").count(), 2);
+    assert!(out.iter().all(|f| f.line == 3));
+    // No S002: the directive was used.
+    assert!(out.iter().all(|f| f.rule != "S002"));
+}
+
+#[test]
+fn multi_rule_directive_suppresses_both() {
+    let src = "// simlint: allow(D001 D004, replay pinned; seed is a doc example)\n\
+               fn f() { let m = HashMap::new(); let r = Rng::new(1); }";
+    assert!(lint_source("platform/x.rs", src).is_empty());
+}
+
+#[test]
+fn cfg_test_code_is_not_linted() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    fn t() { let r = Rng::new(7); let x = 3u64 as u32; }
+}";
+    assert!(lint_source("metrics/mod.rs", src).is_empty());
+}
+
+#[test]
+fn catalog_is_complete_and_ordered() {
+    let ids: Vec<&str> = rules::CATALOG.iter().map(|r| r.id).collect();
+    assert_eq!(
+        ids,
+        vec!["D001", "D002", "D003", "D004", "D005", "D006", "S001", "S002"]
+    );
+    for r in rules::CATALOG {
+        assert!(!r.summary.is_empty() && !r.hint.is_empty(), "{} lacks docs", r.id);
+    }
+}
+
+#[test]
+fn crate_sources_lint_clean() {
+    // The gate CI enforces via `repro lint`: the crate's own sources carry
+    // zero findings — every true positive is fixed or carries an audited
+    // allow, and no allow is stale.
+    let src_root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+    let (findings, files) = lint_tree(src_root).expect("crate sources lint");
+    assert!(files > 50, "walked the real tree, not a stub ({files} files)");
+    let rendered: Vec<String> = findings.iter().map(ToString::to_string).collect();
+    assert!(findings.is_empty(), "simlint findings:\n{}", rendered.join("\n"));
+}
