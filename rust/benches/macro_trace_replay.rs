@@ -88,6 +88,38 @@ fn main() {
          {serial_elapsed:?}  ({serial_rate:.0} inv/s)",
         serial.metrics.invocations, serial.metrics.sim_events
     );
+    // --- tracing overhead: spans + windows on, same serial replay ----
+    // obs/ is compiled in and disabled by default; this pins what
+    // enabling it costs (ring writes + per-function window updates) and
+    // re-checks that collection never moves the metrics digest.
+    let mut spans_cfg = cfg.clone();
+    spans_cfg.trace_spans = true;
+    spans_cfg.fn_windows = true;
+    let (traced, traced_elapsed) = time_once(|| {
+        replay_sharded(&src, 1, &spans_cfg, &SweepRunner::new(1)).expect("traced replay")
+    });
+    assert_eq!(
+        serial.metrics.digest(),
+        traced.metrics.digest(),
+        "span/window collection must be invisible to the metrics digest"
+    );
+    let traced_rate = throughput(traced.metrics.invocations, traced_elapsed);
+    snap.rate(
+        "replay/serial-spans-on",
+        traced.metrics.invocations,
+        traced_elapsed,
+    );
+    println!(
+        "replay traced   (1 shard,  spans+windows): {} invocations, {} spans \
+         ({} dropped), {} fn windows in {traced_elapsed:?}  ({traced_rate:.0} inv/s, \
+         x{:.2} vs spans-off)",
+        traced.metrics.invocations,
+        traced.metrics.spans.len(),
+        traced.metrics.spans.dropped,
+        traced.metrics.fn_windows.len(),
+        traced_rate / serial_rate.max(1e-9)
+    );
+
     for (shards, workers) in [(4usize, 4usize), (8, 8)] {
         let (sharded, elapsed) = time_once(|| {
             replay_sharded(&src, shards, &cfg, &SweepRunner::new(workers))

@@ -83,10 +83,13 @@ pub fn rule(id: &str) -> &'static RuleInfo {
 
 /// Paths where map-iteration order can reach simulator state, metrics, or
 /// digests. `util/` (the FxHashMap wrapper itself), `cli/`, `serve/`,
-/// `runtime/`, `nn/`, `analysis/`, and `testkit/` are exempt.
+/// `runtime/`, `nn/`, `analysis/`, and `testkit/` are exempt. `obs/` is
+/// deliberately IN scope: span streams and telemetry windows carry their
+/// own digests, so tracing must obey the same determinism contract as the
+/// metrics it observes.
 const SIM_PATHS: &[&str] = &[
     "platform/", "metrics/", "simcore/", "workload/", "predict/", "freshen/", "netsim/",
-    "billing/", "experiments/", "triggers/",
+    "billing/", "experiments/", "triggers/", "obs/",
 ];
 
 /// Paths allowed to read the wall clock: the real-time serving engine, the
@@ -94,7 +97,9 @@ const SIM_PATHS: &[&str] = &[
 const WALL_CLOCK_ALLOW: &[&str] = &["serve/", "runtime/", "testkit/"];
 
 /// Paths whose structs feed the shard-merged, digest-pinned reports.
-const MERGED_METRICS_PATHS: &[&str] = &["metrics/", "workload/macrotrace/"];
+/// `obs/` windows and span sinks merge across shards exactly like
+/// `MacroMetrics`, so they must stay integer-only too.
+const MERGED_METRICS_PATHS: &[&str] = &["metrics/", "workload/macrotrace/", "obs/"];
 
 /// Paths where `as` narrowing lands on counters that reach merged metrics.
 const COUNTER_PATHS: &[&str] = &["metrics/", "workload/", "billing/"];
@@ -317,6 +322,21 @@ mod tests {
         assert_eq!(hits.iter().filter(|f| f.rule == "D002").count(), 2);
         assert!(scan_src("serve/engine.rs", src).is_empty());
         assert!(scan_src("testkit/bench.rs", src).is_empty());
+        // obs/ is sim-time-only: wall-clock reads there are findings.
+        assert_eq!(
+            scan_src("obs/span.rs", src).iter().filter(|f| f.rule == "D002").count(),
+            2
+        );
+    }
+
+    #[test]
+    fn obs_is_inside_the_determinism_perimeter() {
+        let maps = "use std::collections::HashMap;";
+        assert_eq!(scan_src("obs/window.rs", maps).len(), 1);
+        let floats = "struct WindowHist { count: u64, rate: f64 }";
+        let hits = scan_src("obs/window.rs", floats);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].rule, "D003");
     }
 
     #[test]

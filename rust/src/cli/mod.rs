@@ -14,6 +14,8 @@
 //!   deterministic sharded replay of a real or synthesized trace.
 //! - `gen-azure-trace <out.csv>` — write a synthetic Azure-2019-schema
 //!   trace CSV for offline macro runs.
+//! - `spans <file>` — summarize a span log written by `--span-log`
+//!   (either format): top queue waits, cold streaks, wasted freshens.
 //!
 //! No `clap` offline; this is a small hand-rolled parser with `--key value`
 //! options.
@@ -62,6 +64,18 @@ USAGE:
                     #   predictor state carried across day boundaries
                     [--invokers N] [--invoker-mb MB]  # cluster sizing
                     [--apps N] [--minutes N] [--trace-seed N]  # synth knobs
+                    [--span-log FILE]         # export lifecycle spans (obs/):
+                    #   deterministic sim-time spans, byte-identical across
+                    #   the same shard/parallel grid as the metrics digest
+                    [--span-format jsonl|chrome]  # JSONL (default) or
+                    #   Chrome/Perfetto trace_event JSON
+                    [--span-filter SUBSTR]    # only functions whose name
+                    #   contains SUBSTR (shared pools: 'app/function')
+                    [--span-cap N]            # per-world span ring capacity
+                    [--fn-windows]            # rolling per-function telemetry
+                    #   windows + per-cell top-function table
+                    [--queue-aging-bound SECONDS]  # memaware queue
+                    #   anti-starvation aging bound (default 30)
                     # platform-scale Azure-trace macro benchmark; merged
                     # metrics are byte-identical for ANY --shards x
                     # --parallel combination (per-app pool), and for any
@@ -76,6 +90,11 @@ USAGE:
               [--classes N] [--batches 1,4,8,16] [--seed N]
               # DIR defaults to 'artifacts'; --tiny writes a small smoke set
   repro trace <file.jsonl> [--config file.json]
+              [--span-log FILE] [--span-format jsonl|chrome]
+              [--span-filter SUBSTR] [--span-cap N]
+  repro spans <file>
+              # summarize a span log written by --span-log (either
+              # format): top queue waits, cold streaks, wasted freshens
   repro gen-trace <out.jsonl> [--functions N] [--horizon SECONDS] [--seed N]
   repro lint [--root DIR] [--rules]
               # simlint: the determinism static-analysis pass over the
@@ -93,7 +112,8 @@ pub struct Opts {
 /// Flags that never take a value — without this list the generic parser
 /// would swallow a following positional as the flag's value
 /// (`gen-artifacts --tiny DIR` must keep DIR positional).
-const BOOL_FLAGS: &[&str] = &["no-freshen", "tiny", "no-pad", "freshen-guard", "rules"];
+const BOOL_FLAGS: &[&str] =
+    &["no-freshen", "tiny", "no-pad", "freshen-guard", "rules", "fn-windows"];
 
 pub fn parse_args(args: &[String]) -> Opts {
     let mut positional = Vec::new();
@@ -149,6 +169,7 @@ pub fn run(args: &[String]) -> Result<()> {
         Some("gen-trace") => gen_trace(&opts),
         Some("azure-macro") => azure_macro_cmd(&opts),
         Some("gen-azure-trace") => gen_azure_trace(&opts),
+        Some("spans") => spans(&opts),
         Some("lint") => lint(&opts),
         Some("help") | None => {
             print!("{USAGE}");
@@ -368,6 +389,12 @@ fn trace(opts: &Opts) -> Result<()> {
         None => Config::default(),
     };
     let mut world = World::new(config);
+    if opts.flags.contains_key("span-log") {
+        world.obs = crate::obs::Tracer::enabled(
+            opts.u64("span-cap", crate::obs::DEFAULT_SPAN_CAP as u64) as usize,
+            opts.flags.get("span-filter").cloned(),
+        );
+    }
     // Traced functions are deployed as paper-λs against a default store.
     let mut ep = crate::platform::endpoint::Endpoint::new(
         "store",
@@ -420,6 +447,20 @@ fn trace(opts: &Opts) -> Result<()> {
         world.metrics.cold_starts,
         100.0 * world.metrics.freshen_hit_rate()
     );
+    if let Some(out) = opts.flags.get("span-log") {
+        let fmt = span_format(opts)?;
+        let (events, dropped) = world.obs.drain();
+        let mut sink = crate::obs::SpanSink::default();
+        sink.push_group("trace".to_string(), events, dropped);
+        let text = crate::obs::export::export(&[("trace".to_string(), &sink)], fmt);
+        std::fs::write(out, text).with_context(|| format!("writing {out}"))?;
+        println!(
+            "wrote {} spans to {out} [{}] ({} dropped)",
+            sink.len(),
+            fmt.as_str(),
+            sink.dropped
+        );
+    }
     Ok(())
 }
 
@@ -512,6 +553,15 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
         }
     }
     cfg.freshen_guard = opts.flag("freshen-guard");
+    // Span tracing is enabled exactly when an export path is given — the
+    // tracer stays disabled (and stdout/digests byte-identical) otherwise.
+    cfg.trace_spans = opts.flags.contains_key("span-log");
+    cfg.span_cap = opts.u64("span-cap", cfg.span_cap as u64) as usize;
+    cfg.span_filter = opts.flags.get("span-filter").cloned();
+    cfg.fn_windows = opts.flag("fn-windows");
+    if let Some(secs) = opts.flags.get("queue-aging-bound") {
+        cfg.queue_aging_bound = Some(secs.parse().context("--queue-aging-bound")?);
+    }
     if let Some(n) = opts.flags.get("invokers") {
         cfg.invokers = Some(n.parse().context("--invokers")?);
     }
@@ -537,7 +587,40 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
         None => vec![opts.u64("seed", 2020)],
     };
     let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
-    azure_macro::run_multi(&cfg, &seeds, &runner)?.print();
+    let result = azure_macro::run_multi(&cfg, &seeds, &runner)?;
+    result.print();
+    if let Some(path) = opts.flags.get("span-log") {
+        let fmt = span_format(opts)?;
+        let text = crate::obs::export::export(&result.span_rows(), fmt);
+        std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+        let n: usize = result.rows.iter().map(|r| r.metrics.spans.len()).sum();
+        let dropped: u64 = result.rows.iter().map(|r| r.metrics.spans.dropped).sum();
+        println!(
+            "wrote {n} spans across {} cells to {path} [{}] ({dropped} dropped)",
+            result.rows.len(),
+            fmt.as_str()
+        );
+        println!("span digest:\n{}", result.span_digest());
+    }
+    Ok(())
+}
+
+/// Parse `--span-format` (default `jsonl`).
+fn span_format(opts: &Opts) -> Result<crate::obs::SpanFormat> {
+    let s = opts.str("span-format", "jsonl");
+    crate::obs::SpanFormat::parse(&s)
+        .with_context(|| format!("unknown span format '{s}' (use jsonl|chrome)"))
+}
+
+/// `repro spans <file>` — summarize a span log written by `--span-log`
+/// (JSONL or Chrome trace_event format, autodetected).
+fn spans(opts: &Opts) -> Result<()> {
+    let path = opts.positional.get(1).context("span log file required")?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let summary = crate::obs::summarize(&text)
+        .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    print!("{summary}");
     Ok(())
 }
 
@@ -791,6 +874,85 @@ mod tests {
             "2".into(),
         ];
         assert!(run(&csv_days).is_err(), "--days on a CSV source errors");
+    }
+
+    #[test]
+    fn azure_macro_span_log_windows_and_aging_bound() {
+        let dir = std::env::temp_dir().join("freshen-cli-span-log");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let log = dir.join("spans.jsonl").to_str().unwrap().to_string();
+        let run_args: Vec<String> = vec![
+            "azure-macro".into(),
+            "--apps".into(),
+            "10".into(),
+            "--minutes".into(),
+            "6".into(),
+            "--shards".into(),
+            "2".into(),
+            "--warmup-min".into(),
+            "2".into(),
+            "--variants".into(),
+            "baseline".into(),
+            "--queue".into(),
+            "memaware".into(),
+            "--queue-aging-bound".into(),
+            "15".into(),
+            "--fn-windows".into(),
+            "--span-log".into(),
+            log.clone(),
+        ];
+        assert!(run(&run_args).is_ok(), "span-logging azure-macro failed");
+        let text = std::fs::read_to_string(&log).expect("span log written");
+        assert!(!text.is_empty(), "span log has content");
+        // Every line is one JSON span record.
+        for line in text.lines() {
+            assert!(Json::parse(line).is_ok(), "bad JSONL line: {line}");
+        }
+        // The summarizer reads the file back.
+        let spans_args: Vec<String> = vec!["spans".into(), log.clone()];
+        assert!(run(&spans_args).is_ok(), "repro spans failed");
+        // Chrome export on the same run parses as one JSON document.
+        let chrome = dir.join("spans.json").to_str().unwrap().to_string();
+        let mut chrome_args = run_args.clone();
+        let n = chrome_args.len();
+        chrome_args[n - 1] = chrome.clone();
+        chrome_args.push("--span-format".into());
+        chrome_args.push("chrome".into());
+        assert!(run(&chrome_args).is_ok(), "chrome span export failed");
+        let doc = Json::parse(&std::fs::read_to_string(&chrome).unwrap())
+            .expect("chrome export parses");
+        assert!(doc.get("traceEvents").is_some());
+        assert!(run(&vec!["spans".into(), chrome]).is_ok(), "spans on chrome format");
+        // Bad format errors.
+        let mut bad = run_args;
+        bad.push("--span-format".into());
+        bad.push("bogus".into());
+        assert!(run(&bad).is_err(), "unknown span format must error");
+    }
+
+    #[test]
+    fn trace_cmd_exports_spans() {
+        let dir = std::env::temp_dir().join("freshen-cli-trace-spans");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace = dir.join("t.jsonl").to_str().unwrap().to_string();
+        let log = dir.join("spans.jsonl").to_str().unwrap().to_string();
+        let gen: Vec<String> = vec![
+            "gen-trace".into(),
+            trace.clone(),
+            "--functions".into(),
+            "3".into(),
+            "--horizon".into(),
+            "120".into(),
+        ];
+        assert!(run(&gen).is_ok(), "gen-trace failed");
+        let replay: Vec<String> =
+            vec!["trace".into(), trace, "--span-log".into(), log.clone()];
+        assert!(run(&replay).is_ok(), "trace --span-log failed");
+        let text = std::fs::read_to_string(&log).expect("span log written");
+        assert!(text.lines().count() > 0, "trace run recorded spans");
+        assert!(run(&vec!["spans".into(), log]).is_ok(), "spans summary failed");
     }
 
     #[test]

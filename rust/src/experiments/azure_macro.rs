@@ -135,6 +135,22 @@ pub struct AzureMacroCfg {
     /// Cluster sizing overrides for the replay worlds.
     pub invokers: Option<usize>,
     pub invoker_memory_mb: Option<u64>,
+    /// Record lifecycle spans (`obs::Tracer`) in every replay world.
+    /// Off by default: the tracer stays compiled-in but disabled, and
+    /// stdout/digests are byte-identical to a spans-off run.
+    pub trace_spans: bool,
+    /// Substring filter on function names for recorded spans (shared
+    /// pools qualify names `app/function`, so an app name selects a
+    /// whole tenant).
+    pub span_filter: Option<String>,
+    /// Per-world span ring capacity (oldest events drop beyond it).
+    pub span_cap: usize,
+    /// Collect rolling per-function telemetry windows
+    /// (`obs::WindowSet`) and print the per-function table.
+    pub fn_windows: bool,
+    /// Override the `MemoryAware` queue anti-starvation aging bound,
+    /// seconds (`Config::queue_aging_bound`; default 30 s).
+    pub queue_aging_bound: Option<u64>,
 }
 
 impl AzureMacroCfg {
@@ -151,6 +167,11 @@ impl AzureMacroCfg {
             days: 1,
             invokers: None,
             invoker_memory_mb: None,
+            trace_spans: false,
+            span_filter: None,
+            span_cap: crate::obs::DEFAULT_SPAN_CAP,
+            fn_windows: false,
+            queue_aging_bound: None,
         }
     }
 
@@ -179,6 +200,13 @@ impl AzureMacroCfg {
             // the contention the mode exists to model.
             r.base.memory_accounting = MemoryAccounting::FunctionMb;
         }
+        if let Some(secs) = self.queue_aging_bound {
+            r.base.queue_aging_bound = crate::util::time::SimDuration::from_secs(secs);
+        }
+        r.trace_spans = self.trace_spans;
+        r.span_cap = self.span_cap;
+        r.span_filter = self.span_filter.clone();
+        r.fn_windows = self.fn_windows;
         r
     }
 
@@ -241,6 +269,9 @@ pub struct AzureMacro {
     /// Whether the incarnation guard ran (gates the queue table even on a
     /// single-discipline grid, so the stale-abort counter is visible).
     guard: bool,
+    /// Whether per-function windows were collected (gates their table, so
+    /// default stdout stays byte-identical).
+    windows: bool,
 }
 
 /// One shard worker's output: per-cell, per-day metrics (seeds merged
@@ -395,6 +426,7 @@ pub fn run_multi(
         skipped_rows,
         contended: cfg.contended(),
         guard: cfg.freshen_guard,
+        windows: cfg.fn_windows,
     })
 }
 
@@ -428,6 +460,29 @@ impl AzureMacro {
             }
         }
         lines.join("\n")
+    }
+
+    /// Per-cell span streams for export: `(fully-qualified cell label,
+    /// sink)` in row order — what `--span-log` writes through
+    /// [`crate::obs::export::export`].
+    pub fn span_rows(&self) -> Vec<(String, &crate::obs::SpanSink)> {
+        self.rows
+            .iter()
+            .map(|r| (r.label(true, true), &r.metrics.spans))
+            .collect()
+    }
+
+    /// Canonical fingerprint of the recorded span streams, one line per
+    /// cell — what the trace-determinism tests compare across `--shards`
+    /// × `--parallel` grids. Deliberately separate from [`digest`]
+    /// (`AzureMacro::digest`), which stays byte-identical whether
+    /// tracing is on or off.
+    pub fn span_digest(&self) -> String {
+        self.rows
+            .iter()
+            .map(|r| format!("{}: {}", r.label(true, true), r.metrics.span_digest()))
+            .collect::<Vec<String>>()
+            .join("\n")
     }
 
     pub fn print(&self) {
@@ -543,6 +598,56 @@ impl AzureMacro {
                 ],
                 &rows,
             );
+        }
+        if self.windows {
+            // Opt-in per-function telemetry windows (`--fn-windows`):
+            // one table per cell, top functions by invocation volume.
+            // All columns are integer-derived (obs/window.rs holds no
+            // floats), so the table merges identically across shards.
+            for r in &self.rows {
+                let w = &r.metrics.fn_windows;
+                if w.is_empty() {
+                    continue;
+                }
+                println!(
+                    "\n{} per-function windows ({} functions, {}s windows):",
+                    r.label(with_policy, with_queue),
+                    w.len(),
+                    w.window_us / 1_000_000
+                );
+                let rows: Vec<Vec<String>> = w
+                    .top_by_invocations(20)
+                    .into_iter()
+                    .map(|(f, fw)| {
+                        let pm = fw.cold_per_mille();
+                        vec![
+                            f.to_string(),
+                            fw.invocations.to_string(),
+                            format!("{}.{}%", pm / 10, pm % 10),
+                            fw.queue_wait.quantile_us(50).to_string(),
+                            fw.queue_wait.quantile_us(99).to_string(),
+                            fw.iat_drift_us().to_string(),
+                            fw.wasted_freshens.to_string(),
+                            fw.stale_aborts.to_string(),
+                            fw.peak_window_invocations.to_string(),
+                        ]
+                    })
+                    .collect();
+                print_table(
+                    &[
+                        "function",
+                        "inv",
+                        "cold",
+                        "qw p50 µs",
+                        "qw p99 µs",
+                        "iat drift µs",
+                        "wasted",
+                        "stale",
+                        "peak/win",
+                    ],
+                    &rows,
+                );
+            }
         }
         if self.days > 1 {
             for r in &self.rows {

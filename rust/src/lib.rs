@@ -32,6 +32,7 @@ pub mod triggers;
 pub mod workload;
 pub mod billing;
 pub mod metrics;
+pub mod obs;
 pub mod nn;
 pub mod runtime;
 pub mod serve;

@@ -100,6 +100,10 @@ pub struct MetricsHub {
     /// their memory charge (queueing them would strand them forever).
     /// Conservation: scheduled == completed + dropped.
     pub dropped_infeasible: u64,
+    /// Opt-in rolling per-function telemetry windows (`obs/window.rs`):
+    /// disabled by default so the hot path pays one bool test; replays
+    /// turn it on via `ReplayCfg::fn_windows` / `--fn-windows`.
+    pub windows: crate::obs::WindowSet,
 }
 
 impl MetricsHub {

@@ -1,0 +1,407 @@
+//! Span-stream exporters and the `repro spans` summarizer.
+//!
+//! Two formats, both built on `util::json` (no serde in the offline
+//! vendor set):
+//!
+//! - **JSONL**: one object per span, in canonical (row, group, record)
+//!   order — greppable, diffable, and byte-stable across reruns.
+//! - **Chrome `trace_event` JSON**: a `{"traceEvents": [...]}` object of
+//!   `ph:"X"` complete events loadable in Perfetto / `chrome://tracing`.
+//!   `pid` is the row (experiment cell) index, `tid` indexes the
+//!   function within its row (name-sorted), and events are globally
+//!   sorted by timestamp so `ts` is monotone non-decreasing.
+//!
+//! Timestamps are sim-time microseconds straight off the spans — the
+//! `trace_event` µs unit, no conversion.
+
+use std::collections::BTreeMap;
+
+use super::span::{SpanEvent, SpanKind, SpanSink};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanFormat {
+    Jsonl,
+    Chrome,
+}
+
+impl SpanFormat {
+    pub fn parse(s: &str) -> Option<SpanFormat> {
+        match s {
+            "jsonl" => Some(SpanFormat::Jsonl),
+            "chrome" => Some(SpanFormat::Chrome),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanFormat::Jsonl => "jsonl",
+            SpanFormat::Chrome => "chrome",
+        }
+    }
+}
+
+/// Render `rows` — one `(label, sink)` per experiment cell — in `format`.
+pub fn export(rows: &[(String, &SpanSink)], format: SpanFormat) -> String {
+    match format {
+        SpanFormat::Jsonl => to_jsonl(rows),
+        SpanFormat::Chrome => to_chrome(rows),
+    }
+}
+
+/// One JSON object per line per span, canonical order, trailing newline.
+pub fn to_jsonl(rows: &[(String, &SpanSink)]) -> String {
+    let mut out = String::new();
+    for (cell, sink) in rows {
+        for (group, events) in sink.groups() {
+            for e in events {
+                let line = Json::obj(vec![
+                    ("cell", Json::str(cell)),
+                    ("group", Json::str(group)),
+                    ("kind", Json::str(e.kind.as_str())),
+                    ("fn", Json::str(&e.function)),
+                    ("inv", Json::num(e.inv as f64)),
+                    ("ts", Json::num(e.start_us as f64)),
+                    ("dur", Json::num(e.dur_us as f64)),
+                    ("a", Json::num(e.a as f64)),
+                    ("b", Json::num(e.b as f64)),
+                ]);
+                out.push_str(&line.to_string());
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// Chrome/Perfetto `trace_event` JSON: `ph:"X"` complete events sorted
+/// by `(ts, pid, tid, ...)`, preceded by `ph:"M"` process/thread name
+/// metadata so rows read as cells and tracks as functions.
+pub fn to_chrome(rows: &[(String, &SpanSink)]) -> String {
+    let mut events: Vec<Json> = Vec::new();
+    // (sort key, event) for the timed slices; metadata goes first as-is.
+    let mut slices: Vec<((u64, usize, u64, u64, u64), Json)> = Vec::new();
+    for (pid, (cell, sink)) in rows.iter().enumerate() {
+        // Name-sorted function → tid within this row.
+        let mut tids: BTreeMap<&str, u64> = BTreeMap::new();
+        for (_, evs) in sink.groups() {
+            for e in evs {
+                let next = tids.len() as u64;
+                tids.entry(e.function.as_str()).or_insert(next);
+            }
+        }
+        // BTreeMap iteration is name-sorted but insertion above was
+        // record-ordered; renumber in sorted order for stable tids.
+        for (i, (_, tid)) in tids.iter_mut().enumerate() {
+            *tid = i as u64;
+        }
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("args", Json::obj(vec![("name", Json::str(cell))])),
+        ]));
+        for (name, tid) in &tids {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(*tid as f64)),
+                ("args", Json::obj(vec![("name", Json::str(name))])),
+            ]));
+        }
+        for (group, evs) in sink.groups() {
+            for e in evs {
+                let tid = tids[e.function.as_str()];
+                let slice = Json::obj(vec![
+                    ("name", Json::str(e.kind.as_str())),
+                    ("cat", Json::str(group)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.start_us as f64)),
+                    ("dur", Json::num(e.dur_us as f64)),
+                    ("pid", Json::num(pid as f64)),
+                    ("tid", Json::num(tid as f64)),
+                    (
+                        "args",
+                        Json::obj(vec![
+                            ("fn", Json::str(&e.function)),
+                            ("inv", Json::num(e.inv as f64)),
+                            ("a", Json::num(e.a as f64)),
+                            ("b", Json::num(e.b as f64)),
+                        ]),
+                    ),
+                ]);
+                slices.push(((e.start_us, pid, tid, e.dur_us, e.inv), slice));
+            }
+        }
+    }
+    slices.sort_by(|a, b| a.0.cmp(&b.0));
+    events.extend(slices.into_iter().map(|(_, j)| j));
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+    .to_string()
+}
+
+/// A span record re-read from an export (either format).
+#[derive(Debug, Clone)]
+struct Rec {
+    kind: SpanKind,
+    function: String,
+    ts: u64,
+    dur: u64,
+}
+
+/// Parse an exported span log, autodetecting the format: a single JSON
+/// object with `traceEvents` is Chrome, anything else is JSONL.
+fn parse_export(text: &str) -> Result<Vec<Rec>, String> {
+    let trimmed = text.trim();
+    if trimmed.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut recs = Vec::new();
+    if trimmed.starts_with('{') {
+        let v = Json::parse(trimmed).map_err(|e| format!("chrome span log: {e}"))?;
+        let events = v
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or("chrome span log: missing traceEvents array")?;
+        for e in events {
+            if e.str_or("ph", "") != "X" {
+                continue; // metadata
+            }
+            let function = e
+                .get("args")
+                .map(|a| a.str_or("fn", ""))
+                .unwrap_or("")
+                .to_string();
+            if let Some(kind) = SpanKind::parse(e.str_or("name", "")) {
+                recs.push(Rec {
+                    kind,
+                    function,
+                    ts: e.u64_or("ts", 0),
+                    dur: e.u64_or("dur", 0),
+                });
+            }
+        }
+    } else {
+        for (i, line) in trimmed.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let v = Json::parse(line).map_err(|e| format!("jsonl line {}: {e}", i + 1))?;
+            let kind = SpanKind::parse(v.str_or("kind", ""))
+                .ok_or_else(|| format!("jsonl line {}: unknown span kind", i + 1))?;
+            recs.push(Rec {
+                kind,
+                function: v.str_or("fn", "").to_string(),
+                ts: v.u64_or("ts", 0),
+                dur: v.u64_or("dur", 0),
+            });
+        }
+    }
+    Ok(recs)
+}
+
+const TOP_N: usize = 10;
+
+/// Summarize an exported span log: top functions by total queue wait,
+/// longest cold-start streaks, and wasted-freshen counts. Deterministic
+/// (metric desc, name asc) — the `repro spans <file>` payload.
+pub fn summarize(text: &str) -> Result<String, String> {
+    let recs = parse_export(text)?;
+    let mut fns: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    // Per-function aggregates, all keyed through BTreeMap so iteration
+    // (and thus tie handling) is name-ordered.
+    let mut queue: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new(); // total, n, max
+    let mut wasted: BTreeMap<&str, u64> = BTreeMap::new();
+    let mut starts: BTreeMap<&str, Vec<(u64, bool)>> = BTreeMap::new(); // (ts, cold)
+    let mut total = 0u64;
+    for r in &recs {
+        fns.insert(&r.function);
+        total += 1;
+        match r.kind {
+            SpanKind::Queue => {
+                let q = queue.entry(&r.function).or_insert((0, 0, 0));
+                q.0 += r.dur;
+                q.1 += 1;
+                q.2 = q.2.max(r.dur);
+            }
+            SpanKind::FreshenWasted => {
+                *wasted.entry(&r.function).or_insert(0) += 1;
+            }
+            SpanKind::ColdStart => starts.entry(&r.function).or_default().push((r.ts, true)),
+            SpanKind::WarmStart | SpanKind::Reinit => {
+                starts.entry(&r.function).or_default().push((r.ts, false))
+            }
+            _ => {}
+        }
+    }
+    // Longest run of consecutive cold starts per function, by sim time.
+    let mut streaks: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new(); // streak, cold, warm
+    for (f, seq) in &mut starts {
+        seq.sort_by_key(|&(ts, _)| ts);
+        let (mut best, mut run, mut cold, mut warm) = (0u64, 0u64, 0u64, 0u64);
+        for &(_, is_cold) in seq.iter() {
+            if is_cold {
+                run += 1;
+                cold += 1;
+                best = best.max(run);
+            } else {
+                run = 0;
+                warm += 1;
+            }
+        }
+        streaks.insert(f, (best, cold, warm));
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "span summary: {total} spans, {} functions\n",
+        fns.len()
+    ));
+    let top = |m: &BTreeMap<&str, (u64, u64, u64)>| -> Vec<(String, (u64, u64, u64))> {
+        let mut rows: Vec<_> = m.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0).then(a.0.cmp(&b.0)));
+        rows.truncate(TOP_N);
+        rows
+    };
+    if !queue.is_empty() {
+        out.push_str("top queue wait (µs):\n");
+        for (f, (tot, n, max)) in top(&queue) {
+            out.push_str(&format!("  {f}: total={tot} n={n} max={max}\n"));
+        }
+    }
+    let streaked: BTreeMap<&str, (u64, u64, u64)> = streaks
+        .iter()
+        .filter(|(_, v)| v.0 > 0)
+        .map(|(k, v)| (*k, *v))
+        .collect();
+    if !streaked.is_empty() {
+        out.push_str("cold streaks (max consecutive cold starts):\n");
+        for (f, (streak, cold, warm)) in top(&streaked) {
+            out.push_str(&format!("  {f}: streak={streak} cold={cold} warm={warm}\n"));
+        }
+    }
+    if !wasted.is_empty() {
+        out.push_str("wasted freshens:\n");
+        let mut rows: Vec<_> = wasted.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        rows.truncate(TOP_N);
+        for (f, n) in rows {
+            out.push_str(&format!("  {f}: wasted={n}\n"));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink() -> SpanSink {
+        let ev = |kind: SpanKind, f: &str, ts: u64, dur: u64| SpanEvent {
+            kind,
+            function: f.to_string(),
+            inv: 1,
+            start_us: ts,
+            dur_us: dur,
+            a: 0,
+            b: 0,
+        };
+        let mut s = SpanSink::default();
+        s.push_group(
+            "app-a".to_string(),
+            vec![
+                ev(SpanKind::Arrival, "app-a/f", 100, 0),
+                ev(SpanKind::Queue, "app-a/f", 100, 40),
+                ev(SpanKind::ColdStart, "app-a/f", 140, 500),
+                ev(SpanKind::ColdStart, "app-a/f", 900, 500),
+                ev(SpanKind::WarmStart, "app-a/f", 2_000, 10),
+                ev(SpanKind::FreshenWasted, "app-a/f", 3_000, 0),
+            ],
+            0,
+        );
+        s.push_group(
+            "app-b".to_string(),
+            vec![
+                ev(SpanKind::Queue, "app-b/g", 50, 900),
+                ev(SpanKind::WarmStart, "app-b/g", 950, 10),
+            ],
+            0,
+        );
+        s
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_cover_every_span() {
+        let s = sink();
+        let rows = vec![("cell-0".to_string(), &s)];
+        let text = to_jsonl(&rows);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), s.len());
+        for line in lines {
+            let v = Json::parse(line).expect("valid json per line");
+            assert!(SpanKind::parse(v.str_or("kind", "")).is_some());
+            assert_eq!(v.str_or("cell", ""), "cell-0");
+        }
+        // Byte-stable across renders.
+        assert_eq!(text, to_jsonl(&rows));
+    }
+
+    #[test]
+    fn chrome_export_is_sorted_and_round_trips() {
+        let s = sink();
+        let rows = vec![("cell-0".to_string(), &s)];
+        let text = to_chrome(&rows);
+        let v = Json::parse(&text).expect("valid chrome json");
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let mut last = 0u64;
+        let mut slices = 0;
+        for e in events {
+            if e.str_or("ph", "") != "X" {
+                continue;
+            }
+            slices += 1;
+            let ts = e.get("ts").and_then(Json::as_u64).expect("non-negative ts");
+            assert!(e.get("dur").and_then(Json::as_u64).is_some(), "non-negative dur");
+            assert!(ts >= last, "ts monotone non-decreasing");
+            last = ts;
+        }
+        assert_eq!(slices, s.len());
+    }
+
+    #[test]
+    fn summarize_reads_both_formats_identically() {
+        let s = sink();
+        let rows = vec![("cell-0".to_string(), &s)];
+        let from_jsonl = summarize(&to_jsonl(&rows)).unwrap();
+        let from_chrome = summarize(&to_chrome(&rows)).unwrap();
+        assert_eq!(from_jsonl, from_chrome);
+        assert!(from_jsonl.contains("top queue wait"));
+        // app-b/g waited 900 µs > app-a/f's 40 µs: it ranks first.
+        let qpos = from_jsonl.find("app-b/g: total=900").unwrap();
+        assert!(qpos > from_jsonl.find("top queue wait").unwrap());
+        assert!(from_jsonl.contains("app-a/f: streak=2 cold=2 warm=1"));
+        assert!(from_jsonl.contains("app-a/f: wasted=1"));
+    }
+
+    #[test]
+    fn summarize_rejects_garbage_and_accepts_empty() {
+        assert!(summarize("not json").is_err());
+        assert!(summarize("{\"no\": \"traceEvents\"}").is_err());
+        let empty = summarize("").unwrap();
+        assert!(empty.contains("0 spans"));
+    }
+
+    #[test]
+    fn format_parse() {
+        assert_eq!(SpanFormat::parse("jsonl"), Some(SpanFormat::Jsonl));
+        assert_eq!(SpanFormat::parse("chrome"), Some(SpanFormat::Chrome));
+        assert_eq!(SpanFormat::parse("x"), None);
+        assert_eq!(SpanFormat::Chrome.as_str(), "chrome");
+    }
+}

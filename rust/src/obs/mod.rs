@@ -1,0 +1,29 @@
+//! Deterministic, sim-time-only observability: lifecycle spans, span
+//! exporters, and rolling per-function telemetry windows.
+//!
+//! Three pieces, all compiled in and all off by default so legacy
+//! digests and stdout stay byte-identical:
+//!
+//! - [`span`]: every invocation's causally-linked span tree (arrival →
+//!   queue → placement → cold/warm/re-init → exec → complete, plus
+//!   predictions, freshen runs, evictions, chain edges) recorded into a
+//!   bounded per-world [`Tracer`] ring and merged across shards by
+//!   [`SpanSink`] with the same any-`--shards × --parallel`
+//!   byte-identical contract as `MacroMetrics`.
+//! - [`export`]: JSONL and Chrome/Perfetto `trace_event` renderings
+//!   (`--span-log` / `--span-format`) plus the `repro spans` summarizer.
+//! - [`window`]: integer-only, mergeable per-function windows (cold
+//!   rate, queue-wait histogram, IAT drift vs the predictor, wasted and
+//!   stale freshens) — the feed for the ROADMAP's adaptive controller.
+//!
+//! This module is deliberately **inside** the simlint determinism
+//! perimeter: `obs/` is in the D001/D003 path sets and NOT in the D002
+//! wall-clock allowlist. Observability reads the simulated clock only.
+
+pub mod export;
+pub mod span;
+pub mod window;
+
+pub use export::{summarize, to_chrome, to_jsonl, SpanFormat};
+pub use span::{SpanEvent, SpanKind, SpanSink, Tracer, DEFAULT_SPAN_CAP};
+pub use window::{FnWindow, Pow2Hist, WindowSet};

@@ -1,0 +1,442 @@
+//! Lifecycle spans over sim time, and the per-world [`Tracer`] ring.
+//!
+//! Every span is an interval (possibly zero-length) on the simulated
+//! clock, stamped with the function it concerns and the invocation (or
+//! freshen-run / prediction / container) id that links it into its causal
+//! tree: an invocation's `Arrival → Queue → Placement → Cold/Warm →
+//! Exec → Complete` chain shares one `inv`, chain edges carry the parent
+//! invocation's id next to the successor function, and freshen spans
+//! carry the prediction id that admitted them. Times are integer
+//! microseconds of *sim* time only — wall clocks are banned here (simlint
+//! D002 deliberately does NOT allowlist `obs/`), so identical replays
+//! produce identical span streams, byte for byte.
+//!
+//! The [`Tracer`] is a bounded ring: when full it drops the OLDEST event
+//! and counts the drop, so a capped trace keeps the most recent window of
+//! a run and the digest still commits to what was lost. Disabled (the
+//! default) it is a single branch per call site — no allocation, no
+//! recording — which is what keeps spans compiled-in without perturbing
+//! legacy digests or stdout.
+
+use std::collections::VecDeque;
+
+use crate::util::time::{SimDuration, SimTime};
+
+/// Default ring capacity per world (events kept, newest-biased).
+pub const DEFAULT_SPAN_CAP: usize = 1 << 18;
+
+/// What a span marks in an invocation's (or freshen run's) lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Invocation submitted (`a`/`b` unused).
+    Arrival,
+    /// Time spent held by the dispatch queue (`dur` = wait).
+    Queue,
+    /// Container chosen (`a` = invoker/host id, `b` = memory charge MB).
+    Placement,
+    /// Cold start paid (`a` = container id, `b` = memory charge MB).
+    ColdStart,
+    /// Warm start (`a` = container id).
+    WarmStart,
+    /// Per-app sibling re-init — the discounted container incarnation
+    /// path (`a` = container id, `b` = new memory charge MB).
+    Reinit,
+    /// Function body execution (`a` = freshen hits, `b` = misses).
+    Exec,
+    /// Invocation finished (`a` = end-to-end latency µs, `b` = 1 if the
+    /// start was cold).
+    Complete,
+    /// Trigger-committed chain edge; `function` is the successor, `inv`
+    /// the PARENT invocation (`dur` = trigger commit + service delay).
+    ChainEdge,
+    /// Admitted prediction (`inv` = prediction id, `dur` = lead time to
+    /// the expected arrival, `a` = confidence in per-mille).
+    Prediction,
+    /// Completed freshen run (`inv` = prediction id or `u64::MAX` for
+    /// developer-invoked runs, `a` = container id).
+    FreshenRun,
+    /// A prediction resolved as a miss — its freshen was wasted work
+    /// (`inv` = prediction id).
+    FreshenWasted,
+    /// Freshen run aborted by the container-incarnation guard (`inv` =
+    /// run id, `a` = container id).
+    StaleAbort,
+    /// Idle/TTL eviction (`inv` = container id, `a` = released MB).
+    EvictionIdle,
+    /// Memory-pressure eviction (`inv` = container id, `a` = released
+    /// MB, `b` = 1 if it killed live warm state).
+    EvictionPressure,
+    /// Invocation dropped as infeasible (`a` = charge MB no host fits).
+    Drop,
+}
+
+impl SpanKind {
+    pub const ALL: [SpanKind; 16] = [
+        SpanKind::Arrival,
+        SpanKind::Queue,
+        SpanKind::Placement,
+        SpanKind::ColdStart,
+        SpanKind::WarmStart,
+        SpanKind::Reinit,
+        SpanKind::Exec,
+        SpanKind::Complete,
+        SpanKind::ChainEdge,
+        SpanKind::Prediction,
+        SpanKind::FreshenRun,
+        SpanKind::FreshenWasted,
+        SpanKind::StaleAbort,
+        SpanKind::EvictionIdle,
+        SpanKind::EvictionPressure,
+        SpanKind::Drop,
+    ];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Arrival => "arrival",
+            SpanKind::Queue => "queue",
+            SpanKind::Placement => "placement",
+            SpanKind::ColdStart => "cold_start",
+            SpanKind::WarmStart => "warm_start",
+            SpanKind::Reinit => "reinit",
+            SpanKind::Exec => "exec",
+            SpanKind::Complete => "complete",
+            SpanKind::ChainEdge => "chain_edge",
+            SpanKind::Prediction => "prediction",
+            SpanKind::FreshenRun => "freshen_run",
+            SpanKind::FreshenWasted => "freshen_wasted",
+            SpanKind::StaleAbort => "stale_abort",
+            SpanKind::EvictionIdle => "eviction_idle",
+            SpanKind::EvictionPressure => "eviction_pressure",
+            SpanKind::Drop => "drop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Stable numeric code (digest + Chrome export input).
+    pub fn code(&self) -> u64 {
+        SpanKind::ALL
+            .iter()
+            .position(|k| k == self)
+            .expect("every kind is in ALL") as u64
+    }
+}
+
+/// One recorded span. `String` (not `Rc<str>`) so merged span streams
+/// cross `SweepRunner`'s thread boundary (`Send`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub function: String,
+    /// Linking id: invocation, prediction, freshen-run or container id —
+    /// see each [`SpanKind`]'s docs.
+    pub inv: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific payloads (host, charge MB, confidence, ...).
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Bounded, deterministic span recorder carried by each `World`.
+#[derive(Debug, Clone, Default)]
+pub struct Tracer {
+    enabled: bool,
+    cap: usize,
+    filter: Option<String>,
+    buf: VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+impl Tracer {
+    /// The default: recording off, every call site a single branch.
+    pub fn disabled() -> Tracer {
+        Tracer::default()
+    }
+
+    /// Recording on, keeping at most `cap` events (oldest dropped first).
+    /// `filter` keeps only spans whose function name contains it (shared
+    /// pools qualify names as `app/function`, so an app name matches its
+    /// whole tenant).
+    pub fn enabled(cap: usize, filter: Option<String>) -> Tracer {
+        Tracer {
+            enabled: true,
+            cap: cap.max(1),
+            filter,
+            buf: VecDeque::new(),
+            dropped: 0,
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one span. A single branch when disabled; call sites pass
+    /// the `&str` they already hold, so the disabled path never
+    /// allocates.
+    #[inline]
+    pub fn record(
+        &mut self,
+        kind: SpanKind,
+        function: &str,
+        inv: u64,
+        start: SimTime,
+        dur: SimDuration,
+        a: u64,
+        b: u64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(f) = &self.filter {
+            if !function.contains(f.as_str()) {
+                return;
+            }
+        }
+        if self.buf.len() >= self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(SpanEvent {
+            kind,
+            function: function.to_string(),
+            inv,
+            start_us: start.micros(),
+            dur_us: dur.micros(),
+            a,
+            b,
+        });
+    }
+
+    /// Take the recorded events (in record order) and the drop count,
+    /// leaving the tracer empty but still enabled.
+    pub fn drain(&mut self) -> (Vec<SpanEvent>, u64) {
+        let events = std::mem::take(&mut self.buf).into_iter().collect();
+        let dropped = std::mem::take(&mut self.dropped);
+        (events, dropped)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Merged span streams, grouped by replay world — the app name in
+/// per-app pool mode, a `pool-<seed>` key per shard in shared mode —
+/// and kept in **sorted group order** at all times. Because each group
+/// is produced whole by exactly one world and the groups are re-sorted
+/// on every merge, the merged value is a canonical function of the set
+/// of worlds replayed: any partition of the apps across shards and any
+/// merge order yields the same bytes (the [`MacroMetrics`]
+/// shard-invariance contract, extended to ordered streams).
+///
+/// [`MacroMetrics`]: crate::workload::macrotrace::replay::MacroMetrics
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpanSink {
+    /// `(group key, events in record order)`, sorted by key.
+    groups: Vec<(String, Vec<SpanEvent>)>,
+    /// Ring-capacity drops summed across constituent worlds.
+    pub dropped: u64,
+}
+
+impl SpanSink {
+    /// Add one world's drained stream under `key`, keeping sort order.
+    /// Empty streams are skipped so sparse traces stay small (emptiness
+    /// is a deterministic property of the world, so skipping cannot
+    /// differ between partitions).
+    pub fn push_group(&mut self, key: String, events: Vec<SpanEvent>, dropped: u64) {
+        self.dropped += dropped;
+        if events.is_empty() {
+            return;
+        }
+        match self.groups.binary_search_by(|(k, _)| k.as_str().cmp(&key)) {
+            // A group key is produced by exactly one world; a duplicate
+            // means the same world was pushed twice — append in key
+            // order so even that stays deterministic.
+            Ok(i) => self.groups[i].1.extend(events),
+            Err(i) => self.groups.insert(i, (key, events)),
+        }
+    }
+
+    /// Commutative merge (key-sorted union; see type docs).
+    pub fn merge(&mut self, other: &SpanSink) {
+        self.dropped += other.dropped;
+        for (k, evs) in &other.groups {
+            match self.groups.binary_search_by(|(g, _)| g.as_str().cmp(k)) {
+                Ok(i) => self.groups[i].1.extend(evs.iter().cloned()),
+                Err(i) => self.groups.insert(i, (k.clone(), evs.clone())),
+            }
+        }
+    }
+
+    pub fn groups(&self) -> &[(String, Vec<SpanEvent>)] {
+        &self.groups
+    }
+
+    /// Total recorded events across groups.
+    pub fn len(&self) -> usize {
+        self.groups.iter().map(|(_, e)| e.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Stable u64 fingerprint of the merged stream: folds every event of
+    /// every group, in canonical (sorted-group, record) order, plus the
+    /// drop count. Same fold idiom as `LatencyHist::digest`.
+    pub fn digest(&self) -> u64 {
+        const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        let mut h = self.len() as u64;
+        let mut fold = |v: u64| {
+            h = (h.rotate_left(5) ^ v).wrapping_mul(SEED);
+        };
+        for (key, events) in &self.groups {
+            fold(str_hash(key));
+            for e in events {
+                fold(e.kind.code());
+                fold(str_hash(&e.function));
+                fold(e.inv);
+                fold(e.start_us);
+                fold(e.dur_us);
+                fold(e.a);
+                fold(e.b);
+            }
+        }
+        fold(self.dropped);
+        h
+    }
+}
+
+/// FxHash of a string (the same stable identity `app_hash` uses).
+pub(crate) fn str_hash(s: &str) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fxhash::FxHasher::default();
+    h.write(s.as_bytes());
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tr: &mut Tracer, kind: SpanKind, f: &str, t: u64) {
+        tr.record(kind, f, 1, SimTime(t), SimDuration(10), 0, 0);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut tr = Tracer::disabled();
+        ev(&mut tr, SpanKind::Arrival, "f", 5);
+        assert!(tr.is_empty());
+        assert!(!tr.is_enabled());
+        let (events, dropped) = tr.drain();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut tr = Tracer::enabled(2, None);
+        ev(&mut tr, SpanKind::Arrival, "a", 1);
+        ev(&mut tr, SpanKind::Arrival, "b", 2);
+        ev(&mut tr, SpanKind::Arrival, "c", 3);
+        let (events, dropped) = tr.drain();
+        assert_eq!(dropped, 1);
+        assert_eq!(
+            events.iter().map(|e| e.function.as_str()).collect::<Vec<_>>(),
+            vec!["b", "c"]
+        );
+        // Drained but still enabled: keeps recording.
+        ev(&mut tr, SpanKind::Exec, "d", 4);
+        assert_eq!(tr.len(), 1);
+    }
+
+    #[test]
+    fn filter_keeps_matching_functions_only() {
+        let mut tr = Tracer::enabled(16, Some("app-1/".to_string()));
+        ev(&mut tr, SpanKind::Arrival, "app-1/run", 1);
+        ev(&mut tr, SpanKind::Arrival, "app-2/run", 2);
+        let (events, _) = tr.drain();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].function, "app-1/run");
+    }
+
+    #[test]
+    fn kind_codes_and_names_are_stable_and_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for k in SpanKind::ALL {
+            assert!(seen.insert(k.as_str()), "duplicate name {k:?}");
+            assert_eq!(SpanKind::parse(k.as_str()), Some(k));
+            assert_eq!(SpanKind::ALL[k.code() as usize], k);
+        }
+        assert_eq!(SpanKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sink_merge_is_partition_invariant() {
+        let mk = |f: &str, t: u64| SpanEvent {
+            kind: SpanKind::Exec,
+            function: f.to_string(),
+            inv: 0,
+            start_us: t,
+            dur_us: 1,
+            a: 0,
+            b: 0,
+        };
+        let groups = [
+            ("app-a", vec![mk("f1", 1), mk("f1", 9)]),
+            ("app-b", vec![mk("g", 4)]),
+            ("app-c", vec![mk("h", 2)]),
+        ];
+        // Serial: all groups into one sink in sorted order.
+        let mut serial = SpanSink::default();
+        for (k, evs) in &groups {
+            serial.push_group(k.to_string(), evs.clone(), 0);
+        }
+        // Sharded: {a,c} on one shard, {b} on another, merged b-first.
+        let (mut s1, mut s2) = (SpanSink::default(), SpanSink::default());
+        s1.push_group("app-a".into(), groups[0].1.clone(), 0);
+        s1.push_group("app-c".into(), groups[2].1.clone(), 0);
+        s2.push_group("app-b".into(), groups[1].1.clone(), 0);
+        let mut merged = SpanSink::default();
+        merged.merge(&s2);
+        merged.merge(&s1);
+        assert_eq!(merged, serial);
+        assert_eq!(merged.digest(), serial.digest());
+        assert_eq!(merged.len(), 4);
+    }
+
+    #[test]
+    fn sink_digest_sees_content_and_drops() {
+        let mk = |t: u64| SpanEvent {
+            kind: SpanKind::Queue,
+            function: "f".to_string(),
+            inv: 7,
+            start_us: t,
+            dur_us: 3,
+            a: 0,
+            b: 0,
+        };
+        let mut a = SpanSink::default();
+        a.push_group("g".into(), vec![mk(1)], 0);
+        let mut b = SpanSink::default();
+        b.push_group("g".into(), vec![mk(2)], 0);
+        assert_ne!(a.digest(), b.digest());
+        let mut c = SpanSink::default();
+        c.push_group("g".into(), vec![mk(1)], 5);
+        assert_ne!(a.digest(), c.digest());
+        // Empty groups are skipped entirely.
+        let mut d = SpanSink::default();
+        d.push_group("empty".into(), Vec::new(), 0);
+        assert!(d.is_empty());
+    }
+}

@@ -1,0 +1,406 @@
+//! Rolling per-function telemetry windows — the feed the ROADMAP's
+//! closed-loop adaptive controller will consume.
+//!
+//! Everything here is integer-only and mergeable: counts, a power-of-two
+//! latency histogram, and summed absolute prediction error, accumulated
+//! per function over fixed-width sim-time windows. Merging two
+//! [`WindowSet`]s (across shards, seeds, or days) sums counters bin-wise
+//! and takes maxes for per-window peaks, so the merged value is
+//! independent of partition and merge order — the same contract as
+//! `MacroMetrics`. No floats live in these structs (simlint D003 covers
+//! `obs/`); rates like cold-start fraction are derived at print time.
+
+use crate::util::fxhash::FxHashMap;
+
+/// Default window width: 5 simulated minutes.
+pub const DEFAULT_WINDOW_US: u64 = 300_000_000;
+
+/// Power-of-two-bucketed histogram of microsecond durations. Bin 0 holds
+/// zero; bin `b ≥ 1` holds `[2^(b-1), 2^b)` µs; bin 31 absorbs the tail
+/// (≥ 2^30 µs ≈ 18 sim-minutes). Bin-wise summable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pow2Hist {
+    bins: [u64; 32],
+    pub count: u64,
+}
+
+impl Default for Pow2Hist {
+    fn default() -> Pow2Hist {
+        Pow2Hist { bins: [0; 32], count: 0 }
+    }
+}
+
+impl Pow2Hist {
+    #[inline]
+    pub fn record_us(&mut self, us: u64) {
+        let bin = (64 - us.leading_zeros() as usize).min(31);
+        self.bins[bin] += 1;
+        self.count += 1;
+    }
+
+    pub fn merge(&mut self, other: &Pow2Hist) {
+        for (b, v) in self.bins.iter_mut().zip(other.bins.iter()) {
+            *b += v;
+        }
+        self.count += other.count;
+    }
+
+    /// Lower bound (µs) of the bucket holding the `pct`-th percentile
+    /// (0..=100), or 0 for an empty histogram.
+    pub fn quantile_us(&self, pct: u64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        // Rank of the requested percentile, 1-based, rounded up.
+        let rank = (self.count * pct.min(100)).div_ceil(100).max(1);
+        let mut seen = 0u64;
+        for (bin, v) in self.bins.iter().enumerate() {
+            seen += v;
+            if seen >= rank {
+                return if bin == 0 { 0 } else { 1u64 << (bin - 1) };
+            }
+        }
+        1u64 << 30
+    }
+
+    fn fold_into(&self, fold: &mut impl FnMut(u64)) {
+        fold(self.count);
+        for &b in &self.bins {
+            fold(b);
+        }
+    }
+}
+
+/// Accumulated telemetry for one function, plus per-window peaks folded
+/// over fixed-width sim-time windows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FnWindow {
+    pub invocations: u64,
+    pub cold_starts: u64,
+    /// Invocations that waited in the dispatch queue.
+    pub queued: u64,
+    pub queue_wait: Pow2Hist,
+    /// Summed |observed arrival − predicted arrival| µs (IAT drift vs
+    /// the predictor), over `iat_samples` matched arrivals.
+    pub iat_abs_err_us: u64,
+    pub iat_samples: u64,
+    /// Predictions that expired unmatched — their freshen was wasted.
+    pub wasted_freshens: u64,
+    /// Freshen runs aborted by the container-incarnation guard.
+    pub stale_aborts: u64,
+    /// Distinct windows in which this function completed work.
+    pub windows: u64,
+    pub peak_window_invocations: u64,
+    pub peak_window_cold: u64,
+    cur_window: u64,
+    cur_inv: u64,
+    cur_cold: u64,
+    open: bool,
+}
+
+impl FnWindow {
+    fn roll(&mut self, window_idx: u64) {
+        if !self.open {
+            self.open = true;
+            self.cur_window = window_idx;
+        } else if window_idx != self.cur_window {
+            self.close_window();
+            self.open = true;
+            self.cur_window = window_idx;
+        }
+    }
+
+    fn close_window(&mut self) {
+        if !self.open {
+            return;
+        }
+        self.windows += 1;
+        self.peak_window_invocations = self.peak_window_invocations.max(self.cur_inv);
+        self.peak_window_cold = self.peak_window_cold.max(self.cur_cold);
+        self.cur_inv = 0;
+        self.cur_cold = 0;
+        self.open = false;
+    }
+
+    fn merge(&mut self, other: &FnWindow) {
+        debug_assert!(!self.open && !other.open, "merge requires finalized windows");
+        self.invocations += other.invocations;
+        self.cold_starts += other.cold_starts;
+        self.queued += other.queued;
+        self.queue_wait.merge(&other.queue_wait);
+        self.iat_abs_err_us += other.iat_abs_err_us;
+        self.iat_samples += other.iat_samples;
+        self.wasted_freshens += other.wasted_freshens;
+        self.stale_aborts += other.stale_aborts;
+        self.windows += other.windows;
+        self.peak_window_invocations =
+            self.peak_window_invocations.max(other.peak_window_invocations);
+        self.peak_window_cold = self.peak_window_cold.max(other.peak_window_cold);
+    }
+
+    /// Cold-start fraction in per-mille (integer-only surface).
+    pub fn cold_per_mille(&self) -> u64 {
+        if self.invocations == 0 {
+            0
+        } else {
+            self.cold_starts * 1000 / self.invocations
+        }
+    }
+
+    /// Mean |arrival − prediction| in µs.
+    pub fn iat_drift_us(&self) -> u64 {
+        if self.iat_samples == 0 {
+            0
+        } else {
+            self.iat_abs_err_us / self.iat_samples
+        }
+    }
+}
+
+/// Per-function rolling windows for one world / one merged replay.
+/// Disabled by default (one bool test per call site); opt in via
+/// `--fn-windows`. Keys are function names — unique per world in per-app
+/// pool mode, qualified `app/function` in shared pools — so merged maps
+/// never alias across tenants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WindowSet {
+    pub enabled: bool,
+    pub window_us: u64,
+    map: FxHashMap<String, FnWindow>,
+    /// Latest unexpired predicted-arrival µs per function, matched (and
+    /// consumed) by the next observed arrival.
+    pending_pred: FxHashMap<String, u64>,
+}
+
+impl Default for WindowSet {
+    fn default() -> WindowSet {
+        WindowSet {
+            enabled: false,
+            window_us: DEFAULT_WINDOW_US,
+            map: FxHashMap::default(),
+            pending_pred: FxHashMap::default(),
+        }
+    }
+}
+
+impl WindowSet {
+    fn entry(&mut self, function: &str) -> &mut FnWindow {
+        if !self.map.contains_key(function) {
+            self.map.insert(function.to_string(), FnWindow::default());
+        }
+        self.map.get_mut(function).expect("just inserted")
+    }
+
+    pub fn on_arrival(&mut self, function: &str, now_us: u64) {
+        if let Some(expected) = self.pending_pred.remove(function) {
+            let w = self.entry(function);
+            w.iat_samples += 1;
+            w.iat_abs_err_us += now_us.abs_diff(expected);
+        }
+    }
+
+    pub fn note_prediction(&mut self, function: &str, expected_at_us: u64) {
+        self.pending_pred.insert(function.to_string(), expected_at_us);
+    }
+
+    pub fn on_queue_wait(&mut self, function: &str, waited_us: u64) {
+        let w = self.entry(function);
+        w.queued += 1;
+        w.queue_wait.record_us(waited_us);
+    }
+
+    pub fn on_complete(&mut self, function: &str, cold: bool, at_us: u64) {
+        let idx = at_us / self.window_us.max(1);
+        let w = self.entry(function);
+        w.roll(idx);
+        w.invocations += 1;
+        w.cur_inv += 1;
+        if cold {
+            w.cold_starts += 1;
+            w.cur_cold += 1;
+        }
+    }
+
+    pub fn on_wasted_freshen(&mut self, function: &str) {
+        self.entry(function).wasted_freshens += 1;
+    }
+
+    pub fn on_stale_abort(&mut self, function: &str) {
+        self.entry(function).stale_aborts += 1;
+    }
+
+    /// Close every open window and take the accumulated set, leaving
+    /// this one empty (still enabled). Unmatched predictions are
+    /// discarded — they are counted as wasted when they expire, not
+    /// here.
+    pub fn take_finalized(&mut self) -> WindowSet {
+        let mut map = std::mem::take(&mut self.map);
+        self.pending_pred.clear();
+        for w in map.values_mut() {
+            w.close_window();
+        }
+        WindowSet { enabled: true, window_us: self.window_us, map, pending_pred: FxHashMap::default() }
+    }
+
+    /// Commutative merge of finalized sets (sums; maxes for peaks).
+    pub fn merge(&mut self, other: &WindowSet) {
+        self.enabled |= other.enabled;
+        for (k, w) in &other.map {
+            if let Some(mine) = self.map.get_mut(k) {
+                mine.merge(w);
+            } else {
+                self.map.insert(k.clone(), w.clone());
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, function: &str) -> Option<&FnWindow> {
+        self.map.get(function)
+    }
+
+    /// Rows sorted by invocations desc, name asc — the display order.
+    pub fn top_by_invocations(&self, n: usize) -> Vec<(&str, &FnWindow)> {
+        let mut rows: Vec<(&str, &FnWindow)> =
+            self.map.iter().map(|(k, v)| (k.as_str(), v)).collect();
+        rows.sort_by(|a, b| b.1.invocations.cmp(&a.1.invocations).then(a.0.cmp(b.0)));
+        rows.truncate(n);
+        rows
+    }
+
+    /// Stable u64 fingerprint over name-sorted rows (same fold idiom as
+    /// `LatencyHist::digest`).
+    pub fn digest(&self) -> u64 {
+        const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+        let mut h = self.map.len() as u64;
+        let mut fold = |v: u64| {
+            h = (h.rotate_left(5) ^ v).wrapping_mul(SEED);
+        };
+        let mut names: Vec<&String> = self.map.keys().collect();
+        names.sort();
+        for name in names {
+            let w = &self.map[name];
+            fold(super::span::str_hash(name));
+            fold(w.invocations);
+            fold(w.cold_starts);
+            fold(w.queued);
+            w.queue_wait.fold_into(&mut fold);
+            fold(w.iat_abs_err_us);
+            fold(w.iat_samples);
+            fold(w.wasted_freshens);
+            fold(w.stale_aborts);
+            fold(w.windows);
+            fold(w.peak_window_invocations);
+            fold(w.peak_window_cold);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_hist_bins_and_quantiles() {
+        let mut h = Pow2Hist::default();
+        h.record_us(0);
+        assert_eq!(h.quantile_us(50), 0);
+        for us in [1, 2, 3, 1000, 1000, 1_000_000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count, 7);
+        // p100 lands in the bucket holding 1_000_000 ([2^19, 2^20)).
+        assert_eq!(h.quantile_us(100), 1 << 19);
+        // Median lands in the 1000 µs bucket region or below.
+        assert!(h.quantile_us(50) <= 512);
+        // Tail bin absorbs huge values.
+        let mut t = Pow2Hist::default();
+        t.record_us(u64::MAX);
+        assert_eq!(t.quantile_us(100), 1 << 30);
+    }
+
+    #[test]
+    fn windows_roll_and_peaks_fold() {
+        let mut ws = WindowSet { enabled: true, window_us: 100, ..WindowSet::default() };
+        // Window 0: three completions, one cold.
+        ws.on_complete("f", true, 10);
+        ws.on_complete("f", false, 20);
+        ws.on_complete("f", false, 99);
+        // Window 2: one completion.
+        ws.on_complete("f", false, 250);
+        let done = ws.take_finalized();
+        assert!(ws.is_empty(), "take leaves the live set empty");
+        let w = done.get("f").expect("f tracked");
+        assert_eq!(w.invocations, 4);
+        assert_eq!(w.cold_starts, 1);
+        assert_eq!(w.windows, 2);
+        assert_eq!(w.peak_window_invocations, 3);
+        assert_eq!(w.peak_window_cold, 1);
+        assert_eq!(w.cold_per_mille(), 250);
+    }
+
+    #[test]
+    fn prediction_drift_matches_next_arrival_once() {
+        let mut ws = WindowSet { enabled: true, ..WindowSet::default() };
+        ws.note_prediction("f", 1_000);
+        ws.on_arrival("f", 1_300);
+        ws.on_arrival("f", 9_999); // no pending prediction: not a sample
+        ws.note_prediction("g", 5_000);
+        ws.on_arrival("g", 4_000); // early arrivals count too
+        let done = ws.take_finalized();
+        let f = done.get("f").unwrap();
+        assert_eq!((f.iat_samples, f.iat_abs_err_us), (1, 300));
+        assert_eq!(f.iat_drift_us(), 300);
+        let g = done.get("g").unwrap();
+        assert_eq!((g.iat_samples, g.iat_abs_err_us), (1, 1_000));
+    }
+
+    #[test]
+    fn merge_is_partition_invariant() {
+        let run = |names: &[&str]| {
+            let mut ws = WindowSet { enabled: true, window_us: 100, ..WindowSet::default() };
+            for (i, f) in names.iter().enumerate() {
+                ws.on_complete(f, i % 2 == 0, (i as u64) * 60);
+                ws.on_queue_wait(f, 10 + i as u64);
+                ws.on_stale_abort(f);
+            }
+            ws.take_finalized()
+        };
+        let serial = run(&["a", "b", "a", "c"]);
+        // "Sharded": a+c in one world, b in another, merged b-first.
+        let mut merged = run(&["b"]);
+        merged.merge(&run(&["a", "a", "c"]));
+        // Counter totals agree regardless of partition.
+        for f in ["a", "b", "c"] {
+            let (s, m) = (serial.get(f).unwrap(), merged.get(f).unwrap());
+            assert_eq!(s.invocations, m.invocations, "{f}");
+            assert_eq!(s.queued, m.queued, "{f}");
+            assert_eq!(s.stale_aborts, m.stale_aborts, "{f}");
+        }
+        assert_eq!(serial.len(), merged.len());
+    }
+
+    #[test]
+    fn top_rows_sorted_and_digest_stable() {
+        let mut ws = WindowSet { enabled: true, ..WindowSet::default() };
+        for _ in 0..3 {
+            ws.on_complete("hot", false, 0);
+        }
+        ws.on_complete("cold", true, 0);
+        let done = ws.take_finalized();
+        let rows = done.top_by_invocations(10);
+        assert_eq!(rows[0].0, "hot");
+        assert_eq!(rows[1].0, "cold");
+        assert_eq!(done.top_by_invocations(1).len(), 1);
+        assert_eq!(done.digest(), done.clone().digest());
+        assert_ne!(done.digest(), WindowSet::default().digest());
+    }
+}

@@ -103,12 +103,14 @@ pub trait QueueDiscipline {
     }
 }
 
-/// Build the discipline a [`QueueKind`] names.
-pub fn build(kind: QueueKind) -> Box<dyn QueueDiscipline> {
+/// Build the discipline a [`QueueKind`] names. `aging_bound` is
+/// [`MemoryAware`]'s anti-starvation promotion threshold
+/// (`Config::queue_aging_bound`; the other disciplines ignore it).
+pub fn build(kind: QueueKind, aging_bound: SimDuration) -> Box<dyn QueueDiscipline> {
     match kind {
         QueueKind::LegacyOneShot => Box::new(LegacyOneShot::default()),
         QueueKind::FifoFair => Box::new(FifoFair::default()),
-        QueueKind::MemoryAware => Box::new(MemoryAware::default()),
+        QueueKind::MemoryAware => Box::new(MemoryAware::with_aging_bound(aging_bound)),
     }
 }
 
@@ -376,10 +378,26 @@ mod tests {
     #[test]
     fn build_maps_kinds_to_disciplines() {
         for kind in QueueKind::all() {
-            let d = build(kind);
+            let d = build(kind, MEMAWARE_AGING_BOUND);
             assert_eq!(d.name(), kind.as_str());
             assert!(d.is_empty());
         }
+    }
+
+    #[test]
+    fn build_threads_the_aging_bound_through() {
+        let mut d = build(QueueKind::MemoryAware, SimDuration::from_secs(5));
+        d.enqueue(w(0, "big", 2048, 0));
+        d.enqueue(w(1, "small", 128, 1));
+        // At t=6 s the oldest entry has waited past the 5 s bound, so it
+        // is promoted over the smaller charge — proving the custom bound
+        // (not the 30 s default) is in effect.
+        assert_eq!(d.next_candidate(t(6), &[]), Some(0));
+        // With the default bound the same drain picks the smallest.
+        let mut d = build(QueueKind::MemoryAware, MEMAWARE_AGING_BOUND);
+        d.enqueue(w(0, "big", 2048, 0));
+        d.enqueue(w(1, "small", 128, 1));
+        assert_eq!(d.next_candidate(t(6), &[]), Some(1));
     }
 
     #[test]

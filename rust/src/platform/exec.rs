@@ -19,6 +19,7 @@ use crate::freshen::hooks::FreshenAction;
 use crate::freshen::state::{Completer, FrResult};
 use crate::freshen::wrappers::{fr_fetch_decision, fr_warm_decision, WrapperDecision};
 use crate::metrics::{EvictionCause, InvocationRecord, StartKind};
+use crate::obs::SpanKind;
 use crate::netsim::tcp::{ConnState, TransferDirection};
 use crate::netsim::warm::{warm_cwnd, WarmPolicy};
 use crate::platform::container::{ContainerId, ContainerState, RuntimeEnv};
@@ -75,6 +76,12 @@ pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> Invoc
         queued: false,
         done: false,
     });
+    world
+        .obs
+        .record(SpanKind::Arrival, function, id as u64, now, SimDuration::ZERO, 0, 0);
+    if world.metrics.windows.enabled {
+        world.metrics.windows.on_arrival(function, now.micros());
+    }
     dispatch(sim, world, id);
     id
 }
@@ -92,6 +99,9 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
         cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
+        world
+            .obs
+            .record(SpanKind::WarmStart, &function, inv as u64, now, delay, cid as u64, 0);
         sim.schedule(delay, move |sim, w| {
             begin_body(sim, w, inv, cid, StartKind::Warm)
         });
@@ -118,6 +128,9 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
             world.containers[cid].begin_run(now);
             world.metrics.reinits += 1;
             let delay = world.config.warm_start + world.config.cold_start.mul_f64(0.25);
+            world
+                .obs
+                .record(SpanKind::Reinit, &function, inv as u64, now, delay, cid as u64, mb as u64);
             sim.schedule(delay, move |sim, w| {
                 begin_body(sim, w, inv, cid, StartKind::Warm)
             });
@@ -137,6 +150,9 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
         let app = app_of(world, &function);
         world.containers[cid].begin_cold_start_for_app(&function, &app, now);
         let delay = world.config.cold_start;
+        world
+            .obs
+            .record(SpanKind::ColdStart, &function, inv as u64, now, delay, cid as u64, mb as u64);
         sim.schedule(delay, move |sim, w| {
             w.containers[cid].finish_init(sim.now());
             w.containers[cid].begin_run(sim.now());
@@ -154,6 +170,9 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
     if !world.invokers.iter().any(|i| i.feasible(mb as u64)) {
         world.invocations[inv].done = true;
         world.metrics.dropped_infeasible += 1;
+        world
+            .obs
+            .record(SpanKind::Drop, &function, inv as u64, now, SimDuration::ZERO, mb as u64, 0);
         return true; // terminally handled: nothing to retry later
     }
 
@@ -188,6 +207,21 @@ fn note_queue_wait(world: &mut World, inv: InvocationId, now: SimTime) {
     if world.invocations[inv].queued && waited > 0 {
         world.metrics.queue_wait_us = world.metrics.queue_wait_us.saturating_add(waited);
         world.metrics.queue_wait_max_us = world.metrics.queue_wait_max_us.max(waited);
+        world.obs.record(
+            SpanKind::Queue,
+            &world.invocations[inv].function,
+            inv as u64,
+            world.invocations[inv].enqueued_at,
+            SimDuration(waited),
+            0,
+            0,
+        );
+        if world.metrics.windows.enabled {
+            world
+                .metrics
+                .windows
+                .on_queue_wait(&world.invocations[inv].function, waited);
+        }
     }
 }
 
@@ -293,6 +327,13 @@ fn begin_body(
         ctx.started_at = now;
         ctx.start_kind = kind;
     }
+    if world.obs.is_enabled() {
+        let host = world.containers[cid].invoker as u64;
+        let charge = world.containers[cid].charged_mb as u64;
+        world
+            .obs
+            .record(SpanKind::Placement, &function, inv as u64, now, SimDuration::ZERO, host, charge);
+    }
     // (Re)build fr_state for this cycle, keeping still-fresh results.
     world.containers[cid]
         .runtime
@@ -347,6 +388,9 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
                 invoke(sim, w, &next_fn);
             });
+            world
+                .obs
+                .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay, 0, 0);
             // A deterministic edge: record follow-through for the
             // predictor's confidence model.
             world.chain_pred.observe_edge(&function, next, true);
@@ -395,6 +439,9 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
                 sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
                     invoke(sim, w, &next_fn);
                 });
+                world
+                    .obs
+                    .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay, 0, 0);
             }
             // Predict (and maybe freshen) every plausible branch — the
             // learned branch confidence gates which ones are worth it.
@@ -661,6 +708,30 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
         freshen_hits: ctx.freshen_hits,
         freshen_misses: ctx.freshen_misses,
     });
+    let cold = matches!(ctx.start_kind, StartKind::Cold);
+    if world.obs.is_enabled() {
+        world.obs.record(
+            SpanKind::Exec,
+            &function,
+            inv as u64,
+            ctx.started_at,
+            now.since(ctx.started_at),
+            ctx.freshen_hits as u64,
+            ctx.freshen_misses as u64,
+        );
+        world.obs.record(
+            SpanKind::Complete,
+            &function,
+            inv as u64,
+            now,
+            SimDuration::ZERO,
+            now.since(ctx.enqueued_at).micros(),
+            cold as u64,
+        );
+    }
+    if world.metrics.windows.enabled {
+        world.metrics.windows.on_complete(&function, cold, now.micros());
+    }
     let (app, memory_mb) = {
         let spec = world.registry.function(&function).expect("deployed");
         (spec.app.clone(), spec.memory_mb)
@@ -844,8 +915,24 @@ pub fn emit_prediction(
         world
             .tracker
             .register(&pred.function, &app, pred.expected_at, DEFAULT_MATCH_WINDOW);
+    if world.obs.is_enabled() {
+        let lead = pred.expected_at.since(now);
+        let conf_pm = (pred.confidence.clamp(0.0, 1.0) * 1000.0) as u64;
+        world
+            .obs
+            .record(SpanKind::Prediction, &pred.function, pid, now, lead, conf_pm, 0);
+    }
+    if world.metrics.windows.enabled {
+        world
+            .metrics
+            .windows
+            .note_prediction(&pred.function, pred.expected_at.micros());
+    }
     // Expiry resolution: hit/miss -> gate feedback + deferred billing.
-    sim.schedule_at(deadline, move |_sim, w| resolve_prediction(w, pid));
+    let pred_fn = pred.function.clone();
+    sim.schedule_at(deadline, move |sim, w| {
+        resolve_prediction(w, pid, &pred_fn, sim.now())
+    });
     let function = pred.function.clone();
     let delay = start_at.since(now);
     sim.schedule(delay, move |sim, w| {
@@ -854,13 +941,19 @@ pub fn emit_prediction(
     world.metrics.freshens_started += 1;
 }
 
-fn resolve_prediction(world: &mut World, pid: u64) {
+fn resolve_prediction(world: &mut World, pid: u64, function: &str, now: SimTime) {
     let Some((app, hit)) = world.tracker.expire(pid) else {
         return;
     };
     world.gate.record_outcome(&app, hit);
     if !hit {
         world.metrics.freshens_wasted += 1;
+        world
+            .obs
+            .record(SpanKind::FreshenWasted, function, pid, now, SimDuration::ZERO, 0, 0);
+        if world.metrics.windows.enabled {
+            world.metrics.windows.on_wasted_freshen(function);
+        }
     }
     // Settle deferred freshen charges for this prediction.
     let mut settled = Vec::new();
@@ -980,6 +1073,19 @@ fn abort_if_stale_freshen(world: &mut World, run: usize) -> bool {
     }
     world.freshen_runs[run].done = true;
     world.metrics.stale_freshen_aborts += 1;
+    if world.obs.is_enabled() || world.metrics.windows.enabled {
+        // No sim handle here: stamp the abort with the run's launch time
+        // (the abort itself fires at an interior event of the run).
+        let f = world.freshen_runs[run].function.clone();
+        let started = world.freshen_runs[run].started_at;
+        let cid = world.freshen_runs[run].container as u64;
+        world
+            .obs
+            .record(SpanKind::StaleAbort, &f, run as u64, started, SimDuration::ZERO, cid, 0);
+        if world.metrics.windows.enabled {
+            world.metrics.windows.on_stale_abort(&f);
+        }
+    }
     true
 }
 
@@ -1127,9 +1233,20 @@ fn finish_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
     let ctx = &mut world.freshen_runs[run];
     ctx.done = true;
     let duration = now.since(ctx.started_at);
+    let started_at = ctx.started_at;
     let function = ctx.function.clone();
     let prediction_id = ctx.prediction_id;
+    let cid = ctx.container;
     world.metrics.freshens_completed += 1;
+    world.obs.record(
+        SpanKind::FreshenRun,
+        &function,
+        prediction_id.unwrap_or(u64::MAX),
+        started_at,
+        duration,
+        cid as u64,
+        0,
+    );
     let app = app_of(world, &function);
     let memory_mb = world
         .registry

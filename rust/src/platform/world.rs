@@ -118,6 +118,10 @@ pub struct World {
     /// The container keep-alive policy (built from `config.keep_alive`;
     /// swappable for tests/ablations). Shared by every decision site.
     pub keep_alive: Rc<dyn KeepAlivePolicy>,
+    /// Lifecycle span recorder (disabled by default; a replay turns it on
+    /// via `ReplayCfg::trace_spans` / `--span-log`). Lives on the world so
+    /// every executor event can record without threading a handle.
+    pub obs: crate::obs::Tracer,
     /// Total memory currently charged by live containers, MB (exact
     /// integer mirror of the invokers' `used_mb` sums).
     pub resident_mb: u64,
@@ -138,13 +142,14 @@ impl World {
             .map(|i| Invoker::new(i, capacity_mb))
             .collect();
         let keep_alive = keepalive::build(config.keep_alive);
-        let dispatch = dispatch::build(config.queue);
+        let dispatch = dispatch::build(config.queue, config.queue_aging_bound);
         World {
             dispatch,
             rng,
             gate,
             invokers,
             keep_alive,
+            obs: crate::obs::Tracer::disabled(),
             resident_mb: 0,
             resident_last_change: SimTime::ZERO,
             registry: Registry::new(),
@@ -273,6 +278,17 @@ impl World {
                         self.metrics.warm_kills += 1;
                     }
                 }
+            }
+            if self.obs.is_enabled() {
+                let kind = match cause {
+                    EvictionCause::Idle => crate::obs::SpanKind::EvictionIdle,
+                    EvictionCause::Pressure => crate::obs::SpanKind::EvictionPressure,
+                };
+                let warm_kill = matches!(cause, EvictionCause::Pressure)
+                    && self.containers[cid].runtime.invocations > 0;
+                let f = self.containers[cid].function.clone().unwrap_or_default();
+                self.obs
+                    .record(kind, &f, cid as u64, now, SimDuration::ZERO, mb as u64, warm_kill as u64);
             }
         }
         self.containers[cid].evict();

@@ -34,6 +34,11 @@ pub struct Config {
     /// Queue discipline for invocations waiting on cluster memory
     /// (the implementations live in [`crate::platform::dispatch`]).
     pub queue: QueueKind,
+    /// Anti-starvation aging bound for [`QueueKind::MemoryAware`]: once
+    /// the oldest queued invocation has waited this long, it is promoted
+    /// ahead of the smallest-charge order. The 30 s default pins the
+    /// discipline's historical digests.
+    pub queue_aging_bound: SimDuration,
     /// Abort in-flight freshen runs whose container was reclaimed
     /// (pressure-evicted and possibly recycled) since the run launched.
     /// Off by default: the legacy semantics let a stale run keep stepping
@@ -290,6 +295,7 @@ impl Default for Config {
             memory_accounting: MemoryAccounting::UniformSlot,
             keep_alive: KeepAliveKind::FixedTtl,
             queue: QueueKind::LegacyOneShot,
+            queue_aging_bound: SimDuration::from_secs(30),
             freshen_incarnation_guard: false,
             // OpenWhisk docker cold starts are hundreds of ms; the paper's
             // related work (SOCK) reports ~100ms-1s. We default to 500ms.
@@ -333,6 +339,9 @@ impl Config {
                 c.queue = parsed;
             }
         }
+        c.queue_aging_bound = SimDuration::from_secs_f64(
+            j.f64_or("queue_aging_bound_s", c.queue_aging_bound.as_secs_f64()),
+        );
         c.freshen_incarnation_guard =
             j.bool_or("freshen_incarnation_guard", c.freshen_incarnation_guard);
         c.cold_start = SimDuration::from_millis_f64(
@@ -383,6 +392,10 @@ impl Config {
             ),
             ("keep_alive", Json::str(self.keep_alive.as_str())),
             ("queue", Json::str(self.queue.as_str())),
+            (
+                "queue_aging_bound_s",
+                Json::num(self.queue_aging_bound.as_secs_f64()),
+            ),
             (
                 "freshen_incarnation_guard",
                 Json::Bool(self.freshen_incarnation_guard),
@@ -488,12 +501,19 @@ mod tests {
     fn queue_and_guard_knobs_roundtrip() {
         let d = Config::default();
         assert_eq!(d.queue, QueueKind::LegacyOneShot, "legacy is the default");
+        assert_eq!(
+            d.queue_aging_bound,
+            SimDuration::from_secs(30),
+            "memaware aging bound defaults to the digest-pinned 30 s"
+        );
         assert!(!d.freshen_incarnation_guard, "guard defaults off");
         let mut c = Config::default();
         c.queue = QueueKind::MemoryAware;
+        c.queue_aging_bound = SimDuration::from_secs(7);
         c.freshen_incarnation_guard = true;
         let c2 = Config::from_json(&c.to_json());
         assert_eq!(c2.queue, QueueKind::MemoryAware);
+        assert_eq!(c2.queue_aging_bound, SimDuration::from_secs(7));
         assert!(c2.freshen_incarnation_guard);
         for k in QueueKind::all() {
             assert_eq!(QueueKind::parse(k.as_str()), Some(k));
@@ -504,6 +524,7 @@ mod tests {
         // Defaults parse back from JSON unchanged.
         let back = Config::from_json(&Config::default().to_json());
         assert_eq!(back.queue, QueueKind::LegacyOneShot);
+        assert_eq!(back.queue_aging_bound, SimDuration::from_secs(30));
         assert!(!back.freshen_incarnation_guard);
     }
 

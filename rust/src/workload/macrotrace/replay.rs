@@ -49,6 +49,7 @@ use std::rc::Rc;
 
 use crate::metrics::hist::LatencyHist;
 use crate::netsim::link::Site;
+use crate::obs::{SpanSink, Tracer, WindowSet};
 use crate::platform::endpoint::Endpoint;
 use crate::platform::exec::invoke;
 use crate::platform::function::{Arg, FunctionSpec, Op};
@@ -139,6 +140,19 @@ pub struct ReplayCfg {
     pub policy: PredictorPolicy,
     /// Per-app worlds or one shared pool per shard.
     pub pool: PoolMode,
+    /// Record lifecycle spans into each world's `obs::Tracer` and merge
+    /// them into `MacroMetrics::spans`. Off by default: the disabled hot
+    /// path is a single bool test and every legacy digest is unchanged.
+    pub trace_spans: bool,
+    /// Per-world span ring capacity (oldest events drop past it).
+    pub span_cap: usize,
+    /// Keep only spans whose function name contains this substring
+    /// (shared pools qualify names `app/function`, so an app name
+    /// selects a whole tenant).
+    pub span_filter: Option<String>,
+    /// Accumulate rolling per-function telemetry windows into
+    /// `MacroMetrics::fn_windows`. Off by default.
+    pub fn_windows: bool,
 }
 
 impl Default for ReplayCfg {
@@ -153,6 +167,10 @@ impl Default for ReplayCfg {
             warmup_minutes: 10,
             policy: PredictorPolicy::Both,
             pool: PoolMode::PerApp,
+            trace_spans: false,
+            span_cap: crate::obs::DEFAULT_SPAN_CAP,
+            span_filter: None,
+            fn_windows: false,
         }
     }
 }
@@ -217,6 +235,13 @@ pub struct MacroMetrics {
     /// MB·s), summed across worlds.
     pub resident_mb_us: u64,
     pub latency: LatencyHist,
+    /// Merged lifecycle span streams (empty unless `ReplayCfg::
+    /// trace_spans`). Deliberately excluded from every digest string so
+    /// the pinned metric digests are independent of tracing.
+    pub spans: SpanSink,
+    /// Merged per-function telemetry windows (empty unless `ReplayCfg::
+    /// fn_windows`); excluded from the digest strings like `spans`.
+    pub fn_windows: WindowSet,
 }
 
 impl MacroMetrics {
@@ -250,6 +275,21 @@ impl MacroMetrics {
         self.peak_resident_mb = self.peak_resident_mb.max(other.peak_resident_mb);
         self.resident_mb_us = self.resident_mb_us.saturating_add(other.resident_mb_us);
         self.latency.merge(&other.latency);
+        self.spans.merge(&other.spans);
+        self.fn_windows.merge(&other.fn_windows);
+    }
+
+    /// Fingerprint of the merged span stream — the string the trace
+    /// shard-determinism tests compare byte-for-byte. Kept separate from
+    /// [`MacroMetrics::digest`] so the pinned metric digests never move
+    /// when tracing is toggled.
+    pub fn span_digest(&self) -> String {
+        format!(
+            "{:016x} n={} drop={}",
+            self.spans.digest(),
+            self.spans.len(),
+            self.spans.dropped,
+        )
     }
 
     pub fn cold_start_rate(&self) -> f64 {
@@ -667,6 +707,10 @@ pub fn replay_pool_days(
     config.seed = world_seed;
     let mut w = World::new(config);
     w.auto_hist_predict = cfg.policy.histogram() && w.config.freshen.enabled;
+    if cfg.trace_spans {
+        w.obs = Tracer::enabled(cfg.span_cap, cfg.span_filter.clone());
+    }
+    w.metrics.windows.enabled = cfg.fn_windows;
 
     let mut store = Endpoint::new("store", Site::Remote);
     store.store.put("ID1", FETCH_BYTES, SimTime::ZERO);
@@ -761,6 +805,25 @@ pub fn replay_pool_days(
         }
         out.push(m);
         prev = cur.clone();
+    }
+    // Spans and windows attach whole-run to the day-0 slice (like the
+    // `apps`/`functions` identity fields): per-day attribution lives in
+    // the span timestamps themselves. The group key is what makes the
+    // merged stream partition-invariant — per-app worlds key by their
+    // (globally unique) app name, shared pools by their (per-shard
+    // unique) world seed, exactly mirroring each mode's determinism
+    // contract.
+    if w.obs.is_enabled() {
+        let group = if day0.len() == 1 {
+            day0[0].0.clone()
+        } else {
+            format!("pool-{world_seed:016x}")
+        };
+        let (events, dropped) = w.obs.drain();
+        out[0].spans.push_group(group, events, dropped);
+    }
+    if w.metrics.windows.enabled {
+        out[0].fn_windows = w.metrics.windows.take_finalized();
     }
     out
 }

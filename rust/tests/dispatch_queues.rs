@@ -21,7 +21,7 @@
 use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
 use freshen_rs::experiments::SweepRunner;
 use freshen_rs::netsim::link::Site;
-use freshen_rs::platform::dispatch::{self, MemoryAware, Waiting};
+use freshen_rs::platform::dispatch::{self, MemoryAware, Waiting, MEMAWARE_AGING_BOUND};
 use freshen_rs::platform::endpoint::Endpoint;
 use freshen_rs::platform::exec::{invoke, start_freshen};
 use freshen_rs::platform::world::{PlatformSim, World};
@@ -104,7 +104,7 @@ fn fifo_completes_in_arrival_order_and_legacy_in_hash_map_order() {
     // particular hash layout.
     let names = ["qa", "qb", "qc", "qd", "qe"];
     let pop_order = |insertion: &[String]| -> Vec<String> {
-        let mut d = dispatch::build(QueueKind::LegacyOneShot);
+        let mut d = dispatch::build(QueueKind::LegacyOneShot, MEMAWARE_AGING_BOUND);
         for (i, f) in insertion.iter().enumerate() {
             d.enqueue(Waiting {
                 inv: i,
@@ -243,7 +243,7 @@ fn pressure_run(w_cfg: impl FnOnce(&mut World)) -> (SimDuration, SimDuration, us
 #[test]
 fn fifo_head_of_line_bounds_the_big_functions_wait() {
     let (big_wait, _, _) = pressure_run(|w| {
-        w.dispatch = dispatch::build(QueueKind::FifoFair);
+        w.dispatch = dispatch::build(QueueKind::FifoFair, MEMAWARE_AGING_BOUND);
     });
     // Strict FIFO: big only waits out the handful of smalls ahead of it
     // (each ~1 s cold + body), never the whole 18 s stream.
@@ -262,7 +262,7 @@ fn memaware_aging_bound_rescues_the_big_function() {
     // Default aging (30 s): smallest-first parks big while smalls are
     // queued, the aging bound then gives it drain priority.
     let (aged_wait, _, _) = pressure_run(|w| {
-        w.dispatch = dispatch::build(QueueKind::MemoryAware);
+        w.dispatch = dispatch::build(QueueKind::MemoryAware, MEMAWARE_AGING_BOUND);
     });
     assert!(
         aged_wait >= MemoryAware::default().aging_bound,

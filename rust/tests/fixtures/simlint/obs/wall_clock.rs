@@ -1,0 +1,8 @@
+//! Fixture proving `obs/` sits INSIDE the determinism perimeter: the
+//! tracing subsystem observes sim time only, so a wall-clock read in an
+//! obs path is a D002 finding (obs/ is deliberately not allowlisted).
+
+pub fn span_stamp() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_micros()
+}

@@ -1,0 +1,218 @@
+//! Determinism regression tests for the `obs/` tracing subsystem.
+//!
+//! The acceptance contract mirrors `azure_macro_determinism.rs`, extended
+//! to the span stream itself:
+//!
+//! - **spans-on invariance**: with tracing enabled, the merged span
+//!   stream's digest is byte-identical across `--shards 1/2/8` ×
+//!   `--parallel 1/4` in per-app pool mode — the same grid the metrics
+//!   digest already pins.
+//! - **spans-off identity**: enabling tracing never moves the metrics
+//!   digest; disabling it never leaves residue. The default (spans off)
+//!   is byte-identical to a pre-obs build.
+//! - **export round-trip**: the Chrome trace_event export parses as one
+//!   JSON document with monotone, non-negative timestamps, and both
+//!   export formats summarize identically.
+
+use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
+use freshen_rs::experiments::SweepRunner;
+use freshen_rs::obs::{summarize, to_chrome, to_jsonl, SpanKind};
+use freshen_rs::util::json::Json;
+use freshen_rs::workload::macrotrace::replay::PoolMode;
+use freshen_rs::workload::macrotrace::shard::TraceSource;
+use freshen_rs::workload::macrotrace::synth::SynthTraceCfg;
+
+fn trace() -> SynthTraceCfg {
+    SynthTraceCfg {
+        apps: 40,
+        minutes: 20,
+        seed: 99,
+        ..SynthTraceCfg::default()
+    }
+}
+
+fn cfg(shards: usize, spans: bool) -> AzureMacroCfg {
+    let mut cfg = AzureMacroCfg::new(TraceSource::Synth(trace()));
+    cfg.shards = shards;
+    cfg.warmup_minutes = 4;
+    cfg.variants = vec![Variant::Baseline, Variant::Both];
+    cfg.trace_spans = spans;
+    cfg
+}
+
+#[test]
+fn span_streams_are_byte_identical_across_shards_and_parallelism() {
+    let seeds = [7u64];
+    let reference = run_multi(&cfg(1, true), &seeds, &SweepRunner::new(1)).expect("reference");
+    let ref_spans = reference.span_digest();
+    let total: usize = reference.rows.iter().map(|r| r.metrics.spans.len()).sum();
+    assert!(total > 1000, "tracing must actually record spans ({total})");
+    assert!(ref_spans.contains("n="), "span digest carries counts: {ref_spans}");
+    for shards in [1usize, 2, 8] {
+        for parallel in [1usize, 4] {
+            let r = run_multi(&cfg(shards, true), &seeds, &SweepRunner::new(parallel))
+                .expect("sharded run");
+            assert_eq!(
+                ref_spans,
+                r.span_digest(),
+                "span stream diverged at shards={shards} parallel={parallel}"
+            );
+            assert_eq!(
+                reference.digest(),
+                r.digest(),
+                "metrics diverged at shards={shards} parallel={parallel}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tracing_and_windows_never_perturb_the_metrics_digest() {
+    let seeds = [7u64];
+    let off = run_multi(&cfg(2, false), &seeds, &SweepRunner::new(2)).unwrap();
+    let mut on_cfg = cfg(2, true);
+    on_cfg.fn_windows = true;
+    let on = run_multi(&on_cfg, &seeds, &SweepRunner::new(2)).unwrap();
+    assert_eq!(
+        off.digest(),
+        on.digest(),
+        "span/window collection must be invisible to the digest contract"
+    );
+    // Off really is off: no spans, no windows, zero residue.
+    for row in &off.rows {
+        assert!(row.metrics.spans.is_empty());
+        assert_eq!(row.metrics.spans.dropped, 0);
+        assert!(row.metrics.fn_windows.is_empty());
+    }
+    // On really is on, for every cell.
+    for row in &on.rows {
+        assert!(!row.metrics.spans.is_empty(), "{:?} recorded no spans", row.variant);
+        assert!(!row.metrics.fn_windows.is_empty(), "{:?} has no windows", row.variant);
+    }
+}
+
+#[test]
+fn shared_pool_spans_are_parallel_invariant() {
+    let mut c = cfg(2, true);
+    c.pool = PoolMode::Shared;
+    let serial = run_multi(&c, &[7], &SweepRunner::new(1)).unwrap();
+    let parallel = run_multi(&c, &[7], &SweepRunner::new(4)).unwrap();
+    assert_eq!(serial.span_digest(), parallel.span_digest());
+    // Shared pools qualify function names `app/function`, so a span
+    // stream from a shared world names its tenant on every event.
+    let rows = serial.span_rows();
+    let (_, sink) = &rows[0];
+    let (_, events) = &sink.groups()[0];
+    assert!(events.iter().all(|e| e.function.contains('/')));
+}
+
+#[test]
+fn span_filter_selects_a_tenant() {
+    // Grab one app's name from an unfiltered run, then filter on it.
+    let full = run_multi(&cfg(2, true), &[7], &SweepRunner::new(2)).unwrap();
+    let needle = {
+        let rows = full.span_rows();
+        let (group, _) = &rows[0].1.groups()[0];
+        group.clone()
+    };
+    let mut c = cfg(2, true);
+    c.span_filter = Some(needle.clone());
+    let filtered = run_multi(&c, &[7], &SweepRunner::new(2)).unwrap();
+    let rows = filtered.span_rows();
+    let total: usize = rows.iter().map(|(_, s)| s.len()).sum();
+    assert!(total > 0, "filter '{needle}' matched nothing");
+    for (_, sink) in &rows {
+        for (_, events) in sink.groups() {
+            assert!(
+                events.iter().all(|e| e.function.contains(&needle)),
+                "a span escaped the '{needle}' filter"
+            );
+        }
+    }
+    let full_total: usize = full.span_rows().iter().map(|(_, s)| s.len()).sum();
+    assert!(total < full_total, "the filter must actually narrow the stream");
+}
+
+#[test]
+fn chrome_export_round_trips_with_monotone_timestamps() {
+    let r = run_multi(&cfg(2, true), &[7], &SweepRunner::new(2)).unwrap();
+    let rows = r.span_rows();
+    let chrome = to_chrome(&rows);
+    let doc = Json::parse(&chrome).expect("chrome export is valid JSON");
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array");
+    assert!(!events.is_empty());
+    let mut slices = 0usize;
+    let mut last_ts = 0u64;
+    for e in events {
+        match e.get("ph").and_then(Json::as_str) {
+            Some("M") => continue, // process/thread metadata
+            Some("X") => {}
+            other => panic!("unexpected phase {other:?}"),
+        }
+        let ts = e.get("ts").and_then(Json::as_u64).expect("non-negative integer ts");
+        e.get("dur").and_then(Json::as_u64).expect("non-negative integer dur");
+        assert!(ts >= last_ts, "slices must be time-sorted ({ts} < {last_ts})");
+        last_ts = ts;
+        // Every slice names a known span kind.
+        let name = e.get("name").and_then(Json::as_str).unwrap();
+        assert!(SpanKind::parse(name).is_some(), "unknown kind '{name}'");
+        slices += 1;
+    }
+    let total: usize = rows.iter().map(|(_, s)| s.len()).sum();
+    assert_eq!(slices, total, "every recorded span becomes exactly one slice");
+    // Byte-stable: exporting the same run twice gives identical text.
+    assert_eq!(chrome, to_chrome(&rows));
+}
+
+#[test]
+fn both_export_formats_summarize_identically() {
+    let r = run_multi(&cfg(1, true), &[7], &SweepRunner::new(1)).unwrap();
+    let rows = r.span_rows();
+    let jsonl = to_jsonl(&rows);
+    let chrome = to_chrome(&rows);
+    // Every JSONL line is one standalone JSON object.
+    for line in jsonl.lines() {
+        Json::parse(line).expect("JSONL line parses");
+    }
+    let a = summarize(&jsonl).expect("jsonl summary");
+    let b = summarize(&chrome).expect("chrome summary");
+    assert_eq!(a, b, "the summarizer must not care about the wire format");
+    assert!(a.starts_with("span summary:"), "summary header: {a}");
+    // Garbage is rejected, emptiness is not.
+    assert!(summarize("not json").is_err());
+    assert!(summarize("").is_ok());
+}
+
+#[test]
+fn fn_windows_track_real_activity() {
+    let mut c = cfg(2, false);
+    c.fn_windows = true;
+    c.variants = vec![Variant::Both];
+    let r = run_multi(&c, &[7], &SweepRunner::new(2)).unwrap();
+    let w = &r.rows[0].metrics.fn_windows;
+    assert!(w.len() > 10, "windows cover the trace's functions ({})", w.len());
+    let top = w.top_by_invocations(5);
+    assert!(!top.is_empty());
+    // Ordered by volume, and internally consistent.
+    for pair in top.windows(2) {
+        assert!(pair[0].1.invocations >= pair[1].1.invocations);
+    }
+    let total_inv: u64 = w.top_by_invocations(usize::MAX)
+        .iter()
+        .map(|(_, fw)| fw.invocations)
+        .sum();
+    assert!(
+        total_inv >= r.rows[0].metrics.invocations,
+        "windows see at least the post-warmup invocation volume \
+         ({total_inv} vs {})",
+        r.rows[0].metrics.invocations
+    );
+    for (f, fw) in &top {
+        assert!(fw.cold_per_mille() <= 1000, "{f} cold rate out of range");
+        assert!(fw.windows > 0, "{f} closed no windows");
+        assert!(fw.peak_window_invocations <= fw.invocations);
+    }
+}
