@@ -11,7 +11,7 @@ use std::io::BufWriter;
 
 use freshen_rs::experiments::SweepRunner;
 use freshen_rs::testkit::bench::{throughput, time_once, Snapshot};
-use freshen_rs::util::config::KeepAliveKind;
+use freshen_rs::util::config::{KeepAliveKind, PlacementKind};
 use freshen_rs::workload::macrotrace::ingest::AzureTraceReader;
 use freshen_rs::workload::macrotrace::replay::{PoolMode, ReplayCfg};
 use freshen_rs::workload::macrotrace::shard::{replay_sharded, TraceSource};
@@ -174,6 +174,48 @@ fn main() {
             m.evictions_idle,
             m.evictions_pressure,
             m.warm_kills,
+            m.peak_resident_mb
+        );
+    }
+
+    // --- placement strategies on the shared pool ----------------------
+    // Legacy least-loaded vs warm-affinity on the contended cluster: the
+    // pair pins what strategy choice costs at replay speed, and the
+    // cross-check re-asserts the shared-pool determinism contract (same
+    // strategy, fixed shards, different workers → identical digest).
+    for placement in [PlacementKind::LeastLoadedMb, PlacementKind::WarmAffinity] {
+        let mut placed = cfg.clone();
+        placed.pool = PoolMode::Shared;
+        placed.base.memory_accounting =
+            freshen_rs::util::config::MemoryAccounting::FunctionMb;
+        placed.base.placement = placement;
+        let (out, elapsed) = time_once(|| {
+            replay_sharded(&src, 4, &placed, &SweepRunner::new(4))
+                .expect("placement replay")
+        });
+        let (check, _) = time_once(|| {
+            replay_sharded(&src, 4, &placed, &SweepRunner::new(1))
+                .expect("placement replay cross-check")
+        });
+        assert_eq!(
+            out.metrics.digest(),
+            check.metrics.digest(),
+            "placement {} must be parallel-invariant at fixed shards",
+            placement.as_str()
+        );
+        let m = &out.metrics;
+        snap.rate(
+            &format!("replay/placement-{}", placement.as_str()),
+            m.invocations,
+            elapsed,
+        );
+        println!(
+            "replay placed  (4 shards, placement {:>8}): {} invocations, {} sim events \
+             in {elapsed:?}  (cold {:.2}%, peak {} MB)",
+            placement.as_str(),
+            m.invocations,
+            m.sim_events,
+            100.0 * m.cold_start_rate(),
             m.peak_resident_mb
         );
     }

@@ -34,7 +34,7 @@ use crate::platform::world::World;
 use crate::runtime::backend::BackendKind;
 use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
-use crate::util::config::{Config, KeepAliveKind, QueueKind};
+use crate::util::config::{Config, HostClass, KeepAliveKind, PlacementKind, QueueKind};
 use crate::util::json::Json;
 use crate::workload::macrotrace::replay::PoolMode;
 use crate::workload::macrotrace::shard::TraceSource;
@@ -57,6 +57,14 @@ USAGE:
                     #   world per shard, warm containers compete across apps
                     [--keep-alive fixed,lru,hybrid]  # keep-alive ablation axis
                     [--queue legacy,fifo,memaware]   # dispatch-queue ablation axis
+                    [--placement legacy,random,rr,affinity,constrained]
+                    #   placement-strategy ablation axis: which invoker
+                    #   host a cold start lands on (legacy = least-loaded)
+                    [--host-classes name:count:mb:coldx1000:site,...]
+                    #   heterogeneous hosts, e.g. cloud:4:4096:1000:local,
+                    #   edge:4:1024:1600:edge — cold starts scale by
+                    #   coldx1000/1000, cross-node chain edges pay the
+                    #   site's netsim link latency
                     [--freshen-guard]         # abort stale freshen runs on
                     #   pressure-reclaimed containers (container-incarnation
                     #   guard; default off = legacy keep-stepping semantics)
@@ -552,6 +560,31 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
             bail!("--queue must name at least one discipline");
         }
     }
+    if let Some(list) = opts.flags.get("placement") {
+        cfg.placements = list
+            .split(',')
+            .map(|p| {
+                PlacementKind::parse(p.trim()).with_context(|| {
+                    format!(
+                        "unknown placement strategy '{p}' \
+                         (use legacy|random|rr|affinity|constrained)"
+                    )
+                })
+            })
+            .collect::<Result<Vec<PlacementKind>>>()?;
+        if cfg.placements.is_empty() {
+            bail!("--placement must name at least one strategy");
+        }
+    }
+    if let Some(spec) = opts.flags.get("host-classes") {
+        cfg.host_classes = Some(HostClass::parse_list(spec).with_context(|| {
+            format!(
+                "bad --host-classes '{spec}' \
+                 (form: name:count:capacity_mb:coldx1000:site,... with site \
+                 local|edge|remote)"
+            )
+        })?);
+    }
     cfg.freshen_guard = opts.flag("freshen-guard");
     // Span tracing is enabled exactly when an export path is given — the
     // tracer stays disabled (and stdout/digests byte-identical) otherwise.
@@ -865,6 +898,26 @@ mod tests {
         assert!(
             run(&base(&["--queue", "bogus"])).is_err(),
             "bad queue discipline errors"
+        );
+        assert!(
+            run(&base(&[
+                "--pool",
+                "shared",
+                "--placement",
+                "legacy,affinity",
+                "--host-classes",
+                "cloud:2:4096:1000:local,edge:2:1024:1600:edge",
+            ]))
+            .is_ok(),
+            "placement ablation over heterogeneous host classes must run"
+        );
+        assert!(
+            run(&base(&["--placement", "bogus"])).is_err(),
+            "bad placement strategy errors"
+        );
+        assert!(
+            run(&base(&["--host-classes", "cloud:0:4096:1000:local"])).is_err(),
+            "bad host-class spec errors"
         );
         let csv_days: Vec<String> = vec![
             "azure-macro".into(),

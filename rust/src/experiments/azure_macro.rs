@@ -13,7 +13,11 @@
 //!   governs idle/pressure eviction;
 //! - **queue discipline** (`--queue legacy,fifo,memaware`) — which
 //!   [`QueueDiscipline`](crate::platform::dispatch::QueueDiscipline)
-//!   holds and drains invocations waiting on cluster memory.
+//!   holds and drains invocations waiting on cluster memory;
+//! - **placement strategy** (`--placement legacy,random,rr,affinity,constrained`)
+//!   — which [`Placement`](crate::platform::placement::Placement) strategy
+//!   chooses the invoker host a cold start lands on, optionally over
+//!   heterogeneous `--host-classes` (cloud vs edge).
 //!
 //! Reports the metrics the literature compares on — cold-start rate,
 //! p50/p99 end-to-end latency, freshen hit rate, wasted-freshen fraction
@@ -39,7 +43,7 @@ use anyhow::{bail, Result};
 
 use crate::experiments::harness::SweepRunner;
 use crate::experiments::print_table;
-use crate::util::config::{KeepAliveKind, MemoryAccounting, QueueKind};
+use crate::util::config::{HostClass, KeepAliveKind, MemoryAccounting, PlacementKind, QueueKind};
 use crate::util::rng::mix64;
 use crate::workload::macrotrace::replay::{
     app_hash, replay_pool_days, shared_world_seed, MacroMetrics, PoolMode, PredictorPolicy,
@@ -126,6 +130,12 @@ pub struct AzureMacroCfg {
     /// Queue disciplines to ablate (default: `[LegacyOneShot]`, the
     /// legacy behavior).
     pub queues: Vec<QueueKind>,
+    /// Placement strategies to ablate (default: `[LeastLoadedMb]`, the
+    /// legacy behavior).
+    pub placements: Vec<PlacementKind>,
+    /// Heterogeneous host classes for the replay worlds (default `None` =
+    /// the homogeneous legacy cluster).
+    pub host_classes: Option<Vec<HostClass>>,
     /// Abort stale freshen runs on pressure-reclaimed containers
     /// (`Config::freshen_incarnation_guard`; default off = legacy).
     pub freshen_guard: bool,
@@ -163,6 +173,8 @@ impl AzureMacroCfg {
             pool: PoolMode::PerApp,
             policies: vec![KeepAliveKind::FixedTtl],
             queues: vec![QueueKind::LegacyOneShot],
+            placements: vec![PlacementKind::LeastLoadedMb],
+            host_classes: None,
             freshen_guard: false,
             days: 1,
             invokers: None,
@@ -175,19 +187,24 @@ impl AzureMacroCfg {
         }
     }
 
-    /// The replay config for one `(queue, policy, variant, seed)` grid
-    /// cell.
+    /// The replay config for one `(placement, queue, policy, variant,
+    /// seed)` grid cell.
     fn cell_cfg(
         &self,
         variant: Variant,
         policy: KeepAliveKind,
         queue: QueueKind,
+        placement: PlacementKind,
         seed: u64,
     ) -> ReplayCfg {
         let mut r = variant.replay_cfg(seed, self.warmup_minutes);
         r.pool = self.pool;
         r.base.keep_alive = policy;
         r.base.queue = queue;
+        r.base.placement = placement;
+        if let Some(classes) = &self.host_classes {
+            r.base.host_classes = classes.clone();
+        }
         r.base.freshen_incarnation_guard = self.freshen_guard;
         if let Some(n) = self.invokers {
             r.base.invokers = n;
@@ -216,17 +233,20 @@ impl AzureMacroCfg {
             || self.days > 1
             || self.policies != vec![KeepAliveKind::FixedTtl]
             || self.queues != vec![QueueKind::LegacyOneShot]
+            || self.placements != vec![PlacementKind::LeastLoadedMb]
+            || self.host_classes.is_some()
             || self.freshen_guard
     }
 }
 
-/// One `(variant, keep-alive policy, queue discipline)` cell of the
-/// merged benchmark.
+/// One `(variant, keep-alive policy, queue discipline, placement)` cell
+/// of the merged benchmark.
 #[derive(Debug, Clone)]
 pub struct MacroRow {
     pub variant: Variant,
     pub policy: KeepAliveKind,
     pub queue: QueueKind,
+    pub placement: PlacementKind,
     /// Metrics merged across shards, seeds and days.
     pub metrics: MacroMetrics,
     /// Per-day metrics (length = `days`), merged across shards and seeds.
@@ -235,8 +255,10 @@ pub struct MacroRow {
 
 impl MacroRow {
     /// Row label: the variant, qualified by the policy / queue discipline
-    /// when those axes are in play.
-    fn label(&self, with_policy: bool, with_queue: bool) -> String {
+    /// / placement strategy when those axes are in play. The placement
+    /// segment only appears on a placement grid, so every historical
+    /// `variant/policy/queue` label (and digest line) is unchanged.
+    fn label(&self, with_policy: bool, with_queue: bool, with_placement: bool) -> String {
         let mut s = self.variant.as_str().to_string();
         if with_policy {
             s.push('/');
@@ -246,6 +268,10 @@ impl MacroRow {
             s.push('/');
             s.push_str(self.queue.as_str());
         }
+        if with_placement {
+            s.push('/');
+            s.push_str(self.placement.as_str());
+        }
         s
     }
 }
@@ -253,9 +279,9 @@ impl MacroRow {
 /// The merged benchmark result.
 #[derive(Debug, Clone)]
 pub struct AzureMacro {
-    /// Per-cell metrics (queue-major, then policy, variants in request
-    /// order within — the default single-queue grid is policy-major, as
-    /// before).
+    /// Per-cell metrics (placement-major, then queue, then policy,
+    /// variants in request order within — the default single-placement
+    /// single-queue grid is policy-major, as before).
     pub rows: Vec<MacroRow>,
     pub shards: usize,
     pub seeds: Vec<u64>,
@@ -283,9 +309,9 @@ struct ShardSlice {
 }
 
 /// Run the benchmark. Shard-major: each worker ingests its shard once and
-/// replays it under every `(queue × policy × variant × seed)`; shard
-/// slices then merge per cell in shard order (commutative merges — any
-/// order gives the same bytes).
+/// replays it under every `(placement × queue × policy × variant ×
+/// seed)`; shard slices then merge per cell in shard order (commutative
+/// merges — any order gives the same bytes).
 pub fn run_multi(
     cfg: &AzureMacroCfg,
     seeds: &[u64],
@@ -295,16 +321,21 @@ pub fn run_multi(
     assert!(!cfg.variants.is_empty(), "azure-macro needs at least one variant");
     assert!(!cfg.policies.is_empty(), "azure-macro needs at least one keep-alive policy");
     assert!(!cfg.queues.is_empty(), "azure-macro needs at least one queue discipline");
+    assert!(!cfg.placements.is_empty(), "azure-macro needs at least one placement strategy");
     let days = cfg.days.max(1);
     if days > 1 && !matches!(cfg.source, TraceSource::Synth(_)) {
         bail!("--days needs the synthesizer (day-sliced CSVs are not ingestable yet)");
     }
     let shards = cfg.shards.max(1);
-    let cells: Vec<(QueueKind, KeepAliveKind, Variant)> = cfg
-        .queues
+    let cells: Vec<(PlacementKind, QueueKind, KeepAliveKind, Variant)> = cfg
+        .placements
         .iter()
-        .flat_map(|&q| {
-            cfg.policies.iter().flat_map(move |&p| cfg.variants.iter().map(move |&v| (q, p, v)))
+        .flat_map(|&pl| {
+            cfg.queues.iter().flat_map(move |&q| {
+                cfg.policies
+                    .iter()
+                    .flat_map(move |&p| cfg.variants.iter().map(move |&v| (pl, q, p, v)))
+            })
         })
         .collect();
     let grid: Vec<usize> = (0..shards).collect();
@@ -346,9 +377,9 @@ pub fn run_multi(
         };
         let rows = apps.iter().map(|(_, r)| r.len() as u64).sum();
         let mut per_cell = vec![vec![MacroMetrics::default(); days]; cells.len()];
-        for (ci, &(queue, policy, variant)) in cells.iter().enumerate() {
+        for (ci, &(placement, queue, policy, variant)) in cells.iter().enumerate() {
             for &seed in seeds {
-                let rcfg = cfg.cell_cfg(variant, policy, queue, seed);
+                let rcfg = cfg.cell_cfg(variant, policy, queue, placement, seed);
                 let per_day: Vec<MacroMetrics> = if days > 1 {
                     match cfg.pool {
                         PoolMode::Shared => replay_pool_days(
@@ -391,10 +422,11 @@ pub fn run_multi(
 
     let mut rows_out: Vec<MacroRow> = cells
         .iter()
-        .map(|&(queue, policy, variant)| MacroRow {
+        .map(|&(placement, queue, policy, variant)| MacroRow {
             variant,
             policy,
             queue,
+            placement,
             metrics: MacroMetrics::default(),
             per_day: vec![MacroMetrics::default(); days],
         })
@@ -442,20 +474,34 @@ impl AzureMacro {
         self.rows.iter().any(|r| r.queue != QueueKind::LegacyOneShot)
     }
 
+    /// Does the report label rows with their placement strategy? Gated so
+    /// an all-legacy grid keeps the historical three-segment labels (and
+    /// digest lines) byte-for-byte.
+    fn placement_axis(&self) -> bool {
+        self.rows.iter().any(|r| r.placement != PlacementKind::LeastLoadedMb)
+    }
+
     /// Canonical fingerprint of the merged metrics (one line per cell,
     /// plus per-day lines on multi-day runs) — what the determinism
     /// regression tests compare byte-for-byte. Labels are fully
-    /// qualified (`variant/policy/queue`).
+    /// qualified (`variant/policy/queue`, plus `/placement` on a
+    /// placement grid).
     pub fn digest(&self) -> String {
+        let with_placement = self.placement_axis();
         let mut lines: Vec<String> = self
             .rows
             .iter()
-            .map(|r| format!("{}: {}", r.label(true, true), r.metrics.digest()))
+            .map(|r| format!("{}: {}", r.label(true, true, with_placement), r.metrics.digest()))
             .collect();
         if self.days > 1 {
             for r in &self.rows {
                 for (d, m) in r.per_day.iter().enumerate() {
-                    lines.push(format!("{} day{}: {}", r.label(true, true), d, m.digest()));
+                    lines.push(format!(
+                        "{} day{}: {}",
+                        r.label(true, true, with_placement),
+                        d,
+                        m.digest()
+                    ));
                 }
             }
         }
@@ -466,9 +512,10 @@ impl AzureMacro {
     /// sink)` in row order — what `--span-log` writes through
     /// [`crate::obs::export::export`].
     pub fn span_rows(&self) -> Vec<(String, &crate::obs::SpanSink)> {
+        let with_placement = self.placement_axis();
         self.rows
             .iter()
-            .map(|r| (r.label(true, true), &r.metrics.spans))
+            .map(|r| (r.label(true, true, with_placement), &r.metrics.spans))
             .collect()
     }
 
@@ -478,9 +525,10 @@ impl AzureMacro {
     /// (`AzureMacro::digest`), which stays byte-identical whether
     /// tracing is on or off.
     pub fn span_digest(&self) -> String {
+        let with_placement = self.placement_axis();
         self.rows
             .iter()
-            .map(|r| format!("{}: {}", r.label(true, true), r.metrics.span_digest()))
+            .map(|r| format!("{}: {}", r.label(true, true, with_placement), r.metrics.span_digest()))
             .collect::<Vec<String>>()
             .join("\n")
     }
@@ -488,6 +536,7 @@ impl AzureMacro {
     pub fn print(&self) {
         let with_policy = self.policy_axis();
         let with_queue = self.queue_axis();
+        let with_placement = self.placement_axis();
         let first = &self.rows[0].metrics;
         println!(
             "\n== azure-macro: {} invocations / {} functions / {} apps per variant, \
@@ -511,7 +560,7 @@ impl AzureMacro {
             .map(|r| {
                 let m = &r.metrics;
                 vec![
-                    r.label(with_policy, with_queue),
+                    r.label(with_policy, with_queue, with_placement),
                     m.invocations.to_string(),
                     format!("{:.2}%", 100.0 * m.cold_start_rate()),
                     format!("{:.1}", m.p50_ms()),
@@ -543,7 +592,7 @@ impl AzureMacro {
                 .map(|r| {
                     let m = &r.metrics;
                     vec![
-                        r.label(with_policy, with_queue),
+                        r.label(with_policy, with_queue, with_placement),
                         m.evictions.to_string(),
                         m.evictions_idle.to_string(),
                         m.evictions_pressure.to_string(),
@@ -576,7 +625,7 @@ impl AzureMacro {
                 .map(|r| {
                     let m = &r.metrics;
                     vec![
-                        r.label(with_policy, with_queue),
+                        r.label(with_policy, with_queue, with_placement),
                         m.queued_total.to_string(),
                         m.queue_peak_depth.to_string(),
                         format!("{:.1}", m.queue_wait_s()),
@@ -611,7 +660,7 @@ impl AzureMacro {
                 }
                 println!(
                     "\n{} per-function windows ({} functions, {}s windows):",
-                    r.label(with_policy, with_queue),
+                    r.label(with_policy, with_queue, with_placement),
                     w.len(),
                     w.window_us / 1_000_000
                 );
@@ -664,7 +713,7 @@ impl AzureMacro {
                         )
                     })
                     .collect();
-                println!("{} per-day: {}", r.label(with_policy, with_queue), per.join("; "));
+                println!("{} per-day: {}", r.label(with_policy, with_queue, with_placement), per.join("; "));
             }
         }
         let demoted = self
@@ -680,20 +729,23 @@ impl AzureMacro {
             );
         }
         // Speedups vs the baseline variant under the SAME keep-alive
-        // policy and queue discipline (cross-axis comparisons live in the
-        // tables themselves).
+        // policy, queue discipline and placement strategy (cross-axis
+        // comparisons live in the tables themselves).
         for r in &self.rows {
             if r.variant == Variant::Baseline || r.metrics.p50_ms() == 0.0 {
                 continue;
             }
             let Some(base) = self.rows.iter().find(|b| {
-                b.variant == Variant::Baseline && b.policy == r.policy && b.queue == r.queue
+                b.variant == Variant::Baseline
+                    && b.policy == r.policy
+                    && b.queue == r.queue
+                    && b.placement == r.placement
             }) else {
                 continue;
             };
             println!(
                 "{}: p50 speedup {:.2}x, cold starts {} -> {}",
-                r.label(with_policy, with_queue),
+                r.label(with_policy, with_queue, with_placement),
                 base.metrics.p50_ms() / r.metrics.p50_ms(),
                 base.metrics.cold_starts,
                 r.metrics.cold_starts
@@ -798,6 +850,60 @@ mod tests {
             r.rows[0].metrics.invocations,
             r.rows[2].metrics.invocations
         );
+    }
+
+    #[test]
+    fn placement_axis_produces_placement_major_rows() {
+        let mut cfg = small_cfg();
+        cfg.variants = vec![Variant::Baseline];
+        cfg.queues = vec![QueueKind::LegacyOneShot, QueueKind::FifoFair];
+        cfg.placements = vec![PlacementKind::LeastLoadedMb, PlacementKind::RoundRobin];
+        let r = run_multi(&cfg, &[1], &SweepRunner::new(2)).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        assert!(r.placement_axis());
+        // Placement-major ordering, then queue.
+        assert_eq!(r.rows[0].placement, PlacementKind::LeastLoadedMb);
+        assert_eq!(r.rows[0].queue, QueueKind::LegacyOneShot);
+        assert_eq!(r.rows[1].queue, QueueKind::FifoFair);
+        assert_eq!(r.rows[2].placement, PlacementKind::RoundRobin);
+        // Fully-qualified four-segment digest labels on a placement grid.
+        assert!(r.digest().contains("baseline/fixed/legacy/legacy:"));
+        assert!(r.digest().contains("baseline/fixed/legacy/rr:"));
+        // Lightly-loaded per-app worlds never fill a host, so placement
+        // only moves containers around — volumes agree.
+        assert_eq!(r.rows[0].metrics.invocations, r.rows[2].metrics.invocations);
+    }
+
+    #[test]
+    fn legacy_grid_digest_labels_omit_the_placement_segment() {
+        // No --placement axis → three-segment labels, byte-for-byte the
+        // historical digest format (the pinned goldens depend on it).
+        let r = run_multi(&small_cfg(), &[1], &SweepRunner::new(2)).unwrap();
+        assert!(!r.placement_axis());
+        for line in r.digest().lines() {
+            let label = line.split(':').next().unwrap();
+            assert_eq!(label.split('/').count(), 3, "label {label} gained a segment");
+        }
+        assert!(r.digest().contains("baseline/fixed/legacy:"));
+    }
+
+    #[test]
+    fn heterogeneous_host_classes_flow_into_the_replay_worlds() {
+        use crate::util::config::HostClass;
+        let mut cfg = small_cfg();
+        cfg.pool = PoolMode::Shared;
+        cfg.variants = vec![Variant::Baseline];
+        cfg.placements = vec![PlacementKind::LeastLoadedMb, PlacementKind::WarmAffinity];
+        cfg.host_classes =
+            HostClass::parse_list("cloud:2:4096:1000:local,edge:2:1024:1600:edge");
+        assert!(cfg.host_classes.is_some());
+        assert!(cfg.contended());
+        let a = run_multi(&cfg, &[1], &SweepRunner::new(1)).unwrap();
+        let b = run_multi(&cfg, &[1], &SweepRunner::new(4)).unwrap();
+        assert_eq!(a.digest(), b.digest(), "parallel-invariant at fixed shards");
+        for row in &a.rows {
+            assert!(row.metrics.invocations > 0);
+        }
     }
 
     #[test]

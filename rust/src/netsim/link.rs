@@ -31,6 +31,16 @@ impl Site {
         }
     }
 
+    /// Inverse of [`Site::as_str`] (the `--host-classes` net field).
+    pub fn parse(s: &str) -> Option<Site> {
+        match s {
+            "local" => Some(Site::Local),
+            "edge" => Some(Site::Edge),
+            "remote" => Some(Site::Remote),
+            _ => None,
+        }
+    }
+
     pub fn link(&self) -> Link {
         match self {
             // Loopback: tens of microseconds, memory-bandwidth-ish ceiling.
@@ -116,6 +126,14 @@ mod tests {
         // Remote BDP is large: warming matters most there.
         assert!(remote.bdp_bytes() > 1e6);
         assert!(edge.bdp_bytes() < remote.bdp_bytes());
+    }
+
+    #[test]
+    fn site_parse_roundtrips() {
+        for s in Site::all() {
+            assert_eq!(Site::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(Site::parse("mars"), None);
     }
 
     #[test]

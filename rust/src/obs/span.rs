@@ -32,7 +32,9 @@ pub enum SpanKind {
     Arrival,
     /// Time spent held by the dispatch queue (`dur` = wait).
     Queue,
-    /// Container chosen (`a` = invoker/host id, `b` = memory charge MB).
+    /// Container chosen (`a` = invoker/host id in the low bits with the
+    /// placement-strategy code in the high byte — legacy's code is 0, so
+    /// default-axis payloads are unchanged; `b` = memory charge MB).
     Placement,
     /// Cold start paid (`a` = container id, `b` = memory charge MB).
     ColdStart,

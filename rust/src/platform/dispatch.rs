@@ -49,7 +49,7 @@
 //! and `MemoryAware` breaks charge ties by that same id — no ambient
 //! hashing, no wall-clock.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::platform::function::FunctionId;
 use crate::platform::world::InvocationId;
@@ -197,22 +197,54 @@ impl QueueDiscipline for LegacyOneShot {
 /// time-in-queue of ANY function is bounded by the backlog ahead of it.
 /// (The one sanctioned overtake is the same-function warm fast path —
 /// it consumes no memory the head could have used.)
+///
+/// Internally an id-keyed `BTreeMap` backbone (key order IS arrival
+/// order) plus a per-function id index, so the same-function drain is
+/// O(log n) instead of the old front-to-back scan — deep shared-pool
+/// backlogs used to pay O(queue-depth) per completion. Pop order is
+/// pinned unchanged by the module tests and the replay digests.
 #[derive(Default)]
 pub struct FifoFair {
-    q: VecDeque<Waiting>,
+    /// Arrival-ordered backbone: first key = oldest waiter.
+    q: BTreeMap<InvocationId, Waiting>,
+    /// Ids of each function's waiters, id-ordered (first = oldest). Keyed
+    /// lookups only — never iterated — so the hash map stays inert to
+    /// ordering.
+    by_fn: FxHashMap<FunctionId, BTreeSet<InvocationId>>,
 }
 
 impl FifoFair {
-    /// Insert preserving arrival (id) order. Fresh arrivals carry the
-    /// largest id yet and land at the back; a failed retry is the
-    /// just-popped oldest and lands back at the front.
-    fn insert_ordered(q: &mut VecDeque<Waiting>, w: Waiting) {
-        let pos = q.partition_point(|e| e.inv < w.inv);
-        q.insert(pos, w);
-        debug_assert!(
-            (pos == 0 || q[pos - 1].inv <= q[pos].inv)
-                && (pos + 1 >= q.len() || q[pos].inv <= q[pos + 1].inv),
-            "dispatch queue lost arrival (id) order around position {pos}"
+    fn insert(&mut self, w: Waiting) {
+        self.by_fn.entry(w.function.clone()).or_default().insert(w.inv);
+        self.q.insert(w.inv, w);
+        self.debug_check_index();
+    }
+
+    fn remove(&mut self, id: InvocationId) -> Option<Waiting> {
+        let w = self.q.remove(&id)?;
+        if let Some(set) = self.by_fn.get_mut(&w.function) {
+            set.remove(&id);
+            if set.is_empty() {
+                self.by_fn.remove(&w.function);
+            }
+        }
+        self.debug_check_index();
+        Some(w)
+    }
+
+    fn oldest_of(&self, function: &str) -> Option<InvocationId> {
+        self.by_fn.get(function)?.iter().next().copied()
+    }
+
+    /// The per-function index must partition the backbone exactly — a
+    /// divergence means an insert/remove pair went through one structure
+    /// but not the other.
+    #[inline]
+    fn debug_check_index(&self) {
+        debug_assert_eq!(
+            self.q.len(),
+            self.by_fn.values().map(BTreeSet::len).sum::<usize>(),
+            "fifo per-function index diverged from the queue backbone"
         );
     }
 }
@@ -223,17 +255,19 @@ impl QueueDiscipline for FifoFair {
     }
 
     fn enqueue(&mut self, w: Waiting) {
-        Self::insert_ordered(&mut self.q, w);
+        self.insert(w);
     }
 
     fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
-        let idx = self.q.iter().position(|e| e.function == function)?;
-        self.q.remove(idx).map(|w| w.inv)
+        let id = self.oldest_of(function)?;
+        self.remove(id).map(|w| w.inv)
     }
 
     fn next_candidate(&mut self, _now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
-        let idx = self.q.iter().position(|e| !skip.contains(&e.inv))?;
-        self.q.remove(idx).map(|w| w.inv)
+        // skip holds at most this round's failures (bounded by the
+        // retries_past_failure cap), so the find is O(skip), not O(n).
+        let id = *self.q.keys().find(|id| !skip.contains(id))?;
+        self.remove(id).map(|w| w.inv)
     }
 
     fn drains_until_full(&self) -> bool {
@@ -260,8 +294,22 @@ impl QueueDiscipline for FifoFair {
 /// of size; if that aged retry fails to place, the drain falls back to
 /// the smallest candidate (one skip) so small work keeps flowing while
 /// the aged entry retains its priority for every later drain.
+///
+/// Same indexed backbone as [`FifoFair`] plus a `(charge, id)`-ordered
+/// selection index, so the per-completion smallest-charge pick is
+/// O(log n) instead of the old full-queue `min_by_key` scan. The index's
+/// iteration order — smallest charge first, ties to the lowest id — is
+/// exactly the old scan's first-minimum order, so pop order is
+/// unchanged (pinned by the module tests and the replay digests).
 pub struct MemoryAware {
-    q: VecDeque<Waiting>,
+    /// Arrival-ordered backbone: first key = oldest waiter (the aging
+    /// probe).
+    q: BTreeMap<InvocationId, Waiting>,
+    /// Ids of each function's waiters, id-ordered. Keyed lookups only.
+    by_fn: FxHashMap<FunctionId, BTreeSet<InvocationId>>,
+    /// Charge-ordered selection index: first entry = smallest charge,
+    /// ties to the oldest (lowest id).
+    by_charge: BTreeSet<(u32, InvocationId)>,
     /// Queue wait after which the oldest entry outranks smaller charges.
     pub aging_bound: SimDuration,
     /// Was the most recent candidate an aged-head promotion? Only then is
@@ -286,10 +334,47 @@ impl MemoryAware {
     /// ablations; the platform default is [`MEMAWARE_AGING_BOUND`]).
     pub fn with_aging_bound(aging_bound: SimDuration) -> MemoryAware {
         MemoryAware {
-            q: VecDeque::new(),
+            q: BTreeMap::new(),
+            by_fn: FxHashMap::default(),
+            by_charge: BTreeSet::new(),
             aging_bound,
             last_was_aged: false,
         }
+    }
+
+    fn insert(&mut self, w: Waiting) {
+        self.by_fn.entry(w.function.clone()).or_default().insert(w.inv);
+        self.by_charge.insert((w.charge_mb, w.inv));
+        self.q.insert(w.inv, w);
+        self.debug_check_index();
+    }
+
+    fn remove(&mut self, id: InvocationId) -> Option<Waiting> {
+        let w = self.q.remove(&id)?;
+        self.by_charge.remove(&(w.charge_mb, w.inv));
+        if let Some(set) = self.by_fn.get_mut(&w.function) {
+            set.remove(&id);
+            if set.is_empty() {
+                self.by_fn.remove(&w.function);
+            }
+        }
+        self.debug_check_index();
+        Some(w)
+    }
+
+    /// Both indexes must partition the backbone exactly.
+    #[inline]
+    fn debug_check_index(&self) {
+        debug_assert_eq!(
+            self.q.len(),
+            self.by_fn.values().map(BTreeSet::len).sum::<usize>(),
+            "memaware per-function index diverged from the queue backbone"
+        );
+        debug_assert_eq!(
+            self.q.len(),
+            self.by_charge.len(),
+            "memaware charge index diverged from the queue backbone"
+        );
     }
 }
 
@@ -299,14 +384,15 @@ impl QueueDiscipline for MemoryAware {
     }
 
     fn enqueue(&mut self, w: Waiting) {
-        // Same arrival-ordered backbone as FifoFair: the front is always
-        // the oldest entry (the aging probe), selection scans for charge.
-        FifoFair::insert_ordered(&mut self.q, w);
+        // Same arrival-ordered backbone as FifoFair: the first key is
+        // always the oldest entry (the aging probe), selection goes
+        // through the charge index.
+        self.insert(w);
     }
 
     fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
-        let idx = self.q.iter().position(|e| e.function == function)?;
-        self.q.remove(idx).map(|w| w.inv)
+        let id = self.by_fn.get(function)?.iter().next().copied()?;
+        self.remove(id).map(|w| w.inv)
     }
 
     fn next_candidate(&mut self, now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
@@ -315,30 +401,27 @@ impl QueueDiscipline for MemoryAware {
         // falls back to smallest-charge so small work keeps flowing
         // instead of burning the round on further aged heavyweights.
         if skip.is_empty() {
-            let front = self.q.front()?;
+            let (&id, front) = self.q.iter().next()?;
             if now.since(front.enqueued_at) >= self.aging_bound {
-                // The deque is id-ordered, so the promoted front must be
-                // the globally most-senior waiter — promotion may never
-                // jump a younger entry over an older one.
-                debug_assert!(
-                    self.q.iter().all(|e| e.inv >= front.inv),
-                    "aged-head promotion picked a non-senior entry"
-                );
+                // The backbone is id-keyed, so the promoted first entry
+                // is by construction the globally most-senior waiter —
+                // promotion never jumps a younger entry over an older
+                // one.
                 self.last_was_aged = true;
-                return self.q.pop_front().map(|w| w.inv);
+                return self.remove(id).map(|w| w.inv);
             }
         }
-        // The smallest charge, ties to the oldest (lowest id — the deque
-        // is id-ordered, so the first minimum IS the oldest).
-        let idx = self
-            .q
+        // The smallest charge, ties to the oldest (lowest id): the
+        // (charge, id) index iterates in exactly that order, so the first
+        // non-skipped entry is the old scan's first minimum. skip is at
+        // most one entry (see retries_past_failure), so this is O(skip).
+        let id = self
+            .by_charge
             .iter()
-            .enumerate()
-            .filter(|(_, e)| !skip.contains(&e.inv))
-            .min_by_key(|(_, e)| e.charge_mb)
-            .map(|(i, _)| i)?;
+            .find(|(_, id)| !skip.contains(id))
+            .map(|&(_, id)| id)?;
         self.last_was_aged = false;
-        self.q.remove(idx).map(|w| w.inv)
+        self.remove(id).map(|w| w.inv)
     }
 
     fn drains_until_full(&self) -> bool {
@@ -494,5 +577,121 @@ mod tests {
         );
         assert_eq!(d.take_for_function("mid"), Some(2));
         assert_eq!(d.len(), 1);
+    }
+
+    /// The indexed FifoFair/MemoryAware must pop in EXACTLY the order of
+    /// the pre-index O(n)-scan implementations: drive both against
+    /// reference models (the old `VecDeque` scans, verbatim) through a
+    /// long seeded op mix and pin every returned id. A divergence here
+    /// would shift replay digests, which the azure-macro goldens forbid.
+    #[test]
+    fn indexed_disciplines_match_the_reference_scan_order() {
+        use crate::util::rng::Rng;
+
+        // The old arrival-ordered VecDeque backbone, verbatim.
+        fn insert_ordered(q: &mut VecDeque<Waiting>, w: Waiting) {
+            let pos = q.partition_point(|e| e.inv < w.inv);
+            q.insert(pos, w);
+        }
+
+        struct RefModel {
+            q: VecDeque<Waiting>,
+            memaware: bool,
+            aging_bound: SimDuration,
+        }
+
+        impl RefModel {
+            fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
+                let idx = self.q.iter().position(|e| e.function == function)?;
+                self.q.remove(idx).map(|w| w.inv)
+            }
+
+            fn next_candidate(&mut self, now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
+                if self.memaware {
+                    if skip.is_empty() {
+                        let front = self.q.front()?;
+                        if now.since(front.enqueued_at) >= self.aging_bound {
+                            return self.q.pop_front().map(|w| w.inv);
+                        }
+                    }
+                    let idx = self
+                        .q
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, e)| !skip.contains(&e.inv))
+                        .min_by_key(|(_, e)| e.charge_mb)
+                        .map(|(i, _)| i)?;
+                    self.q.remove(idx).map(|w| w.inv)
+                } else {
+                    let idx = self.q.iter().position(|e| !skip.contains(&e.inv))?;
+                    self.q.remove(idx).map(|w| w.inv)
+                }
+            }
+        }
+
+        let bound = SimDuration::from_secs(20);
+        for (kind, memaware) in [(QueueKind::FifoFair, false), (QueueKind::MemoryAware, true)] {
+            let mut indexed = build(kind, bound);
+            let mut model = RefModel { q: VecDeque::new(), memaware, aging_bound: bound };
+            let mut rng = Rng::new(0xD15B_A7C4 ^ memaware as u64);
+            let functions = ["a", "b", "c", "d"];
+            let charges = [128u32, 256, 256, 512, 2048];
+            let mut next_id: InvocationId = 0;
+            let mut last_popped: Option<InvocationId> = None;
+            for step in 0..2_000u64 {
+                // Sim time advances with the op index so the aging bound
+                // fires on some drains and not others.
+                let now = SimTime(step * 100_000);
+                match rng.below(10) {
+                    // Fresh arrival (ids stay dense and arrival-ordered).
+                    0..=4 => {
+                        let f = functions[rng.below(functions.len() as u64) as usize];
+                        let mb = charges[rng.below(charges.len() as u64) as usize];
+                        let wait = w(next_id, f, mb, step / 10);
+                        indexed.enqueue(wait.clone());
+                        insert_ordered(&mut model.q, wait);
+                        next_id += 1;
+                    }
+                    // Same-function drain.
+                    5..=6 => {
+                        let f = functions[rng.below(functions.len() as u64) as usize];
+                        let got = indexed.take_for_function(f);
+                        assert_eq!(got, model.take_for_function(f), "step {step}: take({f})");
+                        last_popped = None;
+                    }
+                    // Capacity drain, clean round. Remember the pop so a
+                    // later op can replay it as a failed retry.
+                    7..=8 => {
+                        let got = indexed.next_candidate(now, &[]);
+                        assert_eq!(got, model.next_candidate(now, &[]), "step {step}: drain");
+                        last_popped = got;
+                    }
+                    // Failed retry: re-enqueue the last pop at its original
+                    // seniority, then drain again skipping it.
+                    _ => {
+                        if let Some(prev) = last_popped.take() {
+                            let f = functions[rng.below(functions.len() as u64) as usize];
+                            let mb = charges[rng.below(charges.len() as u64) as usize];
+                            let back = w(prev, f, mb, step / 10);
+                            indexed.enqueue(back.clone());
+                            insert_ordered(&mut model.q, back);
+                            let skip = [prev];
+                            let got = indexed.next_candidate(now, &skip);
+                            assert_eq!(got, model.next_candidate(now, &skip), "step {step}: skip drain");
+                        }
+                    }
+                }
+                assert_eq!(indexed.len(), model.q.len(), "step {step}: length");
+            }
+            // Full drain at the end: every remaining pop must agree too.
+            loop {
+                let got = indexed.next_candidate(SimTime(u64::MAX / 2), &[]);
+                assert_eq!(got, model.next_candidate(SimTime(u64::MAX / 2), &[]), "final drain");
+                if got.is_none() {
+                    break;
+                }
+            }
+            assert!(indexed.is_empty());
+        }
     }
 }

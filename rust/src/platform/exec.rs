@@ -138,18 +138,19 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
         }
     }
 
-    // Cold start: charge the function's memory against the cluster; when
-    // it is full, the keep-alive policy may reclaim warm containers.
+    // Cold start: charge the function's memory against the cluster; where
+    // it lands is the placement strategy's call; when the cluster is
+    // full, the keep-alive policy may reclaim warm containers.
     let mb = world.charge_for_function(&function);
     let slot = world
-        .acquire_slot(now, mb)
-        .or_else(|| evict_for_pressure(sim, world, mb, now));
+        .acquire_slot_for(now, mb, &function)
+        .or_else(|| evict_for_pressure(sim, world, mb, now, &function));
 
     if let Some(cid) = slot {
         note_queue_wait(world, inv, now);
         let app = app_of(world, &function);
         world.containers[cid].begin_cold_start_for_app(&function, &app, now);
-        let delay = world.config.cold_start;
+        let delay = world.cold_start_on(cid);
         world
             .obs
             .record(SpanKind::ColdStart, &function, inv as u64, now, delay, cid as u64, mb as u64);
@@ -163,11 +164,17 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
 
     // A charge NO host could ever admit must not queue: it would strand
     // forever (and under strict-FIFO drain head-of-line-block everything
-    // behind it), so it is dropped explicitly and counted. The legacy
-    // path let such requests queue silently; the drop only fires where
-    // that path would have hung, so feasible workloads — including every
-    // pinned digest — are byte-identical.
-    if !world.invokers.iter().any(|i| i.feasible(mb as u64)) {
+    // behind it), so it is dropped explicitly and counted. "Admit" covers
+    // both memory capacity and placement labels — a function whose
+    // affinity labels exclude every capable host is just as stranded. The
+    // legacy path let such requests queue silently; the drop only fires
+    // where that path would have hung, so feasible workloads — including
+    // every pinned digest — are byte-identical.
+    if !world
+        .invokers
+        .iter()
+        .any(|i| i.feasible(mb as u64) && world.placement_admits(&function, i.id))
+    {
         world.invocations[inv].done = true;
         world.metrics.dropped_infeasible += 1;
         world
@@ -247,6 +254,7 @@ fn evict_for_pressure(
     world: &mut World,
     mb: u32,
     now: SimTime,
+    function: &str,
 ) -> Option<ContainerId> {
     let policy = world.keep_alive.clone();
     if !policy.evicts_under_pressure(&world.config) {
@@ -272,7 +280,11 @@ fn evict_for_pressure(
         let host_ok: Vec<bool> = world
             .invokers
             .iter()
-            .map(|inv| inv.feasible(mb as u64) && inv.free_mb() + reclaimable[inv.id] >= mb as u64)
+            .map(|inv| {
+                inv.feasible(mb as u64)
+                    && inv.free_mb() + reclaimable[inv.id] >= mb as u64
+                    && world.placement_admits(function, inv.id)
+            })
             .collect();
         let masked: Vec<bool> = match target {
             Some(t) if host_ok[t] => host_ok
@@ -298,7 +310,7 @@ fn evict_for_pressure(
         target = Some(world.containers[victim].invoker);
         cancel_idle_timer(sim, world, victim);
         world.evict_container(victim, EvictionCause::Pressure, now);
-        if let Some(cid) = world.acquire_slot(now, mb) {
+        if let Some(cid) = world.acquire_slot_for(now, mb, function) {
             return Some(cid);
         }
     }
@@ -328,7 +340,10 @@ fn begin_body(
         ctx.start_kind = kind;
     }
     if world.obs.is_enabled() {
-        let host = world.containers[cid].invoker as u64;
+        // Host id in the low bits, placement-strategy code in the high
+        // byte (legacy's code is 0, so default-axis spans are untouched).
+        let host = world.containers[cid].invoker as u64
+            | (world.config.placement.code() << 56);
         let charge = world.containers[cid].charged_mb as u64;
         world
             .obs
@@ -382,15 +397,17 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
         Op::InvokeNext { function: next, trigger } => {
             let trigger = *trigger;
             // Commit the trigger: the next function starts after the
-            // trigger service's delay (Table 1)...
+            // trigger service's delay (Table 1), plus the inter-node hop
+            // off this container's host (zero on homogeneous clusters)...
             let delay = trigger.sample_delay(&mut world.rng);
+            let hop = world.chain_edge_delay(cid);
             let next_fn = next.clone();
-            sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
+            sim.schedule(TRIGGER_COMMIT + delay + hop, move |sim, w| {
                 invoke(sim, w, &next_fn);
             });
             world
                 .obs
-                .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay, 0, 0);
+                .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay + hop, 0, 0);
             // A deterministic edge: record follow-through for the
             // predictor's confidence model.
             world.chain_pred.observe_edge(&function, next, true);
@@ -435,13 +452,14 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             }
             if let Some(next) = &taken {
                 let delay = trigger.sample_delay(&mut world.rng);
+                let hop = world.chain_edge_delay(cid);
                 let next_fn = next.clone();
-                sim.schedule(TRIGGER_COMMIT + delay, move |sim, w| {
+                sim.schedule(TRIGGER_COMMIT + delay + hop, move |sim, w| {
                     invoke(sim, w, &next_fn);
                 });
                 world
                     .obs
-                    .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay, 0, 0);
+                    .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay + hop, 0, 0);
             }
             // Predict (and maybe freshen) every plausible branch — the
             // learned branch confidence gates which ones are worth it.
@@ -1002,11 +1020,11 @@ pub fn start_freshen(
             // (It never evicts anyone for the privilege — speculative work
             // only uses genuinely free memory.)
             let mb = world.charge_for_function(function);
-            let cid = world.acquire_slot(now, mb)?;
+            let cid = world.acquire_slot_for(now, mb, function)?;
             let app = app_of(world, function);
             world.containers[cid].begin_cold_start_for_app(function, &app, now);
             let f = function.to_string();
-            let cold = world.config.cold_start;
+            let cold = world.cold_start_on(cid);
             sim.schedule(cold, move |sim, w| {
                 w.containers[cid].finish_init(sim.now());
                 launch_freshen_on(sim, w, &f, cid, prediction_id);

@@ -125,6 +125,13 @@ pub struct FunctionSpec {
     /// default) — §3.2: "the TTL could be set ... by freshen configuration
     /// values specified by the function developer".
     pub prefetch_ttl: Option<SimDuration>,
+    /// Host-class names this function may run on (deployment requirement,
+    /// edgeless-orc style). Empty = any host. Only consulted by the
+    /// `Constrained` placement strategy on a heterogeneous cluster.
+    pub affinity: Vec<String>,
+    /// Host-class names this function must NOT run on. Same scope as
+    /// [`FunctionSpec::affinity`].
+    pub anti_affinity: Vec<String>,
 }
 
 impl FunctionSpec {
@@ -136,6 +143,8 @@ impl FunctionSpec {
             memory_mb: 256,
             category: ServiceCategory::Standard,
             prefetch_ttl: None,
+            affinity: Vec::new(),
+            anti_affinity: Vec::new(),
         }
     }
 

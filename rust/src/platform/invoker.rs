@@ -22,6 +22,10 @@ use crate::platform::container::ContainerId;
 #[derive(Debug, Clone)]
 pub struct Invoker {
     pub id: usize,
+    /// Index into `Config::host_classes` (0 on a homogeneous cluster,
+    /// where no classes are declared). Drives per-class cold-start
+    /// multipliers, network profiles, and label-constrained placement.
+    pub class: usize,
     /// Containers resident on this host (indices into the world table).
     pub containers: Vec<ContainerId>,
     /// Memory capacity, MB.
@@ -32,8 +36,13 @@ pub struct Invoker {
 
 impl Invoker {
     pub fn new(id: usize, capacity_mb: u64) -> Invoker {
+        Invoker::new_in_class(id, 0, capacity_mb)
+    }
+
+    pub fn new_in_class(id: usize, class: usize, capacity_mb: u64) -> Invoker {
         Invoker {
             id,
+            class,
             containers: Vec::new(),
             capacity_mb,
             used_mb: 0,

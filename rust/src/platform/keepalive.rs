@@ -93,16 +93,19 @@ pub trait KeepAlivePolicy {
     }
 }
 
-/// The least-recently-used warm container on an eligible host, if any
-/// (ties break toward the lowest container id, matching the historical
-/// scan order).
+/// The least-recently-used warm container on an eligible host, if any.
+/// `last_used` ties break on container id as an EXPLICIT secondary key:
+/// the historical scan got lowest-id-wins implicitly from `min_by_key`'s
+/// first-minimum rule over the container vec, but that coupling would
+/// silently depend on allocation order the moment anything (heterogeneous
+/// host classes, a future slab re-layout) reorders the vec.
 pub fn lru_warm_victim(containers: &[Container], host_ok: &[bool]) -> Option<ContainerId> {
     containers
         .iter()
         .filter(|c| {
             c.state == ContainerState::Warm && host_ok.get(c.invoker).copied().unwrap_or(false)
         })
-        .min_by_key(|c| c.last_used)
+        .min_by_key(|c| (c.last_used, c.id))
         .map(|c| c.id)
 }
 

@@ -17,6 +17,10 @@
 //! - [`world`] — the composed simulation world.
 //! - [`dispatch`] — pluggable queue disciplines for invocations waiting
 //!   on cluster memory (legacy one-shot / FIFO-fair / memory-aware).
+//! - [`placement`] — pluggable placement strategies choosing the invoker
+//!   host a cold start lands on (legacy least-loaded / random /
+//!   round-robin / warm-affinity / label-constrained), over optionally
+//!   heterogeneous host classes.
 //! - [`exec`] — the event-driven op executor (function *and* freshen),
 //!   including the controller's dispatch/queue/eviction policies.
 
@@ -28,6 +32,7 @@ pub mod exec;
 pub mod function;
 pub mod invoker;
 pub mod keepalive;
+pub mod placement;
 pub mod registry;
 pub mod world;
 

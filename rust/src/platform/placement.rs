@@ -1,0 +1,528 @@
+//! Pluggable placement: which invoker host a cold start lands on.
+//!
+//! Mirrors the `QueueDiscipline`/`KeepAlivePolicy` extractions: the
+//! historical inline host scan in `World::acquire_slot` becomes the
+//! [`LeastLoadedMb`] strategy (byte-identical, digest-pinned default),
+//! and alternatives slot in behind the same [`Placement`] trait —
+//! spreading baselines ([`RandomUniform`], [`RoundRobin`]), warm-state
+//! locality ([`WarmAffinity`]), and label-constrained scheduling over
+//! heterogeneous host classes ([`Constrained`], after edgeless-orc's
+//! deployment requirements). Strategies are pure decision procedures over
+//! a read-only [`PlaceCtx`] snapshot: they never mutate pool state and
+//! never consume the world's main RNG stream, so the default axis stays
+//! byte-identical and every strategy inherits the shard×parallel
+//! determinism contract for free.
+
+use crate::platform::container::{Container, ContainerId, ContainerState};
+use crate::platform::invoker::Invoker;
+use crate::util::config::{HostClass, PlacementKind};
+use crate::util::rng::Rng;
+
+/// What a strategy decided: recycle a parked (evicted) container slot, or
+/// create a fresh container on a chosen host. The world applies the
+/// decision (allocation + memory charge) so strategies stay read-only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Recycle this evicted container in place (keeps its id and host).
+    Reuse(ContainerId),
+    /// Create a new container on this invoker host.
+    Create(usize),
+}
+
+/// Read-only placement context: the pool snapshot plus the charge and the
+/// function's deployment labels. Borrowed field-disjoint from the world
+/// so a decision can be taken while the placement RNG is held mutably.
+pub struct PlaceCtx<'a> {
+    /// Function being placed (empty for anonymous/test acquisitions).
+    pub function: &'a str,
+    /// Memory the new container will charge its host, MB.
+    pub charge_mb: u64,
+    pub containers: &'a [Container],
+    pub invokers: &'a [Invoker],
+    /// Declared host classes; empty on a homogeneous cluster.
+    pub classes: &'a [HostClass],
+    /// The function's affinity labels (host-class names; empty = any).
+    pub affinity: &'a [String],
+    /// The function's anti-affinity labels.
+    pub anti_affinity: &'a [String],
+}
+
+impl PlaceCtx<'_> {
+    /// Can `host` take this charge right now?
+    pub fn has_room(&self, host: usize) -> bool {
+        self.invokers[host].has_room(self.charge_mb)
+    }
+
+    /// Do the function's labels admit `host`? On a homogeneous cluster
+    /// there are no class names to match: unconstrained functions go
+    /// anywhere, while a non-empty affinity list can match nothing (the
+    /// deployment asked for a class the cluster doesn't declare).
+    pub fn labels_admit(&self, host: usize) -> bool {
+        if self.classes.is_empty() {
+            return self.affinity.is_empty();
+        }
+        let name = &self.classes[self.invokers[host].class].name;
+        (self.affinity.is_empty() || self.affinity.iter().any(|l| l == name))
+            && !self.anti_affinity.iter().any(|l| l == name)
+    }
+
+    /// Settle onto a chosen host: recycle its lowest-id parked slot if it
+    /// has one, else create. (The legacy strategy instead scans parked
+    /// slots globally — see [`legacy_place`].)
+    pub fn settle_on(&self, host: usize) -> Decision {
+        match self
+            .containers
+            .iter()
+            .find(|c| c.state == ContainerState::Evicted && c.invoker == host)
+        {
+            Some(c) => Decision::Reuse(c.id),
+            None => Decision::Create(host),
+        }
+    }
+
+    /// Hosts able to take the charge, id order.
+    fn hosts_with_room(&self) -> Vec<usize> {
+        self.invokers
+            .iter()
+            .filter(|i| i.has_room(self.charge_mb))
+            .map(|i| i.id)
+            .collect()
+    }
+}
+
+/// The historical inline scan from `World::acquire_slot`, verbatim:
+/// recycle the first (lowest-id) parked container anywhere whose host has
+/// room, else create on the least-loaded host (ties: lowest id; Rust's
+/// `min_by_key` keeps the first minimum). Kept as a free function so
+/// [`WarmAffinity`] can fall back to the exact same order.
+pub fn legacy_place(ctx: &PlaceCtx) -> Option<Decision> {
+    if let Some(cid) = ctx
+        .containers
+        .iter()
+        .find(|c| {
+            c.state == ContainerState::Evicted && ctx.invokers[c.invoker].has_room(ctx.charge_mb)
+        })
+        .map(|c| c.id)
+    {
+        return Some(Decision::Reuse(cid));
+    }
+    ctx.invokers
+        .iter()
+        .filter(|i| i.has_room(ctx.charge_mb))
+        .min_by_key(|i| i.used_mb)
+        .map(|i| Decision::Create(i.id))
+}
+
+/// A placement strategy. `place` returns `None` when no host can take the
+/// charge (the cluster is full for this function — the caller falls back
+/// to pressure eviction or queues). `admits` is the label-feasibility
+/// gate the executor's drop/evict paths consult; only [`Constrained`]
+/// restricts it.
+pub trait Placement {
+    fn name(&self) -> &'static str;
+
+    /// Choose where the next container for `ctx.function` goes. `rng` is
+    /// the world's dedicated placement stream (forked from the seed, never
+    /// the main simulation stream); deterministic strategies must not
+    /// draw from it.
+    fn place(&mut self, ctx: &PlaceCtx, rng: &mut Rng) -> Option<Decision>;
+
+    /// May `ctx.function` ever run on `host`? Gates the infeasible-drop
+    /// check and pressure-eviction host filter.
+    fn admits(&self, ctx: &PlaceCtx, host: usize) -> bool {
+        let _ = (ctx, host);
+        true
+    }
+}
+
+/// Legacy: global parked-slot recycle, else least-loaded host.
+#[derive(Debug, Default)]
+pub struct LeastLoadedMb;
+
+impl Placement for LeastLoadedMb {
+    fn name(&self) -> &'static str {
+        "legacy"
+    }
+
+    fn place(&mut self, ctx: &PlaceCtx, _rng: &mut Rng) -> Option<Decision> {
+        legacy_place(ctx)
+    }
+}
+
+/// Uniformly random host among those with room.
+#[derive(Debug, Default)]
+pub struct RandomUniform;
+
+impl Placement for RandomUniform {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn place(&mut self, ctx: &PlaceCtx, rng: &mut Rng) -> Option<Decision> {
+        let hosts = ctx.hosts_with_room();
+        if hosts.is_empty() {
+            return None;
+        }
+        let host = hosts[rng.below(hosts.len() as u64) as usize];
+        Some(ctx.settle_on(host))
+    }
+}
+
+/// Rotate a cursor over the hosts, skipping full ones.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "rr"
+    }
+
+    fn place(&mut self, ctx: &PlaceCtx, _rng: &mut Rng) -> Option<Decision> {
+        let n = ctx.invokers.len();
+        for step in 0..n {
+            let host = (self.cursor + step) % n;
+            if ctx.has_room(host) {
+                self.cursor = (host + 1) % n;
+                return Some(ctx.settle_on(host));
+            }
+        }
+        None
+    }
+}
+
+/// Prefer hosts already holding live (non-evicted) containers of the
+/// function — a freshened or warm container next door is what placement
+/// can exploit — least-loaded among them; fall back to the exact legacy
+/// scan when no such host has room.
+#[derive(Debug, Default)]
+pub struct WarmAffinity;
+
+impl Placement for WarmAffinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn place(&mut self, ctx: &PlaceCtx, _rng: &mut Rng) -> Option<Decision> {
+        let holding = ctx
+            .containers
+            .iter()
+            .filter(|c| {
+                c.state != ContainerState::Evicted
+                    && c.function.as_deref() == Some(ctx.function)
+                    && !ctx.function.is_empty()
+            })
+            .map(|c| c.invoker);
+        let mut marked = vec![false; ctx.invokers.len()];
+        for host in holding {
+            marked[host] = true;
+        }
+        let preferred = ctx
+            .invokers
+            .iter()
+            .filter(|i| marked[i.id] && i.has_room(ctx.charge_mb))
+            .min_by_key(|i| i.used_mb)
+            .map(|i| i.id);
+        match preferred {
+            Some(host) => Some(ctx.settle_on(host)),
+            None => legacy_place(ctx),
+        }
+    }
+}
+
+/// Affinity/anti-affinity label matching against host-class names,
+/// least-loaded among the admitted hosts. A function whose labels admit
+/// no host is infeasible for the whole cluster (`place` and `admits`
+/// agree, so such invocations drop rather than queue forever).
+#[derive(Debug, Default)]
+pub struct Constrained;
+
+impl Placement for Constrained {
+    fn name(&self) -> &'static str {
+        "constrained"
+    }
+
+    fn place(&mut self, ctx: &PlaceCtx, _rng: &mut Rng) -> Option<Decision> {
+        ctx.invokers
+            .iter()
+            .filter(|i| ctx.labels_admit(i.id) && i.has_room(ctx.charge_mb))
+            .min_by_key(|i| i.used_mb)
+            .map(|i| ctx.settle_on(i.id))
+    }
+
+    fn admits(&self, ctx: &PlaceCtx, host: usize) -> bool {
+        ctx.labels_admit(host)
+    }
+}
+
+/// Build the configured strategy.
+pub fn build(kind: PlacementKind) -> Box<dyn Placement> {
+    match kind {
+        PlacementKind::LeastLoadedMb => Box::new(LeastLoadedMb),
+        PlacementKind::RandomUniform => Box::new(RandomUniform),
+        PlacementKind::RoundRobin => Box::new(RoundRobin::default()),
+        PlacementKind::WarmAffinity => Box::new(WarmAffinity),
+        PlacementKind::Constrained => Box::new(Constrained),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::SimTime;
+
+    fn cluster(caps: &[u64]) -> Vec<Invoker> {
+        caps.iter()
+            .enumerate()
+            .map(|(i, &c)| Invoker::new(i, c))
+            .collect()
+    }
+
+    fn ctx<'a>(
+        function: &'a str,
+        charge_mb: u64,
+        containers: &'a [Container],
+        invokers: &'a [Invoker],
+    ) -> PlaceCtx<'a> {
+        PlaceCtx {
+            function,
+            charge_mb,
+            containers,
+            invokers,
+            classes: &[],
+            affinity: &[],
+            anti_affinity: &[],
+        }
+    }
+
+    /// A live container of `function` parked on `host` (for affinity and
+    /// reuse scans). `evicted` parks it instead.
+    fn seeded_container(id: usize, host: usize, function: &str, evicted: bool) -> Container {
+        let mut c = Container::new(id, host, SimTime::ZERO);
+        if !evicted {
+            c.begin_cold_start(function, SimTime::ZERO);
+        }
+        c
+    }
+
+    #[test]
+    fn legacy_reuses_lowest_id_parked_slot_globally() {
+        let mut invokers = cluster(&[512, 512]);
+        invokers[0].charge(512); // host 0 full: its parked slot is skipped
+        let containers = vec![
+            seeded_container(0, 0, "f", true),
+            seeded_container(1, 1, "f", true),
+        ];
+        let c = ctx("f", 256, &containers, &invokers);
+        assert_eq!(legacy_place(&c), Some(Decision::Reuse(1)));
+    }
+
+    #[test]
+    fn legacy_creates_on_least_loaded_with_lowest_id_ties() {
+        let mut invokers = cluster(&[512, 512, 512]);
+        invokers[0].charge(256);
+        let containers = Vec::new();
+        let c = ctx("f", 256, &containers, &invokers);
+        // Hosts 1 and 2 tie at 0 used: first minimum wins (host 1).
+        assert_eq!(legacy_place(&c), Some(Decision::Create(1)));
+        let full = ctx("f", 1024, &containers, &invokers);
+        assert_eq!(legacy_place(&full), None);
+    }
+
+    #[test]
+    fn least_loaded_strategy_is_the_legacy_scan() {
+        let mut s = LeastLoadedMb;
+        let mut rng = Rng::new(1);
+        let invokers = cluster(&[512, 512]);
+        let containers = vec![seeded_container(0, 1, "f", true)];
+        let c = ctx("f", 256, &containers, &invokers);
+        assert_eq!(s.place(&c, &mut rng), legacy_place(&c));
+        assert_eq!(s.name(), "legacy");
+    }
+
+    #[test]
+    fn random_only_picks_hosts_with_room() {
+        let mut s = RandomUniform;
+        let mut rng = Rng::new(7);
+        let mut invokers = cluster(&[512, 512, 512]);
+        invokers[0].charge(512);
+        invokers[2].charge(512);
+        let containers = Vec::new();
+        let c = ctx("f", 256, &containers, &invokers);
+        for _ in 0..32 {
+            // Only host 1 has room: every draw must land there.
+            assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(1)));
+        }
+        let full = ctx("f", 1024, &containers, &invokers);
+        assert_eq!(s.place(&full, &mut rng), None);
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_full_hosts() {
+        let mut s = RoundRobin::default();
+        let mut rng = Rng::new(1);
+        let mut invokers = cluster(&[512, 512, 512]);
+        invokers[1].charge(512);
+        let containers = Vec::new();
+        let c = ctx("f", 256, &containers, &invokers);
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
+        // Host 1 is full: the cursor skips to 2, then wraps to 0.
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(2)));
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
+        let full = ctx("f", 1024, &containers, &invokers);
+        assert_eq!(s.place(&full, &mut rng), None);
+    }
+
+    #[test]
+    fn round_robin_settles_on_parked_slots() {
+        let mut s = RoundRobin::default();
+        let mut rng = Rng::new(1);
+        let invokers = cluster(&[512, 512]);
+        let containers = vec![seeded_container(0, 0, "f", true)];
+        let c = ctx("f", 256, &containers, &invokers);
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Reuse(0)));
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(1)));
+    }
+
+    #[test]
+    fn warm_affinity_lands_next_to_live_containers() {
+        let mut s = WarmAffinity;
+        let mut rng = Rng::new(1);
+        let mut invokers = cluster(&[1024, 1024, 1024]);
+        invokers[2].charge(256);
+        let containers = vec![seeded_container(0, 2, "f", false)];
+        let c = ctx("f", 256, &containers, &invokers);
+        // Host 2 holds f's live container: preferred despite more load.
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(2)));
+        // A different function sees no warm host: legacy least-loaded.
+        let g = ctx("g", 256, &containers, &invokers);
+        assert_eq!(s.place(&g, &mut rng), legacy_place(&g));
+    }
+
+    #[test]
+    fn warm_affinity_falls_back_to_legacy_when_warm_host_is_full() {
+        let mut s = WarmAffinity;
+        let mut rng = Rng::new(1);
+        let mut invokers = cluster(&[512, 512]);
+        invokers[1].charge(512);
+        let containers = vec![seeded_container(0, 1, "f", false)];
+        let c = ctx("f", 256, &containers, &invokers);
+        assert_eq!(s.place(&c, &mut rng), legacy_place(&c));
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
+    }
+
+    /// The warm-hit locality probe: with warm state parked on one host,
+    /// affinity placement lands every subsequent container of the
+    /// function next to it (structural: the host always has room here),
+    /// while uniform-random placement spreads across the cluster. 60
+    /// draws over 4 roomy hosts all landing on one host has probability
+    /// 4^-60 — the assertion is deterministic for any real RNG stream.
+    #[test]
+    fn warm_affinity_beats_random_on_locality() {
+        let invokers = cluster(&[1 << 30, 1 << 30, 1 << 30, 1 << 30]);
+        let containers = vec![seeded_container(0, 2, "f", false)];
+        let c = ctx("f", 256, &containers, &invokers);
+        let mut affinity_hits = 0;
+        let mut random_hits = 0;
+        let mut total = 0;
+        for seed in [11u64, 22, 33] {
+            let mut rng = Rng::new(seed);
+            let mut aff = WarmAffinity;
+            let mut rand = RandomUniform;
+            for _ in 0..20 {
+                total += 1;
+                if aff.place(&c, &mut rng) == Some(Decision::Create(2)) {
+                    affinity_hits += 1;
+                }
+                if rand.place(&c, &mut rng) == Some(Decision::Create(2)) {
+                    random_hits += 1;
+                }
+            }
+        }
+        assert_eq!(affinity_hits, total, "affinity always lands by the warm state");
+        assert!(
+            random_hits < total,
+            "random placement must spread ({random_hits}/{total} on the warm host)"
+        );
+    }
+
+    #[test]
+    fn constrained_matches_labels_against_class_names() {
+        let classes = crate::util::config::HostClass::parse_list(
+            "cloud:2:4096:1000:local,edge:2:1024:1600:edge",
+        )
+        .unwrap();
+        let mut invokers: Vec<Invoker> = Vec::new();
+        for (id, (class, cap)) in [(0usize, 4096u64), (0, 4096), (1, 1024), (1, 1024)]
+            .into_iter()
+            .enumerate()
+        {
+            invokers.push(Invoker::new_in_class(id, class, cap));
+        }
+        invokers[2].charge(512);
+        let containers = Vec::new();
+        let mut rng = Rng::new(1);
+        let mut s = Constrained;
+        let edge_only = vec!["edge".to_string()];
+        let not_edge = vec!["edge".to_string()];
+        let nowhere = vec!["gpu".to_string()];
+        // Affinity to edge: least-loaded edge host (3, host 2 is loaded).
+        let c = PlaceCtx {
+            function: "f",
+            charge_mb: 256,
+            containers: &containers,
+            invokers: &invokers,
+            classes: &classes,
+            affinity: &edge_only,
+            anti_affinity: &[],
+        };
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(3)));
+        assert!(s.admits(&c, 2) && s.admits(&c, 3));
+        assert!(!s.admits(&c, 0) && !s.admits(&c, 1));
+        // Anti-affinity to edge: cloud hosts only.
+        let c = PlaceCtx {
+            anti_affinity: &not_edge,
+            affinity: &[],
+            ..c
+        };
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
+        assert!(s.admits(&c, 0) && !s.admits(&c, 3));
+        // Labels matching no declared class: infeasible everywhere.
+        let c = PlaceCtx {
+            affinity: &nowhere,
+            anti_affinity: &[],
+            ..c
+        };
+        assert_eq!(s.place(&c, &mut rng), None);
+        assert!(!s.admits(&c, 0));
+        // Unconstrained functions go anywhere, least-loaded first.
+        let c = PlaceCtx {
+            affinity: &[],
+            ..c
+        };
+        assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
+    }
+
+    #[test]
+    fn homogeneous_cluster_admits_only_unlabelled_functions() {
+        let invokers = cluster(&[512]);
+        let containers = Vec::new();
+        let labels = vec!["edge".to_string()];
+        let open = ctx("f", 256, &containers, &invokers);
+        assert!(open.labels_admit(0));
+        let closed = PlaceCtx {
+            affinity: &labels,
+            ..ctx("f", 256, &containers, &invokers)
+        };
+        assert!(!closed.labels_admit(0));
+    }
+
+    #[test]
+    fn build_covers_every_kind() {
+        for kind in PlacementKind::all() {
+            let strategy = build(kind);
+            assert_eq!(strategy.name(), kind.as_str());
+        }
+    }
+}

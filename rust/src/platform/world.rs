@@ -17,8 +17,10 @@ use crate::platform::container::{Container, ContainerId, ContainerState};
 use crate::platform::dispatch::{self, QueueDiscipline};
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::FunctionId;
+use crate::netsim::link::Site;
 use crate::platform::invoker::Invoker;
 use crate::platform::keepalive::{self, KeepAlivePolicy};
+use crate::platform::placement::{self, Decision, PlaceCtx, Placement};
 use crate::platform::registry::Registry;
 use crate::predict::chain::ChainPredictor;
 use crate::predict::confidence::PredictionTracker;
@@ -27,8 +29,16 @@ use crate::predict::learned::LearnedScorer;
 use crate::simcore::waitlist::WaitList;
 use crate::simcore::Sim;
 use crate::util::config::{Config, MemoryAccounting, UNIFORM_SLOT_MB};
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use crate::util::time::{SimDuration, SimTime};
+
+/// Stream tag forking the placement RNG off the world seed: random
+/// placement draws never perturb the main simulation stream, so the
+/// default (legacy, draw-free) axis stays byte-identical.
+const PLACEMENT_STREAM: u64 = 0x9C7A_CE00;
+
+/// Stream tag for inter-node network jitter on cross-node chain edges.
+const NET_STREAM: u64 = 0x0E79_E700;
 
 /// Dense invocation identifier (index into `World::invocations`).
 pub type InvocationId = usize;
@@ -101,6 +111,15 @@ pub struct World {
     /// Invocations waiting for cluster memory, behind the configured
     /// queue discipline (built from `config.queue`; swappable for tests).
     pub dispatch: Box<dyn QueueDiscipline>,
+    /// Placement strategy choosing the invoker host for cold starts
+    /// (built from `config.placement`; swappable for tests).
+    pub placement: Box<dyn Placement>,
+    /// Dedicated RNG stream for randomized placement (forked from the
+    /// seed; deterministic strategies never draw from it).
+    pub placement_rng: Rng,
+    /// Dedicated RNG stream for inter-node latency jitter on cross-node
+    /// chain edges (homogeneous clusters never draw from it).
+    pub net_rng: Rng,
     /// `FrWait` parking: one wait list per (container, resource index).
     pub fr_waiters: FxHashMap<(ContainerId, usize), WaitList<World>>,
     /// Freshen charges awaiting hit/miss resolution.
@@ -136,15 +155,23 @@ pub type PlatformSim = Sim<World>;
 impl World {
     pub fn new(config: Config) -> World {
         let rng = Rng::new(config.seed);
+        let placement_rng = Rng::new(mix64(config.seed, PLACEMENT_STREAM));
+        let net_rng = Rng::new(mix64(config.seed, NET_STREAM));
         let gate = FreshenGate::new(config.freshen.clone());
-        let capacity_mb = config.invoker_capacity_mb();
-        let invokers = (0..config.invokers)
-            .map(|i| Invoker::new(i, capacity_mb))
+        let invokers = config
+            .host_layout()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (class, capacity_mb))| Invoker::new_in_class(i, class, capacity_mb))
             .collect();
         let keep_alive = keepalive::build(config.keep_alive);
         let dispatch = dispatch::build(config.queue, config.queue_aging_bound);
+        let placement = placement::build(config.placement);
         World {
             dispatch,
+            placement,
+            placement_rng,
+            net_rng,
             rng,
             gate,
             invokers,
@@ -214,44 +241,118 @@ impl World {
         }
     }
 
-    /// Find a container slot with `memory_mb` of host memory behind it —
-    /// an evicted container on a host with room, or a new container on
-    /// the freest host — and charge the memory. Returns `None` when no
-    /// host can take the charge (the cluster is memory-full).
-    ///
-    /// Under uniform accounting this admits byte-identically to the old
-    /// count-bounded pool: an evicted slot's host always has a free slot's
-    /// worth of memory (its eviction released it), and "freest host" is
-    /// "least-occupied host" when every charge is equal.
+    /// Find a container slot with `memory_mb` of host memory behind it
+    /// for an anonymous acquisition (no function identity: placement sees
+    /// no warm state and no labels). Equivalent to
+    /// [`World::acquire_slot_for`] with an empty function name.
     pub fn acquire_slot(&mut self, now: SimTime, memory_mb: u32) -> Option<ContainerId> {
-        let mb = memory_mb as u64;
-        let reuse = self
-            .containers
-            .iter()
-            .find(|c| {
-                c.state == ContainerState::Evicted && self.invokers[c.invoker].has_room(mb)
-            })
-            .map(|c| c.id);
-        let cid = match reuse {
-            Some(cid) => cid,
-            None => {
-                // Create a new container on the invoker with the most
-                // free memory (ties: lowest id).
-                let inv = self
-                    .invokers
-                    .iter_mut()
-                    .filter(|i| i.has_room(mb))
-                    .min_by_key(|i| i.used_mb)?;
+        self.acquire_slot_for(now, memory_mb, "")
+    }
+
+    /// Find a container slot with `memory_mb` of host memory behind it —
+    /// where the charge lands is the configured [`Placement`] strategy's
+    /// decision (the default [`placement::LeastLoadedMb`] reproduces the
+    /// historical inline scan byte-for-byte: recycle the first evicted
+    /// container on a host with room, else create on the freest host) —
+    /// and charge the memory. Returns `None` when no host the strategy
+    /// admits can take the charge (the cluster is memory-full, or the
+    /// function's labels exclude every host with room).
+    ///
+    /// Under uniform accounting the default admits byte-identically to
+    /// the old count-bounded pool: an evicted slot's host always has a
+    /// free slot's worth of memory (its eviction released it), and
+    /// "freest host" is "least-occupied host" when every charge is equal.
+    pub fn acquire_slot_for(
+        &mut self,
+        now: SimTime,
+        memory_mb: u32,
+        function: &str,
+    ) -> Option<ContainerId> {
+        let decision = {
+            let (affinity, anti_affinity) = self
+                .registry
+                .function(function)
+                .map(|f| (f.affinity.as_slice(), f.anti_affinity.as_slice()))
+                .unwrap_or((&[], &[]));
+            let ctx = PlaceCtx {
+                function,
+                charge_mb: memory_mb as u64,
+                containers: &self.containers,
+                invokers: &self.invokers,
+                classes: &self.config.host_classes,
+                affinity,
+                anti_affinity,
+            };
+            self.placement.place(&ctx, &mut self.placement_rng)?
+        };
+        let cid = match decision {
+            Decision::Reuse(cid) => cid,
+            Decision::Create(host) => {
                 let id = self.containers.len();
-                inv.containers.push(id);
-                let invoker_id = inv.id;
-                self.containers.push(Container::new(id, invoker_id, now));
+                self.invokers[host].containers.push(id);
+                self.containers.push(Container::new(id, host, now));
                 id
             }
         };
         self.charge_container(cid, memory_mb, now);
         self.debug_check_memory_accounting();
         Some(cid)
+    }
+
+    /// May `function` ever run on `host` under the configured placement
+    /// strategy? Only [`placement::Constrained`] restricts this (label
+    /// matching); the executor's infeasible-drop check and the pressure
+    /// path's host filter both consult it so label-excluded functions
+    /// drop instead of queueing or stealing memory they cannot use.
+    pub fn placement_admits(&self, function: &str, host: usize) -> bool {
+        let (affinity, anti_affinity) = self
+            .registry
+            .function(function)
+            .map(|f| (f.affinity.as_slice(), f.anti_affinity.as_slice()))
+            .unwrap_or((&[], &[]));
+        let ctx = PlaceCtx {
+            function,
+            charge_mb: 0,
+            containers: &self.containers,
+            invokers: &self.invokers,
+            classes: &self.config.host_classes,
+            affinity,
+            anti_affinity,
+        };
+        self.placement.admits(&ctx, host)
+    }
+
+    /// The cold-start cost of provisioning `cid` on its host: the
+    /// configured base cost scaled by the host class's permille
+    /// multiplier. Homogeneous clusters (and the 1000-permille identity)
+    /// return the base duration untouched, keeping legacy digests exact.
+    pub fn cold_start_on(&self, cid: ContainerId) -> SimDuration {
+        let base = self.config.cold_start;
+        if self.config.host_classes.is_empty() {
+            return base;
+        }
+        let class = self.invokers[self.containers[cid].invoker].class;
+        let permille = self.config.host_classes[class].cold_start_mult_permille;
+        if permille == 1000 {
+            return base;
+        }
+        SimDuration(base.0.saturating_mul(permille as u64) / 1000)
+    }
+
+    /// Inter-node latency charged on a chain edge leaving `cid`'s host:
+    /// a jittered RTT sample from the host class's network profile.
+    /// Homogeneous clusters and on-host ([`Site::Local`]) classes charge
+    /// nothing and draw nothing, so legacy runs never touch `net_rng`.
+    pub fn chain_edge_delay(&mut self, cid: ContainerId) -> SimDuration {
+        if self.config.host_classes.is_empty() {
+            return SimDuration::ZERO;
+        }
+        let class = self.invokers[self.containers[cid].invoker].class;
+        let site = self.config.host_classes[class].net_profile;
+        if site == Site::Local {
+            return SimDuration::ZERO;
+        }
+        SimDuration::from_secs_f64(site.link().sample_rtt(&mut self.net_rng))
     }
 
     /// Evict a container: release its memory charge, count the eviction
@@ -487,5 +588,46 @@ mod tests {
     fn model_latency_defaults() {
         let w = World::new(Config::default());
         assert_eq!(w.model_latency("unknown"), SimDuration::from_millis(5));
+    }
+
+    #[test]
+    fn heterogeneous_classes_build_the_cluster_and_scale_costs() {
+        let mut cfg = Config::default();
+        cfg.host_classes = crate::util::config::HostClass::parse_list(
+            "cloud:2:4096:1000:local,edge:1:1024:1600:edge",
+        )
+        .unwrap();
+        let mut w = World::new(cfg);
+        assert_eq!(w.invokers.len(), 3, "classes replace the invokers count");
+        assert_eq!(w.invokers[0].capacity_mb, 4096);
+        assert_eq!(w.invokers[2].capacity_mb, 1024);
+        assert_eq!(w.invokers[2].class, 1);
+        // Force a container onto each class and compare scaled costs.
+        w.config.placement = crate::util::config::PlacementKind::RoundRobin;
+        w.placement = crate::platform::placement::build(w.config.placement);
+        let a = w.acquire_slot(SimTime::ZERO, 256).unwrap(); // host 0: cloud
+        let b = w.acquire_slot(SimTime::ZERO, 256).unwrap(); // host 1: cloud
+        let c = w.acquire_slot(SimTime::ZERO, 256).unwrap(); // host 2: edge
+        assert_eq!(w.containers[c].invoker, 2);
+        assert_eq!(w.cold_start_on(a), w.config.cold_start);
+        assert_eq!(w.cold_start_on(b), w.config.cold_start);
+        // 1600 permille of the 500 ms default = 800 ms, exact.
+        assert_eq!(
+            w.cold_start_on(c),
+            SimDuration(w.config.cold_start.0 * 1600 / 1000)
+        );
+        // Chain edges off a local-profile host are free and draw-free;
+        // off the edge-profile host they pay a jittered positive RTT.
+        assert_eq!(w.chain_edge_delay(a), SimDuration::ZERO);
+        assert!(w.chain_edge_delay(c) > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn homogeneous_default_charges_no_cross_node_costs() {
+        let mut w = World::new(Config::default());
+        let a = w.acquire_slot(SimTime::ZERO, 256).unwrap();
+        assert_eq!(w.cold_start_on(a), w.config.cold_start);
+        assert_eq!(w.chain_edge_delay(a), SimDuration::ZERO);
+        assert!(w.placement_admits("anything", 0));
     }
 }

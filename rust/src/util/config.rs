@@ -6,6 +6,7 @@
 //! can share experiment setups; every field has a sensible default drawn
 //! from the paper (or from the OpenWhisk defaults the paper builds on).
 
+use crate::netsim::link::Site;
 use crate::util::json::Json;
 use crate::util::time::SimDuration;
 
@@ -34,6 +35,15 @@ pub struct Config {
     /// Queue discipline for invocations waiting on cluster memory
     /// (the implementations live in [`crate::platform::dispatch`]).
     pub queue: QueueKind,
+    /// Placement strategy: which invoker host a cold start lands on
+    /// (the implementations live in [`crate::platform::placement`]).
+    pub placement: PlacementKind,
+    /// Heterogeneous host classes (cloud vs edge). Empty (the default)
+    /// keeps the homogeneous cluster: `invokers` identical hosts of
+    /// [`Config::invoker_capacity_mb`] each. Non-empty REPLACES the
+    /// `invokers`/`invoker_memory_mb` sizing: the cluster is the classes
+    /// expanded in order (see [`Config::host_layout`]).
+    pub host_classes: Vec<HostClass>,
     /// Anti-starvation aging bound for [`QueueKind::MemoryAware`]: once
     /// the oldest queued invocation has waited this long, it is promoted
     /// ahead of the smallest-charge order. The 30 s default pins the
@@ -206,6 +216,147 @@ impl QueueKind {
     }
 }
 
+/// Which placement strategy chooses the invoker host for a cold start
+/// (the implementations live in [`crate::platform::placement`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementKind {
+    /// Recycle the first parked slot whose host has room, else create on
+    /// the least-loaded host — the historical inline scan, kept
+    /// byte-identical and digest-pinned.
+    #[default]
+    LeastLoadedMb,
+    /// Uniformly random host among those with room (seeded from the
+    /// world's forked placement stream; spreading baseline).
+    RandomUniform,
+    /// Rotate a cursor over the hosts, skipping full ones.
+    RoundRobin,
+    /// Prefer hosts already holding live containers of the function
+    /// (warm or freshen-warmed state is worth landing next to); fall back
+    /// to the full legacy scan when none has room.
+    WarmAffinity,
+    /// Per-function affinity/anti-affinity label matching against host
+    /// class names (edgeless-orc-style deployment requirements), least
+    /// loaded among the admitted hosts.
+    Constrained,
+}
+
+impl PlacementKind {
+    pub fn all() -> [PlacementKind; 5] {
+        [
+            PlacementKind::LeastLoadedMb,
+            PlacementKind::RandomUniform,
+            PlacementKind::RoundRobin,
+            PlacementKind::WarmAffinity,
+            PlacementKind::Constrained,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementKind> {
+        match s {
+            "legacy" | "least_loaded" | "least_loaded_mb" => Some(PlacementKind::LeastLoadedMb),
+            "random" | "random_uniform" => Some(PlacementKind::RandomUniform),
+            "rr" | "round_robin" => Some(PlacementKind::RoundRobin),
+            "affinity" | "warm_affinity" => Some(PlacementKind::WarmAffinity),
+            "constrained" | "labels" => Some(PlacementKind::Constrained),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlacementKind::LeastLoadedMb => "legacy",
+            PlacementKind::RandomUniform => "random",
+            PlacementKind::RoundRobin => "rr",
+            PlacementKind::WarmAffinity => "affinity",
+            PlacementKind::Constrained => "constrained",
+        }
+    }
+
+    /// Stable strategy code packed into the high byte of placement span
+    /// payloads (index in [`PlacementKind::all`]; legacy is 0, so default
+    /// spans are byte-identical to the pre-placement format).
+    pub fn code(&self) -> u64 {
+        match self {
+            PlacementKind::LeastLoadedMb => 0,
+            PlacementKind::RandomUniform => 1,
+            PlacementKind::RoundRobin => 2,
+            PlacementKind::WarmAffinity => 3,
+            PlacementKind::Constrained => 4,
+        }
+    }
+}
+
+/// One class of invoker hosts in a heterogeneous cluster (cloud vs edge).
+/// Configured via `Config::host_classes` / `--host-classes`, grammar
+/// `name:count:capacity_mb:cold_mult_permille:net[,...]`, e.g.
+/// `cloud:2:4096:1000:local,edge:2:1024:1600:edge`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostClass {
+    /// Class name; the label the `Constrained` placement strategy
+    /// matches function affinity/anti-affinity against.
+    pub name: String,
+    /// Number of hosts of this class.
+    pub count: usize,
+    /// Memory capacity per host, MB.
+    pub capacity_mb: u64,
+    /// Cold-start cost multiplier in permille (1000 = the configured
+    /// `cold_start` unchanged; 1600 = 1.6x — edge nodes provision slower).
+    /// Integer permille keeps the scaled duration exact and digest-stable.
+    pub cold_start_mult_permille: u32,
+    /// Network profile of the host's site: chain edges LEAVING a non-
+    /// [`Site::Local`] host pay a sampled inter-node RTT on top of the
+    /// trigger delay (the netsim link model from fig5/6).
+    pub net_profile: Site,
+}
+
+impl HostClass {
+    /// Parse one `name:count:capacity_mb:cold_mult_permille:net` clause.
+    pub fn parse(s: &str) -> Option<HostClass> {
+        let mut parts = s.split(':');
+        let name = parts.next()?.trim();
+        let count: usize = parts.next()?.trim().parse().ok()?;
+        let capacity_mb: u64 = parts.next()?.trim().parse().ok()?;
+        let cold: u32 = parts.next()?.trim().parse().ok()?;
+        let net = Site::parse(parts.next()?.trim())?;
+        if name.is_empty() || count == 0 || capacity_mb == 0 || cold == 0 || parts.next().is_some()
+        {
+            return None;
+        }
+        Some(HostClass {
+            name: name.to_string(),
+            count,
+            capacity_mb,
+            cold_start_mult_permille: cold,
+            net_profile: net,
+        })
+    }
+
+    /// Parse a comma-separated class list (the `--host-classes` grammar).
+    pub fn parse_list(s: &str) -> Option<Vec<HostClass>> {
+        let classes = s
+            .split(',')
+            .map(|c| HostClass::parse(c.trim()))
+            .collect::<Option<Vec<HostClass>>>()?;
+        if classes.is_empty() {
+            None
+        } else {
+            Some(classes)
+        }
+    }
+
+    /// Render back to the grammar clause (JSON round-trip + CLI echo).
+    pub fn spec_str(&self) -> String {
+        format!(
+            "{}:{}:{}:{}:{}",
+            self.name,
+            self.count,
+            self.capacity_mb,
+            self.cold_start_mult_permille,
+            self.net_profile.as_str()
+        )
+    }
+}
+
 /// Container isolation scope.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IsolationScope {
@@ -295,6 +446,8 @@ impl Default for Config {
             memory_accounting: MemoryAccounting::UniformSlot,
             keep_alive: KeepAliveKind::FixedTtl,
             queue: QueueKind::LegacyOneShot,
+            placement: PlacementKind::LeastLoadedMb,
+            host_classes: Vec::new(),
             queue_aging_bound: SimDuration::from_secs(30),
             freshen_incarnation_guard: false,
             // OpenWhisk docker cold starts are hundreds of ms; the paper's
@@ -317,6 +470,25 @@ impl Config {
             .unwrap_or(self.containers_per_invoker as u64 * UNIFORM_SLOT_MB as u64)
     }
 
+    /// The cluster's host layout as `(class_index, capacity_mb)` per host.
+    /// Empty `host_classes` keeps the homogeneous legacy cluster
+    /// (`invokers` hosts of [`Config::invoker_capacity_mb`], all class 0);
+    /// otherwise the classes expand in declaration order, so host ids stay
+    /// stable for a given spec string.
+    pub fn host_layout(&self) -> Vec<(usize, u64)> {
+        if self.host_classes.is_empty() {
+            let cap = self.invoker_capacity_mb();
+            return (0..self.invokers).map(|_| (0, cap)).collect();
+        }
+        let mut layout = Vec::new();
+        for (class, hc) in self.host_classes.iter().enumerate() {
+            for _ in 0..hc.count {
+                layout.push((class, hc.capacity_mb));
+            }
+        }
+        layout
+    }
+
     /// Load from a JSON object; missing keys keep their defaults.
     pub fn from_json(j: &Json) -> Config {
         let mut c = Config::default();
@@ -337,6 +509,16 @@ impl Config {
         if let Some(q) = j.get("queue").and_then(Json::as_str) {
             if let Some(parsed) = QueueKind::parse(q) {
                 c.queue = parsed;
+            }
+        }
+        if let Some(p) = j.get("placement").and_then(Json::as_str) {
+            if let Some(parsed) = PlacementKind::parse(p) {
+                c.placement = parsed;
+            }
+        }
+        if let Some(hc) = j.get("host_classes").and_then(Json::as_str) {
+            if let Some(parsed) = HostClass::parse_list(hc) {
+                c.host_classes = parsed;
             }
         }
         c.queue_aging_bound = SimDuration::from_secs_f64(
@@ -392,6 +574,7 @@ impl Config {
             ),
             ("keep_alive", Json::str(self.keep_alive.as_str())),
             ("queue", Json::str(self.queue.as_str())),
+            ("placement", Json::str(self.placement.as_str())),
             (
                 "queue_aging_bound_s",
                 Json::num(self.queue_aging_bound.as_secs_f64()),
@@ -431,6 +614,15 @@ impl Config {
         ]);
         if let Some(mb) = self.invoker_memory_mb {
             j.set("invoker_memory_mb", Json::num(mb as f64));
+        }
+        if !self.host_classes.is_empty() {
+            let spec = self
+                .host_classes
+                .iter()
+                .map(HostClass::spec_str)
+                .collect::<Vec<_>>()
+                .join(",");
+            j.set("host_classes", Json::str(&spec));
         }
         j
     }
@@ -526,6 +718,69 @@ mod tests {
         assert_eq!(back.queue, QueueKind::LegacyOneShot);
         assert_eq!(back.queue_aging_bound, SimDuration::from_secs(30));
         assert!(!back.freshen_incarnation_guard);
+    }
+
+    #[test]
+    fn placement_and_host_class_knobs_roundtrip() {
+        let d = Config::default();
+        assert_eq!(
+            d.placement,
+            PlacementKind::LeastLoadedMb,
+            "legacy least-loaded placement is the default"
+        );
+        assert!(d.host_classes.is_empty(), "homogeneous cluster by default");
+        let mut c = Config::default();
+        c.placement = PlacementKind::WarmAffinity;
+        c.host_classes =
+            HostClass::parse_list("cloud:2:4096:1000:local,edge:2:1024:1600:edge").unwrap();
+        let c2 = Config::from_json(&c.to_json());
+        assert_eq!(c2.placement, PlacementKind::WarmAffinity);
+        assert_eq!(c2.host_classes, c.host_classes);
+        assert_eq!(c2.host_classes[1].name, "edge");
+        assert_eq!(c2.host_classes[1].cold_start_mult_permille, 1600);
+        assert_eq!(c2.host_classes[1].net_profile, Site::Edge);
+        // Short and long spellings both parse; every as_str round-trips.
+        for k in PlacementKind::all() {
+            assert_eq!(PlacementKind::parse(k.as_str()), Some(k));
+        }
+        assert_eq!(PlacementKind::parse("round_robin"), Some(PlacementKind::RoundRobin));
+        assert_eq!(PlacementKind::parse("warm_affinity"), Some(PlacementKind::WarmAffinity));
+        assert_eq!(PlacementKind::parse("labels"), Some(PlacementKind::Constrained));
+        assert_eq!(PlacementKind::parse("bogus"), None);
+        assert_eq!(PlacementKind::LeastLoadedMb.code(), 0, "legacy span payloads unchanged");
+        // Bad grammar clauses are rejected, not silently defaulted.
+        assert_eq!(HostClass::parse("cloud:0:4096:1000:local"), None, "zero count");
+        assert_eq!(HostClass::parse("cloud:2:0:1000:local"), None, "zero capacity");
+        assert_eq!(HostClass::parse("cloud:2:4096:0:local"), None, "zero permille");
+        assert_eq!(HostClass::parse(":2:4096:1000:local"), None, "empty name");
+        assert_eq!(HostClass::parse("cloud:2:4096:1000:mars"), None, "unknown site");
+        assert_eq!(HostClass::parse("cloud:2:4096:1000:local:extra"), None, "trailing field");
+        assert_eq!(HostClass::parse("cloud:2:4096"), None, "missing fields");
+        assert_eq!(HostClass::parse_list(""), None);
+        // spec_str is the exact inverse of parse.
+        let hc = HostClass::parse("edge:3:512:2500:remote").unwrap();
+        assert_eq!(HostClass::parse(&hc.spec_str()), Some(hc));
+        // Defaults serialize without host_classes and parse back empty.
+        let back = Config::from_json(&Config::default().to_json());
+        assert_eq!(back.placement, PlacementKind::LeastLoadedMb);
+        assert!(back.host_classes.is_empty());
+    }
+
+    #[test]
+    fn host_layout_expands_classes_in_order() {
+        let mut c = Config::default();
+        // Homogeneous: `invokers` hosts of the derived capacity, class 0.
+        assert_eq!(c.host_layout(), vec![(0, 4096); 4]);
+        c.invoker_memory_mb = Some(2048);
+        assert_eq!(c.host_layout(), vec![(0, 2048); 4]);
+        // Heterogeneous: classes replace the invokers/invoker_memory_mb
+        // sizing entirely, expanded in declaration order.
+        c.host_classes =
+            HostClass::parse_list("cloud:2:4096:1000:local,edge:3:1024:1600:edge").unwrap();
+        assert_eq!(
+            c.host_layout(),
+            vec![(0, 4096), (0, 4096), (1, 1024), (1, 1024), (1, 1024)]
+        );
     }
 
     #[test]

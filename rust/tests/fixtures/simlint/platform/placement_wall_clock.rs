@@ -1,0 +1,9 @@
+//! Fixture proving placement code sits INSIDE the determinism perimeter:
+//! a placement strategy that stamps decisions with wall-clock time is a
+//! D002 finding — `platform/placement*.rs` is in `SIM_PATHS`, not the
+//! wall-clock allowlist.
+
+pub fn decision_stamp() -> u64 {
+    let now = std::time::SystemTime::now();
+    now.duration_since(std::time::UNIX_EPOCH).unwrap().as_secs()
+}

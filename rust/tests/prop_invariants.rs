@@ -13,7 +13,9 @@ use freshen_rs::platform::function::FunctionSpec;
 use freshen_rs::platform::world::World;
 use freshen_rs::simcore::Sim;
 use freshen_rs::testkit::prop::forall;
-use freshen_rs::util::config::{Config, KeepAliveKind, MemoryAccounting, QueueKind};
+use freshen_rs::util::config::{
+    Config, HostClass, KeepAliveKind, MemoryAccounting, PlacementKind, QueueKind,
+};
 use freshen_rs::util::rng::Rng;
 use freshen_rs::util::stats::{Cdf, Summary};
 use freshen_rs::util::time::{SimDuration, SimTime};
@@ -347,6 +349,117 @@ fn prop_conservation_across_queue_keepalive_and_accounting() {
                         "start kinds must partition completions [{tag}]"
                     );
                 }
+            }
+        }
+    });
+}
+
+/// Conservation over the placement axis: every placement strategy ×
+/// cluster shape (homogeneous, heterogeneous host classes) ends a
+/// randomized contention workload with scheduled == completed +
+/// explicitly-dropped, nothing stranded and nothing double-dispatched —
+/// same bar as the queue/keep-alive grid above. One function carries
+/// affinity labels, so `Constrained` genuinely restricts (and, on the
+/// label-less homogeneous cluster, genuinely drops).
+#[test]
+fn prop_conservation_across_placement_and_host_classes() {
+    forall("placement x host-class conservation", 6, |g| {
+        let seed = g.u64(0, u64::MAX / 2);
+        let nfns = g.usize(2, 5);
+        let n = g.usize(5, 40);
+        let arrivals: Vec<(usize, u64)> = (0..n)
+            .map(|_| (g.usize(0, nfns - 1), g.u64(0, 90_000_000)))
+            .collect();
+        let mut memories: Vec<u32> = (0..nfns).map(|_| g.u64(64, 256) as u32).collect();
+        // f0's charge exceeds ANY host (cloud tops out at 768 MB on the
+        // heterogeneous cluster, 3 × 256 on the homogeneous one), so the
+        // explicit-drop bucket is exercised under per-function accounting.
+        memories[0] = 10_000;
+        let durations: Vec<u64> = (0..nfns).map(|_| g.u64(1, 2_000)).collect();
+        let queue = *g.choice(&QueueKind::all());
+        let keep_alive = *g.choice(&KeepAliveKind::all());
+        let freshen_on = g.bool(0.5);
+        for placement in PlacementKind::all() {
+            for hetero in [false, true] {
+                let mut cfg = Config::default();
+                cfg.seed = seed;
+                cfg.invokers = 2;
+                cfg.containers_per_invoker = 3;
+                cfg.queue = queue;
+                cfg.keep_alive = keep_alive;
+                cfg.placement = placement;
+                cfg.memory_accounting = MemoryAccounting::FunctionMb;
+                cfg.freshen.enabled = freshen_on;
+                cfg.freshen.min_confidence = 0.0;
+                cfg.idle_eviction = SimDuration::from_secs(30);
+                if hetero {
+                    cfg.host_classes = HostClass::parse_list(
+                        "cloud:1:768:1000:local,edge:2:512:1500:edge",
+                    )
+                    .expect("valid host-class spec");
+                }
+                let mut w = World::new(cfg);
+                let mut ep = Endpoint::new("store", Site::Edge);
+                ep.store.put("ID1", 1e5, SimTime::ZERO);
+                w.add_endpoint(ep);
+                for f in 0..nfns {
+                    let mut spec = FunctionSpec::paper_lambda(
+                        &format!("f{f}"),
+                        "app",
+                        "store",
+                        SimDuration::from_millis(durations[f]),
+                    );
+                    spec.memory_mb = memories[f];
+                    // f1 is label-constrained to the cloud class: binding
+                    // on the heterogeneous cluster under `Constrained`,
+                    // a guaranteed drop on the label-less homogeneous one
+                    // (both sides of the admit predicate get exercised).
+                    if f == 1 {
+                        spec.affinity = vec!["cloud".to_string()];
+                    }
+                    w.deploy(spec);
+                }
+                let mut sim: Sim<World> = Sim::new();
+                sim.max_events = 20_000_000;
+                for &(f, at) in &arrivals {
+                    let name = format!("f{f}");
+                    sim.schedule_at(SimTime(at), move |sim, w| {
+                        invoke(sim, w, &name);
+                    });
+                }
+                sim.run(&mut w);
+                let tag = format!(
+                    "placement={} hetero={hetero} queue={} keep_alive={:?}",
+                    placement.as_str(),
+                    queue.as_str(),
+                    keep_alive
+                );
+                w.debug_check_memory_accounting();
+                assert_eq!(
+                    w.metrics.count() as u64 + w.metrics.dropped_infeasible,
+                    n as u64,
+                    "lost/duplicated invocations [{tag}]"
+                );
+                assert_eq!(
+                    w.invocations.iter().filter(|c| c.done).count(),
+                    n,
+                    "every context must terminate [{tag}]"
+                );
+                assert!(w.dispatch.is_empty(), "stranded queue entries [{tag}]");
+                assert!(
+                    w.containers.iter().all(|c| c.state
+                        != freshen_rs::platform::container::ContainerState::Busy),
+                    "busy container at quiescence [{tag}]"
+                );
+                for r in w.metrics.records() {
+                    assert!(r.finished_at >= r.started_at, "[{tag}]");
+                    assert!(r.started_at >= r.enqueued_at, "[{tag}]");
+                }
+                assert_eq!(
+                    w.metrics.cold_starts + w.metrics.warm_starts,
+                    w.metrics.count() as u64,
+                    "start kinds must partition completions [{tag}]"
+                );
             }
         }
     });

@@ -23,24 +23,30 @@ fn fixture_root() -> &'static Path {
 #[test]
 fn fixture_corpus_produces_expected_findings() {
     let (findings, files) = lint_tree(fixture_root()).expect("fixture corpus lints");
-    assert_eq!(files, 10, "fixture corpus file count");
+    assert_eq!(files, 11, "fixture corpus file count");
 
     let count = |rule: &str| findings.iter().filter(|f| f.rule == rule).count();
     assert_eq!(count("D001"), 5, "{findings:?}");
-    assert_eq!(count("D002"), 3, "{findings:?}");
+    assert_eq!(count("D002"), 4, "{findings:?}");
     assert_eq!(count("D003"), 1, "{findings:?}");
     assert_eq!(count("D004"), 1, "{findings:?}");
     assert_eq!(count("D005"), 1, "{findings:?}");
     assert_eq!(count("D006"), 1, "{findings:?}");
     assert_eq!(count("S001"), 1, "{findings:?}");
     assert_eq!(count("S002"), 1, "{findings:?}");
-    assert_eq!(findings.len(), 14, "no unexpected findings");
+    assert_eq!(findings.len(), 15, "no unexpected findings");
 
     // The obs/ fixture pins tracing inside the perimeter: its wall-clock
     // read is a finding, not an allowlisted path.
     assert!(findings
         .iter()
         .any(|f| f.path == "obs/wall_clock.rs" && f.rule == "D002"));
+
+    // Placement code is inside the perimeter too: a wall-clock read in a
+    // platform placement file is a D002 finding, not allowlisted.
+    assert!(findings
+        .iter()
+        .any(|f| f.path == "platform/placement_wall_clock.rs" && f.rule == "D002"));
 
     // Findings carry root-relative `/`-separated paths and stable ordering.
     assert!(findings.iter().all(|f| !f.path.contains('\\')));
