@@ -83,6 +83,15 @@ fn main() {
     });
     let serial_rate = throughput(serial.metrics.invocations, serial_elapsed);
     snap.rate("replay/serial", serial.metrics.invocations, serial_elapsed);
+    // Same measurement under the hot-path PR's slot name: the serial replay
+    // now runs interned FnId contexts + enum-coded events, and this slot
+    // exists so the snapshot diff against a pre-interning `replay/serial`
+    // baseline reads as an explicit before/after pair.
+    snap.rate(
+        "replay/serial-interned",
+        serial.metrics.invocations,
+        serial_elapsed,
+    );
     println!(
         "replay serial   (1 shard,  1 worker):  {} invocations, {} sim events in \
          {serial_elapsed:?}  ({serial_rate:.0} inv/s)",

@@ -13,8 +13,32 @@ use freshen_rs::nn::gen::{build_mlp, generate, GenSpec};
 use freshen_rs::nn::kernels::{matmul_bias_act_threads, par_threads};
 use freshen_rs::nn::tensor::Matrix;
 use freshen_rs::runtime::model::ClassifierRuntime;
-use freshen_rs::testkit::bench::bench;
+use freshen_rs::testkit::bench::{bench, Snapshot};
 use freshen_rs::util::rng::Rng;
+
+/// Naive per-element matmul with the kernel's exact op order (bias, then
+/// k-ascending accumulation with the zero-skip, then relu): the scalar
+/// side of the 8-wide-panel A/B. Kept deliberately free of blocking so
+/// the comparison isolates the panel layout, not cache tiling.
+fn scalar_reference(x: &Matrix, w: &Matrix, bias: &[f32], relu: bool) -> Vec<f32> {
+    let (m, k) = (x.rows(), x.cols());
+    let n = w.cols();
+    let (xd, wd) = (x.data(), w.data());
+    let mut out = vec![0.0f32; m * n];
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = bias[c];
+            for i in 0..k {
+                let a = xd[r * k + i];
+                if a != 0.0 {
+                    acc += a * wd[i * n + c];
+                }
+            }
+            out[r * n + c] = if relu && acc < 0.0 { 0.0 } else { acc };
+        }
+    }
+    out
+}
 
 fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     Matrix::from_vec(
@@ -28,6 +52,7 @@ fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
 }
 
 fn main() {
+    let mut snap = Snapshot::new("nn_inference");
     println!("== native nn inference (paper λ1 shape: 3072 -> 512 -> 256 -> 10) ==");
     let spec = GenSpec::default();
     let mlp = build_mlp(&spec).expect("build seeded mlp");
@@ -51,7 +76,34 @@ fn main() {
             },
         );
         println!("  -> {:.2} GFLOP/s", flops / r.mean_secs() / 1e9);
+        if threads == 1 {
+            snap.stats(&r);
+        }
     }
+
+    // 8-wide panel kernel vs a naive scalar loop with the same op order:
+    // the A/B for the register-panel restructure. Results must stay
+    // bit-identical — the panels only reorder work across independent
+    // output elements — so the assert doubles as a cheap correctness
+    // check on real λ1-shaped data before timing anything.
+    let scalar = scalar_reference(&x, &w, &bias, true);
+    let panel = matmul_bias_act_threads(&x, &w, &bias, true, 1).unwrap();
+    assert_eq!(panel.data(), &scalar[..], "panel kernel diverged from scalar");
+    let rs = bench(&format!("nn/matmul-scalar {m}x{k}x{n}"), 2, 12, || {
+        let out = scalar_reference(&x, &w, &bias, true);
+        std::hint::black_box(out[0]);
+    });
+    println!("  -> {:.2} GFLOP/s", flops / rs.mean_secs() / 1e9);
+    let rp = bench(&format!("matmul/8wide-vs-scalar {m}x{k}x{n}"), 2, 12, || {
+        let out = matmul_bias_act_threads(&x, &w, &bias, true, 1).unwrap();
+        std::hint::black_box(out.data()[0]);
+    });
+    snap.stats(&rp);
+    println!(
+        "  -> {:.2} GFLOP/s ({:.2}x vs scalar reference)",
+        flops / rp.mean_secs() / 1e9,
+        rs.mean_secs() / rp.mean_secs().max(1e-12)
+    );
 
     // End-to-end forward: every AOT batch size, plus oversized batches the
     // runtime would chunk (shown here as single big executions).
@@ -110,4 +162,7 @@ fn main() {
         );
     }
     let _ = std::fs::remove_dir_all(&dir);
+    if let Some(path) = snap.write_if_requested().expect("snapshot write") {
+        println!("snapshot written to {}", path.display());
+    }
 }

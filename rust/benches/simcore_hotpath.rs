@@ -9,9 +9,9 @@ use freshen_rs::netsim::tcp::Connection;
 use freshen_rs::platform::endpoint::Endpoint;
 use freshen_rs::platform::exec::invoke;
 use freshen_rs::platform::function::FunctionSpec;
-use freshen_rs::platform::world::World;
+use freshen_rs::platform::world::{PlatformSim, World};
 use freshen_rs::simcore::wheel::{BinaryHeapQueue, EventQueue, TimingWheel};
-use freshen_rs::simcore::Sim;
+use freshen_rs::simcore::{EventFn, Sim};
 use freshen_rs::testkit::bench::{bench, throughput, time_once, Snapshot};
 use freshen_rs::util::config::Config;
 use freshen_rs::util::rng::Rng;
@@ -21,7 +21,7 @@ use freshen_rs::util::time::{SimDuration, SimTime};
 /// with pop→reschedule churn and a 10% cancellation mix — the regime the
 /// paper sweeps (Table 1's 20k triggers, the transfer grids) put the
 /// scheduler in. Returns events processed.
-fn dense_churn<Q: EventQueue<u64>>(q: &mut Q, pending: usize, churn: usize) -> u64 {
+fn dense_churn<Q: EventQueue<EventFn<u64>>>(q: &mut Q, pending: usize, churn: usize) -> u64 {
     let mut rng = Rng::new(7);
     let mut seq = 0u64;
     let mut now = 0u64;
@@ -63,7 +63,7 @@ fn dense_churn<Q: EventQueue<u64>>(q: &mut Q, pending: usize, churn: usize) -> u
 
 /// Sparse self-rescheduling chain on the raw queue: one event pending at
 /// a time — the scheduler's constant-factor floor.
-fn sparse_chain<Q: EventQueue<u64>>(q: &mut Q, events: u64) -> u64 {
+fn sparse_chain<Q: EventQueue<EventFn<u64>>>(q: &mut Q, events: u64) -> u64 {
     let mut now = 0u64;
     q.insert(SimTime(1), 0, Box::new(|_, _| {}));
     for seq in 1..=events {
@@ -82,11 +82,11 @@ fn bench_queue_comparison(snap: &mut Snapshot) {
     println!("== scheduler: timing wheel vs reference binary heap ==");
 
     let (wheel_dense, wheel_elapsed) = time_once(|| {
-        let mut q: TimingWheel<u64> = TimingWheel::new();
+        let mut q: TimingWheel<EventFn<u64>> = TimingWheel::new();
         dense_churn(&mut q, PENDING, CHURN)
     });
     let (heap_dense, heap_elapsed) = time_once(|| {
-        let mut q: BinaryHeapQueue<u64> = BinaryHeapQueue::new();
+        let mut q: BinaryHeapQueue<EventFn<u64>> = BinaryHeapQueue::new();
         dense_churn(&mut q, PENDING, CHURN)
     });
     assert_eq!(wheel_dense, heap_dense);
@@ -103,11 +103,11 @@ fn bench_queue_comparison(snap: &mut Snapshot) {
     );
 
     let (wheel_chain, wheel_elapsed) = time_once(|| {
-        let mut q: TimingWheel<u64> = TimingWheel::new();
+        let mut q: TimingWheel<EventFn<u64>> = TimingWheel::new();
         sparse_chain(&mut q, CHAIN)
     });
     let (heap_chain, heap_elapsed) = time_once(|| {
-        let mut q: BinaryHeapQueue<u64> = BinaryHeapQueue::new();
+        let mut q: BinaryHeapQueue<EventFn<u64>> = BinaryHeapQueue::new();
         sparse_chain(&mut q, CHAIN)
     });
     assert_eq!(wheel_chain, heap_chain);
@@ -163,7 +163,7 @@ fn bench_platform_invocations(snap: &mut Snapshot) {
             "store",
             SimDuration::from_millis(5),
         ));
-        let mut sim: Sim<World> = Sim::new();
+        let mut sim: PlatformSim = Sim::new();
         sim.max_events = 100_000_000;
         for i in 0..INVOCATIONS {
             sim.schedule_at(SimTime(i as u64 * 500_000), |sim, w| {

@@ -5,7 +5,7 @@
 //! those digests stable used to live in reviewers' heads; this module turns
 //! them into a dependency-free analyzer that scans the crate's own sources on
 //! every build: a hand-rolled lexer ([`lexer`]) feeds token-sequence rules
-//! ([`rules`], D001–D006), findings carry file:line + rule + fix hint, and
+//! ([`rules`], D001–D007), findings carry file:line + rule + fix hint, and
 //! suppression is explicit and audited via
 //! `// simlint: allow(D00x, reason)` comments (same line or the line above
 //! the finding; a missing reason is itself a finding, S001, and an allow that

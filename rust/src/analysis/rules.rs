@@ -1,4 +1,4 @@
-//! The `simlint` determinism rules (D001–D006).
+//! The `simlint` determinism rules (D001–D007).
 //!
 //! Each rule is a token-sequence check scoped to the path prefixes where the
 //! determinism contract applies. Paths are relative to the source root and
@@ -60,6 +60,14 @@ pub const CATALOG: &[RuleInfo] = &[
                experiments::harness::SweepRunner) and reduce in index order",
     },
     RuleInfo {
+        id: "D007",
+        summary: "String-keyed FxHashMap/BTreeMap in a platform/simcore hot path: every \
+                  lookup re-hashes the name bytes and every insert clones the key; hot \
+                  per-event state must key on interned FnId (a u32)",
+        hint: "intern the name once via platform::symbols::Symbols and key the map on FnId; \
+               String keys belong only at deploy/ingest/CLI boundaries",
+    },
+    RuleInfo {
         id: "S001",
         summary: "malformed simlint directive: allow(...) needs rule ids and a non-empty reason",
         hint: "write `// simlint: allow(D00x, reason)` — the reason is the audit trail",
@@ -108,6 +116,15 @@ const COUNTER_PATHS: &[&str] = &["metrics/", "workload/", "billing/"];
 /// real-time, testkit/ hosts the bench/property harnesses.
 const THREAD_EXEMPT: &[&str] = &["serve/", "testkit/"];
 
+/// Paths where per-event lookups must key on interned [`FnId`]s rather
+/// than name strings (the executor/scheduler hot path).
+const HOT_KEY_PATHS: &[&str] = &["platform/", "simcore/"];
+
+/// Hot-path files that are deploy/ingest boundaries: their maps key on
+/// externally-supplied ids (object ids, endpoint registrations) that
+/// arrive as strings by contract and are not per-event state.
+const HOT_KEY_ALLOW: &[&str] = &["platform/datastore.rs", "platform/endpoint.rs"];
+
 fn in_any(path: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| path.starts_with(p))
 }
@@ -139,6 +156,7 @@ pub fn scan(path: &str, toks: &[Tok]) -> Vec<Finding> {
     d004_literal_seed(path, toks, &mut out);
     d005_as_narrowing(path, toks, &mut out);
     d006_thread_fanout(path, toks, &mut out);
+    d007_string_keyed_hot_maps(path, toks, &mut out);
     out
 }
 
@@ -289,6 +307,25 @@ fn d006_thread_fanout(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
     }
 }
 
+fn d007_string_keyed_hot_maps(path: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any(path, HOT_KEY_PATHS) || HOT_KEY_ALLOW.contains(&path) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && (t.text == "FxHashMap" || t.text == "BTreeMap")
+            && seq(toks, i + 1, &["<", "String"])
+        {
+            out.push(finding(
+                path,
+                t.line,
+                "D007",
+                format!("{}<String, _> in an executor/scheduler hot path", t.text),
+            ));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +412,20 @@ mod tests {
         assert_eq!(hits.len(), 1);
         assert_eq!(hits[0].rule, "D006");
         assert!(scan_src("serve/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn d007_string_keyed_hot_maps() {
+        let bad = "struct S { queues: FxHashMap<String, VecDeque<u64>>, b: BTreeMap<String, u32> }";
+        let hits = scan_src("platform/dispatch.rs", bad);
+        assert_eq!(hits.iter().filter(|f| f.rule == "D007").count(), 2);
+        // FnId-keyed and Rc<str>-interner maps are the sanctioned forms.
+        let good = "struct S { queues: FxHashMap<FnId, VecDeque<u64>>, ids: FxHashMap<Rc<str>, FnId> }";
+        assert!(scan_src("platform/dispatch.rs", good).is_empty());
+        // Out of scope: boundary files and non-hot subsystems.
+        assert!(scan_src("platform/datastore.rs", bad).is_empty());
+        assert!(scan_src("predict/hist.rs", bad).is_empty());
+        assert!(scan_src("cli/mod.rs", bad).is_empty());
     }
 
     #[test]

@@ -30,7 +30,7 @@ use crate::experiments::azure_macro::{self, AzureMacroCfg, Variant};
 use crate::experiments::harness::parse_seed_spec;
 use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1, SweepRunner};
 use crate::platform::exec::invoke;
-use crate::platform::world::World;
+use crate::platform::world::{PlatformSim, World};
 use crate::runtime::backend::BackendKind;
 use crate::serve::{ServeConfig, ServeEngine};
 use crate::simcore::Sim;
@@ -84,6 +84,9 @@ USAGE:
                     #   windows + per-cell top-function table
                     [--queue-aging-bound SECONDS]  # memaware queue
                     #   anti-starvation aging bound (default 30)
+                    [--digest]                # print the merged-metrics
+                    #   digest (one label: bytes line per grid cell) for
+                    #   golden pinning in CI
                     # platform-scale Azure-trace macro benchmark; merged
                     # metrics are byte-identical for ANY --shards x
                     # --parallel combination (per-app pool), and for any
@@ -106,7 +109,7 @@ USAGE:
   repro gen-trace <out.jsonl> [--functions N] [--horizon SECONDS] [--seed N]
   repro lint [--root DIR] [--rules]
               # simlint: the determinism static-analysis pass over the
-              # crate's own sources (D001..D006); nonzero exit on findings.
+              # crate's own sources (D001..D007); nonzero exit on findings.
               # --rules prints the rule catalog and exits.
   repro help
 ";
@@ -413,7 +416,7 @@ fn trace(opts: &Opts) -> Result<()> {
     // Stream the trace straight into the scheduler: one line in memory at
     // a time, functions deployed on first sight. (`schedule_at` accepts
     // any future time, so file order needs no sorting pass.)
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 200_000_000;
     let mut reader =
         crate::workload::trace::TraceReader::new(std::io::BufReader::new(file));
@@ -457,7 +460,7 @@ fn trace(opts: &Opts) -> Result<()> {
     );
     if let Some(out) = opts.flags.get("span-log") {
         let fmt = span_format(opts)?;
-        let (events, dropped) = world.obs.drain();
+        let (events, dropped) = world.obs.drain(&world.registry.symbols);
         let mut sink = crate::obs::SpanSink::default();
         sink.push_group("trace".to_string(), events, dropped);
         let text = crate::obs::export::export(&[("trace".to_string(), &sink)], fmt);
@@ -622,6 +625,12 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
     let runner = SweepRunner::new(opts.u64("parallel", 1) as usize);
     let result = azure_macro::run_multi(&cfg, &seeds, &runner)?;
     result.print();
+    if opts.flag("digest") {
+        // The merged-metrics digest, one `label: bytes` line per grid
+        // cell — what CI pins against a committed golden so a hot-path
+        // change that silently moves replay output fails the smoke.
+        println!("digest:\n{}", result.digest());
+    }
     if let Some(path) = opts.flags.get("span-log") {
         let fmt = span_format(opts)?;
         let text = crate::obs::export::export(&result.span_rows(), fmt);

@@ -14,7 +14,7 @@ use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
 use crate::platform::exec::{emit_prediction, invoke, start_freshen};
 use crate::platform::function::FunctionSpec;
-use crate::platform::world::World;
+use crate::platform::world::{PlatformSim, World};
 use crate::predict::{Prediction, PredictionSource};
 use crate::simcore::Sim;
 use crate::util::config::Config;
@@ -64,7 +64,7 @@ struct LeadSample {
 /// (past TTL and into idle decay), freshen firing `lead` before each.
 fn lead_run(lead_ms: i64, iters: usize, seed: u64) -> LeadSample {
     let mut w = lambda_world(seed ^ lead_ms.unsigned_abs(), true);
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 50_000_000;
     // Warm up the container.
     invoke(&mut sim, &mut w, "lambda");
@@ -195,7 +195,7 @@ fn confidence_run(rate: f64, gating: bool, iters: usize, seed: u64) -> Confidenc
         w.gate.config.min_confidence = 0.0;
         w.gate.accuracy_gating = false;
     }
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 50_000_000;
     invoke(&mut sim, &mut w, "lambda");
     sim.run(&mut w);
@@ -342,7 +342,7 @@ fn ttl_run(ttl_s: f64, iters: usize, seed: u64) -> TtlSample {
         spec.prefetch_ttl = Some(SimDuration::from_secs_f64(ttl_s));
         w.registry.deploy(spec, w.config.freshen.default_ttl);
     }
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 50_000_000;
     invoke(&mut sim, &mut w, "lambda");
     sim.run(&mut w);

@@ -19,7 +19,7 @@ use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
 use crate::platform::exec::invoke;
 use crate::platform::function::{Arg, FunctionSpec, Op};
-use crate::platform::world::World;
+use crate::platform::world::{PlatformSim, World};
 use crate::simcore::Sim;
 use crate::triggers::TriggerService;
 use crate::util::config::Config;
@@ -169,7 +169,7 @@ struct E2eSample {
 
 fn run_one(freshen: bool, seed: u64, chains: usize) -> E2eSample {
     let mut w = build_world(freshen, seed);
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 100_000_000;
 
     // Bursty arrivals: bursts of 4 chains, quiet gaps ~45s — long enough

@@ -17,7 +17,7 @@ use crate::netsim::link::Site;
 use crate::platform::endpoint::Endpoint;
 use crate::platform::exec::invoke;
 use crate::platform::function::{FunctionSpec, Op};
-use crate::platform::world::World;
+use crate::platform::world::{PlatformSim, World};
 use crate::simcore::Sim;
 use crate::triggers::TriggerService;
 use crate::util::config::Config;
@@ -58,7 +58,7 @@ fn measure_samples(service: TriggerService, runs: usize, seed: u64) -> Vec<f64> 
         }],
     ));
 
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 50_000_000;
     // Pre-warm the container (cold starts carefully avoided).
     invoke(&mut sim, &mut world, "target");

@@ -11,8 +11,13 @@
 //! blocking: weight rows are read in k order (contiguous, prefetch
 //! friendly) and each is applied to up to [`ROW_BLOCK`] input rows before
 //! moving on, so a streamed `w` row is reused from L1 instead of being
-//! re-fetched per input row. Zero input values skip their weight row —
-//! this makes the zero-padded tail rows of a static batch nearly free.
+//! re-fetched per input row. Within a quad the output is computed in
+//! [`LANES`]-wide column panels: up to `ROW_BLOCK × [f32; LANES]`
+//! accumulators stay in registers across the whole k stream (a fixed-size
+//! inner loop the compiler auto-vectorizes on stable rust — no `std::simd`)
+//! and spill to the output buffer once per panel instead of once per
+//! `k`. Zero input values skip their weight row — this makes the
+//! zero-padded tail rows of a static batch nearly free.
 //!
 //! # Parallelism and determinism
 //!
@@ -27,6 +32,10 @@ use crate::nn::tensor::Matrix;
 
 /// Input rows sharing one streamed weight row (register/L1 reuse).
 pub const ROW_BLOCK: usize = 4;
+
+/// Output columns per register panel: one AVX2 f32 vector. Each panel's
+/// accumulators live in `[f32; LANES]` blocks for the whole k stream.
+pub const LANES: usize = 8;
 
 /// Threads are only worth spawning above this many flops (2·m·n·k).
 const PAR_FLOPS_MIN: f64 = 4e6;
@@ -109,25 +118,65 @@ fn block_forward(
     let mut done = 0usize;
     for quad in out_chunk.chunks_mut(ROW_BLOCK * n) {
         let rows_here = quad.len() / n;
-        for r in 0..rows_here {
-            quad[r * n..(r + 1) * n].copy_from_slice(bias);
-        }
-        for k in 0..kdim {
-            let wrow = w.row(k);
-            for r in 0..rows_here {
-                let a = x.get(row0 + done + r, k);
-                if a != 0.0 {
-                    let orow = &mut quad[r * n..(r + 1) * n];
-                    for (o, wv) in orow.iter_mut().zip(wrow.iter()) {
-                        *o += a * wv;
+        // 8-wide panels. Every output element still receives its bias
+        // first and then its products in k-ascending order (with the
+        // `a != 0.0` skip), so the panels only reorder work across
+        // independent elements — results are bit-identical to the
+        // unblocked kernel and to `forward_reference` in the tests.
+        let mut j0 = 0usize;
+        while j0 + LANES <= n {
+            let mut acc = [[0.0f32; LANES]; ROW_BLOCK];
+            for row_acc in acc.iter_mut().take(rows_here) {
+                row_acc.copy_from_slice(&bias[j0..j0 + LANES]);
+            }
+            for k in 0..kdim {
+                let wv: &[f32; LANES] =
+                    w.row(k)[j0..j0 + LANES].try_into().expect("panel width");
+                for r in 0..rows_here {
+                    let a = x.get(row0 + done + r, k);
+                    if a != 0.0 {
+                        for (o, wvl) in acc[r].iter_mut().zip(wv.iter()) {
+                            *o += a * wvl;
+                        }
                     }
                 }
             }
+            for (r, row_acc) in acc.iter_mut().enumerate().take(rows_here) {
+                if relu {
+                    for v in row_acc.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                quad[r * n + j0..r * n + j0 + LANES].copy_from_slice(row_acc);
+            }
+            j0 += LANES;
         }
-        if relu {
-            for v in quad.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
+        // Scalar epilogue for the n % LANES tail columns, same op order.
+        if j0 < n {
+            for r in 0..rows_here {
+                quad[r * n + j0..(r + 1) * n].copy_from_slice(&bias[j0..]);
+            }
+            for k in 0..kdim {
+                let wrow = w.row(k);
+                for r in 0..rows_here {
+                    let a = x.get(row0 + done + r, k);
+                    if a != 0.0 {
+                        let orow = &mut quad[r * n + j0..(r + 1) * n];
+                        for (o, wv) in orow.iter_mut().zip(wrow[j0..].iter()) {
+                            *o += a * wv;
+                        }
+                    }
+                }
+            }
+            if relu {
+                for r in 0..rows_here {
+                    for v in quad[r * n + j0..(r + 1) * n].iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
                 }
             }
         }
@@ -195,6 +244,77 @@ mod tests {
 
     fn mat(rows: usize, cols: usize, vals: &[f32]) -> Matrix {
         Matrix::from_slice(rows, cols, vals).unwrap()
+    }
+
+    /// Naive per-element reference: bias first, then products in
+    /// k-ascending order with the `a != 0.0` skip — the exact f32 op
+    /// order the panel kernel must preserve.
+    fn forward_reference(x: &Matrix, w: &Matrix, bias: &[f32], relu: bool) -> Matrix {
+        let (m, n, kdim) = (x.rows(), w.cols(), w.rows());
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut v = bias[j];
+                for k in 0..kdim {
+                    let a = x.get(i, k);
+                    if a != 0.0 {
+                        v += a * w.get(k, j);
+                    }
+                }
+                if relu && v < 0.0 {
+                    v = 0.0;
+                }
+                out.set(i, j, v);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn panel_kernel_is_bit_identical_to_reference() {
+        // Dims straddle every blocking boundary: quads (rows % 4), full
+        // panels, the scalar column tail (n % 8), and n < LANES outright.
+        let mut rng = crate::util::rng::Rng::new(0x8A7E);
+        for &(m, k, n) in &[
+            (1usize, 3usize, 5usize),
+            (4, 8, 8),
+            (5, 16, 9),
+            (13, 37, 29),
+            (3, 12, 16),
+            (9, 7, 24),
+        ] {
+            let x = Matrix::from_vec(
+                m,
+                k,
+                (0..m * k)
+                    // Sprinkle exact zeros so the skip path is exercised.
+                    .map(|i| {
+                        if i % 5 == 0 {
+                            0.0
+                        } else {
+                            rng.uniform(-1.0, 1.0) as f32
+                        }
+                    })
+                    .collect(),
+            )
+            .unwrap();
+            let w = Matrix::from_vec(
+                k,
+                n,
+                (0..k * n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+            )
+            .unwrap();
+            let bias: Vec<f32> = (0..n).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+            for relu in [false, true] {
+                let fast = matmul_bias_act_threads(&x, &w, &bias, relu, 1).unwrap();
+                let reference = forward_reference(&x, &w, &bias, relu);
+                assert_eq!(
+                    fast.data(),
+                    reference.data(),
+                    "m={m} k={k} n={n} relu={relu} diverged from reference"
+                );
+            }
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@
 
 use std::collections::VecDeque;
 
+use crate::platform::symbols::{FnId, Symbols};
 use crate::util::time::{SimDuration, SimTime};
 
 /// Default ring capacity per world (events kept, newest-biased).
@@ -126,8 +127,8 @@ impl SpanKind {
     }
 }
 
-/// One recorded span. `String` (not `Rc<str>`) so merged span streams
-/// cross `SweepRunner`'s thread boundary (`Send`).
+/// One recorded span, name-resolved at drain. `String` (not `Rc<str>`)
+/// so merged span streams cross `SweepRunner`'s thread boundary (`Send`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct SpanEvent {
     pub kind: SpanKind,
@@ -142,13 +143,28 @@ pub struct SpanEvent {
     pub b: u64,
 }
 
+/// One ring-resident span: the interned [`FnId`] only, resolved to its
+/// name once at [`Tracer::drain`]. Recording therefore never allocates —
+/// the hot path pays a 40-byte copy into the ring, and the per-event
+/// `String` exists only for events that survive to the drain boundary.
+#[derive(Debug, Clone)]
+struct RawSpan {
+    kind: SpanKind,
+    function: FnId,
+    inv: u64,
+    start_us: u64,
+    dur_us: u64,
+    a: u64,
+    b: u64,
+}
+
 /// Bounded, deterministic span recorder carried by each `World`.
 #[derive(Debug, Clone, Default)]
 pub struct Tracer {
     enabled: bool,
     cap: usize,
     filter: Option<String>,
-    buf: VecDeque<SpanEvent>,
+    buf: VecDeque<RawSpan>,
     dropped: u64,
 }
 
@@ -178,13 +194,17 @@ impl Tracer {
     }
 
     /// Record one span. A single branch when disabled; call sites pass
-    /// the `&str` they already hold, so the disabled path never
-    /// allocates.
+    /// the interned [`FnId`] they already hold, so recording never
+    /// hashes or allocates a name — `syms` is consulted only when a
+    /// name filter is installed (resolve is an index into the intern
+    /// table).
     #[inline]
+    #[allow(clippy::too_many_arguments)]
     pub fn record(
         &mut self,
+        syms: &Symbols,
         kind: SpanKind,
-        function: &str,
+        function: FnId,
         inv: u64,
         start: SimTime,
         dur: SimDuration,
@@ -195,7 +215,7 @@ impl Tracer {
             return;
         }
         if let Some(f) = &self.filter {
-            if !function.contains(f.as_str()) {
+            if !syms.resolve(function).contains(f.as_str()) {
                 return;
             }
         }
@@ -203,9 +223,9 @@ impl Tracer {
             self.buf.pop_front();
             self.dropped += 1;
         }
-        self.buf.push_back(SpanEvent {
+        self.buf.push_back(RawSpan {
             kind,
-            function: function.to_string(),
+            function,
             inv,
             start_us: start.micros(),
             dur_us: dur.micros(),
@@ -214,10 +234,23 @@ impl Tracer {
         });
     }
 
-    /// Take the recorded events (in record order) and the drop count,
-    /// leaving the tracer empty but still enabled.
-    pub fn drain(&mut self) -> (Vec<SpanEvent>, u64) {
-        let events = std::mem::take(&mut self.buf).into_iter().collect();
+    /// Take the recorded events (in record order, names resolved through
+    /// `syms`) and the drop count, leaving the tracer empty but still
+    /// enabled. This is the one place a span's function name becomes an
+    /// owned `String` — the merge/export boundary.
+    pub fn drain(&mut self, syms: &Symbols) -> (Vec<SpanEvent>, u64) {
+        let events = std::mem::take(&mut self.buf)
+            .into_iter()
+            .map(|r| SpanEvent {
+                kind: r.kind,
+                function: syms.resolve(r.function).to_string(),
+                inv: r.inv,
+                start_us: r.start_us,
+                dur_us: r.dur_us,
+                a: r.a,
+                b: r.b,
+            })
+            .collect();
         let dropped = std::mem::take(&mut self.dropped);
         (events, dropped)
     }
@@ -330,44 +363,48 @@ pub(crate) fn str_hash(s: &str) -> u64 {
 mod tests {
     use super::*;
 
-    fn ev(tr: &mut Tracer, kind: SpanKind, f: &str, t: u64) {
-        tr.record(kind, f, 1, SimTime(t), SimDuration(10), 0, 0);
+    fn ev(tr: &mut Tracer, syms: &mut Symbols, kind: SpanKind, f: &str, t: u64) {
+        let fid = syms.intern(f);
+        tr.record(syms, kind, fid, 1, SimTime(t), SimDuration(10), 0, 0);
     }
 
     #[test]
     fn disabled_tracer_records_nothing() {
+        let mut syms = Symbols::new();
         let mut tr = Tracer::disabled();
-        ev(&mut tr, SpanKind::Arrival, "f", 5);
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "f", 5);
         assert!(tr.is_empty());
         assert!(!tr.is_enabled());
-        let (events, dropped) = tr.drain();
+        let (events, dropped) = tr.drain(&syms);
         assert!(events.is_empty());
         assert_eq!(dropped, 0);
     }
 
     #[test]
     fn ring_drops_oldest_and_counts() {
+        let mut syms = Symbols::new();
         let mut tr = Tracer::enabled(2, None);
-        ev(&mut tr, SpanKind::Arrival, "a", 1);
-        ev(&mut tr, SpanKind::Arrival, "b", 2);
-        ev(&mut tr, SpanKind::Arrival, "c", 3);
-        let (events, dropped) = tr.drain();
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "a", 1);
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "b", 2);
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "c", 3);
+        let (events, dropped) = tr.drain(&syms);
         assert_eq!(dropped, 1);
         assert_eq!(
             events.iter().map(|e| e.function.as_str()).collect::<Vec<_>>(),
             vec!["b", "c"]
         );
         // Drained but still enabled: keeps recording.
-        ev(&mut tr, SpanKind::Exec, "d", 4);
+        ev(&mut tr, &mut syms, SpanKind::Exec, "d", 4);
         assert_eq!(tr.len(), 1);
     }
 
     #[test]
     fn filter_keeps_matching_functions_only() {
+        let mut syms = Symbols::new();
         let mut tr = Tracer::enabled(16, Some("app-1/".to_string()));
-        ev(&mut tr, SpanKind::Arrival, "app-1/run", 1);
-        ev(&mut tr, SpanKind::Arrival, "app-2/run", 2);
-        let (events, _) = tr.drain();
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "app-1/run", 1);
+        ev(&mut tr, &mut syms, SpanKind::Arrival, "app-2/run", 2);
+        let (events, _) = tr.drain(&syms);
         assert_eq!(events.len(), 1);
         assert_eq!(events[0].function, "app-1/run");
     }

@@ -13,7 +13,7 @@ use crate::freshen::cache::FreshenCache;
 use crate::freshen::state::FrState;
 use crate::netsim::tcp::Connection;
 use crate::netsim::tls::TlsSession;
-use crate::platform::function::FunctionId;
+use crate::platform::symbols::FnId;
 use crate::simcore::EventId;
 use crate::util::time::SimTime;
 
@@ -39,8 +39,10 @@ pub enum ContainerState {
 pub struct RuntimeEnv {
     /// Persistent connections per endpoint (the paper's canonical use of
     /// runtime scoping).
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     pub connections: FxHashMap<String, Connection>,
     /// TLS sessions per endpoint (tickets survive reconnects).
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     pub tls: FxHashMap<String, TlsSession>,
     /// The freshen resource list shared by hook and wrappers.
     pub fr_state: FrState,
@@ -71,12 +73,13 @@ pub struct Container {
     pub id: ContainerId,
     /// Host this container lives on.
     pub invoker: usize,
-    /// Function whose code was `init`ed into the runtime. Containers are
+    /// Function whose code was `init`ed into the runtime (interned id;
+    /// resolve through the world's `Symbols` for display). Containers are
     /// per-function unless the platform allows sharing (§2, [13]).
-    pub function: Option<FunctionId>,
+    pub function: Option<FnId>,
     /// Owning application (set at cold start; under per-app isolation a
     /// warm container may be re-inited for any sibling function).
-    pub app: Option<String>,
+    pub app: Option<FnId>,
     pub state: ContainerState,
     pub runtime: RuntimeEnv,
     pub created_at: SimTime,
@@ -129,21 +132,17 @@ impl Container {
     }
 
     /// Begin a cold start for `function` of `app` (provision + `init`).
-    pub fn begin_cold_start(&mut self, function: &str, now: SimTime) {
-        self.begin_cold_start_for_app(function, "", now)
+    pub fn begin_cold_start(&mut self, function: FnId, now: SimTime) {
+        self.begin_cold_start_for_app(function, None, now)
     }
 
     /// Cold start with explicit app attribution (per-app isolation needs
     /// the app on the container).
-    pub fn begin_cold_start_for_app(&mut self, function: &str, app: &str, now: SimTime) {
+    pub fn begin_cold_start_for_app(&mut self, function: FnId, app: Option<FnId>, now: SimTime) {
         debug_assert_eq!(self.state, ContainerState::Evicted);
         self.runtime.reset();
-        self.function = Some(function.to_string());
-        self.app = if app.is_empty() {
-            None
-        } else {
-            Some(app.to_string())
-        };
+        self.function = Some(function);
+        self.app = app.filter(|a| !a.is_anon());
         self.state = ContainerState::Initializing;
         self.created_at = now;
         self.last_used = now;
@@ -194,22 +193,22 @@ impl Container {
     /// runtime scope); clears `fr_state` (its indices are positional per
     /// function body). A reclaim from any in-flight freshen run's point
     /// of view, so the incarnation moves on.
-    pub fn reinit_for(&mut self, function: &str, now: SimTime) {
+    pub fn reinit_for(&mut self, function: FnId, now: SimTime) {
         debug_assert_eq!(self.state, ContainerState::Warm);
-        self.function = Some(function.to_string());
+        self.function = Some(function);
         self.runtime.fr_state = crate::freshen::state::FrState::new();
         self.incarnation += 1;
         self.last_used = now;
     }
 
     /// Is this container warm and owned by `app` (any function)?
-    pub fn warm_for_app(&self, app: &str) -> bool {
-        self.state == ContainerState::Warm && self.app.as_deref() == Some(app)
+    pub fn warm_for_app(&self, app: FnId) -> bool {
+        self.state == ContainerState::Warm && self.app == Some(app)
     }
 
     /// Can this container serve `function` warm right now?
-    pub fn warm_for(&self, function: &str) -> bool {
-        self.state == ContainerState::Warm && self.function.as_deref() == Some(function)
+    pub fn warm_for(&self, function: FnId) -> bool {
+        self.state == ContainerState::Warm && self.function == Some(function)
     }
 
     /// Idle duration (only meaningful for warm containers).
@@ -221,26 +220,35 @@ impl Container {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::symbols::Symbols;
     use crate::util::time::SimDuration;
 
     fn t(s: u64) -> SimTime {
         SimTime(s * 1_000_000)
     }
 
+    fn ids(names: &[&str]) -> Vec<FnId> {
+        let mut syms = Symbols::new();
+        names.iter().map(|n| syms.intern(n)).collect()
+    }
+
     #[test]
     fn lifecycle() {
+        let [f1, f2] = ids(&["f1", "f2"])[..] else {
+            unreachable!()
+        };
         let mut c = Container::new(0, 0, t(0));
         assert_eq!(c.state, ContainerState::Evicted);
-        c.begin_cold_start("f1", t(0));
+        c.begin_cold_start(f1, t(0));
         assert_eq!(c.state, ContainerState::Initializing);
-        assert!(!c.warm_for("f1"));
+        assert!(!c.warm_for(f1));
         c.finish_init(t(1));
-        assert!(c.warm_for("f1"));
-        assert!(!c.warm_for("f2"));
+        assert!(c.warm_for(f1));
+        assert!(!c.warm_for(f2));
         c.begin_run(t(2));
         assert_eq!(c.state, ContainerState::Busy);
         c.finish_run(t(3));
-        assert!(c.warm_for("f1"));
+        assert!(c.warm_for(f1));
         assert_eq!(c.cold_starts, 1);
         assert_eq!(c.warm_starts, 1);
         assert_eq!(c.runtime.invocations, 1);
@@ -248,8 +256,11 @@ mod tests {
 
     #[test]
     fn eviction_destroys_runtime_state() {
+        let [f1] = ids(&["f1"])[..] else {
+            unreachable!()
+        };
         let mut c = Container::new(0, 0, t(0));
-        c.begin_cold_start("f1", t(0));
+        c.begin_cold_start(f1, t(0));
         c.finish_init(t(1));
         c.runtime.cache.put(
             "store",
@@ -268,9 +279,10 @@ mod tests {
 
     #[test]
     fn reuse_generation_tracks_idle_exits() {
+        let [f] = ids(&["f"])[..] else { unreachable!() };
         let mut c = Container::new(0, 0, t(0));
         let g0 = c.reuse_gen;
-        c.begin_cold_start("f", t(0));
+        c.begin_cold_start(f, t(0));
         c.finish_init(t(1));
         let g1 = c.reuse_gen;
         assert!(g1 > g0, "cold start leaves a new generation");
@@ -286,22 +298,25 @@ mod tests {
 
     #[test]
     fn incarnation_moves_only_on_reclaim() {
+        let [f, f2, g] = ids(&["f", "f2", "g"])[..] else {
+            unreachable!()
+        };
         let mut c = Container::new(0, 0, t(0));
         assert_eq!(c.incarnation, 0);
-        c.begin_cold_start("f", t(0));
+        c.begin_cold_start(f, t(0));
         c.finish_init(t(1));
         c.begin_run(t(2));
         c.finish_run(t(3));
         assert_eq!(c.incarnation, 0, "dispatch never changes the incarnation");
         // A per-app re-init repoints the slot at a sibling function —
         // a reclaim from a freshen run's point of view.
-        c.reinit_for("f2", t(4));
+        c.reinit_for(f2, t(4));
         assert_eq!(c.incarnation, 1);
         c.evict();
         assert_eq!(c.incarnation, 2);
         // A recycled slot is a NEW incarnation: anything stamped with the
         // old one (an in-flight freshen run) is recognizably stale.
-        c.begin_cold_start("g", t(5));
+        c.begin_cold_start(g, t(5));
         assert_eq!(c.incarnation, 2);
         c.evict();
         assert_eq!(c.incarnation, 3);
@@ -309,8 +324,9 @@ mod tests {
 
     #[test]
     fn idle_tracking() {
+        let [f] = ids(&["f"])[..] else { unreachable!() };
         let mut c = Container::new(0, 0, t(0));
-        c.begin_cold_start("f", t(0));
+        c.begin_cold_start(f, t(0));
         c.finish_init(t(1));
         assert_eq!(c.idle_for(t(11)), SimDuration::from_secs(10));
     }

@@ -22,13 +22,23 @@
 //!   far to push ([`QueueDiscipline::drains_until_full`],
 //!   [`QueueDiscipline::retries_past_failure`]).
 //!
+//! Waiters carry the interned [`FnId`] plus their dense arrival `seq`
+//! (the legacy invocation id); enqueue/take resolve names through the
+//! world's [`Symbols`] table only where a discipline is genuinely
+//! string-keyed, so the hot path hashes 4-byte ids, not tenant-qualified
+//! name strings.
+//!
 //! Three implementations span the fairness/efficiency design space:
 //!
 //! - [`LegacyOneShot`] — the pre-extraction behavior, kept byte-identical:
 //!   per-function queues, ONE retry per drain, candidate = front of the
 //!   first non-empty queue in hash-map iteration order. This is the
 //!   default ([`QueueKind::LegacyOneShot`]), so every historical digest
-//!   holds.
+//!   holds. The map is keyed by the interned `Rc<str>` name (refcount
+//!   bump per enqueue, no allocation): `Rc<str>` hashes byte-identically
+//!   to the `String` it replaced under Fx (pinned by a `symbols` test),
+//!   and the key-insertion sequence is unchanged, so iteration order —
+//!   and with it the drain order and every digest — is unchanged.
 //! - [`FifoFair`] — one global arrival-order FIFO. A drain retries the
 //!   head, then the next head, until a retry fails to place (the freed
 //!   memory is exhausted). Strict head-of-line: nothing ever overtakes an
@@ -45,14 +55,15 @@
 //! Determinism: every discipline is a deterministic function of the
 //! enqueue/drain call sequence. `LegacyOneShot` iterates an `FxHashMap`
 //! whose key-insertion history is replay-deterministic (same trace, same
-//! order), `FifoFair` orders by the dense arrival-ordered invocation id,
-//! and `MemoryAware` breaks charge ties by that same id — no ambient
+//! order), `FifoFair` orders by the dense arrival `seq`, and
+//! `MemoryAware` breaks charge ties by that same `seq` — no ambient
 //! hashing, no wall-clock.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::rc::Rc;
 
-use crate::platform::function::FunctionId;
-use crate::platform::world::InvocationId;
+use crate::platform::slab::InvocationId;
+use crate::platform::symbols::{FnId, Symbols};
 use crate::util::config::QueueKind;
 use crate::util::fxhash::FxHashMap;
 use crate::util::time::{SimDuration, SimTime};
@@ -61,7 +72,10 @@ use crate::util::time::{SimDuration, SimTime};
 #[derive(Debug, Clone)]
 pub struct Waiting {
     pub inv: InvocationId,
-    pub function: FunctionId,
+    /// Dense arrival sequence number of the invocation (the legacy id);
+    /// the global ordering key of every arrival-ordered discipline.
+    pub seq: u64,
+    pub function: FnId,
     /// MB the invocation's cold start would charge (fixed at first
     /// enqueue; the accounting mode never changes mid-run).
     pub charge_mb: u32,
@@ -75,12 +89,13 @@ pub trait QueueDiscipline {
     /// Stable identifier (reports, CLI echo).
     fn name(&self) -> &'static str;
 
-    /// Add a waiting invocation (fresh arrival or failed retry).
-    fn enqueue(&mut self, w: Waiting);
+    /// Add a waiting invocation (fresh arrival or failed retry). `syms`
+    /// resolves the interned function id for string-keyed disciplines.
+    fn enqueue(&mut self, w: Waiting, syms: &Symbols);
 
     /// The oldest waiting invocation of `function`, if any (same-function
     /// warm drain on container release).
-    fn take_for_function(&mut self, function: &str) -> Option<InvocationId>;
+    fn take_for_function(&mut self, function: FnId, syms: &Symbols) -> Option<InvocationId>;
 
     /// The next invocation to retry now that capacity freed, skipping
     /// the ones that already failed this drain round. `now` drives aging.
@@ -123,10 +138,12 @@ pub fn build(kind: QueueKind, aging_bound: SimDuration) -> Box<dyn QueueDiscipli
 /// drain, chosen as the front of the first non-empty queue in hash-map
 /// iteration order. Failed retries push to the BACK of their function's
 /// queue (the historical re-queue), and emptied queues keep their map
-/// entry — both details matter for iteration-order identity.
+/// entry — both details matter for iteration-order identity. Keys are the
+/// interned `Rc<str>` names (Fx-hash-identical to the `String`s they
+/// replaced; see module docs).
 #[derive(Default)]
 pub struct LegacyOneShot {
-    queues: FxHashMap<FunctionId, VecDeque<Waiting>>,
+    queues: FxHashMap<Rc<str>, VecDeque<Waiting>>,
     len: usize,
 }
 
@@ -149,14 +166,17 @@ impl QueueDiscipline for LegacyOneShot {
         "legacy"
     }
 
-    fn enqueue(&mut self, w: Waiting) {
-        self.queues.entry(w.function.clone()).or_default().push_back(w);
+    fn enqueue(&mut self, w: Waiting, syms: &Symbols) {
+        self.queues.entry(syms.rc(w.function)).or_default().push_back(w);
         self.len += 1;
         self.debug_check_len();
     }
 
-    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
-        let w = self.queues.get_mut(function).and_then(|q| q.pop_front())?;
+    fn take_for_function(&mut self, function: FnId, syms: &Symbols) -> Option<InvocationId> {
+        let w = self
+            .queues
+            .get_mut(syms.resolve(function))
+            .and_then(|q| q.pop_front())?;
         self.len -= 1;
         self.debug_check_len();
         Some(w.inv)
@@ -167,7 +187,7 @@ impl QueueDiscipline for LegacyOneShot {
             .queues
             .iter()
             .find(|(_, q)| !q.is_empty())
-            .map(|(k, _)| k.clone())?;
+            .map(|(k, _)| Rc::clone(k))?;
         let w = self.queues.get_mut(&key).and_then(|q| q.pop_front())?;
         self.len -= 1;
         self.debug_check_len();
@@ -191,39 +211,40 @@ impl QueueDiscipline for LegacyOneShot {
 // FifoFair
 // ====================================================================
 
-/// One global FIFO in arrival order (invocation ids are dense and
-/// arrival-ordered, so ordering by id IS arrival order). Drains head by
-/// head until a placement fails: strict head-of-line, so the maximum
-/// time-in-queue of ANY function is bounded by the backlog ahead of it.
-/// (The one sanctioned overtake is the same-function warm fast path —
-/// it consumes no memory the head could have used.)
+/// One global FIFO in arrival order (arrival `seq`s are dense and
+/// arrival-ordered by construction, so ordering by seq IS arrival
+/// order). Drains head by head until a placement fails: strict
+/// head-of-line, so the maximum time-in-queue of ANY function is bounded
+/// by the backlog ahead of it. (The one sanctioned overtake is the
+/// same-function warm fast path — it consumes no memory the head could
+/// have used.)
 ///
-/// Internally an id-keyed `BTreeMap` backbone (key order IS arrival
-/// order) plus a per-function id index, so the same-function drain is
+/// Internally a seq-keyed `BTreeMap` backbone (key order IS arrival
+/// order) plus a per-function seq index, so the same-function drain is
 /// O(log n) instead of the old front-to-back scan — deep shared-pool
 /// backlogs used to pay O(queue-depth) per completion. Pop order is
 /// pinned unchanged by the module tests and the replay digests.
 #[derive(Default)]
 pub struct FifoFair {
     /// Arrival-ordered backbone: first key = oldest waiter.
-    q: BTreeMap<InvocationId, Waiting>,
-    /// Ids of each function's waiters, id-ordered (first = oldest). Keyed
-    /// lookups only — never iterated — so the hash map stays inert to
-    /// ordering.
-    by_fn: FxHashMap<FunctionId, BTreeSet<InvocationId>>,
+    q: BTreeMap<u64, Waiting>,
+    /// Seqs of each function's waiters, seq-ordered (first = oldest).
+    /// Keyed lookups only — never iterated — so the hash map stays inert
+    /// to ordering.
+    by_fn: FxHashMap<FnId, BTreeSet<u64>>,
 }
 
 impl FifoFair {
     fn insert(&mut self, w: Waiting) {
-        self.by_fn.entry(w.function.clone()).or_default().insert(w.inv);
-        self.q.insert(w.inv, w);
+        self.by_fn.entry(w.function).or_default().insert(w.seq);
+        self.q.insert(w.seq, w);
         self.debug_check_index();
     }
 
-    fn remove(&mut self, id: InvocationId) -> Option<Waiting> {
-        let w = self.q.remove(&id)?;
+    fn remove(&mut self, seq: u64) -> Option<Waiting> {
+        let w = self.q.remove(&seq)?;
         if let Some(set) = self.by_fn.get_mut(&w.function) {
-            set.remove(&id);
+            set.remove(&seq);
             if set.is_empty() {
                 self.by_fn.remove(&w.function);
             }
@@ -232,8 +253,8 @@ impl FifoFair {
         Some(w)
     }
 
-    fn oldest_of(&self, function: &str) -> Option<InvocationId> {
-        self.by_fn.get(function)?.iter().next().copied()
+    fn oldest_of(&self, function: FnId) -> Option<u64> {
+        self.by_fn.get(&function)?.iter().next().copied()
     }
 
     /// The per-function index must partition the backbone exactly — a
@@ -254,20 +275,24 @@ impl QueueDiscipline for FifoFair {
         "fifo"
     }
 
-    fn enqueue(&mut self, w: Waiting) {
+    fn enqueue(&mut self, w: Waiting, _syms: &Symbols) {
         self.insert(w);
     }
 
-    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
-        let id = self.oldest_of(function)?;
-        self.remove(id).map(|w| w.inv)
+    fn take_for_function(&mut self, function: FnId, _syms: &Symbols) -> Option<InvocationId> {
+        let seq = self.oldest_of(function)?;
+        self.remove(seq).map(|w| w.inv)
     }
 
     fn next_candidate(&mut self, _now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
         // skip holds at most this round's failures (bounded by the
         // retries_past_failure cap), so the find is O(skip), not O(n).
-        let id = *self.q.keys().find(|id| !skip.contains(id))?;
-        self.remove(id).map(|w| w.inv)
+        let seq = self
+            .q
+            .iter()
+            .find(|(_, w)| !skip.contains(&w.inv))
+            .map(|(&s, _)| s)?;
+        self.remove(seq).map(|w| w.inv)
     }
 
     fn drains_until_full(&self) -> bool {
@@ -289,27 +314,27 @@ impl QueueDiscipline for FifoFair {
 
 /// Smallest-charge-first drain: each freed chunk of memory resumes as
 /// many waiting invocations as it can hold. Ties break by arrival order
-/// (lowest id). The aging bound keeps it starvation-free: once the
+/// (lowest seq). The aging bound keeps it starvation-free: once the
 /// oldest entry has waited `aging_bound`, it is offered FIRST regardless
 /// of size; if that aged retry fails to place, the drain falls back to
 /// the smallest candidate (one skip) so small work keeps flowing while
 /// the aged entry retains its priority for every later drain.
 ///
-/// Same indexed backbone as [`FifoFair`] plus a `(charge, id)`-ordered
+/// Same indexed backbone as [`FifoFair`] plus a `(charge, seq)`-ordered
 /// selection index, so the per-completion smallest-charge pick is
 /// O(log n) instead of the old full-queue `min_by_key` scan. The index's
-/// iteration order — smallest charge first, ties to the lowest id — is
+/// iteration order — smallest charge first, ties to the lowest seq — is
 /// exactly the old scan's first-minimum order, so pop order is
 /// unchanged (pinned by the module tests and the replay digests).
 pub struct MemoryAware {
     /// Arrival-ordered backbone: first key = oldest waiter (the aging
     /// probe).
-    q: BTreeMap<InvocationId, Waiting>,
-    /// Ids of each function's waiters, id-ordered. Keyed lookups only.
-    by_fn: FxHashMap<FunctionId, BTreeSet<InvocationId>>,
+    q: BTreeMap<u64, Waiting>,
+    /// Seqs of each function's waiters, seq-ordered. Keyed lookups only.
+    by_fn: FxHashMap<FnId, BTreeSet<u64>>,
     /// Charge-ordered selection index: first entry = smallest charge,
-    /// ties to the oldest (lowest id).
-    by_charge: BTreeSet<(u32, InvocationId)>,
+    /// ties to the oldest (lowest seq).
+    by_charge: BTreeSet<(u32, u64)>,
     /// Queue wait after which the oldest entry outranks smaller charges.
     pub aging_bound: SimDuration,
     /// Was the most recent candidate an aged-head promotion? Only then is
@@ -343,17 +368,17 @@ impl MemoryAware {
     }
 
     fn insert(&mut self, w: Waiting) {
-        self.by_fn.entry(w.function.clone()).or_default().insert(w.inv);
-        self.by_charge.insert((w.charge_mb, w.inv));
-        self.q.insert(w.inv, w);
+        self.by_fn.entry(w.function).or_default().insert(w.seq);
+        self.by_charge.insert((w.charge_mb, w.seq));
+        self.q.insert(w.seq, w);
         self.debug_check_index();
     }
 
-    fn remove(&mut self, id: InvocationId) -> Option<Waiting> {
-        let w = self.q.remove(&id)?;
-        self.by_charge.remove(&(w.charge_mb, w.inv));
+    fn remove(&mut self, seq: u64) -> Option<Waiting> {
+        let w = self.q.remove(&seq)?;
+        self.by_charge.remove(&(w.charge_mb, w.seq));
         if let Some(set) = self.by_fn.get_mut(&w.function) {
-            set.remove(&id);
+            set.remove(&seq);
             if set.is_empty() {
                 self.by_fn.remove(&w.function);
             }
@@ -383,16 +408,16 @@ impl QueueDiscipline for MemoryAware {
         "memaware"
     }
 
-    fn enqueue(&mut self, w: Waiting) {
+    fn enqueue(&mut self, w: Waiting, _syms: &Symbols) {
         // Same arrival-ordered backbone as FifoFair: the first key is
         // always the oldest entry (the aging probe), selection goes
         // through the charge index.
         self.insert(w);
     }
 
-    fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
-        let id = self.by_fn.get(function)?.iter().next().copied()?;
-        self.remove(id).map(|w| w.inv)
+    fn take_for_function(&mut self, function: FnId, _syms: &Symbols) -> Option<InvocationId> {
+        let seq = self.by_fn.get(&function)?.iter().next().copied()?;
+        self.remove(seq).map(|w| w.inv)
     }
 
     fn next_candidate(&mut self, now: SimTime, skip: &[InvocationId]) -> Option<InvocationId> {
@@ -401,27 +426,28 @@ impl QueueDiscipline for MemoryAware {
         // falls back to smallest-charge so small work keeps flowing
         // instead of burning the round on further aged heavyweights.
         if skip.is_empty() {
-            let (&id, front) = self.q.iter().next()?;
+            let (&seq, front) = self.q.iter().next()?;
             if now.since(front.enqueued_at) >= self.aging_bound {
-                // The backbone is id-keyed, so the promoted first entry
+                // The backbone is seq-keyed, so the promoted first entry
                 // is by construction the globally most-senior waiter —
                 // promotion never jumps a younger entry over an older
                 // one.
                 self.last_was_aged = true;
-                return self.remove(id).map(|w| w.inv);
+                return self.remove(seq).map(|w| w.inv);
             }
         }
-        // The smallest charge, ties to the oldest (lowest id): the
-        // (charge, id) index iterates in exactly that order, so the first
-        // non-skipped entry is the old scan's first minimum. skip is at
-        // most one entry (see retries_past_failure), so this is O(skip).
-        let id = self
+        // The smallest charge, ties to the oldest (lowest seq): the
+        // (charge, seq) index iterates in exactly that order, so the
+        // first non-skipped entry is the old scan's first minimum. skip
+        // is at most one entry (see retries_past_failure), so this is
+        // O(skip).
+        let seq = self
             .by_charge
             .iter()
-            .find(|(_, id)| !skip.contains(id))
-            .map(|&(_, id)| id)?;
+            .find(|&&(_, seq)| !skip.contains(&self.q[&seq].inv))
+            .map(|&(_, seq)| seq)?;
         self.last_was_aged = false;
-        self.remove(id).map(|w| w.inv)
+        self.remove(seq).map(|w| w.inv)
     }
 
     fn drains_until_full(&self) -> bool {
@@ -444,11 +470,38 @@ impl QueueDiscipline for MemoryAware {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::slab::InvocationSlab;
 
-    fn w(inv: InvocationId, function: &str, mb: u32, at_s: u64) -> Waiting {
+    /// Mint `n` live handles with dense seqs 0..n (append-only slab, so
+    /// handle i carries seq i — the legacy dense-id regime).
+    fn mint(n: usize) -> Vec<InvocationId> {
+        let mut slab: InvocationSlab<()> = InvocationSlab::new();
+        (0..n).map(|_| slab.insert_with(|_, _| ())).collect()
+    }
+
+    struct Names {
+        syms: Symbols,
+    }
+
+    impl Names {
+        fn new(names: &[&str]) -> Names {
+            let mut syms = Symbols::new();
+            for n in names {
+                syms.intern(n);
+            }
+            Names { syms }
+        }
+
+        fn id(&self, name: &str) -> FnId {
+            self.syms.lookup(name).unwrap()
+        }
+    }
+
+    fn w(ids: &[InvocationId], seq: usize, function: FnId, mb: u32, at_s: u64) -> Waiting {
         Waiting {
-            inv,
-            function: function.to_string(),
+            inv: ids[seq],
+            seq: seq as u64,
+            function,
             charge_mb: mb,
             enqueued_at: SimTime(at_s * 1_000_000),
         }
@@ -469,36 +522,42 @@ mod tests {
 
     #[test]
     fn build_threads_the_aging_bound_through() {
+        let ids = mint(2);
+        let names = Names::new(&["big", "small"]);
+        let (big, small) = (names.id("big"), names.id("small"));
         let mut d = build(QueueKind::MemoryAware, SimDuration::from_secs(5));
-        d.enqueue(w(0, "big", 2048, 0));
-        d.enqueue(w(1, "small", 128, 1));
+        d.enqueue(w(&ids, 0, big, 2048, 0), &names.syms);
+        d.enqueue(w(&ids, 1, small, 128, 1), &names.syms);
         // At t=6 s the oldest entry has waited past the 5 s bound, so it
         // is promoted over the smaller charge — proving the custom bound
         // (not the 30 s default) is in effect.
-        assert_eq!(d.next_candidate(t(6), &[]), Some(0));
+        assert_eq!(d.next_candidate(t(6), &[]), Some(ids[0]));
         // With the default bound the same drain picks the smallest.
         let mut d = build(QueueKind::MemoryAware, MEMAWARE_AGING_BOUND);
-        d.enqueue(w(0, "big", 2048, 0));
-        d.enqueue(w(1, "small", 128, 1));
-        assert_eq!(d.next_candidate(t(6), &[]), Some(1));
+        d.enqueue(w(&ids, 0, big, 2048, 0), &names.syms);
+        d.enqueue(w(&ids, 1, small, 128, 1), &names.syms);
+        assert_eq!(d.next_candidate(t(6), &[]), Some(ids[1]));
     }
 
     #[test]
     fn legacy_is_per_function_fifo_with_one_shot_drain() {
+        let ids = mint(3);
+        let names = Names::new(&["f", "g"]);
+        let (f, g) = (names.id("f"), names.id("g"));
         let mut d = LegacyOneShot::default();
-        d.enqueue(w(0, "f", 256, 0));
-        d.enqueue(w(1, "g", 256, 1));
-        d.enqueue(w(2, "f", 256, 2));
+        d.enqueue(w(&ids, 0, f, 256, 0), &names.syms);
+        d.enqueue(w(&ids, 1, g, 256, 1), &names.syms);
+        d.enqueue(w(&ids, 2, f, 256, 2), &names.syms);
         assert_eq!(d.len(), 3);
         // Same-function drain is per-function FIFO.
-        assert_eq!(d.take_for_function("f"), Some(0));
-        assert_eq!(d.take_for_function("f"), Some(2));
-        assert_eq!(d.take_for_function("f"), None);
+        assert_eq!(d.take_for_function(f, &names.syms), Some(ids[0]));
+        assert_eq!(d.take_for_function(f, &names.syms), Some(ids[2]));
+        assert_eq!(d.take_for_function(f, &names.syms), None);
         assert_eq!(d.len(), 1);
         // One-shot drain: a single candidate per round, never more.
         assert!(!d.drains_until_full());
         assert!(!d.retries_past_failure(0));
-        assert_eq!(d.next_candidate(t(10), &[]), Some(1));
+        assert_eq!(d.next_candidate(t(10), &[]), Some(ids[1]));
         assert_eq!(d.next_candidate(t(10), &[]), None);
         assert!(d.is_empty());
     }
@@ -506,14 +565,17 @@ mod tests {
     #[test]
     fn legacy_candidate_follows_hash_map_iteration_order() {
         // The candidate must be the front of the FIRST non-empty queue in
-        // FxHashMap iteration order — whatever that order is, it must
-        // match an identically-built map (the byte-identity property the
-        // executor relies on).
+        // FxHashMap iteration order — and that order, over the interned
+        // Rc<str> keys, must match an identically-built String-keyed map
+        // (the byte-identity property the executor relies on).
+        let ids = mint(5);
+        let fnames = ["a", "b", "c", "d", "e"];
+        let names = Names::new(&fnames);
         let mut d = LegacyOneShot::default();
-        let mut reference: FxHashMap<FunctionId, VecDeque<InvocationId>> = FxHashMap::default();
-        for (i, f) in ["a", "b", "c", "d", "e"].iter().enumerate() {
-            d.enqueue(w(i, f, 256, 0));
-            reference.entry(f.to_string()).or_default().push_back(i);
+        let mut reference: FxHashMap<String, VecDeque<InvocationId>> = FxHashMap::default();
+        for (i, f) in fnames.iter().enumerate() {
+            d.enqueue(w(&ids, i, names.id(f), 256, 0), &names.syms);
+            reference.entry(f.to_string()).or_default().push_back(ids[i]);
         }
         let expected = reference
             .iter()
@@ -525,23 +587,30 @@ mod tests {
 
     #[test]
     fn fifo_orders_globally_by_arrival_and_reinserts_at_seniority() {
+        let ids = mint(9);
+        let names = Names::new(&["a", "b"]);
+        let (a, b) = (names.id("a"), names.id("b"));
         let mut d = FifoFair::default();
-        d.enqueue(w(3, "a", 256, 3));
-        d.enqueue(w(5, "b", 512, 5));
-        assert_eq!(d.next_candidate(t(9), &[]), Some(3));
+        d.enqueue(w(&ids, 3, a, 256, 3), &names.syms);
+        d.enqueue(w(&ids, 5, b, 512, 5), &names.syms);
+        assert_eq!(d.next_candidate(t(9), &[]), Some(ids[3]));
         // Failed retry: re-enqueue with the original stamp → back to the
         // head, ahead of the younger entry.
-        d.enqueue(w(3, "a", 256, 3));
-        assert_eq!(d.next_candidate(t(9), &[]), Some(3));
-        d.enqueue(w(3, "a", 256, 3));
+        d.enqueue(w(&ids, 3, a, 256, 3), &names.syms);
+        assert_eq!(d.next_candidate(t(9), &[]), Some(ids[3]));
+        d.enqueue(w(&ids, 3, a, 256, 3), &names.syms);
         // A failed head is skipped for the rest of the drain round.
-        assert_eq!(d.next_candidate(t(9), &[3]), Some(5), "skip honors the failed head");
-        d.enqueue(w(7, "a", 256, 7));
-        d.enqueue(w(8, "a", 128, 8));
+        assert_eq!(
+            d.next_candidate(t(9), &[ids[3]]),
+            Some(ids[5]),
+            "skip honors the failed head"
+        );
+        d.enqueue(w(&ids, 7, a, 256, 7), &names.syms);
+        d.enqueue(w(&ids, 8, a, 128, 8), &names.syms);
         // Same-function drain hands over the oldest of that function.
-        assert_eq!(d.take_for_function("a"), Some(3));
-        assert_eq!(d.take_for_function("a"), Some(7));
-        assert_eq!(d.take_for_function("b"), None, "5 was drained above");
+        assert_eq!(d.take_for_function(a, &names.syms), Some(ids[3]));
+        assert_eq!(d.take_for_function(a, &names.syms), Some(ids[7]));
+        assert_eq!(d.take_for_function(b, &names.syms), None, "5 was drained above");
         assert_eq!(d.len(), 1);
         assert!(d.drains_until_full());
         assert!(!d.retries_past_failure(1), "strict head-of-line");
@@ -549,33 +618,41 @@ mod tests {
 
     #[test]
     fn memaware_picks_smallest_charge_until_the_aging_bound_promotes() {
+        let ids = mint(4);
+        let names = Names::new(&["big", "small", "mid", "small2"]);
+        let (big, small, mid, small2) = (
+            names.id("big"),
+            names.id("small"),
+            names.id("mid"),
+            names.id("small2"),
+        );
         let mut d = MemoryAware::default();
-        d.enqueue(w(0, "big", 2048, 0));
-        d.enqueue(w(1, "small", 128, 1));
-        d.enqueue(w(2, "mid", 512, 2));
+        d.enqueue(w(&ids, 0, big, 2048, 0), &names.syms);
+        d.enqueue(w(&ids, 1, small, 128, 1), &names.syms);
+        d.enqueue(w(&ids, 2, mid, 512, 2), &names.syms);
         // Under the bound: smallest charge wins.
-        assert_eq!(d.next_candidate(t(5), &[]), Some(1));
-        d.enqueue(w(1, "small", 128, 1));
+        assert_eq!(d.next_candidate(t(5), &[]), Some(ids[1]));
+        d.enqueue(w(&ids, 1, small, 128, 1), &names.syms);
         // Ties break to the oldest entry.
-        d.enqueue(w(3, "small2", 128, 3));
-        assert_eq!(d.next_candidate(t(5), &[]), Some(1));
+        d.enqueue(w(&ids, 3, small2, 128, 3), &names.syms);
+        assert_eq!(d.next_candidate(t(5), &[]), Some(ids[1]));
         // A failed smallest pick ends the round: nothing larger could
         // place where it failed.
         assert!(!d.retries_past_failure(1), "failed smallest stops the drain");
         // Past the bound, the oldest entry outranks everything. (At
         // t=31 s entry 0 has waited 31 s ≥ the 30 s bound; entry 2 only
         // 29 s.)
-        assert_eq!(d.next_candidate(t(31), &[]), Some(0), "aged head promoted");
+        assert_eq!(d.next_candidate(t(31), &[]), Some(ids[0]), "aged head promoted");
         // A failed AGED head is worth one skip — the smallest flows again.
         assert!(d.retries_past_failure(1), "one skip past a failed aged head");
         assert!(!d.retries_past_failure(2), "then stop");
-        d.enqueue(w(0, "big", 2048, 0));
-        assert_eq!(d.next_candidate(t(31), &[0]), Some(3));
+        d.enqueue(w(&ids, 0, big, 2048, 0), &names.syms);
+        assert_eq!(d.next_candidate(t(31), &[ids[0]]), Some(ids[3]));
         assert!(
             !d.retries_past_failure(1),
             "the fallback pick was the smallest: a failure is terminal"
         );
-        assert_eq!(d.take_for_function("mid"), Some(2));
+        assert_eq!(d.take_for_function(mid, &names.syms), Some(ids[2]));
         assert_eq!(d.len(), 1);
     }
 
@@ -588,9 +665,9 @@ mod tests {
     fn indexed_disciplines_match_the_reference_scan_order() {
         use crate::util::rng::Rng;
 
-        // The old arrival-ordered VecDeque backbone, verbatim.
+        // The old arrival(seq)-ordered VecDeque backbone, verbatim.
         fn insert_ordered(q: &mut VecDeque<Waiting>, w: Waiting) {
-            let pos = q.partition_point(|e| e.inv < w.inv);
+            let pos = q.partition_point(|e| e.seq < w.seq);
             q.insert(pos, w);
         }
 
@@ -601,7 +678,7 @@ mod tests {
         }
 
         impl RefModel {
-            fn take_for_function(&mut self, function: &str) -> Option<InvocationId> {
+            fn take_for_function(&mut self, function: FnId) -> Option<InvocationId> {
                 let idx = self.q.iter().position(|e| e.function == function)?;
                 self.q.remove(idx).map(|w| w.inv)
             }
@@ -630,33 +707,38 @@ mod tests {
         }
 
         let bound = SimDuration::from_secs(20);
+        let ids = mint(2_000);
+        let fnames = ["a", "b", "c", "d"];
+        let names = Names::new(&fnames);
         for (kind, memaware) in [(QueueKind::FifoFair, false), (QueueKind::MemoryAware, true)] {
             let mut indexed = build(kind, bound);
             let mut model = RefModel { q: VecDeque::new(), memaware, aging_bound: bound };
             let mut rng = Rng::new(0xD15B_A7C4 ^ memaware as u64);
-            let functions = ["a", "b", "c", "d"];
             let charges = [128u32, 256, 256, 512, 2048];
-            let mut next_id: InvocationId = 0;
-            let mut last_popped: Option<InvocationId> = None;
+            let mut next_seq: usize = 0;
+            // Track the seq of the last clean-round pop so a later op can
+            // replay it as a failed retry (slot == seq in the append-only
+            // mint slab).
+            let mut last_popped: Option<usize> = None;
             for step in 0..2_000u64 {
                 // Sim time advances with the op index so the aging bound
                 // fires on some drains and not others.
                 let now = SimTime(step * 100_000);
                 match rng.below(10) {
-                    // Fresh arrival (ids stay dense and arrival-ordered).
+                    // Fresh arrival (seqs stay dense and arrival-ordered).
                     0..=4 => {
-                        let f = functions[rng.below(functions.len() as u64) as usize];
+                        let f = names.id(fnames[rng.below(fnames.len() as u64) as usize]);
                         let mb = charges[rng.below(charges.len() as u64) as usize];
-                        let wait = w(next_id, f, mb, step / 10);
-                        indexed.enqueue(wait.clone());
+                        let wait = w(&ids, next_seq, f, mb, step / 10);
+                        indexed.enqueue(wait.clone(), &names.syms);
                         insert_ordered(&mut model.q, wait);
-                        next_id += 1;
+                        next_seq += 1;
                     }
                     // Same-function drain.
                     5..=6 => {
-                        let f = functions[rng.below(functions.len() as u64) as usize];
-                        let got = indexed.take_for_function(f);
-                        assert_eq!(got, model.take_for_function(f), "step {step}: take({f})");
+                        let f = names.id(fnames[rng.below(fnames.len() as u64) as usize]);
+                        let got = indexed.take_for_function(f, &names.syms);
+                        assert_eq!(got, model.take_for_function(f), "step {step}: take");
                         last_popped = None;
                     }
                     // Capacity drain, clean round. Remember the pop so a
@@ -664,18 +746,18 @@ mod tests {
                     7..=8 => {
                         let got = indexed.next_candidate(now, &[]);
                         assert_eq!(got, model.next_candidate(now, &[]), "step {step}: drain");
-                        last_popped = got;
+                        last_popped = got.map(|id| id.slot() as usize);
                     }
                     // Failed retry: re-enqueue the last pop at its original
                     // seniority, then drain again skipping it.
                     _ => {
                         if let Some(prev) = last_popped.take() {
-                            let f = functions[rng.below(functions.len() as u64) as usize];
+                            let f = names.id(fnames[rng.below(fnames.len() as u64) as usize]);
                             let mb = charges[rng.below(charges.len() as u64) as usize];
-                            let back = w(prev, f, mb, step / 10);
-                            indexed.enqueue(back.clone());
+                            let back = w(&ids, prev, f, mb, step / 10);
+                            indexed.enqueue(back.clone(), &names.syms);
                             insert_ordered(&mut model.q, back);
-                            let skip = [prev];
+                            let skip = [ids[prev]];
                             let got = indexed.next_candidate(now, &skip);
                             assert_eq!(got, model.next_candidate(now, &skip), "step {step}: skip drain");
                         }

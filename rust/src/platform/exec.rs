@@ -14,6 +14,17 @@
 //!   (used by prediction admission, or directly by tests/examples).
 //! - [`emit_prediction`] — gate a prediction and, if admitted, schedule
 //!   the freshen and its accuracy-resolution bookkeeping.
+//!
+//! # Hot path
+//!
+//! The recurring timer shapes of the platform are enum-coded
+//! ([`PlatformEvent`]): an op continuation, a body start, an idle check or
+//! a freshen step is a small `Copy`-field variant stored inline on the
+//! timing wheel — no `Box`, no vtable — while irregular shapes (network
+//! completions with payloads, workload-layer events) keep the boxed-closure
+//! escape hatch. Function names never travel on this path either: contexts,
+//! events and spans carry interned [`FnId`]s, resolved back to names only
+//! at observation boundaries (`registry.symbols`).
 
 use crate::freshen::hooks::FreshenAction;
 use crate::freshen::state::{Completer, FrResult};
@@ -27,11 +38,13 @@ use crate::platform::dispatch::Waiting;
 use crate::platform::endpoint::Endpoint;
 use crate::platform::function::Op;
 use crate::platform::keepalive::{IdleCtx, IdleVerdict};
+use crate::platform::symbols::FnId;
 use crate::platform::world::{
     FreshenRunCtx, InvocationCtx, InvocationId, PendingFreshenCharge, PlatformSim, World,
 };
 use crate::predict::confidence::DEFAULT_MATCH_WINDOW;
 use crate::predict::Prediction;
+use crate::simcore::{EventBody, EventFn, Sim};
 use crate::util::rng::Rng;
 use crate::util::time::{SimDuration, SimTime};
 
@@ -48,24 +61,140 @@ const REQUEST_BYTES: f64 = 256.0;
 const HIST_LEAD: SimDuration = SimDuration(500_000); // 500 ms
 
 // ====================================================================
+// Platform events
+// ====================================================================
+
+/// The platform's enum-coded event type.
+///
+/// Every recurring timer shape on the replay hot path is a plain variant —
+/// stored inline on the timing wheel, zero heap allocations per event —
+/// dispatched here in one `match`. Irregular shapes (transfer completions
+/// carrying an [`FrResult`], wait-list wakeups, workload-layer snapshots)
+/// go through [`PlatformEvent::Closure`], which `Sim::schedule` wraps via
+/// [`EventBody::from_closure`], so closure call sites compile unchanged.
+///
+/// Firing order is pinned against the all-closures reference model by
+/// `Sim::force_closures` (see the equivalence tests): both paths consume
+/// one sequence number per schedule, so `(timestamp, seq)` order — and
+/// therefore every digest — is identical.
+pub enum PlatformEvent {
+    /// A committed trigger fires: submit an invocation of `function`.
+    Invoke { function: FnId },
+    /// An op's latency elapsed: advance the invocation to its next op.
+    Advance { inv: InvocationId },
+    /// Dispatch cost paid: the runtime's `run` hook fires on `cid`.
+    BeginBody {
+        inv: InvocationId,
+        cid: ContainerId,
+        kind: StartKind,
+    },
+    /// Cold start finished: the container inits, then the body begins.
+    ColdStartDone { inv: InvocationId, cid: ContainerId },
+    /// Keep-alive idle check, stamped with the container's reuse
+    /// generation at arm time (stale checks no-op).
+    IdleCheck { cid: ContainerId, gen: u64 },
+    /// Continue a freshen run at its (already-advanced) action cursor.
+    FreshenStep { run: usize },
+    /// A pre-provisioned freshen container finished its cold start.
+    FreshenColdDone {
+        function: FnId,
+        cid: ContainerId,
+        prediction_id: Option<u64>,
+    },
+    /// Trigger commit elapsed: gate the prediction and maybe freshen.
+    EmitPrediction { pred: Prediction },
+    /// Prediction deadline: resolve hit/miss, settle deferred charges.
+    ResolvePrediction { pid: u64, function: FnId },
+    /// Freshen lead time reached: launch the admitted run.
+    StartFreshen {
+        function: FnId,
+        prediction_id: Option<u64>,
+    },
+    /// Escape hatch for irregular shapes (one boxed closure per event).
+    Closure(EventFn<World, PlatformEvent>),
+}
+
+impl EventBody<World> for PlatformEvent {
+    fn fire(self, sim: &mut Sim<World, PlatformEvent>, world: &mut World) {
+        match self {
+            PlatformEvent::Invoke { function } => {
+                invoke_id(sim, world, function);
+            }
+            PlatformEvent::Advance { inv } => advance(sim, world, inv),
+            PlatformEvent::BeginBody { inv, cid, kind } => begin_body(sim, world, inv, cid, kind),
+            PlatformEvent::ColdStartDone { inv, cid } => {
+                world.containers[cid].finish_init(sim.now());
+                world.containers[cid].begin_run(sim.now());
+                begin_body(sim, world, inv, cid, StartKind::Cold);
+            }
+            PlatformEvent::IdleCheck { cid, gen } => idle_check_fired(sim, world, cid, gen),
+            PlatformEvent::FreshenStep { run } => step_freshen(sim, world, run),
+            PlatformEvent::FreshenColdDone {
+                function,
+                cid,
+                prediction_id,
+            } => {
+                world.containers[cid].finish_init(sim.now());
+                let _ = launch_freshen_on(sim, world, function, cid, prediction_id);
+            }
+            PlatformEvent::EmitPrediction { pred } => {
+                let now = sim.now();
+                emit_prediction(sim, world, pred, now);
+            }
+            PlatformEvent::ResolvePrediction { pid, function } => {
+                let now = sim.now();
+                resolve_prediction(world, pid, function, now);
+            }
+            PlatformEvent::StartFreshen {
+                function,
+                prediction_id,
+            } => {
+                let _ = start_freshen_id(sim, world, function, prediction_id);
+            }
+            PlatformEvent::Closure(f) => f(sim, world),
+        }
+    }
+
+    fn from_closure(f: EventFn<World, PlatformEvent>) -> PlatformEvent {
+        PlatformEvent::Closure(f)
+    }
+}
+
+// ====================================================================
 // Invocation path
 // ====================================================================
 
 /// Submit an invocation of `function` now. Returns its id.
+///
+/// Name-keyed boundary: interns the name and delegates to [`invoke_id`]
+/// (replay loops that pre-intern their trace's names skip this hash).
 pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> InvocationId {
+    let f = world.registry.symbols.intern(function);
+    invoke_id(sim, world, f)
+}
+
+/// Submit an invocation of interned `function` now. Returns its id.
+pub fn invoke_id(sim: &mut PlatformSim, world: &mut World, function: FnId) -> InvocationId {
     let now = sim.now();
     debug_assert!(
-        world.registry.function(function).is_some(),
-        "invoke of unknown function '{function}'"
+        world.registry.function_by_id(function).is_some(),
+        "invoke of unknown function '{}'",
+        world.registry.symbols.resolve(function)
     );
     // Arrival is a predictor observation and may confirm a prediction.
-    world.hist_pred.observe(function, now);
-    world.tracker.on_arrival(function, now);
+    // (The predictors are name-keyed observation boundaries: resolve is
+    // an index into the intern table, not a hash.)
+    world
+        .hist_pred
+        .observe(world.registry.symbols.resolve(function), now);
+    world
+        .tracker
+        .on_arrival(world.registry.symbols.resolve(function), now);
 
-    let id = world.invocations.len();
-    world.invocations.push(InvocationCtx {
+    let id = world.invocations.insert_with(|id, seq| InvocationCtx {
         id,
-        function: function.to_string(),
+        seq,
+        function,
         container: None,
         enqueued_at: now,
         started_at: now,
@@ -76,11 +205,22 @@ pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> Invoc
         queued: false,
         done: false,
     });
-    world
-        .obs
-        .record(SpanKind::Arrival, function, id as u64, now, SimDuration::ZERO, 0, 0);
+    let seq = world.invocations[id].seq;
+    world.obs.record(
+        &world.registry.symbols,
+        SpanKind::Arrival,
+        function,
+        seq,
+        now,
+        SimDuration::ZERO,
+        0,
+        0,
+    );
     if world.metrics.windows.enabled {
-        world.metrics.windows.on_arrival(function, now.micros());
+        world
+            .metrics
+            .windows
+            .on_arrival(world.registry.symbols.resolve(function), now.micros());
     }
     dispatch(sim, world, id);
     id
@@ -91,20 +231,35 @@ pub fn invoke(sim: &mut PlatformSim, world: &mut World, function: &str) -> Invoc
 /// drains know when the freed memory is exhausted.
 fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool {
     let now = sim.now();
-    let function = world.invocations[inv].function.clone();
+    let (function, seq) = {
+        let ctx = &world.invocations[inv];
+        (ctx.function, ctx.seq)
+    };
 
-    if let Some(cid) = world.find_warm(&function) {
+    if let Some(cid) = world.find_warm(function) {
         // Warm start: reserve immediately, body begins after dispatch cost.
         note_queue_wait(world, inv, now);
         cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
-        world
-            .obs
-            .record(SpanKind::WarmStart, &function, inv as u64, now, delay, cid as u64, 0);
-        sim.schedule(delay, move |sim, w| {
-            begin_body(sim, w, inv, cid, StartKind::Warm)
-        });
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::WarmStart,
+            function,
+            seq,
+            now,
+            delay,
+            cid as u64,
+            0,
+        );
+        sim.schedule_event(
+            delay,
+            PlatformEvent::BeginBody {
+                inv,
+                cid,
+                kind: StartKind::Warm,
+            },
+        );
         return true;
     }
 
@@ -112,28 +267,40 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
     // for this function at a fraction of a cold start, keeping its
     // runtime-scoped connections and freshen cache.
     if world.config.isolation == crate::util::config::IsolationScope::PerApp {
-        let app = app_of(world, &function);
+        let app = world.registry.app_of_id(function);
         let sibling = world
             .containers
             .iter()
-            .filter(|c| c.warm_for_app(&app))
+            .filter(|c| c.warm_for_app(app))
             .max_by_key(|c| c.last_used)
             .map(|c| c.id);
         if let Some(cid) = sibling {
             note_queue_wait(world, inv, now);
             cancel_idle_timer(sim, world, cid);
-            world.containers[cid].reinit_for(&function, now);
-            let mb = world.charge_for_function(&function);
+            world.containers[cid].reinit_for(function, now);
+            let mb = world.charge_for_function_id(function);
             world.recharge_container(cid, mb, now);
             world.containers[cid].begin_run(now);
             world.metrics.reinits += 1;
             let delay = world.config.warm_start + world.config.cold_start.mul_f64(0.25);
-            world
-                .obs
-                .record(SpanKind::Reinit, &function, inv as u64, now, delay, cid as u64, mb as u64);
-            sim.schedule(delay, move |sim, w| {
-                begin_body(sim, w, inv, cid, StartKind::Warm)
-            });
+            world.obs.record(
+                &world.registry.symbols,
+                SpanKind::Reinit,
+                function,
+                seq,
+                now,
+                delay,
+                cid as u64,
+                mb as u64,
+            );
+            sim.schedule_event(
+                delay,
+                PlatformEvent::BeginBody {
+                    inv,
+                    cid,
+                    kind: StartKind::Warm,
+                },
+            );
             return true;
         }
     }
@@ -141,24 +308,27 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
     // Cold start: charge the function's memory against the cluster; where
     // it lands is the placement strategy's call; when the cluster is
     // full, the keep-alive policy may reclaim warm containers.
-    let mb = world.charge_for_function(&function);
+    let mb = world.charge_for_function_id(function);
     let slot = world
-        .acquire_slot_for(now, mb, &function)
-        .or_else(|| evict_for_pressure(sim, world, mb, now, &function));
+        .acquire_slot_for(now, mb, function)
+        .or_else(|| evict_for_pressure(sim, world, mb, now, function));
 
     if let Some(cid) = slot {
         note_queue_wait(world, inv, now);
-        let app = app_of(world, &function);
-        world.containers[cid].begin_cold_start_for_app(&function, &app, now);
+        let app = world.registry.app_of_id(function);
+        world.containers[cid].begin_cold_start_for_app(function, Some(app), now);
         let delay = world.cold_start_on(cid);
-        world
-            .obs
-            .record(SpanKind::ColdStart, &function, inv as u64, now, delay, cid as u64, mb as u64);
-        sim.schedule(delay, move |sim, w| {
-            w.containers[cid].finish_init(sim.now());
-            w.containers[cid].begin_run(sim.now());
-            begin_body(sim, w, inv, cid, StartKind::Cold)
-        });
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::ColdStart,
+            function,
+            seq,
+            now,
+            delay,
+            cid as u64,
+            mb as u64,
+        );
+        sim.schedule_event(delay, PlatformEvent::ColdStartDone { inv, cid });
         return true;
     }
 
@@ -173,13 +343,20 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
     if !world
         .invokers
         .iter()
-        .any(|i| i.feasible(mb as u64) && world.placement_admits(&function, i.id))
+        .any(|i| i.feasible(mb as u64) && world.placement_admits(function, i.id))
     {
         world.invocations[inv].done = true;
         world.metrics.dropped_infeasible += 1;
-        world
-            .obs
-            .record(SpanKind::Drop, &function, inv as u64, now, SimDuration::ZERO, mb as u64, 0);
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::Drop,
+            function,
+            seq,
+            now,
+            SimDuration::ZERO,
+            mb as u64,
+            0,
+        );
         return true; // terminally handled: nothing to retry later
     }
 
@@ -191,12 +368,16 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
         world.metrics.queued_total += 1;
     }
     let enqueued_at = world.invocations[inv].enqueued_at;
-    world.dispatch.enqueue(Waiting {
-        inv,
-        function,
-        charge_mb: mb,
-        enqueued_at,
-    });
+    world.dispatch.enqueue(
+        Waiting {
+            inv,
+            seq,
+            function,
+            charge_mb: mb,
+            enqueued_at,
+        },
+        &world.registry.symbols,
+    );
     let depth = world.dispatch.len() as u64;
     world.metrics.queue_peak_depth = world.metrics.queue_peak_depth.max(depth);
     false
@@ -206,19 +387,24 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
 /// arrivals dispatch in their arrival event (zero wait); only retries of
 /// queued work observe `now` past the arrival stamp.
 fn note_queue_wait(world: &mut World, inv: InvocationId, now: SimTime) {
+    let (seq, function, enqueued_at, queued) = {
+        let ctx = &world.invocations[inv];
+        (ctx.seq, ctx.function, ctx.enqueued_at, ctx.queued)
+    };
     debug_assert!(
-        now >= world.invocations[inv].enqueued_at,
-        "invocation {inv} placed before its arrival stamp (queue wait would underflow)"
+        now >= enqueued_at,
+        "invocation {seq} placed before its arrival stamp (queue wait would underflow)"
     );
-    let waited = now.since(world.invocations[inv].enqueued_at).micros();
-    if world.invocations[inv].queued && waited > 0 {
+    let waited = now.since(enqueued_at).micros();
+    if queued && waited > 0 {
         world.metrics.queue_wait_us = world.metrics.queue_wait_us.saturating_add(waited);
         world.metrics.queue_wait_max_us = world.metrics.queue_wait_max_us.max(waited);
         world.obs.record(
+            &world.registry.symbols,
             SpanKind::Queue,
-            &world.invocations[inv].function,
-            inv as u64,
-            world.invocations[inv].enqueued_at,
+            function,
+            seq,
+            enqueued_at,
             SimDuration(waited),
             0,
             0,
@@ -227,7 +413,7 @@ fn note_queue_wait(world: &mut World, inv: InvocationId, now: SimTime) {
             world
                 .metrics
                 .windows
-                .on_queue_wait(&world.invocations[inv].function, waited);
+                .on_queue_wait(world.registry.symbols.resolve(function), waited);
         }
     }
 }
@@ -254,7 +440,7 @@ fn evict_for_pressure(
     world: &mut World,
     mb: u32,
     now: SimTime,
-    function: &str,
+    function: FnId,
 ) -> Option<ContainerId> {
     let policy = world.keep_alive.clone();
     if !policy.evicts_under_pressure(&world.config) {
@@ -325,9 +511,12 @@ fn begin_body(
     kind: StartKind,
 ) {
     let now = sim.now();
-    let function = world.invocations[inv].function.clone();
+    let (function, seq) = {
+        let ctx = &world.invocations[inv];
+        (ctx.function, ctx.seq)
+    };
     let (resource_count, prefetch_ttl) = {
-        let spec = world.registry.function(&function).expect("deployed");
+        let spec = world.registry.function_by_id(function).expect("deployed");
         (
             spec.resource_count(),
             spec.prefetch_ttl.unwrap_or(world.config.freshen.default_ttl),
@@ -345,9 +534,16 @@ fn begin_body(
         let host = world.containers[cid].invoker as u64
             | (world.config.placement.code() << 56);
         let charge = world.containers[cid].charged_mb as u64;
-        world
-            .obs
-            .record(SpanKind::Placement, &function, inv as u64, now, SimDuration::ZERO, host, charge);
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::Placement,
+            function,
+            seq,
+            now,
+            SimDuration::ZERO,
+            host,
+            charge,
+        );
     }
     // (Re)build fr_state for this cycle, keeping still-fresh results.
     world.containers[cid]
@@ -360,16 +556,17 @@ fn begin_body(
 /// Execute the invocation's current op; schedules its own continuation.
 fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
     let now = sim.now();
-    let (function, op_idx, cid) = {
+    let (function, seq, op_idx, cid) = {
         let ctx = &world.invocations[inv];
         (
-            ctx.function.clone(),
+            ctx.function,
+            ctx.seq,
             ctx.op_idx,
             ctx.container.expect("dispatched"),
         )
     };
     // Rc handle: no per-step clone of op payloads (hot path; see §Perf).
-    let spec = world.registry.function_rc(&function).expect("deployed");
+    let spec = world.registry.function_rc_by_id(function).expect("deployed");
     if op_idx >= spec.ops.len() {
         finish_invocation(sim, world, inv);
         return;
@@ -388,11 +585,11 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
 
     match &spec.ops[op_idx] {
         Op::Compute { duration } => {
-            sim.schedule(*duration, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(*duration, PlatformEvent::Advance { inv });
         }
         Op::Infer { model, .. } => {
             let d = world.model_latency(model);
-            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(d, PlatformEvent::Advance { inv });
         }
         Op::InvokeNext { function: next, trigger } => {
             let trigger = *trigger;
@@ -401,29 +598,37 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             // off this container's host (zero on homogeneous clusters)...
             let delay = trigger.sample_delay(&mut world.rng);
             let hop = world.chain_edge_delay(cid);
-            let next_fn = next.clone();
-            sim.schedule(TRIGGER_COMMIT + delay + hop, move |sim, w| {
-                invoke(sim, w, &next_fn);
-            });
-            world
-                .obs
-                .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay + hop, 0, 0);
+            let next_id = world.registry.symbols.intern(next);
+            sim.schedule_event(
+                TRIGGER_COMMIT + delay + hop,
+                PlatformEvent::Invoke { function: next_id },
+            );
+            world.obs.record(
+                &world.registry.symbols,
+                SpanKind::ChainEdge,
+                next_id,
+                seq,
+                now,
+                TRIGGER_COMMIT + delay + hop,
+                0,
+                0,
+            );
             // A deterministic edge: record follow-through for the
             // predictor's confidence model.
-            world.chain_pred.observe_edge(&function, next, true);
+            world
+                .chain_pred
+                .observe_edge(world.registry.symbols.resolve(function), next, true);
             // ...and that same delay is freshen's prediction window: the
             // platform knows `next` is imminent the moment the trigger
             // commits (Figure 1).
             let pred = world.chain_pred.predict_successor(
-                &function,
+                world.registry.symbols.resolve(function),
                 next,
                 trigger,
                 now + TRIGGER_COMMIT,
             );
-            sim.schedule(TRIGGER_COMMIT, move |sim, w| {
-                emit_prediction(sim, w, pred.clone(), sim.now());
-            });
-            sim.schedule(TRIGGER_COMMIT, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(TRIGGER_COMMIT, PlatformEvent::EmitPrediction { pred });
+            sim.schedule_event(TRIGGER_COMMIT, PlatformEvent::Advance { inv });
         }
         Op::InvokeBranch { branches, trigger } => {
             let trigger = *trigger;
@@ -435,46 +640,56 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             let total: f64 = branches.iter().map(|(_, p)| *p).sum();
             let roll = world.rng.f64();
             let mut acc = 0.0;
-            let mut taken: Option<String> = None;
+            // Borrow the sampled name out of the spec (an owned `Rc`
+            // handle) instead of cloning it per branch roll.
+            let mut taken: Option<&str> = None;
             for (f, p) in branches.iter() {
                 acc += p;
                 if roll < acc {
-                    taken = Some(f.clone());
+                    taken = Some(f.as_str());
                     break;
                 }
             }
             debug_assert!(total <= 1.0 + 1e-9, "branch weights exceed 1");
             // Observe every edge's follow-through.
             for (f, _) in branches.iter() {
-                world
-                    .chain_pred
-                    .observe_edge(&function, f, taken.as_deref() == Some(f.as_str()));
+                world.chain_pred.observe_edge(
+                    world.registry.symbols.resolve(function),
+                    f,
+                    taken == Some(f.as_str()),
+                );
             }
-            if let Some(next) = &taken {
+            if let Some(next) = taken {
                 let delay = trigger.sample_delay(&mut world.rng);
                 let hop = world.chain_edge_delay(cid);
-                let next_fn = next.clone();
-                sim.schedule(TRIGGER_COMMIT + delay + hop, move |sim, w| {
-                    invoke(sim, w, &next_fn);
-                });
-                world
-                    .obs
-                    .record(SpanKind::ChainEdge, next, inv as u64, now, TRIGGER_COMMIT + delay + hop, 0, 0);
+                let next_id = world.registry.symbols.intern(next);
+                sim.schedule_event(
+                    TRIGGER_COMMIT + delay + hop,
+                    PlatformEvent::Invoke { function: next_id },
+                );
+                world.obs.record(
+                    &world.registry.symbols,
+                    SpanKind::ChainEdge,
+                    next_id,
+                    seq,
+                    now,
+                    TRIGGER_COMMIT + delay + hop,
+                    0,
+                    0,
+                );
             }
             // Predict (and maybe freshen) every plausible branch — the
             // learned branch confidence gates which ones are worth it.
             for (f, _) in branches.iter() {
                 let pred = world.chain_pred.predict_successor(
-                    &function,
+                    world.registry.symbols.resolve(function),
                     f,
                     trigger,
                     now + TRIGGER_COMMIT,
                 );
-                sim.schedule(TRIGGER_COMMIT, move |sim, w| {
-                    emit_prediction(sim, w, pred.clone(), sim.now());
-                });
+                sim.schedule_event(TRIGGER_COMMIT, PlatformEvent::EmitPrediction { pred });
             }
-            sim.schedule(TRIGGER_COMMIT, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(TRIGGER_COMMIT, PlatformEvent::Advance { inv });
         }
         Op::DataGet {
             endpoint,
@@ -486,8 +701,9 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
                 .const_value()
                 .map(str::to_string)
                 // Param-derived ids resolve at run time; simulate with a
-                // per-invocation unique key (never prefetchable).
-                .unwrap_or_else(|| format!("param:{inv}"));
+                // per-invocation unique key (never prefetchable). `seq`
+                // is the legacy dense id, so the key bytes are unchanged.
+                .unwrap_or_else(|| format!("param:{seq}"));
             exec_data_get(sim, world, inv, cid, r, endpoint.clone(), obj);
         }
         Op::DataPut {
@@ -500,7 +716,7 @@ fn step_op(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
             let obj = object_id
                 .const_value()
                 .map(str::to_string)
-                .unwrap_or_else(|| format!("param:{inv}"));
+                .unwrap_or_else(|| format!("param:{seq}"));
             exec_data_put(sim, world, inv, cid, r, endpoint.clone(), obj, *bytes);
         }
     }
@@ -542,11 +758,11 @@ fn exec_data_get(
             world.invocations[inv].freshen_hits += 1;
             let app = world
                 .registry
-                .function(&world.invocations[inv].function)
-                .map(|f| f.app.clone())
-                .unwrap_or_default();
-            world.ledger.credit_network_saved(&app, bytes);
-            sim.schedule(LOCAL_ACCESS, move |sim, w| advance(sim, w, inv));
+                .app_of_id(world.invocations[inv].function);
+            world
+                .ledger
+                .credit_network_saved(world.registry.symbols.resolve(app), bytes);
+            sim.schedule_event(LOCAL_ACCESS, PlatformEvent::Advance { inv });
         }
         WrapperDecision::UseResult(_) => {
             // Defensive: a fetch resource finished without data (a
@@ -563,7 +779,7 @@ fn exec_data_get(
                 now,
             );
             charge_transfer(world, inv, &result);
-            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(d, PlatformEvent::Advance { inv });
         }
         WrapperDecision::Wait => {
             // FrWait: park until the freshen thread finishes this resource.
@@ -629,6 +845,7 @@ fn exec_retry_get(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) {
 
 /// `FrWarm(r, DataPut(...))` — Algorithm 5. The put itself always runs;
 /// what freshen buys is a live, cwnd-warmed connection.
+#[allow(clippy::too_many_arguments)]
 fn exec_data_put(
     sim: &mut PlatformSim,
     world: &mut World,
@@ -659,7 +876,7 @@ fn exec_data_put(
                 now,
             );
             charge_bytes(world, inv, bytes);
-            sim.schedule(d, move |sim, w| advance(sim, w, inv));
+            sim.schedule_event(d, PlatformEvent::Advance { inv });
         }
         WrapperDecision::Wait => {
             world
@@ -714,11 +931,11 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
     let (function, cid) = {
         let ctx = &mut world.invocations[inv];
         ctx.done = true;
-        (ctx.function.clone(), ctx.container.expect("dispatched"))
+        (ctx.function, ctx.container.expect("dispatched"))
     };
     let ctx = world.invocations[inv].clone();
     world.metrics.record(InvocationRecord {
-        function: function.clone(),
+        function: world.registry.symbols.resolve(function).to_string(),
         enqueued_at: ctx.enqueued_at,
         started_at: ctx.started_at,
         finished_at: now,
@@ -729,18 +946,20 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
     let cold = matches!(ctx.start_kind, StartKind::Cold);
     if world.obs.is_enabled() {
         world.obs.record(
+            &world.registry.symbols,
             SpanKind::Exec,
-            &function,
-            inv as u64,
+            function,
+            ctx.seq,
             ctx.started_at,
             now.since(ctx.started_at),
             ctx.freshen_hits as u64,
             ctx.freshen_misses as u64,
         );
         world.obs.record(
+            &world.registry.symbols,
             SpanKind::Complete,
-            &function,
-            inv as u64,
+            function,
+            ctx.seq,
             now,
             SimDuration::ZERO,
             now.since(ctx.enqueued_at).micros(),
@@ -748,22 +967,36 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
         );
     }
     if world.metrics.windows.enabled {
-        world.metrics.windows.on_complete(&function, cold, now.micros());
+        world.metrics.windows.on_complete(
+            world.registry.symbols.resolve(function),
+            cold,
+            now.micros(),
+        );
     }
     let (app, memory_mb) = {
-        let spec = world.registry.function(&function).expect("deployed");
-        (spec.app.clone(), spec.memory_mb)
+        let spec = world.registry.function_by_id(function).expect("deployed");
+        (world.registry.app_of_id(function), spec.memory_mb)
     };
-    world
-        .ledger
-        .charge_execution(&app, memory_mb, now.since(ctx.started_at));
+    world.ledger.charge_execution(
+        world.registry.symbols.resolve(app),
+        memory_mb,
+        now.since(ctx.started_at),
+    );
     world.containers[cid].finish_run(now);
+    // Terminal: no event references this handle anymore (continuations
+    // are consumed, the queue never held a dispatched invocation). Under
+    // recycling (replay) the slot returns to the free list; otherwise
+    // this is a no-op and the context stays inspectable.
+    world.invocations.release(inv);
 
     // Standalone-function prediction: after each completed invocation,
     // consult the IAT histogram and (if confident) pre-arm a freshen just
     // before the expected next arrival.
     if world.auto_hist_predict {
-        if let Some(pred) = world.hist_pred.predict_next(&function, now) {
+        if let Some(pred) = world
+            .hist_pred
+            .predict_next(world.registry.symbols.resolve(function), now)
+        {
             let start_at =
                 SimTime(pred.expected_at.micros().saturating_sub(HIST_LEAD.micros())).max(now);
             emit_prediction(sim, world, pred, start_at);
@@ -772,14 +1005,22 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
 
     // Drain this function's queue onto the now-warm container (every
     // discipline hands over its oldest queued invocation of `function`).
-    if let Some(next) = world.dispatch.take_for_function(&function) {
+    if let Some(next) = world
+        .dispatch
+        .take_for_function(function, &world.registry.symbols)
+    {
         note_queue_wait(world, next, now);
         cancel_idle_timer(sim, world, cid);
         world.containers[cid].begin_run(now);
         let delay = world.config.warm_start;
-        sim.schedule(delay, move |sim, w| {
-            begin_body(sim, w, next, cid, StartKind::Warm)
-        });
+        sim.schedule_event(
+            delay,
+            PlatformEvent::BeginBody {
+                inv: next,
+                cid,
+                kind: StartKind::Warm,
+            },
+        );
         return;
     }
     // Otherwise hand the idle container to the keep-alive policy. A
@@ -809,7 +1050,7 @@ fn cancel_idle_timer(sim: &mut PlatformSim, world: &mut World, cid: ContainerId)
 }
 
 /// Ask the policy when to check on a container that just went idle, and
-/// arm (or replace) its idle timer. The check closure is stamped with the
+/// arm (or replace) its idle timer. The check event is stamped with the
 /// container's reuse generation: a dispatch or eviction in the meantime
 /// bumps the generation, turning any timer that escaped cancellation into
 /// a guaranteed no-op. Returns whether a timer was armed (`false` for
@@ -822,6 +1063,7 @@ fn schedule_idle_check(sim: &mut PlatformSim, world: &mut World, cid: ContainerI
             container: &world.containers[cid],
             config: &world.config,
             hist_pred: &world.hist_pred,
+            symbols: &world.registry.symbols,
         };
         policy.idle_check_after(&ctx)
     };
@@ -840,7 +1082,7 @@ fn arm_idle_check(
     delay: SimDuration,
 ) {
     let gen = world.containers[cid].reuse_gen;
-    let ev = sim.schedule(delay, move |sim, w| idle_check_fired(sim, w, cid, gen));
+    let ev = sim.schedule_event(delay, PlatformEvent::IdleCheck { cid, gen });
     world.containers[cid].idle_timer = Some(ev);
 }
 
@@ -862,6 +1104,7 @@ fn idle_check_fired(sim: &mut PlatformSim, world: &mut World, cid: ContainerId, 
             container: &world.containers[cid],
             config: &world.config,
             hist_pred: &world.hist_pred,
+            symbols: &world.registry.symbols,
         };
         policy.idle_verdict(&ctx)
     };
@@ -918,27 +1161,44 @@ pub fn emit_prediction(
     start_at: SimTime,
 ) {
     let now = sim.now();
-    let Some(spec) = world.registry.function(&pred.function) else {
+    // A prediction names a deployed function, whose name was interned at
+    // deploy: lookup (not intern) keeps stray predictions out of the table.
+    let Some(function) = world.registry.symbols.lookup(&pred.function) else {
         return;
     };
-    let app = spec.app.clone();
+    let Some(spec) = world.registry.function_by_id(function) else {
+        return;
+    };
     let category = spec.category;
-    let decision = world
-        .gate
-        .should_freshen(&app, pred.confidence, category, now);
+    let app = world.registry.app_of_id(function);
+    let decision = world.gate.should_freshen(
+        world.registry.symbols.resolve(app),
+        pred.confidence,
+        category,
+        now,
+    );
     if !decision.admitted() {
         return;
     }
-    let (pid, deadline) =
-        world
-            .tracker
-            .register(&pred.function, &app, pred.expected_at, DEFAULT_MATCH_WINDOW);
+    let (pid, deadline) = world.tracker.register(
+        &pred.function,
+        world.registry.symbols.resolve(app),
+        pred.expected_at,
+        DEFAULT_MATCH_WINDOW,
+    );
     if world.obs.is_enabled() {
         let lead = pred.expected_at.since(now);
         let conf_pm = (pred.confidence.clamp(0.0, 1.0) * 1000.0) as u64;
-        world
-            .obs
-            .record(SpanKind::Prediction, &pred.function, pid, now, lead, conf_pm, 0);
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::Prediction,
+            function,
+            pid,
+            now,
+            lead,
+            conf_pm,
+            0,
+        );
     }
     if world.metrics.windows.enabled {
         world
@@ -947,30 +1207,40 @@ pub fn emit_prediction(
             .note_prediction(&pred.function, pred.expected_at.micros());
     }
     // Expiry resolution: hit/miss -> gate feedback + deferred billing.
-    let pred_fn = pred.function.clone();
-    sim.schedule_at(deadline, move |sim, w| {
-        resolve_prediction(w, pid, &pred_fn, sim.now())
-    });
-    let function = pred.function.clone();
+    sim.schedule_event_at(deadline, PlatformEvent::ResolvePrediction { pid, function });
     let delay = start_at.since(now);
-    sim.schedule(delay, move |sim, w| {
-        start_freshen(sim, w, &function, Some(pid));
-    });
+    sim.schedule_event(
+        delay,
+        PlatformEvent::StartFreshen {
+            function,
+            prediction_id: Some(pid),
+        },
+    );
     world.metrics.freshens_started += 1;
 }
 
-fn resolve_prediction(world: &mut World, pid: u64, function: &str, now: SimTime) {
+fn resolve_prediction(world: &mut World, pid: u64, function: FnId, now: SimTime) {
     let Some((app, hit)) = world.tracker.expire(pid) else {
         return;
     };
     world.gate.record_outcome(&app, hit);
     if !hit {
         world.metrics.freshens_wasted += 1;
-        world
-            .obs
-            .record(SpanKind::FreshenWasted, function, pid, now, SimDuration::ZERO, 0, 0);
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::FreshenWasted,
+            function,
+            pid,
+            now,
+            SimDuration::ZERO,
+            0,
+            0,
+        );
         if world.metrics.windows.enabled {
-            world.metrics.windows.on_wasted_freshen(function);
+            world
+                .metrics
+                .windows
+                .on_wasted_freshen(world.registry.symbols.resolve(function));
         }
     }
     // Settle deferred freshen charges for this prediction.
@@ -984,9 +1254,12 @@ fn resolve_prediction(world: &mut World, pid: u64, function: &str, now: SimTime)
         }
     });
     for c in settled {
-        world
-            .ledger
-            .charge_freshen(&c.app, c.memory_mb, c.duration, hit);
+        world.ledger.charge_freshen(
+            world.registry.symbols.resolve(c.app),
+            c.memory_mb,
+            c.duration,
+            hit,
+        );
     }
 }
 
@@ -994,14 +1267,31 @@ fn resolve_prediction(world: &mut World, pid: u64, function: &str, now: SimTime)
 /// function's runtime (warm or busy — the hook runs on a separate runtime
 /// thread, §3.1); optionally pre-provisions one when none exists.
 /// Returns the run id, or `None` when no container could be found/made.
+///
+/// Name-keyed boundary over [`start_freshen_id`].
 pub fn start_freshen(
     sim: &mut PlatformSim,
     world: &mut World,
     function: &str,
     prediction_id: Option<u64>,
 ) -> Option<usize> {
+    let f = world.registry.symbols.lookup(function)?;
+    start_freshen_id(sim, world, f, prediction_id)
+}
+
+/// Launch a freshen run for interned `function` (see [`start_freshen`]).
+pub fn start_freshen_id(
+    sim: &mut PlatformSim,
+    world: &mut World,
+    function: FnId,
+    prediction_id: Option<u64>,
+) -> Option<usize> {
     let now = sim.now();
-    if world.registry.hook(function).map_or(true, |h| h.is_empty()) {
+    if world
+        .registry
+        .hook_by_id(function)
+        .map_or(true, |h| h.is_empty())
+    {
         return None; // nothing to do (not inferrable — not fatal, §3.3)
     }
     // A container whose runtime holds this function, live or about to be.
@@ -1009,7 +1299,7 @@ pub fn start_freshen(
         .containers
         .iter()
         .find(|c| {
-            c.function.as_deref() == Some(function)
+            c.function == Some(function)
                 && matches!(c.state, ContainerState::Warm | ContainerState::Busy)
         })
         .map(|c| c.id);
@@ -1019,16 +1309,19 @@ pub fn start_freshen(
             // Pre-provision: freshen composes with cold-start avoidance.
             // (It never evicts anyone for the privilege — speculative work
             // only uses genuinely free memory.)
-            let mb = world.charge_for_function(function);
+            let mb = world.charge_for_function_id(function);
             let cid = world.acquire_slot_for(now, mb, function)?;
-            let app = app_of(world, function);
-            world.containers[cid].begin_cold_start_for_app(function, &app, now);
-            let f = function.to_string();
+            let app = world.registry.app_of_id(function);
+            world.containers[cid].begin_cold_start_for_app(function, Some(app), now);
             let cold = world.cold_start_on(cid);
-            sim.schedule(cold, move |sim, w| {
-                w.containers[cid].finish_init(sim.now());
-                launch_freshen_on(sim, w, &f, cid, prediction_id);
-            });
+            sim.schedule_event(
+                cold,
+                PlatformEvent::FreshenColdDone {
+                    function,
+                    cid,
+                    prediction_id,
+                },
+            );
             return Some(usize::MAX); // run id assigned at launch
         }
     };
@@ -1038,12 +1331,12 @@ pub fn start_freshen(
 fn launch_freshen_on(
     sim: &mut PlatformSim,
     world: &mut World,
-    function: &str,
+    function: FnId,
     cid: ContainerId,
     prediction_id: Option<u64>,
 ) -> Option<usize> {
     let now = sim.now();
-    let resource_count = world.registry.function(function)?.resource_count();
+    let resource_count = world.registry.function_by_id(function)?.resource_count();
     let ttl = prefetch_ttl_of(world, function);
     world.containers[cid]
         .runtime
@@ -1052,7 +1345,7 @@ fn launch_freshen_on(
     let id = world.freshen_runs.len();
     world.freshen_runs.push(FreshenRunCtx {
         id,
-        function: function.to_string(),
+        function,
         container: cid,
         incarnation: world.containers[cid].incarnation,
         action_idx: 0,
@@ -1094,14 +1387,24 @@ fn abort_if_stale_freshen(world: &mut World, run: usize) -> bool {
     if world.obs.is_enabled() || world.metrics.windows.enabled {
         // No sim handle here: stamp the abort with the run's launch time
         // (the abort itself fires at an interior event of the run).
-        let f = world.freshen_runs[run].function.clone();
+        let f = world.freshen_runs[run].function;
         let started = world.freshen_runs[run].started_at;
         let cid = world.freshen_runs[run].container as u64;
-        world
-            .obs
-            .record(SpanKind::StaleAbort, &f, run as u64, started, SimDuration::ZERO, cid, 0);
+        world.obs.record(
+            &world.registry.symbols,
+            SpanKind::StaleAbort,
+            f,
+            run as u64,
+            started,
+            SimDuration::ZERO,
+            cid,
+            0,
+        );
         if world.metrics.windows.enabled {
-            world.metrics.windows.on_stale_abort(&f);
+            world
+                .metrics
+                .windows
+                .on_stale_abort(world.registry.symbols.resolve(f));
         }
     }
     true
@@ -1116,9 +1419,13 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
     let now = sim.now();
     let (function, cid, action_idx) = {
         let ctx = &world.freshen_runs[run];
-        (ctx.function.clone(), ctx.container, ctx.action_idx)
+        (ctx.function, ctx.container, ctx.action_idx)
     };
-    let hook = world.registry.hook(&function).expect("hook exists").clone();
+    let hook = world
+        .registry
+        .hook_by_id(function)
+        .expect("hook exists")
+        .clone();
     if action_idx >= hook.actions.len() {
         finish_freshen(sim, world, run);
         return;
@@ -1138,10 +1445,12 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
             endpoint,
             now,
         );
-        sim.schedule(d, move |sim, w| {
-            w.freshen_runs[run].action_idx += 1;
-            step_freshen(sim, w, run)
-        });
+        // Advance the cursor at schedule time: nothing reads it between
+        // here and the step firing (the abort guard keys on done /
+        // incarnation only), so the pre-bump is order-equivalent to the
+        // old in-event bump — and the continuation is a plain variant.
+        world.freshen_runs[run].action_idx += 1;
+        sim.schedule_event(d, PlatformEvent::FreshenStep { run });
         return;
     }
 
@@ -1155,7 +1464,7 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
         .unwrap_or(false);
     if !claimed {
         world.freshen_runs[run].action_idx += 1;
-        sim.immediate(move |sim, w| step_freshen(sim, w, run));
+        sim.schedule_event(SimDuration::ZERO, PlatformEvent::FreshenStep { run });
         return;
     }
 
@@ -1226,8 +1535,10 @@ fn step_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
             );
             // Freshen's network use bills to the app owner too.
             if let FrResult::Data { bytes, .. } = &result {
-                let app = app_of(world, &function);
-                world.ledger.charge_network(&app, *bytes);
+                let app = app_of(world, function);
+                world
+                    .ledger
+                    .charge_network(world.registry.symbols.resolve(app), *bytes);
             }
             sim.schedule(d, move |sim, w| {
                 if abort_if_stale_freshen(w, run) {
@@ -1252,23 +1563,24 @@ fn finish_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
     ctx.done = true;
     let duration = now.since(ctx.started_at);
     let started_at = ctx.started_at;
-    let function = ctx.function.clone();
+    let function = ctx.function;
     let prediction_id = ctx.prediction_id;
     let cid = ctx.container;
     world.metrics.freshens_completed += 1;
     world.obs.record(
+        &world.registry.symbols,
         SpanKind::FreshenRun,
-        &function,
+        function,
         prediction_id.unwrap_or(u64::MAX),
         started_at,
         duration,
         cid as u64,
         0,
     );
-    let app = app_of(world, &function);
+    let app = app_of(world, function);
     let memory_mb = world
         .registry
-        .function(&function)
+        .function_by_id(function)
         .map(|f| f.memory_mb)
         .unwrap_or(256);
     match prediction_id {
@@ -1280,7 +1592,12 @@ fn finish_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
             duration,
         }),
         // Developer-invoked freshen bills immediately as useful.
-        None => world.ledger.charge_freshen(&app, memory_mb, duration, true),
+        None => world.ledger.charge_freshen(
+            world.registry.symbols.resolve(app),
+            memory_mb,
+            duration,
+            true,
+        ),
     }
     let _ = sim;
 }
@@ -1293,6 +1610,7 @@ fn finish_freshen(sim: &mut PlatformSim, world: &mut World, run: usize) {
 /// costs from its current state: keepalive probe, death detection,
 /// (re-)establishment, TLS. Returns the total duration.
 pub fn ensure_connection(
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     endpoints: &mut FxHashMap<String, Endpoint>,
     rng: &mut Rng,
     env: &mut RuntimeEnv,
@@ -1337,6 +1655,7 @@ pub fn ensure_connection(
 /// check. A silently-dead connection costs a full RTO of detection before
 /// re-establishment — the overhead freshen's `EnsureConnection` removes.
 fn usable_connection(
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     endpoints: &mut FxHashMap<String, Endpoint>,
     rng: &mut Rng,
     env: &mut RuntimeEnv,
@@ -1381,6 +1700,7 @@ fn usable_connection(
 /// Fetch `object_id` from `endpoint` over the runtime's connection.
 /// Returns `(duration, result)`.
 pub fn do_fetch(
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     endpoints: &mut FxHashMap<String, Endpoint>,
     rng: &mut Rng,
     env: &mut RuntimeEnv,
@@ -1419,6 +1739,7 @@ pub fn do_fetch(
 
 /// Write `bytes` as `object_id` to `endpoint` over the runtime's connection.
 pub fn do_put(
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     endpoints: &mut FxHashMap<String, Endpoint>,
     rng: &mut Rng,
     env: &mut RuntimeEnv,
@@ -1442,6 +1763,7 @@ pub fn do_put(
 /// Warm the congestion window (establishing the connection first if
 /// needed) via the provider-mediated `warm_cwnd` syscall.
 fn do_warm_cwnd(
+    // simlint: allow(D007, keyed by endpoint registration name, not per-event function id)
     endpoints: &mut FxHashMap<String, Endpoint>,
     rng: &mut Rng,
     env: &mut RuntimeEnv,
@@ -1470,35 +1792,37 @@ fn do_warm_cwnd(
 
 // ---- small lookups --------------------------------------------------
 
-fn app_of(world: &World, function: &str) -> String {
-    world
-        .registry
-        .function(function)
-        .map(|f| f.app.clone())
-        .unwrap_or_default()
+/// Owning app of `function` (ANON when unknown): a 4-byte id copy, where
+/// this helper used to allocate a fresh `String` on every billing call.
+fn app_of(world: &World, function: FnId) -> FnId {
+    world.registry.app_of_id(function)
 }
 
 fn prefetch_ttl(world: &World, inv: InvocationId) -> SimDuration {
-    let f = &world.invocations[inv].function;
+    let f = world.invocations[inv].function;
     prefetch_ttl_of(world, f)
 }
 
-fn prefetch_ttl_of(world: &World, function: &str) -> SimDuration {
+fn prefetch_ttl_of(world: &World, function: FnId) -> SimDuration {
     world
         .registry
-        .function(function)
+        .function_by_id(function)
         .and_then(|f| f.prefetch_ttl)
         .unwrap_or(world.config.freshen.default_ttl)
 }
 
 fn charge_transfer(world: &mut World, inv: InvocationId, result: &FrResult) {
     if let FrResult::Data { bytes, .. } = result {
-        let app = app_of(world, &world.invocations[inv].function.clone());
-        world.ledger.charge_network(&app, *bytes);
+        let app = app_of(world, world.invocations[inv].function);
+        world
+            .ledger
+            .charge_network(world.registry.symbols.resolve(app), *bytes);
     }
 }
 
 fn charge_bytes(world: &mut World, inv: InvocationId, bytes: f64) {
-    let app = app_of(world, &world.invocations[inv].function.clone());
-    world.ledger.charge_network(&app, bytes);
+    let app = app_of(world, world.invocations[inv].function);
+    world
+        .ledger
+        .charge_network(world.registry.symbols.resolve(app), bytes);
 }

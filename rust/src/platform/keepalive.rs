@@ -40,6 +40,7 @@
 use std::rc::Rc;
 
 use crate::platform::container::{Container, ContainerId, ContainerState};
+use crate::platform::symbols::Symbols;
 use crate::predict::histogram::HistogramPredictor;
 use crate::util::config::{Config, KeepAliveKind};
 use crate::util::time::{SimDuration, SimTime};
@@ -51,6 +52,9 @@ pub struct IdleCtx<'a> {
     pub container: &'a Container,
     pub config: &'a Config,
     pub hist_pred: &'a HistogramPredictor,
+    /// Resolves the container's interned function id back to its name for
+    /// the (name-keyed) predictor.
+    pub symbols: &'a Symbols,
 }
 
 /// Outcome of a fired idle check.
@@ -216,8 +220,8 @@ impl HybridHistogram {
     /// `ctx.now`: predicted-IAT remainder + grace, or the fallback TTL.
     /// `None` means the prediction window has already closed.
     fn window(&self, ctx: &IdleCtx) -> Option<SimDuration> {
-        let function = ctx.container.function.as_deref()?;
-        match ctx.hist_pred.predict_next(function, ctx.now) {
+        let function = ctx.container.function?;
+        match ctx.hist_pred.predict_next(ctx.symbols.resolve(function), ctx.now) {
             Some(p) if p.confidence >= self.min_confidence => {
                 if p.expected_at > ctx.now {
                     Some((p.expected_at.since(ctx.now) + self.grace).min(self.max_window))
@@ -268,9 +272,16 @@ mod tests {
         SimTime(s * 1_000_000)
     }
 
-    fn warm_container(id: ContainerId, function: &str, last_used: SimTime) -> Container {
+    /// One shared intern table per test; names interned on demand.
+    fn warm_container(
+        syms: &mut Symbols,
+        id: ContainerId,
+        function: &str,
+        last_used: SimTime,
+    ) -> Container {
+        let f = syms.intern(function);
         let mut c = Container::new(id, 0, SimTime::ZERO);
-        c.begin_cold_start(function, SimTime::ZERO);
+        c.begin_cold_start(f, SimTime::ZERO);
         c.finish_init(SimTime::ZERO);
         c.last_used = last_used;
         c
@@ -281,12 +292,14 @@ mod tests {
         container: &'a Container,
         config: &'a Config,
         hist: &'a HistogramPredictor,
+        syms: &'a Symbols,
     ) -> IdleCtx<'a> {
         IdleCtx {
             now,
             container,
             config,
             hist_pred: hist,
+            symbols: syms,
         }
     }
 
@@ -294,15 +307,16 @@ mod tests {
     fn fixed_ttl_matches_legacy_constants() {
         let cfg = Config::default();
         let hist = HistogramPredictor::new();
-        let c = warm_container(0, "f", t(0));
+        let mut syms = Symbols::new();
+        let c = warm_container(&mut syms, 0, "f", t(0));
         let p = FixedTtl;
-        let cx = ctx(t(0), &c, &cfg, &hist);
+        let cx = ctx(t(0), &c, &cfg, &hist, &syms);
         assert_eq!(p.idle_check_after(&cx), Some(cfg.idle_eviction));
         // Exactly at the TTL: evict (the legacy closure used `>=`).
-        let cx = ctx(SimTime::ZERO + cfg.idle_eviction, &c, &cfg, &hist);
+        let cx = ctx(SimTime::ZERO + cfg.idle_eviction, &c, &cfg, &hist, &syms);
         assert_eq!(p.idle_verdict(&cx), IdleVerdict::Evict);
         // A container reused since the check was scheduled is kept.
-        let cx = ctx(t(1), &c, &cfg, &hist);
+        let cx = ctx(t(1), &c, &cfg, &hist, &syms);
         assert_eq!(p.idle_verdict(&cx), IdleVerdict::Keep);
         // Pressure reclaim is gated on the sharing switch, like the old
         // `steal_lru_warm` call site.
@@ -315,11 +329,12 @@ mod tests {
     #[test]
     fn pressure_victim_is_lru_warm_with_stable_ties() {
         let ok = [true];
-        let a = warm_container(0, "a", t(30));
-        let b = warm_container(1, "b", t(10));
-        let mut busy = warm_container(2, "c", t(1));
+        let mut syms = Symbols::new();
+        let a = warm_container(&mut syms, 0, "a", t(30));
+        let b = warm_container(&mut syms, 1, "b", t(10));
+        let mut busy = warm_container(&mut syms, 2, "c", t(1));
         busy.begin_run(t(40)); // busy containers are never victims
-        let d = warm_container(3, "d", t(10)); // ties with b -> lower id wins
+        let d = warm_container(&mut syms, 3, "d", t(10)); // ties with b -> lower id wins
         let pool = vec![a, b, busy, d];
         assert_eq!(lru_warm_victim(&pool, &ok), Some(1));
         // Hosts that cannot make room are excluded entirely.
@@ -338,9 +353,10 @@ mod tests {
     fn lru_pressure_never_times_out_but_always_reclaims() {
         let cfg = Config::default();
         let hist = HistogramPredictor::new();
-        let c = warm_container(0, "f", t(0));
+        let mut syms = Symbols::new();
+        let c = warm_container(&mut syms, 0, "f", t(0));
         let p = LruPressure;
-        let cx = ctx(t(100_000), &c, &cfg, &hist);
+        let cx = ctx(t(100_000), &c, &cfg, &hist, &syms);
         assert_eq!(p.idle_check_after(&cx), None);
         assert_eq!(p.idle_verdict(&cx), IdleVerdict::Keep);
         assert!(p.evicts_under_pressure(&cfg), "pressure reclaim is unconditional");
@@ -355,8 +371,9 @@ mod tests {
         for i in 0..20 {
             hist.observe("cron", t(i * 60));
         }
-        let c = warm_container(0, "cron", t(19 * 60));
-        let cx = ctx(t(19 * 60), &c, &cfg, &hist);
+        let mut syms = Symbols::new();
+        let c = warm_container(&mut syms, 0, "cron", t(19 * 60));
+        let cx = ctx(t(19 * 60), &c, &cfg, &hist, &syms);
         let w = p.idle_check_after(&cx).unwrap();
         // Window ~= modal IAT (60 s +/- half a 15 s bin) + 10 s grace.
         assert!(
@@ -366,12 +383,12 @@ mod tests {
         // While the window is open the verdict extends, after it closes
         // (prediction missed) the verdict evicts.
         assert!(matches!(p.idle_verdict(&cx), IdleVerdict::Recheck(_)));
-        let cx = ctx(t(19 * 60 + 120), &c, &cfg, &hist);
+        let cx = ctx(t(19 * 60 + 120), &c, &cfg, &hist, &syms);
         assert_eq!(p.idle_verdict(&cx), IdleVerdict::Evict);
         // Unknown functions get the short fallback TTL, far below the
         // fixed policy's 600 s.
-        let unknown = warm_container(1, "ghost", t(0));
-        let cx = ctx(t(0), &unknown, &cfg, &hist);
+        let unknown = warm_container(&mut syms, 1, "ghost", t(0));
+        let cx = ctx(t(0), &unknown, &cfg, &hist, &syms);
         assert_eq!(p.idle_check_after(&cx), Some(p.fallback_ttl));
         assert!(p.fallback_ttl < cfg.idle_eviction);
     }

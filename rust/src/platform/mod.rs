@@ -14,6 +14,8 @@
 //! - [`endpoint`] — remote services (store/file/model servers) behind links.
 //! - [`container`] — container lifecycle + the in-container runtime env.
 //! - [`invoker`] — per-host container pools.
+//! - [`symbols`] — per-world function/app name interning (`str → FnId`).
+//! - [`slab`] — generation-stamped free-list slab for invocation contexts.
 //! - [`world`] — the composed simulation world.
 //! - [`dispatch`] — pluggable queue disciplines for invocations waiting
 //!   on cluster memory (legacy one-shot / FIFO-fair / memory-aware).
@@ -34,6 +36,8 @@ pub mod invoker;
 pub mod keepalive;
 pub mod placement;
 pub mod registry;
+pub mod slab;
+pub mod symbols;
 pub mod world;
 
 pub use container::{Container, ContainerId, ContainerState, RuntimeEnv};
@@ -41,4 +45,5 @@ pub use datastore::ObjectStore;
 pub use endpoint::Endpoint;
 pub use function::{AppSpec, Arg, FunctionId, FunctionSpec, Op};
 pub use registry::Registry;
+pub use symbols::{FnId, Symbols};
 pub use world::World;

@@ -15,6 +15,7 @@
 
 use crate::platform::container::{Container, ContainerId, ContainerState};
 use crate::platform::invoker::Invoker;
+use crate::platform::symbols::FnId;
 use crate::util::config::{HostClass, PlacementKind};
 use crate::util::rng::Rng;
 
@@ -33,8 +34,9 @@ pub enum Decision {
 /// function's deployment labels. Borrowed field-disjoint from the world
 /// so a decision can be taken while the placement RNG is held mutably.
 pub struct PlaceCtx<'a> {
-    /// Function being placed (empty for anonymous/test acquisitions).
-    pub function: &'a str,
+    /// Function being placed ([`FnId::ANON`] for anonymous/test
+    /// acquisitions). Interned: strategies compare ids, never strings.
+    pub function: FnId,
     /// Memory the new container will charge its host, MB.
     pub charge_mb: u64,
     pub containers: &'a [Container],
@@ -210,8 +212,8 @@ impl Placement for WarmAffinity {
             .iter()
             .filter(|c| {
                 c.state != ContainerState::Evicted
-                    && c.function.as_deref() == Some(ctx.function)
-                    && !ctx.function.is_empty()
+                    && c.function == Some(ctx.function)
+                    && !ctx.function.is_anon()
             })
             .map(|c| c.invoker);
         let mut marked = vec![false; ctx.invokers.len()];
@@ -270,7 +272,14 @@ pub fn build(kind: PlacementKind) -> Box<dyn Placement> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::platform::symbols::Symbols;
     use crate::util::time::SimTime;
+
+    /// Shared interned ids for the test functions "f" and "g".
+    fn fg() -> (FnId, FnId) {
+        let mut syms = Symbols::new();
+        (syms.intern("f"), syms.intern("g"))
+    }
 
     fn cluster(caps: &[u64]) -> Vec<Invoker> {
         caps.iter()
@@ -280,7 +289,7 @@ mod tests {
     }
 
     fn ctx<'a>(
-        function: &'a str,
+        function: FnId,
         charge_mb: u64,
         containers: &'a [Container],
         invokers: &'a [Invoker],
@@ -298,7 +307,7 @@ mod tests {
 
     /// A live container of `function` parked on `host` (for affinity and
     /// reuse scans). `evicted` parks it instead.
-    fn seeded_container(id: usize, host: usize, function: &str, evicted: bool) -> Container {
+    fn seeded_container(id: usize, host: usize, function: FnId, evicted: bool) -> Container {
         let mut c = Container::new(id, host, SimTime::ZERO);
         if !evicted {
             c.begin_cold_start(function, SimTime::ZERO);
@@ -308,106 +317,114 @@ mod tests {
 
     #[test]
     fn legacy_reuses_lowest_id_parked_slot_globally() {
+        let (f, _) = fg();
         let mut invokers = cluster(&[512, 512]);
         invokers[0].charge(512); // host 0 full: its parked slot is skipped
         let containers = vec![
-            seeded_container(0, 0, "f", true),
-            seeded_container(1, 1, "f", true),
+            seeded_container(0, 0, f, true),
+            seeded_container(1, 1, f, true),
         ];
-        let c = ctx("f", 256, &containers, &invokers);
+        let c = ctx(f, 256, &containers, &invokers);
         assert_eq!(legacy_place(&c), Some(Decision::Reuse(1)));
     }
 
     #[test]
     fn legacy_creates_on_least_loaded_with_lowest_id_ties() {
+        let (f, _) = fg();
         let mut invokers = cluster(&[512, 512, 512]);
         invokers[0].charge(256);
         let containers = Vec::new();
-        let c = ctx("f", 256, &containers, &invokers);
+        let c = ctx(f, 256, &containers, &invokers);
         // Hosts 1 and 2 tie at 0 used: first minimum wins (host 1).
         assert_eq!(legacy_place(&c), Some(Decision::Create(1)));
-        let full = ctx("f", 1024, &containers, &invokers);
+        let full = ctx(f, 1024, &containers, &invokers);
         assert_eq!(legacy_place(&full), None);
     }
 
     #[test]
     fn least_loaded_strategy_is_the_legacy_scan() {
+        let (f, _) = fg();
         let mut s = LeastLoadedMb;
         let mut rng = Rng::new(1);
         let invokers = cluster(&[512, 512]);
-        let containers = vec![seeded_container(0, 1, "f", true)];
-        let c = ctx("f", 256, &containers, &invokers);
+        let containers = vec![seeded_container(0, 1, f, true)];
+        let c = ctx(f, 256, &containers, &invokers);
         assert_eq!(s.place(&c, &mut rng), legacy_place(&c));
         assert_eq!(s.name(), "legacy");
     }
 
     #[test]
     fn random_only_picks_hosts_with_room() {
+        let (f, _) = fg();
         let mut s = RandomUniform;
         let mut rng = Rng::new(7);
         let mut invokers = cluster(&[512, 512, 512]);
         invokers[0].charge(512);
         invokers[2].charge(512);
         let containers = Vec::new();
-        let c = ctx("f", 256, &containers, &invokers);
+        let c = ctx(f, 256, &containers, &invokers);
         for _ in 0..32 {
             // Only host 1 has room: every draw must land there.
             assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(1)));
         }
-        let full = ctx("f", 1024, &containers, &invokers);
+        let full = ctx(f, 1024, &containers, &invokers);
         assert_eq!(s.place(&full, &mut rng), None);
     }
 
     #[test]
     fn round_robin_rotates_and_skips_full_hosts() {
+        let (f, _) = fg();
         let mut s = RoundRobin::default();
         let mut rng = Rng::new(1);
         let mut invokers = cluster(&[512, 512, 512]);
         invokers[1].charge(512);
         let containers = Vec::new();
-        let c = ctx("f", 256, &containers, &invokers);
+        let c = ctx(f, 256, &containers, &invokers);
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
         // Host 1 is full: the cursor skips to 2, then wraps to 0.
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(2)));
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
-        let full = ctx("f", 1024, &containers, &invokers);
+        let full = ctx(f, 1024, &containers, &invokers);
         assert_eq!(s.place(&full, &mut rng), None);
     }
 
     #[test]
     fn round_robin_settles_on_parked_slots() {
+        let (f, _) = fg();
         let mut s = RoundRobin::default();
         let mut rng = Rng::new(1);
         let invokers = cluster(&[512, 512]);
-        let containers = vec![seeded_container(0, 0, "f", true)];
-        let c = ctx("f", 256, &containers, &invokers);
+        let containers = vec![seeded_container(0, 0, f, true)];
+        let c = ctx(f, 256, &containers, &invokers);
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Reuse(0)));
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(1)));
     }
 
     #[test]
     fn warm_affinity_lands_next_to_live_containers() {
+        let (f, g_fn) = fg();
         let mut s = WarmAffinity;
         let mut rng = Rng::new(1);
         let mut invokers = cluster(&[1024, 1024, 1024]);
         invokers[2].charge(256);
-        let containers = vec![seeded_container(0, 2, "f", false)];
-        let c = ctx("f", 256, &containers, &invokers);
+        let containers = vec![seeded_container(0, 2, f, false)];
+        let c = ctx(f, 256, &containers, &invokers);
         // Host 2 holds f's live container: preferred despite more load.
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(2)));
         // A different function sees no warm host: legacy least-loaded.
-        let g = ctx("g", 256, &containers, &invokers);
+        let g = ctx(g_fn, 256, &containers, &invokers);
         assert_eq!(s.place(&g, &mut rng), legacy_place(&g));
     }
 
     #[test]
     fn warm_affinity_falls_back_to_legacy_when_warm_host_is_full() {
+        let (f, _) = fg();
         let mut s = WarmAffinity;
         let mut rng = Rng::new(1);
         let mut invokers = cluster(&[512, 512]);
         invokers[1].charge(512);
-        let containers = vec![seeded_container(0, 1, "f", false)];
-        let c = ctx("f", 256, &containers, &invokers);
+        let containers = vec![seeded_container(0, 1, f, false)];
+        let c = ctx(f, 256, &containers, &invokers);
         assert_eq!(s.place(&c, &mut rng), legacy_place(&c));
         assert_eq!(s.place(&c, &mut rng), Some(Decision::Create(0)));
     }
@@ -420,9 +437,10 @@ mod tests {
     /// 4^-60 — the assertion is deterministic for any real RNG stream.
     #[test]
     fn warm_affinity_beats_random_on_locality() {
+        let (f, _) = fg();
         let invokers = cluster(&[1 << 30, 1 << 30, 1 << 30, 1 << 30]);
-        let containers = vec![seeded_container(0, 2, "f", false)];
-        let c = ctx("f", 256, &containers, &invokers);
+        let containers = vec![seeded_container(0, 2, f, false)];
+        let c = ctx(f, 256, &containers, &invokers);
         let mut affinity_hits = 0;
         let mut random_hits = 0;
         let mut total = 0;
@@ -468,8 +486,9 @@ mod tests {
         let not_edge = vec!["edge".to_string()];
         let nowhere = vec!["gpu".to_string()];
         // Affinity to edge: least-loaded edge host (3, host 2 is loaded).
+        let (f, _) = fg();
         let c = PlaceCtx {
-            function: "f",
+            function: f,
             charge_mb: 256,
             containers: &containers,
             invokers: &invokers,
@@ -506,14 +525,15 @@ mod tests {
 
     #[test]
     fn homogeneous_cluster_admits_only_unlabelled_functions() {
+        let (f, _) = fg();
         let invokers = cluster(&[512]);
         let containers = Vec::new();
         let labels = vec!["edge".to_string()];
-        let open = ctx("f", 256, &containers, &invokers);
+        let open = ctx(f, 256, &containers, &invokers);
         assert!(open.labels_admit(0));
         let closed = PlaceCtx {
             affinity: &labels,
-            ..ctx("f", 256, &containers, &invokers)
+            ..ctx(f, 256, &containers, &invokers)
         };
         assert!(!closed.labels_admit(0));
     }

@@ -3,6 +3,13 @@
 //! The controller's view of what's deployed: function specs, the apps that
 //! own them, explicit orchestration chains (Figure 1), and the freshen
 //! hooks registered (or inferred) per function.
+//!
+//! Deploy is the interning boundary: tenant-qualified function and app
+//! names intern once into the registry's [`Symbols`] table, and every
+//! lookup the executor makes per event (`function_by_id`, `hook_by_id`,
+//! `app_of_id`, `chain_next_id`) is an O(1) `FnId`-keyed map hit with no
+//! string hashing. The `&str` entry points remain for the deploy/CLI/test
+//! boundary and resolve through the table first.
 
 use std::rc::Rc;
 
@@ -10,6 +17,7 @@ use crate::freshen::hooks::FreshenHook;
 use crate::freshen::infer::infer_hook;
 use crate::freshen::policy::validate_hook;
 use crate::platform::function::{AppSpec, FunctionId, FunctionSpec};
+use crate::platform::symbols::{FnId, Symbols};
 use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimDuration;
 
@@ -25,10 +33,18 @@ pub struct ChainSpec {
 /// The platform registry.
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
-    functions: FxHashMap<FunctionId, Rc<FunctionSpec>>,
-    apps: FxHashMap<String, AppSpec>,
+    /// Function/app name interning (shared namespace).
+    pub symbols: Symbols,
+    functions: FxHashMap<FnId, Rc<FunctionSpec>>,
+    apps: FxHashMap<FnId, AppSpec>,
     chains: Vec<ChainSpec>,
-    hooks: FxHashMap<FunctionId, FreshenHook>,
+    hooks: FxHashMap<FnId, FreshenHook>,
+    /// function id → owning app id, precomputed at deploy (the executor
+    /// used to re-derive this per charge via a spec lookup + String clone).
+    app_of: FxHashMap<FnId, FnId>,
+    /// function id → first-registered chain successor, precomputed at
+    /// `register_chain` (first-match semantics of the legacy scan).
+    chain_next: FxHashMap<FnId, FnId>,
 }
 
 impl Registry {
@@ -38,18 +54,21 @@ impl Registry {
 
     /// Deploy a function; creates its app on first reference and infers a
     /// freshen hook (provider-side code generation, §3.3) unless the
-    /// developer registers their own afterwards.
+    /// developer registers their own afterwards. Interns both names.
     pub fn deploy(&mut self, spec: FunctionSpec, default_ttl: SimDuration) {
+        let fid = self.symbols.intern(&spec.id);
+        let aid = self.symbols.intern(&spec.app);
         let app = self
             .apps
-            .entry(spec.app.clone())
+            .entry(aid)
             .or_insert_with(|| AppSpec::new(&spec.app, false));
         if !app.functions.contains(&spec.id) {
             app.functions.push(spec.id.clone());
         }
+        self.app_of.insert(fid, aid);
         let report = infer_hook(&spec, default_ttl);
-        self.hooks.insert(spec.id.clone(), report.hook);
-        self.functions.insert(spec.id.clone(), Rc::new(spec));
+        self.hooks.insert(fid, report.hook);
+        self.functions.insert(fid, Rc::new(spec));
     }
 
     /// Register a developer-written freshen hook (validated per §3.3's
@@ -59,27 +78,39 @@ impl Registry {
         function: &str,
         hook: FreshenHook,
     ) -> Result<(), String> {
-        if !self.functions.contains_key(function) {
-            return Err(format!("unknown function '{function}'"));
-        }
+        let fid = self
+            .symbols
+            .lookup(function)
+            .filter(|&f| self.functions.contains_key(&f))
+            .ok_or_else(|| format!("unknown function '{function}'"))?;
         validate_hook(&hook)?;
-        self.hooks.insert(function.to_string(), hook);
+        self.hooks.insert(fid, hook);
         Ok(())
     }
 
     /// Declare an orchestrated chain over already-deployed functions.
     pub fn register_chain(&mut self, id: &str, functions: Vec<FunctionId>) -> Result<(), String> {
+        let mut fids = Vec::with_capacity(functions.len());
         for f in &functions {
-            if !self.functions.contains_key(f) {
-                return Err(format!("chain '{id}' references unknown function '{f}'"));
+            match self.symbols.lookup(f).filter(|&x| self.functions.contains_key(&x)) {
+                Some(fid) => fids.push(fid),
+                None => {
+                    return Err(format!("chain '{id}' references unknown function '{f}'"));
+                }
             }
         }
         // Mark all owning apps as orchestrated.
-        for f in &functions {
-            let app_id = self.functions[f].app.clone();
-            if let Some(app) = self.apps.get_mut(&app_id) {
-                app.orchestrated = true;
+        for &fid in &fids {
+            if let Some(&aid) = self.app_of.get(&fid) {
+                if let Some(app) = self.apps.get_mut(&aid) {
+                    app.orchestrated = true;
+                }
             }
+        }
+        // Precompute successor edges; insert-if-absent replicates the
+        // legacy first-match-across-chains scan order exactly.
+        for pair in fids.windows(2) {
+            self.chain_next.entry(pair[0]).or_insert(pair[1]);
         }
         self.chains.push(ChainSpec {
             id: id.to_string(),
@@ -89,25 +120,45 @@ impl Registry {
     }
 
     pub fn function(&self, id: &str) -> Option<&FunctionSpec> {
-        self.functions.get(id).map(Rc::as_ref)
+        self.function_by_id(self.symbols.lookup(id)?)
+    }
+
+    /// Hot-path lookup: O(1), no string hashing.
+    pub fn function_by_id(&self, id: FnId) -> Option<&FunctionSpec> {
+        self.functions.get(&id).map(Rc::as_ref)
     }
 
     /// Cheap shared handle for the executor's hot path (avoids cloning op
     /// payloads per step).
     pub fn function_rc(&self, id: &str) -> Option<Rc<FunctionSpec>> {
-        self.functions.get(id).cloned()
+        self.function_rc_by_id(self.symbols.lookup(id)?)
+    }
+
+    pub fn function_rc_by_id(&self, id: FnId) -> Option<Rc<FunctionSpec>> {
+        self.functions.get(&id).cloned()
     }
 
     pub fn app(&self, id: &str) -> Option<&AppSpec> {
-        self.apps.get(id)
+        self.apps.get(&self.symbols.lookup(id)?)
     }
 
     pub fn app_of(&self, function: &str) -> Option<&AppSpec> {
-        self.function(function).and_then(|f| self.apps.get(&f.app))
+        let fid = self.symbols.lookup(function)?;
+        self.apps.get(self.app_of.get(&fid)?)
+    }
+
+    /// Owning app id of `function` ([`FnId::ANON`] if unknown — the
+    /// legacy `""` app convention for charges on unknown functions).
+    pub fn app_of_id(&self, function: FnId) -> FnId {
+        self.app_of.get(&function).copied().unwrap_or(FnId::ANON)
     }
 
     pub fn hook(&self, function: &str) -> Option<&FreshenHook> {
-        self.hooks.get(function)
+        self.hook_by_id(self.symbols.lookup(function)?)
+    }
+
+    pub fn hook_by_id(&self, function: FnId) -> Option<&FreshenHook> {
+        self.hooks.get(&function)
     }
 
     pub fn chains(&self) -> &[ChainSpec] {
@@ -127,12 +178,21 @@ impl Registry {
         None
     }
 
+    /// Hot-path successor lookup (precomputed at registration).
+    pub fn chain_next_id(&self, function: FnId) -> Option<FnId> {
+        self.chain_next.get(&function).copied()
+    }
+
     pub fn function_count(&self) -> usize {
         self.functions.len()
     }
 
     pub fn function_ids(&self) -> Vec<FunctionId> {
-        let mut ids: Vec<FunctionId> = self.functions.keys().cloned().collect();
+        let mut ids: Vec<FunctionId> = self
+            .functions
+            .keys()
+            .map(|&f| self.symbols.resolve(f).to_string())
+            .collect();
         ids.sort();
         ids
     }
@@ -194,5 +254,25 @@ mod tests {
         assert!(r
             .register_chain("bad", vec!["a".into(), "ghost".into()])
             .is_err());
+    }
+
+    #[test]
+    fn id_lookups_match_string_lookups() {
+        let mut r = Registry::new();
+        for f in ["a", "b", "c"] {
+            r.deploy(lambda(f, "pipeline"), ttl());
+        }
+        r.register_chain("main", vec!["a".into(), "b".into(), "c".into()])
+            .unwrap();
+        let a = r.symbols.lookup("a").unwrap();
+        let b = r.symbols.lookup("b").unwrap();
+        let app = r.symbols.lookup("pipeline").unwrap();
+        assert_eq!(r.function_by_id(a).unwrap().id, "a");
+        assert_eq!(r.app_of_id(a), app);
+        assert_eq!(r.app_of_id(FnId::ANON), FnId::ANON);
+        assert_eq!(r.chain_next_id(a), Some(b));
+        assert_eq!(r.chain_next_id(r.symbols.lookup("c").unwrap()), None);
+        assert!(r.hook_by_id(a).is_some());
+        assert_eq!(r.function_ids(), vec!["a", "b", "c"]);
     }
 }

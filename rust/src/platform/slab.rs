@@ -1,0 +1,276 @@
+//! Generation-stamped free-list slab for invocation contexts.
+//!
+//! The shared-pool macro replay used to push every `InvocationCtx` onto a
+//! `Vec` that only ever grew — >1M contexts resident for a >1M-invocation
+//! day even though almost all were done. The slab reuses completed slots
+//! via a LIFO free list, so resident contexts track the *in-flight*
+//! population instead of the cumulative one.
+//!
+//! Handles are [`InvocationId`]: a `(slot, generation)` pair. Releasing a
+//! slot bumps its generation, so a stale handle held across a reuse
+//! mismatches and is caught by a `debug_assertions` check on every access
+//! — the same belt-and-braces style as the container incarnation guard.
+//!
+//! Digest contract: recycling is *opt-in* (`set_recycle(true)`, used by
+//! the replay path). Off — the default — `release` is a no-op, slots are
+//! never reused, and `slot` numbers coincide with the legacy dense Vec
+//! indexes; invariants and tests that iterate completed contexts keep
+//! working. Independently of recycling, every context receives a dense
+//! arrival sequence number (`seq`, see [`InvocationSlab::insert_with`])
+//! identical to the legacy Vec index, and *all* output (spans, params,
+//! dispatch order) derives from `seq`, never from slot numbers — which is
+//! why reusing slots cannot move a byte of output.
+
+/// Handle to a slab-resident invocation context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InvocationId {
+    slot: u32,
+    gen: u32,
+}
+
+impl InvocationId {
+    /// Slot index (for debug display; output must use the ctx `seq`).
+    pub fn slot(self) -> u32 {
+        self.slot
+    }
+}
+
+struct Slot<T> {
+    /// Bumped on every release; a handle is live iff its `gen` matches.
+    gen: u32,
+    body: Option<T>,
+}
+
+/// The slab. `T` is the context type (generic to keep this module free of
+/// platform dependencies and independently testable).
+pub struct InvocationSlab<T> {
+    slots: Vec<Slot<T>>,
+    /// LIFO free list of released slot indexes (only populated when
+    /// `recycle` is on).
+    free: Vec<u32>,
+    /// When off (default), `release` is a no-op and the slab behaves as
+    /// an append-only Vec (legacy semantics).
+    recycle: bool,
+    /// Dense arrival counter; the next context's `seq`.
+    next_seq: u64,
+    /// Number of occupied slots.
+    live: usize,
+}
+
+impl<T> Default for InvocationSlab<T> {
+    fn default() -> Self {
+        InvocationSlab::new()
+    }
+}
+
+impl<T> InvocationSlab<T> {
+    pub fn new() -> InvocationSlab<T> {
+        InvocationSlab {
+            slots: Vec::new(),
+            free: Vec::new(),
+            recycle: false,
+            next_seq: 0,
+            live: 0,
+        }
+    }
+
+    /// Opt in to slot reuse (the replay hot path). Must be set before the
+    /// first insert; flipping it mid-run would mix index regimes.
+    pub fn set_recycle(&mut self, on: bool) {
+        debug_assert!(
+            self.slots.is_empty(),
+            "set_recycle must precede the first insert"
+        );
+        self.recycle = on;
+    }
+
+    /// Insert a context built by `make`, which receives the assigned
+    /// handle and the dense arrival sequence number (equal to the legacy
+    /// `Vec` index: 0, 1, 2, … in arrival order, never reused).
+    pub fn insert_with(&mut self, make: impl FnOnce(InvocationId, u64) -> T) -> InvocationId {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.live += 1;
+        if let Some(slot) = self.free.pop() {
+            let s = &mut self.slots[slot as usize];
+            debug_assert!(s.body.is_none(), "free-list slot still occupied");
+            let id = InvocationId { slot, gen: s.gen };
+            s.body = Some(make(id, seq));
+            return id;
+        }
+        assert!(self.slots.len() < u32::MAX as usize, "slab overflow");
+        let id = InvocationId {
+            slot: self.slots.len() as u32,
+            gen: 0,
+        };
+        let body = make(id, seq);
+        self.slots.push(Slot {
+            gen: 0,
+            body: Some(body),
+        });
+        id
+    }
+
+    /// Mark a context's slot reusable. No-op unless recycling is on; the
+    /// handle must be live (checked under `debug_assertions`).
+    pub fn release(&mut self, id: InvocationId) {
+        if !self.recycle {
+            return;
+        }
+        let s = &mut self.slots[id.slot as usize];
+        debug_assert_eq!(s.gen, id.gen, "release of a stale InvocationId");
+        if s.body.take().is_some() {
+            s.gen = s.gen.wrapping_add(1);
+            self.free.push(id.slot);
+            self.live -= 1;
+        }
+    }
+
+    /// Total contexts ever inserted (== the next `seq`).
+    pub fn total(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Currently occupied slots.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Allocated slot capacity (the resident high-water mark).
+    pub fn slots_allocated(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn get(&self, id: InvocationId) -> Option<&T> {
+        let s = self.slots.get(id.slot as usize)?;
+        if s.gen != id.gen {
+            return None;
+        }
+        s.body.as_ref()
+    }
+
+    /// Iterate occupied contexts in slot order. With recycling off this
+    /// is exactly arrival (`seq`) order, matching the legacy Vec.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().filter_map(|s| s.body.as_ref())
+    }
+}
+
+impl<T> std::ops::Index<InvocationId> for InvocationSlab<T> {
+    type Output = T;
+
+    fn index(&self, id: InvocationId) -> &T {
+        let s = &self.slots[id.slot as usize];
+        debug_assert_eq!(
+            s.gen, id.gen,
+            "stale InvocationId: slot {} was recycled",
+            id.slot
+        );
+        s.body.as_ref().expect("released InvocationId")
+    }
+}
+
+impl<T> std::ops::IndexMut<InvocationId> for InvocationSlab<T> {
+    fn index_mut(&mut self, id: InvocationId) -> &mut T {
+        let s = &mut self.slots[id.slot as usize];
+        debug_assert_eq!(
+            s.gen, id.gen,
+            "stale InvocationId: slot {} was recycled",
+            id.slot
+        );
+        s.body.as_mut().expect("released InvocationId")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_only_by_default_with_dense_seqs() {
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        let ids: Vec<InvocationId> = (0..5)
+            .map(|_| slab.insert_with(|_id, seq| seq * 10))
+            .collect();
+        // release is a no-op with recycling off
+        slab.release(ids[2]);
+        assert_eq!(slab.live(), 5);
+        assert_eq!(slab.slots_allocated(), 5);
+        assert_eq!(slab.total(), 5);
+        let seqs: Vec<u64> = slab.iter().copied().collect();
+        assert_eq!(seqs, vec![0, 10, 20, 30, 40]);
+        assert_eq!(slab[ids[2]], 20);
+    }
+
+    #[test]
+    fn recycling_reuses_slots_lifo_and_keeps_seq_dense() {
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        slab.set_recycle(true);
+        let a = slab.insert_with(|_, seq| seq);
+        let b = slab.insert_with(|_, seq| seq);
+        let c = slab.insert_with(|_, seq| seq);
+        assert_eq!((slab[a], slab[b], slab[c]), (0, 1, 2));
+        slab.release(b);
+        assert_eq!(slab.live(), 2);
+        // The freed slot is reused; the seq keeps counting densely.
+        let d = slab.insert_with(|_, seq| seq);
+        assert_eq!(d.slot(), b.slot(), "LIFO slot reuse");
+        assert_ne!(d, b, "generation differs");
+        assert_eq!(slab[d], 3, "seq is dense across reuse");
+        assert_eq!(slab.slots_allocated(), 3, "no new slot allocated");
+        assert_eq!(slab.total(), 4);
+    }
+
+    #[test]
+    fn bounded_residency_under_churn() {
+        // The point of the slab: 10k inserted, never more than 2 resident.
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        slab.set_recycle(true);
+        let mut prev: Option<InvocationId> = None;
+        for _ in 0..10_000 {
+            let id = slab.insert_with(|_, seq| seq);
+            if let Some(p) = prev.take() {
+                slab.release(p);
+            }
+            prev = Some(id);
+        }
+        assert_eq!(slab.total(), 10_000);
+        assert!(slab.slots_allocated() <= 2, "residency must stay bounded");
+    }
+
+    #[test]
+    fn get_on_stale_handle_is_none() {
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        slab.set_recycle(true);
+        let a = slab.insert_with(|_, seq| seq);
+        slab.release(a);
+        assert!(slab.get(a).is_none());
+        let b = slab.insert_with(|_, seq| seq);
+        assert_eq!(b.slot(), a.slot());
+        assert!(slab.get(a).is_none(), "old generation stays dead");
+        assert_eq!(slab.get(b), Some(&1));
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "gen check is debug-only")]
+    #[should_panic(expected = "stale InvocationId")]
+    fn stale_handle_access_panics_in_debug() {
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        slab.set_recycle(true);
+        let a = slab.insert_with(|_, seq| seq);
+        slab.release(a);
+        let _b = slab.insert_with(|_, seq| seq); // recycles a's slot
+        let _ = slab[a]; // stale generation → panic
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "gen check is debug-only")]
+    #[should_panic(expected = "stale InvocationId")]
+    fn double_release_then_access_panics_in_debug() {
+        let mut slab: InvocationSlab<u64> = InvocationSlab::new();
+        slab.set_recycle(true);
+        let a = slab.insert_with(|_, seq| seq);
+        slab.release(a);
+        let _ = slab[a];
+    }
+}

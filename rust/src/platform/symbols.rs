@@ -1,0 +1,197 @@
+//! Function-id interning (§Perf: hot-path overhaul).
+//!
+//! Every tenant-qualified function and app name is interned exactly once —
+//! at deploy or first reference — into a per-world [`Symbols`] table that
+//! maps `str → FnId(u32)` and back. The hot paths (dispatch indexes,
+//! keep-alive checks, placement, container matching, freshen caches, span
+//! recording) then carry and compare the 4-byte `Copy` id instead of
+//! hashing and cloning owned `String`s per event.
+//!
+//! Digest contract: ids never appear in output. Display, export, and
+//! digest paths resolve back through the table (`resolve`/`rc`), so every
+//! byte of existing output is unchanged. Where the *iteration order* of a
+//! legacy `FxHashMap<String, _>` is digest-pinned (the `LegacyOneShot`
+//! queue discipline), the interned build keys that map by `Rc<str>` from
+//! this table: `Rc<str>` hashes via `str::hash` exactly as `String` does,
+//! so the same insertion sequence produces the same bucket order.
+
+use std::rc::Rc;
+
+use crate::util::fxhash::FxHashMap;
+
+/// An interned function (or app) name. 4 bytes, `Copy`, order-stable:
+/// ids are assigned densely in interning order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FnId(u32);
+
+impl FnId {
+    /// The "no function" sentinel (used where legacy code passed `""`).
+    pub const ANON: FnId = FnId(u32::MAX);
+
+    pub fn is_anon(self) -> bool {
+        self == FnId::ANON
+    }
+
+    /// Dense index for side tables (`Vec<T>` keyed by id).
+    pub fn index(self) -> u32 {
+        self.0
+    }
+}
+
+/// The per-world intern table. Apps and functions share one namespace
+/// (names are tenant-qualified and distinct in practice; sharing keeps
+/// `app_of` an id→id map).
+#[derive(Clone)]
+pub struct Symbols {
+    /// id → name, dense.
+    names: Vec<Rc<str>>,
+    /// name → id. Keys are the same `Rc<str>` allocations as `names`.
+    ids: FxHashMap<Rc<str>, FnId>,
+    /// Cached `""` so resolving [`FnId::ANON`] (or an unknown id) never
+    /// allocates — legacy charge paths for unknown functions expect `""`.
+    empty: Rc<str>,
+}
+
+impl std::fmt::Debug for Symbols {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Symbols")
+            .field("len", &self.names.len())
+            .finish()
+    }
+}
+
+impl Default for Symbols {
+    fn default() -> Self {
+        Symbols::new()
+    }
+}
+
+impl Symbols {
+    pub fn new() -> Symbols {
+        Symbols {
+            names: Vec::new(),
+            ids: FxHashMap::default(),
+            empty: Rc::from(""),
+        }
+    }
+
+    /// Get-or-insert: returns the existing id for `name`, or assigns the
+    /// next dense one. `""` always interns to [`FnId::ANON`].
+    pub fn intern(&mut self, name: &str) -> FnId {
+        if name.is_empty() {
+            return FnId::ANON;
+        }
+        if let Some(&id) = self.ids.get(name) {
+            return id;
+        }
+        assert!(
+            self.names.len() < u32::MAX as usize,
+            "symbol table overflow"
+        );
+        let id = FnId(self.names.len() as u32);
+        let rc: Rc<str> = Rc::from(name);
+        self.names.push(rc.clone());
+        self.ids.insert(rc, id);
+        id
+    }
+
+    /// Id for an already-interned name (`None` if never interned; `""`
+    /// maps to `Some(ANON)`).
+    pub fn lookup(&self, name: &str) -> Option<FnId> {
+        if name.is_empty() {
+            return Some(FnId::ANON);
+        }
+        self.ids.get(name).copied()
+    }
+
+    /// Resolve an id to its name. ANON and unknown ids resolve to `""`
+    /// (the legacy empty-function convention).
+    pub fn resolve(&self, id: FnId) -> &str {
+        self.names
+            .get(id.0 as usize)
+            .map(|rc| &**rc)
+            .unwrap_or("")
+    }
+
+    /// Resolve to a shared `Rc<str>` (refcount bump, no allocation).
+    /// ANON and unknown ids yield the cached `""`.
+    pub fn rc(&self, id: FnId) -> Rc<str> {
+        self.names
+            .get(id.0 as usize)
+            .cloned()
+            .unwrap_or_else(|| self.empty.clone())
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_resolve_round_trips() {
+        let mut s = Symbols::new();
+        let a = s.intern("app/alpha");
+        let b = s.intern("app/beta");
+        assert_ne!(a, b);
+        assert_eq!(s.resolve(a), "app/alpha");
+        assert_eq!(s.resolve(b), "app/beta");
+        assert_eq!(s.rc(a).as_ref(), "app/alpha");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_interns_return_the_same_id() {
+        let mut s = Symbols::new();
+        let a1 = s.intern("f");
+        let a2 = s.intern("f");
+        assert_eq!(a1, a2);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.lookup("f"), Some(a1));
+        assert_eq!(s.lookup("g"), None);
+    }
+
+    #[test]
+    fn ids_are_dense_in_interning_order() {
+        let mut s = Symbols::new();
+        for (i, name) in ["x", "y", "z"].iter().enumerate() {
+            assert_eq!(s.intern(name).index(), i as u32);
+        }
+    }
+
+    #[test]
+    fn anon_is_the_empty_name_and_never_allocates_storage() {
+        let mut s = Symbols::new();
+        assert_eq!(s.intern(""), FnId::ANON);
+        assert!(FnId::ANON.is_anon());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.resolve(FnId::ANON), "");
+        assert_eq!(s.rc(FnId::ANON).as_ref(), "");
+        assert_eq!(s.lookup(""), Some(FnId::ANON));
+    }
+
+    #[test]
+    fn rc_str_hashes_like_string_under_fx() {
+        // The LegacyOneShot digest contract: FxHashMap<Rc<str>, _> must
+        // bucket exactly like FxHashMap<String, _> for the same keys.
+        use crate::util::fxhash::FxBuildHasher;
+        use std::hash::{BuildHasher, Hash, Hasher};
+        let bh = FxBuildHasher::default();
+        for name in ["", "f", "app/fn-17", "a-much-longer-function-name"] {
+            let mut h1 = bh.build_hasher();
+            name.to_string().hash(&mut h1);
+            let mut h2 = bh.build_hasher();
+            let rc: Rc<str> = Rc::from(name);
+            rc.hash(&mut h2);
+            assert_eq!(h1.finish(), h2.finish(), "hash diverged for {name:?}");
+        }
+    }
+}

@@ -1,10 +1,18 @@
 //! The composed simulation world.
 //!
 //! [`World`] owns every mutable piece of platform state; discrete-event
-//! closures receive `(&mut Sim<World>, &mut World)` and the borrow
+//! handlers receive `(&mut PlatformSim, &mut World)` and the borrow
 //! discipline is "disjoint fields": helpers take the specific fields they
 //! need (`&world.endpoints`, `&mut world.rng`, `&mut world.containers[c]`)
 //! so network, container and predictor state can be touched in one event.
+//!
+//! Hot-path identity: function and app names are interned at deploy into
+//! `registry.symbols` ([`crate::platform::symbols::Symbols`]); everything
+//! per-event carries the 4-byte [`FnId`]. Invocation contexts live in a
+//! generation-stamped [`InvocationSlab`] (recycling is opt-in, used by the
+//! macro replay) and are addressed by [`InvocationId`] handles; each ctx
+//! also carries a dense arrival `seq` equal to the legacy Vec index, and
+//! all output derives from `seq`, never from slab slot numbers.
 
 use std::rc::Rc;
 
@@ -13,15 +21,16 @@ use crate::util::fxhash::FxHashMap;
 use crate::billing::Ledger;
 use crate::freshen::policy::FreshenGate;
 use crate::metrics::{EvictionCause, MetricsHub, StartKind};
+use crate::netsim::link::Site;
 use crate::platform::container::{Container, ContainerId, ContainerState};
 use crate::platform::dispatch::{self, QueueDiscipline};
 use crate::platform::endpoint::Endpoint;
-use crate::platform::function::FunctionId;
-use crate::netsim::link::Site;
+use crate::platform::exec::PlatformEvent;
 use crate::platform::invoker::Invoker;
 use crate::platform::keepalive::{self, KeepAlivePolicy};
 use crate::platform::placement::{self, Decision, PlaceCtx, Placement};
 use crate::platform::registry::Registry;
+use crate::platform::symbols::FnId;
 use crate::predict::chain::ChainPredictor;
 use crate::predict::confidence::PredictionTracker;
 use crate::predict::histogram::HistogramPredictor;
@@ -32,6 +41,8 @@ use crate::util::config::{Config, MemoryAccounting, UNIFORM_SLOT_MB};
 use crate::util::rng::{mix64, Rng};
 use crate::util::time::{SimDuration, SimTime};
 
+pub use crate::platform::slab::{InvocationId, InvocationSlab};
+
 /// Stream tag forking the placement RNG off the world seed: random
 /// placement draws never perturb the main simulation stream, so the
 /// default (legacy, draw-free) axis stays byte-identical.
@@ -40,14 +51,17 @@ const PLACEMENT_STREAM: u64 = 0x9C7A_CE00;
 /// Stream tag for inter-node network jitter on cross-node chain edges.
 const NET_STREAM: u64 = 0x0E79_E700;
 
-/// Dense invocation identifier (index into `World::invocations`).
-pub type InvocationId = usize;
-
 /// Per-invocation execution context (the state machine the executor walks).
 #[derive(Debug, Clone)]
 pub struct InvocationCtx {
+    /// Slab handle of this context (generation-stamped).
     pub id: InvocationId,
-    pub function: FunctionId,
+    /// Dense arrival sequence number — identical to the legacy append-only
+    /// Vec index. Every externally visible artifact (span `inv` fields,
+    /// run params, dispatch ordering) uses `seq`; slab slots never leak.
+    pub seq: u64,
+    /// Interned function id (resolve via `registry.symbols` for display).
+    pub function: FnId,
     pub container: Option<ContainerId>,
     pub enqueued_at: SimTime,
     pub started_at: SimTime,
@@ -66,7 +80,7 @@ pub struct InvocationCtx {
 #[derive(Debug, Clone)]
 pub struct FreshenRunCtx {
     pub id: usize,
-    pub function: FunctionId,
+    pub function: FnId,
     pub container: ContainerId,
     /// The container incarnation this run launched against. When
     /// `Config::freshen_incarnation_guard` is on, a step that finds the
@@ -84,7 +98,8 @@ pub struct FreshenRunCtx {
 #[derive(Debug, Clone)]
 pub struct PendingFreshenCharge {
     pub prediction_id: u64,
-    pub app: String,
+    /// Interned app id (resolved back to its name at ledger settlement).
+    pub app: FnId,
     pub memory_mb: u32,
     pub duration: SimDuration,
 }
@@ -96,6 +111,9 @@ pub struct World {
     pub registry: Registry,
     pub containers: Vec<Container>,
     pub invokers: Vec<Invoker>,
+    // Deploy/ingest boundary: endpoints are registered once at setup and
+    // looked up per network op by id string.
+    // simlint: allow(D007, endpoint registration is a setup-time boundary)
     pub endpoints: FxHashMap<String, Endpoint>,
     pub metrics: MetricsHub,
     pub ledger: Ledger,
@@ -104,9 +122,11 @@ pub struct World {
     pub hist_pred: HistogramPredictor,
     pub tracker: PredictionTracker,
     pub scorer: LearnedScorer,
-    /// Active + completed invocation contexts (slab; completed stay for
-    /// inspection in tests, metrics copy what reports need).
-    pub invocations: Vec<InvocationCtx>,
+    /// Invocation contexts: a generation-stamped free-list slab. Recycling
+    /// is opt-in (`invocations.set_recycle(true)`, replay only); off, the
+    /// slab is append-only like the legacy Vec and completed contexts stay
+    /// inspectable for tests.
+    pub invocations: InvocationSlab<InvocationCtx>,
     pub freshen_runs: Vec<FreshenRunCtx>,
     /// Invocations waiting for cluster memory, behind the configured
     /// queue discipline (built from `config.queue`; swappable for tests).
@@ -121,12 +141,13 @@ pub struct World {
     /// chain edges (homogeneous clusters never draw from it).
     pub net_rng: Rng,
     /// `FrWait` parking: one wait list per (container, resource index).
-    pub fr_waiters: FxHashMap<(ContainerId, usize), WaitList<World>>,
+    pub fr_waiters: FxHashMap<(ContainerId, usize), WaitList<World, PlatformEvent>>,
     /// Freshen charges awaiting hit/miss resolution.
     pub pending_charges: Vec<PendingFreshenCharge>,
     /// Calibrated inference latency per model (simulator stand-in for the
     /// PJRT execution the serving engine performs for real; can be
     /// overwritten from measured artifact timings).
+    // simlint: allow(D007, model calibration is a setup-time boundary)
     pub model_latencies: FxHashMap<String, SimDuration>,
     /// Strict version checking for prefetched data (§3.2 version numbers).
     pub strict_versions: bool,
@@ -149,8 +170,9 @@ pub struct World {
     resident_last_change: SimTime,
 }
 
-/// The simulator type every experiment drives.
-pub type PlatformSim = Sim<World>;
+/// The simulator type every experiment drives: enum-coded platform events
+/// ([`PlatformEvent`]) on the wheel, closures as the escape hatch.
+pub type PlatformSim = Sim<World, PlatformEvent>;
 
 impl World {
     pub fn new(config: Config) -> World {
@@ -188,7 +210,7 @@ impl World {
             hist_pred: HistogramPredictor::new(),
             tracker: PredictionTracker::new(),
             scorer: LearnedScorer::default(),
-            invocations: Vec::new(),
+            invocations: InvocationSlab::new(),
             freshen_runs: Vec::new(),
             fr_waiters: FxHashMap::default(),
             pending_charges: Vec::new(),
@@ -204,9 +226,15 @@ impl World {
         self.endpoints.insert(endpoint.id.clone(), endpoint);
     }
 
-    /// Deploy a function spec (infers its freshen hook).
+    /// Deploy a function spec (infers its freshen hook; interns its name).
     pub fn deploy(&mut self, spec: crate::platform::function::FunctionSpec) {
         self.registry.deploy(spec, self.config.freshen.default_ttl);
+    }
+
+    /// Intern (or look up) a function/app name — the string→id boundary
+    /// for callers holding a name (CLI, experiments, tests).
+    pub fn fid(&mut self, name: &str) -> FnId {
+        self.registry.symbols.intern(name)
     }
 
     /// Default simulated latency for `Op::Infer` when no calibration is set.
@@ -220,7 +248,7 @@ impl World {
     // ---- container pool (memory-accounted) -----------------------------
 
     /// Find a warm container for `function`.
-    pub fn find_warm(&self, function: &str) -> Option<ContainerId> {
+    pub fn find_warm(&self, function: FnId) -> Option<ContainerId> {
         self.containers
             .iter()
             .find(|c| c.warm_for(function))
@@ -230,23 +258,33 @@ impl World {
     /// The MB a container hosting `function` charges its invoker:
     /// one uniform 256 MB slot, or the function's declared `memory_mb`
     /// under per-function accounting.
-    pub fn charge_for_function(&self, function: &str) -> u32 {
+    pub fn charge_for_function_id(&self, function: FnId) -> u32 {
         match self.config.memory_accounting {
             MemoryAccounting::UniformSlot => UNIFORM_SLOT_MB,
             MemoryAccounting::FunctionMb => self
                 .registry
-                .function(function)
+                .function_by_id(function)
                 .map(|f| f.memory_mb.max(1))
                 .unwrap_or(UNIFORM_SLOT_MB),
+        }
+    }
+
+    /// Name-keyed convenience wrapper over [`World::charge_for_function_id`].
+    pub fn charge_for_function(&self, function: &str) -> u32 {
+        match self.registry.symbols.lookup(function) {
+            Some(f) => self.charge_for_function_id(f),
+            None => match self.config.memory_accounting {
+                MemoryAccounting::UniformSlot | MemoryAccounting::FunctionMb => UNIFORM_SLOT_MB,
+            },
         }
     }
 
     /// Find a container slot with `memory_mb` of host memory behind it
     /// for an anonymous acquisition (no function identity: placement sees
     /// no warm state and no labels). Equivalent to
-    /// [`World::acquire_slot_for`] with an empty function name.
+    /// [`World::acquire_slot_for`] with [`FnId::ANON`].
     pub fn acquire_slot(&mut self, now: SimTime, memory_mb: u32) -> Option<ContainerId> {
-        self.acquire_slot_for(now, memory_mb, "")
+        self.acquire_slot_for(now, memory_mb, FnId::ANON)
     }
 
     /// Find a container slot with `memory_mb` of host memory behind it —
@@ -266,12 +304,12 @@ impl World {
         &mut self,
         now: SimTime,
         memory_mb: u32,
-        function: &str,
+        function: FnId,
     ) -> Option<ContainerId> {
         let decision = {
             let (affinity, anti_affinity) = self
                 .registry
-                .function(function)
+                .function_by_id(function)
                 .map(|f| (f.affinity.as_slice(), f.anti_affinity.as_slice()))
                 .unwrap_or((&[], &[]));
             let ctx = PlaceCtx {
@@ -304,10 +342,10 @@ impl World {
     /// matching); the executor's infeasible-drop check and the pressure
     /// path's host filter both consult it so label-excluded functions
     /// drop instead of queueing or stealing memory they cannot use.
-    pub fn placement_admits(&self, function: &str, host: usize) -> bool {
+    pub fn placement_admits(&self, function: FnId, host: usize) -> bool {
         let (affinity, anti_affinity) = self
             .registry
-            .function(function)
+            .function_by_id(function)
             .map(|f| (f.affinity.as_slice(), f.anti_affinity.as_slice()))
             .unwrap_or((&[], &[]));
         let ctx = PlaceCtx {
@@ -387,9 +425,17 @@ impl World {
                 };
                 let warm_kill = matches!(cause, EvictionCause::Pressure)
                     && self.containers[cid].runtime.invocations > 0;
-                let f = self.containers[cid].function.clone().unwrap_or_default();
-                self.obs
-                    .record(kind, &f, cid as u64, now, SimDuration::ZERO, mb as u64, warm_kill as u64);
+                let f = self.containers[cid].function.unwrap_or(FnId::ANON);
+                self.obs.record(
+                    &self.registry.symbols,
+                    kind,
+                    f,
+                    cid as u64,
+                    now,
+                    SimDuration::ZERO,
+                    mb as u64,
+                    warm_kill as u64,
+                );
             }
         }
         self.containers[cid].evict();
@@ -507,11 +553,12 @@ mod tests {
         cfg.invokers = 1;
         cfg.containers_per_invoker = 2;
         let mut w = World::new(cfg);
+        let (f, g) = (w.fid("f"), w.fid("g"));
         let a = w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).unwrap();
-        w.containers[a].begin_cold_start("f", SimTime::ZERO);
+        w.containers[a].begin_cold_start(f, SimTime::ZERO);
         let b = w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).unwrap();
         assert_ne!(a, b);
-        w.containers[b].begin_cold_start("g", SimTime::ZERO);
+        w.containers[b].begin_cold_start(g, SimTime::ZERO);
         // Pool is full now (2 uniform slots = 512 MB charged).
         assert_eq!(w.resident_mb, 2 * UNIFORM_SLOT_MB as u64);
         assert!(w.acquire_slot(SimTime::ZERO, UNIFORM_SLOT_MB).is_none());
@@ -535,8 +582,9 @@ mod tests {
         let mut w = World::new(cfg);
         // Three light containers fit; the 512 MB one then doesn't.
         for f in ["a", "b", "c"] {
+            let fid = w.fid(f);
             let cid = w.acquire_slot(SimTime::ZERO, 256).unwrap();
-            w.containers[cid].begin_cold_start(f, SimTime::ZERO);
+            w.containers[cid].begin_cold_start(fid, SimTime::ZERO);
         }
         assert_eq!(w.invokers[0].free_mb(), 256);
         assert!(w.acquire_slot(SimTime::ZERO, 512).is_none());
@@ -551,8 +599,9 @@ mod tests {
         let mut cfg = Config::default();
         cfg.invokers = 1;
         let mut w = World::new(cfg);
+        let f = w.fid("f");
         let a = w.acquire_slot(SimTime::ZERO, 256).unwrap();
-        w.containers[a].begin_cold_start("f", SimTime::ZERO);
+        w.containers[a].begin_cold_start(f, SimTime::ZERO);
         // 256 MB resident for 2 simulated seconds.
         w.evict_container(a, EvictionCause::Pressure, SimTime(2_000_000));
         w.seal_resident_accounting(SimTime(5_000_000));
@@ -582,6 +631,10 @@ mod tests {
         w.config.memory_accounting = MemoryAccounting::FunctionMb;
         assert_eq!(w.charge_for_function("big"), 2048);
         assert_eq!(w.charge_for_function("ghost"), UNIFORM_SLOT_MB);
+        // Id-keyed variant agrees.
+        let big = w.fid("big");
+        assert_eq!(w.charge_for_function_id(big), 2048);
+        assert_eq!(w.charge_for_function_id(FnId::ANON), UNIFORM_SLOT_MB);
     }
 
     #[test]
@@ -625,9 +678,10 @@ mod tests {
     #[test]
     fn homogeneous_default_charges_no_cross_node_costs() {
         let mut w = World::new(Config::default());
+        let anything = w.fid("anything");
         let a = w.acquire_slot(SimTime::ZERO, 256).unwrap();
         assert_eq!(w.cold_start_on(a), w.config.cold_start);
         assert_eq!(w.chain_edge_delay(a), SimDuration::ZERO);
-        assert!(w.placement_admits("anything", 0));
+        assert!(w.placement_admits(anything, 0));
     }
 }

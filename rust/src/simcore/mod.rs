@@ -11,11 +11,20 @@
 //! # Model
 //!
 //! The engine is generic over a *world* type `W` (the mutable simulation
-//! state — the platform, network, stores). Events are boxed `FnOnce(&mut
-//! Sim<W>, &mut W)` closures; an event may schedule further events, cancel
-//! pending ones, and mutate the world. "Processes" that block (e.g. the
-//! paper's `FrWait`) are written in continuation-passing style: the waiter
-//! registers a callback that the completing event fires.
+//! state — the platform, network, stores) and an *event* type `E`
+//! implementing [`EventBody`]. The default event type,
+//! [`ClosureEvent`], is a boxed `FnOnce(&mut Sim<W>, &mut W)` — the
+//! historical model, maximally flexible, one heap allocation per event.
+//! Hot simulations define an enum event instead (e.g. the platform's
+//! `PlatformEvent`): its recurring timer shapes are plain variants stored
+//! inline in the queue — zero per-event allocations, no vtable call —
+//! with a boxed-closure variant retained as the escape hatch that
+//! [`EventBody::from_closure`] routes `schedule` through, so closure-based
+//! call sites compile unchanged against either event type. An event may
+//! schedule further events, cancel pending ones, and mutate the world.
+//! "Processes" that block (e.g. the paper's `FrWait`) are written in
+//! continuation-passing style: the waiter registers a callback that the
+//! completing event fires.
 //!
 //! # Scheduler
 //!
@@ -30,6 +39,8 @@
 pub mod waitlist;
 pub mod wheel;
 
+use std::marker::PhantomData;
+
 use crate::util::time::{SimDuration, SimTime};
 
 use wheel::{EventQueue, TimingWheel};
@@ -38,34 +49,73 @@ use wheel::{EventQueue, TimingWheel};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct EventId(u64);
 
-/// A scheduled event body.
-pub type EventFn<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+/// A boxed event body (the closure escape hatch). `E` is the concrete
+/// event type of the engine the closure runs on; the default keeps the
+/// historical `Box<dyn FnOnce(&mut Sim<W>, &mut W)>` shape.
+pub type EventFn<W, E = ClosureEvent<W>> = Box<dyn FnOnce(&mut Sim<W, E>, &mut W)>;
+
+/// What the engine stores on the wheel and fires in [`Sim::step`].
+///
+/// Implementations are either [`ClosureEvent`] (every event is a boxed
+/// closure) or a simulation-specific enum whose recurring variants are
+/// stored inline — plus a closure variant that `from_closure` wraps, so
+/// `Sim::schedule` keeps working for the irregular shapes.
+pub trait EventBody<W>: Sized {
+    /// Execute the event.
+    fn fire(self, sim: &mut Sim<W, Self>, world: &mut W);
+    /// Wrap a boxed closure (the escape hatch `Sim::schedule` uses).
+    fn from_closure(f: EventFn<W, Self>) -> Self;
+}
+
+/// The default event type: a boxed `FnOnce` closure per event (one heap
+/// allocation + vtable call each — fine for experiments, not for the
+/// macro-replay hot path, which uses an enum event instead).
+pub struct ClosureEvent<W>(pub EventFn<W>);
+
+impl<W> EventBody<W> for ClosureEvent<W> {
+    fn fire(self, sim: &mut Sim<W, Self>, world: &mut W) {
+        (self.0)(sim, world)
+    }
+
+    fn from_closure(f: EventFn<W>) -> Self {
+        ClosureEvent(f)
+    }
+}
 
 /// The simulation engine: virtual clock + timing-wheel event queue.
-pub struct Sim<W> {
+pub struct Sim<W, E: EventBody<W> = ClosureEvent<W>> {
     now: SimTime,
     seq: u64,
-    queue: TimingWheel<W>,
+    queue: TimingWheel<E>,
     executed: u64,
     /// Hard cap on executed events; guards against runaway feedback loops
     /// in experiments (0 = unlimited).
     pub max_events: u64,
+    /// Equivalence-test toggle: when set, [`Sim::schedule_event`] routes
+    /// enum events through the closure escape hatch (`from_closure` over a
+    /// `fire` thunk) instead of storing them inline. Sequence numbers and
+    /// firing order are identical either way — a run with the toggle on is
+    /// the reference model a run with it off must match event for event.
+    pub force_closures: bool,
+    _world: PhantomData<fn(&mut W)>,
 }
 
-impl<W> Default for Sim<W> {
+impl<W, E: EventBody<W> + 'static> Default for Sim<W, E> {
     fn default() -> Self {
         Sim::new()
     }
 }
 
-impl<W> Sim<W> {
-    pub fn new() -> Sim<W> {
+impl<W, E: EventBody<W> + 'static> Sim<W, E> {
+    pub fn new() -> Sim<W, E> {
         Sim {
             now: SimTime::ZERO,
             seq: 0,
             queue: TimingWheel::new(),
             executed: 0,
             max_events: 0,
+            force_closures: false,
+            _world: PhantomData,
         }
     }
 
@@ -87,7 +137,7 @@ impl<W> Sim<W> {
     /// Schedule `f` to run after `delay`. Returns an id for cancellation.
     pub fn schedule<F>(&mut self, delay: SimDuration, f: F) -> EventId
     where
-        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+        F: FnOnce(&mut Sim<W, E>, &mut W) + 'static,
     {
         self.schedule_at(self.now + delay, f)
     }
@@ -95,12 +145,33 @@ impl<W> Sim<W> {
     /// Schedule `f` at an absolute virtual time (must not be in the past).
     pub fn schedule_at<F>(&mut self, at: SimTime, f: F) -> EventId
     where
-        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+        F: FnOnce(&mut Sim<W, E>, &mut W) + 'static,
     {
+        self.insert_event(at, E::from_closure(Box::new(f)))
+    }
+
+    /// Schedule an event body to fire after `delay`. For enum event types
+    /// this stores the variant inline on the wheel — no allocation.
+    pub fn schedule_event(&mut self, delay: SimDuration, ev: E) -> EventId {
+        self.schedule_event_at(self.now + delay, ev)
+    }
+
+    /// Schedule an event body at an absolute virtual time.
+    pub fn schedule_event_at(&mut self, at: SimTime, ev: E) -> EventId {
+        if self.force_closures {
+            // Reference mode: round-trip through the closure escape hatch.
+            // One seq is consumed either way, so ordering is identical.
+            let wrapped = E::from_closure(Box::new(move |sim, w| ev.fire(sim, w)));
+            return self.insert_event(at, wrapped);
+        }
+        self.insert_event(at, ev)
+    }
+
+    fn insert_event(&mut self, at: SimTime, ev: E) -> EventId {
         debug_assert!(at >= self.now, "scheduling into the past");
         let seq = self.seq;
         self.seq += 1;
-        self.queue.insert(at.max(self.now), seq, Box::new(f));
+        self.queue.insert(at.max(self.now), seq, ev);
         EventId(seq)
     }
 
@@ -109,7 +180,7 @@ impl<W> Sim<W> {
     /// with `run` is modelled with two `immediate` events.
     pub fn immediate<F>(&mut self, f: F) -> EventId
     where
-        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+        F: FnOnce(&mut Sim<W, E>, &mut W) + 'static,
     {
         self.schedule(SimDuration::ZERO, f)
     }
@@ -126,11 +197,11 @@ impl<W> Sim<W> {
     pub fn step(&mut self, world: &mut W) -> bool {
         match self.queue.pop() {
             None => false,
-            Some((at, _seq, f)) => {
+            Some((at, _seq, ev)) => {
                 debug_assert!(at >= self.now);
                 self.now = self.now.max(at);
                 self.executed += 1;
-                f(self, world);
+                ev.fire(self, world);
                 true
             }
         }
@@ -331,5 +402,77 @@ mod tests {
         let mut w = World::default();
         sim.schedule(SimDuration::ZERO, tick);
         sim.run(&mut w);
+    }
+
+    // ---- enum-coded events -------------------------------------------
+
+    /// A tiny enum event type exercising the inline-variant path.
+    enum TestEvent {
+        Tag(&'static str),
+        Closure(EventFn<World, TestEvent>),
+    }
+
+    impl EventBody<World> for TestEvent {
+        fn fire(self, sim: &mut Sim<World, Self>, world: &mut World) {
+            match self {
+                TestEvent::Tag(name) => world.log.push((sim.now().micros(), name)),
+                TestEvent::Closure(f) => f(sim, world),
+            }
+        }
+
+        fn from_closure(f: EventFn<World, Self>) -> Self {
+            TestEvent::Closure(f)
+        }
+    }
+
+    #[test]
+    fn enum_events_interleave_with_closures_in_seq_order() {
+        let mut sim: Sim<World, TestEvent> = Sim::new();
+        let mut w = World::default();
+        sim.schedule_event(SimDuration::from_millis(5), TestEvent::Tag("enum-b"));
+        sim.schedule(SimDuration::from_millis(5), |s, w: &mut World| {
+            w.log.push((s.now().micros(), "closure"))
+        });
+        sim.schedule_event(SimDuration::from_millis(2), TestEvent::Tag("enum-a"));
+        sim.run(&mut w);
+        assert_eq!(
+            w.log,
+            vec![(2_000, "enum-a"), (5_000, "enum-b"), (5_000, "closure")]
+        );
+    }
+
+    #[test]
+    fn force_closures_is_order_identical_to_inline_variants() {
+        // The reference-model equivalence the platform replay relies on:
+        // identical schedule sequence, identical (timestamp, seq) firing
+        // order, identical effects — with and without inline storage.
+        let drive = |force: bool| -> Vec<(u64, &'static str)> {
+            let mut sim: Sim<World, TestEvent> = Sim::new();
+            sim.force_closures = force;
+            let mut w = World::default();
+            for (delay_ms, name) in [(3, "x"), (1, "y"), (3, "z")] {
+                sim.schedule_event(
+                    SimDuration::from_millis(delay_ms),
+                    TestEvent::Tag(name),
+                );
+            }
+            sim.schedule(SimDuration::from_millis(3), |s, w: &mut World| {
+                w.log.push((s.now().micros(), "tail"));
+                s.schedule_event(SimDuration::from_millis(1), TestEvent::Tag("nested"));
+            });
+            sim.run(&mut w);
+            w.log
+        };
+        assert_eq!(drive(false), drive(true));
+        assert_eq!(
+            drive(false),
+            vec![
+                (1_000, "y"),
+                (3_000, "x"),
+                (3_000, "z"),
+                (3_000, "tail"),
+                (4_000, "nested"),
+            ]
+        );
     }
 }

@@ -7,29 +7,34 @@
 //! drains the list and schedules every waiter as an `immediate` event, so
 //! waiters resume at the completion timestamp in registration order —
 //! exactly the semantics of waking threads blocked on a condition variable.
+//!
+//! Generic over the engine's event type `E` (default [`ClosureEvent`], the
+//! boxed-closure engine) so enum-event simulations can park continuations
+//! too; the waiters themselves are always boxed closures — parking is rare
+//! and irregular, exactly the escape-hatch case.
 
 use std::collections::VecDeque;
 
-use crate::simcore::Sim;
+use crate::simcore::{ClosureEvent, EventBody, Sim};
 
-type Waiter<W> = Box<dyn FnOnce(&mut Sim<W>, &mut W)>;
+type Waiter<W, E> = Box<dyn FnOnce(&mut Sim<W, E>, &mut W)>;
 
 /// A set of parked continuations keyed by nothing (one list per condition).
-pub struct WaitList<W> {
+pub struct WaitList<W, E: EventBody<W> = ClosureEvent<W>> {
     /// FIFO of parked waiters. A deque, not a `Vec`: [`WaitList::wake_one`]
     /// releases from the front, which must stay O(1) under the paper's
     /// capacity-token churn (a `Vec::remove(0)` was O(n) per wake).
-    waiters: VecDeque<Waiter<W>>,
+    waiters: VecDeque<Waiter<W, E>>,
 }
 
-impl<W: 'static> Default for WaitList<W> {
+impl<W: 'static, E: EventBody<W> + 'static> Default for WaitList<W, E> {
     fn default() -> Self {
         WaitList::new()
     }
 }
 
-impl<W: 'static> WaitList<W> {
-    pub fn new() -> WaitList<W> {
+impl<W: 'static, E: EventBody<W> + 'static> WaitList<W, E> {
+    pub fn new() -> WaitList<W, E> {
         WaitList {
             waiters: VecDeque::new(),
         }
@@ -38,7 +43,7 @@ impl<W: 'static> WaitList<W> {
     /// Park a continuation until [`WaitList::wake_all`].
     pub fn wait<F>(&mut self, f: F)
     where
-        F: FnOnce(&mut Sim<W>, &mut W) + 'static,
+        F: FnOnce(&mut Sim<W, E>, &mut W) + 'static,
     {
         self.waiters.push_back(Box::new(f));
     }
@@ -55,7 +60,7 @@ impl<W: 'static> WaitList<W> {
     ///
     /// Waiters are *scheduled*, not called inline, so the waker's own event
     /// finishes first — mirroring a notify-then-return condition variable.
-    pub fn wake_all(&mut self, sim: &mut Sim<W>) {
+    pub fn wake_all(&mut self, sim: &mut Sim<W, E>) {
         for w in self.waiters.drain(..) {
             sim.immediate(w);
         }
@@ -63,7 +68,7 @@ impl<W: 'static> WaitList<W> {
 
     /// Wake only the first parked waiter, if any (for capacity tokens).
     /// O(1): pops the deque front, preserving FIFO order.
-    pub fn wake_one(&mut self, sim: &mut Sim<W>) -> bool {
+    pub fn wake_one(&mut self, sim: &mut Sim<W, E>) -> bool {
         match self.waiters.pop_front() {
             Some(w) => {
                 sim.immediate(w);

@@ -8,18 +8,25 @@
 //! `2^(6·LEVELS)` µs (≈ 19 h) ahead go to a sorted overflow heap and are
 //! re-homed onto the wheels when the cursor approaches.
 //!
+//! The queue is generic over the event payload `E`, stored *inline* in the
+//! side table: with an enum event type ([`crate::simcore::EventBody`])
+//! scheduling allocates nothing beyond amortised map growth, where the old
+//! `EventFn`-only store paid one `Box<dyn FnOnce>` heap allocation plus a
+//! vtable call per event. Closure-based engines simply instantiate
+//! `E = ClosureEvent<W>` and behave exactly as before.
+//!
 //! Determinism: the engine's contract is exact `(timestamp, seq)` FIFO
-//! order. Slots store bare `(at, seq)` pairs; the closures live in a
+//! order. Slots store bare `(at, seq)` pairs; the payloads live in a
 //! side table keyed by `seq`. Draining a slot re-inserts its pairs
 //! relative to the advanced cursor, which provably lands them at a
 //! strictly lower level, until they reach the sorted `ready` buffer the
 //! pop path consumes.
 //!
-//! Cancellation is O(1): `cancel` removes the closure from the side
+//! Cancellation is O(1): `cancel` removes the payload from the side
 //! table; the orphaned `(at, seq)` pair stays in its slot as a per-slot
 //! tombstone and is dropped when that slot drains. Nothing is consulted
 //! on the hot pop path beyond the side-table lookup every pop already
-//! does, and a cancel of an already-fired event finds no closure and
+//! does, and a cancel of an already-fired event finds no payload and
 //! reports `false` — there is no global tombstone set to leak into.
 //!
 //! [`Sim`]: crate::simcore::Sim
@@ -27,7 +34,6 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
-use crate::simcore::EventFn;
 use crate::util::fxhash::FxHashMap;
 use crate::util::time::SimTime;
 
@@ -43,17 +49,18 @@ const SLOT_MASK: u64 = (SLOTS as u64) - 1;
 /// A pending event reference: `(timestamp µs, sequence number)`.
 type Pair = (u64, u64);
 
-/// The abstract event-queue interface, so benches and property tests can
-/// drive the wheel and the reference binary heap identically.
-pub trait EventQueue<W> {
+/// The abstract event-queue interface over payload type `E`, so benches
+/// and property tests can drive the wheel and the reference binary heap
+/// identically.
+pub trait EventQueue<E> {
     /// Add an event. `seq` values must be unique and monotonically
     /// increasing across inserts (the engine's schedule counter).
-    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>);
+    fn insert(&mut self, at: SimTime, seq: u64, ev: E);
     /// Remove a pending event. Returns `false` (and changes nothing) if
     /// the event already fired, was already cancelled, or never existed.
     fn cancel(&mut self, seq: u64) -> bool;
     /// Remove and return the earliest event by `(timestamp, seq)`.
-    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)>;
+    fn pop(&mut self) -> Option<(SimTime, u64, E)>;
     /// Timestamp of the earliest pending event, if any.
     fn peek_at(&mut self) -> Option<SimTime>;
     /// Number of live (non-cancelled, non-fired) events.
@@ -64,7 +71,7 @@ pub trait EventQueue<W> {
 }
 
 /// Hierarchical timing wheel. See the module docs for the invariants.
-pub struct TimingWheel<W> {
+pub struct TimingWheel<E> {
     /// Cursor: all live events have `at >= now` except entries parked in
     /// `ready` (which may briefly trail `now` after a peek advanced the
     /// cursor and the engine then scheduled an earlier event).
@@ -78,19 +85,19 @@ pub struct TimingWheel<W> {
     occupied: [u64; LEVELS],
     /// Far-future events, min-heap by `(at, seq)`.
     overflow: BinaryHeap<Reverse<Pair>>,
-    /// seq → closure. Cancel removes from here; pairs whose seq is gone
+    /// seq → payload. Cancel removes from here; pairs whose seq is gone
     /// are tombstones, collected when their slot drains.
-    store: FxHashMap<u64, EventFn<W>>,
+    store: FxHashMap<u64, E>,
 }
 
-impl<W> Default for TimingWheel<W> {
+impl<E> Default for TimingWheel<E> {
     fn default() -> Self {
         TimingWheel::new()
     }
 }
 
-impl<W> TimingWheel<W> {
-    pub fn new() -> TimingWheel<W> {
+impl<E> TimingWheel<E> {
+    pub fn new() -> TimingWheel<E> {
         TimingWheel {
             now: 0,
             ready: VecDeque::new(),
@@ -233,9 +240,9 @@ impl<W> TimingWheel<W> {
     }
 }
 
-impl<W> EventQueue<W> for TimingWheel<W> {
-    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>) {
-        self.store.insert(seq, f);
+impl<E> EventQueue<E> for TimingWheel<E> {
+    fn insert(&mut self, at: SimTime, seq: u64, ev: E) {
+        self.store.insert(seq, ev);
         self.push_pair((at.micros(), seq));
     }
 
@@ -243,11 +250,11 @@ impl<W> EventQueue<W> for TimingWheel<W> {
         self.store.remove(&seq).is_some()
     }
 
-    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)> {
+    fn pop(&mut self) -> Option<(SimTime, u64, E)> {
         loop {
             while let Some((at, seq)) = self.ready.pop_front() {
-                if let Some(f) = self.store.remove(&seq) {
-                    return Some((SimTime(at), seq, f));
+                if let Some(ev) = self.store.remove(&seq) {
+                    return Some((SimTime(at), seq, ev));
                 }
             }
             if !self.refill() {
@@ -278,19 +285,19 @@ impl<W> EventQueue<W> for TimingWheel<W> {
 /// The pre-wheel scheduler: a global binary min-heap over `(at, seq)`.
 /// Kept as the executable specification for the property tests and the
 /// heap-vs-wheel bench comparison.
-pub struct BinaryHeapQueue<W> {
+pub struct BinaryHeapQueue<E> {
     heap: BinaryHeap<Reverse<Pair>>,
-    store: FxHashMap<u64, EventFn<W>>,
+    store: FxHashMap<u64, E>,
 }
 
-impl<W> Default for BinaryHeapQueue<W> {
+impl<E> Default for BinaryHeapQueue<E> {
     fn default() -> Self {
         BinaryHeapQueue::new()
     }
 }
 
-impl<W> BinaryHeapQueue<W> {
-    pub fn new() -> BinaryHeapQueue<W> {
+impl<E> BinaryHeapQueue<E> {
+    pub fn new() -> BinaryHeapQueue<E> {
         BinaryHeapQueue {
             heap: BinaryHeap::new(),
             store: FxHashMap::default(),
@@ -298,9 +305,9 @@ impl<W> BinaryHeapQueue<W> {
     }
 }
 
-impl<W> EventQueue<W> for BinaryHeapQueue<W> {
-    fn insert(&mut self, at: SimTime, seq: u64, f: EventFn<W>) {
-        self.store.insert(seq, f);
+impl<E> EventQueue<E> for BinaryHeapQueue<E> {
+    fn insert(&mut self, at: SimTime, seq: u64, ev: E) {
+        self.store.insert(seq, ev);
         self.heap.push(Reverse((at.micros(), seq)));
     }
 
@@ -308,10 +315,10 @@ impl<W> EventQueue<W> for BinaryHeapQueue<W> {
         self.store.remove(&seq).is_some()
     }
 
-    fn pop(&mut self) -> Option<(SimTime, u64, EventFn<W>)> {
+    fn pop(&mut self) -> Option<(SimTime, u64, E)> {
         while let Some(Reverse((at, seq))) = self.heap.pop() {
-            if let Some(f) = self.store.remove(&seq) {
-                return Some((SimTime(at), seq, f));
+            if let Some(ev) = self.store.remove(&seq) {
+                return Some((SimTime(at), seq, ev));
             }
         }
         None
@@ -336,15 +343,13 @@ impl<W> EventQueue<W> for BinaryHeapQueue<W> {
 mod tests {
     use super::*;
 
+    // Payloads are irrelevant to ordering; store the zero-sized `()`.
     type Q = TimingWheel<()>;
-    fn noop() -> EventFn<()> {
-        Box::new(|_, _| {})
-    }
 
     /// Drain a queue to the popped (at, seq) order.
-    fn drain<W, Q: EventQueue<W>>(q: &mut Q) -> Vec<(u64, u64)> {
+    fn drain<E, Q: EventQueue<E>>(q: &mut Q) -> Vec<(u64, u64)> {
         let mut out = Vec::new();
-        while let Some((at, seq, _f)) = q.pop() {
+        while let Some((at, seq, _ev)) = q.pop() {
             out.push((at.micros(), seq));
         }
         out
@@ -367,7 +372,7 @@ mod tests {
             123_456_789,
         ];
         for (i, &t) in times.iter().enumerate() {
-            q.insert(SimTime(t), i as u64, noop());
+            q.insert(SimTime(t), i as u64, ());
         }
         let got = drain(&mut q);
         let mut want: Vec<(u64, u64)> = times
@@ -383,7 +388,7 @@ mod tests {
     fn cancel_is_exact_and_tombstones_collect() {
         let mut q = Q::new();
         for i in 0..10u64 {
-            q.insert(SimTime(100 * i), i, noop());
+            q.insert(SimTime(100 * i), i, ());
         }
         assert!(q.cancel(3));
         assert!(!q.cancel(3), "double-cancel is a no-op");
@@ -404,12 +409,12 @@ mod tests {
     #[test]
     fn schedule_behind_a_peeked_cursor_still_fires_first() {
         let mut q = Q::new();
-        q.insert(SimTime(10_000), 0, noop());
+        q.insert(SimTime(10_000), 0, ());
         // Peek advances the internal cursor to 10_000.
         assert_eq!(q.peek_at(), Some(SimTime(10_000)));
         // A later schedule below the cursor (run_until semantics).
-        q.insert(SimTime(4_000), 1, noop());
-        q.insert(SimTime(7_000), 2, noop());
+        q.insert(SimTime(4_000), 1, ());
+        q.insert(SimTime(7_000), 2, ());
         assert_eq!(q.peek_at(), Some(SimTime(4_000)));
         assert_eq!(drain(&mut q), vec![(4_000, 1), (7_000, 2), (10_000, 0)]);
     }
@@ -419,7 +424,7 @@ mod tests {
         let mut q = Q::new();
         let mut seq = 0u64;
         let mut sched = |q: &mut Q, at: u64, seq: &mut u64| {
-            q.insert(SimTime(at), *seq, noop());
+            q.insert(SimTime(at), *seq, ());
             *seq += 1;
         };
         sched(&mut q, 50, &mut seq);
@@ -445,8 +450,8 @@ mod tests {
             (300, 5),
         ];
         for &(at, seq) in script {
-            wheel.insert(SimTime(at), seq, noop());
-            heap.insert(SimTime(at), seq, Box::new(|_, _| {}));
+            wheel.insert(SimTime(at), seq, ());
+            heap.insert(SimTime(at), seq, ());
         }
         wheel.cancel(5);
         heap.cancel(5);

@@ -179,8 +179,8 @@ mod tests {
                             _ => g.u64(1_000_000, 1u64 << 44),
                         };
                         let at = SimTime(now + delta);
-                        wheel.insert(at, seq, Box::new(|_, _| {}));
-                        heap.insert(at, seq, Box::new(|_, _| {}));
+                        wheel.insert(at, seq, ());
+                        heap.insert(at, seq, ());
                         scheduled.push(seq);
                         seq += 1;
                     }

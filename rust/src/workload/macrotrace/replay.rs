@@ -51,9 +51,10 @@ use crate::metrics::hist::LatencyHist;
 use crate::netsim::link::Site;
 use crate::obs::{SpanSink, Tracer, WindowSet};
 use crate::platform::endpoint::Endpoint;
-use crate::platform::exec::invoke;
+use crate::platform::exec::PlatformEvent;
 use crate::platform::function::{Arg, FunctionSpec, Op};
-use crate::platform::world::World;
+use crate::platform::symbols::FnId;
+use crate::platform::world::{PlatformSim, World};
 use crate::simcore::Sim;
 use crate::triggers::TriggerService;
 use crate::util::config::{Config, KeepAliveKind};
@@ -450,6 +451,10 @@ struct AppDeployment {
     /// NAME and collides across apps — aliasing two tenants onto one
     /// function would silently share their warm containers.
     names: Vec<Rc<str>>,
+    /// Interned id per row (same order as `names`): arrivals schedule as
+    /// inline [`PlatformEvent::Invoke`] variants — no per-arrival boxed
+    /// closure, no name hash at fire time.
+    fn_ids: Vec<FnId>,
 }
 
 /// Deploy one app's rows into `w` (chain detection + function specs +
@@ -561,6 +566,12 @@ fn deploy_and_warm(w: &mut World, app: &str, rows: &[TraceRow], cfg: &ReplayCfg)
             }
         }
     }
+    // Deploy interned every name; resolve the ids once so the arrival
+    // loop never hashes a name again.
+    let fn_ids: Vec<FnId> = names
+        .iter()
+        .map(|n| w.registry.symbols.lookup(n).expect("just deployed"))
+        .collect();
     AppDeployment {
         demoted: cfg.policy.chain() && chain.len() > 1 && !mirrored,
         chained,
@@ -568,6 +579,7 @@ fn deploy_and_warm(w: &mut World, app: &str, rows: &[TraceRow], cfg: &ReplayCfg)
         functions: rows.len() as u64,
         warm,
         names,
+        fn_ids,
     }
 }
 
@@ -576,7 +588,7 @@ fn deploy_and_warm(w: &mut World, app: &str, rows: &[TraceRow], cfg: &ReplayCfg)
 /// head receives external arrivals (successor counts mirror the head's
 /// and are produced by the chain itself).
 fn schedule_app_day(
-    sim: &mut Sim<World>,
+    sim: &mut PlatformSim,
     dep: &AppDeployment,
     rows: &[TraceRow],
     skip_minutes: usize,
@@ -592,7 +604,7 @@ fn schedule_app_day(
         if !driven {
             continue;
         }
-        let name = Rc::clone(&dep.names[i]);
+        let fid = dep.fn_ids[i];
         for (m, &c) in row.counts.iter().enumerate().skip(skip_minutes) {
             if c == 0 {
                 continue;
@@ -601,10 +613,12 @@ fn schedule_app_day(
             for j in 0..c as u64 {
                 let off = ((j as f64 + jitter.f64()) / c as f64
                     * MINUTE.micros() as f64) as u64;
-                let f = Rc::clone(&name);
-                sim.schedule_at(SimTime(base_us + off), move |sim, w| {
-                    invoke(sim, w, &f);
-                });
+                // Inline event: a 1M-arrival day used to box 1M closures
+                // (each owning an `Rc<str>` clone) before the run began.
+                sim.schedule_event_at(
+                    SimTime(base_us + off),
+                    PlatformEvent::Invoke { function: fid },
+                );
             }
         }
     }
@@ -648,7 +662,7 @@ struct DaySnap {
 }
 
 impl DaySnap {
-    fn capture(sim: &Sim<World>, w: &mut World, apps: &[String]) -> DaySnap {
+    fn capture(sim: &PlatformSim, w: &mut World, apps: &[String]) -> DaySnap {
         w.seal_resident_accounting(sim.now());
         let (mut net, mut saved) = (0.0f64, 0.0f64);
         for app in apps {
@@ -706,6 +720,11 @@ pub fn replay_pool_days(
     let mut config = cfg.base.clone();
     config.seed = world_seed;
     let mut w = World::new(config);
+    // Replay is the one driver that churns through millions of
+    // invocations per world: recycle slab slots so peak memory tracks
+    // in-flight contexts, not cumulative arrivals. Must be set before
+    // the first insert (the slab pins the mode at first use).
+    w.invocations.set_recycle(true);
     w.auto_hist_predict = cfg.policy.histogram() && w.config.freshen.enabled;
     if cfg.trace_spans {
         w.obs = Tracer::enabled(cfg.span_cap, cfg.span_filter.clone());
@@ -726,7 +745,7 @@ pub fn replay_pool_days(
         jitters.push(Rng::new(mix64(mix64(cfg.seed, app_hash(app)), JITTER_STREAM)));
     }
 
-    let mut sim: Sim<World> = Sim::new();
+    let mut sim: PlatformSim = Sim::new();
     sim.max_events = 2_000_000_000;
 
     let app_names: Rc<Vec<String>> = Rc::new(day0.iter().map(|(a, _)| a.clone()).collect());
@@ -819,7 +838,7 @@ pub fn replay_pool_days(
         } else {
             format!("pool-{world_seed:016x}")
         };
-        let (events, dropped) = w.obs.drain();
+        let (events, dropped) = w.obs.drain(&w.registry.symbols);
         out[0].spans.push_group(group, events, dropped);
     }
     if w.metrics.windows.enabled {

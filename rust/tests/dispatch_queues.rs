@@ -24,6 +24,8 @@ use freshen_rs::netsim::link::Site;
 use freshen_rs::platform::dispatch::{self, MemoryAware, Waiting, MEMAWARE_AGING_BOUND};
 use freshen_rs::platform::endpoint::Endpoint;
 use freshen_rs::platform::exec::{invoke, start_freshen};
+use freshen_rs::platform::slab::InvocationSlab;
+use freshen_rs::platform::symbols::Symbols;
 use freshen_rs::platform::world::{PlatformSim, World};
 use freshen_rs::simcore::Sim;
 use freshen_rs::util::config::{Config, KeepAliveKind, QueueKind};
@@ -104,18 +106,32 @@ fn fifo_completes_in_arrival_order_and_legacy_in_hash_map_order() {
     // particular hash layout.
     let names = ["qa", "qb", "qc", "qd", "qe"];
     let pop_order = |insertion: &[String]| -> Vec<String> {
+        // Mint real slab handles and intern through a fresh symbol table:
+        // legacy keys on interned `Rc<str>` names whose Fx hash equals the
+        // `String` hash, so the drain order here matches the real run's.
+        let mut syms = Symbols::new();
+        let mut slab: InvocationSlab<()> = InvocationSlab::new();
         let mut d = dispatch::build(QueueKind::LegacyOneShot, MEMAWARE_AGING_BOUND);
+        let mut ids = Vec::new();
         for (i, f) in insertion.iter().enumerate() {
-            d.enqueue(Waiting {
-                inv: i,
-                function: f.clone(),
-                charge_mb: 256,
-                enqueued_at: SimTime::ZERO,
-            });
+            let function = syms.intern(f);
+            let inv = slab.insert_with(|_, _| ());
+            ids.push(inv);
+            d.enqueue(
+                Waiting {
+                    inv,
+                    seq: i as u64,
+                    function,
+                    charge_mb: 256,
+                    enqueued_at: SimTime::ZERO,
+                },
+                &syms,
+            );
         }
         let mut order = Vec::new();
         while let Some(inv) = d.next_candidate(SimTime::ZERO, &[]) {
-            order.push(insertion[inv].clone());
+            let i = ids.iter().position(|&id| id == inv).expect("known handle");
+            order.push(insertion[i].clone());
         }
         order
     };

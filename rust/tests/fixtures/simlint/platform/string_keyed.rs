@@ -1,0 +1,7 @@
+//! Fixture for D007: a String-keyed map in an executor hot path.
+
+use crate::util::fxhash::FxHashMap;
+
+pub struct WarmPool {
+    pub by_function: FxHashMap<String, Vec<u64>>,
+}

@@ -1,0 +1,152 @@
+//! Hot-path overhaul regression tests: interned function ids, the
+//! invocation slab, and enum-coded platform events.
+//!
+//! Three contracts from the hot-path PR:
+//!
+//! - **Symbol round-trip**: deploying interns each function name; `lookup`
+//!   → `resolve` returns the same bytes, interning is idempotent (the same
+//!   `FnId` comes back), and distinct names get distinct ids.
+//! - **Slab bookkeeping**: the invocation slab's arrival counter matches
+//!   the metrics hub, and the default (non-recycling) mode keeps one slot
+//!   per arrival so handles minted mid-run can never dangle.
+//! - **Enum/closure equivalence**: the enum-coded platform events must be
+//!   behaviourally identical to the legacy boxed-closure encoding.
+//!   `Sim::force_closures` routes every enum event through the
+//!   `from_closure` escape hatch at schedule time, so the two runs differ
+//!   ONLY in event representation — the full record stream (per-invocation
+//!   timestamps included) must not move by a microsecond.
+
+use freshen_rs::netsim::link::Site;
+use freshen_rs::platform::endpoint::Endpoint;
+use freshen_rs::platform::exec::{invoke, start_freshen};
+use freshen_rs::platform::function::{FunctionSpec, Op};
+use freshen_rs::platform::world::{PlatformSim, World};
+use freshen_rs::simcore::Sim;
+use freshen_rs::triggers::TriggerService;
+use freshen_rs::util::config::Config;
+use freshen_rs::util::time::{SimDuration, SimTime};
+
+fn world_with_store() -> World {
+    let mut cfg = Config::default();
+    cfg.seed = 42;
+    let mut w = World::new(cfg);
+    let mut ep = Endpoint::new("store", Site::Remote);
+    ep.store.put("ID1", 5e6, SimTime::ZERO);
+    w.add_endpoint(ep);
+    w
+}
+
+fn lambda(id: &str) -> FunctionSpec {
+    FunctionSpec::paper_lambda(id, "app", "store", SimDuration::from_millis(20))
+}
+
+#[test]
+fn deploy_interns_names_and_round_trips() {
+    let mut w = world_with_store();
+    for name in ["alpha", "beta", "gamma"] {
+        w.deploy(lambda(name));
+    }
+    for name in ["alpha", "beta", "gamma"] {
+        let id = w.registry.symbols.lookup(name).expect("deployed name is interned");
+        assert_eq!(w.registry.symbols.resolve(id), name, "resolve returns the bytes back");
+        assert_eq!(w.registry.symbols.intern(name), id, "re-interning is idempotent");
+    }
+    let a = w.registry.symbols.lookup("alpha").unwrap();
+    let b = w.registry.symbols.lookup("beta").unwrap();
+    assert_ne!(a, b, "distinct names get distinct ids");
+    assert!(w.registry.symbols.lookup("never-deployed").is_none());
+}
+
+#[test]
+fn slab_arrival_count_matches_metrics_without_recycling() {
+    let mut w = world_with_store();
+    w.deploy(lambda("f"));
+    let mut sim: PlatformSim = Sim::new();
+    sim.max_events = 10_000_000;
+    for i in 0..10u64 {
+        sim.schedule(SimDuration::from_secs(i * 3), |sim, w| {
+            invoke(sim, w, "f");
+        });
+    }
+    sim.run(&mut w);
+    assert_eq!(w.metrics.count(), 10, "all arrivals completed");
+    assert_eq!(w.invocations.total(), 10, "one slab insert per arrival");
+    // Interactive runs keep recycling OFF: every context gets a fresh
+    // slot, so a handle minted mid-run stays valid for the world's life
+    // (replay opts in to recycling explicitly, where residency matters).
+    assert_eq!(w.invocations.slots_allocated(), 10);
+    assert_eq!(w.invocations.live(), 10);
+    assert_eq!(
+        w.invocations.iter().filter(|c| c.done).count(),
+        w.metrics.count(),
+        "slab completion flags agree with the metrics hub"
+    );
+}
+
+/// Drive a chained workload (cold starts, warm hits, chain predictions,
+/// a developer freshen) once with enum-coded events and once with every
+/// event forced through the closure escape hatch.
+fn run_workload(force_closures: bool) -> World {
+    let mut w = world_with_store();
+    let mut head = lambda("head");
+    head.ops.push(Op::InvokeNext {
+        function: "tail".into(),
+        trigger: TriggerService::Direct,
+    });
+    w.deploy(head);
+    w.deploy(lambda("tail"));
+    let mut sim: PlatformSim = Sim::new();
+    sim.max_events = 10_000_000;
+    sim.force_closures = force_closures;
+    for i in 0..12u64 {
+        sim.schedule(SimDuration::from_secs(2 + i * 7), |sim, w| {
+            invoke(sim, w, "head");
+        });
+    }
+    sim.schedule(SimDuration::from_secs(40), |sim, w| {
+        start_freshen(sim, w, "tail", None);
+    });
+    sim.run(&mut w);
+    w
+}
+
+#[test]
+fn enum_events_are_equivalent_to_closure_events() {
+    let fast = run_workload(false);
+    let legacy = run_workload(true);
+    // The workload actually exercises the interesting event shapes.
+    assert!(fast.metrics.count() >= 24, "head + chained tail both ran");
+    assert!(fast.metrics.cold_starts >= 2);
+    assert!(fast.metrics.freshens_started >= 1, "freshen events fired");
+    // Counters match exactly...
+    assert_eq!(fast.metrics.count(), legacy.metrics.count());
+    assert_eq!(fast.metrics.cold_starts, legacy.metrics.cold_starts);
+    assert_eq!(fast.metrics.warm_starts, legacy.metrics.warm_starts);
+    assert_eq!(fast.metrics.freshens_started, legacy.metrics.freshens_started);
+    assert_eq!(fast.metrics.freshens_completed, legacy.metrics.freshens_completed);
+    assert_eq!(fast.metrics.freshens_wasted, legacy.metrics.freshens_wasted);
+    assert_eq!(fast.metrics.evictions, legacy.metrics.evictions);
+    // ...and so does the full per-invocation record stream, timestamps
+    // included: the two encodings schedule at identical (time, seq) keys.
+    let key = |w: &World| {
+        w.metrics
+            .records()
+            .iter()
+            .map(|r| {
+                (
+                    r.function.clone(),
+                    r.enqueued_at,
+                    r.started_at,
+                    r.finished_at,
+                    r.start_kind,
+                    r.freshen_hits,
+                    r.freshen_misses,
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(key(&fast), key(&legacy), "record streams diverged");
+    // Slab bookkeeping is representation-independent too.
+    assert_eq!(fast.invocations.total(), legacy.invocations.total());
+    assert_eq!(fast.ledger.account("app").invocations, legacy.ledger.account("app").invocations);
+}

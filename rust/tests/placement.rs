@@ -139,6 +139,7 @@ fn warm_affinity_beats_random_on_warm_host_locality_under_contention() {
         config.invoker_memory_mb = Some(1024);
         config.placement = kind;
         let mut w = World::new(config);
+        let hot_id = w.registry.symbols.intern("hot");
         let now = SimTime::ZERO;
         let mut hits = 0usize;
         for _ in 0..16 {
@@ -148,14 +149,14 @@ fn warm_affinity_beats_random_on_warm_host_locality_under_contention() {
                 .map(|inv| {
                     inv.containers
                         .iter()
-                        .any(|&cid| w.containers[cid].function.as_deref() == Some("hot"))
+                        .any(|&cid| w.containers[cid].function == Some(hot_id))
                 })
                 .collect();
-            let cid = w.acquire_slot_for(now, 32, "hot").expect("cluster has room");
+            let cid = w.acquire_slot_for(now, 32, hot_id).expect("cluster has room");
             if hot[w.containers[cid].invoker] {
                 hits += 1;
             }
-            w.containers[cid].begin_cold_start("hot", now);
+            w.containers[cid].begin_cold_start(hot_id, now);
         }
         hits
     };

@@ -10,7 +10,7 @@ use freshen_rs::netsim::tcp::Connection;
 use freshen_rs::platform::endpoint::Endpoint;
 use freshen_rs::platform::exec::invoke;
 use freshen_rs::platform::function::FunctionSpec;
-use freshen_rs::platform::world::World;
+use freshen_rs::platform::world::{PlatformSim, World};
 use freshen_rs::simcore::Sim;
 use freshen_rs::testkit::prop::forall;
 use freshen_rs::util::config::{
@@ -196,7 +196,7 @@ fn prop_platform_conserves_invocations() {
                 SimDuration::from_millis(g.u64(1, 50)),
             ));
         }
-        let mut sim: Sim<World> = Sim::new();
+        let mut sim: PlatformSim = Sim::new();
         sim.max_events = 20_000_000;
         let n = g.usize(1, 30);
         for _ in 0..n {
@@ -295,7 +295,7 @@ fn prop_conservation_across_queue_keepalive_and_accounting() {
                         spec.memory_mb = memories[f];
                         w.deploy(spec);
                     }
-                    let mut sim: Sim<World> = Sim::new();
+                    let mut sim: PlatformSim = Sim::new();
                     sim.max_events = 20_000_000;
                     for &(f, at) in &arrivals {
                         let name = format!("f{f}");
@@ -419,7 +419,7 @@ fn prop_conservation_across_placement_and_host_classes() {
                     }
                     w.deploy(spec);
                 }
-                let mut sim: Sim<World> = Sim::new();
+                let mut sim: PlatformSim = Sim::new();
                 sim.max_events = 20_000_000;
                 for &(f, at) in &arrivals {
                     let name = format!("f{f}");

@@ -23,7 +23,7 @@ fn fixture_root() -> &'static Path {
 #[test]
 fn fixture_corpus_produces_expected_findings() {
     let (findings, files) = lint_tree(fixture_root()).expect("fixture corpus lints");
-    assert_eq!(files, 11, "fixture corpus file count");
+    assert_eq!(files, 12, "fixture corpus file count");
 
     let count = |rule: &str| findings.iter().filter(|f| f.rule == rule).count();
     assert_eq!(count("D001"), 5, "{findings:?}");
@@ -32,9 +32,10 @@ fn fixture_corpus_produces_expected_findings() {
     assert_eq!(count("D004"), 1, "{findings:?}");
     assert_eq!(count("D005"), 1, "{findings:?}");
     assert_eq!(count("D006"), 1, "{findings:?}");
+    assert_eq!(count("D007"), 1, "{findings:?}");
     assert_eq!(count("S001"), 1, "{findings:?}");
     assert_eq!(count("S002"), 1, "{findings:?}");
-    assert_eq!(findings.len(), 15, "no unexpected findings");
+    assert_eq!(findings.len(), 16, "no unexpected findings");
 
     // The obs/ fixture pins tracing inside the perimeter: its wall-clock
     // read is a finding, not an allowlisted path.
@@ -134,6 +135,24 @@ fn d006_thread_fanout_outside_exempt_paths() {
 }
 
 #[test]
+fn d007_string_keys_in_hot_paths_only() {
+    let src = "struct Pool { warm: FxHashMap<String, u64> }";
+    assert_eq!(lint_source("platform/keepalive.rs", src).len(), 1);
+    assert_eq!(lint_source("simcore/waitlist.rs", src).len(), 1);
+    // Deploy/ingest boundaries and non-hot subsystems keep String keys.
+    assert!(lint_source("platform/datastore.rs", src).is_empty());
+    assert!(lint_source("platform/endpoint.rs", src).is_empty());
+    assert!(lint_source("predict/hist.rs", src).is_empty());
+    assert!(lint_source("cli/mod.rs", src).is_empty());
+    // FnId-keyed maps are the sanctioned replacement.
+    assert!(lint_source(
+        "platform/keepalive.rs",
+        "struct Pool { warm: FxHashMap<FnId, u64> }"
+    )
+    .is_empty());
+}
+
+#[test]
 fn suppression_covers_same_and_next_line_only() {
     let hit_then_clean = "\
 // simlint: allow(D001, pinned digest exercises this map)
@@ -170,7 +189,7 @@ fn catalog_is_complete_and_ordered() {
     let ids: Vec<&str> = rules::CATALOG.iter().map(|r| r.id).collect();
     assert_eq!(
         ids,
-        vec!["D001", "D002", "D003", "D004", "D005", "D006", "S001", "S002"]
+        vec!["D001", "D002", "D003", "D004", "D005", "D006", "D007", "S001", "S002"]
     );
     for r in rules::CATALOG {
         assert!(!r.summary.is_empty() && !r.hint.is_empty(), "{} lacks docs", r.id);
