@@ -229,6 +229,38 @@ fn main() {
         );
     }
 
+    // --- snapshot/restore mitigation on the shared pool ----------------
+    // Demote-on-idle-expiry instead of evict: vanilla demand-paged restore
+    // vs the REAP-style prefetch variant. Pins what the third lifecycle
+    // state costs at replay speed and that restores actually engage.
+    for prefetch in [false, true] {
+        let mut snapd = cfg.clone();
+        snapd.pool = PoolMode::Shared;
+        snapd.base.memory_accounting =
+            freshen_rs::util::config::MemoryAccounting::FunctionMb;
+        snapd.base.snapshot.enabled = true;
+        snapd.base.snapshot.prefetch = prefetch;
+        let (out, elapsed) = time_once(|| {
+            replay_sharded(&src, 4, &snapd, &SweepRunner::new(4))
+                .expect("snapshot replay")
+        });
+        let m = &out.metrics;
+        let slot = if prefetch { "replay/snapshot-prefetch" } else { "replay/snapshot-mitigation" };
+        snap.rate(slot, m.invocations, elapsed);
+        println!(
+            "replay snapped (4 shards, prefetch {:>5}): {} invocations, {} snapshots, \
+             {} restored in {elapsed:?}  (cold {:.2}%, restore {:.1} ms mean, \
+             peak {} MB)",
+            prefetch,
+            m.invocations,
+            m.snapshots,
+            m.restored_starts,
+            100.0 * m.cold_start_rate(),
+            m.mean_restore_ms(),
+            m.peak_resident_mb
+        );
+    }
+
     if let Some(path) = snap.write_if_requested().expect("snapshot write") {
         println!("snapshot written to {}", path.display());
     }

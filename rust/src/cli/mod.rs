@@ -26,7 +26,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::experiments::azure_macro::{self, AzureMacroCfg, Variant};
+use crate::experiments::azure_macro::{self, AzureMacroCfg, Mitigation, Variant};
 use crate::experiments::harness::parse_seed_spec;
 use crate::experiments::{ablations, e2e, fig2, fig4, fig5_6, table1, SweepRunner};
 use crate::platform::exec::invoke;
@@ -60,6 +60,12 @@ USAGE:
                     [--placement legacy,random,rr,affinity,constrained]
                     #   placement-strategy ablation axis: which invoker
                     #   host a cold start lands on (legacy = least-loaded)
+                    [--mitigation keepalive,snapshot,freshen,hybrid]
+                    #   cold-start mitigation ablation axis at a fixed
+                    #   memory budget: plain keep-alive, snapshot/restore
+                    #   (idle expiry parks a discounted snapshot; restore
+                    #   = base + page-in), predictive freshen, or snapshot
+                    #   + freshen-on-restore; defaults --variants to both
                     [--host-classes name:count:mb:coldx1000:site,...]
                     #   heterogeneous hosts, e.g. cloud:4:4096:1000:local,
                     #   edge:4:1024:1600:edge — cold starts scale by
@@ -617,6 +623,28 @@ fn azure_macro_cmd(opts: &Opts) -> Result<()> {
             bail!("--variants must name at least one variant");
         }
     }
+    if let Some(list) = opts.flags.get("mitigation") {
+        let mits = list
+            .split(',')
+            .map(|m| {
+                Mitigation::parse(m.trim()).with_context(|| {
+                    format!(
+                        "unknown mitigation '{m}' (use keepalive|snapshot|freshen|hybrid)"
+                    )
+                })
+            })
+            .collect::<Result<Vec<Mitigation>>>()?;
+        if mits.is_empty() {
+            bail!("--mitigation must name at least one mitigation");
+        }
+        cfg.mitigations = Some(mits);
+        // A mitigation sweep compares mechanisms, not predictor variants:
+        // default to the full system (the freshen/hybrid cells need its
+        // predictors) unless --variants widens the grid explicitly.
+        if !opts.flags.contains_key("variants") {
+            cfg.variants = vec![Variant::Both];
+        }
+    }
     let seeds: Vec<u64> = match opts.flags.get("seeds") {
         Some(spec) => parse_seed_spec(spec)
             .with_context(|| format!("bad --seeds '{spec}' (forms: N, a..b, a..=b)"))?,
@@ -936,6 +964,43 @@ mod tests {
             "2".into(),
         ];
         assert!(run(&csv_days).is_err(), "--days on a CSV source errors");
+    }
+
+    #[test]
+    fn azure_macro_mitigation_flag() {
+        let base = |extra: &[&str]| -> Vec<String> {
+            let mut v: Vec<String> = vec![
+                "azure-macro".into(),
+                "--apps".into(),
+                "10".into(),
+                "--minutes".into(),
+                "6".into(),
+                "--shards".into(),
+                "2".into(),
+                "--warmup-min".into(),
+                "2".into(),
+            ];
+            v.extend(extra.iter().map(|s| s.to_string()));
+            v
+        };
+        assert!(
+            run(&base(&[
+                "--pool",
+                "shared",
+                "--mitigation",
+                "keepalive,snapshot,freshen,hybrid",
+            ]))
+            .is_ok(),
+            "mitigation ablation must run (defaulting --variants to both)"
+        );
+        assert!(
+            run(&base(&["--mitigation", "snapshot", "--variants", "baseline"])).is_ok(),
+            "explicit --variants composes with the mitigation axis"
+        );
+        assert!(
+            run(&base(&["--mitigation", "bogus"])).is_err(),
+            "bad mitigation errors"
+        );
     }
 
     #[test]

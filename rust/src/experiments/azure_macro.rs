@@ -17,7 +17,12 @@
 //! - **placement strategy** (`--placement legacy,random,rr,affinity,constrained`)
 //!   — which [`Placement`](crate::platform::placement::Placement) strategy
 //!   chooses the invoker host a cold start lands on, optionally over
-//!   heterogeneous `--host-classes` (cloud vs edge).
+//!   heterogeneous `--host-classes` (cloud vs edge);
+//! - **cold-start mitigation** (`--mitigation keepalive,snapshot,freshen,hybrid`)
+//!   — which mechanism absorbs cold starts at a fixed memory budget:
+//!   plain keep-alive, snapshot/restore (idle expiry parks a discounted
+//!   snapshot that later restores at base + page-in cost), predictive
+//!   freshen, or snapshot + freshen-on-restore combined.
 //!
 //! Reports the metrics the literature compares on — cold-start rate,
 //! p50/p99 end-to-end latency, freshen hit rate, wasted-freshen fraction
@@ -115,6 +120,55 @@ impl Variant {
     }
 }
 
+/// One cold-start mitigation strategy — the macro benchmark's fifth
+/// ablation axis. Each cell fixes the snapshot/freshen switches; the
+/// variant still chooses the predictor policy for freshen-using cells.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mitigation {
+    /// Plain keep-alive: freshen off, snapshot off (the pure-eviction
+    /// baseline every other mitigation is compared against).
+    Keepalive,
+    /// Snapshot/restore: idle expiry demotes the container to a parked
+    /// snapshot at a discounted memory charge; the next arrival restores
+    /// it at base + page-in cost instead of cold-starting.
+    Snapshot,
+    /// Predictive freshen (the paper's system), snapshot off.
+    Freshen,
+    /// Snapshot/restore plus a freshen run launched on every restore
+    /// (`snapshot.freshen_on_restore`), with the variant's predictors.
+    Hybrid,
+}
+
+impl Mitigation {
+    pub fn all() -> [Mitigation; 4] {
+        [
+            Mitigation::Keepalive,
+            Mitigation::Snapshot,
+            Mitigation::Freshen,
+            Mitigation::Hybrid,
+        ]
+    }
+
+    pub fn parse(s: &str) -> Option<Mitigation> {
+        match s {
+            "keepalive" | "keep-alive" | "ka" => Some(Mitigation::Keepalive),
+            "snapshot" | "snap" => Some(Mitigation::Snapshot),
+            "freshen" => Some(Mitigation::Freshen),
+            "hybrid" => Some(Mitigation::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mitigation::Keepalive => "keepalive",
+            Mitigation::Snapshot => "snapshot",
+            Mitigation::Freshen => "freshen",
+            Mitigation::Hybrid => "hybrid",
+        }
+    }
+}
+
 /// Benchmark configuration.
 #[derive(Debug, Clone)]
 pub struct AzureMacroCfg {
@@ -161,6 +215,10 @@ pub struct AzureMacroCfg {
     /// Override the `MemoryAware` queue anti-starvation aging bound,
     /// seconds (`Config::queue_aging_bound`; default 30 s).
     pub queue_aging_bound: Option<u64>,
+    /// Cold-start mitigations to ablate (`--mitigation`). `None` (the
+    /// default) is the legacy grid: no mitigation dimension, no label
+    /// segment, every historical digest byte-for-byte unchanged.
+    pub mitigations: Option<Vec<Mitigation>>,
 }
 
 impl AzureMacroCfg {
@@ -184,13 +242,15 @@ impl AzureMacroCfg {
             span_cap: crate::obs::DEFAULT_SPAN_CAP,
             fn_windows: false,
             queue_aging_bound: None,
+            mitigations: None,
         }
     }
 
-    /// The replay config for one `(placement, queue, policy, variant,
-    /// seed)` grid cell.
+    /// The replay config for one `(mitigation, placement, queue, policy,
+    /// variant, seed)` grid cell.
     fn cell_cfg(
         &self,
+        mitigation: Option<Mitigation>,
         variant: Variant,
         policy: KeepAliveKind,
         queue: QueueKind,
@@ -224,6 +284,27 @@ impl AzureMacroCfg {
         r.span_cap = self.span_cap;
         r.span_filter = self.span_filter.clone();
         r.fn_windows = self.fn_windows;
+        // The mitigation axis only flips the freshen/snapshot switches —
+        // the variant's predictor policy (and therefore the arrival
+        // stream, chains included) is untouched, so the four mitigations
+        // of a cell replay the identical workload at the identical
+        // memory budget.
+        if let Some(m) = mitigation {
+            match m {
+                Mitigation::Keepalive => {
+                    r.base.freshen.enabled = false;
+                }
+                Mitigation::Snapshot => {
+                    r.base.freshen.enabled = false;
+                    r.base.snapshot.enabled = true;
+                }
+                Mitigation::Freshen => {}
+                Mitigation::Hybrid => {
+                    r.base.snapshot.enabled = true;
+                    r.base.snapshot.freshen_on_restore = true;
+                }
+            }
+        }
         r
     }
 
@@ -236,6 +317,7 @@ impl AzureMacroCfg {
             || self.placements != vec![PlacementKind::LeastLoadedMb]
             || self.host_classes.is_some()
             || self.freshen_guard
+            || self.mitigations.is_some()
     }
 }
 
@@ -247,6 +329,8 @@ pub struct MacroRow {
     pub policy: KeepAliveKind,
     pub queue: QueueKind,
     pub placement: PlacementKind,
+    /// Cold-start mitigation for this cell; `None` on a legacy grid.
+    pub mitigation: Option<Mitigation>,
     /// Metrics merged across shards, seeds and days.
     pub metrics: MacroMetrics,
     /// Per-day metrics (length = `days`), merged across shards and seeds.
@@ -255,10 +339,17 @@ pub struct MacroRow {
 
 impl MacroRow {
     /// Row label: the variant, qualified by the policy / queue discipline
-    /// / placement strategy when those axes are in play. The placement
-    /// segment only appears on a placement grid, so every historical
-    /// `variant/policy/queue` label (and digest line) is unchanged.
-    fn label(&self, with_policy: bool, with_queue: bool, with_placement: bool) -> String {
+    /// / placement strategy / mitigation when those axes are in play. The
+    /// placement and mitigation segments only appear on grids that sweep
+    /// them, so every historical `variant/policy/queue` label (and digest
+    /// line) is unchanged.
+    fn label(
+        &self,
+        with_policy: bool,
+        with_queue: bool,
+        with_placement: bool,
+        with_mitigation: bool,
+    ) -> String {
         let mut s = self.variant.as_str().to_string();
         if with_policy {
             s.push('/');
@@ -272,6 +363,12 @@ impl MacroRow {
             s.push('/');
             s.push_str(self.placement.as_str());
         }
+        if with_mitigation {
+            if let Some(m) = self.mitigation {
+                s.push('/');
+                s.push_str(m.as_str());
+            }
+        }
         s
     }
 }
@@ -279,9 +376,10 @@ impl MacroRow {
 /// The merged benchmark result.
 #[derive(Debug, Clone)]
 pub struct AzureMacro {
-    /// Per-cell metrics (placement-major, then queue, then policy,
-    /// variants in request order within — the default single-placement
-    /// single-queue grid is policy-major, as before).
+    /// Per-cell metrics (mitigation-major, then placement, then queue,
+    /// then policy, variants in request order within — the default
+    /// single-mitigation single-placement single-queue grid is
+    /// policy-major, as before).
     pub rows: Vec<MacroRow>,
     pub shards: usize,
     pub seeds: Vec<u64>,
@@ -322,19 +420,27 @@ pub fn run_multi(
     assert!(!cfg.policies.is_empty(), "azure-macro needs at least one keep-alive policy");
     assert!(!cfg.queues.is_empty(), "azure-macro needs at least one queue discipline");
     assert!(!cfg.placements.is_empty(), "azure-macro needs at least one placement strategy");
+    if let Some(mits) = &cfg.mitigations {
+        assert!(!mits.is_empty(), "azure-macro needs at least one mitigation when the axis is swept");
+    }
     let days = cfg.days.max(1);
     if days > 1 && !matches!(cfg.source, TraceSource::Synth(_)) {
         bail!("--days needs the synthesizer (day-sliced CSVs are not ingestable yet)");
     }
     let shards = cfg.shards.max(1);
-    let cells: Vec<(PlacementKind, QueueKind, KeepAliveKind, Variant)> = cfg
-        .placements
+    let mits: Vec<Option<Mitigation>> = match &cfg.mitigations {
+        None => vec![None],
+        Some(ms) => ms.iter().map(|&m| Some(m)).collect(),
+    };
+    let cells: Vec<(Option<Mitigation>, PlacementKind, QueueKind, KeepAliveKind, Variant)> = mits
         .iter()
-        .flat_map(|&pl| {
-            cfg.queues.iter().flat_map(move |&q| {
-                cfg.policies
-                    .iter()
-                    .flat_map(move |&p| cfg.variants.iter().map(move |&v| (pl, q, p, v)))
+        .flat_map(|&m| {
+            cfg.placements.iter().flat_map(move |&pl| {
+                cfg.queues.iter().flat_map(move |&q| {
+                    cfg.policies
+                        .iter()
+                        .flat_map(move |&p| cfg.variants.iter().map(move |&v| (m, pl, q, p, v)))
+                })
             })
         })
         .collect();
@@ -377,9 +483,9 @@ pub fn run_multi(
         };
         let rows = apps.iter().map(|(_, r)| r.len() as u64).sum();
         let mut per_cell = vec![vec![MacroMetrics::default(); days]; cells.len()];
-        for (ci, &(placement, queue, policy, variant)) in cells.iter().enumerate() {
+        for (ci, &(mitigation, placement, queue, policy, variant)) in cells.iter().enumerate() {
             for &seed in seeds {
-                let rcfg = cfg.cell_cfg(variant, policy, queue, placement, seed);
+                let rcfg = cfg.cell_cfg(mitigation, variant, policy, queue, placement, seed);
                 let per_day: Vec<MacroMetrics> = if days > 1 {
                     match cfg.pool {
                         PoolMode::Shared => replay_pool_days(
@@ -422,11 +528,12 @@ pub fn run_multi(
 
     let mut rows_out: Vec<MacroRow> = cells
         .iter()
-        .map(|&(placement, queue, policy, variant)| MacroRow {
+        .map(|&(mitigation, placement, queue, policy, variant)| MacroRow {
             variant,
             policy,
             queue,
             placement,
+            mitigation,
             metrics: MacroMetrics::default(),
             per_day: vec![MacroMetrics::default(); days],
         })
@@ -481,6 +588,13 @@ impl AzureMacro {
         self.rows.iter().any(|r| r.placement != PlacementKind::LeastLoadedMb)
     }
 
+    /// Does the report label rows with their cold-start mitigation?
+    /// A legacy grid has `mitigation == None` on every row, so the label
+    /// segment (and the mitigation table) never appears there.
+    fn mitigation_axis(&self) -> bool {
+        self.rows.iter().any(|r| r.mitigation.is_some())
+    }
+
     /// Canonical fingerprint of the merged metrics (one line per cell,
     /// plus per-day lines on multi-day runs) — what the determinism
     /// regression tests compare byte-for-byte. Labels are fully
@@ -488,17 +602,24 @@ impl AzureMacro {
     /// placement grid).
     pub fn digest(&self) -> String {
         let with_placement = self.placement_axis();
+        let with_mitigation = self.mitigation_axis();
         let mut lines: Vec<String> = self
             .rows
             .iter()
-            .map(|r| format!("{}: {}", r.label(true, true, with_placement), r.metrics.digest()))
+            .map(|r| {
+                format!(
+                    "{}: {}",
+                    r.label(true, true, with_placement, with_mitigation),
+                    r.metrics.digest()
+                )
+            })
             .collect();
         if self.days > 1 {
             for r in &self.rows {
                 for (d, m) in r.per_day.iter().enumerate() {
                     lines.push(format!(
                         "{} day{}: {}",
-                        r.label(true, true, with_placement),
+                        r.label(true, true, with_placement, with_mitigation),
                         d,
                         m.digest()
                     ));
@@ -513,9 +634,15 @@ impl AzureMacro {
     /// [`crate::obs::export::export`].
     pub fn span_rows(&self) -> Vec<(String, &crate::obs::SpanSink)> {
         let with_placement = self.placement_axis();
+        let with_mitigation = self.mitigation_axis();
         self.rows
             .iter()
-            .map(|r| (r.label(true, true, with_placement), &r.metrics.spans))
+            .map(|r| {
+                (
+                    r.label(true, true, with_placement, with_mitigation),
+                    &r.metrics.spans,
+                )
+            })
             .collect()
     }
 
@@ -526,9 +653,16 @@ impl AzureMacro {
     /// tracing is on or off.
     pub fn span_digest(&self) -> String {
         let with_placement = self.placement_axis();
+        let with_mitigation = self.mitigation_axis();
         self.rows
             .iter()
-            .map(|r| format!("{}: {}", r.label(true, true, with_placement), r.metrics.span_digest()))
+            .map(|r| {
+                format!(
+                    "{}: {}",
+                    r.label(true, true, with_placement, with_mitigation),
+                    r.metrics.span_digest()
+                )
+            })
             .collect::<Vec<String>>()
             .join("\n")
     }
@@ -537,6 +671,7 @@ impl AzureMacro {
         let with_policy = self.policy_axis();
         let with_queue = self.queue_axis();
         let with_placement = self.placement_axis();
+        let with_mitigation = self.mitigation_axis();
         let first = &self.rows[0].metrics;
         println!(
             "\n== azure-macro: {} invocations / {} functions / {} apps per variant, \
@@ -560,7 +695,7 @@ impl AzureMacro {
             .map(|r| {
                 let m = &r.metrics;
                 vec![
-                    r.label(with_policy, with_queue, with_placement),
+                    r.label(with_policy, with_queue, with_placement, with_mitigation),
                     m.invocations.to_string(),
                     format!("{:.2}%", 100.0 * m.cold_start_rate()),
                     format!("{:.1}", m.p50_ms()),
@@ -592,7 +727,7 @@ impl AzureMacro {
                 .map(|r| {
                     let m = &r.metrics;
                     vec![
-                        r.label(with_policy, with_queue, with_placement),
+                        r.label(with_policy, with_queue, with_placement, with_mitigation),
                         m.evictions.to_string(),
                         m.evictions_idle.to_string(),
                         m.evictions_pressure.to_string(),
@@ -625,7 +760,7 @@ impl AzureMacro {
                 .map(|r| {
                     let m = &r.metrics;
                     vec![
-                        r.label(with_policy, with_queue, with_placement),
+                        r.label(with_policy, with_queue, with_placement, with_mitigation),
                         m.queued_total.to_string(),
                         m.queue_peak_depth.to_string(),
                         format!("{:.1}", m.queue_wait_s()),
@@ -648,6 +783,38 @@ impl AzureMacro {
                 &rows,
             );
         }
+        if with_mitigation {
+            // Mitigation extras: how many containers parked as snapshots,
+            // how much traffic restores served, and what the restores
+            // cost. Only printed on a mitigation grid, so legacy stdout
+            // stays byte-identical.
+            let rows: Vec<Vec<String>> = self
+                .rows
+                .iter()
+                .map(|r| {
+                    let m = &r.metrics;
+                    vec![
+                        r.label(with_policy, with_queue, with_placement, with_mitigation),
+                        m.snapshots.to_string(),
+                        m.restored_starts.to_string(),
+                        format!("{:.2}%", 100.0 * m.restored_start_rate()),
+                        format!("{:.1}", m.mean_restore_ms()),
+                        m.freshens_on_restore.to_string(),
+                    ]
+                })
+                .collect();
+            print_table(
+                &[
+                    "variant",
+                    "snapshots",
+                    "restored",
+                    "restore rate",
+                    "restore ms",
+                    "fr@restore",
+                ],
+                &rows,
+            );
+        }
         if self.windows {
             // Opt-in per-function telemetry windows (`--fn-windows`):
             // one table per cell, top functions by invocation volume.
@@ -660,7 +827,7 @@ impl AzureMacro {
                 }
                 println!(
                     "\n{} per-function windows ({} functions, {}s windows):",
-                    r.label(with_policy, with_queue, with_placement),
+                    r.label(with_policy, with_queue, with_placement, with_mitigation),
                     w.len(),
                     w.window_us / 1_000_000
                 );
@@ -713,7 +880,7 @@ impl AzureMacro {
                         )
                     })
                     .collect();
-                println!("{} per-day: {}", r.label(with_policy, with_queue, with_placement), per.join("; "));
+                println!("{} per-day: {}", r.label(with_policy, with_queue, with_placement, with_mitigation), per.join("; "));
             }
         }
         let demoted = self
@@ -740,12 +907,13 @@ impl AzureMacro {
                     && b.policy == r.policy
                     && b.queue == r.queue
                     && b.placement == r.placement
+                    && b.mitigation == r.mitigation
             }) else {
                 continue;
             };
             println!(
                 "{}: p50 speedup {:.2}x, cold starts {} -> {}",
-                r.label(with_policy, with_queue, with_placement),
+                r.label(with_policy, with_queue, with_placement, with_mitigation),
                 base.metrics.p50_ms() / r.metrics.p50_ms(),
                 base.metrics.cold_starts,
                 r.metrics.cold_starts
@@ -903,6 +1071,65 @@ mod tests {
         assert_eq!(a.digest(), b.digest(), "parallel-invariant at fixed shards");
         for row in &a.rows {
             assert!(row.metrics.invocations > 0);
+        }
+    }
+
+    #[test]
+    fn mitigation_parse_roundtrip() {
+        for m in Mitigation::all() {
+            assert_eq!(Mitigation::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Mitigation::parse("keep-alive"), Some(Mitigation::Keepalive));
+        assert_eq!(Mitigation::parse("snap"), Some(Mitigation::Snapshot));
+        assert_eq!(Mitigation::parse("bogus"), None);
+    }
+
+    #[test]
+    fn mitigation_axis_produces_mitigation_major_rows() {
+        let mut cfg = small_cfg();
+        cfg.variants = vec![Variant::Both];
+        cfg.pool = PoolMode::Shared;
+        cfg.mitigations = Some(Mitigation::all().to_vec());
+        assert!(cfg.contended());
+        let a = run_multi(&cfg, &[1], &SweepRunner::new(1)).unwrap();
+        let b = run_multi(&cfg, &[1], &SweepRunner::new(4)).unwrap();
+        assert_eq!(a.digest(), b.digest(), "parallel-invariant at fixed shards");
+        assert_eq!(a.rows.len(), 4);
+        assert!(a.mitigation_axis());
+        assert_eq!(a.rows[0].mitigation, Some(Mitigation::Keepalive));
+        assert_eq!(a.rows[1].mitigation, Some(Mitigation::Snapshot));
+        assert_eq!(a.rows[3].mitigation, Some(Mitigation::Hybrid));
+        // Labels (and digest lines) gain the trailing mitigation segment.
+        assert!(a.digest().contains("both/fixed/legacy/keepalive:"));
+        assert!(a.digest().contains("both/fixed/legacy/snapshot:"));
+        // Every mitigation replays the identical arrival volume (the axis
+        // flips only the freshen/snapshot switches, never the workload),
+        // and the three start kinds partition completions everywhere.
+        for r in &a.rows {
+            let m = &r.metrics;
+            assert_eq!(m.invocations, a.rows[0].metrics.invocations);
+            assert_eq!(
+                m.cold_starts + m.warm_starts + m.restored_starts,
+                m.invocations
+            );
+        }
+        let ka = &a.rows[0].metrics;
+        let snap = &a.rows[1].metrics;
+        let fresh = &a.rows[2].metrics;
+        assert_eq!(ka.snapshots, 0, "keepalive cell never snapshots");
+        assert_eq!(ka.restored_starts, 0);
+        assert_eq!(ka.freshens_started, 0, "keepalive cell forces freshen off");
+        assert_eq!(fresh.snapshots, 0, "freshen cell never snapshots");
+        assert!(fresh.freshens_started > 0, "freshen cell keeps the variant's predictors");
+        assert!(snap.snapshots > 0, "idle expiry demotes instead of evicting");
+        assert_eq!(snap.freshens_started, 0, "snapshot cell forces freshen off");
+        for line in a.digest().lines() {
+            if line.starts_with("both/fixed/legacy/snapshot:") {
+                assert!(line.contains(" sn="), "snapshot cell digest carries the suffix");
+            }
+            if line.starts_with("both/fixed/legacy/keepalive:") {
+                assert!(!line.contains(" sn="), "keepalive cell keeps the legacy digest shape");
+            }
         }
     }
 

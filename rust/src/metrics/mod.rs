@@ -17,6 +17,11 @@ use crate::util::time::{SimDuration, SimTime};
 pub enum StartKind {
     Cold,
     Warm,
+    /// Served by restoring a snapshotted container: cheaper than a cold
+    /// start (base + working-set page-in instead of provision + `init`),
+    /// but not a warm hit. Conservation partitions completions as
+    /// `cold + warm + restored`.
+    Restored,
 }
 
 /// Why a container was evicted (drives the per-cause counters).
@@ -63,6 +68,18 @@ pub struct MetricsHub {
     pub freshens_wasted: u64, // predicted invocation never came
     pub cold_starts: u64,
     pub warm_starts: u64,
+    /// Invocations served by restoring a snapshot (see
+    /// [`StartKind::Restored`]). Zero unless `Config::snapshot.enabled`.
+    pub restored_starts: u64,
+    /// Warm idle containers demoted to the snapshotted state instead of
+    /// being killed (the keep-alive policy's evict-to-snapshot verdict).
+    pub snapshots_created: u64,
+    /// Total restore latency paid, µs (base + page-in, integer-exact) —
+    /// `restored_starts` restores contributed.
+    pub restore_us: u64,
+    /// Freshen runs launched on freshly restored containers (the hybrid
+    /// mitigation's re-warm pass).
+    pub freshens_on_restore: u64,
     pub evictions: u64,
     /// Evictions by cause: the keep-alive policy retired an idle
     /// container, vs. memory pressure reclaimed one to admit a cold start.
@@ -100,6 +117,12 @@ pub struct MetricsHub {
     /// their memory charge (queueing them would strand them forever).
     /// Conservation: scheduled == completed + dropped.
     pub dropped_infeasible: u64,
+    /// Times `World::note_resident_delta` clamped a negative delta that
+    /// would have underflowed `resident_mb`. Always zero in a correctly
+    /// paired charge/release stream (asserted by the accounting debug
+    /// checks); nonzero flags a mis-paired release the release build
+    /// would previously have wrapped silently.
+    pub accounting_clamps: u64,
     /// Opt-in rolling per-function telemetry windows (`obs/window.rs`):
     /// disabled by default so the hot path pays one bool test; replays
     /// turn it on via `ReplayCfg::fn_windows` / `--fn-windows`.
@@ -115,6 +138,7 @@ impl MetricsHub {
         match rec.start_kind {
             StartKind::Cold => self.cold_starts += 1,
             StartKind::Warm => self.warm_starts += 1,
+            StartKind::Restored => self.restored_starts += 1,
         }
         self.records.push(rec);
     }
@@ -228,6 +252,22 @@ mod tests {
         assert_eq!(f_summary.count, 2);
         assert!((hub.freshen_hit_rate() - 0.5).abs() < 1e-12);
         assert!(hub.throughput() > 0.0);
+    }
+
+    #[test]
+    fn restored_starts_count_separately() {
+        let mut hub = MetricsHub::new();
+        hub.record(rec("f", 0, 100_000, 200_000, StartKind::Cold));
+        hub.record(rec("f", 0, 60_000, 120_000, StartKind::Restored));
+        hub.record(rec("f", 0, 5_000, 10_000, StartKind::Warm));
+        assert_eq!(hub.cold_starts, 1);
+        assert_eq!(hub.warm_starts, 1);
+        assert_eq!(hub.restored_starts, 1);
+        assert_eq!(
+            hub.cold_starts + hub.warm_starts + hub.restored_starts,
+            hub.count() as u64,
+            "start kinds partition completions"
+        );
     }
 
     #[test]

@@ -71,10 +71,17 @@ pub enum SpanKind {
     EvictionPressure,
     /// Invocation dropped as infeasible (`a` = charge MB no host fits).
     Drop,
+    /// Warm idle container demoted to the snapshotted state (`inv` =
+    /// container id, `a` = warm MB before, `b` = discounted parked MB).
+    SnapshotCreate,
+    /// Snapshot restore began (`inv` = container id, `dur` = restore
+    /// latency base + page-in, `a` = full warm MB, `b` = parked MB it
+    /// resumed from).
+    Restore,
 }
 
 impl SpanKind {
-    pub const ALL: [SpanKind; 16] = [
+    pub const ALL: [SpanKind; 18] = [
         SpanKind::Arrival,
         SpanKind::Queue,
         SpanKind::Placement,
@@ -91,6 +98,9 @@ impl SpanKind {
         SpanKind::EvictionIdle,
         SpanKind::EvictionPressure,
         SpanKind::Drop,
+        // Appended (positional codes are digest-stable): 16, 17.
+        SpanKind::SnapshotCreate,
+        SpanKind::Restore,
     ];
 
     pub fn as_str(&self) -> &'static str {
@@ -111,6 +121,8 @@ impl SpanKind {
             SpanKind::EvictionIdle => "eviction_idle",
             SpanKind::EvictionPressure => "eviction_pressure",
             SpanKind::Drop => "drop",
+            SpanKind::SnapshotCreate => "snapshot_create",
+            SpanKind::Restore => "restore",
         }
     }
 
@@ -159,6 +171,15 @@ struct RawSpan {
 }
 
 /// Bounded, deterministic span recorder carried by each `World`.
+///
+/// Two events can fail to reach the drain, and they are NOT the same
+/// thing: a **dropped** event matched the filter but fell out of the
+/// full ring (data loss — the digest commits to it), while a
+/// **filtered** event was excluded on purpose by the name filter (not
+/// loss; the stream never contained it). They were historically
+/// conflated by omission — filter misses vanished without any count —
+/// so a capped, filtered trace could not tell "my cap is too small"
+/// from "my filter is too narrow". The split counters answer that.
 #[derive(Debug, Clone, Default)]
 pub struct Tracer {
     enabled: bool,
@@ -166,6 +187,7 @@ pub struct Tracer {
     filter: Option<String>,
     buf: VecDeque<RawSpan>,
     dropped: u64,
+    filtered: u64,
 }
 
 impl Tracer {
@@ -185,6 +207,7 @@ impl Tracer {
             filter,
             buf: VecDeque::new(),
             dropped: 0,
+            filtered: 0,
         }
     }
 
@@ -216,6 +239,9 @@ impl Tracer {
         }
         if let Some(f) = &self.filter {
             if !syms.resolve(function).contains(f.as_str()) {
+                // Deliberate exclusion, not ring loss: counted apart from
+                // `dropped` (see type docs).
+                self.filtered += 1;
                 return;
             }
         }
@@ -255,6 +281,18 @@ impl Tracer {
         (events, dropped)
     }
 
+    /// Events excluded by the name filter so far (see type docs). Not
+    /// reset by [`Tracer::drain`] — take it separately.
+    pub fn filtered(&self) -> u64 {
+        self.filtered
+    }
+
+    /// Take (and reset) the filter-exclusion count — the drain-time
+    /// companion to the `(events, dropped)` pair.
+    pub fn take_filtered(&mut self) -> u64 {
+        std::mem::take(&mut self.filtered)
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }
@@ -280,6 +318,12 @@ pub struct SpanSink {
     groups: Vec<(String, Vec<SpanEvent>)>,
     /// Ring-capacity drops summed across constituent worlds.
     pub dropped: u64,
+    /// Name-filter exclusions summed across constituent worlds. Kept
+    /// OUT of [`SpanSink::digest`]: the digest commits to the stream and
+    /// its losses, and a filtered event was never part of the stream —
+    /// folding it in would retroactively change every filtered run's
+    /// span digest without changing a single recorded byte.
+    pub filtered: u64,
 }
 
 impl SpanSink {
@@ -304,6 +348,7 @@ impl SpanSink {
     /// Commutative merge (key-sorted union; see type docs).
     pub fn merge(&mut self, other: &SpanSink) {
         self.dropped += other.dropped;
+        self.filtered += other.filtered;
         for (k, evs) in &other.groups {
             match self.groups.binary_search_by(|(g, _)| g.as_str().cmp(k)) {
                 Ok(i) => self.groups[i].1.extend(evs.iter().cloned()),
@@ -404,9 +449,41 @@ mod tests {
         let mut tr = Tracer::enabled(16, Some("app-1/".to_string()));
         ev(&mut tr, &mut syms, SpanKind::Arrival, "app-1/run", 1);
         ev(&mut tr, &mut syms, SpanKind::Arrival, "app-2/run", 2);
-        let (events, _) = tr.drain(&syms);
+        // The exclusion counts as filtered, NOT as a ring drop.
+        assert_eq!(tr.filtered(), 1);
+        let (events, dropped) = tr.drain(&syms);
         assert_eq!(events.len(), 1);
         assert_eq!(events[0].function, "app-1/run");
+        assert_eq!(dropped, 0);
+        assert_eq!(tr.take_filtered(), 1);
+        assert_eq!(tr.filtered(), 0, "take resets the count");
+    }
+
+    /// The two loss-adjacent counters stay independent: ring overflow
+    /// counts in `dropped` only, filter misses in `filtered` only, and a
+    /// trace exercising both reports both exactly.
+    #[test]
+    fn filtered_and_dropped_are_split_counters() {
+        let mut syms = Symbols::new();
+        let mut tr = Tracer::enabled(2, Some("keep".to_string()));
+        for t in 0..3 {
+            ev(&mut tr, &mut syms, SpanKind::Exec, "keep/f", t);
+        }
+        for t in 0..5 {
+            ev(&mut tr, &mut syms, SpanKind::Exec, "other/g", t);
+        }
+        assert_eq!(tr.filtered(), 5);
+        let (events, dropped) = tr.drain(&syms);
+        assert_eq!(events.len(), 2);
+        assert_eq!(dropped, 1, "only the ring overflow is a drop");
+        assert_eq!(tr.take_filtered(), 5);
+        // An unfiltered tracer never counts filtered, even at cap.
+        let mut tr = Tracer::enabled(1, None);
+        ev(&mut tr, &mut syms, SpanKind::Exec, "a", 1);
+        ev(&mut tr, &mut syms, SpanKind::Exec, "b", 2);
+        let (_, dropped) = tr.drain(&syms);
+        assert_eq!(dropped, 1);
+        assert_eq!(tr.filtered(), 0);
     }
 
     #[test]

@@ -88,6 +88,11 @@ pub struct FnWindow {
     pub wasted_freshens: u64,
     /// Freshen runs aborted by the container-incarnation guard.
     pub stale_aborts: u64,
+    /// Invocations served by restoring a snapshotted container (neither
+    /// a cold start nor a warm hit). Zero unless the snapshot axis is on.
+    pub restored: u64,
+    /// This function's containers demoted warm → snapshotted.
+    pub snapshots: u64,
     /// Distinct windows in which this function completed work.
     pub windows: u64,
     pub peak_window_invocations: u64,
@@ -132,6 +137,8 @@ impl FnWindow {
         self.iat_samples += other.iat_samples;
         self.wasted_freshens += other.wasted_freshens;
         self.stale_aborts += other.stale_aborts;
+        self.restored += other.restored;
+        self.snapshots += other.snapshots;
         self.windows += other.windows;
         self.peak_window_invocations =
             self.peak_window_invocations.max(other.peak_window_invocations);
@@ -229,6 +236,14 @@ impl WindowSet {
         self.entry(function).stale_aborts += 1;
     }
 
+    pub fn on_restore(&mut self, function: &str) {
+        self.entry(function).restored += 1;
+    }
+
+    pub fn on_snapshot(&mut self, function: &str) {
+        self.entry(function).snapshots += 1;
+    }
+
     /// Close every open window and take the accumulated set, leaving
     /// this one empty (still enabled). Unmatched predictions are
     /// discarded — they are counted as wasted when they expire, not
@@ -296,6 +311,13 @@ impl WindowSet {
             fold(w.iat_samples);
             fold(w.wasted_freshens);
             fold(w.stale_aborts);
+            // Snapshot-axis counters fold only when touched, so every
+            // legacy (axis-off) window digest is bit-identical to the
+            // fold that predated these fields.
+            if w.restored != 0 || w.snapshots != 0 {
+                fold(w.restored);
+                fold(w.snapshots);
+            }
             fold(w.windows);
             fold(w.peak_window_invocations);
             fold(w.peak_window_cold);
@@ -386,6 +408,28 @@ mod tests {
             assert_eq!(s.stale_aborts, m.stale_aborts, "{f}");
         }
         assert_eq!(serial.len(), merged.len());
+    }
+
+    #[test]
+    fn snapshot_counters_merge_and_gate_the_digest() {
+        let mut ws = WindowSet { enabled: true, ..WindowSet::default() };
+        ws.on_complete("f", false, 0);
+        let plain = ws.take_finalized();
+        let mut ws = WindowSet { enabled: true, ..WindowSet::default() };
+        ws.on_complete("f", false, 0);
+        ws.on_restore("f");
+        ws.on_snapshot("f");
+        ws.on_snapshot("f");
+        let snap = ws.take_finalized();
+        let w = snap.get("f").unwrap();
+        assert_eq!((w.restored, w.snapshots), (1, 2));
+        // Untouched counters leave the digest exactly as before the
+        // fields existed; touched ones change it.
+        assert_ne!(plain.digest(), snap.digest());
+        let mut merged = plain.clone();
+        merged.merge(&snap);
+        let m = merged.get("f").unwrap();
+        assert_eq!((m.invocations, m.restored, m.snapshots), (2, 1, 2));
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub enum ContainerState {
     Warm,
     /// Currently executing an invocation.
     Busy,
+    /// Serialized to a host-local snapshot image: not dispatchable, but
+    /// parked at a discounted memory charge and restorable at a fraction
+    /// of a cold start (see [`crate::platform::snapshot`]).
+    Snapshotted,
     /// Torn down; slot reusable.
     Evicted,
 }
@@ -172,6 +176,39 @@ impl Container {
         debug_assert_eq!(self.state, ContainerState::Busy);
         self.state = ContainerState::Warm;
         self.last_used = now;
+    }
+
+    /// Demote a warm idle container to a snapshot: the sandbox is
+    /// serialized to a host-local image and the slot parks at a
+    /// discounted charge (the world adjusts `charged_mb` and the invoker
+    /// ledger; this is the state transition only). Runtime-scoped state
+    /// is preserved IN the image — it comes back on restore — but the
+    /// incarnation does not move: a snapshot is suspension, not reclaim.
+    pub fn snapshot(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Warm);
+        self.state = ContainerState::Snapshotted;
+        self.last_used = now;
+        // Leaving the idle Warm state invalidates pending idle checks.
+        self.reuse_gen += 1;
+        self.idle_timer = None;
+    }
+
+    /// Begin restoring a snapshot (base latency + working-set page-in;
+    /// the world schedules the completion event). Sockets do not survive
+    /// serialization, so live connections and TLS sessions are dropped —
+    /// the freshen cache and `fr_state` page back in with the image.
+    pub fn begin_restore(&mut self, now: SimTime) {
+        debug_assert_eq!(self.state, ContainerState::Snapshotted);
+        self.state = ContainerState::Initializing;
+        self.last_used = now;
+        self.reuse_gen += 1;
+        self.runtime.connections.clear();
+        self.runtime.tls.clear();
+    }
+
+    /// Is this container a parked snapshot of `function`?
+    pub fn snapshot_for(&self, function: FnId) -> bool {
+        self.state == ContainerState::Snapshotted && self.function == Some(function)
     }
 
     /// Evict: destroy runtime-scoped state. Memory release against the
@@ -320,6 +357,37 @@ mod tests {
         assert_eq!(c.incarnation, 2);
         c.evict();
         assert_eq!(c.incarnation, 3);
+    }
+
+    #[test]
+    fn snapshot_restore_lifecycle() {
+        let [f] = ids(&["f"])[..] else { unreachable!() };
+        let mut c = Container::new(0, 0, t(0));
+        c.begin_cold_start(f, t(0));
+        c.finish_init(t(1));
+        c.runtime
+            .cache
+            .put("store", "m", 1, 100.0, SimDuration::from_secs(60), t(1));
+        let inc = c.incarnation;
+        let g = c.reuse_gen;
+        c.snapshot(t(2));
+        assert_eq!(c.state, ContainerState::Snapshotted);
+        assert!(c.snapshot_for(f));
+        assert!(!c.warm_for(f), "a snapshot is not dispatchable");
+        assert!(c.reuse_gen > g, "demotion invalidates pending idle checks");
+        assert_eq!(c.incarnation, inc, "a snapshot is suspension, not reclaim");
+        c.begin_restore(t(3));
+        assert_eq!(c.state, ContainerState::Initializing);
+        assert!(c.runtime.connections.is_empty(), "sockets die across a snapshot");
+        c.finish_init(t(4));
+        assert!(c.warm_for(f));
+        assert_eq!(c.runtime.cache.len(), 1, "cached state pages back in");
+        assert_eq!(c.incarnation, inc, "restore keeps the incarnation");
+        // A parked snapshot is still pressure-evictable.
+        c.snapshot(t(5));
+        c.evict();
+        assert_eq!(c.state, ContainerState::Evicted);
+        assert!(c.incarnation > inc, "eviction is the reclaim");
     }
 
     #[test]

@@ -90,6 +90,9 @@ pub enum PlatformEvent {
     },
     /// Cold start finished: the container inits, then the body begins.
     ColdStartDone { inv: InvocationId, cid: ContainerId },
+    /// Snapshot restore finished (base + page-in elapsed): the container
+    /// re-inits and the body begins as a [`StartKind::Restored`] start.
+    RestoreDone { inv: InvocationId, cid: ContainerId },
     /// Keep-alive idle check, stamped with the container's reuse
     /// generation at arm time (stale checks no-op).
     IdleCheck { cid: ContainerId, gen: u64 },
@@ -127,6 +130,7 @@ impl EventBody<World> for PlatformEvent {
                 world.containers[cid].begin_run(sim.now());
                 begin_body(sim, world, inv, cid, StartKind::Cold);
             }
+            PlatformEvent::RestoreDone { inv, cid } => restore_done(sim, world, inv, cid),
             PlatformEvent::IdleCheck { cid, gen } => idle_check_fired(sim, world, cid, gen),
             PlatformEvent::FreshenStep { run } => step_freshen(sim, world, run),
             PlatformEvent::FreshenColdDone {
@@ -261,6 +265,23 @@ fn dispatch(sim: &mut PlatformSim, world: &mut World, inv: InvocationId) -> bool
             },
         );
         return true;
+    }
+
+    // Snapshot restore: a parked image of this exact function beats both
+    // the sibling re-init (which keeps only app-scoped state) and the
+    // full cold start. The re-charge back to the warm footprint must fit
+    // the snapshot's host; when it doesn't, the snapshot stays parked and
+    // the arrival falls through to the ordinary paths below. Gated on the
+    // axis, so legacy runs never even scan for snapshots.
+    if world.config.snapshot.enabled {
+        if let Some(cid) = world.find_snapshot(function) {
+            let full_mb = world.charge_for_function_id(function);
+            if let Some(cost) = world.begin_restore(cid, full_mb, now) {
+                note_queue_wait(world, inv, now);
+                sim.schedule_event(cost, PlatformEvent::RestoreDone { inv, cid });
+                return true;
+            }
+        }
     }
 
     // Per-app isolation (§6): a warm sibling container can be re-inited
@@ -459,7 +480,7 @@ fn evict_for_pressure(
         // actually free enough memory on it.
         let mut reclaimable = vec![0u64; world.invokers.len()];
         for c in &world.containers {
-            if c.state == ContainerState::Warm {
+            if matches!(c.state, ContainerState::Warm | ContainerState::Snapshotted) {
                 reclaimable[c.invoker] += c.charged_mb as u64;
             }
         }
@@ -483,7 +504,16 @@ fn evict_for_pressure(
                 host_ok
             }
         };
-        let victim = match policy.pressure_victim(&world.containers, &masked) {
+        // Parked snapshots die before warm state: their restore is far
+        // cheaper to re-pay than a full cold start, so they are the
+        // cheapest memory on the cluster. No snapshots (every legacy
+        // run) means this is a pure fall-through to the policy's choice.
+        let victim = match crate::platform::keepalive::snapshot_lru_victim(
+            &world.containers,
+            &masked,
+        )
+        .or_else(|| policy.pressure_victim(&world.containers, &masked))
+        {
             Some(v) => v,
             // The locked host ran dry without fitting: fall back to the
             // full feasible set next round.
@@ -500,6 +530,32 @@ fn evict_for_pressure(
             return Some(cid);
         }
     }
+}
+
+/// Restore latency elapsed: the container re-inits (through the ordinary
+/// `finish_init`) and the invocation's body begins as a Restored start.
+/// The hybrid mitigation additionally launches the paper's freshen pass
+/// on the freshly restored container: its connections died with the
+/// snapshot (`begin_restore` cleared them) and its cached state may be
+/// stale, which is exactly what the freshen hook repairs. The run is
+/// launched like a developer-invoked freshen (no prediction to resolve)
+/// and is incarnation-guard aware like every other run.
+fn restore_done(sim: &mut PlatformSim, world: &mut World, inv: InvocationId, cid: ContainerId) {
+    let now = sim.now();
+    world.containers[cid].finish_init(now);
+    world.containers[cid].begin_run(now);
+    let function = world.invocations[inv].function;
+    if world.config.snapshot.freshen_on_restore
+        && world.config.freshen.enabled
+        && !world
+            .registry
+            .hook_by_id(function)
+            .map_or(true, |h| h.is_empty())
+        && launch_freshen_on(sim, world, function, cid, None).is_some()
+    {
+        world.metrics.freshens_on_restore += 1;
+    }
+    begin_body(sim, world, inv, cid, StartKind::Restored);
 }
 
 /// The container is ours and the runtime's `run` hook fired: walk the ops.
@@ -972,6 +1028,12 @@ fn finish_invocation(sim: &mut PlatformSim, world: &mut World, inv: InvocationId
             cold,
             now.micros(),
         );
+        if matches!(ctx.start_kind, StartKind::Restored) {
+            world
+                .metrics
+                .windows
+                .on_restore(world.registry.symbols.resolve(function));
+        }
     }
     let (app, memory_mb) = {
         let spec = world.registry.function_by_id(function).expect("deployed");
@@ -1113,6 +1175,13 @@ fn idle_check_fired(sim: &mut PlatformSim, world: &mut World, cid: ContainerId, 
             world.evict_container(cid, EvictionCause::Idle, now);
             // The freed memory may unblock a queued invocation of another
             // function.
+            redispatch_pending(sim, world);
+        }
+        IdleVerdict::Snapshot => {
+            // Evict-to-snapshot: park the container at its discounted
+            // charge. The released fraction is freed memory like any
+            // eviction's, so queued work gets its retry.
+            world.demote_to_snapshot(cid, now);
             redispatch_pending(sim, world);
         }
         IdleVerdict::Recheck(delay) => arm_idle_check(sim, world, cid, delay),

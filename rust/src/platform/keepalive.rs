@@ -66,6 +66,25 @@ pub enum IdleVerdict {
     Keep,
     /// Leave it warm and check again after this delay.
     Recheck(SimDuration),
+    /// Demote the container to the snapshotted state instead of killing
+    /// it: its memory charge drops to the discounted snapshot fraction
+    /// and the next arrival restores it (base + page-in) instead of
+    /// paying a full cold start. Only issued when
+    /// `Config::snapshot.enabled`; with the axis off every policy falls
+    /// back to [`IdleVerdict::Evict`] and legacy behavior is untouched.
+    Snapshot,
+}
+
+/// The verdict for a container whose keep-alive window has closed: evict
+/// when the snapshot mitigation is off (legacy behavior, byte-identical),
+/// demote to a snapshot when it is on. Shared by every policy so the
+/// gate lives in exactly one place.
+fn retire_verdict(ctx: &IdleCtx) -> IdleVerdict {
+    if ctx.config.snapshot.enabled {
+        IdleVerdict::Snapshot
+    } else {
+        IdleVerdict::Evict
+    }
 }
 
 /// A container keep-alive policy (see module docs).
@@ -113,6 +132,24 @@ pub fn lru_warm_victim(containers: &[Container], host_ok: &[bool]) -> Option<Con
         .map(|c| c.id)
 }
 
+/// The least-recently-used SNAPSHOTTED container on an eligible host, if
+/// any — the pressure path's preferred victim when the snapshot axis is
+/// on: a parked image's restore is far cheaper to re-pay than the full
+/// cold start a warm kill forces, so snapshots are the cheapest memory
+/// on the cluster. Same explicit `(last_used, id)` tie-break as
+/// [`lru_warm_victim`]. Legacy runs hold no snapshotted containers, so
+/// this is `None` and the policy's warm choice is untouched.
+pub fn snapshot_lru_victim(containers: &[Container], host_ok: &[bool]) -> Option<ContainerId> {
+    containers
+        .iter()
+        .filter(|c| {
+            c.state == ContainerState::Snapshotted
+                && host_ok.get(c.invoker).copied().unwrap_or(false)
+        })
+        .min_by_key(|c| (c.last_used, c.id))
+        .map(|c| c.id)
+}
+
 /// Build the policy a [`KeepAliveKind`] names.
 pub fn build(kind: KeepAliveKind) -> Rc<dyn KeepAlivePolicy> {
     match kind {
@@ -144,7 +181,7 @@ impl KeepAlivePolicy for FixedTtl {
 
     fn idle_verdict(&self, ctx: &IdleCtx) -> IdleVerdict {
         if ctx.container.idle_for(ctx.now) >= ctx.config.idle_eviction {
-            IdleVerdict::Evict
+            retire_verdict(ctx)
         } else {
             IdleVerdict::Keep
         }
@@ -255,7 +292,7 @@ impl KeepAlivePolicy for HybridHistogram {
             Some(w) if ctx.container.idle_for(ctx.now) < w => {
                 IdleVerdict::Recheck(w.max(SimDuration::from_secs(1)))
             }
-            _ => IdleVerdict::Evict,
+            _ => retire_verdict(ctx),
         }
     }
 
@@ -399,5 +436,42 @@ mod tests {
             let policy = build(kind);
             assert_eq!(policy.name(), kind.as_str());
         }
+    }
+
+    /// With `snapshot.enabled` every retire-the-container verdict becomes
+    /// Snapshot; Keep/Recheck verdicts are untouched, and with the axis
+    /// off the verdicts are the legacy Evict — the mitigation flips
+    /// exactly one decision.
+    #[test]
+    fn snapshot_axis_turns_evictions_into_demotions() {
+        let mut cfg = Config::default();
+        let hist = HistogramPredictor::new();
+        let mut syms = Symbols::new();
+        let c = warm_container(&mut syms, 0, "f", t(0));
+
+        let fixed = FixedTtl;
+        let expired = SimTime::ZERO + cfg.idle_eviction;
+        let cx = ctx(expired, &c, &cfg, &hist, &syms);
+        assert_eq!(fixed.idle_verdict(&cx), IdleVerdict::Evict);
+        cfg.snapshot.enabled = true;
+        let cx = ctx(expired, &c, &cfg, &hist, &syms);
+        assert_eq!(fixed.idle_verdict(&cx), IdleVerdict::Snapshot);
+        // A recently-used container is still kept, not snapshotted.
+        let cx = ctx(t(1), &c, &cfg, &hist, &syms);
+        assert_eq!(fixed.idle_verdict(&cx), IdleVerdict::Keep);
+
+        // Hybrid: a closed prediction window demotes instead of evicting.
+        let hybrid = HybridHistogram::default();
+        let late = SimTime::ZERO + hybrid.fallback_ttl + SimDuration::from_secs(1);
+        let cx = ctx(late, &c, &cfg, &hist, &syms);
+        assert_eq!(hybrid.idle_verdict(&cx), IdleVerdict::Snapshot);
+        cfg.snapshot.enabled = false;
+        let cx = ctx(late, &c, &cfg, &hist, &syms);
+        assert_eq!(hybrid.idle_verdict(&cx), IdleVerdict::Evict);
+
+        // LruPressure never idle-retires, so the axis changes nothing.
+        cfg.snapshot.enabled = true;
+        let cx = ctx(t(100_000), &c, &cfg, &hist, &syms);
+        assert_eq!(LruPressure.idle_verdict(&cx), IdleVerdict::Keep);
     }
 }

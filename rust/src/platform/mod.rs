@@ -23,6 +23,9 @@
 //!   host a cold start lands on (legacy least-loaded / random /
 //!   round-robin / warm-affinity / label-constrained), over optionally
 //!   heterogeneous host classes.
+//! - [`snapshot`] — snapshot/restore cost model: the rival cold-start
+//!   mitigation (discounted parked charge, base + working-set page-in
+//!   restore, REAP-style prefetch variant).
 //! - [`exec`] — the event-driven op executor (function *and* freshen),
 //!   including the controller's dispatch/queue/eviction policies.
 
@@ -37,6 +40,7 @@ pub mod keepalive;
 pub mod placement;
 pub mod registry;
 pub mod slab;
+pub mod snapshot;
 pub mod symbols;
 pub mod world;
 

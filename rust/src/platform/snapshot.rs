@@ -1,0 +1,108 @@
+//! Snapshot/restore: the rival cold-start mitigation.
+//!
+//! Instead of keeping an idle container warm (full memory charge) or
+//! killing it (full cold start on the next arrival), the platform can
+//! *snapshot* it: serialize the sandbox to a host-local image and park it
+//! as a third lifecycle state ([`ContainerState::Snapshotted`]) that
+//! charges its invoker only a discounted fraction of the warm footprint.
+//! The next arrival *restores* the snapshot — paying a fixed base latency
+//! plus a working-set page-in term — instead of paying a full cold start
+//! (Ustiugov et al., "Benchmarking, Analysis, and Optimization of
+//! Serverless Function Snapshots").
+//!
+//! Two cost-model refinements from that literature are modeled:
+//!
+//! - **REAP-style prefetch** ([`SnapshotConfig::prefetch`]): recording the
+//!   stable working set and bulk-loading it on restore shrinks the
+//!   demand-paging term to `prefetch_permille`/1000 of its vanilla cost.
+//! - **Freshen-on-restore** ([`SnapshotConfig::freshen_on_restore`]): a
+//!   restored runtime's connections are dead (sockets do not survive a
+//!   snapshot) and its cached state may be stale; the hybrid mitigation
+//!   runs the paper's freshen pass on the freshly restored container to
+//!   re-warm it (wired in [`crate::platform::exec`], incarnation-guard
+//!   aware like every other freshen run).
+//!
+//! All arithmetic here is integer-exact (permille scaling, µs-per-MB
+//! terms) so restore costs and discounted charges merge digest-stably.
+//!
+//! [`ContainerState::Snapshotted`]: crate::platform::container::ContainerState
+
+use crate::util::config::SnapshotConfig;
+use crate::util::time::SimDuration;
+
+/// Memory (MB) a snapshotted container charges its host: the warm charge
+/// scaled to `charge_permille`/1000, floor division (a 256 MB container
+/// at the default 250‰ parks at exactly 64 MB).
+pub fn snapshot_charge_mb(warm_mb: u32, charge_permille: u32) -> u32 {
+    (warm_mb as u64 * charge_permille as u64 / 1000) as u32
+}
+
+/// The working-set page-in term of a restore, in sim-µs: `warm_mb ×
+/// page_in_us_per_mb`, scaled to `prefetch_permille`/1000 when the
+/// REAP-style prefetch variant is on. Exact integer arithmetic.
+pub fn page_in_us(cfg: &SnapshotConfig, warm_mb: u32) -> u64 {
+    let demand = cfg.page_in_us_per_mb * warm_mb as u64;
+    if cfg.prefetch {
+        demand * cfg.prefetch_permille as u64 / 1000
+    } else {
+        demand
+    }
+}
+
+/// Total restore latency: the fixed base (descriptor load + sandbox
+/// rebuild) plus the page-in term.
+pub fn restore_cost(cfg: &SnapshotConfig, warm_mb: u32) -> SimDuration {
+    SimDuration(cfg.restore_base.micros() + page_in_us(cfg, warm_mb))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn discounted_charge_is_exact_floor_permille() {
+        assert_eq!(snapshot_charge_mb(256, 250), 64);
+        assert_eq!(snapshot_charge_mb(100, 250), 25);
+        // Floor division: 3 × 250 / 1000 = 0 — a tiny container's
+        // snapshot can round to a zero charge, which accounting accepts.
+        assert_eq!(snapshot_charge_mb(3, 250), 0);
+        assert_eq!(snapshot_charge_mb(1024, 125), 128);
+        assert_eq!(snapshot_charge_mb(0, 500), 0);
+        // 1000‰ is a full-price snapshot; 0‰ is free.
+        assert_eq!(snapshot_charge_mb(777, 1000), 777);
+        assert_eq!(snapshot_charge_mb(777, 0), 0);
+    }
+
+    /// The satellite's pinned restore-cost arithmetic: base + page-in +
+    /// prefetch as exact integers, no rounding surprises.
+    #[test]
+    fn restore_cost_pins_base_plus_page_in_plus_prefetch() {
+        let mut cfg = SnapshotConfig::default();
+        cfg.restore_base = SimDuration::from_millis(25); // 25_000 µs
+        cfg.page_in_us_per_mb = 150;
+        cfg.prefetch = false;
+        cfg.prefetch_permille = 300;
+        // Vanilla: 25_000 + 256 × 150 = 63_400 µs.
+        assert_eq!(page_in_us(&cfg, 256), 38_400);
+        assert_eq!(restore_cost(&cfg, 256), SimDuration(63_400));
+        // Prefetch: page-in shrinks to 38_400 × 300 / 1000 = 11_520 µs.
+        cfg.prefetch = true;
+        assert_eq!(page_in_us(&cfg, 256), 11_520);
+        assert_eq!(restore_cost(&cfg, 256), SimDuration(36_520));
+        // Permille scaling floors: 7 MB × 150 = 1050; × 300 / 1000 = 315.
+        assert_eq!(page_in_us(&cfg, 7), 315);
+        // A zero-MB working set still pays the base.
+        assert_eq!(restore_cost(&cfg, 0), SimDuration(25_000));
+    }
+
+    #[test]
+    fn prefetch_never_exceeds_vanilla() {
+        let mut cfg = SnapshotConfig::default();
+        for mb in [0u32, 1, 64, 256, 4096] {
+            cfg.prefetch = false;
+            let vanilla = restore_cost(&cfg, mb);
+            cfg.prefetch = true;
+            assert!(restore_cost(&cfg, mb) <= vanilla);
+        }
+    }
+}

@@ -255,6 +255,15 @@ impl World {
             .map(|c| c.id)
     }
 
+    /// Find a snapshotted container holding `function`'s image (the
+    /// restore path's lookup, checked after [`World::find_warm`] misses).
+    pub fn find_snapshot(&self, function: FnId) -> Option<ContainerId> {
+        self.containers
+            .iter()
+            .find(|c| c.snapshot_for(function))
+            .map(|c| c.id)
+    }
+
     /// The MB a container hosting `function` charges its invoker:
     /// one uniform 256 MB slot, or the function's declared `memory_mb`
     /// under per-function accounting.
@@ -413,7 +422,12 @@ impl World {
                 EvictionCause::Idle => self.metrics.evictions_idle += 1,
                 EvictionCause::Pressure => {
                     self.metrics.evictions_pressure += 1;
-                    if self.containers[cid].runtime.invocations > 0 {
+                    // Reclaiming a parked snapshot is not a warm kill:
+                    // the state it destroys costs a restore to re-pay,
+                    // not a full cold start.
+                    if self.containers[cid].state != ContainerState::Snapshotted
+                        && self.containers[cid].runtime.invocations > 0
+                    {
                         self.metrics.warm_kills += 1;
                     }
                 }
@@ -424,6 +438,7 @@ impl World {
                     EvictionCause::Pressure => crate::obs::SpanKind::EvictionPressure,
                 };
                 let warm_kill = matches!(cause, EvictionCause::Pressure)
+                    && self.containers[cid].state != ContainerState::Snapshotted
                     && self.containers[cid].runtime.invocations > 0;
                 let f = self.containers[cid].function.unwrap_or(FnId::ANON);
                 self.obs.record(
@@ -440,6 +455,91 @@ impl World {
         }
         self.containers[cid].evict();
         self.debug_check_memory_accounting();
+    }
+
+    /// Demote a warm idle container to the snapshotted state: serialize
+    /// its sandbox, release the difference between the warm footprint and
+    /// the discounted snapshot charge, and park it for a later restore.
+    /// The keep-alive policies' [`keepalive::IdleVerdict::Snapshot`]
+    /// verdict lands here. The freed memory may admit queued work — the
+    /// executor redispatches after calling this, exactly like an eviction.
+    pub fn demote_to_snapshot(&mut self, cid: ContainerId, now: SimTime) {
+        let warm_mb = self.containers[cid].charged_mb;
+        let snap_mb = crate::platform::snapshot::snapshot_charge_mb(
+            warm_mb,
+            self.config.snapshot.charge_permille,
+        )
+        .min(warm_mb);
+        let freed = warm_mb - snap_mb;
+        let inv = self.containers[cid].invoker;
+        self.invokers[inv].release(freed as u64);
+        self.note_resident_delta(now, -(freed as i64));
+        self.containers[cid].charged_mb = snap_mb;
+        self.containers[cid].snapshot(now);
+        self.metrics.snapshots_created += 1;
+        if self.metrics.windows.enabled {
+            if let Some(f) = self.containers[cid].function {
+                let name = self.registry.symbols.resolve(f).to_string();
+                self.metrics.windows.on_snapshot(&name);
+            }
+        }
+        if self.obs.is_enabled() {
+            let f = self.containers[cid].function.unwrap_or(FnId::ANON);
+            self.obs.record(
+                &self.registry.symbols,
+                crate::obs::SpanKind::SnapshotCreate,
+                f,
+                cid as u64,
+                now,
+                SimDuration::ZERO,
+                warm_mb as u64,
+                snap_mb as u64,
+            );
+        }
+        self.debug_check_memory_accounting();
+    }
+
+    /// Begin restoring a snapshotted container for a fresh arrival:
+    /// re-charge the delta back up to the full warm footprint `full_mb`
+    /// and flip the container to Initializing (the restore completes
+    /// through the ordinary `finish_init`). Returns the restore latency
+    /// (base + working-set page-in, prefetch-scaled), or `None` when the
+    /// host lacks room for the re-charge — the caller falls through to
+    /// the normal cold-start path and the snapshot stays parked.
+    pub fn begin_restore(
+        &mut self,
+        cid: ContainerId,
+        full_mb: u32,
+        now: SimTime,
+    ) -> Option<SimDuration> {
+        let snap_mb = self.containers[cid].charged_mb;
+        let full_mb = full_mb.max(snap_mb);
+        let delta = full_mb - snap_mb;
+        let inv = self.containers[cid].invoker;
+        if !self.invokers[inv].has_room(delta as u64) {
+            return None;
+        }
+        self.invokers[inv].charge(delta as u64);
+        self.note_resident_delta(now, delta as i64);
+        self.containers[cid].charged_mb = full_mb;
+        self.containers[cid].begin_restore(now);
+        let cost = crate::platform::snapshot::restore_cost(&self.config.snapshot, full_mb);
+        self.metrics.restore_us += cost.micros();
+        if self.obs.is_enabled() {
+            let f = self.containers[cid].function.unwrap_or(FnId::ANON);
+            self.obs.record(
+                &self.registry.symbols,
+                crate::obs::SpanKind::Restore,
+                f,
+                cid as u64,
+                now,
+                cost,
+                full_mb as u64,
+                snap_mb as u64,
+            );
+        }
+        self.debug_check_memory_accounting();
+        Some(cost)
     }
 
     /// Re-point a live container's memory charge at a different function
@@ -468,6 +568,16 @@ impl World {
     }
 
     /// Advance the resident-memory integral to `now` and apply a change.
+    ///
+    /// Negative deltas use checked subtraction: a release exceeding the
+    /// resident total clamps at zero AND counts in
+    /// `metrics.accounting_clamps` instead of wrapping (the old
+    /// `as i64 … max(0)` cast also clamped, but silently, and a charge
+    /// stream past `i64::MAX` MB would have wrapped the cast itself).
+    /// The counter is zero in every correctly paired charge/release
+    /// stream; nonzero flags a mis-paired release that debug builds catch
+    /// via `debug_check_memory_accounting` but release builds previously
+    /// swallowed.
     fn note_resident_delta(&mut self, now: SimTime, delta_mb: i64) {
         let dt = now.since(self.resident_last_change).micros();
         self.metrics.resident_mb_us = self
@@ -475,7 +585,17 @@ impl World {
             .resident_mb_us
             .saturating_add(self.resident_mb.saturating_mul(dt));
         self.resident_last_change = now;
-        self.resident_mb = (self.resident_mb as i64).saturating_add(delta_mb).max(0) as u64;
+        if delta_mb >= 0 {
+            self.resident_mb = self.resident_mb.saturating_add(delta_mb as u64);
+        } else {
+            self.resident_mb = match self.resident_mb.checked_sub(delta_mb.unsigned_abs()) {
+                Some(left) => left,
+                None => {
+                    self.metrics.accounting_clamps += 1;
+                    0
+                }
+            };
+        }
         self.metrics.peak_resident_mb = self.metrics.peak_resident_mb.max(self.resident_mb);
     }
 
@@ -641,6 +761,91 @@ mod tests {
     fn model_latency_defaults() {
         let w = World::new(Config::default());
         assert_eq!(w.model_latency("unknown"), SimDuration::from_millis(5));
+    }
+
+    /// Satellite bugfix: a mis-paired release clamps `resident_mb` at
+    /// zero AND counts in `accounting_clamps` instead of silently casting
+    /// through `i64`; paired streams never touch the counter.
+    #[test]
+    fn mispaired_release_clamps_and_counts() {
+        let mut w = World::new(Config::default());
+        w.note_resident_delta(SimTime::ZERO, 100);
+        w.note_resident_delta(SimTime(1_000_000), -60);
+        assert_eq!(w.resident_mb, 40);
+        assert_eq!(w.metrics.accounting_clamps, 0, "paired stream never clamps");
+        // Release more than is resident: clamp, count, keep going.
+        w.note_resident_delta(SimTime(2_000_000), -50);
+        assert_eq!(w.resident_mb, 0);
+        assert_eq!(w.metrics.accounting_clamps, 1);
+        // The integral accumulated the pre-clamp occupancy exactly.
+        assert_eq!(w.metrics.resident_mb_us, 100 * 1_000_000 + 40 * 1_000_000);
+        // Accounting continues to work after the clamp.
+        w.note_resident_delta(SimTime(3_000_000), 8);
+        assert_eq!(w.resident_mb, 8);
+        assert_eq!(w.metrics.accounting_clamps, 1);
+    }
+
+    /// Snapshot demote/restore accounting: the demote releases exactly
+    /// the non-discounted fraction, the restore re-charges it, and the
+    /// per-invoker / resident mirrors stay exact throughout.
+    #[test]
+    fn snapshot_demote_and_restore_keep_accounting_exact() {
+        let mut cfg = Config::default();
+        cfg.invokers = 1;
+        cfg.snapshot.enabled = true;
+        cfg.snapshot.charge_permille = 250;
+        cfg.snapshot.restore_base = SimDuration::from_millis(25);
+        cfg.snapshot.page_in_us_per_mb = 150;
+        let mut w = World::new(cfg);
+        let f = w.fid("f");
+        let cid = w.acquire_slot(SimTime::ZERO, 256).unwrap();
+        w.containers[cid].begin_cold_start(f, SimTime::ZERO);
+        w.containers[cid].finish_init(SimTime::ZERO);
+        assert_eq!(w.resident_mb, 256);
+
+        w.demote_to_snapshot(cid, SimTime(1_000_000));
+        assert_eq!(w.containers[cid].state, ContainerState::Snapshotted);
+        assert_eq!(w.containers[cid].charged_mb, 64, "256 MB at 250 permille");
+        assert_eq!(w.resident_mb, 64);
+        assert_eq!(w.invokers[0].used_mb, 64);
+        assert_eq!(w.metrics.snapshots_created, 1);
+        assert_eq!(w.find_snapshot(f), Some(cid));
+        // A snapshot is not a warm container.
+        assert_eq!(w.find_warm(f), None);
+
+        let cost = w.begin_restore(cid, 256, SimTime(2_000_000)).unwrap();
+        assert_eq!(cost, SimDuration(25_000 + 256 * 150));
+        assert_eq!(w.containers[cid].state, ContainerState::Initializing);
+        assert_eq!(w.resident_mb, 256);
+        assert_eq!(w.metrics.restore_us, cost.micros());
+        w.containers[cid].finish_init(SimTime(2_000_000) + cost);
+        assert_eq!(w.find_warm(f), Some(cid));
+        assert_eq!(w.metrics.accounting_clamps, 0);
+    }
+
+    /// A restore whose re-charge delta exceeds the host's free memory is
+    /// refused: the snapshot stays parked and nothing is charged.
+    #[test]
+    fn restore_refused_when_host_is_full() {
+        let mut cfg = Config::default();
+        cfg.invokers = 1;
+        cfg.invoker_memory_mb = Some(300);
+        cfg.memory_accounting = MemoryAccounting::FunctionMb;
+        cfg.snapshot.enabled = true;
+        let mut w = World::new(cfg);
+        let (f, g) = (w.fid("f"), w.fid("g"));
+        let a = w.acquire_slot(SimTime::ZERO, 256).unwrap();
+        w.containers[a].begin_cold_start(f, SimTime::ZERO);
+        w.containers[a].finish_init(SimTime::ZERO);
+        w.demote_to_snapshot(a, SimTime::ZERO); // parks at 64 MB
+        // A sibling fills the host: 64 + 200 leaves only 36 MB free.
+        let b = w.acquire_slot(SimTime::ZERO, 200).unwrap();
+        w.containers[b].begin_cold_start(g, SimTime::ZERO);
+        assert!(w.begin_restore(a, 256, SimTime(1_000_000)).is_none());
+        assert_eq!(w.containers[a].state, ContainerState::Snapshotted);
+        assert_eq!(w.containers[a].charged_mb, 64);
+        assert_eq!(w.resident_mb, 264);
+        assert_eq!(w.metrics.restore_us, 0);
     }
 
     #[test]

@@ -75,6 +75,9 @@ pub struct Config {
     pub isolation: IsolationScope,
     /// Freshen policy knobs.
     pub freshen: FreshenConfig,
+    /// Snapshot/restore cold-start mitigation knobs (the rival to
+    /// freshen; implementations live in [`crate::platform::snapshot`]).
+    pub snapshot: SnapshotConfig,
     /// Default TTL for entries in the freshen prefetch cache.
     pub seed: u64,
 }
@@ -93,6 +96,52 @@ pub struct FreshenConfig {
     pub max_freshens_per_min: u32,
     /// Service category: aggressive freshen for latency-sensitive apps.
     pub category: ServiceCategory,
+}
+
+/// Snapshot/restore mitigation configuration (Ustiugov et al.,
+/// "Benchmarking, Analysis, and Optimization of Serverless Function
+/// Snapshots"). A snapshotted container parks its state on the host at a
+/// discounted memory charge; restoring it costs a base latency plus a
+/// working-set page-in term. All cost knobs are integers (permille /
+/// µs-per-MB) so restore arithmetic is exact and digest-stable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotConfig {
+    /// Master switch; `false` (the default) keeps every legacy digest and
+    /// stdout byte pinned: no demotions, no restores, no new states.
+    pub enabled: bool,
+    /// Memory charge of a snapshotted container, in permille of its warm
+    /// charge (250 = the snapshot holds 25% of the warm footprint).
+    pub charge_permille: u32,
+    /// Fixed restore cost: load the snapshot descriptor + rebuild the
+    /// sandbox, before any working-set page faults.
+    pub restore_base: SimDuration,
+    /// Working-set page-in cost per MB of the container's warm charge, in
+    /// sim-µs (the demand-paging term a vanilla snapshot restore pays).
+    pub page_in_us_per_mb: u64,
+    /// REAP-style working-set prefetch: record the stable working set and
+    /// bulk-load it on restore, shrinking the page-in term.
+    pub prefetch: bool,
+    /// Page-in cost remaining under prefetch, permille (300 = prefetch
+    /// eliminates 70% of the demand-paging cost).
+    pub prefetch_permille: u32,
+    /// Hybrid mitigation: run a freshen pass on the restored container to
+    /// re-warm stale runtime state (connections die across a snapshot).
+    /// Only meaningful when `freshen.enabled` is also set.
+    pub freshen_on_restore: bool,
+}
+
+impl Default for SnapshotConfig {
+    fn default() -> SnapshotConfig {
+        SnapshotConfig {
+            enabled: false,
+            charge_permille: 250,
+            restore_base: SimDuration::from_millis(25),
+            page_in_us_per_mb: 150,
+            prefetch: false,
+            prefetch_permille: 300,
+            freshen_on_restore: false,
+        }
+    }
 }
 
 /// How containers are charged against an invoker host's memory capacity.
@@ -458,6 +507,7 @@ impl Default for Config {
             allow_container_sharing: false,
             isolation: IsolationScope::PerFunction,
             freshen: FreshenConfig::default(),
+            snapshot: SnapshotConfig::default(),
             seed: 0xF5E5_4E55, // "FRESHENESS"
         }
     }
@@ -557,6 +607,21 @@ impl Config {
                 }
             }
         }
+        if let Some(sj) = j.get("snapshot") {
+            c.snapshot.enabled = sj.bool_or("enabled", c.snapshot.enabled);
+            c.snapshot.charge_permille =
+                sj.u64_or("charge_permille", c.snapshot.charge_permille as u64) as u32;
+            c.snapshot.restore_base = SimDuration::from_millis_f64(
+                sj.f64_or("restore_base_ms", c.snapshot.restore_base.as_millis_f64()),
+            );
+            c.snapshot.page_in_us_per_mb =
+                sj.u64_or("page_in_us_per_mb", c.snapshot.page_in_us_per_mb);
+            c.snapshot.prefetch = sj.bool_or("prefetch", c.snapshot.prefetch);
+            c.snapshot.prefetch_permille =
+                sj.u64_or("prefetch_permille", c.snapshot.prefetch_permille as u64) as u32;
+            c.snapshot.freshen_on_restore =
+                sj.bool_or("freshen_on_restore", c.snapshot.freshen_on_restore);
+        }
         c
     }
 
@@ -623,6 +688,37 @@ impl Config {
                 .collect::<Vec<_>>()
                 .join(",");
             j.set("host_classes", Json::str(&spec));
+        }
+        // Emitted only when configured away from the defaults, so default
+        // report headers stay byte-identical to pre-snapshot builds.
+        if self.snapshot != SnapshotConfig::default() {
+            j.set(
+                "snapshot",
+                Json::obj(vec![
+                    ("enabled", Json::Bool(self.snapshot.enabled)),
+                    (
+                        "charge_permille",
+                        Json::num(self.snapshot.charge_permille as f64),
+                    ),
+                    (
+                        "restore_base_ms",
+                        Json::num(self.snapshot.restore_base.as_millis_f64()),
+                    ),
+                    (
+                        "page_in_us_per_mb",
+                        Json::num(self.snapshot.page_in_us_per_mb as f64),
+                    ),
+                    ("prefetch", Json::Bool(self.snapshot.prefetch)),
+                    (
+                        "prefetch_permille",
+                        Json::num(self.snapshot.prefetch_permille as f64),
+                    ),
+                    (
+                        "freshen_on_restore",
+                        Json::Bool(self.snapshot.freshen_on_restore),
+                    ),
+                ]),
+            );
         }
         j
     }
@@ -781,6 +877,29 @@ mod tests {
             c.host_layout(),
             vec![(0, 4096), (0, 4096), (1, 1024), (1, 1024), (1, 1024)]
         );
+    }
+
+    #[test]
+    fn snapshot_knobs_roundtrip() {
+        let d = Config::default();
+        assert!(!d.snapshot.enabled, "snapshot mitigation defaults off");
+        assert!(!d.snapshot.freshen_on_restore);
+        // Defaults serialize WITHOUT a snapshot object (legacy headers
+        // unchanged) and parse back to the defaults.
+        assert!(d.to_json().get("snapshot").is_none());
+        let back = Config::from_json(&d.to_json());
+        assert_eq!(back.snapshot, SnapshotConfig::default());
+        // Non-default knobs round-trip exactly.
+        let mut c = Config::default();
+        c.snapshot.enabled = true;
+        c.snapshot.charge_permille = 125;
+        c.snapshot.restore_base = SimDuration::from_millis(40);
+        c.snapshot.page_in_us_per_mb = 90;
+        c.snapshot.prefetch = true;
+        c.snapshot.prefetch_permille = 200;
+        c.snapshot.freshen_on_restore = true;
+        let c2 = Config::from_json(&c.to_json());
+        assert_eq!(c2.snapshot, c.snapshot);
     }
 
     #[test]

@@ -201,7 +201,15 @@ impl<R: BufRead> AzureTraceReader<R> {
             .unwrap_or("http")
             .to_string();
         let duration_ms = match self.cols.duration.and_then(|i| self.field(i)) {
-            Some(t) if !t.is_empty() => t.parse::<f64>().ok().filter(|d| *d >= 0.0)?,
+            // Non-finite durations are malformed like negative ones:
+            // `f64::parse` happily yields `inf`/`NaN` for "inf"/"nan"
+            // cells, and a `>= 0.0` check alone waves `+inf` through
+            // into `SimDuration::from_millis_f64` (and from there into
+            // every latency histogram). Skip-count them instead, exactly
+            // as the memory column below does.
+            Some(t) if !t.is_empty() => {
+                t.parse::<f64>().ok().filter(|d| *d >= 0.0 && d.is_finite())?
+            }
             _ => DEFAULT_DURATION_MS,
         };
         let memory_mb = match self.cols.memory.and_then(|i| self.field(i)) {
@@ -340,6 +348,29 @@ a,h,50,-3.0,1,1
         assert_eq!(rows[0].memory_mb, 170);
         assert_eq!(rows[1].memory_mb, 170, "round half up");
         assert_eq!(r.skipped(), 1, "negative memory is still malformed");
+    }
+
+    #[test]
+    fn non_finite_duration_and_memory_cells_are_malformed() {
+        // `"inf".parse::<f64>()` succeeds, and `inf >= 0.0` holds — so a
+        // sign check alone admits infinite durations/memory. Both columns
+        // must treat non-finite cells as malformed (skip-counted), not
+        // feed them into the simulator's integer time/memory domains.
+        let csv = "\
+HashApp,HashFunction,AvgDurationMs,MemoryMb,1,2
+a,ok,120.5,128,1,2
+a,dinf,inf,128,1,0
+a,dnan,NaN,128,1,0
+a,dneg,-5,128,1,0
+a,minf,50,inf,1,0
+a,mnan,50,nan,1,0
+";
+        let mut r = AzureTraceReader::new(csv.as_bytes()).unwrap();
+        let rows: Vec<TraceRow> = r.by_ref().collect();
+        assert_eq!(rows.len(), 1, "only the finite row survives");
+        assert_eq!(rows[0].function, "ok");
+        assert_eq!(r.skipped(), 5);
+        assert!(rows[0].duration_ms.is_finite());
     }
 
     #[test]

@@ -189,6 +189,16 @@ pub struct MacroMetrics {
     pub invocations: u64,
     pub cold_starts: u64,
     pub warm_starts: u64,
+    /// Dispatches served by restoring a snapshotted container (the third
+    /// start kind; zero unless the snapshot mitigation is enabled).
+    pub restored_starts: u64,
+    /// Warm containers demoted to the snapshotted state instead of
+    /// evicted.
+    pub snapshots: u64,
+    /// Total restore latency paid (base + page-in), µs.
+    pub restore_us: u64,
+    /// Hybrid freshen runs launched from the restore path.
+    pub freshens_on_restore: u64,
     pub freshens_started: u64,
     pub freshens_completed: u64,
     pub freshens_wasted: u64,
@@ -253,6 +263,10 @@ impl MacroMetrics {
         self.invocations += other.invocations;
         self.cold_starts += other.cold_starts;
         self.warm_starts += other.warm_starts;
+        self.restored_starts += other.restored_starts;
+        self.snapshots += other.snapshots;
+        self.restore_us = self.restore_us.saturating_add(other.restore_us);
+        self.freshens_on_restore += other.freshens_on_restore;
         self.freshens_started += other.freshens_started;
         self.freshens_completed += other.freshens_completed;
         self.freshens_wasted += other.freshens_wasted;
@@ -353,9 +367,13 @@ impl MacroMetrics {
     }
 
     /// Canonical content fingerprint — the string the shard-determinism
-    /// regression tests compare byte-for-byte.
+    /// regression tests compare byte-for-byte. The snapshot-mitigation
+    /// counters append as a suffix ONLY when any is nonzero: with the
+    /// snapshot axis off they are provably zero (no container can enter
+    /// the snapshotted state), so every pinned legacy digest is unchanged
+    /// byte-for-byte.
     pub fn digest(&self) -> String {
-        format!(
+        let mut d = format!(
             "{} q={}/{} qw={}/{} sa={} dr={}",
             self.digest_pr4(),
             self.queued_total,
@@ -364,7 +382,32 @@ impl MacroMetrics {
             self.queue_wait_max_us,
             self.stale_freshen_aborts,
             self.dropped_infeasible,
-        )
+        );
+        if self.snapshots != 0 || self.restored_starts != 0 || self.restore_us != 0 {
+            d.push_str(&format!(
+                " sn={} rs={} rus={} fr={}",
+                self.snapshots, self.restored_starts, self.restore_us, self.freshens_on_restore,
+            ));
+        }
+        d
+    }
+
+    /// Fraction of completions served by a snapshot restore.
+    pub fn restored_start_rate(&self) -> f64 {
+        if self.invocations == 0 {
+            0.0
+        } else {
+            self.restored_starts as f64 / self.invocations as f64
+        }
+    }
+
+    /// Mean restore latency in ms over restored starts.
+    pub fn mean_restore_ms(&self) -> f64 {
+        if self.restored_starts == 0 {
+            0.0
+        } else {
+            self.restore_us as f64 / self.restored_starts as f64 / 1e3
+        }
     }
 
     /// The pre-dispatch-subsystem digest fields, in their historical
@@ -631,6 +674,10 @@ struct DaySnap {
     records: usize,
     cold_starts: u64,
     warm_starts: u64,
+    restored_starts: u64,
+    snapshots_created: u64,
+    restore_us: u64,
+    freshens_on_restore: u64,
     freshens_started: u64,
     freshens_completed: u64,
     freshens_wasted: u64,
@@ -674,6 +721,10 @@ impl DaySnap {
             records: w.metrics.count(),
             cold_starts: w.metrics.cold_starts,
             warm_starts: w.metrics.warm_starts,
+            restored_starts: w.metrics.restored_starts,
+            snapshots_created: w.metrics.snapshots_created,
+            restore_us: w.metrics.restore_us,
+            freshens_on_restore: w.metrics.freshens_on_restore,
             freshens_started: w.metrics.freshens_started,
             freshens_completed: w.metrics.freshens_completed,
             freshens_wasted: w.metrics.freshens_wasted,
@@ -797,6 +848,10 @@ pub fn replay_pool_days(
         m.invocations = (cur.records - prev.records) as u64;
         m.cold_starts = cur.cold_starts - prev.cold_starts;
         m.warm_starts = cur.warm_starts - prev.warm_starts;
+        m.restored_starts = cur.restored_starts - prev.restored_starts;
+        m.snapshots = cur.snapshots_created - prev.snapshots_created;
+        m.restore_us = cur.restore_us - prev.restore_us;
+        m.freshens_on_restore = cur.freshens_on_restore - prev.freshens_on_restore;
         m.freshens_started = cur.freshens_started - prev.freshens_started;
         m.freshens_completed = cur.freshens_completed - prev.freshens_completed;
         m.freshens_wasted = cur.freshens_wasted - prev.freshens_wasted;
@@ -840,6 +895,11 @@ pub fn replay_pool_days(
         };
         let (events, dropped) = w.obs.drain(&w.registry.symbols);
         out[0].spans.push_group(group, events, dropped);
+        // Filter misses are a separate tally from ring overflow: carry
+        // the filtered count alongside the stream (it is summed on merge
+        // but never folded into the span digest — a filtered event was
+        // never part of the stream).
+        out[0].spans.filtered = w.obs.take_filtered();
     }
     if w.metrics.windows.enabled {
         out[0].fn_windows = w.metrics.windows.take_finalized();
@@ -1051,6 +1111,63 @@ mod tests {
             (d.cold_starts, d.warm_starts),
             "colliding names must behave exactly like distinct ones"
         );
+    }
+
+    #[test]
+    fn snapshot_mitigation_restores_across_an_idle_gap_and_gates_the_digest() {
+        // One function, a burst, a gap longer than the default 600 s idle
+        // TTL, then a second burst: the baseline cold-starts the second
+        // burst, the snapshot axis resumes it from a parked container.
+        let row = TraceRow {
+            app: "snap".to_string(),
+            function: "f".to_string(),
+            trigger: "http".to_string(),
+            duration_ms: 25.0,
+            memory_mb: 256,
+            counts: {
+                let mut c = vec![0u32; 16];
+                c[0] = 3;
+                c[15] = 3;
+                c
+            },
+        };
+        let mut base = cfg_with(PredictorPolicy::None, false);
+        base.warmup_minutes = 0;
+        let off = replay_app("snap", &[row.clone()], &base);
+        assert_eq!(off.snapshots, 0);
+        assert_eq!(off.restored_starts, 0);
+        assert_eq!(off.restore_us, 0);
+        assert!(
+            !off.digest().contains(" sn="),
+            "axis off keeps the legacy digest shape"
+        );
+
+        let mut snap_cfg = base.clone();
+        snap_cfg.base.snapshot.enabled = true;
+        let on = replay_app("snap", &[row.clone()], &snap_cfg);
+        assert_eq!(on.invocations, off.invocations, "same arrival volume");
+        assert!(on.snapshots >= 1, "idle expiry demoted instead of evicting");
+        assert!(
+            on.restored_starts >= 1,
+            "the second burst resumed from the snapshot"
+        );
+        assert!(
+            on.restored_starts <= on.snapshots,
+            "every restore consumes a prior snapshot"
+        );
+        assert_eq!(
+            on.cold_starts + on.warm_starts + on.restored_starts,
+            on.invocations,
+            "start kinds partition completions"
+        );
+        assert!(
+            on.cold_starts < off.cold_starts,
+            "restores displaced cold starts"
+        );
+        assert!(on.restore_us > 0, "restores paid their latency");
+        assert!(on.digest().contains(" sn="), "suffix appears with the axis on");
+        let again = replay_app("snap", &[row], &snap_cfg);
+        assert_eq!(on, again, "the new axis replays deterministically");
     }
 
     #[test]

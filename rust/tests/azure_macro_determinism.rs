@@ -11,7 +11,7 @@
 //! make keep-alive policy *matter*: on the default synth trace at least
 //! one policy must move cold-start rate or p99 vs `FixedTtl`.
 
-use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
+use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Mitigation, Variant};
 use freshen_rs::experiments::SweepRunner;
 use freshen_rs::util::config::{KeepAliveKind, MemoryAccounting};
 use freshen_rs::workload::macrotrace::replay::PoolMode;
@@ -185,6 +185,65 @@ fn shared_pool_is_parallel_invariant_and_contended() {
         "pool mode never changes the arrival volume"
     );
     assert!(base.peak_resident_mb > 0);
+}
+
+#[test]
+fn mitigation_axis_is_byte_identical_across_shards_and_parallelism() {
+    // The mitigation axis obeys the same per-app determinism contract as
+    // the rest of the grid: the four-cell mitigation table merges to
+    // byte-identical digests for ANY --shards × --parallel combination.
+    let mk = |shards: usize| {
+        let mut c = cfg(shards);
+        c.variants = vec![Variant::Both];
+        c.mitigations = Some(Mitigation::all().to_vec());
+        c
+    };
+    let reference = run_multi(&mk(1), &[7], &SweepRunner::new(1)).expect("reference");
+    let ref_digest = reference.digest();
+    assert!(
+        ref_digest.contains("/snapshot:") && ref_digest.contains("/hybrid:"),
+        "mitigation labels must appear: {ref_digest}"
+    );
+    for shards in [2usize, 8] {
+        for parallel in [1usize, 4] {
+            let digest = run_multi(&mk(shards), &[7], &SweepRunner::new(parallel))
+                .expect("sharded run")
+                .digest();
+            assert_eq!(
+                ref_digest, digest,
+                "mitigation grid diverged at shards={shards} parallel={parallel}"
+            );
+        }
+    }
+    // The axis genuinely engages on this trace: snapshot cells park
+    // containers on idle expiry, the keepalive cell stays mechanism-free.
+    let by = |m: Mitigation| {
+        &reference
+            .rows
+            .iter()
+            .find(|r| r.mitigation == Some(m))
+            .expect("cell present")
+            .metrics
+    };
+    let ka = by(Mitigation::Keepalive);
+    let snap = by(Mitigation::Snapshot);
+    let fresh = by(Mitigation::Freshen);
+    assert_eq!(ka.snapshots, 0);
+    assert_eq!(ka.restored_starts, 0);
+    assert_eq!(ka.freshens_started, 0);
+    assert!(snap.snapshots > 0, "idle expiry must demote under the snapshot cell");
+    assert_eq!(snap.freshens_started, 0);
+    assert!(fresh.freshens_started > 0);
+    assert_eq!(fresh.snapshots, 0);
+    // All four cells replay the identical workload.
+    for row in &reference.rows {
+        assert_eq!(row.metrics.invocations, ka.invocations);
+        assert_eq!(
+            row.metrics.cold_starts + row.metrics.warm_starts + row.metrics.restored_starts,
+            row.metrics.invocations,
+            "start kinds partition completions in every cell"
+        );
+    }
 }
 
 #[test]

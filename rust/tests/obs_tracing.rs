@@ -14,7 +14,7 @@
 //!   JSON document with monotone, non-negative timestamps, and both
 //!   export formats summarize identically.
 
-use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Variant};
+use freshen_rs::experiments::azure_macro::{run_multi, AzureMacroCfg, Mitigation, Variant};
 use freshen_rs::experiments::SweepRunner;
 use freshen_rs::obs::{summarize, to_chrome, to_jsonl, SpanKind};
 use freshen_rs::util::json::Json;
@@ -131,6 +131,52 @@ fn span_filter_selects_a_tenant() {
     }
     let full_total: usize = full.span_rows().iter().map(|(_, s)| s.len()).sum();
     assert!(total < full_total, "the filter must actually narrow the stream");
+    // Filter misses are a deliberate exclusion, NOT ring overflow: they
+    // land in the separate `filtered` tally, and the unfiltered run
+    // filters nothing. kept + filtered + overflowed partitions the same
+    // underlying event stream in both runs (the filter never changes sim
+    // behavior, only what the ring keeps).
+    let filtered_total: u64 = rows.iter().map(|(_, s)| s.filtered).sum();
+    assert!(filtered_total > 0, "the narrowed run must count its filter misses");
+    let filt_dropped: u64 = rows.iter().map(|(_, s)| s.dropped).sum();
+    let full_rows = full.span_rows();
+    let full_filtered: u64 = full_rows.iter().map(|(_, s)| s.filtered).sum();
+    let full_dropped: u64 = full_rows.iter().map(|(_, s)| s.dropped).sum();
+    assert_eq!(full_filtered, 0, "no filter, no filter misses");
+    assert_eq!(
+        total as u64 + filtered_total + filt_dropped,
+        full_total as u64 + full_dropped,
+        "kept + filtered + overflowed must partition the event stream"
+    );
+}
+
+#[test]
+fn snapshot_mitigation_emits_snapshot_spans() {
+    let mut c = cfg(1, true);
+    c.variants = vec![Variant::Baseline];
+    c.mitigations = Some(vec![Mitigation::Snapshot]);
+    let r = run_multi(&c, &[7], &SweepRunner::new(1)).unwrap();
+    let rows = r.span_rows();
+    let creates: usize = rows
+        .iter()
+        .map(|(_, sink)| {
+            sink.groups()
+                .iter()
+                .map(|(_, events)| {
+                    events
+                        .iter()
+                        .filter(|e| e.kind == SpanKind::SnapshotCreate)
+                        .count()
+                })
+                .sum::<usize>()
+        })
+        .sum();
+    assert!(creates > 0, "demotions must be visible in the span stream");
+    let total_snapshots: u64 = r.rows.iter().map(|row| row.metrics.snapshots).sum();
+    assert_eq!(
+        creates as u64, total_snapshots,
+        "one snapshot_create span per counted demotion"
+    );
 }
 
 #[test]

@@ -342,11 +342,19 @@ fn prop_conservation_across_queue_keepalive_and_accounting() {
                         assert!(r.finished_at >= r.started_at, "[{tag}]");
                         assert!(r.started_at >= r.enqueued_at, "[{tag}]");
                     }
-                    // The start-kind split accounts for every completion.
+                    // The start-kind split accounts for every completion
+                    // (no snapshot axis here, so restored starts are
+                    // provably zero and the legacy two-way split holds).
                     assert_eq!(
                         w.metrics.cold_starts + w.metrics.warm_starts,
                         w.metrics.count() as u64,
                         "start kinds must partition completions [{tag}]"
+                    );
+                    assert_eq!(w.metrics.restored_starts, 0, "[{tag}]");
+                    // Release/charge pairing never went negative.
+                    assert_eq!(
+                        w.metrics.accounting_clamps, 0,
+                        "mispaired memory release [{tag}]"
                     );
                 }
             }
@@ -460,6 +468,145 @@ fn prop_conservation_across_placement_and_host_classes() {
                     w.metrics.count() as u64,
                     "start kinds must partition completions [{tag}]"
                 );
+                assert_eq!(
+                    w.metrics.accounting_clamps, 0,
+                    "mispaired memory release [{tag}]"
+                );
+            }
+        }
+    });
+}
+
+/// Conservation over the cold-start mitigation axis: with the snapshot
+/// path enabled (alone, and combined with freshen-on-restore), every
+/// queue × keep-alive cell under per-function accounting still ends with
+///
+///   scheduled == completed + explicitly-dropped,
+///
+/// the THREE start kinds (cold/warm/restored) partitioning completions,
+/// restores never outnumbering the snapshots that feed them, memory
+/// accounting exact (a parked container holds its discounted charge;
+/// `debug_check_memory_accounting` cross-sums per-container `charged_mb`
+/// against per-host `used_mb`), and zero accounting clamps. A container
+/// state is a single enum, so "warm AND snapshotted at once" is
+/// structurally impossible — the checks here pin the observable side:
+/// parked containers carry a nonzero discounted charge and nothing is
+/// busy at quiescence.
+#[test]
+fn prop_conservation_across_mitigation_cells() {
+    forall("mitigation x queue x keep-alive conservation", 6, |g| {
+        let seed = g.u64(0, u64::MAX / 2);
+        let nfns = g.usize(2, 4);
+        let n = g.usize(5, 40);
+        let arrivals: Vec<(usize, u64)> = (0..n)
+            .map(|_| (g.usize(0, nfns - 1), g.u64(0, 120_000_000)))
+            .collect();
+        let mut memories: Vec<u32> = (0..nfns).map(|_| g.u64(64, 256) as u32).collect();
+        // f0's charge exceeds ANY host, so the explicit-drop bucket stays
+        // exercised under the new axis too.
+        memories[0] = 10_000;
+        let durations: Vec<u64> = (0..nfns).map(|_| g.u64(1, 2_000)).collect();
+        for mitigation in ["keepalive", "snapshot", "hybrid"] {
+            for queue in QueueKind::all() {
+                for keep_alive in KeepAliveKind::all() {
+                    let mut cfg = Config::default();
+                    cfg.seed = seed;
+                    cfg.invokers = 2;
+                    cfg.containers_per_invoker = 2;
+                    cfg.queue = queue;
+                    cfg.keep_alive = keep_alive;
+                    cfg.memory_accounting = MemoryAccounting::FunctionMb;
+                    // Short TTL so idle expiry (the demotion trigger) fires
+                    // inside the 120 s arrival window, not only at drain.
+                    cfg.idle_eviction = SimDuration::from_secs(20);
+                    match mitigation {
+                        "snapshot" => cfg.snapshot.enabled = true,
+                        "hybrid" => {
+                            cfg.snapshot.enabled = true;
+                            cfg.snapshot.freshen_on_restore = true;
+                            cfg.freshen.enabled = true;
+                            cfg.freshen.min_confidence = 0.0;
+                        }
+                        _ => {}
+                    }
+                    let mut w = World::new(cfg);
+                    let mut ep = Endpoint::new("store", Site::Edge);
+                    ep.store.put("ID1", 1e5, SimTime::ZERO);
+                    w.add_endpoint(ep);
+                    for f in 0..nfns {
+                        let mut spec = FunctionSpec::paper_lambda(
+                            &format!("f{f}"),
+                            "app",
+                            "store",
+                            SimDuration::from_millis(durations[f]),
+                        );
+                        spec.memory_mb = memories[f];
+                        w.deploy(spec);
+                    }
+                    let mut sim: PlatformSim = Sim::new();
+                    sim.max_events = 20_000_000;
+                    for &(f, at) in &arrivals {
+                        let name = format!("f{f}");
+                        sim.schedule_at(SimTime(at), move |sim, w| {
+                            invoke(sim, w, &name);
+                        });
+                    }
+                    sim.run(&mut w);
+                    let tag = format!(
+                        "mitigation={mitigation} queue={} keep_alive={:?}",
+                        queue.as_str(),
+                        keep_alive
+                    );
+                    w.debug_check_memory_accounting();
+                    let m = &w.metrics;
+                    assert_eq!(
+                        m.count() as u64 + m.dropped_infeasible,
+                        n as u64,
+                        "lost/duplicated invocations [{tag}]"
+                    );
+                    assert_eq!(
+                        m.cold_starts + m.warm_starts + m.restored_starts,
+                        m.count() as u64,
+                        "cold/warm/restored must partition completions [{tag}]"
+                    );
+                    assert!(
+                        m.restored_starts <= m.snapshots_created,
+                        "every restore consumes a prior snapshot [{tag}]"
+                    );
+                    assert_eq!(
+                        m.accounting_clamps, 0,
+                        "mispaired memory release [{tag}]"
+                    );
+                    if mitigation == "keepalive" {
+                        assert_eq!(m.snapshots_created, 0, "axis off never parks [{tag}]");
+                        assert_eq!(m.restored_starts, 0, "[{tag}]");
+                    } else if keep_alive == KeepAliveKind::FixedTtl && m.count() > 0 {
+                        // FixedTtl demotes every idle-expired container; at
+                        // least the last-used one expires during the drain.
+                        assert!(
+                            m.snapshots_created > 0,
+                            "idle expiry must demote, not evict [{tag}]"
+                        );
+                    }
+                    for c in &w.containers {
+                        use freshen_rs::platform::container::ContainerState;
+                        assert!(
+                            c.state != ContainerState::Busy,
+                            "busy container at quiescence [{tag}]"
+                        );
+                        if c.state == ContainerState::Snapshotted {
+                            assert!(
+                                c.charged_mb > 0,
+                                "parked container must hold its discounted charge [{tag}]"
+                            );
+                        }
+                    }
+                    assert!(w.dispatch.is_empty(), "stranded queue entries [{tag}]");
+                    for r in w.metrics.records() {
+                        assert!(r.finished_at >= r.started_at, "[{tag}]");
+                        assert!(r.started_at >= r.enqueued_at, "[{tag}]");
+                    }
+                }
             }
         }
     });
